@@ -1,0 +1,228 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. Algorithm-1 parameter sensitivity (`thresh`, `step`, `burnin`),
+//! 2. delay-model sensitivity (exponential vs heavy-tailed vs bimodal),
+//! 3. Theorem-1 oracle vs Algorithm-1 heuristic (how much does knowing
+//!    the system parameters buy?).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use adasgd::bench_harness::section;
+use adasgd::coding::{run_coded_gd, CodedConfig, FrcScheme};
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::NativeBackend;
+use adasgd::master::{run_fastest_k, MasterConfig};
+use adasgd::policy::{
+    AdaptivePflug, BoundOptimal, FixedK, KPolicy, PflugParams, VarianceTest,
+    VarianceTestParams,
+};
+use adasgd::model::LinRegProblem;
+use adasgd::stats::OrderStats;
+use adasgd::straggler::*;
+use adasgd::theory::{BoundParams, ErrorBound};
+
+fn run(
+    ds: &SyntheticDataset,
+    problem: &LinRegProblem,
+    delays: &dyn DelayModel,
+    policy: &mut dyn KPolicy,
+    max_time: f64,
+    seed: u64,
+) -> (f64, usize) {
+    let mut backend = NativeBackend::new(Shards::partition(ds, 50));
+    let cfg = MasterConfig {
+        eta: 5e-4,
+        momentum: 0.0,
+        max_iterations: 1_000_000,
+        max_time,
+        seed,
+        record_stride: 50,
+    };
+    let r = run_fastest_k(
+        &mut backend,
+        delays,
+        policy,
+        &vec![0.0f32; problem.d()],
+        &cfg,
+        &mut |w| problem.error(w),
+    );
+    let final_k = r.k_changes.last().map(|&(_, _, k)| k).unwrap_or(0);
+    (r.recorder.min_error().unwrap(), final_k)
+}
+
+fn main() {
+    let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
+    let problem = LinRegProblem::new(&ds);
+    let exp = ExponentialDelays::new(1.0);
+    let budget = 2500.0;
+
+    section("ablation 1 — Algorithm-1 parameter sensitivity (t <= 2500)");
+    println!(
+        "{:>8} {:>6} {:>8} {:>14} {:>8}",
+        "thresh", "step", "burnin", "min error", "final k"
+    );
+    for thresh in [2i64, 10, 40] {
+        for step in [5usize, 10, 20] {
+            for burnin in [50u64, 200, 800] {
+                let mut p = AdaptivePflug::new(50, PflugParams {
+                    k0: 10,
+                    step,
+                    thresh,
+                    burnin,
+                    k_max: 40,
+                });
+                let (err, final_k) =
+                    run(&ds, &problem, &exp, &mut p, budget, 0);
+                println!(
+                    "{thresh:>8} {step:>6} {burnin:>8} {err:>14.4e} {final_k:>8}"
+                );
+            }
+        }
+    }
+    println!(
+        "(robust region: min error varies little across thresh/step — \
+         burnin mostly gates how early switching can begin)"
+    );
+
+    section("ablation 2 — delay-model sensitivity (adaptive vs fixed)");
+    let models: Vec<Box<dyn DelayModel>> = vec![
+        Box::new(ExponentialDelays::new(1.0)),
+        Box::new(ParetoDelays::new(0.5, 2.2)),
+        Box::new(WeibullDelays::new(1.0, 0.7)),
+        Box::new(BimodalDelays::new(1.0, 5, 8.0, 0.05)),
+        Box::new(ShiftedExponentialDelays::new(0.5, 2.0)),
+    ];
+    println!(
+        "{:<44} {:>13} {:>13} {:>13}",
+        "model", "fixed k=10", "fixed k=40", "adaptive"
+    );
+    for m in &models {
+        let os = OrderStats::monte_carlo(m.as_ref(), 50, 2000, 5);
+        let budget_m = budget * os.mean(40) / 1.57;
+        let (e10, _) =
+            run(&ds, &problem, m.as_ref(), &mut FixedK::new(10), budget_m, 1);
+        let (e40, _) =
+            run(&ds, &problem, m.as_ref(), &mut FixedK::new(40), budget_m, 1);
+        let mut ap = AdaptivePflug::new(50, PflugParams::default());
+        let (ea, _) = run(&ds, &problem, m.as_ref(), &mut ap, budget_m, 1);
+        println!(
+            "{:<44} {:>13.4e} {:>13.4e} {:>13.4e}",
+            m.name(),
+            e10,
+            e40,
+            ea
+        );
+    }
+
+    section("ablation 3 — Theorem-1 oracle vs Algorithm-1 heuristic");
+    // Oracle needs the system parameters; estimate them the way the paper
+    // does (L, c from the data spectrum scale; sigma2 from shard-gradient
+    // spread at w0; f0_err measured).
+    let f0 = problem.error(&vec![0.0f32; problem.d()]);
+    let params = BoundParams {
+        eta: 5e-4,
+        l: 3.0e3,
+        c: 8.0,
+        sigma2: 1.0e7,
+        s: 40,
+        f0_err: f0,
+    };
+    let bound = ErrorBound::new(params, OrderStats::exponential(50, 1.0));
+    let mut oracle = BoundOptimal::new(&bound);
+    println!(
+        "  oracle switch times (first 6): {:?}",
+        oracle
+            .times()
+            .iter()
+            .take(6)
+            .map(|t| (t * 10.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    let (e_oracle, k_oracle) =
+        run(&ds, &problem, &exp, &mut oracle, budget, 2);
+    let mut heuristic = AdaptivePflug::new(50, PflugParams {
+        k0: 1,
+        step: 5,
+        thresh: 10,
+        burnin: 200,
+        k_max: 50,
+    });
+    let (e_pflug, k_pflug) =
+        run(&ds, &problem, &exp, &mut heuristic, budget, 2);
+    println!(
+        "  bound-optimal (needs eta,L,c,sigma2,F*): min error {e_oracle:.4e} (k -> {k_oracle})"
+    );
+    println!(
+        "  adaptive-pflug (parameter-oblivious)   : min error {e_pflug:.4e} (k -> {k_pflug})"
+    );
+    println!(
+        "  => the oblivious heuristic should be within a small factor of \
+         the oracle — that is the paper's practical claim."
+    );
+
+    section("ablation 4 — detector swap: Pflug sign test vs variance plateau");
+    let mut pflug = AdaptivePflug::new(50, PflugParams::default());
+    let (e_sign, _) = run(&ds, &problem, &exp, &mut pflug, budget, 3);
+    let mut vt = VarianceTest::new(50, VarianceTestParams::default());
+    let (e_var, _) = run(&ds, &problem, &exp, &mut vt, budget, 3);
+    println!("  pflug sign test    : min error {e_sign:.4e}");
+    println!("  variance plateau   : min error {e_var:.4e}");
+    println!("  (both detectors should land in the same error decade)");
+
+    section("ablation 5 — redundancy (coded GD) vs ignoring stragglers");
+    // The §I.A comparison: fractional-repetition gradient coding gets the
+    // EXACT gradient from n-r+1 responses at r x compute; fastest-k gets a
+    // noisy gradient from k cheap responses.
+    for r in [1usize, 2, 5] {
+        let shards = Shards::partition(&ds, 50);
+        let scheme = FrcScheme::new(50, r);
+        let mut backend = NativeBackend::new(shards);
+        let cfg = CodedConfig {
+            eta: 5e-4,
+            max_iterations: 1_000_000,
+            max_time: budget,
+            seed: 4,
+            record_stride: 50,
+            r,
+        };
+        let run = run_coded_gd(
+            &mut backend,
+            &exp,
+            &scheme,
+            &vec![0.0f32; problem.d()],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        println!(
+            "  coded r={r}: waits for fastest {} of 50, {:>5} iters, min error {:.4e}",
+            scheme.recovery_threshold(),
+            run.iterations,
+            run.recorder.min_error().unwrap()
+        );
+    }
+    let mut ap = AdaptivePflug::new(50, PflugParams::default());
+    let (ea, _) = run(&ds, &problem, &exp, &mut ap, budget, 4);
+    println!("  adaptive fastest-k (no redundancy):       min error {ea:.4e}");
+    println!(
+        "  (coded r>1 trades exactness for r x compute; adaptive matches \
+         it without redundancy — the paper's positioning)"
+    );
+
+    section("ablation 6 — correlated (Markov) stragglers");
+    let markov = MarkovDelays::new(1.0, 0.05, 0.2, 8.0, 11);
+    let os = OrderStats::monte_carlo(&markov, 50, 2000, 13);
+    let budget_m = budget * os.mean(40) / 1.57;
+    let (e10m, _) =
+        run(&ds, &problem, &markov, &mut FixedK::new(10), budget_m, 5);
+    let (e40m, _) =
+        run(&ds, &problem, &markov, &mut FixedK::new(40), budget_m, 5);
+    let mut apm = AdaptivePflug::new(50, PflugParams::default());
+    let (eam, _) = run(&ds, &problem, &markov, &mut apm, budget_m, 5);
+    println!(
+        "  {:<40} k=10 {:.4e}  k=40 {:.4e}  adaptive {:.4e}",
+        markov.name(),
+        e10m,
+        e40m,
+        eam
+    );
+}

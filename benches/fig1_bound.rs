@@ -1,0 +1,75 @@
+//! Bench + regeneration harness for **Fig. 1 / Example 1**: the Lemma-1
+//! bound for k = 1..5 and the Theorem-1 adaptive envelope.
+//!
+//! Prints the same series the paper plots (error at sampled times per k,
+//! plus the adaptive envelope and the switching times), then times the
+//! theory computations.
+//!
+//! Run: `cargo bench --bench fig1_bound`
+
+use adasgd::bench_harness::{section, Bencher};
+use adasgd::stats::OrderStats;
+use adasgd::theory::{
+    adaptive_envelope, switching_times, BoundParams, ErrorBound,
+};
+
+fn main() {
+    section("Fig. 1 — bound curves (paper Example 1)");
+    let bound = ErrorBound::new(
+        BoundParams::example1(),
+        OrderStats::exponential(5, 5.0),
+    );
+    let ts: Vec<f64> = (0..=14).map(|i| i as f64 * 1000.0).collect();
+    print!("{:>8}", "t");
+    for k in 1..=5 {
+        print!(" {:>12}", format!("k={k}"));
+    }
+    println!(" {:>12}", "adaptive");
+    let env = adaptive_envelope(&bound, &ts);
+    for (i, &t) in ts.iter().enumerate() {
+        print!("{t:>8.0}");
+        for k in 1..=5 {
+            print!(" {:>12.4e}", bound.eval(k, t));
+        }
+        println!(" {:>12.4e}", env[i]);
+    }
+
+    section("Theorem-1 switching times");
+    for s in switching_times(&bound) {
+        println!(
+            "  t_{} = {:>8.1}   (error at switch: {:.4e})",
+            s.k_next - 1,
+            s.time,
+            s.error
+        );
+    }
+
+    section("timings");
+    let b = Bencher::micro();
+    println!(
+        "{}",
+        b.run("switching_times(n=5)", || {
+            std::hint::black_box(switching_times(&bound));
+        })
+        .summary()
+    );
+    let big = ErrorBound::new(
+        BoundParams::example1(),
+        OrderStats::exponential(500, 5.0),
+    );
+    println!(
+        "{}",
+        b.run("switching_times(n=500)", || {
+            std::hint::black_box(switching_times(&big));
+        })
+        .summary()
+    );
+    let query: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+    println!(
+        "{}",
+        b.run("adaptive_envelope(10k points)", || {
+            std::hint::black_box(adaptive_envelope(&bound, &query));
+        })
+        .summary()
+    );
+}

@@ -1,0 +1,72 @@
+//! Bench + regeneration harness for **Fig. 2**: adaptive fastest-k
+//! (Algorithm 1, k: 10→40) vs non-adaptive fixed k ∈ {10, 20, 30, 40};
+//! n = 50 workers, exp(1) delays, η = 5·10⁻⁴, §V.A synthetic data.
+//!
+//! Prints the paper's series (error vs wall-clock per policy), the
+//! time-to-error comparison the paper quotes (adaptive ≈ t=2000 vs fixed
+//! k=40 ≈ t=6000 for the same error), then times a full simulation.
+//!
+//! Run: `cargo bench --bench fig2_adaptive_vs_fixed`
+
+use adasgd::bench_harness::{section, Bencher};
+use adasgd::coordinator::fig2;
+use adasgd::metrics::write_csv;
+
+fn main() {
+    section("Fig. 2 — error vs wall-clock (n=50, exp(1), eta=5e-4)");
+    let out = fig2(0, 6500.0);
+
+    // Print a downsampled table of the series (what the paper plots).
+    let probe_ts = [250.0, 500.0, 1000.0, 2000.0, 4000.0, 6000.0];
+    print!("{:>8}", "t");
+    for r in &out.runs {
+        print!(" {:>22}", r.label.chars().take(22).collect::<String>());
+    }
+    println!();
+    for &t in &probe_ts {
+        print!("{t:>8.0}");
+        for r in &out.runs {
+            match r.error_at(t) {
+                Some(e) => print!(" {e:>22.4e}"),
+                None => print!(" {:>22}", "-"),
+            }
+        }
+        println!();
+    }
+    println!();
+    for line in &out.summary {
+        println!("  {line}");
+    }
+
+    // The paper's headline comparison: time to reach the k=40 floor level.
+    section("time-to-error (the paper's t=2000 vs t=6000 claim)");
+    let k40 = out.runs.iter().find(|r| r.label.contains("k=40")).unwrap();
+    let adaptive =
+        out.runs.iter().find(|r| r.label.contains("adaptive")).unwrap();
+    let target = k40.last().unwrap().error * 1.5;
+    println!("  target error level: {target:.4e} (1.5x the k=40 floor)");
+    for r in &out.runs {
+        match r.time_to_error(target) {
+            Some(t) => println!("  {:<28} reaches it at t = {t:>7.0}", r.label),
+            None => println!("  {:<28} never reaches it", r.label),
+        }
+    }
+    let speedup = k40.time_to_error(target).unwrap_or(f64::NAN)
+        / adaptive.time_to_error(target).unwrap_or(f64::NAN);
+    println!("  adaptive speedup over fixed k=40: {speedup:.2}x (paper: ~3x)");
+
+    let refs: Vec<&adasgd::metrics::Recorder> = out.runs.iter().collect();
+    write_csv(std::path::Path::new("results/bench_fig2.csv"), &refs).ok();
+    println!("  series written to results/bench_fig2.csv");
+
+    section("simulation throughput");
+    let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    println!(
+        "{}",
+        b.run("fig2 adaptive run to t=1000", || {
+            let out = adasgd::coordinator::fig2(1, 1000.0);
+            std::hint::black_box(out.runs.len());
+        })
+        .summary()
+    );
+}

@@ -1,0 +1,101 @@
+//! Bench + regeneration harness for **Fig. 3**: adaptive fastest-k
+//! (Algorithm 1, k: 1→36 by 5) vs fully asynchronous SGD; η = 2·10⁻⁴.
+//!
+//! Includes the stability ablation the substitution note in DESIGN.md
+//! documents: undamped async at the paper's parameters diverges
+//! (η·λ_max·staleness ≈ 30), damped async converges but above adaptive.
+//!
+//! Run: `cargo bench --bench fig3_adaptive_vs_async`
+
+use adasgd::async_sgd::{run_async, AsyncConfig};
+use adasgd::bench_harness::{section, Bencher};
+use adasgd::coordinator::fig3;
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::NativeBackend;
+use adasgd::metrics::write_csv;
+use adasgd::model::LinRegProblem;
+use adasgd::straggler::ExponentialDelays;
+
+fn main() {
+    section("Fig. 3 — adaptive fastest-k vs asynchronous SGD (eta=2e-4)");
+    let out = fig3(0, 2500.0);
+    let probe_ts = [100.0, 250.0, 500.0, 1000.0, 1500.0, 2500.0];
+    print!("{:>8}", "t");
+    for r in &out.runs {
+        print!(" {:>22}", r.label.chars().take(22).collect::<String>());
+    }
+    println!();
+    for &t in &probe_ts {
+        print!("{t:>8.0}");
+        for r in &out.runs {
+            match r.error_at(t) {
+                Some(e) => print!(" {e:>22.4e}"),
+                None => print!(" {:>22}", "-"),
+            }
+        }
+        println!();
+    }
+    for line in &out.summary {
+        println!("  {line}");
+    }
+    let refs: Vec<&adasgd::metrics::Recorder> = out.runs.iter().collect();
+    write_csv(std::path::Path::new("results/bench_fig3.csv"), &refs).ok();
+
+    section("async stability ablation (the DESIGN.md substitution)");
+    let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
+    let problem = LinRegProblem::new(&ds);
+    let delays = ExponentialDelays::new(1.0);
+    for (label, damping) in
+        [("undamped (paper params, raw)", false), ("staleness-damped", true)]
+    {
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 50));
+        let cfg = AsyncConfig {
+            eta: 2e-4,
+            max_updates: 60_000,
+            max_time: 1200.0,
+            seed: 0,
+            record_stride: 200,
+            staleness_damping: damping,
+        };
+        let run = run_async(
+            &mut backend,
+            &delays,
+            &vec![0.0f32; 100],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        println!(
+            "  {:<32} diverged={:<5} mean staleness {:>5.1}  min error {:.4e}",
+            label,
+            run.diverged,
+            run.mean_staleness,
+            run.recorder.min_error().unwrap()
+        );
+    }
+
+    section("async engine throughput");
+    let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    println!(
+        "{}",
+        b.run("async 20k updates (n=50)", || {
+            let mut backend = NativeBackend::new(Shards::partition(&ds, 50));
+            let cfg = AsyncConfig {
+                eta: 2e-4,
+                max_updates: 20_000,
+                max_time: 0.0,
+                seed: 1,
+                record_stride: 100_000,
+                staleness_damping: true,
+            };
+            let run = run_async(
+                &mut backend,
+                &delays,
+                &vec![0.0f32; 100],
+                &cfg,
+                &mut |w| problem.error(w),
+            );
+            std::hint::black_box(run.updates);
+        })
+        .summary()
+    );
+}

@@ -1,0 +1,176 @@
+//! Whole-stack hot-path microbenchmarks — the §Perf measurement harness.
+//!
+//! L3: fastest-k selection, master-iteration throughput, event queue.
+//! L3↔RT: PJRT execute latency (persistent-buffer vs literal upload).
+//! L1-analog: native fused partial gradient (the Rust mirror of the
+//! Pallas kernel's single-pass structure).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use adasgd::bench_harness::{fmt_duration, section, Bencher};
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::{GradBackend, NativeBackend};
+use adasgd::linalg::{gemm, gemv, Matrix};
+use adasgd::master::{fastest_k_select, run_fastest_k, MasterConfig};
+use adasgd::model::LinRegProblem;
+use adasgd::policy::FixedK;
+use adasgd::rng::{Pcg64, Rng};
+use adasgd::runtime::{Runtime, XlaBackend};
+use adasgd::sim::EventQueue;
+use adasgd::straggler::ExponentialDelays;
+
+fn main() {
+    let micro = Bencher::micro();
+    let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
+    let shards = Shards::partition(&ds, 50);
+
+    section("L3 — fastest-k selection (n=50)");
+    let mut rng = Pcg64::seed(1);
+    let delays: Vec<f64> = (0..50).map(|_| rng.next_f64()).collect();
+    let mut idx = Vec::with_capacity(50);
+    for k in [1usize, 10, 25, 49, 50] {
+        println!(
+            "{}",
+            micro
+                .run(&format!("select k={k} of 50"), || {
+                    std::hint::black_box(fastest_k_select(
+                        &delays, k, &mut idx,
+                    ));
+                })
+                .summary()
+        );
+    }
+
+    section("L3 — event queue (async engine core)");
+    println!(
+        "{}",
+        micro
+            .run("schedule+pop 1000 events", || {
+                let mut q = EventQueue::new();
+                for i in 0..1000 {
+                    q.schedule_at((i * 7 % 1000) as f64, i);
+                }
+                while q.pop().is_some() {}
+            })
+            .summary()
+    );
+
+    section("native kernels (Rust mirror of the Pallas structure)");
+    let x40 = shards.x[0].clone();
+    let w: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+    let mut out = vec![0.0f32; 100];
+    let mut backend = NativeBackend::new(shards.clone());
+    println!(
+        "{}",
+        micro
+            .run("partial_grad shard (s=40, d=100)", || {
+                backend.partial_grad(0, &w, &mut out);
+                std::hint::black_box(&out);
+            })
+            .summary()
+    );
+    let mut resid = vec![0.0f32; 40];
+    println!(
+        "{}",
+        micro
+            .run("gemv 40x100", || {
+                gemv(1.0, &x40, &w, 0.0, &mut resid);
+                std::hint::black_box(&resid);
+            })
+            .summary()
+    );
+    let a = Matrix::zeros(256, 256);
+    let b = Matrix::zeros(256, 256);
+    let mut c = Matrix::zeros(256, 256);
+    let slow = Bencher { warmup_iters: 2, samples: 10, iters_per_sample: 3 };
+    let r = slow.run("gemm 256^3 (setup path)", || {
+        gemm(1.0, &a, &b, 0.0, &mut c);
+        std::hint::black_box(&c);
+    });
+    let flops = 2.0 * 256f64.powi(3);
+    println!(
+        "{}   ({:.2} GFLOP/s)",
+        r.summary(),
+        flops / r.median() / 1e9
+    );
+
+    section("master loop end-to-end (native, n=50, fig-2 shapes)");
+    let problem = LinRegProblem::new(&ds);
+    let em = ExponentialDelays::new(1.0);
+    for k in [10usize, 40] {
+        let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+        let iters = 2000u64;
+        let r = b.run(&format!("2000 iterations @ k={k}"), || {
+            let mut backend = NativeBackend::new(shards.clone());
+            let mut policy = FixedK::new(k);
+            let cfg = MasterConfig {
+                eta: 5e-4,
+                momentum: 0.0,
+                max_iterations: iters,
+                max_time: 0.0,
+                seed: 3,
+                record_stride: 1_000_000, // no eval in the timed loop
+            };
+            let run = run_fastest_k(
+                &mut backend,
+                &em,
+                &mut policy,
+                &vec![0.0f32; 100],
+                &cfg,
+                &mut |w| problem.error(w),
+            );
+            std::hint::black_box(run.iterations);
+        });
+        println!(
+            "{}   ({} per iteration)",
+            r.summary(),
+            fmt_duration(r.median() / iters as f64)
+        );
+    }
+
+    section("PJRT runtime (requires `make artifacts`)");
+    match Runtime::open_default() {
+        Err(e) => println!("  skipped: {e}"),
+        Ok(rt) => {
+            let mut xla = XlaBackend::new(&rt, &shards).expect("backend");
+            let b = Bencher { warmup_iters: 20, samples: 15, iters_per_sample: 50 };
+            println!(
+                "{}",
+                b.run("pjrt partial_grad (persistent shard bufs)", || {
+                    xla.partial_grad(0, &w, &mut out);
+                    std::hint::black_box(&out);
+                })
+                .summary()
+            );
+            let mut all_out = vec![0.0f32; 50 * 100];
+            let b2 = Bencher { warmup_iters: 5, samples: 15, iters_per_sample: 10 };
+            if xla.all_grads(&w, &mut all_out) {
+                println!(
+                    "{}",
+                    b2.run("pjrt ALL 50 shard grads (batched artifact)", || {
+                        xla.all_grads(&w, &mut all_out);
+                        std::hint::black_box(&all_out);
+                    })
+                    .summary()
+                );
+            }
+            let exe = rt.load("linreg_grad_s40_d100").expect("load");
+            let xs = shards.x[0].as_slice();
+            let ys = &shards.y[0];
+            println!(
+                "{}",
+                b.run("pjrt partial_grad (full literal upload)", || {
+                    let outs = exe
+                        .run(&[
+                            adasgd::runtime::Arg::F32(xs),
+                            adasgd::runtime::Arg::F32(ys),
+                            adasgd::runtime::Arg::F32(&w),
+                        ])
+                        .expect("exec");
+                    std::hint::black_box(outs.len());
+                })
+                .summary()
+            );
+        }
+    }
+}

@@ -1,0 +1,191 @@
+"""AOT export: lower every L2 entry point to HLO *text* + a manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+  linreg_grad_s{s}_d{d}.hlo.txt      (x (s,d), y (s,1), w (d,1)) -> (g (d,1),)
+  linreg_loss_m{m}_d{d}.hlo.txt      (x (m,d), y (m,1), w (d,1)) -> (F,)
+  apply_update_n{n}_d{d}.hlo.txt     (w (1,d), G (n,d), scale (1,1)) -> (w',)
+  transformer_grad_{tag}.hlo.txt     (params (P,), tokens (B,S+1) i32)
+                                     -> (grad (P,), loss)
+  transformer_step_{tag}.hlo.txt     (params, tokens, eta (1,1)) -> (params', loss)
+  manifest.json                      shapes/dtypes registry for the Rust loader
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import LARGE, TINY, TransformerConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(shape, dtype):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name, fn, specs, outputs, meta=None):
+        """Lower ``fn`` at ``specs`` and write ``<name>.hlo.txt``."""
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "inputs": [_shape_entry(s.shape, s.dtype.name) for s in specs],
+            "outputs": outputs,
+            "meta": meta or {},
+        })
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "entries": self.entries}, f, indent=1)
+        print(f"  wrote manifest.json ({len(self.entries)} entries)")
+
+
+def export_linreg(ex: Exporter, s: int, d: int, m: int, n: int):
+    """Paper workload artifacts, shape-specialized to the experiment config."""
+    ex.export(
+        f"linreg_grad_s{s}_d{d}",
+        model.linreg_partial_grad,
+        [_spec((s, d)), _spec((s, 1)), _spec((d, 1))],
+        [_shape_entry((d, 1), "float32")],
+        meta={"kind": "linreg_grad", "s": s, "d": d},
+    )
+    ex.export(
+        f"linreg_grad_all_n{n}_s{s}_d{d}",
+        model.linreg_grad_all,
+        [_spec((n, s, d)), _spec((n, s, 1)), _spec((d, 1))],
+        [_shape_entry((n, d), "float32")],
+        meta={"kind": "linreg_grad_all", "n": n, "s": s, "d": d},
+    )
+    ex.export(
+        f"linreg_loss_m{m}_d{d}",
+        model.linreg_loss,
+        [_spec((m, d)), _spec((m, 1)), _spec((d, 1))],
+        [_shape_entry((), "float32")],
+        meta={"kind": "linreg_loss", "m": m, "d": d},
+    )
+    ex.export(
+        f"apply_update_n{n}_d{d}",
+        model.fastest_k_apply,
+        [_spec((1, d)), _spec((n, d)), _spec((1, 1))],
+        [_shape_entry((1, d), "float32")],
+        meta={"kind": "apply_update", "n": n, "d": d},
+    )
+
+
+def export_transformer(ex: Exporter, cfg: TransformerConfig, tag: str):
+    p = model.param_count(cfg)
+    tok = _spec((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    grad_fn = functools.partial(model.transformer_grad, cfg=cfg)
+    ex.export(
+        f"transformer_grad_{tag}",
+        grad_fn,
+        [_spec((p,)), tok],
+        [_shape_entry((p,), "float32"), _shape_entry((), "float32")],
+        meta={"kind": "transformer_grad", "tag": tag, "params": p,
+              "vocab": cfg.vocab, "d_model": cfg.d_model,
+              "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+              "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "batch": cfg.batch},
+    )
+
+    def step_fn(params, tokens, eta):
+        return model.transformer_step(params, tokens, eta[0, 0], cfg)
+
+    ex.export(
+        f"transformer_step_{tag}",
+        step_fn,
+        [_spec((p,)), tok, _spec((1, 1))],
+        [_shape_entry((p,), "float32"), _shape_entry((), "float32")],
+        meta={"kind": "transformer_step", "tag": tag, "params": p,
+              "batch": cfg.batch, "seq_len": cfg.seq_len,
+              "vocab": cfg.vocab},
+    )
+
+
+def export_transformer_init(ex: Exporter, cfg: TransformerConfig, tag: str):
+    """Deterministic param init as an artifact so Rust never needs numpy."""
+    p = model.param_count(cfg)
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed[0])
+        return model.init_params(cfg, key)
+
+    ex.export(
+        f"transformer_init_{tag}",
+        init_fn,
+        [_spec((1,), jnp.int32)],
+        [_shape_entry((p,), "float32")],
+        meta={"kind": "transformer_init", "tag": tag, "params": p},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Paper Fig-2/3 defaults: m=2000 rows, d=100 features, n=50 workers.
+    ap.add_argument("--m", type=int, default=2000)
+    ap.add_argument("--d", type=int, default=100)
+    ap.add_argument("--n", type=int, default=50)
+    ap.add_argument("--transformer", choices=["tiny", "large", "both", "none"],
+                    default="tiny")
+    args = ap.parse_args()
+
+    assert args.m % args.n == 0, "n must divide m (horizontal partition)"
+    s = args.m // args.n
+
+    ex = Exporter(args.out_dir)
+    print(f"[aot] linreg artifacts (s={s}, d={args.d}, m={args.m}, n={args.n})")
+    export_linreg(ex, s, args.d, args.m, args.n)
+
+    if args.transformer in ("tiny", "both"):
+        print(f"[aot] transformer tiny ({model.param_count(TINY):,} params)")
+        export_transformer(ex, TINY, "tiny")
+        export_transformer_init(ex, TINY, "tiny")
+    if args.transformer in ("large", "both"):
+        # ~100M-param config: compile-only proof that the artifact path
+        # scales; the e2e example trains the tiny config on CPU.
+        print(f"[aot] transformer large ({model.param_count(LARGE):,} params)")
+        export_transformer(ex, LARGE, "large")
+        export_transformer_init(ex, LARGE, "large")
+
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

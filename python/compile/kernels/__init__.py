@@ -1,0 +1,25 @@
+"""L1 — Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True``: the CPU PJRT plugin
+that the Rust runtime embeds cannot execute Mosaic custom-calls, so the
+interpret path (which lowers to plain HLO ops) is the correctness +
+interchange target. The TPU structure (BlockSpec tiling for VMEM, MXU-shaped
+matmul blocks, fused single-pass accumulation) is kept so the same kernels
+re-target real TPUs by flipping ``interpret=False``.
+
+Kernels:
+  - ``matmul``       — general tiled matmul with f32 accumulation (custom_vjp
+                       so it is differentiable from L2 model code).
+  - ``linreg_grad``  — the paper's hot spot: fused per-shard partial gradient
+                       g = X^T (X w - y) / s, one pass over X.
+  - ``apply_update`` — masked-average fastest-k SGD apply:
+                       w' = w - step_scale * sum_rows(G).
+``ref.py`` holds the pure-jnp oracles pytest checks against.
+"""
+
+from .matmul import matmul
+from .linreg_grad import linreg_grad
+from .linreg_loss import linreg_loss
+from .apply_update import apply_update
+
+__all__ = ["matmul", "linreg_grad", "linreg_loss", "apply_update"]

@@ -1,0 +1,64 @@
+"""Masked-average fastest-k SGD apply kernel.
+
+The master receives the fastest ``k`` partial gradients of an iteration.
+``k`` varies at run time but HLO shapes are static, so the Rust coordinator
+zero-pads the gradient stack to a fixed ``(n, d)`` buffer and passes
+``step_scale = eta / k`` as a scalar. The kernel fuses the reduction and
+the parameter update:
+
+    w' = w - step_scale * sum_rows(G)
+
+Grid walks column-blocks of ``G`` so arbitrarily large ``d`` (e.g. a flat
+transformer parameter vector) streams through VMEM ``(n, bd)`` at a time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_update_kernel(w_ref, g_ref, scale_ref, o_ref):
+    # scale_ref is a (1, 1) scalar block broadcast to every grid step.
+    s = scale_ref[0, 0]
+    o_ref[...] = w_ref[...] - s * jnp.sum(g_ref[...], axis=0, keepdims=True)
+
+
+def _col_block(d: int, want: int) -> int:
+    b = min(d, want)
+    while d % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def apply_update(w, g, step_scale, bd: int = 4096, interpret: bool = True):
+    """Fused fastest-k average + SGD step.
+
+    Args:
+      w: ``(1, d)`` f32 current model (row layout).
+      g: ``(n, d)`` f32 gradient stack, rows ``k..n-1`` zeroed by the caller.
+      step_scale: ``(1, 1)`` f32 scalar, ``eta / k``.
+      bd: column-block size (clamped to a divisor of ``d``).
+
+    Returns:
+      ``(1, d)`` f32 updated model.
+    """
+    n, d = g.shape
+    assert w.shape == (1, d), w.shape
+    assert step_scale.shape == (1, 1), step_scale.shape
+    bd = _col_block(d, bd)
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _apply_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i: (0, i)),
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(w, g, step_scale)

@@ -1,0 +1,61 @@
+"""Fused loss-evaluation kernel: F(w) = ||X w - y||^2 / (2 m).
+
+Same single-pass structure as ``linreg_grad``: the grid walks row-blocks
+of ``X``; each step computes its residual slice on the MXU and reduces the
+squared norm into a (1, 1) accumulator block that every grid step maps to.
+One HBM pass over ``X``, scalar out.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linreg_loss_kernel(x_ref, y_ref, w_ref, o_ref, *, n_blocks: int,
+                        inv_2m: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ) - y_ref[...]
+    o_ref[...] += jnp.sum(r * r)
+
+    @pl.when(i == n_blocks - 1)
+    def _scale():
+        o_ref[...] *= inv_2m
+
+
+def _row_block(m: int, want: int) -> int:
+    b = min(m, want)
+    while m % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def linreg_loss(x, y, w, bs: int = 512, interpret: bool = True):
+    """Scalar loss ``(1, 1)`` for ``x (m,d)``, ``y (m,1)``, ``w (d,1)``."""
+    m, d = x.shape
+    assert y.shape == (m, 1) and w.shape == (d, 1)
+    bs = _row_block(m, bs)
+    n_blocks = m // bs
+    return pl.pallas_call(
+        functools.partial(
+            _linreg_loss_kernel, n_blocks=n_blocks, inv_2m=0.5 / m
+        ),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x, y, w)

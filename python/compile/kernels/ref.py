@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))``. Keep these boring: no tiling,
+no tricks, just the textbook expression.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain ``x @ y`` with f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def linreg_grad_ref(x, y, w):
+    """Two-op partial gradient: g = X^T (X w - y) / s."""
+    s = x.shape[0]
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32) - y
+    return jnp.dot(x.T, r, preferred_element_type=jnp.float32) / s
+
+
+def apply_update_ref(w, g, step_scale):
+    """w' = w - step_scale * sum_rows(G)."""
+    return w - step_scale[0, 0] * jnp.sum(g, axis=0, keepdims=True)
+
+
+def linreg_loss_ref(x, y, w):
+    """Mean-square error F(w) = ||X w - y||^2 / (2 m)  (scalar)."""
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32) - y
+    return jnp.sum(r * r) / (2.0 * x.shape[0])

@@ -1,0 +1,232 @@
+"""L2 — JAX compute graphs (build-time only), calling the L1 kernels.
+
+Two workloads:
+
+1. **Linear regression** — the paper's evaluation workload (§V): per-shard
+   partial gradient (Pallas ``linreg_grad``), full-data loss, and the
+   fastest-k masked-average apply (Pallas ``apply_update``).
+
+2. **Transformer LM** — the end-to-end driver workload: a decoder-only
+   transformer whose parameters live in ONE flat f32 vector (so the Rust
+   coordinator treats the model as an opaque parameter buffer and the
+   fastest-k machinery is workload-agnostic). ``transformer_grad`` returns
+   ``(flat_grad, loss)`` for one worker microbatch; the MLP matmuls route
+   through the Pallas ``matmul`` kernel (differentiated via its custom_vjp).
+
+Everything here is traced once by ``aot.py`` and exported as HLO text; no
+function in this file runs at serving/training time.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import apply_update, linreg_grad, linreg_loss as _loss_kernel, matmul
+
+# ---------------------------------------------------------------------------
+# Workload 1: linear regression (paper §V)
+# ---------------------------------------------------------------------------
+
+
+def linreg_partial_grad(x_shard, y_shard, w):
+    """Per-worker partial gradient (paper Eq. 2 inner term), Pallas-fused.
+
+    Shapes: x ``(s, d)``, y ``(s, 1)``, w ``(d, 1)`` -> ``(d, 1)``.
+    """
+    return linreg_grad(x_shard, y_shard, w)
+
+
+def linreg_grad_all(x_all, y_all, w):
+    """All n per-shard partial gradients in ONE graph: ``x_all (n,s,d)``,
+    ``y_all (n,s,1)``, ``w (d,1)`` -> ``(n, d)``.
+
+    The coordinator-side win: one PJRT dispatch per iteration instead of
+    k. Semantically faithful — in the real cluster *all* workers compute
+    every iteration; the master merely ignores the stragglers' results.
+
+    Lowered as two batched contractions rather than a vmapped Pallas call:
+    under ``interpret=True`` the vmapped kernel becomes an interpreter
+    loop (measured 4x slower than per-shard dispatch); the direct batched
+    ``dot_general`` is what XLA:CPU fuses best, and on TPU the per-shard
+    Pallas kernel (``linreg_grad``) remains the hand-tiled hot spot.
+    """
+    s = x_all.shape[1]
+    r = jnp.einsum(
+        "nsd,dz->nsz", x_all, w, preferred_element_type=jnp.float32
+    ) - y_all                                         # (n, s, 1)
+    g = jnp.einsum(
+        "nsd,nsz->nd", x_all, r, preferred_element_type=jnp.float32
+    )
+    return g / s
+
+
+def linreg_loss(x, y, w):
+    """Full-data loss F(w) = ||X w - y||^2 / (2 m), Pallas-fused (single
+    HBM pass); the error metric of Figs. 2-3 is ``F(w) - F*`` with F*
+    evaluated on the same graph. Returns a scalar."""
+    return _loss_kernel(x, y, w)[0, 0]
+
+
+def fastest_k_apply(w, g_stack, step_scale):
+    """Masked fastest-k average + SGD step (Pallas-fused).
+
+    ``g_stack`` is ``(n, d)`` with rows of stragglers zeroed by the
+    coordinator, ``step_scale`` is ``(1, 1) = eta / k``.
+    """
+    return apply_update(w, g_stack, step_scale)
+
+
+# ---------------------------------------------------------------------------
+# Workload 2: decoder-only transformer LM with flat-packed parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    """Static architecture config (baked into the HLO artifact)."""
+
+    vocab: int = 256       # byte-level vocab for the synthetic corpus
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Named "~100M" config: compile-only target for the --large artifact.
+LARGE = TransformerConfig(
+    vocab=32000, d_model=768, n_heads=12, n_layers=12, d_ff=3072,
+    seq_len=256, batch=4,
+)
+TINY = TransformerConfig()
+
+
+def _param_layout(cfg: TransformerConfig):
+    """Ordered (name, shape) list defining the flat packing."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    layout = [("embed", (v, d)), ("pos", (s, d))]
+    for i in range(cfg.n_layers):
+        layout += [
+            (f"l{i}.ln1_scale", (d,)), (f"l{i}.ln1_bias", (d,)),
+            (f"l{i}.wq", (d, d)), (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)), (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_scale", (d,)), (f"l{i}.ln2_bias", (d,)),
+            (f"l{i}.w1", (d, f)), (f"l{i}.w2", (f, d)),
+        ]
+    layout += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    return layout
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    """Total flat parameter count P."""
+    total = 0
+    for _, shape in _param_layout(cfg):
+        n = 1
+        for dim in shape:
+            n *= dim
+        total += n
+    return total
+
+
+def _unpack(flat, cfg: TransformerConfig):
+    """Flat (P,) vector -> dict of named arrays (static offsets)."""
+    params, off = {}, 0
+    for name, shape in _param_layout(cfg):
+        n = 1
+        for dim in shape:
+            n *= dim
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: TransformerConfig, key) -> jnp.ndarray:
+    """Scaled-normal init, returned already flat-packed."""
+    chunks = []
+    for name, shape in _param_layout(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name.endswith(("_bias",)):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            chunks.append((jax.random.normal(sub, shape) * std).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _mlp(x, w1, w2, cfg: TransformerConfig):
+    """Position-wise MLP; matmuls run on the Pallas tiled kernel."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    h = jax.nn.gelu(matmul(x2, w1))
+    out = matmul(h, w2)
+    return out.reshape(b, s, d)
+
+
+def _attention(x, p, i, cfg: TransformerConfig):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p[f"l{i}.wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p[f"l{i}.wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ p[f"l{i}.wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ p[f"l{i}.wo"]
+
+
+def transformer_loss(flat_params, tokens, cfg: TransformerConfig):
+    """Next-token cross-entropy over a ``(B, S+1)`` int32 token batch."""
+    p = _unpack(flat_params, cfg)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    b, s = inp.shape
+    x = p["embed"][inp] + p["pos"][None, :s, :]
+    for i in range(cfg.n_layers):
+        hx = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        x = x + _attention(hx, p, i, cfg)
+        hx = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + _mlp(hx, p[f"l{i}.w1"], p[f"l{i}.w2"], cfg)
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["embed"].T  # tied unembedding
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def transformer_grad(flat_params, tokens, cfg: TransformerConfig):
+    """Per-worker microbatch gradient: ``(flat_grad (P,), loss ())``.
+
+    This is the artifact the fastest-k coordinator calls on each simulated
+    worker; averaging + apply happen coordinator-side (natively or via the
+    ``apply_update`` artifact).
+    """
+    loss, grad = jax.value_and_grad(transformer_loss)(flat_params, tokens, cfg)
+    return grad, loss
+
+
+def transformer_step(flat_params, tokens, eta, cfg: TransformerConfig):
+    """Fused single-worker train step: ``(new_params, loss)``.
+
+    ``flat_params`` is donated at lowering time so XLA updates in place.
+    """
+    grad, loss = transformer_grad(flat_params, tokens, cfg)
+    return flat_params - eta * grad, loss

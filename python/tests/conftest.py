@@ -1,0 +1,13 @@
+"""Shared pytest config: force CPU, deterministic seeds, fast hypothesis."""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+# Kernel sweeps trace+compile per example; keep example counts modest so the
+# suite stays interactive. CI can raise this via HYPOTHESIS_PROFILE.
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.register_profile("ci", max_examples=100, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "kernels"))

@@ -1,0 +1,79 @@
+"""AOT export: artifacts exist, HLO text is loadable-shaped, manifest sane."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    """Run the exporter once at small shapes into a temp dir."""
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--m", "80", "--d", "16", "--n", "4", "--transformer", "none"],
+        cwd=ROOT, env=env, check=True,
+    )
+    return out
+
+
+def test_linreg_artifacts_written(artifacts):
+    names = sorted(os.listdir(artifacts))
+    assert "linreg_grad_s20_d16.hlo.txt" in names
+    assert "linreg_loss_m80_d16.hlo.txt" in names
+    assert "apply_update_n4_d16.hlo.txt" in names
+    assert "manifest.json" in names
+
+
+def test_hlo_text_shape(artifacts):
+    """The interchange files are HLO *text* with a single ENTRY."""
+    for name in os.listdir(artifacts):
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = (artifacts / name).read_text()
+        assert text.startswith("HloModule"), name
+        assert text.count("ENTRY") == 1, name
+        # jax>=0.5 64-bit-id proto issue: text must not be a binary proto.
+        assert "\x00" not in text, name
+
+
+def test_manifest_schema(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    entries = {e["name"]: e for e in manifest["entries"]}
+    grad = entries["linreg_grad_s20_d16"]
+    assert grad["inputs"] == [
+        {"shape": [20, 16], "dtype": "float32"},
+        {"shape": [20, 1], "dtype": "float32"},
+        {"shape": [16, 1], "dtype": "float32"},
+    ]
+    assert grad["outputs"][0]["shape"] == [16, 1]
+    assert grad["meta"]["kind"] == "linreg_grad"
+    for e in manifest["entries"]:
+        assert os.path.exists(artifacts / e["file"]), e["file"]
+
+
+def test_hlo_reimports_into_xla_computation(artifacts):
+    """Round-trip: the emitted text parses back via the HLO text parser."""
+    from jax._src.lib import xla_client as xc
+    text = (artifacts / "linreg_grad_s20_d16.hlo.txt").read_text()
+    # xla_client exposes the HLO text parser used by the Rust side's
+    # HloModuleProto::from_text_file equivalent.
+    mod = xc._xla.hlo_module_from_text(text)
+    assert "linreg" in mod.name or mod.name  # parsed fine
+
+
+def test_exporter_requires_divisible_shards(tmp_path):
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--m", "81", "--d", "4", "--n", "4", "--transformer", "none"],
+        cwd=ROOT, env=env, capture_output=True,
+    )
+    assert proc.returncode != 0

@@ -1,0 +1,194 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (including non-tile-multiple and degenerate ones)
+and data; assert_allclose against ref.py is THE correctness signal for the
+kernels that end up inside every HLO artifact the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import apply_update, linreg_grad, matmul
+from compile.kernels import ref
+
+
+def _rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    kx, ky = _keys(seed, 2)
+    x, y = _rand(kx, (m, k)), _rand(ky, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_block_shapes(bm, bk, bn):
+    kx, ky = _keys(7, 2)
+    x, y = _rand(kx, (64, 48)), _rand(ky, (48, 80))
+    np.testing.assert_allclose(
+        matmul(x, y, bm=bm, bk=bk, bn=bn),
+        ref.matmul_ref(x, y),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_matmul_grad_matches_jnp():
+    kx, ky = _keys(11, 2)
+    x, y = _rand(kx, (32, 24)), _rand(ky, (24, 16))
+
+    def f_pallas(x, y):
+        return jnp.sum(matmul(x, y) ** 2)
+
+    def f_ref(x, y):
+        return jnp.sum(ref.matmul_ref(x, y) ** 2)
+
+    gx_p, gy_p = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy_p, gy_r, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = jnp.eye(16, dtype=jnp.float32)
+    y = _rand(_keys(3, 1)[0], (16, 16))
+    np.testing.assert_allclose(matmul(x, y), y, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# linreg_grad (the paper's hot spot)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    s=st.integers(1, 128),
+    d=st.integers(1, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linreg_grad_matches_ref(s, d, seed):
+    kx, ky, kw = _keys(seed, 3)
+    x = _rand(kx, (s, d), 1.0, 10.0)  # paper's data range
+    y = _rand(ky, (s, 1), -100.0, 100.0)
+    w = _rand(kw, (d, 1), -1.0, 1.0)
+    np.testing.assert_allclose(
+        linreg_grad(x, y, w),
+        ref.linreg_grad_ref(x, y, w),
+        rtol=1e-4,
+        atol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("bs", [1, 4, 8, 40, 256])
+def test_linreg_grad_block_sizes(bs):
+    """Row-block tiling must not change the accumulated result."""
+    kx, ky, kw = _keys(5, 3)
+    x = _rand(kx, (40, 100), 1.0, 10.0)  # paper Fig-2 shard shape
+    y = _rand(ky, (40, 1))
+    w = _rand(kw, (100, 1))
+    np.testing.assert_allclose(
+        linreg_grad(x, y, w, bs=bs),
+        ref.linreg_grad_ref(x, y, w),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_linreg_grad_zero_residual():
+    """If y = X w exactly, the gradient must vanish."""
+    kx, kw = _keys(9, 2)
+    x = _rand(kx, (32, 16))
+    w = _rand(kw, (16, 1))
+    y = x @ w
+    g = linreg_grad(x, y, w)
+    np.testing.assert_allclose(g, jnp.zeros((16, 1)), atol=1e-4)
+
+
+def test_linreg_grad_is_mean_not_sum():
+    """Duplicating every row must leave the partial gradient unchanged."""
+    kx, ky, kw = _keys(13, 3)
+    x, y, w = _rand(kx, (8, 4)), _rand(ky, (8, 1)), _rand(kw, (4, 1))
+    x2, y2 = jnp.concatenate([x, x]), jnp.concatenate([y, y])
+    np.testing.assert_allclose(
+        linreg_grad(x, y, w), linreg_grad(x2, y2, w), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# apply_update (masked fastest-k average + SGD apply)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 64),
+    d=st.integers(1, 300),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apply_update_matches_ref(n, d, k, seed):
+    k = min(k, n)
+    kw, kg = _keys(seed, 2)
+    w = _rand(kw, (1, d))
+    g = _rand(kg, (n, d))
+    g = g.at[k:].set(0.0)  # straggler rows zeroed, as the coordinator does
+    scale = jnp.full((1, 1), 0.05 / k, jnp.float32)
+    np.testing.assert_allclose(
+        apply_update(w, g, scale),
+        ref.apply_update_ref(w, g, scale),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_apply_update_zero_gradient_is_identity():
+    w = _rand(_keys(1, 1)[0], (1, 64))
+    g = jnp.zeros((8, 64), jnp.float32)
+    scale = jnp.full((1, 1), 0.1, jnp.float32)
+    np.testing.assert_allclose(apply_update(w, g, scale), w, atol=0)
+
+
+def test_apply_update_equals_explicit_fastest_k():
+    """Masked layout == averaging the k received gradients explicitly."""
+    n, d, k, eta = 10, 32, 4, 0.01
+    keys = _keys(21, n + 1)
+    w = _rand(keys[0], (1, d))
+    grads = [_rand(keys[i + 1], (1, d)) for i in range(n)]
+    g_stack = jnp.concatenate(grads + [], axis=0)
+    g_stack = g_stack.at[k:].set(0.0)
+    scale = jnp.full((1, 1), eta / k, jnp.float32)
+    out = apply_update(w, g_stack, scale)
+    expect = w - eta * sum(grads[:k]) / k
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bd", [1, 7, 64, 4096])
+def test_apply_update_block_sizes(bd):
+    kw, kg = _keys(17, 2)
+    w, g = _rand(kw, (1, 96)), _rand(kg, (12, 96))
+    scale = jnp.full((1, 1), 0.02, jnp.float32)
+    np.testing.assert_allclose(
+        apply_update(w, g, scale, bd=bd),
+        ref.apply_update_ref(w, g, scale),
+        rtol=1e-5,
+        atol=1e-5,
+    )

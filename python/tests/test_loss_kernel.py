@@ -1,0 +1,58 @@
+"""Pallas linreg_loss kernel vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import linreg_loss
+from compile.kernels import ref
+
+
+def _rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+@given(
+    m=st.integers(1, 256),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_matches_ref(m, d, seed):
+    kx, ky, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(kx, (m, d), 1.0, 10.0)
+    y = _rand(ky, (m, 1), -50.0, 50.0)
+    w = _rand(kw, (d, 1), -1.0, 1.0)
+    got = linreg_loss(x, y, w)[0, 0]
+    want = ref.linreg_loss_ref(x, y, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bs", [1, 5, 100, 512])
+def test_loss_block_sizes(bs):
+    kx, ky, kw = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = _rand(kx, (100, 16))
+    y = _rand(ky, (100, 1))
+    w = _rand(kw, (16, 1))
+    got = linreg_loss(x, y, w, bs=bs)[0, 0]
+    want = ref.linreg_loss_ref(x, y, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_loss_zero_at_exact_fit():
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    x = _rand(kx, (64, 8))
+    w = _rand(kw, (8, 1))
+    y = x @ w
+    got = linreg_loss(x, y, w)[0, 0]
+    assert abs(float(got)) < 1e-6
+
+
+def test_loss_is_half_msq():
+    x = jnp.ones((4, 1), jnp.float32)
+    y = jnp.zeros((4, 1), jnp.float32)
+    w = jnp.full((1, 1), 2.0, jnp.float32)
+    # residual = 2 everywhere -> F = 4*4/(2*4) = 2
+    got = linreg_loss(x, y, w)[0, 0]
+    np.testing.assert_allclose(got, 2.0, rtol=1e-6)

@@ -1,0 +1,300 @@
+//! Fully-asynchronous distributed SGD — the Fig. 3 comparator, per
+//! Dutta et al. [2].
+//!
+//! Every worker computes the partial gradient of *its own shard* against
+//! the model version it last received. Whenever any worker finishes, the
+//! master immediately applies that (possibly stale) gradient:
+//!
+//! ```text
+//! w ← w − η ∇F(S_i, w_stale_i)
+//! ```
+//!
+//! hands the worker the fresh model, and the worker starts over. There is
+//! no synchronization barrier, so the clock advances on an event queue of
+//! per-worker completion times rather than an order statistic.
+
+use crate::grad::GradBackend;
+use crate::metrics::{Recorder, Sample};
+use crate::rng::Pcg64;
+use crate::sim::EventQueue;
+use crate::straggler::DelayModel;
+
+/// Async-run configuration.
+#[derive(Debug, Clone)]
+pub struct AsyncConfig {
+    /// Step size η.
+    pub eta: f32,
+    /// Total model updates (each worker completion is one update).
+    pub max_updates: u64,
+    /// Stop once the virtual clock passes this (0 = no budget).
+    pub max_time: f64,
+    /// Seed for the delay draws.
+    pub seed: u64,
+    /// Evaluate + record every this many updates.
+    pub record_stride: u64,
+    /// Staleness-aware step damping: apply `η/(1 + staleness)` per update.
+    ///
+    /// Raw delayed SGD is unstable whenever `η·λ_max·τ ≳ 1`; with the
+    /// paper's Fig-3 parameters (η = 2·10⁻⁴, λ_max ≈ 3·10³, τ ≈ n−1 = 49)
+    /// that product is ≈ 30, so the undamped run diverges (kept available
+    /// as an ablation — see EXPERIMENTS.md). The paper does not state its
+    /// async stabilisation; this damping is the standard staleness-aware
+    /// rule (cf. Zhang et al. 2016) and is the documented substitution.
+    pub staleness_damping: bool,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self {
+            eta: 2e-4,
+            max_updates: 100_000,
+            max_time: 0.0,
+            seed: 0,
+            record_stride: 50,
+            staleness_damping: true,
+        }
+    }
+}
+
+/// Result of an async run.
+pub struct AsyncRun {
+    /// Error-vs-time record.
+    pub recorder: Recorder,
+    /// Final model.
+    pub w: Vec<f32>,
+    /// Updates applied.
+    pub updates: u64,
+    /// Final virtual clock.
+    pub total_time: f64,
+    /// Mean staleness (model versions elapsed between a worker's read and
+    /// its gradient's application) — diagnostic for the Fig. 3 discussion.
+    pub mean_staleness: f64,
+    /// True if the run blew up (non-finite model) and stopped early.
+    pub diverged: bool,
+}
+
+/// Run asynchronous SGD from `w0`.
+pub fn run_async(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    w0: &[f32],
+    cfg: &AsyncConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> AsyncRun {
+    let n = backend.n_shards();
+    let d = backend.dim();
+    assert_eq!(w0.len(), d, "w0 dimension mismatch");
+
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0xA57C);
+    let mut w = w0.to_vec();
+    let mut g = vec![0.0f32; d];
+
+    // Each worker computes against its stale snapshot; in the simulated
+    // timeline only the *version* matters for staleness accounting, and the
+    // gradient is computed lazily at completion using the stale snapshot.
+    let mut snapshots: Vec<Vec<f32>> = vec![w.clone(); n];
+    let mut read_version = vec![0u64; n];
+    let mut version = 0u64;
+    let mut staleness_sum = 0.0f64;
+
+    let mut queue: EventQueue<usize> = EventQueue::new();
+    for i in 0..n {
+        let dt = delays.sample(0, i, &mut rng);
+        queue.schedule_in(dt, i);
+    }
+
+    let mut recorder = Recorder::with_stride("async", cfg.record_stride);
+    recorder.push_forced(Sample {
+        iteration: 0,
+        time: 0.0,
+        k: 1,
+        error: eval_error(&w),
+    });
+
+    let mut updates = 0u64;
+    let mut diverged = false;
+    while updates < cfg.max_updates {
+        let ev = match queue.pop() {
+            Some(e) => e,
+            None => break,
+        };
+        if cfg.max_time > 0.0 && ev.time > cfg.max_time {
+            break;
+        }
+        let i = ev.payload;
+
+        // Gradient at the worker's stale snapshot.
+        backend.partial_grad(i, &snapshots[i], &mut g);
+        let staleness = version - read_version[i];
+        let step = if cfg.staleness_damping {
+            cfg.eta / (1.0 + staleness as f32)
+        } else {
+            cfg.eta
+        };
+        for (wv, gv) in w.iter_mut().zip(&g) {
+            *wv -= step * *gv;
+        }
+        version += 1;
+        staleness_sum += staleness as f64;
+        updates += 1;
+        if !w[0].is_finite() {
+            diverged = true;
+            recorder.push_forced(Sample {
+                iteration: updates,
+                time: queue.now(),
+                k: 1,
+                error: f64::INFINITY,
+            });
+            break;
+        }
+
+        // Worker restarts immediately with the fresh model.
+        snapshots[i].copy_from_slice(&w);
+        read_version[i] = version;
+        let dt = delays.sample(updates, i, &mut rng);
+        queue.schedule_in(dt, i);
+
+        if updates % cfg.record_stride == 0 {
+            recorder.push_forced(Sample {
+                iteration: updates,
+                time: queue.now(),
+                k: 1,
+                error: eval_error(&w),
+            });
+        }
+    }
+
+    let total_time = queue.now();
+    if !diverged && updates % cfg.record_stride != 0 {
+        recorder.push_forced(Sample {
+            iteration: updates,
+            time: total_time,
+            k: 1,
+            error: eval_error(&w),
+        });
+    }
+
+    AsyncRun {
+        recorder,
+        w,
+        updates,
+        total_time,
+        mean_staleness: if updates > 0 {
+            staleness_sum / updates as f64
+        } else {
+            0.0
+        },
+        diverged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use crate::grad::NativeBackend;
+    use crate::model::LinRegProblem;
+    use crate::straggler::ExponentialDelays;
+
+    fn setup(n: usize) -> (NativeBackend, LinRegProblem) {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 200, d: 10, ..Default::default() },
+            4,
+        );
+        let p = LinRegProblem::new(&ds);
+        (NativeBackend::new(Shards::partition(&ds, n)), p)
+    }
+
+    #[test]
+    fn async_training_descends() {
+        let (mut backend, problem) = setup(10);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.0005,
+            max_updates: 3000,
+            seed: 1,
+            record_stride: 100,
+            ..Default::default()
+        };
+        let run = run_async(
+            &mut backend,
+            &delays,
+            &vec![0.0; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 0.01, "{first} -> {last}");
+        assert_eq!(run.updates, 3000);
+    }
+
+    #[test]
+    fn staleness_grows_with_workers() {
+        let delays = ExponentialDelays::new(1.0);
+        let stale_for = |n: usize| {
+            let (mut backend, problem) = setup(n);
+            let cfg = AsyncConfig {
+                eta: 0.0001,
+                max_updates: 2000,
+                seed: 3,
+                record_stride: 500,
+                ..Default::default()
+            };
+            run_async(&mut backend, &delays, &vec![0.0; 10], &cfg, &mut |w| {
+                problem.error(w)
+            })
+            .mean_staleness
+        };
+        let s2 = stale_for(2);
+        let s20 = stale_for(20);
+        // With n concurrent workers mean staleness ≈ n − 1.
+        assert!((s2 - 1.0).abs() < 0.3, "s2={s2}");
+        assert!(s20 > 10.0, "s20={s20}");
+    }
+
+    #[test]
+    fn updates_arrive_faster_than_sync_iterations() {
+        // n workers each ~exp(1): async applies ~n updates per unit time.
+        let (mut backend, problem) = setup(10);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.0001,
+            max_updates: 5000,
+            seed: 5,
+            record_stride: 1000,
+            ..Default::default()
+        };
+        let run = run_async(
+            &mut backend,
+            &delays,
+            &vec![0.0; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let rate = run.updates as f64 / run.total_time;
+        assert!((rate - 10.0).abs() < 1.5, "rate={rate}");
+    }
+
+    #[test]
+    fn time_budget_respected() {
+        let (mut backend, problem) = setup(5);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.0001,
+            max_updates: u64::MAX / 2,
+            max_time: 30.0,
+            seed: 6,
+            record_stride: 100,
+            ..Default::default()
+        };
+        let run = run_async(
+            &mut backend,
+            &delays,
+            &vec![0.0; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        assert!(run.total_time <= 31.0);
+    }
+}

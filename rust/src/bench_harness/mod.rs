@@ -1,0 +1,140 @@
+//! Criterion-lite: a tiny benchmark harness (criterion is not available
+//! offline). Warmup, timed iterations, robust summary stats, and a
+//! throughput-style report. `benches/*.rs` use `harness = false` and drive
+//! this directly.
+
+use crate::stats::quantile;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Samples, seconds per iteration.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Mean seconds/iteration.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Median seconds/iteration.
+    pub fn median(&self) -> f64 {
+        quantile(&self.samples, 0.5)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    /// Pretty one-line summary with adaptive units.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12}  median {:>12}  ±{:>10}  ({} samples)",
+            self.name,
+            fmt_duration(self.mean()),
+            fmt_duration(self.median()),
+            fmt_duration(self.stddev()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Format seconds with adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner with fixed sample counts.
+pub struct Bencher {
+    /// Warmup iterations before sampling.
+    pub warmup_iters: usize,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Inner iterations per sample (amortizes timer overhead).
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, samples: 15, iters_per_sample: 1 }
+    }
+}
+
+impl Bencher {
+    /// Quick-run settings for micro-benchmarks.
+    pub fn micro() -> Self {
+        Self { warmup_iters: 100, samples: 30, iters_per_sample: 100 }
+    }
+
+    /// Time `f`, returning a [`BenchResult`]. `f` is called once per inner
+    /// iteration; use `std::hint::black_box` inside to defeat DCE.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            samples
+                .push(start.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        BenchResult { name: name.to_string(), samples }
+    }
+}
+
+/// Print a section header for a bench report.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 10 };
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() > 0.0);
+        assert!(r.median() > 0.0);
+        assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+        assert_eq!(fmt_duration(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_duration(2.5e-9), "2.5 ns");
+    }
+}

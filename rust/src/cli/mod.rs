@@ -1,0 +1,178 @@
+//! Hand-rolled CLI parsing (no clap offline): subcommands + `--key value`
+//! flags + `--bool-flag` switches, with typed getters and generated help.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs.
+    flags: BTreeMap<String, String>,
+    /// Bare `--switch` tokens.
+    switches: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// CLI parse errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    /// A --flag that expects a value hit the end of argv.
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    /// A flag value failed to parse.
+    #[error("flag --{flag}: cannot parse '{value}' as {ty}")]
+    BadValue {
+        /// Flag name.
+        flag: String,
+        /// Offending value.
+        value: String,
+        /// Target type.
+        ty: &'static str,
+    },
+}
+
+/// Flags that take a value (everything else starting with `--` is a
+/// switch). Keep in sync with `print_help`.
+const VALUED_FLAGS: &[&str] = &[
+    "config", "seed", "n", "k", "k0", "step", "thresh", "burnin", "k-max",
+    "eta", "max-time", "max-iterations", "out", "artifacts", "steps",
+    "workers", "tag", "points", "time-scale", "m", "d", "lambda", "record-stride",
+];
+
+impl Args {
+    /// Parse argv (excluding the binary name).
+    pub fn parse(argv: &[String]) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if VALUED_FLAGS.contains(&name) {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| CliError::MissingValue(name.into()))?;
+                    out.flags.insert(name.to_string(), val.clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.command.is_none() {
+                    out.command = Some(tok.clone());
+                } else {
+                    out.positional.push(tok.clone());
+                }
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| CliError::BadValue {
+                flag: key.to_string(),
+                value: v.clone(),
+                ty: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+/// Top-level usage text.
+pub fn print_help() {
+    println!(
+        r#"adasgd — adaptive distributed fastest-k SGD (ICASSP'20 reproduction)
+
+USAGE: adasgd <command> [flags]
+
+COMMANDS:
+  fig1        Lemma-1 bound curves + Theorem-1 envelope   [--points N]
+  fig2        adaptive vs fixed-k simulation              [--seed S --max-time T]
+  fig3        adaptive vs asynchronous SGD                [--seed S --max-time T]
+  train       run one experiment                          [--config exp.toml | flags]
+  train-transformer
+              fastest-k transformer training (artifacts)  [--steps N --workers W --tag tiny]
+  threaded    real-thread cluster demo                    [--workers W --k K --time-scale X]
+  list-artifacts
+              show the compiled artifact registry         [--artifacts DIR]
+  repeat      multi-seed aggregate of a config            [--config exp.toml --steps R]
+  switching-times
+              print the Theorem-1 schedule for Example 1
+  help        this message
+
+COMMON FLAGS:
+  --seed S            rng seed (default 0)
+  --out FILE.csv      write run series as CSV
+  --artifacts DIR     artifact directory (default ./artifacts or $ADASGD_ARTIFACTS)
+  --quiet             suppress ASCII plots
+
+TRAIN FLAGS (no --config):
+  --n N --k K | --k0 K0 --step S --thresh T --burnin B --k-max M
+  --eta F --max-time T --max-iterations J --m M --d D --lambda L
+  --async             run the asynchronous baseline instead of fastest-k
+"#
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(&argv(
+            "fig2 --seed 7 --max-time 2500 --quiet extra",
+        ))
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("fig2"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get_parse::<f64>("max-time", 0.0).unwrap(), 2500.0);
+        assert!(a.has("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("fig1")).unwrap();
+        assert_eq!(a.get_parse::<u64>("seed", 42).unwrap(), 42);
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            Args::parse(&argv("train --seed")).unwrap_err(),
+            CliError::MissingValue("seed".into())
+        );
+        let a = Args::parse(&argv("train --seed abc")).unwrap();
+        assert!(matches!(
+            a.get_parse::<u64>("seed", 0),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+}

@@ -1,0 +1,361 @@
+//! Fractional repetition gradient coding.
+
+use crate::data::Shards;
+use crate::grad::GradBackend;
+use crate::linalg::Matrix;
+use crate::master::fastest_k_select;
+use crate::metrics::{Recorder, Sample};
+use crate::rng::Pcg64;
+use crate::straggler::DelayModel;
+
+/// A fractional-repetition assignment: `n` workers, replication `r`.
+#[derive(Debug, Clone)]
+pub struct FrcScheme {
+    n: usize,
+    r: usize,
+    /// `assign[w]` = the r shard ids worker w holds.
+    assign: Vec<Vec<usize>>,
+}
+
+impl FrcScheme {
+    /// Build the grouped assignment. Requires `r | n`; shards are the
+    /// n data shards (one per worker in the uncoded scheme).
+    pub fn new(n: usize, r: usize) -> Self {
+        assert!(r >= 1 && r <= n && n % r == 0, "need r | n (n={n}, r={r})");
+        let groups = n / r;
+        let mut assign = vec![Vec::new(); n];
+        for g in 0..groups {
+            // Group g owns shards g*r .. (g+1)*r; all its workers hold all.
+            let shard_ids: Vec<usize> = (g * r..(g + 1) * r).collect();
+            for member in 0..r {
+                assign[g * r + member] = shard_ids.clone();
+            }
+        }
+        Self { n, r, assign }
+    }
+
+    /// Workers n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Replication factor r.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Shards worker `w` computes.
+    pub fn assignment(&self, w: usize) -> &[usize] {
+        &self.assign[w]
+    }
+
+    /// How many responses guarantee exact recovery: `n − r + 1`.
+    pub fn recovery_threshold(&self) -> usize {
+        self.n - self.r + 1
+    }
+
+    /// Greedy decode: given the set of responding workers, pick one
+    /// representative per group. Returns `None` if some group has no
+    /// responder (cannot happen with ≥ threshold responses).
+    pub fn decode(&self, responders: &[usize]) -> Option<Vec<usize>> {
+        let groups = self.n / self.r;
+        let mut pick: Vec<Option<usize>> = vec![None; groups];
+        for &w in responders {
+            let g = w / self.r;
+            if pick[g].is_none() {
+                pick[g] = Some(w);
+            }
+        }
+        pick.into_iter().collect()
+    }
+}
+
+/// Coded-GD run configuration.
+#[derive(Debug, Clone)]
+pub struct CodedConfig {
+    /// Step size η.
+    pub eta: f32,
+    /// Iteration cap.
+    pub max_iterations: u64,
+    /// Virtual-time budget (0 = none).
+    pub max_time: f64,
+    /// Delay seed.
+    pub seed: u64,
+    /// Record stride.
+    pub record_stride: u64,
+    /// Replication factor r.
+    pub r: usize,
+}
+
+/// Result of a coded run.
+pub struct CodedRun {
+    /// Error-vs-time record.
+    pub recorder: Recorder,
+    /// Final model.
+    pub w: Vec<f32>,
+    /// Iterations.
+    pub iterations: u64,
+    /// Final virtual time.
+    pub total_time: f64,
+}
+
+/// Run exact-recovery coded gradient descent: each iteration waits for the
+/// fastest `n − r + 1` workers, decodes one representative per group, and
+/// applies the *exact* full gradient (no stochastic noise).
+///
+/// A worker's response time is its delay draw scaled by `r` (it computes
+/// r partial gradients — redundancy costs compute).
+pub fn run_coded_gd(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    scheme: &FrcScheme,
+    w0: &[f32],
+    cfg: &CodedConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> CodedRun {
+    let n = scheme.n();
+    assert_eq!(backend.n_shards(), n, "scheme/backend shard mismatch");
+    let d = backend.dim();
+    let threshold = scheme.recovery_threshold();
+
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0xC0DE);
+    let mut w = w0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut partial = vec![0.0f32; d];
+    let mut delay_buf = vec![0.0f64; n];
+    let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
+
+    let mut recorder = Recorder::with_stride(
+        format!("coded-frc(r={})", scheme.r()),
+        cfg.record_stride,
+    );
+    recorder.push_forced(Sample {
+        iteration: 0,
+        time: 0.0,
+        k: threshold,
+        error: eval_error(&w),
+    });
+
+    let mut t = 0.0f64;
+    let mut j = 0u64;
+    while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time) {
+        backend.on_iteration(j);
+        for (i, slot) in delay_buf.iter_mut().enumerate() {
+            // r shards per worker → r× compute per response.
+            *slot = delays.sample(j, i, &mut rng) * scheme.r() as f64;
+        }
+        let (x_thr, _) = fastest_k_select(&delay_buf, threshold, &mut idx_buf);
+        t += x_thr;
+
+        let reps = scheme
+            .decode(&idx_buf[..threshold])
+            .expect("threshold responses always decode");
+        // Exact full gradient: average each group's r shard gradients.
+        g.iter_mut().for_each(|v| *v = 0.0);
+        for rep in reps {
+            for &shard in scheme.assignment(rep) {
+                backend.partial_grad(shard, &w, &mut partial);
+                for (gv, pv) in g.iter_mut().zip(&partial) {
+                    *gv += *pv;
+                }
+            }
+        }
+        let inv_n = 1.0 / n as f32;
+        for (wv, gv) in w.iter_mut().zip(g.iter()) {
+            *wv -= cfg.eta * *gv * inv_n;
+        }
+
+        j += 1;
+        if j % cfg.record_stride == 0 {
+            recorder.push_forced(Sample {
+                iteration: j,
+                time: t,
+                k: threshold,
+                error: eval_error(&w),
+            });
+        }
+    }
+    if j % cfg.record_stride != 0 {
+        recorder.push_forced(Sample {
+            iteration: j,
+            time: t,
+            k: threshold,
+            error: eval_error(&w),
+        });
+    }
+    CodedRun { recorder, w, iterations: j, total_time: t }
+}
+
+/// Convenience: shards + scheme consistency check.
+pub fn check_scheme(shards: &Shards, scheme: &FrcScheme) -> Result<(), String> {
+    if shards.n() != scheme.n() {
+        return Err(format!(
+            "scheme built for n={} but shards have n={}",
+            scheme.n(),
+            shards.n()
+        ));
+    }
+    let d = shards.x[0].cols();
+    let consistent = shards.x.iter().all(|m: &Matrix| m.cols() == d);
+    if !consistent {
+        return Err("ragged shard dimensions".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticConfig, SyntheticDataset};
+    use crate::grad::NativeBackend;
+    use crate::model::{full_gradient, LinRegProblem};
+    use crate::straggler::ExponentialDelays;
+
+    #[test]
+    fn assignment_covers_all_shards_r_times() {
+        let s = FrcScheme::new(12, 3);
+        let mut count = vec![0usize; 12];
+        for w in 0..12 {
+            assert_eq!(s.assignment(w).len(), 3);
+            for &shard in s.assignment(w) {
+                count[shard] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 3), "{count:?}");
+        assert_eq!(s.recovery_threshold(), 10);
+    }
+
+    #[test]
+    fn decode_from_threshold_always_succeeds() {
+        let s = FrcScheme::new(12, 3);
+        // Worst case: the r−1 = 2 missing workers are in the same group.
+        let responders: Vec<usize> = (0..12).filter(|&w| w != 0 && w != 1).collect();
+        let reps = s.decode(&responders).expect("decode");
+        assert_eq!(reps.len(), 4);
+        // Group 0 must be represented by worker 2.
+        assert_eq!(reps[0], 2);
+    }
+
+    #[test]
+    fn decode_fails_below_threshold_when_group_lost() {
+        let s = FrcScheme::new(6, 2);
+        // Both members of group 0 missing.
+        assert!(s.decode(&[2, 3, 4, 5]).is_none());
+    }
+
+    #[test]
+    fn coded_gd_uses_exact_gradient() {
+        // One coded iteration must move w exactly along the full gradient.
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 120, d: 6, ..Default::default() },
+            7,
+        );
+        let shards = Shards::partition(&ds, 6);
+        let scheme = FrcScheme::new(6, 2);
+        check_scheme(&shards, &scheme).unwrap();
+        let mut backend = NativeBackend::new(shards);
+        let problem = LinRegProblem::new(&ds);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = CodedConfig {
+            eta: 1e-3,
+            max_iterations: 1,
+            max_time: 0.0,
+            seed: 1,
+            record_stride: 1,
+            r: 2,
+        };
+        let w0 = vec![0.0f32; 6];
+        let run = run_coded_gd(
+            &mut backend,
+            &delays,
+            &scheme,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let mut gfull = vec![0.0f32; 6];
+        full_gradient(&ds.x, &ds.y, &w0, &mut gfull);
+        for j in 0..6 {
+            let want = -1e-3 * gfull[j];
+            let rel = (run.w[j] - want).abs() / want.abs().max(1e-6);
+            assert!(rel < 1e-3, "j={j}: {} vs {}", run.w[j], want);
+        }
+    }
+
+    #[test]
+    fn coded_gd_converges() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 200, d: 10, ..Default::default() },
+            8,
+        );
+        let shards = Shards::partition(&ds, 10);
+        let scheme = FrcScheme::new(10, 2);
+        let mut backend = NativeBackend::new(shards);
+        let problem = LinRegProblem::new(&ds);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = CodedConfig {
+            eta: 2e-3,
+            max_iterations: 500,
+            max_time: 0.0,
+            seed: 2,
+            record_stride: 100,
+            r: 2,
+        };
+        let run = run_coded_gd(
+            &mut backend,
+            &delays,
+            &scheme,
+            &vec![0.0f32; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 1e-3, "{first} -> {last}");
+    }
+
+    #[test]
+    fn replication_shortens_tail_but_costs_compute() {
+        // Per-iteration time: coded waits for X_(n-r+1) scaled by r;
+        // r=1 degenerates to waiting for everyone unscaled.
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 120, d: 4, ..Default::default() },
+            9,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let delays = ExponentialDelays::new(1.0);
+        let time_of = |r: usize| {
+            let shards = Shards::partition(&ds, 12);
+            let scheme = FrcScheme::new(12, r);
+            let mut backend = NativeBackend::new(shards);
+            let cfg = CodedConfig {
+                eta: 1e-3,
+                max_iterations: 300,
+                max_time: 0.0,
+                seed: 3,
+                record_stride: 300,
+                r,
+            };
+            run_coded_gd(
+                &mut backend,
+                &delays,
+                &scheme,
+                &vec![0.0f32; 4],
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+            .total_time
+        };
+        let t1 = time_of(1); // exact GD, waits for max of 12
+        let t3 = time_of(3); // waits for 10th of 12, but 3x compute
+        // The r=3 run pays the 3x scaling: per iteration 3*X_(10) vs X_(12);
+        // E[X_(12)]≈3.10, E[X_(10)]≈2.02 → 3*2.02 > 3.10.
+        assert!(t3 > t1, "replication is not free: t3={t3} t1={t1}");
+    }
+
+    #[test]
+    #[should_panic(expected = "need r | n")]
+    fn rejects_bad_replication() {
+        FrcScheme::new(10, 3);
+    }
+}

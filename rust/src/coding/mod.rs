@@ -1,0 +1,18 @@
+//! Gradient coding — the redundancy-based straggler-mitigation family the
+//! paper positions itself against (§I.A, refs [11]–[27]).
+//!
+//! Implemented scheme: **fractional repetition coding** (Tandon et al.,
+//! ICML 2017). With replication factor `r`, the n workers are split into
+//! `n/r` groups; every worker in a group holds the *same* r shards and
+//! sends a fixed linear combination. The master recovers the **exact**
+//! full gradient from any `n − r + 1` responses — i.e. it tolerates
+//! `r − 1` stragglers per iteration at an `r×` compute/storage overhead.
+//!
+//! The bench `ablations`/`coded_vs_adaptive` compares this against
+//! fastest-k SGD: coded GD pays `X_(n−r+1)` per iteration and gets the
+//! exact gradient; fastest-k pays `X_(k)` and accepts gradient noise —
+//! exactly the trade-off the paper's introduction sketches.
+
+mod frc;
+
+pub use frc::{run_coded_gd, CodedConfig, CodedRun, FrcScheme};

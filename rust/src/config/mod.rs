@@ -1,0 +1,18 @@
+//! Configuration substrate.
+//!
+//! Offline build means no serde: this module provides the two parsers the
+//! system needs —
+//!
+//! * [`json`] — a minimal JSON parser for `artifacts/manifest.json`
+//!   (written by `python/compile/aot.py`),
+//! * [`toml`] — a TOML-subset parser for experiment configs
+//!   (`adasgd train --config exp.toml`),
+//!
+//! plus the typed [`ExperimentConfig`] schema with validation.
+
+pub mod json;
+pub mod toml;
+
+mod schema;
+
+pub use schema::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};

@@ -1,0 +1,385 @@
+//! Typed experiment configuration with TOML loading + validation.
+
+use super::toml::TomlDoc;
+use crate::policy::PflugParams;
+
+/// Which delay model to simulate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DelaySpec {
+    /// iid exp(λ).
+    Exponential {
+        /// Rate λ.
+        lambda: f64,
+    },
+    /// Δ + exp(λ).
+    ShiftedExponential {
+        /// Constant shift Δ.
+        shift: f64,
+        /// Rate λ.
+        lambda: f64,
+    },
+    /// Pareto(xm, α).
+    Pareto {
+        /// Scale xm.
+        xm: f64,
+        /// Shape α.
+        alpha: f64,
+    },
+    /// Weibull(λ, k).
+    Weibull {
+        /// Scale λ.
+        lambda: f64,
+        /// Shape k.
+        k: f64,
+    },
+    /// Bimodal with persistent slow nodes.
+    Bimodal {
+        /// Base rate λ.
+        lambda: f64,
+        /// Number of persistently slow workers.
+        n_slow: usize,
+        /// Slow-down multiplier.
+        slow_factor: f64,
+        /// Transient straggle probability for fast workers.
+        p_transient: f64,
+    },
+    /// Replay a CSV trace file.
+    Trace {
+        /// Path to the CSV.
+        path: String,
+    },
+}
+
+impl DelaySpec {
+    /// Instantiate the delay model.
+    pub fn build(&self) -> Result<Box<dyn crate::straggler::DelayModel>, String> {
+        use crate::straggler::*;
+        Ok(match self {
+            DelaySpec::Exponential { lambda } => {
+                Box::new(ExponentialDelays::new(*lambda))
+            }
+            DelaySpec::ShiftedExponential { shift, lambda } => {
+                Box::new(ShiftedExponentialDelays::new(*shift, *lambda))
+            }
+            DelaySpec::Pareto { xm, alpha } => {
+                Box::new(ParetoDelays::new(*xm, *alpha))
+            }
+            DelaySpec::Weibull { lambda, k } => {
+                Box::new(WeibullDelays::new(*lambda, *k))
+            }
+            DelaySpec::Bimodal { lambda, n_slow, slow_factor, p_transient } => {
+                Box::new(BimodalDelays::new(
+                    *lambda,
+                    *n_slow,
+                    *slow_factor,
+                    *p_transient,
+                ))
+            }
+            DelaySpec::Trace { path } => Box::new(
+                TraceDelays::from_file(std::path::Path::new(path))?,
+            ),
+        })
+    }
+}
+
+/// Which k policy to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// Non-adaptive fastest-k.
+    Fixed {
+        /// The fixed k.
+        k: usize,
+    },
+    /// Algorithm 1.
+    Adaptive(PflugParams),
+    /// Asynchronous SGD baseline (no k).
+    Async,
+}
+
+/// Which workload to train.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// Synthetic linear regression (paper §V).
+    LinReg {
+        /// Data rows m.
+        m: usize,
+        /// Feature dimension d.
+        d: usize,
+    },
+    /// Transformer LM via the AOT artifact with the given tag.
+    Transformer {
+        /// Artifact tag ("tiny" / "large").
+        tag: String,
+    },
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Run label.
+    pub label: String,
+    /// Workers n.
+    pub n: usize,
+    /// Step size η.
+    pub eta: f64,
+    /// Iteration cap.
+    pub max_iterations: u64,
+    /// Virtual-time budget (0 = none).
+    pub max_time: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Record stride.
+    pub record_stride: u64,
+    /// Delay model.
+    pub delays: DelaySpec,
+    /// Policy.
+    pub policy: PolicySpec,
+    /// Workload.
+    pub workload: WorkloadSpec,
+}
+
+impl Default for ExperimentConfig {
+    /// Paper Fig. 2 adaptive run.
+    fn default() -> Self {
+        Self {
+            label: "fig2-adaptive".into(),
+            n: 50,
+            eta: 5e-4,
+            max_iterations: 100_000,
+            max_time: 2500.0,
+            seed: 0,
+            record_stride: 20,
+            delays: DelaySpec::Exponential { lambda: 1.0 },
+            policy: PolicySpec::Adaptive(PflugParams::default()),
+            workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text. Missing keys take the defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+
+        if let Some(v) = doc.get("", "label") {
+            cfg.label = v.as_str().ok_or("label must be a string")?.into();
+        }
+        if let Some(v) = doc.get("", "n") {
+            cfg.n = v.as_int().ok_or("n must be an int")? as usize;
+        }
+        if let Some(v) = doc.get("", "eta") {
+            cfg.eta = v.as_float().ok_or("eta must be a float")?;
+        }
+        if let Some(v) = doc.get("", "max_iterations") {
+            cfg.max_iterations =
+                v.as_int().ok_or("max_iterations must be an int")? as u64;
+        }
+        if let Some(v) = doc.get("", "max_time") {
+            cfg.max_time = v.as_float().ok_or("max_time must be a float")?;
+        }
+        if let Some(v) = doc.get("", "seed") {
+            cfg.seed = v.as_int().ok_or("seed must be an int")? as u64;
+        }
+        if let Some(v) = doc.get("", "record_stride") {
+            cfg.record_stride =
+                v.as_int().ok_or("record_stride must be an int")? as u64;
+        }
+
+        if let Some(sec) = doc.section("delays") {
+            let kind = sec
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or("delays.kind is required in [delays]")?;
+            let f = |key: &str, dflt: f64| {
+                sec.get(key).and_then(|v| v.as_float()).unwrap_or(dflt)
+            };
+            cfg.delays = match kind {
+                "exponential" => {
+                    DelaySpec::Exponential { lambda: f("lambda", 1.0) }
+                }
+                "shifted-exponential" => DelaySpec::ShiftedExponential {
+                    shift: f("shift", 1.0),
+                    lambda: f("lambda", 1.0),
+                },
+                "pareto" => {
+                    DelaySpec::Pareto { xm: f("xm", 1.0), alpha: f("alpha", 2.5) }
+                }
+                "weibull" => {
+                    DelaySpec::Weibull { lambda: f("lambda", 1.0), k: f("k", 1.0) }
+                }
+                "bimodal" => DelaySpec::Bimodal {
+                    lambda: f("lambda", 1.0),
+                    n_slow: f("n_slow", 0.0) as usize,
+                    slow_factor: f("slow_factor", 10.0),
+                    p_transient: f("p_transient", 0.0),
+                },
+                "trace" => DelaySpec::Trace {
+                    path: sec
+                        .get("path")
+                        .and_then(|v| v.as_str())
+                        .ok_or("delays.path required for trace")?
+                        .into(),
+                },
+                other => return Err(format!("unknown delays.kind '{other}'")),
+            };
+        }
+
+        if let Some(sec) = doc.section("policy") {
+            let kind = sec
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or("policy.kind is required in [policy]")?;
+            let i = |key: &str, dflt: i64| {
+                sec.get(key).and_then(|v| v.as_int()).unwrap_or(dflt)
+            };
+            cfg.policy = match kind {
+                "fixed" => PolicySpec::Fixed { k: i("k", 10) as usize },
+                "adaptive" => PolicySpec::Adaptive(PflugParams {
+                    k0: i("k0", 10) as usize,
+                    step: i("step", 10) as usize,
+                    thresh: i("thresh", 10),
+                    burnin: i("burnin", 200) as u64,
+                    k_max: i("k_max", cfg.n as i64) as usize,
+                }),
+                "async" => PolicySpec::Async,
+                other => return Err(format!("unknown policy.kind '{other}'")),
+            };
+        }
+
+        if let Some(sec) = doc.section("workload") {
+            let kind = sec
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("linreg");
+            cfg.workload = match kind {
+                "linreg" => WorkloadSpec::LinReg {
+                    m: sec.get("m").and_then(|v| v.as_int()).unwrap_or(2000)
+                        as usize,
+                    d: sec.get("d").and_then(|v| v.as_int()).unwrap_or(100)
+                        as usize,
+                },
+                "transformer" => WorkloadSpec::Transformer {
+                    tag: sec
+                        .get("tag")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("tiny")
+                        .into(),
+                },
+                other => return Err(format!("unknown workload.kind '{other}'")),
+            };
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("n must be >= 1".into());
+        }
+        if self.eta <= 0.0 {
+            return Err("eta must be positive".into());
+        }
+        if let WorkloadSpec::LinReg { m, d } = self.workload {
+            if m == 0 || d == 0 {
+                return Err("m and d must be positive".into());
+            }
+            if m % self.n != 0 {
+                return Err(format!(
+                    "n={} must divide m={m} (horizontal partition)",
+                    self.n
+                ));
+            }
+        }
+        if let PolicySpec::Fixed { k } = self.policy {
+            if k == 0 || k > self.n {
+                return Err(format!("fixed k={k} must be in 1..={}", self.n));
+            }
+        }
+        if let PolicySpec::Adaptive(p) = &self.policy {
+            if p.k0 == 0 || p.k0 > self.n {
+                return Err(format!("k0={} must be in 1..={}", p.k0, self.n));
+            }
+            if p.k_max > self.n {
+                return Err(format!(
+                    "k_max={} must be <= n={}",
+                    p.k_max, self.n
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_fig2() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.n, 50);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn full_toml_round_trip() {
+        let text = r#"
+label = "custom"
+n = 25
+eta = 0.001
+seed = 9
+
+[delays]
+kind = "pareto"
+xm = 0.5
+alpha = 2.2
+
+[policy]
+kind = "adaptive"
+k0 = 5
+step = 5
+thresh = 8
+burnin = 100
+k_max = 20
+
+[workload]
+kind = "linreg"
+m = 1000
+d = 50
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.label, "custom");
+        assert_eq!(cfg.n, 25);
+        assert_eq!(cfg.delays, DelaySpec::Pareto { xm: 0.5, alpha: 2.2 });
+        match &cfg.policy {
+            PolicySpec::Adaptive(p) => {
+                assert_eq!(p.k0, 5);
+                assert_eq!(p.k_max, 20);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 7; // 7 does not divide 2000
+        assert!(cfg.validate().is_err());
+
+        let text = "n = 10\n[policy]\nkind = \"fixed\"\nk = 20\n";
+        assert!(ExperimentConfig::from_toml(text).is_err());
+
+        assert!(ExperimentConfig::from_toml("[delays]\nkind = \"nope\"\n")
+            .is_err());
+    }
+
+    #[test]
+    fn delay_spec_builds_models() {
+        let spec = DelaySpec::Exponential { lambda: 2.0 };
+        let model = spec.build().unwrap();
+        assert!(model.name().contains("exp"));
+    }
+}

@@ -1,0 +1,221 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous primitive arrays, `#` comments. Enough for
+//! `examples/*.toml` experiment files; anything else is a parse error.
+
+use std::collections::BTreeMap;
+
+/// A TOML-subset scalar/array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array of scalars.
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As i64 (ints only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As f64 (ints coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array.
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`. Top-level keys live under
+/// the empty-string section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or(format!(
+                    "line {}: unterminated section header",
+                    lineno + 1
+                ))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(format!(
+                "line {}: expected 'key = value'",
+                lineno + 1
+            ))?;
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section.key` (empty section = top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// All keys of a section.
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.sections.get(name)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<TomlValue, String> {
+    if tok.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = tok.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = tok.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>, String> =
+            inner.split(',').map(|t| parse_value(t.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    match tok {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !tok.contains(['.', 'e', 'E']) {
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    tok.parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value '{tok}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let text = r#"
+# experiment
+seed = 42
+label = "fig2"   # inline comment
+
+[workload]
+m = 2000
+eta = 0.0005
+adaptive = true
+ks = [10, 20, 30, 40]
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        assert_eq!(doc.get("", "seed").unwrap().as_int(), Some(42));
+        assert_eq!(doc.get("", "label").unwrap().as_str(), Some("fig2"));
+        assert_eq!(doc.get("workload", "m").unwrap().as_int(), Some(2000));
+        assert_eq!(
+            doc.get("workload", "eta").unwrap().as_float(),
+            Some(0.0005)
+        );
+        assert_eq!(doc.get("workload", "adaptive").unwrap().as_bool(), Some(true));
+        let ks = doc.get("workload", "ks").unwrap().as_arr().unwrap();
+        assert_eq!(ks.len(), 4);
+        assert_eq!(ks[3].as_int(), Some(40));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("x").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("[sec").is_err());
+        assert!(TomlDoc::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = TomlDoc::parse("x = \"a # b\"").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_str(), Some("a # b"));
+    }
+}

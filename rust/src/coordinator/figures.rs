@@ -1,0 +1,213 @@
+//! Paper-figure reproduction entrypoints.
+//!
+//! Each function regenerates one figure's data series; the CLI prints an
+//! ASCII rendering + summary table and writes a CSV under `results/`. The
+//! *shape* comparisons the paper makes (who wins, by what factor, where
+//! curves cross) are asserted in `rust/tests/test_figures.rs`.
+
+use crate::config::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
+use crate::coordinator::run_experiment;
+use crate::metrics::{Recorder, Sample};
+use crate::policy::PflugParams;
+use crate::stats::OrderStats;
+use crate::theory::{adaptive_envelope, switching_times, BoundParams, ErrorBound};
+
+/// Output of a simulation figure: labelled series.
+pub struct FigureOutput {
+    /// Figure id ("fig2" …).
+    pub name: String,
+    /// All series.
+    pub runs: Vec<Recorder>,
+    /// Human-readable summary lines.
+    pub summary: Vec<String>,
+}
+
+/// Output of Fig. 1 (theory curves, not simulations).
+pub struct Fig1Output {
+    /// Fixed-k bound curves, k = 1..=n.
+    pub fixed: Vec<Recorder>,
+    /// The adaptive (Theorem 1) envelope.
+    pub adaptive: Recorder,
+    /// The switching times t_1..t_{n-1}.
+    pub switch_times: Vec<f64>,
+    /// Summary lines.
+    pub summary: Vec<String>,
+}
+
+/// Fig. 1 / Example 1 — Lemma-1 bound for k = 1..5 plus the Theorem-1
+/// adaptive envelope (n = 5, X ~ exp(5), η = 0.001, σ² = 10,
+/// F(w₀)−F* = 100, L = 2, c = 1, s = 10).
+pub fn fig1(points: usize) -> Fig1Output {
+    let n = 5;
+    let bound =
+        ErrorBound::new(BoundParams::example1(), OrderStats::exponential(n, 5.0));
+    // Horizon: late enough that the k=5 floor is reached (cf. paper x-axis).
+    let t_max = 14_000.0;
+    let ts: Vec<f64> =
+        (0..points).map(|i| t_max * i as f64 / (points - 1) as f64).collect();
+
+    let mut fixed = Vec::with_capacity(n);
+    for k in 1..=n {
+        let mut rec = Recorder::new(format!("bound k={k}"));
+        for (i, &t) in ts.iter().enumerate() {
+            rec.push_forced(Sample {
+                iteration: i as u64,
+                time: t,
+                k,
+                error: bound.eval(k, t),
+            });
+        }
+        fixed.push(rec);
+    }
+
+    let env = adaptive_envelope(&bound, &ts);
+    let mut adaptive = Recorder::new("adaptive (Theorem 1)");
+    for (i, (&t, &e)) in ts.iter().zip(&env).enumerate() {
+        adaptive.push_forced(Sample { iteration: i as u64, time: t, k: 0, error: e });
+    }
+
+    let switches = switching_times(&bound);
+    let switch_times: Vec<f64> = switches.iter().map(|s| s.time).collect();
+    let mut summary = vec![format!(
+        "Theorem-1 switching times: {}",
+        switch_times
+            .iter()
+            .enumerate()
+            .map(|(i, t)| format!("t_{} = {:.1}", i + 1, t))
+            .collect::<Vec<_>>()
+            .join(", ")
+    )];
+    for k in 1..=n {
+        summary.push(format!(
+            "k={k}: floor = {:.4e}, mu_k = {:.4}",
+            bound.floor(k),
+            bound.mu(k)
+        ));
+    }
+    Fig1Output { fixed, adaptive, switch_times, summary }
+}
+
+fn fig2_base(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        label: String::new(),
+        n: 50,
+        eta: 5e-4,
+        max_iterations: 200_000,
+        max_time: 6500.0,
+        seed,
+        record_stride: 25,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 10 },
+        workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
+    }
+}
+
+/// Fig. 2 — adaptive fastest-k (k: 10→40 by 10, Algorithm 1) vs
+/// non-adaptive fixed k ∈ {10, 20, 30, 40}; n = 50, η = 5e-4, exp(1).
+pub fn fig2(seed: u64, max_time: f64) -> FigureOutput {
+    let mut runs = Vec::new();
+    let mut summary = Vec::new();
+
+    for k in [10usize, 20, 30, 40] {
+        let mut cfg = fig2_base(seed);
+        cfg.label = format!("fixed k={k}");
+        cfg.policy = PolicySpec::Fixed { k };
+        cfg.max_time = max_time;
+        let out = run_experiment(&cfg).expect("fig2 fixed run");
+        summary.push(format!(
+            "fixed k={k}: min error {:.4e} at t={:.0} ({} iters)",
+            out.recorder.min_error().unwrap(),
+            out.total_time,
+            out.steps
+        ));
+        runs.push(out.recorder);
+    }
+
+    let mut cfg = fig2_base(seed);
+    cfg.label = "adaptive (Algorithm 1)".into();
+    // Paper: start k=10, step 10, thresh 10, burnin 0.1*m = 200, cap 40.
+    cfg.policy = PolicySpec::Adaptive(PflugParams {
+        k0: 10,
+        step: 10,
+        thresh: 10,
+        burnin: 200,
+        k_max: 40,
+    });
+    cfg.max_time = max_time;
+    let out = run_experiment(&cfg).expect("fig2 adaptive run");
+    summary.push(format!(
+        "adaptive: min error {:.4e} at t={:.0}; switches at {}",
+        out.recorder.min_error().unwrap(),
+        out.total_time,
+        out.k_changes
+            .iter()
+            .map(|(_, t, k)| format!("t={t:.0}→k={k}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+    runs.push(out.recorder);
+
+    FigureOutput { name: "fig2".into(), runs, summary }
+}
+
+/// Fig. 3 — adaptive fastest-k (k: 1→36 by 5, Algorithm 1) vs fully
+/// asynchronous SGD; η = 2e-4.
+pub fn fig3(seed: u64, max_time: f64) -> FigureOutput {
+    let mut runs = Vec::new();
+    let mut summary = Vec::new();
+
+    let mut cfg = fig2_base(seed);
+    cfg.label = "adaptive (Algorithm 1)".into();
+    cfg.eta = 2e-4;
+    cfg.max_time = max_time;
+    cfg.policy = PolicySpec::Adaptive(PflugParams {
+        k0: 1,
+        step: 5,
+        thresh: 10,
+        burnin: 200,
+        k_max: 36,
+    });
+    let out = run_experiment(&cfg).expect("fig3 adaptive run");
+    summary.push(format!(
+        "adaptive: min error {:.4e}; switches: {}",
+        out.recorder.min_error().unwrap(),
+        out.k_changes.len()
+    ));
+    runs.push(out.recorder);
+
+    let mut cfg = fig2_base(seed);
+    cfg.label = "async SGD".into();
+    cfg.eta = 2e-4;
+    cfg.max_time = max_time;
+    // Async applies ~n updates per sync-iteration-equivalent; give it the
+    // same *time* budget and an ample update cap.
+    cfg.max_iterations = 2_000_000;
+    cfg.policy = PolicySpec::Async;
+    let out = run_experiment(&cfg).expect("fig3 async run");
+    summary.push(format!(
+        "async: min error {:.4e} after {} updates",
+        out.recorder.min_error().unwrap(),
+        out.steps
+    ));
+    runs.push(out.recorder);
+
+    FigureOutput { name: "fig3".into(), runs, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_has_five_curves_and_envelope() {
+        let out = fig1(200);
+        assert_eq!(out.fixed.len(), 5);
+        assert_eq!(out.switch_times.len(), 4);
+        assert_eq!(out.adaptive.samples().len(), 200);
+        // The envelope's final error must undercut every fixed k < 5.
+        let env_end = out.adaptive.last().unwrap().error;
+        for k in 0..4 {
+            assert!(env_end <= out.fixed[k].last().unwrap().error + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment coordination: config → run → metrics, plus the paper-figure
+//! generators (`fig1`/`fig2`/`fig3`) shared by the CLI and the benches.
+
+mod figures;
+mod repeat;
+mod runner;
+
+pub use figures::{fig1, fig2, fig3, Fig1Output, FigureOutput};
+pub use repeat::{run_repeated, AggregatedCurve};
+pub use runner::{run_experiment, ExperimentOutput};

@@ -1,0 +1,134 @@
+//! Multi-seed repetition runner: run an experiment R times and aggregate
+//! the error curves onto a common time grid (mean ± std), so figure
+//! comparisons are not single-draw artifacts. EXPERIMENTS.md reports the
+//! aggregated numbers.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::run_experiment;
+use crate::metrics::Recorder;
+use crate::stats::RunningStats;
+
+/// Aggregated error-vs-time curve across repetitions.
+#[derive(Debug, Clone)]
+pub struct AggregatedCurve {
+    /// Label.
+    pub label: String,
+    /// Common time grid.
+    pub times: Vec<f64>,
+    /// Mean error at each grid point.
+    pub mean: Vec<f64>,
+    /// Sample standard deviation at each grid point.
+    pub std: Vec<f64>,
+    /// Repetitions aggregated.
+    pub reps: usize,
+}
+
+impl AggregatedCurve {
+    /// Mean error at the last grid point.
+    pub fn final_mean(&self) -> f64 {
+        *self.mean.last().unwrap_or(&f64::NAN)
+    }
+
+    /// First grid time at which the mean error ≤ target.
+    pub fn time_to_error(&self, target: f64) -> Option<f64> {
+        self.times
+            .iter()
+            .zip(&self.mean)
+            .find(|(_, &e)| e <= target)
+            .map(|(&t, _)| t)
+    }
+}
+
+/// Step-interpolate a recorder onto `grid` (last sample at or before t).
+fn sample_on_grid(rec: &Recorder, grid: &[f64]) -> Vec<f64> {
+    grid.iter()
+        .map(|&t| rec.error_at(t).unwrap_or(f64::NAN))
+        .collect()
+}
+
+/// Run `base` under seeds `seed0..seed0+reps`, aggregating onto `points`
+/// uniform grid points over `[0, base.max_time]`.
+pub fn run_repeated(
+    base: &ExperimentConfig,
+    seed0: u64,
+    reps: usize,
+    points: usize,
+) -> Result<AggregatedCurve, String> {
+    assert!(reps >= 1 && points >= 2);
+    assert!(
+        base.max_time > 0.0,
+        "run_repeated needs a max_time so curves share a horizon"
+    );
+    let grid: Vec<f64> = (0..points)
+        .map(|i| base.max_time * (i + 1) as f64 / points as f64)
+        .collect();
+    let mut acc: Vec<RunningStats> =
+        (0..points).map(|_| RunningStats::new()).collect();
+    for r in 0..reps {
+        let mut cfg = base.clone();
+        cfg.seed = seed0 + r as u64;
+        let out = run_experiment(&cfg)?;
+        for (stats, v) in acc.iter_mut().zip(sample_on_grid(&out.recorder, &grid))
+        {
+            if v.is_finite() {
+                stats.push(v);
+            }
+        }
+    }
+    Ok(AggregatedCurve {
+        label: base.label.clone(),
+        times: grid,
+        mean: acc.iter().map(|s| s.mean()).collect(),
+        std: acc.iter().map(|s| s.stddev()).collect(),
+        reps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DelaySpec, PolicySpec, WorkloadSpec};
+
+    fn base() -> ExperimentConfig {
+        ExperimentConfig {
+            label: "rep".into(),
+            n: 10,
+            eta: 1e-3,
+            max_iterations: 10_000,
+            max_time: 60.0,
+            seed: 0,
+            record_stride: 10,
+            delays: DelaySpec::Exponential { lambda: 1.0 },
+            policy: PolicySpec::Fixed { k: 5 },
+            workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        }
+    }
+
+    #[test]
+    fn aggregates_across_seeds() {
+        let agg = run_repeated(&base(), 100, 4, 12).unwrap();
+        assert_eq!(agg.reps, 4);
+        assert_eq!(agg.times.len(), 12);
+        // Error decreases along the grid on average.
+        assert!(agg.mean[11] < agg.mean[0]);
+        // With multiple seeds the late-time std is positive.
+        assert!(agg.std[11] >= 0.0);
+        assert!(agg.final_mean().is_finite());
+    }
+
+    #[test]
+    fn time_to_error_on_mean_curve() {
+        let agg = run_repeated(&base(), 200, 3, 20).unwrap();
+        let mid = (agg.mean[0] * agg.final_mean()).sqrt(); // geometric mid
+        let t = agg.time_to_error(mid).expect("mean curve must cross");
+        assert!(t > 0.0 && t <= 60.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_time")]
+    fn requires_time_horizon() {
+        let mut cfg = base();
+        cfg.max_time = 0.0;
+        let _ = run_repeated(&cfg, 0, 2, 5);
+    }
+}

@@ -1,0 +1,173 @@
+//! Config-driven experiment execution.
+
+use crate::async_sgd::{run_async, AsyncConfig};
+use crate::config::{ExperimentConfig, PolicySpec, WorkloadSpec};
+use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+use crate::grad::NativeBackend;
+use crate::master::{run_fastest_k, MasterConfig};
+use crate::metrics::Recorder;
+use crate::model::LinRegProblem;
+use crate::policy::{AdaptivePflug, FixedK, KPolicy};
+
+/// What an experiment run produces.
+pub struct ExperimentOutput {
+    /// The error-vs-time record.
+    pub recorder: Recorder,
+    /// Iterations / updates completed.
+    pub steps: u64,
+    /// Final virtual wall-clock.
+    pub total_time: f64,
+    /// k switch log (empty for fixed/async).
+    pub k_changes: Vec<(u64, f64, usize)>,
+}
+
+/// Run one experiment end-to-end on the native backend.
+///
+/// (The XLA-backend path is exercised by the examples and integration
+/// tests; sweeps use the native backend so they don't require artifacts
+/// for every shape.)
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String> {
+    cfg.validate()?;
+    let (m, d) = match cfg.workload {
+        WorkloadSpec::LinReg { m, d } => (m, d),
+        WorkloadSpec::Transformer { .. } => {
+            return Err(
+                "transformer workload requires the artifact runtime; use \
+                 `adasgd train-transformer` or examples/transformer_e2e"
+                    .into(),
+            )
+        }
+    };
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m, d, ..Default::default() },
+        cfg.seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    let mut backend = NativeBackend::new(Shards::partition(&ds, cfg.n));
+    let delays = cfg.delays.build()?;
+    let w0 = vec![0.0f32; d];
+
+    match &cfg.policy {
+        PolicySpec::Async => {
+            let acfg = AsyncConfig {
+                eta: cfg.eta as f32,
+                max_updates: cfg.max_iterations,
+                max_time: cfg.max_time,
+                seed: cfg.seed,
+                record_stride: cfg.record_stride,
+                ..Default::default()
+            };
+            let run = run_async(
+                &mut backend,
+                delays.as_ref(),
+                &w0,
+                &acfg,
+                &mut |w| problem.error(w),
+            );
+            let mut recorder = run.recorder;
+            recorder.label = cfg.label.clone();
+            Ok(ExperimentOutput {
+                recorder,
+                steps: run.updates,
+                total_time: run.total_time,
+                k_changes: Vec::new(),
+            })
+        }
+        policy_spec => {
+            let mut policy: Box<dyn KPolicy> = match policy_spec {
+                PolicySpec::Fixed { k } => Box::new(FixedK::new(*k)),
+                PolicySpec::Adaptive(p) => {
+                    Box::new(AdaptivePflug::new(cfg.n, *p))
+                }
+                PolicySpec::Async => unreachable!(),
+            };
+            let mcfg = MasterConfig {
+                eta: cfg.eta as f32,
+                momentum: 0.0,
+                max_iterations: cfg.max_iterations,
+                max_time: cfg.max_time,
+                seed: cfg.seed,
+                record_stride: cfg.record_stride,
+            };
+            let run = run_fastest_k(
+                &mut backend,
+                delays.as_ref(),
+                policy.as_mut(),
+                &w0,
+                &mcfg,
+                &mut |w| problem.error(w),
+            );
+            let mut recorder = run.recorder;
+            recorder.label = cfg.label.clone();
+            Ok(ExperimentOutput {
+                recorder,
+                steps: run.iterations,
+                total_time: run.total_time,
+                k_changes: run.k_changes,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DelaySpec;
+    use crate::policy::PflugParams;
+
+    fn base() -> ExperimentConfig {
+        ExperimentConfig {
+            label: "t".into(),
+            n: 10,
+            eta: 1e-3,
+            max_iterations: 300,
+            max_time: 0.0,
+            seed: 3,
+            record_stride: 50,
+            delays: DelaySpec::Exponential { lambda: 1.0 },
+            policy: PolicySpec::Fixed { k: 5 },
+            workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        }
+    }
+
+    #[test]
+    fn fixed_policy_runs() {
+        let out = run_experiment(&base()).unwrap();
+        assert_eq!(out.steps, 300);
+        assert!(out.recorder.last().unwrap().error < out.recorder.samples()[0].error);
+    }
+
+    #[test]
+    fn adaptive_policy_runs_and_switches_eventually() {
+        let mut cfg = base();
+        cfg.policy = PolicySpec::Adaptive(PflugParams {
+            k0: 1,
+            step: 3,
+            thresh: 5,
+            burnin: 20,
+            k_max: 10,
+        });
+        cfg.max_iterations = 3000;
+        let out = run_experiment(&cfg).unwrap();
+        assert!(
+            !out.k_changes.is_empty(),
+            "Pflug policy should detect stationarity within 3000 iters"
+        );
+    }
+
+    #[test]
+    fn async_policy_runs() {
+        let mut cfg = base();
+        cfg.policy = PolicySpec::Async;
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.steps, 300);
+        assert!(out.k_changes.is_empty());
+    }
+
+    #[test]
+    fn transformer_workload_is_rejected_here() {
+        let mut cfg = base();
+        cfg.workload = WorkloadSpec::Transformer { tag: "tiny".into() };
+        assert!(run_experiment(&cfg).is_err());
+    }
+}

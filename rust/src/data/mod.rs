@@ -1,0 +1,7 @@
+//! Synthetic datasets and horizontal sharding.
+
+mod sharding;
+mod synthetic;
+
+pub use sharding::Shards;
+pub use synthetic::{SyntheticConfig, SyntheticDataset};

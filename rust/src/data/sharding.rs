@@ -1,0 +1,101 @@
+//! Horizontal data partitioning: worker `i` gets a contiguous block of
+//! `s = m/n` rows of `A = [X|y]` with all columns (paper §I).
+
+use crate::data::SyntheticDataset;
+use crate::linalg::Matrix;
+
+/// The n worker shards of a dataset.
+#[derive(Debug, Clone)]
+pub struct Shards {
+    /// Per-worker feature blocks `X_i (s×d)`.
+    pub x: Vec<Matrix>,
+    /// Per-worker label blocks `y_i (s)`.
+    pub y: Vec<Vec<f32>>,
+    /// Rows per shard.
+    pub s: usize,
+}
+
+impl Shards {
+    /// Partition `ds` across `n` workers. Requires `n | m` (as the paper
+    /// assumes); use [`Shards::partition_uneven`] otherwise.
+    pub fn partition(ds: &SyntheticDataset, n: usize) -> Self {
+        let m = ds.m();
+        assert!(n > 0 && m % n == 0, "n={n} must divide m={m}");
+        let s = m / n;
+        let mut x = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            x.push(ds.x.slice_rows(i * s, (i + 1) * s));
+            y.push(ds.y[i * s..(i + 1) * s].to_vec());
+        }
+        Self { x, y, s }
+    }
+
+    /// Partition with remainder rows spread over the first shards
+    /// (extension beyond the paper's n | m assumption).
+    pub fn partition_uneven(ds: &SyntheticDataset, n: usize) -> Self {
+        let m = ds.m();
+        assert!(n > 0 && n <= m, "need 1 <= n <= m");
+        let base = m / n;
+        let extra = m % n;
+        let mut x = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        let mut lo = 0;
+        for i in 0..n {
+            let hi = lo + base + usize::from(i < extra);
+            x.push(ds.x.slice_rows(lo, hi));
+            y.push(ds.y[lo..hi].to_vec());
+            lo = hi;
+        }
+        Self { x, y, s: base }
+    }
+
+    /// Number of workers n.
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn tiny() -> SyntheticDataset {
+        SyntheticDataset::generate(
+            SyntheticConfig { m: 12, d: 2, ..Default::default() },
+            9,
+        )
+    }
+
+    #[test]
+    fn even_partition_covers_everything() {
+        let ds = tiny();
+        let sh = Shards::partition(&ds, 4);
+        assert_eq!(sh.n(), 4);
+        assert_eq!(sh.s, 3);
+        // Row 5 of the dataset is row 2 of shard 1.
+        assert_eq!(sh.x[1].row(2), ds.x.row(5));
+        assert_eq!(sh.y[1][2], ds.y[5]);
+        let total: usize = sh.x.iter().map(|m| m.rows()).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn even_partition_requires_divisibility() {
+        Shards::partition(&tiny(), 5);
+    }
+
+    #[test]
+    fn uneven_partition_spreads_remainder() {
+        let ds = tiny();
+        let sh = Shards::partition_uneven(&ds, 5);
+        let sizes: Vec<usize> = sh.x.iter().map(|m| m.rows()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2, 2]);
+        let total: usize = sizes.iter().sum();
+        assert_eq!(total, 12);
+        // Last row of last shard is the dataset's last row.
+        assert_eq!(sh.x[4].row(1), ds.x.row(11));
+    }
+}

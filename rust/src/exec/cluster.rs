@@ -1,0 +1,348 @@
+//! Threaded master/worker cluster with fastest-k gather.
+
+use crate::data::Shards;
+use crate::linalg::{dot, gemv, gemv_t, Matrix};
+use crate::metrics::{Recorder, Sample};
+use crate::policy::{IterationObs, KPolicy};
+use crate::rng::Pcg64;
+use crate::straggler::DelayModel;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Threaded-run configuration.
+#[derive(Debug, Clone)]
+pub struct ThreadedConfig {
+    /// Step size η.
+    pub eta: f32,
+    /// Iterations to run.
+    pub max_iterations: u64,
+    /// Seconds of real sleep per virtual delay unit (keep small: the
+    /// threaded mode is a semantics demonstration, not a throughput test).
+    pub time_scale: f64,
+    /// Seed for the delay draws (same stream family as the simulator).
+    pub seed: u64,
+    /// Record stride.
+    pub record_stride: u64,
+}
+
+impl Default for ThreadedConfig {
+    fn default() -> Self {
+        Self {
+            eta: 5e-4,
+            max_iterations: 200,
+            time_scale: 1e-3,
+            seed: 0,
+            record_stride: 10,
+        }
+    }
+}
+
+/// Statistics from a threaded run.
+pub struct ThreadedRunStats {
+    /// Error-vs-(virtual)-time record.
+    pub recorder: Recorder,
+    /// Final model.
+    pub w: Vec<f32>,
+    /// Total virtual time (sum of per-iteration k-th response delays).
+    pub virtual_time: f64,
+    /// Total real wall-clock seconds.
+    pub real_time: f64,
+    /// Late (discarded) responses observed — wasted straggler work.
+    pub late_responses: u64,
+}
+
+struct Job {
+    generation: u64,
+    w: Arc<Vec<f32>>,
+    /// Injected virtual delay for this worker at this iteration.
+    delay: f64,
+}
+
+struct Response {
+    generation: u64,
+    #[allow(dead_code)]
+    worker: usize,
+    grad: Vec<f32>,
+    /// Virtual delay echoed back.
+    delay: f64,
+}
+
+/// A running cluster of worker threads pinned to their shards.
+pub struct ThreadedCluster {
+    job_txs: Vec<mpsc::Sender<Job>>,
+    resp_rx: mpsc::Receiver<Response>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    n: usize,
+    d: usize,
+}
+
+impl ThreadedCluster {
+    /// Spawn one thread per shard. Each worker owns its `(X_i, y_i)` and
+    /// computes real partial gradients with the native kernels.
+    pub fn spawn(shards: &Shards, time_scale: f64) -> Self {
+        let n = shards.n();
+        let d = shards.x[0].cols();
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let mut job_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            job_txs.push(tx);
+            let resp_tx = resp_tx.clone();
+            let x: Matrix = shards.x[i].clone();
+            let y: Vec<f32> = shards.y[i].clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(i, x, y, rx, resp_tx, time_scale);
+            }));
+        }
+        Self { job_txs, resp_rx, handles, n, d }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Run fastest-k SGD on the live cluster.
+    pub fn run_fastest_k(
+        &mut self,
+        policy: &mut dyn KPolicy,
+        w0: &[f32],
+        cfg: &ThreadedConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    ) -> ThreadedRunStats {
+        assert_eq!(w0.len(), self.d);
+        let start = Instant::now();
+        let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57); // same as sim
+        let delay_model = crate::straggler::ExponentialDelays::new(1.0);
+        self.run_inner(policy, w0, cfg, eval_error, &delay_model, &mut rng, start)
+    }
+
+    /// Run with an explicit delay model.
+    pub fn run_with_delays(
+        &mut self,
+        delays: &dyn DelayModel,
+        policy: &mut dyn KPolicy,
+        w0: &[f32],
+        cfg: &ThreadedConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    ) -> ThreadedRunStats {
+        let start = Instant::now();
+        let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
+        self.run_inner(policy, w0, cfg, eval_error, delays, &mut rng, start)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_inner(
+        &mut self,
+        policy: &mut dyn KPolicy,
+        w0: &[f32],
+        cfg: &ThreadedConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+        delays: &dyn DelayModel,
+        rng: &mut Pcg64,
+        start: Instant,
+    ) -> ThreadedRunStats {
+        let n = self.n;
+        let d = self.d;
+        let mut w = w0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut g_prev = vec![0.0f32; d];
+        let mut k = policy.initial_k().clamp(1, n);
+        let mut vt = 0.0f64;
+        let mut late = 0u64;
+        let mut recorder = Recorder::with_stride(
+            format!("threaded/{}", policy.name()),
+            cfg.record_stride,
+        );
+        recorder.push_forced(Sample {
+            iteration: 0,
+            time: 0.0,
+            k,
+            error: eval_error(&w),
+        });
+
+        for j in 0..cfg.max_iterations {
+            // Broadcast w_j with per-worker injected delays.
+            let w_shared = Arc::new(w.clone());
+            for (i, tx) in self.job_txs.iter().enumerate() {
+                let delay = delays.sample(j, i, rng);
+                tx.send(Job {
+                    generation: j,
+                    w: Arc::clone(&w_shared),
+                    delay,
+                })
+                .expect("worker died");
+            }
+
+            // Gather the fastest k fresh responses.
+            g.iter_mut().for_each(|v| *v = 0.0);
+            let mut got = 0usize;
+            let mut iter_vt = 0.0f64;
+            while got < k {
+                let resp = self.resp_rx.recv().expect("cluster closed");
+                if resp.generation != j {
+                    late += 1; // straggler from an earlier round: discard
+                    continue;
+                }
+                got += 1;
+                iter_vt = iter_vt.max(resp.delay);
+                for (gv, pv) in g.iter_mut().zip(&resp.grad) {
+                    *gv += *pv;
+                }
+            }
+            let inv_k = 1.0 / k as f32;
+            g.iter_mut().for_each(|v| *v *= inv_k);
+            vt += iter_vt;
+
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= cfg.eta * *gv;
+            }
+
+            let inner = if j == 0 { None } else { Some(dot(&g, &g_prev)) };
+            let obs = IterationObs {
+                iteration: j,
+                time: vt,
+                k_used: k,
+                grad_inner_prev: inner,
+                grad_norm_sq: dot(&g, &g),
+            };
+            k = policy.next_k(&obs).clamp(1, n);
+            std::mem::swap(&mut g, &mut g_prev);
+
+            if (j + 1) % cfg.record_stride == 0 {
+                recorder.push_forced(Sample {
+                    iteration: j + 1,
+                    time: vt,
+                    k,
+                    error: eval_error(&w),
+                });
+            }
+        }
+
+        ThreadedRunStats {
+            recorder,
+            w,
+            virtual_time: vt,
+            real_time: start.elapsed().as_secs_f64(),
+            late_responses: late,
+        }
+    }
+}
+
+impl Drop for ThreadedCluster {
+    fn drop(&mut self) {
+        self.job_txs.clear(); // close job channels; workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    _id: usize,
+    x: Matrix,
+    y: Vec<f32>,
+    rx: mpsc::Receiver<Job>,
+    tx: mpsc::Sender<Response>,
+    time_scale: f64,
+) {
+    let s = x.rows();
+    let d = x.cols();
+    let mut resid = vec![0.0f32; s];
+    let id = _id;
+    while let Ok(job) = rx.recv() {
+        // Real compute: partial gradient of this worker's shard.
+        let mut grad = vec![0.0f32; d];
+        gemv(1.0, &x, &job.w, 0.0, &mut resid);
+        for (r, yv) in resid.iter_mut().zip(&y) {
+            *r -= *yv;
+        }
+        gemv_t(1.0 / s as f32, &x, &resid, 0.0, &mut grad);
+        // Injected straggling.
+        if job.delay > 0.0 && time_scale > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(job.delay * time_scale));
+        }
+        if tx
+            .send(Response {
+                generation: job.generation,
+                worker: id,
+                grad,
+                delay: job.delay,
+            })
+            .is_err()
+        {
+            break; // master gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticConfig, SyntheticDataset};
+    use crate::model::LinRegProblem;
+    use crate::policy::FixedK;
+
+    #[test]
+    fn threaded_training_descends() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 120, d: 8, ..Default::default() },
+            21,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let shards = Shards::partition(&ds, 6);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-5);
+        let mut policy = FixedK::new(3);
+        let cfg = ThreadedConfig {
+            eta: 0.002,
+            max_iterations: 150,
+            time_scale: 1e-5,
+            seed: 5,
+            record_stride: 25,
+        };
+        let run = cluster.run_fastest_k(
+            &mut policy,
+            &vec![0.0; 8],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 0.05, "{first} -> {last}");
+        assert!(run.virtual_time > 0.0);
+        assert!(run.real_time > 0.0);
+    }
+
+    #[test]
+    fn late_responses_are_discarded_not_applied() {
+        // k=1 of 4: three responses per round arrive late and must be
+        // counted as waste.
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 40, d: 4, ..Default::default() },
+            22,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let shards = Shards::partition(&ds, 4);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-5);
+        let mut policy = FixedK::new(1);
+        let cfg = ThreadedConfig {
+            eta: 0.001,
+            max_iterations: 30,
+            time_scale: 1e-5,
+            seed: 6,
+            record_stride: 10,
+        };
+        let run = cluster.run_fastest_k(
+            &mut policy,
+            &vec![0.0; 4],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        assert!(
+            run.late_responses > 0,
+            "with k=1 of 4, late responses are inevitable"
+        );
+    }
+}

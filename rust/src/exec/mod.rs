@@ -1,0 +1,20 @@
+//! Real-thread execution mode.
+//!
+//! The simulator advances a virtual clock; this module actually runs the
+//! cluster: one OS thread per worker, channel-based broadcast/gather, and
+//! injected sleep delays (drawn from the same [`DelayModel`] streams, so a
+//! threaded run and a simulated run of the same seed follow the same
+//! straggler pattern). It demonstrates the coordinator semantics the paper
+//! assumes:
+//!
+//! * the master broadcasts `w_j` to **all** workers,
+//! * workers compute their *real* partial gradients (native linalg),
+//! * the master returns after the fastest k responses; late responses are
+//!   discarded by generation tag (wasted work — exactly the cost the
+//!   fastest-k scheme accepts to avoid the straggler tail).
+
+mod cluster;
+mod pool;
+
+pub use cluster::{ThreadedCluster, ThreadedConfig, ThreadedRunStats};
+pub use pool::ThreadPool;

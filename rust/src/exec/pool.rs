@@ -1,0 +1,110 @@
+//! Minimal fixed-size thread pool (no rayon/tokio offline).
+//!
+//! Used by benches and the Monte-Carlo order-statistic estimator for
+//! embarrassingly-parallel jobs; the training cluster uses dedicated
+//! per-worker threads (`cluster.rs`) instead, because workers own state.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` threads.
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0, "pool needs at least one thread");
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let handles = (0..size)
+            .map(|_| {
+                let rx = Arc::clone(&receiver);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("pool lock poisoned");
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // all senders dropped
+                    }
+                })
+            })
+            .collect();
+        Self { sender: Some(sender), handles }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Map `f` over `0..jobs` in parallel, collecting results in order.
+    pub fn map<T: Send + 'static>(
+        &self,
+        jobs: usize,
+        f: impl Fn(usize) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..jobs {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let _ = tx.send((i, f(i)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|v| v.expect("job dropped")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.sender.take(); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,92 @@
+//! Gradient computation backends.
+//!
+//! The coordinator is backend-agnostic: a [`GradBackend`] produces worker
+//! `i`'s partial gradient `∇F(S_i, w) = X_iᵀ(X_i w − y_i)/s` for the
+//! current model. Two implementations:
+//!
+//! * [`NativeBackend`] — the pure-Rust linalg path. No artifacts needed,
+//!   any shape; used by simulation sweeps and property tests.
+//! * [`XlaBackend`](crate::runtime::XlaBackend) — the production path: the
+//!   AOT-compiled JAX/Pallas artifact executed through PJRT. Defined next
+//!   to the runtime so all PJRT types stay in one module.
+//!
+//! Both must agree numerically; `rust/tests/test_runtime.rs` asserts parity.
+
+mod native;
+
+pub use native::NativeBackend;
+
+/// A source of per-shard partial gradients.
+///
+/// Not `Send`: the PJRT-backed implementation holds thread-affine client
+/// handles; the master loop is single-threaded by design (the threaded
+/// executor gives each worker thread its own state instead of sharing a
+/// backend).
+pub trait GradBackend {
+    /// Compute worker `shard`'s partial gradient at `w` into `out` (len d).
+    fn partial_grad(&mut self, shard: usize, w: &[f32], out: &mut [f32]);
+
+    /// Hook called by the master at the start of iteration `j` — backends
+    /// whose per-worker data rotates across iterations (e.g. transformer
+    /// microbatches) advance their cursor here. Default: no-op.
+    fn on_iteration(&mut self, _j: u64) {}
+
+    /// Whether [`GradBackend::all_grads`] is available (lets the master
+    /// choose the batched path by k without a trial call).
+    fn supports_all_grads(&self) -> bool {
+        false
+    }
+
+    /// Batched fast path: compute ALL n shard gradients at `w` into `out`
+    /// (row-major `(n, d)`), returning `true` if supported. The master
+    /// prefers this for large k — one PJRT dispatch per iteration instead
+    /// of k (§Perf: 196 µs for all 50 shards vs 15 µs per single dispatch
+    /// ⇒ crossover near k = n/4). Semantically faithful: in the cluster
+    /// every worker computes each iteration; the master just ignores
+    /// straggler results. Default: unsupported.
+    fn all_grads(&mut self, _w: &[f32], _out: &mut [f32]) -> bool {
+        false
+    }
+
+    /// Feature dimension d.
+    fn dim(&self) -> usize;
+
+    /// Number of shards n.
+    fn n_shards(&self) -> usize;
+
+    /// Backend label for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use crate::model::full_gradient;
+
+    #[test]
+    fn native_partials_average_to_full_gradient() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 120, d: 8, ..Default::default() },
+            5,
+        );
+        let shards = Shards::partition(&ds, 6);
+        let mut backend = NativeBackend::new(shards);
+        let w: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+
+        let mut avg = vec![0.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        for i in 0..6 {
+            backend.partial_grad(i, &w, &mut g);
+            for j in 0..8 {
+                avg[j] += g[j] / 6.0;
+            }
+        }
+        let mut full = vec![0.0f32; 8];
+        full_gradient(&ds.x, &ds.y, &w, &mut full);
+        for j in 0..8 {
+            let rel = (avg[j] - full[j]).abs() / full[j].abs().max(1.0);
+            assert!(rel < 1e-4, "j={j}: {} vs {}", avg[j], full[j]);
+        }
+    }
+}

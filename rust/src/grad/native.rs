@@ -1,0 +1,109 @@
+//! Pure-Rust gradient backend over the linalg substrate.
+//!
+//! Mirrors the fused Pallas kernel: one residual GEMV + one transposed
+//! GEMV per shard, reusing a preallocated residual buffer (no allocation
+//! on the iteration hot path — see EXPERIMENTS.md §Perf).
+
+use super::GradBackend;
+use crate::data::Shards;
+use crate::linalg::{gemv, gemv_t};
+
+/// Native (linalg) partial-gradient backend.
+pub struct NativeBackend {
+    shards: Shards,
+    d: usize,
+    /// Scratch residual, sized to the largest shard.
+    resid: Vec<f32>,
+}
+
+impl NativeBackend {
+    /// Wrap a sharded dataset.
+    pub fn new(shards: Shards) -> Self {
+        let d = shards.x[0].cols();
+        let max_s = shards.x.iter().map(|m| m.rows()).max().unwrap_or(0);
+        Self { shards, d, resid: vec![0.0; max_s] }
+    }
+
+    /// Borrow the shards (used by the exec mode to size worker state).
+    pub fn shards(&self) -> &Shards {
+        &self.shards
+    }
+}
+
+impl GradBackend for NativeBackend {
+    fn partial_grad(&mut self, shard: usize, w: &[f32], out: &mut [f32]) {
+        let x = &self.shards.x[shard];
+        let y = &self.shards.y[shard];
+        let s = x.rows();
+        let r = &mut self.resid[..s];
+        // r = X_i w − y_i
+        gemv(1.0, x, w, 0.0, r);
+        for (ri, yi) in r.iter_mut().zip(y.iter()) {
+            *ri -= *yi;
+        }
+        // out = X_iᵀ r / s
+        gemv_t(1.0 / s as f32, x, r, 0.0, out);
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards.n()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SyntheticConfig, SyntheticDataset};
+
+    #[test]
+    fn zero_residual_gives_zero_gradient() {
+        // Construct a shard where y = X w exactly.
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 20, d: 4, ..Default::default() },
+            11,
+        );
+        let mut shards = Shards::partition(&ds, 2);
+        let w = [1.0f32, 2.0, 3.0, 4.0];
+        for i in 0..2 {
+            for r in 0..shards.x[i].rows() {
+                let dot: f32 = shards.x[i]
+                    .row(r)
+                    .iter()
+                    .zip(&w)
+                    .map(|(a, b)| a * b)
+                    .sum();
+                shards.y[i][r] = dot;
+            }
+        }
+        let mut backend = NativeBackend::new(shards);
+        let mut g = vec![1.0f32; 4];
+        backend.partial_grad(0, &w, &mut g);
+        for v in g {
+            assert!(v.abs() < 1e-3, "{v}");
+        }
+    }
+
+    #[test]
+    fn shards_of_different_sizes_are_handled() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 11, d: 3, ..Default::default() },
+            12,
+        );
+        let shards = Shards::partition_uneven(&ds, 3);
+        let mut backend = NativeBackend::new(shards);
+        let w = [0.5f32, -0.5, 1.0];
+        let mut g = vec![0.0f32; 3];
+        for i in 0..3 {
+            backend.partial_grad(i, &w, &mut g);
+            assert!(g.iter().all(|v| v.is_finite()));
+        }
+    }
+}

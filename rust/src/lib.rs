@@ -1,0 +1,81 @@
+//! # adasgd — Adaptive Distributed Fastest-k SGD
+//!
+//! Production-shaped reproduction of *“Adaptive Distributed Stochastic
+//! Gradient Descent for Minimizing Delay in the Presence of Stragglers”*
+//! (Kas Hanna, Bitar, Parag, Dasari, El Rouayheb — ICASSP 2020).
+//!
+//! The library is the Layer-3 Rust coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — fastest-k master loop, adaptive-k policies
+//!   (Algorithm 1's Pflug test, Theorem 1's bound-optimal schedule),
+//!   straggler simulation, async-SGD baseline, metrics, CLI.
+//! * **L2/L1 (build-time Python)** — JAX models + Pallas kernels, AOT
+//!   lowered to HLO text in `artifacts/`, executed through the PJRT
+//!   runtime in [`runtime`]. Python never runs at training time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use adasgd::prelude::*;
+//!
+//! // Paper Fig. 2 setup: n = 50 workers, exp(1) response times.
+//! let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
+//! let problem = LinRegProblem::new(&ds);
+//! let mut backend = NativeBackend::new(Shards::partition(&ds, 50));
+//! let delays = ExponentialDelays::new(1.0);
+//! let mut policy = AdaptivePflug::new(50, PflugParams::default());
+//! let cfg = MasterConfig { eta: 5e-4, max_time: 2500.0, ..Default::default() };
+//! let run = run_fastest_k(
+//!     &mut backend, &delays, &mut policy,
+//!     &vec![0.0; problem.d()], &cfg,
+//!     &mut |w| problem.error(w),
+//! );
+//! println!("reached error {:.3e}", run.recorder.last().unwrap().error);
+//! ```
+
+pub mod async_sgd;
+pub mod bench_harness;
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod grad;
+pub mod linalg;
+pub mod master;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod straggler;
+pub mod theory;
+pub mod transformer;
+
+/// One-stop imports for examples and benches.
+pub mod prelude {
+    pub use crate::async_sgd::{run_async, AsyncConfig, AsyncRun};
+    pub use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    pub use crate::grad::{GradBackend, NativeBackend};
+    pub use crate::master::{run_fastest_k, FastestKRun, MasterConfig};
+    pub use crate::metrics::{write_csv, AsciiPlot, Recorder, Sample};
+    pub use crate::model::LinRegProblem;
+    pub use crate::policy::{
+        AdaptivePflug, BoundOptimal, FixedK, KPolicy, PflugParams,
+        TimeSchedule, VarianceTest, VarianceTestParams,
+    };
+    pub use crate::rng::{Pcg64, Rng};
+    pub use crate::stats::OrderStats;
+    pub use crate::coding::{run_coded_gd, CodedConfig, FrcScheme};
+    pub use crate::straggler::{
+        BimodalDelays, DelayModel, ExponentialDelays, MarkovDelays,
+        ParetoDelays, ShiftedExponentialDelays, TraceDelays, WeibullDelays,
+    };
+    pub use crate::theory::{
+        adaptive_envelope, switching_times, BoundParams, ErrorBound,
+    };
+}

@@ -1,0 +1,44 @@
+//! Dense linear-algebra substrate (no BLAS / ndarray available offline).
+//!
+//! Row-major `f32` matrices and the handful of operations the native
+//! gradient backend and the theory module need: blocked GEMM, GEMV, axpy,
+//! dot, norms, and a small Cholesky solver (used to compute the exact
+//! optimum `w* = (XᵀX)⁻¹ Xᵀy` so experiments can report `F(w) − F*`).
+//!
+//! Perf notes (see EXPERIMENTS.md §Perf): `gemv`/`gemv_t` dominate the
+//! native hot path; they are written as cache-friendly row walks with 4-way
+//! unrolled inner loops that LLVM auto-vectorizes. The blocked `gemm` is
+//! only used in setup (normal equations), not per-iteration.
+
+mod matrix;
+mod ops;
+mod solve;
+
+pub use matrix::Matrix;
+pub use ops::{axpy, dot, dot_f32, gemm, gemv, gemv_t, nrm2, scal};
+pub use solve::{
+    cholesky_solve, cholesky_solve_dense_f64, cholesky_solve_f64,
+    CholeskyError,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_normal_equations() {
+        // Solve a tiny least-squares problem exactly.
+        // X = [[1,0],[0,1],[1,1]], y = [1, 2, 3.1]
+        let x = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        let y = [1.0f32, 2.0, 3.1];
+        // XtX and Xty
+        let mut xtx = Matrix::zeros(2, 2);
+        gemm(1.0, &x.transpose(), &x, 0.0, &mut xtx);
+        let mut xty = vec![0.0f32; 2];
+        gemv_t(1.0, &x, &y, 0.0, &mut xty);
+        let w = cholesky_solve(&xtx, &xty).unwrap();
+        // Residual should be tiny and symmetric: w ~ [1.033, 2.033]
+        assert!((w[0] - 1.0333).abs() < 1e-3, "{w:?}");
+        assert!((w[1] - 2.0333).abs() < 1e-3, "{w:?}");
+    }
+}

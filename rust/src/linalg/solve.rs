@@ -1,0 +1,151 @@
+//! Cholesky factorization + solver for SPD systems.
+//!
+//! Used once per experiment to compute the exact least-squares optimum
+//! `w* = (XᵀX)⁻¹ Xᵀ y` and hence `F*`, so every figure reports the paper's
+//! error metric `F(w_t) − F*`. f64 internally — `XᵀX` for the paper's data
+//! (entries in 1..=10, m=2000) has entries up to ~2·10⁵ and needs the
+//! headroom.
+
+use super::Matrix;
+
+/// Failure modes of the SPD solve.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CholeskyError {
+    /// The matrix is not positive definite (or badly conditioned).
+    #[error("matrix not positive definite at pivot {0}")]
+    NotPositiveDefinite(usize),
+    /// Shape mismatch between the matrix and right-hand side.
+    #[error("dimension mismatch: matrix is {0}x{0}, rhs has len {1}")]
+    DimensionMismatch(usize, usize),
+}
+
+/// Solve `A x = b` for SPD `A` given as a dense row-major f64 buffer.
+/// End-to-end f64: assembling `XᵀX` and then narrowing to f32 before the
+/// factorization costs ~10⁻⁵ relative accuracy in `w*` — enough loss that
+/// converged SGD iterates would *beat* the computed `F*`.
+pub fn cholesky_solve_dense_f64(
+    a: &[f64],
+    n: usize,
+    b: &[f64],
+) -> Result<Vec<f64>, CholeskyError> {
+    assert_eq!(a.len(), n * n, "matrix buffer must be n*n");
+    if b.len() != n {
+        return Err(CholeskyError::DimensionMismatch(n, b.len()));
+    }
+
+    // Factor in f64.
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(CholeskyError::NotPositiveDefinite(i));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+
+    // Forward substitution: L z = b.
+    let mut z = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * z[k];
+        }
+        z[i] = sum / l[i * n + i];
+    }
+
+    // Back substitution: Lᵀ x = z.
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = z[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+
+    Ok(x)
+}
+
+/// [`cholesky_solve_dense_f64`] over an f32 [`Matrix`] and rhs (widened on
+/// entry), returning f64.
+pub fn cholesky_solve_f64(
+    a: &Matrix,
+    b: &[f32],
+) -> Result<Vec<f64>, CholeskyError> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky_solve requires a square matrix");
+    let a64: Vec<f64> = a.as_slice().iter().map(|&v| v as f64).collect();
+    let b64: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    cholesky_solve_dense_f64(&a64, n, &b64)
+}
+
+/// [`cholesky_solve_f64`] narrowed to f32 (convenience for f32 pipelines).
+pub fn cholesky_solve(a: &Matrix, b: &[f32]) -> Result<Vec<f32>, CholeskyError> {
+    Ok(cholesky_solve_f64(a, b)?.into_iter().map(|v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn solves_diagonal() {
+        let a = Matrix::from_rows(&[&[4.0, 0.0], &[0.0, 9.0]]);
+        let x = cholesky_solve(&a, &[8.0, 27.0]).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-6);
+        assert!((x[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solves_random_spd() {
+        let mut rng = Pcg64::seed(10);
+        let n = 20;
+        // A = B Bᵀ + n*I is SPD.
+        let b = Matrix::from_vec(
+            n,
+            n,
+            (0..n * n).map(|_| rng.next_f64() as f32 - 0.5).collect(),
+        );
+        let mut a = Matrix::zeros(n, n);
+        gemm(1.0, &b, &b.transpose(), 0.0, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f32;
+        }
+        let x_true: Vec<f32> = (0..n).map(|i| i as f32 / 7.0 - 1.0).collect();
+        let mut rhs = vec![0.0f32; n];
+        crate::linalg::gemv(1.0, &a, &x_true, 0.0, &mut rhs);
+        let x = cholesky_solve(&a, &rhs).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig −1, 3
+        assert_eq!(
+            cholesky_solve(&a, &[1.0, 1.0]),
+            Err(CholeskyError::NotPositiveDefinite(1))
+        );
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let a = Matrix::eye(3);
+        assert_eq!(
+            cholesky_solve(&a, &[1.0]),
+            Err(CholeskyError::DimensionMismatch(3, 1))
+        );
+    }
+}

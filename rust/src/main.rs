@@ -1,0 +1,383 @@
+//! `adasgd` — leader entrypoint / CLI.
+//!
+//! See `adasgd help` (or [`adasgd::cli::print_help`]) for the command map.
+
+use adasgd::cli::{print_help, Args};
+use adasgd::config::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
+use adasgd::coordinator::{fig1, fig2, fig3, run_experiment, FigureOutput};
+use adasgd::master::{run_fastest_k, MasterConfig};
+use adasgd::metrics::{write_csv, AsciiPlot, Recorder};
+use adasgd::policy::{AdaptivePflug, FixedK, PflugParams};
+use adasgd::runtime::Runtime;
+use adasgd::theory::{switching_times, BoundParams, ErrorBound};
+use adasgd::transformer::TransformerBackend;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("fig1") => cmd_fig1(&args),
+        Some("fig2") => cmd_figure(&args, 2),
+        Some("fig3") => cmd_figure(&args, 3),
+        Some("train") => cmd_train(&args),
+        Some("train-transformer") => cmd_train_transformer(&args),
+        Some("threaded") => cmd_threaded(&args),
+        Some("list-artifacts") => cmd_list_artifacts(&args),
+        Some("repeat") => cmd_repeat(&args),
+        Some("switching-times") => cmd_switching_times(),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}' (try `adasgd help`)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn emit(args: &Args, name: &str, runs: &[&Recorder], summary: &[String]) {
+    if !args.has("quiet") {
+        let plot = AsciiPlot::new(
+            format!("{name}: error vs wall-clock (log y)"),
+            96,
+            24,
+        );
+        println!("{}", plot.render(runs));
+    }
+    for line in summary {
+        println!("  {line}");
+    }
+    let default_out = format!("results/{name}.csv");
+    let out = args.get("out").unwrap_or(&default_out);
+    if let Err(e) = write_csv(Path::new(out), runs) {
+        eprintln!("warning: could not write {out}: {e}");
+    } else {
+        println!("  series written to {out}");
+    }
+}
+
+fn cmd_fig1(args: &Args) -> i32 {
+    let points = args.get_parse::<usize>("points", 400).unwrap_or(400);
+    let out = fig1(points);
+    let mut runs: Vec<&Recorder> = out.fixed.iter().collect();
+    runs.push(&out.adaptive);
+    emit(args, "fig1", &runs, &out.summary);
+    0
+}
+
+fn cmd_figure(args: &Args, which: u8) -> i32 {
+    let seed = args.get_parse::<u64>("seed", 0).unwrap_or(0);
+    let default_t = if which == 2 { 6500.0 } else { 2500.0 };
+    let max_time =
+        args.get_parse::<f64>("max-time", default_t).unwrap_or(default_t);
+    let FigureOutput { name, runs, summary } = if which == 2 {
+        fig2(seed, max_time)
+    } else {
+        fig3(seed, max_time)
+    };
+    let refs: Vec<&Recorder> = runs.iter().collect();
+    emit(args, &name, &refs, &summary);
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let cfg = if let Some(path) = args.get("config") {
+        match std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| ExperimentConfig::from_toml(&t))
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        // Assemble from flags.
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = args.get_parse("seed", cfg.seed).unwrap_or(cfg.seed);
+        cfg.n = args.get_parse("n", cfg.n).unwrap_or(cfg.n);
+        cfg.eta = args.get_parse("eta", cfg.eta).unwrap_or(cfg.eta);
+        cfg.max_time =
+            args.get_parse("max-time", cfg.max_time).unwrap_or(cfg.max_time);
+        cfg.max_iterations = args
+            .get_parse("max-iterations", cfg.max_iterations)
+            .unwrap_or(cfg.max_iterations);
+        let m = args.get_parse("m", 2000usize).unwrap_or(2000);
+        let d = args.get_parse("d", 100usize).unwrap_or(100);
+        cfg.workload = WorkloadSpec::LinReg { m, d };
+        let lambda = args.get_parse("lambda", 1.0f64).unwrap_or(1.0);
+        cfg.delays = DelaySpec::Exponential { lambda };
+        cfg.policy = if args.has("async") {
+            PolicySpec::Async
+        } else if let Some(kstr) = args.get("k") {
+            PolicySpec::Fixed { k: kstr.parse().unwrap_or(10) }
+        } else {
+            PolicySpec::Adaptive(PflugParams {
+                k0: args.get_parse("k0", 10).unwrap_or(10),
+                step: args.get_parse("step", 10).unwrap_or(10),
+                thresh: args.get_parse("thresh", 10).unwrap_or(10),
+                burnin: args.get_parse("burnin", 200).unwrap_or(200),
+                k_max: args.get_parse("k-max", cfg.n).unwrap_or(cfg.n),
+            })
+        };
+        cfg.label = format!("train(seed={})", cfg.seed);
+        cfg
+    };
+
+    match run_experiment(&cfg) {
+        Ok(out) => {
+            let summary = vec![
+                format!(
+                    "{}: {} steps, t={:.1}, final error {:.4e}, min {:.4e}",
+                    cfg.label,
+                    out.steps,
+                    out.total_time,
+                    out.recorder.last().map(|s| s.error).unwrap_or(f64::NAN),
+                    out.recorder.min_error().unwrap_or(f64::NAN),
+                ),
+                format!(
+                    "k switches: {}",
+                    out.k_changes
+                        .iter()
+                        .map(|(j, t, k)| format!("(iter {j}, t={t:.0}) → k={k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            ];
+            emit(args, "train", &[&out.recorder], &summary);
+            0
+        }
+        Err(e) => {
+            eprintln!("run error: {e}");
+            1
+        }
+    }
+}
+
+fn open_runtime(args: &Args) -> Option<std::sync::Arc<Runtime>> {
+    let res = match args.get("artifacts") {
+        Some(dir) => Runtime::open(dir),
+        None => Runtime::open_default(),
+    };
+    match res {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("runtime error: {e}");
+            None
+        }
+    }
+}
+
+fn cmd_train_transformer(args: &Args) -> i32 {
+    let Some(runtime) = open_runtime(args) else { return 1 };
+    let tag = args.get("tag").unwrap_or("tiny").to_string();
+    let steps = args.get_parse::<u64>("steps", 200).unwrap_or(200);
+    let workers = args.get_parse::<usize>("workers", 8).unwrap_or(8);
+    let seed = args.get_parse::<u64>("seed", 0).unwrap_or(0);
+    let k0 = args.get_parse::<usize>("k0", workers / 4).unwrap_or(2).max(1);
+
+    let session =
+        match adasgd::transformer::TransformerSession::new(&runtime, &tag, seed)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("session error: {e}");
+                return 1;
+            }
+        };
+    let mut backend =
+        match TransformerBackend::new(&runtime, &tag, workers, seed) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("backend error: {e}");
+                return 1;
+            }
+        };
+    let params0 = match session.init_params(seed as i32) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("init error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "transformer '{tag}': {} params, {workers} workers, {steps} steps",
+        backend.params()
+    );
+
+    let delays = adasgd::straggler::ExponentialDelays::new(1.0);
+    let mut policy = AdaptivePflug::new(
+        workers,
+        PflugParams {
+            k0,
+            step: (workers / 4).max(1),
+            thresh: 5,
+            burnin: 20,
+            k_max: workers,
+        },
+    );
+    let cfg = MasterConfig {
+        eta: 0.05,
+        momentum: 0.0,
+        max_iterations: steps,
+        max_time: 0.0,
+        seed,
+        record_stride: (steps / 20).max(1),
+    };
+    let eval_backend =
+        TransformerBackend::new(&runtime, &tag, workers, seed).unwrap();
+    let run = run_fastest_k(
+        &mut backend,
+        &delays,
+        &mut policy,
+        &params0,
+        &cfg,
+        &mut |p| eval_backend.eval_loss(p).unwrap_or(f32::NAN) as f64,
+    );
+    let summary = vec![
+        format!(
+            "loss {:.4} -> {:.4} over {} fastest-k iterations (virtual t={:.1})",
+            run.recorder.samples()[0].error,
+            run.recorder.last().unwrap().error,
+            run.iterations,
+            run.total_time
+        ),
+        format!("k switches: {:?}", run.k_changes),
+    ];
+    emit(args, "transformer", &[&run.recorder], &summary);
+    0
+}
+
+fn cmd_threaded(args: &Args) -> i32 {
+    use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use adasgd::exec::{ThreadedCluster, ThreadedConfig};
+    use adasgd::model::LinRegProblem;
+
+    let workers = args.get_parse::<usize>("workers", 10).unwrap_or(10);
+    let k = args.get_parse::<usize>("k", workers / 2).unwrap_or(5);
+    let time_scale =
+        args.get_parse::<f64>("time-scale", 1e-3).unwrap_or(1e-3);
+    let seed = args.get_parse::<u64>("seed", 0).unwrap_or(0);
+
+    let m = 2000 - (2000 % workers);
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m, d: 100, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    let shards = Shards::partition(&ds, workers);
+    let mut cluster = ThreadedCluster::spawn(&shards, time_scale);
+    let mut policy = FixedK::new(k.clamp(1, workers));
+    let cfg = ThreadedConfig {
+        eta: 5e-4,
+        max_iterations: args.get_parse("max-iterations", 300).unwrap_or(300),
+        time_scale,
+        seed,
+        record_stride: 20,
+    };
+    let run = cluster.run_fastest_k(
+        &mut policy,
+        &vec![0.0; 100],
+        &cfg,
+        &mut |w| problem.error(w),
+    );
+    println!(
+        "threaded cluster: {} workers, k={k}: error {:.4e} -> {:.4e}",
+        workers,
+        run.recorder.samples()[0].error,
+        run.recorder.last().unwrap().error
+    );
+    println!(
+        "  virtual time {:.1}, real time {:.2}s, late responses {}",
+        run.virtual_time, run.real_time, run.late_responses
+    );
+    0
+}
+
+fn cmd_list_artifacts(args: &Args) -> i32 {
+    let Some(runtime) = open_runtime(args) else { return 1 };
+    println!("artifact registry:");
+    for e in runtime.manifest().entries() {
+        let ins: Vec<String> = e
+            .inputs
+            .iter()
+            .map(|t| format!("{:?}{:?}", t.dtype, t.shape))
+            .collect();
+        println!(
+            "  {:<28} {:<32} inputs: {}",
+            e.name,
+            e.file,
+            ins.join(", ")
+        );
+    }
+    0
+}
+
+fn cmd_repeat(args: &Args) -> i32 {
+    use adasgd::coordinator::run_repeated;
+    let Some(path) = args.get("config") else {
+        eprintln!("repeat requires --config exp.toml");
+        return 2;
+    };
+    let cfg = match std::fs::read_to_string(path)
+        .map_err(|e| e.to_string())
+        .and_then(|t| ExperimentConfig::from_toml(&t))
+    {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let reps = args.get_parse::<usize>("steps", 5).unwrap_or(5); // repetitions
+    let seed0 = args.get_parse::<u64>("seed", 100).unwrap_or(100);
+    let points = args.get_parse::<usize>("points", 24).unwrap_or(24);
+    match run_repeated(&cfg, seed0, reps, points) {
+        Ok(agg) => {
+            println!(
+                "{} - mean +/- std over {} seeds ({}..{}):",
+                agg.label,
+                agg.reps,
+                seed0,
+                seed0 + reps as u64 - 1
+            );
+            println!("{:>10} {:>14} {:>14}", "t", "mean error", "std");
+            for i in 0..agg.times.len() {
+                println!(
+                    "{:>10.0} {:>14.4e} {:>14.2e}",
+                    agg.times[i], agg.mean[i], agg.std[i]
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("repeat error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_switching_times() -> i32 {
+    let bound = ErrorBound::new(
+        BoundParams::example1(),
+        adasgd::stats::OrderStats::exponential(5, 5.0),
+    );
+    println!("Example 1 (n=5, exp(5), eta=1e-3, sigma2=10, E0=100):");
+    for s in switching_times(&bound) {
+        println!(
+            "  switch to k={} at t = {:>8.1}  (bound error there: {:.4e})",
+            s.k_next, s.time, s.error
+        );
+    }
+    0
+}

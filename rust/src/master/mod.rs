@@ -1,0 +1,21 @@
+//! The synchronous fastest-k master loop (paper Eq. 2).
+//!
+//! Per iteration j:
+//!  1. broadcast `w_j` to all n workers (virtual),
+//!  2. draw the n response times from the delay model; the iteration's
+//!     wall-clock cost is the k-th order statistic, and the responding set
+//!     `R_j` is the k fastest workers,
+//!  3. average the k partial gradients into `ĝ_j`,
+//!  4. `w_{j+1} = w_j − η ĝ_j`,
+//!  5. feed the policy `⟨ĝ_j, ĝ_{j−1}⟩` and the clock; it returns k for
+//!     the next iteration.
+//!
+//! The loop is generic over the gradient backend (native linalg or the
+//! AOT/PJRT artifact) and the error evaluator, so the same coordinator
+//! trains linear regression and the transformer. Wall-clock is *virtual*
+//! (drawn from the delay model): DESIGN.md §3 substitutions. The threaded
+//! executor (`exec`) replays the same draws with real OS threads.
+
+mod sync;
+
+pub use sync::{fastest_k_select, run_fastest_k, FastestKRun, MasterConfig};

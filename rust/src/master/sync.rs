@@ -1,0 +1,363 @@
+//! Synchronous fastest-k SGD driver.
+
+use crate::grad::GradBackend;
+use crate::linalg::dot;
+use crate::metrics::{Recorder, Sample};
+use crate::policy::{IterationObs, KPolicy};
+use crate::rng::Pcg64;
+use crate::straggler::DelayModel;
+
+/// Loop configuration.
+#[derive(Debug, Clone)]
+pub struct MasterConfig {
+    /// Step size η.
+    pub eta: f32,
+    /// Heavy-ball momentum β (0 = plain SGD, the paper's setting).
+    pub momentum: f32,
+    /// Hard iteration cap J.
+    pub max_iterations: u64,
+    /// Stop once the virtual clock passes this (0 = no time budget).
+    pub max_time: f64,
+    /// Seed for the delay draws.
+    pub seed: u64,
+    /// Evaluate + record the error every this many iterations.
+    pub record_stride: u64,
+}
+
+impl Default for MasterConfig {
+    fn default() -> Self {
+        Self {
+            eta: 5e-4,
+            momentum: 0.0,
+            max_iterations: 10_000,
+            max_time: 0.0,
+            seed: 0,
+            record_stride: 10,
+        }
+    }
+}
+
+/// Result of a fastest-k run.
+pub struct FastestKRun {
+    /// Error-vs-time record.
+    pub recorder: Recorder,
+    /// Final model.
+    pub w: Vec<f32>,
+    /// Iterations completed.
+    pub iterations: u64,
+    /// Final virtual wall-clock.
+    pub total_time: f64,
+    /// (iteration, time, new_k) for every k change the policy made.
+    pub k_changes: Vec<(u64, f64, usize)>,
+}
+
+/// Select the indices of the k smallest delays and the k-th smallest value.
+/// O(n) via quickselect; `idx` is scratch of len n.
+pub fn fastest_k_select(
+    delays: &[f64],
+    k: usize,
+    idx: &mut Vec<usize>,
+) -> (f64, usize) {
+    let n = delays.len();
+    debug_assert!(k >= 1 && k <= n);
+    idx.clear();
+    idx.extend(0..n);
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            delays[a].partial_cmp(&delays[b]).unwrap()
+        });
+        // After select_nth, positions 0..k hold the k fastest (unordered),
+        // with the k-th order statistic exactly at position k-1.
+        (delays[idx[k - 1]], k)
+    } else {
+        // k = n: wait for everyone; the iteration time is the max.
+        let x_n = delays.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (x_n, k)
+    }
+}
+
+/// Run synchronous fastest-k SGD from `w0`.
+///
+/// `eval_error` maps the current model to the reported error metric
+/// (e.g. `F(w) − F*`); it is called every `record_stride` iterations.
+pub fn run_fastest_k(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    policy: &mut dyn KPolicy,
+    w0: &[f32],
+    cfg: &MasterConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> FastestKRun {
+    let n = backend.n_shards();
+    let d = backend.dim();
+    assert_eq!(w0.len(), d, "w0 dimension mismatch");
+
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
+    let mut w = w0.to_vec();
+    let mut g = vec![0.0f32; d]; // ĝ_j
+    let mut g_prev = vec![0.0f32; d]; // ĝ_{j−1}
+    let mut partial = vec![0.0f32; d];
+    let mut velocity: Option<Vec<f32>> = None;
+    // Batched-backend scratch (allocated only if the backend supports it).
+    let mut all_buf: Option<Vec<f32>> = None;
+    let mut delay_buf = vec![0.0f64; n];
+    let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
+
+    let mut recorder =
+        Recorder::with_stride(policy.name(), cfg.record_stride);
+    let mut k_changes = Vec::new();
+    let mut k = policy.initial_k().min(n).max(1);
+    let mut t = 0.0f64;
+    let mut j = 0u64;
+
+    // Initial point.
+    recorder.push_forced(Sample {
+        iteration: 0,
+        time: 0.0,
+        k,
+        error: eval_error(&w),
+    });
+
+    while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time) {
+        backend.on_iteration(j);
+        // (2) response times + fastest-k selection.
+        for (i, slot) in delay_buf.iter_mut().enumerate() {
+            *slot = delays.sample(j, i, &mut rng);
+        }
+        let (x_k, _) = fastest_k_select(&delay_buf, k, &mut idx_buf);
+        t += x_k;
+
+        // (3) aggregate the k fastest partial gradients — through the
+        // batched path when the backend has one and k is past the
+        // dispatch-cost crossover (~n/4, see GradBackend::all_grads),
+        // else shard by shard.
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let use_batched = backend.supports_all_grads() && 4 * k >= n;
+        let buf = all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
+        if use_batched && backend.all_grads(&w, buf) {
+            for &worker in &idx_buf[..k] {
+                let row = &buf[worker * d..(worker + 1) * d];
+                for (gv, pv) in g.iter_mut().zip(row) {
+                    *gv += *pv;
+                }
+            }
+        } else {
+            for &worker in &idx_buf[..k] {
+                backend.partial_grad(worker, &w, &mut partial);
+                for (gv, pv) in g.iter_mut().zip(&partial) {
+                    *gv += *pv;
+                }
+            }
+        }
+        let inv_k = 1.0 / k as f32;
+        for gv in g.iter_mut() {
+            *gv *= inv_k;
+        }
+
+        // (4) SGD update (heavy-ball when momentum > 0; v reused across
+        // iterations, allocated lazily only if needed).
+        if cfg.momentum > 0.0 {
+            let v = velocity.get_or_insert_with(|| vec![0.0f32; d]);
+            for ((vv, wv), gv) in v.iter_mut().zip(w.iter_mut()).zip(&g) {
+                *vv = cfg.momentum * *vv + *gv;
+                *wv -= cfg.eta * *vv;
+            }
+        } else {
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= cfg.eta * *gv;
+            }
+        }
+
+        // (5) policy feedback.
+        let inner = if j == 0 { None } else { Some(dot(&g, &g_prev)) };
+        let obs = IterationObs {
+            iteration: j,
+            time: t,
+            k_used: k,
+            grad_inner_prev: inner,
+            grad_norm_sq: dot(&g, &g),
+        };
+        let k_next = policy.next_k(&obs).min(n).max(1);
+        if k_next != k {
+            k_changes.push((j, t, k_next));
+            k = k_next;
+        }
+        std::mem::swap(&mut g, &mut g_prev);
+
+        j += 1;
+        if j % cfg.record_stride == 0 {
+            recorder.push_forced(Sample {
+                iteration: j,
+                time: t,
+                k,
+                error: eval_error(&w),
+            });
+        }
+    }
+
+    // Always record the end state.
+    if j % cfg.record_stride != 0 {
+        recorder.push_forced(Sample {
+            iteration: j,
+            time: t,
+            k,
+            error: eval_error(&w),
+        });
+    }
+
+    FastestKRun { recorder, w, iterations: j, total_time: t, k_changes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use crate::grad::NativeBackend;
+    use crate::model::LinRegProblem;
+    use crate::policy::FixedK;
+    use crate::straggler::ExponentialDelays;
+
+    fn small_setup() -> (NativeBackend, LinRegProblem) {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 200, d: 10, ..Default::default() },
+            3,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let backend = NativeBackend::new(Shards::partition(&ds, 10));
+        (backend, problem)
+    }
+
+    #[test]
+    fn fastest_k_select_finds_order_statistic() {
+        let delays = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let mut idx = Vec::new();
+        let (x2, _) = fastest_k_select(&delays, 2, &mut idx);
+        assert_eq!(x2, 2.0);
+        let mut fastest: Vec<usize> = idx[..2].to_vec();
+        fastest.sort_unstable();
+        assert_eq!(fastest, vec![1, 3]);
+        // k = n degenerates to the max.
+        let (x5, _) = fastest_k_select(&delays, 5, &mut idx);
+        assert_eq!(x5, 5.0);
+    }
+
+    #[test]
+    fn error_decreases_under_training() {
+        let (mut backend, problem) = small_setup();
+        let delays = ExponentialDelays::new(1.0);
+        let mut policy = FixedK::new(5);
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 800,
+            seed: 1,
+            record_stride: 50,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run = run_fastest_k(
+            &mut backend,
+            &delays,
+            &mut policy,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(
+            last < first * 1e-2,
+            "training failed to descend: {first} -> {last}"
+        );
+        assert_eq!(run.iterations, 800);
+        assert!(run.total_time > 0.0);
+    }
+
+    #[test]
+    fn time_budget_stops_the_run() {
+        let (mut backend, problem) = small_setup();
+        let delays = ExponentialDelays::new(1.0);
+        let mut policy = FixedK::new(3);
+        let cfg = MasterConfig {
+            eta: 0.001,
+            max_iterations: u64::MAX / 2,
+            max_time: 25.0,
+            seed: 2,
+            record_stride: 10,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run = run_fastest_k(
+            &mut backend,
+            &delays,
+            &mut policy,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        assert!(run.total_time >= 25.0);
+        // One iteration past the budget at most.
+        let mean_iter = run.total_time / run.iterations as f64;
+        assert!(run.total_time < 25.0 + 20.0 * mean_iter);
+    }
+
+    #[test]
+    fn identical_seeds_are_bitwise_reproducible() {
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 100,
+            seed: 7,
+            record_stride: 10,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run_once = || {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(4);
+            run_fastest_k(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.total_time, b.total_time);
+    }
+
+    #[test]
+    fn larger_k_takes_longer_per_iteration() {
+        let delays = ExponentialDelays::new(1.0);
+        let w0 = vec![0.0f32; 10];
+        let time_for = |k: usize| {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(k);
+            let cfg = MasterConfig {
+                eta: 0.001,
+                max_iterations: 400,
+                seed: 11,
+                record_stride: 100,
+                ..Default::default()
+            };
+            run_fastest_k(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+            .total_time
+        };
+        let t2 = time_for(2);
+        let t8 = time_for(8);
+        assert!(
+            t8 > 2.0 * t2,
+            "k=8 should be much slower than k=2: {t8} vs {t2}"
+        );
+    }
+}

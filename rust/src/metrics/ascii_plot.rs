@@ -1,0 +1,114 @@
+//! Terminal figure rendering: log-y scatter of error-vs-time series, so
+//! `adasgd fig2` prints a readable version of the paper's plots without a
+//! plotting dependency.
+
+use super::Recorder;
+
+/// Multi-series ASCII plot with a log-scaled y axis.
+pub struct AsciiPlot {
+    width: usize,
+    height: usize,
+    title: String,
+}
+
+const GLYPHS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+impl AsciiPlot {
+    /// Plot canvas of `width x height` characters.
+    pub fn new(title: impl Into<String>, width: usize, height: usize) -> Self {
+        assert!(width >= 16 && height >= 4, "canvas too small");
+        Self { width, height, title: title.into() }
+    }
+
+    /// Render the series (one glyph per run) into a string.
+    pub fn render(&self, runs: &[&Recorder]) -> String {
+        let mut t_max = 0.0f64;
+        let mut e_min = f64::INFINITY;
+        let mut e_max = f64::NEG_INFINITY;
+        for r in runs {
+            for s in r.samples() {
+                t_max = t_max.max(s.time);
+                if s.error > 0.0 {
+                    e_min = e_min.min(s.error);
+                    e_max = e_max.max(s.error);
+                }
+            }
+        }
+        if !e_min.is_finite() || t_max == 0.0 {
+            return format!("{}\n(no positive data to plot)\n", self.title);
+        }
+        let (ly_min, ly_max) = (e_min.log10(), e_max.log10());
+        let y_span = (ly_max - ly_min).max(1e-9);
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (ri, r) in runs.iter().enumerate() {
+            let glyph = GLYPHS[ri % GLYPHS.len()];
+            for s in r.samples() {
+                if s.error <= 0.0 {
+                    continue;
+                }
+                let xf = (s.time / t_max).clamp(0.0, 1.0);
+                let yf = ((s.error.log10() - ly_min) / y_span).clamp(0.0, 1.0);
+                let x = (xf * (self.width - 1) as f64).round() as usize;
+                let y = self.height - 1
+                    - (yf * (self.height - 1) as f64).round() as usize;
+                grid[y][x] = glyph;
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        for (yi, row) in grid.iter().enumerate() {
+            // y tick: log value at this row.
+            let frac = 1.0 - yi as f64 / (self.height - 1) as f64;
+            let val = 10f64.powf(ly_min + frac * y_span);
+            out.push_str(&format!("{val:9.2e} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{:>9}  +{}\n{:>9}   0{:>width$.0}\n",
+            "",
+            "-".repeat(self.width),
+            "t:",
+            t_max,
+            width = self.width - 1
+        ));
+        for (ri, r) in runs.iter().enumerate() {
+            out.push_str(&format!(
+                "  {} {}\n",
+                GLYPHS[ri % GLYPHS.len()],
+                r.label
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Sample;
+
+    #[test]
+    fn renders_without_panic_and_contains_labels() {
+        let mut a = Recorder::new("adaptive");
+        let mut b = Recorder::new("fixed-k10");
+        for j in 0..100u64 {
+            let t = j as f64;
+            a.push(Sample { iteration: j, time: t, k: 1, error: 100.0 * (-0.05 * t).exp() + 0.01 });
+            b.push(Sample { iteration: j, time: t, k: 10, error: 100.0 * (-0.02 * t).exp() + 0.1 });
+        }
+        let plot = AsciiPlot::new("test", 60, 16).render(&[&a, &b]);
+        assert!(plot.contains("adaptive"));
+        assert!(plot.contains("fixed-k10"));
+        assert!(plot.lines().count() > 16);
+    }
+
+    #[test]
+    fn empty_series_is_graceful() {
+        let r = Recorder::new("empty");
+        let plot = AsciiPlot::new("t", 40, 8).render(&[&r]);
+        assert!(plot.contains("no positive data"));
+    }
+}

@@ -1,0 +1,55 @@
+//! CSV export of run records (no serde offline — hand-rolled writer).
+
+use super::Recorder;
+use std::io::Write;
+use std::path::Path;
+
+/// CSV writing failures.
+#[derive(Debug, thiserror::Error)]
+pub enum CsvError {
+    /// Underlying I/O failure.
+    #[error("csv io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Write one or more run records into a single long-format CSV:
+/// `label,iteration,time,k,error`.
+pub fn write_csv(path: &Path, runs: &[&Recorder]) -> Result<(), CsvError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "label,iteration,time,k,error")?;
+    for run in runs {
+        for s in run.samples() {
+            writeln!(
+                f,
+                "{},{},{:.6},{},{:.9e}",
+                run.label, s.iteration, s.time, s.k, s.error
+            )?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Sample;
+
+    #[test]
+    fn round_trip_via_fs() {
+        let mut r = Recorder::new("runA");
+        r.push(Sample { iteration: 0, time: 0.5, k: 2, error: 3.25 });
+        let dir = std::env::temp_dir().join("adasgd_csv_test");
+        let path = dir.join("out.csv");
+        write_csv(&path, &[&r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "label,iteration,time,k,error");
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("runA,0,0.5"), "{row}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

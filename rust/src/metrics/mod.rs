@@ -1,0 +1,9 @@
+//! Metrics: time-series recording, CSV export, terminal plots, summaries.
+
+mod ascii_plot;
+mod csv;
+mod recorder;
+
+pub use ascii_plot::AsciiPlot;
+pub use csv::{write_csv, CsvError};
+pub use recorder::{Recorder, Sample};

@@ -1,0 +1,126 @@
+//! Error-vs-wall-clock time series of a training run.
+
+/// One recorded point of a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Iteration index j.
+    pub iteration: u64,
+    /// Wall-clock time after the iteration.
+    pub time: f64,
+    /// k used in the iteration.
+    pub k: usize,
+    /// Error metric F(w_j) − F* (or raw loss for workloads without F*).
+    pub error: f64,
+}
+
+/// Growable run record with optional sub-sampling.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    /// Run label (policy name etc.).
+    pub label: String,
+    samples: Vec<Sample>,
+    /// Record every `every`-th iteration (1 = all).
+    every: u64,
+}
+
+impl Recorder {
+    /// Record every iteration.
+    pub fn new(label: impl Into<String>) -> Self {
+        Self::with_stride(label, 1)
+    }
+
+    /// Record every `every`-th iteration (the final sample of a run should
+    /// be pushed with [`Recorder::push_forced`]).
+    pub fn with_stride(label: impl Into<String>, every: u64) -> Self {
+        assert!(every >= 1, "stride must be >= 1");
+        Self { label: label.into(), samples: Vec::new(), every }
+    }
+
+    /// Maybe record (honours the stride).
+    pub fn push(&mut self, s: Sample) {
+        if s.iteration % self.every == 0 {
+            self.samples.push(s);
+        }
+    }
+
+    /// Record unconditionally.
+    pub fn push_forced(&mut self, s: Sample) {
+        self.samples.push(s);
+    }
+
+    /// All recorded samples.
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Last recorded sample.
+    pub fn last(&self) -> Option<&Sample> {
+        self.samples.last()
+    }
+
+    /// First time at which the error drops to `target` or below
+    /// (the "time-to-error" metric used to compare Fig. 2 curves).
+    pub fn time_to_error(&self, target: f64) -> Option<f64> {
+        self.samples.iter().find(|s| s.error <= target).map(|s| s.time)
+    }
+
+    /// Minimum error seen.
+    pub fn min_error(&self) -> Option<f64> {
+        self.samples
+            .iter()
+            .map(|s| s.error)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Error of the last sample at or before time `t` (step interpolation).
+    pub fn error_at(&self, t: f64) -> Option<f64> {
+        self.samples
+            .iter()
+            .take_while(|s| s.time <= t)
+            .last()
+            .map(|s| s.error)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(it: u64, time: f64, error: f64) -> Sample {
+        Sample { iteration: it, time, k: 1, error }
+    }
+
+    #[test]
+    fn stride_subsamples() {
+        let mut r = Recorder::with_stride("x", 10);
+        for j in 0..100 {
+            r.push(sample(j, j as f64, 1.0));
+        }
+        assert_eq!(r.samples().len(), 10);
+        r.push_forced(sample(99, 99.0, 0.5));
+        assert_eq!(r.samples().len(), 11);
+    }
+
+    #[test]
+    fn time_to_error_finds_first_crossing() {
+        let mut r = Recorder::new("x");
+        r.push(sample(0, 0.0, 10.0));
+        r.push(sample(1, 1.0, 5.0));
+        r.push(sample(2, 2.0, 1.0));
+        r.push(sample(3, 3.0, 2.0)); // bounces back up
+        assert_eq!(r.time_to_error(5.0), Some(1.0));
+        assert_eq!(r.time_to_error(1.5), Some(2.0));
+        assert_eq!(r.time_to_error(0.1), None);
+        assert_eq!(r.min_error(), Some(1.0));
+    }
+
+    #[test]
+    fn error_at_steps() {
+        let mut r = Recorder::new("x");
+        r.push(sample(0, 0.0, 10.0));
+        r.push(sample(1, 2.0, 5.0));
+        assert_eq!(r.error_at(1.0), Some(10.0));
+        assert_eq!(r.error_at(2.0), Some(5.0));
+        assert_eq!(r.error_at(-1.0), None);
+    }
+}

@@ -1,0 +1,237 @@
+//! Algorithm 1 — adaptive fastest-k SGD via a Pflug-style sign statistic.
+//!
+//! The statistic: during the transient phase consecutive stochastic
+//! gradients tend to point the same way (`⟨ĝ_j, ĝ_{j−1}⟩ > 0`); near the
+//! stationary phase the iterates oscillate around w* and the inner product
+//! turns negative about half the time. A counter adds 1 on a negative
+//! product and subtracts 1 on a positive one; once it exceeds `thresh`
+//! (after a `burnin` number of iterations since the last switch), the
+//! policy declares the phase transition and raises k by `step`, then
+//! resets both counters — exactly the pseudo-code of Algorithm 1.
+
+use super::{clamp_k, IterationObs, KPolicy};
+
+/// Adaptation parameters of Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PflugParams {
+    /// Starting k (paper: 10 in Fig. 2, 1 in Fig. 3).
+    pub k0: usize,
+    /// Increment added at each detected transition (paper: `step`).
+    pub step: usize,
+    /// Counter threshold (paper: `thresh`, 10 in both figures).
+    pub thresh: i64,
+    /// Minimum iterations between switches (paper: `burnin`,
+    /// 0.1 × data points = 200 in both figures).
+    pub burnin: u64,
+    /// Cap on k (paper stops at 40 resp. 36, i.e. below n).
+    pub k_max: usize,
+}
+
+impl Default for PflugParams {
+    fn default() -> Self {
+        // Fig. 2 settings.
+        Self { k0: 10, step: 10, thresh: 10, burnin: 200, k_max: 40 }
+    }
+}
+
+/// Algorithm 1 state machine.
+#[derive(Debug, Clone)]
+pub struct AdaptivePflug {
+    n: usize,
+    params: PflugParams,
+    k: usize,
+    count_negative: i64,
+    count_iter: u64,
+    /// Switch log: (iteration, time, new k) — exposed for figures.
+    switches: Vec<(u64, f64, usize)>,
+}
+
+impl AdaptivePflug {
+    /// New policy for `n` workers.
+    pub fn new(n: usize, params: PflugParams) -> Self {
+        assert!(params.k0 >= 1 && params.k0 <= n, "k0 must be in 1..=n");
+        assert!(params.step >= 1, "step must be >= 1");
+        assert!(params.k_max <= n, "k_max must be <= n");
+        Self {
+            n,
+            params,
+            k: params.k0,
+            count_negative: 0,
+            count_iter: 1,
+            switches: Vec::new(),
+        }
+    }
+
+    /// The switch log: (iteration, wall-clock, new k).
+    pub fn switches(&self) -> &[(u64, f64, usize)] {
+        &self.switches
+    }
+
+    /// Current counter value (diagnostics).
+    pub fn counter(&self) -> i64 {
+        self.count_negative
+    }
+}
+
+impl KPolicy for AdaptivePflug {
+    fn initial_k(&self) -> usize {
+        self.params.k0
+    }
+
+    fn next_k(&mut self, obs: &IterationObs) -> usize {
+        // Sign statistic on ⟨ĝ_j, ĝ_{j−1}⟩ (skipped on the first iteration,
+        // which has no predecessor).
+        if let Some(ip) = obs.grad_inner_prev {
+            if ip < 0.0 {
+                self.count_negative += 1;
+            } else {
+                self.count_negative -= 1;
+            }
+        }
+
+        // Algorithm 1's guard: `k <= k_max - step` keeps k from exceeding
+        // the cap after the increment.
+        if self.count_negative > self.params.thresh
+            && self.count_iter > self.params.burnin
+            && self.k + self.params.step <= self.params.k_max
+        {
+            self.k = clamp_k(self.k + self.params.step, self.n);
+            self.count_negative = 0;
+            self.count_iter = 0;
+            self.switches.push((obs.iteration, obs.time, self.k));
+        }
+        self.count_iter += 1;
+        self.k
+    }
+
+    fn name(&self) -> String {
+        let p = &self.params;
+        format!(
+            "adaptive-pflug(k0={}, step={}, thresh={}, burnin={}, kmax={})",
+            p.k0, p.step, p.thresh, p.burnin, p.k_max
+        )
+    }
+
+    fn reset(&mut self) {
+        self.k = self.params.k0;
+        self.count_negative = 0;
+        self.count_iter = 1;
+        self.switches.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(iteration: u64, inner: f64) -> IterationObs {
+        IterationObs {
+            iteration,
+            time: iteration as f64,
+            k_used: 1,
+            grad_inner_prev: Some(inner),
+            grad_norm_sq: 1.0,
+        }
+    }
+
+    fn params() -> PflugParams {
+        PflugParams { k0: 1, step: 5, thresh: 3, burnin: 10, k_max: 16 }
+    }
+
+    #[test]
+    fn stays_during_transient() {
+        // All-positive inner products: no switch ever.
+        let mut p = AdaptivePflug::new(20, params());
+        for j in 0..1000 {
+            assert_eq!(p.next_k(&obs(j, 1.0)), 1);
+        }
+        assert!(p.switches().is_empty());
+    }
+
+    #[test]
+    fn switches_on_stationary_signal() {
+        // All-negative inner products: counter grows; switch once both the
+        // threshold and burn-in are satisfied.
+        let mut p = AdaptivePflug::new(20, params());
+        let mut first_switch = None;
+        for j in 0..60 {
+            let k = p.next_k(&obs(j, -1.0));
+            if k > 1 && first_switch.is_none() {
+                first_switch = Some(j);
+            }
+        }
+        // Burn-in is 10 iterations; threshold 3 — the switch must happen
+        // at iteration >= 10 and k jumps exactly by step.
+        let j = first_switch.expect("must switch");
+        assert!(j >= 10, "switched too early at {j}");
+        assert_eq!(p.switches()[0].2, 6);
+    }
+
+    #[test]
+    fn burnin_spaces_out_switches() {
+        let mut p = AdaptivePflug::new(64, PflugParams {
+            k0: 1, step: 1, thresh: 2, burnin: 20, k_max: 64,
+        });
+        let mut switch_iters = Vec::new();
+        for j in 0..200 {
+            let before = p.switches().len();
+            p.next_k(&obs(j, -1.0));
+            if p.switches().len() > before {
+                switch_iters.push(j);
+            }
+        }
+        assert!(switch_iters.len() >= 2);
+        for w in switch_iters.windows(2) {
+            assert!(w[1] - w[0] > 20, "switches too close: {switch_iters:?}");
+        }
+    }
+
+    #[test]
+    fn counter_decrements_on_positive() {
+        let mut p = AdaptivePflug::new(20, params());
+        p.next_k(&obs(0, -1.0));
+        p.next_k(&obs(1, -1.0));
+        assert_eq!(p.counter(), 2);
+        p.next_k(&obs(2, 1.0));
+        assert_eq!(p.counter(), 1);
+    }
+
+    #[test]
+    fn respects_k_max() {
+        let mut p = AdaptivePflug::new(20, PflugParams {
+            k0: 1, step: 5, thresh: 1, burnin: 0, k_max: 11,
+        });
+        for j in 0..500 {
+            p.next_k(&obs(j, -1.0));
+        }
+        // k0=1 → 6 → 11; next step would exceed k_max=11, so it stops.
+        assert_eq!(p.switches().last().unwrap().2, 11);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut p = AdaptivePflug::new(20, params());
+        for j in 0..60 {
+            p.next_k(&obs(j, -1.0));
+        }
+        assert!(!p.switches().is_empty());
+        p.reset();
+        assert_eq!(p.initial_k(), 1);
+        assert!(p.switches().is_empty());
+        assert_eq!(p.counter(), 0);
+    }
+
+    #[test]
+    fn first_iteration_without_inner_product_is_neutral() {
+        let mut p = AdaptivePflug::new(20, params());
+        let o = IterationObs {
+            iteration: 0,
+            time: 0.0,
+            k_used: 1,
+            grad_inner_prev: None,
+            grad_norm_sq: 1.0,
+        };
+        assert_eq!(p.next_k(&o), 1);
+        assert_eq!(p.counter(), 0);
+    }
+}

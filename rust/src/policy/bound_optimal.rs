@@ -1,0 +1,103 @@
+//! Theorem-1 oracle policy: switch k at the precomputed bound-optimal
+//! wall-clock times.
+//!
+//! Requires full knowledge of the system parameters (η, L, c, σ², s,
+//! F(w₀) − F*) and the delay model's order statistics — the paper's point
+//! is precisely that this is impractical, which Algorithm 1 fixes; we keep
+//! the oracle as a comparator and for Fig. 1.
+
+use super::{clamp_k, IterationObs, KPolicy};
+use crate::theory::{switching_times, ErrorBound};
+
+/// Time-triggered bound-optimal switching (Theorem 1).
+#[derive(Debug, Clone)]
+pub struct BoundOptimal {
+    n: usize,
+    /// Ascending switch times t_1 … t_{n−1}; entry i moves k to i + 2.
+    times: Vec<f64>,
+    k: usize,
+}
+
+impl BoundOptimal {
+    /// Precompute the Theorem-1 schedule from the bound.
+    pub fn new(bound: &ErrorBound) -> Self {
+        let times = switching_times(bound).iter().map(|s| s.time).collect();
+        Self { n: bound.order().n(), times, k: 1 }
+    }
+
+    /// Build directly from precomputed times (tests / custom schedules).
+    pub fn from_times(n: usize, times: Vec<f64>) -> Self {
+        assert!(times.len() == n - 1, "need n-1 switch times");
+        Self { n, times, k: 1 }
+    }
+
+    /// The switch schedule.
+    pub fn times(&self) -> &[f64] {
+        &self.times
+    }
+}
+
+impl KPolicy for BoundOptimal {
+    fn initial_k(&self) -> usize {
+        1
+    }
+
+    fn next_k(&mut self, obs: &IterationObs) -> usize {
+        // k(t) = 1 + #{switch times <= t}; times are sorted.
+        let passed = self.times.iter().take_while(|&&t| t <= obs.time).count();
+        self.k = clamp_k(1 + passed, self.n);
+        self.k
+    }
+
+    fn name(&self) -> String {
+        format!("bound-optimal(n={})", self.n)
+    }
+
+    fn reset(&mut self) {
+        self.k = 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::OrderStats;
+    use crate::theory::{BoundParams, ErrorBound};
+
+    fn obs_at(time: f64) -> IterationObs {
+        IterationObs {
+            iteration: 0,
+            time,
+            k_used: 1,
+            grad_inner_prev: None,
+            grad_norm_sq: 0.0,
+        }
+    }
+
+    #[test]
+    fn follows_schedule() {
+        let mut p = BoundOptimal::from_times(4, vec![10.0, 20.0, 30.0]);
+        assert_eq!(p.initial_k(), 1);
+        assert_eq!(p.next_k(&obs_at(5.0)), 1);
+        assert_eq!(p.next_k(&obs_at(10.0)), 2);
+        assert_eq!(p.next_k(&obs_at(25.0)), 3);
+        assert_eq!(p.next_k(&obs_at(1e9)), 4);
+    }
+
+    #[test]
+    fn k_is_monotone_under_monotone_time() {
+        let b = ErrorBound::new(
+            BoundParams::example1(),
+            OrderStats::exponential(5, 5.0),
+        );
+        let mut p = BoundOptimal::new(&b);
+        let mut prev_k = 0;
+        for i in 0..1000 {
+            let k = p.next_k(&obs_at(i as f64 * 20.0));
+            assert!(k >= prev_k);
+            assert!(k <= 5);
+            prev_k = k;
+        }
+        assert_eq!(prev_k, 5, "should eventually reach k = n");
+    }
+}

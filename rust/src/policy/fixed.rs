@@ -1,0 +1,57 @@
+//! Non-adaptive fastest-k (the Fig. 2 baseline).
+
+use super::{IterationObs, KPolicy};
+
+/// Always wait for the same k workers.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedK {
+    k: usize,
+}
+
+impl FixedK {
+    /// Fixed k (must be >= 1).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        Self { k }
+    }
+}
+
+impl KPolicy for FixedK {
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+    fn next_k(&mut self, _obs: &IterationObs) -> usize {
+        self.k
+    }
+    fn name(&self) -> String {
+        format!("fixed(k={})", self.k)
+    }
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_changes() {
+        let mut p = FixedK::new(7);
+        assert_eq!(p.initial_k(), 7);
+        let obs = IterationObs {
+            iteration: 3,
+            time: 10.0,
+            k_used: 7,
+            grad_inner_prev: Some(-1.0),
+            grad_norm_sq: 1.0,
+        };
+        for _ in 0..100 {
+            assert_eq!(p.next_k(&obs), 7);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be >= 1")]
+    fn rejects_zero() {
+        FixedK::new(0);
+    }
+}

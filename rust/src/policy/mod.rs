@@ -1,0 +1,96 @@
+//! k-adaptation policies — the paper's system contribution.
+//!
+//! A [`KPolicy`] decides, after every completed iteration, how many of the
+//! n workers the master waits for on the *next* iteration:
+//!
+//! * [`FixedK`] — non-adaptive fastest-k (the baseline of Fig. 2),
+//! * [`AdaptivePflug`] — Algorithm 1: the Pflug-style sign statistic on
+//!   consecutive gradient inner products, oblivious to system parameters,
+//! * [`BoundOptimal`] — Theorem 1: switch at the precomputed bound-optimal
+//!   wall-clock times (requires the system parameters; used for Fig. 1
+//!   and as an oracle comparator),
+//! * [`TimeSchedule`] — arbitrary user-supplied `(time, k)` switch points.
+//!
+//! The master feeds policies an [`IterationObs`] containing the inner
+//! product `⟨ĝ_j, ĝ_{j−1}⟩` (computed once in the loop, so policies stay
+//! O(1) per iteration).
+
+mod adaptive_pflug;
+mod bound_optimal;
+mod fixed;
+mod schedule;
+mod variance_test;
+
+pub use adaptive_pflug::{AdaptivePflug, PflugParams};
+pub use bound_optimal::BoundOptimal;
+pub use fixed::FixedK;
+pub use schedule::TimeSchedule;
+pub use variance_test::{VarianceTest, VarianceTestParams};
+
+/// What a policy sees after each iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct IterationObs {
+    /// Completed iteration index j (0-based).
+    pub iteration: u64,
+    /// Wall-clock time after this iteration.
+    pub time: f64,
+    /// k used for this iteration.
+    pub k_used: usize,
+    /// `⟨ĝ_j, ĝ_{j−1}⟩` — `None` on the first iteration.
+    pub grad_inner_prev: Option<f64>,
+    /// `||ĝ_j||²` (diagnostics; used by variance-test extensions).
+    pub grad_norm_sq: f64,
+}
+
+/// A k-selection policy.
+pub trait KPolicy: Send {
+    /// k for the first iteration.
+    fn initial_k(&self) -> usize;
+
+    /// k for the next iteration, given what just happened.
+    fn next_k(&mut self, obs: &IterationObs) -> usize;
+
+    /// Display name for metrics/reports.
+    fn name(&self) -> String;
+
+    /// Reset internal state (policies are reused across repetitions).
+    fn reset(&mut self);
+}
+
+/// Clamp a k value into `1..=n`.
+pub(crate) fn clamp_k(k: usize, n: usize) -> usize {
+    k.max(1).min(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(iteration: u64, inner: Option<f64>) -> IterationObs {
+        IterationObs {
+            iteration,
+            time: iteration as f64,
+            k_used: 1,
+            grad_inner_prev: inner,
+            grad_norm_sq: 1.0,
+        }
+    }
+
+    #[test]
+    fn policies_are_object_safe() {
+        let mut policies: Vec<Box<dyn KPolicy>> = vec![
+            Box::new(FixedK::new(3)),
+            Box::new(AdaptivePflug::new(
+                50,
+                PflugParams { k0: 1, step: 5, thresh: 10, burnin: 20, k_max: 50 },
+            )),
+            Box::new(TimeSchedule::new(1, vec![(10.0, 5)])),
+        ];
+        for p in policies.iter_mut() {
+            assert!(p.initial_k() >= 1);
+            let k = p.next_k(&obs(0, None));
+            assert!(k >= 1);
+            p.reset();
+        }
+    }
+}

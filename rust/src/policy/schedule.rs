@@ -1,0 +1,87 @@
+//! Explicit `(time, k)` switch schedule — for reproducing hand-tuned
+//! schedules and for ablations that isolate *when* to switch from *how*
+//! the decision is made.
+
+use super::{clamp_k, IterationObs, KPolicy};
+
+/// User-supplied time-triggered schedule.
+#[derive(Debug, Clone)]
+pub struct TimeSchedule {
+    k0: usize,
+    /// Ascending (time, k) switch points.
+    points: Vec<(f64, usize)>,
+    n: usize,
+}
+
+impl TimeSchedule {
+    /// `k0` until the first switch time; each `(t, k)` applies from t on.
+    pub fn new(k0: usize, points: Vec<(f64, usize)>) -> Self {
+        assert!(k0 >= 1, "k0 must be >= 1");
+        assert!(
+            points.windows(2).all(|w| w[0].0 <= w[1].0),
+            "switch times must be ascending"
+        );
+        let n = points.iter().map(|&(_, k)| k).max().unwrap_or(k0).max(k0);
+        Self { k0, points, n }
+    }
+}
+
+impl KPolicy for TimeSchedule {
+    fn initial_k(&self) -> usize {
+        self.k0
+    }
+
+    fn next_k(&mut self, obs: &IterationObs) -> usize {
+        let mut k = self.k0;
+        for &(t, kk) in &self.points {
+            if obs.time >= t {
+                k = kk;
+            } else {
+                break;
+            }
+        }
+        clamp_k(k, self.n)
+    }
+
+    fn name(&self) -> String {
+        format!("schedule(k0={}, {} switches)", self.k0, self.points.len())
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs_at(time: f64) -> IterationObs {
+        IterationObs {
+            iteration: 0,
+            time,
+            k_used: 1,
+            grad_inner_prev: None,
+            grad_norm_sq: 0.0,
+        }
+    }
+
+    #[test]
+    fn applies_points_in_order() {
+        let mut p = TimeSchedule::new(2, vec![(5.0, 4), (9.0, 8)]);
+        assert_eq!(p.next_k(&obs_at(0.0)), 2);
+        assert_eq!(p.next_k(&obs_at(5.0)), 4);
+        assert_eq!(p.next_k(&obs_at(8.9)), 4);
+        assert_eq!(p.next_k(&obs_at(9.0)), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn rejects_unsorted() {
+        TimeSchedule::new(1, vec![(5.0, 2), (1.0, 3)]);
+    }
+
+    #[test]
+    fn empty_schedule_is_fixed_k() {
+        let mut p = TimeSchedule::new(3, vec![]);
+        assert_eq!(p.next_k(&obs_at(100.0)), 3);
+    }
+}

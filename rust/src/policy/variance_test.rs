@@ -1,0 +1,197 @@
+//! Variance-ratio adaptive policy — an alternative stationarity detector.
+//!
+//! Complements Algorithm 1's sign test with the other classic diagnostic
+//! (cf. Chee & Toulis 2018): in the transient phase the gradient norm is
+//! dominated by the deterministic drift, so the *relative variance* of
+//! `||ĝ_j||²` over a sliding window is small; in the stationary phase the
+//! drift vanishes and consecutive gradient norms fluctuate at O(1)
+//! relative scale while their running mean stops shrinking. We declare a
+//! transition when the windowed mean of `||ĝ||²` stops decreasing
+//! (relative improvement < `min_drop`) — and raise k, like Algorithm 1.
+//!
+//! Used by the ablation benches to show the *detector* is swappable while
+//! the fastest-k machinery stays fixed.
+
+use super::{clamp_k, IterationObs, KPolicy};
+
+/// Parameters for the variance/plateau detector.
+#[derive(Debug, Clone, Copy)]
+pub struct VarianceTestParams {
+    /// Starting k.
+    pub k0: usize,
+    /// Increment per detected transition.
+    pub step: usize,
+    /// Sliding-window length (iterations).
+    pub window: usize,
+    /// Declare a plateau when the windowed mean of `||ĝ||²` fails to drop
+    /// by at least this relative amount vs the previous window.
+    pub min_drop: f64,
+    /// Minimum iterations between switches.
+    pub burnin: u64,
+    /// Cap on k.
+    pub k_max: usize,
+}
+
+impl Default for VarianceTestParams {
+    fn default() -> Self {
+        Self { k0: 10, step: 10, window: 50, min_drop: 0.05, burnin: 200, k_max: 40 }
+    }
+}
+
+/// Plateau-detecting adaptive policy.
+#[derive(Debug, Clone)]
+pub struct VarianceTest {
+    n: usize,
+    params: VarianceTestParams,
+    k: usize,
+    buf: Vec<f64>,
+    prev_window_mean: Option<f64>,
+    since_switch: u64,
+    switches: Vec<(u64, f64, usize)>,
+}
+
+impl VarianceTest {
+    /// New policy over n workers.
+    pub fn new(n: usize, params: VarianceTestParams) -> Self {
+        assert!(params.k0 >= 1 && params.k0 <= n);
+        assert!(params.window >= 2);
+        Self {
+            n,
+            params,
+            k: params.k0,
+            buf: Vec::with_capacity(params.window),
+            prev_window_mean: None,
+            since_switch: 0,
+            switches: Vec::new(),
+        }
+    }
+
+    /// Switch log.
+    pub fn switches(&self) -> &[(u64, f64, usize)] {
+        &self.switches
+    }
+}
+
+impl KPolicy for VarianceTest {
+    fn initial_k(&self) -> usize {
+        self.params.k0
+    }
+
+    fn next_k(&mut self, obs: &IterationObs) -> usize {
+        self.since_switch += 1;
+        self.buf.push(obs.grad_norm_sq);
+        if self.buf.len() >= self.params.window {
+            let mean: f64 =
+                self.buf.iter().sum::<f64>() / self.buf.len() as f64;
+            if let Some(prev) = self.prev_window_mean {
+                let drop = (prev - mean) / prev.max(f64::MIN_POSITIVE);
+                if drop < self.params.min_drop
+                    && self.since_switch > self.params.burnin
+                    && self.k + self.params.step <= self.params.k_max
+                {
+                    self.k = clamp_k(self.k + self.params.step, self.n);
+                    self.switches.push((obs.iteration, obs.time, self.k));
+                    self.since_switch = 0;
+                    self.prev_window_mean = None;
+                    self.buf.clear();
+                    return self.k;
+                }
+            }
+            self.prev_window_mean = Some(mean);
+            self.buf.clear();
+        }
+        self.k
+    }
+
+    fn name(&self) -> String {
+        let p = &self.params;
+        format!(
+            "variance-test(k0={}, step={}, window={}, min_drop={})",
+            p.k0, p.step, p.window, p.min_drop
+        )
+    }
+
+    fn reset(&mut self) {
+        self.k = self.params.k0;
+        self.buf.clear();
+        self.prev_window_mean = None;
+        self.since_switch = 0;
+        self.switches.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(j: u64, gnorm: f64) -> IterationObs {
+        IterationObs {
+            iteration: j,
+            time: j as f64,
+            k_used: 1,
+            grad_inner_prev: Some(0.0),
+            grad_norm_sq: gnorm,
+        }
+    }
+
+    fn params() -> VarianceTestParams {
+        VarianceTestParams {
+            k0: 2,
+            step: 4,
+            window: 10,
+            min_drop: 0.05,
+            burnin: 15,
+            k_max: 20,
+        }
+    }
+
+    #[test]
+    fn no_switch_while_norm_decays() {
+        let mut p = VarianceTest::new(20, params());
+        for j in 0..500 {
+            // Exponentially shrinking gradient norms: always a big drop.
+            let k = p.next_k(&obs(j, 100.0 * (-0.05 * j as f64).exp()));
+            assert_eq!(k, 2, "j={j}");
+        }
+    }
+
+    #[test]
+    fn switches_on_plateau() {
+        let mut p = VarianceTest::new(20, params());
+        let mut switched_at = None;
+        for j in 0..200 {
+            let k = p.next_k(&obs(j, 1.0)); // flat norms: plateau
+            if k > 2 && switched_at.is_none() {
+                switched_at = Some(j);
+            }
+        }
+        let j = switched_at.expect("plateau must trigger a switch");
+        assert!(j >= 15, "burn-in must be respected (j={j})");
+        assert_eq!(p.switches()[0].2, 6);
+    }
+
+    #[test]
+    fn respects_k_max() {
+        let mut p = VarianceTest::new(20, VarianceTestParams {
+            burnin: 0,
+            ..params()
+        });
+        for j in 0..5000 {
+            p.next_k(&obs(j, 1.0));
+        }
+        let final_k = p.switches().last().unwrap().2;
+        assert!(final_k <= 20 && final_k + 4 > 20, "final_k={final_k}");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = VarianceTest::new(20, params());
+        for j in 0..200 {
+            p.next_k(&obs(j, 1.0));
+        }
+        assert!(!p.switches().is_empty());
+        p.reset();
+        assert!(p.switches().is_empty());
+        assert_eq!(p.initial_k(), 2);
+    }
+}

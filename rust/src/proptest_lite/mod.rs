@@ -1,0 +1,257 @@
+//! Property-testing harness (proptest is not available offline).
+//!
+//! A [`Runner`] drives a property over `cases` random inputs produced by a
+//! [`Gen`]; on failure it *shrinks* the input with the generator's
+//! `shrink` candidates before reporting the minimal counterexample. Used
+//! by `rust/tests/proptests.rs` for coordinator invariants (routing,
+//! selection, policy state machines).
+
+use crate::rng::{Pcg64, Rng};
+
+/// A random-input generator with optional shrinking.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+
+    /// Produce a random value.
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Smaller candidates for a failing value (simplest first). Default:
+    /// no shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize range generator `[lo, hi]` shrinking toward `lo`.
+pub struct UsizeRange {
+    /// Inclusive lower bound.
+    pub lo: usize,
+    /// Inclusive upper bound.
+    pub hi: usize,
+}
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        rng.gen_range_u64(self.lo as u64, self.hi as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 range generator shrinking toward the low end.
+pub struct F64Range {
+    /// Lower bound.
+    pub lo: f64,
+    /// Upper bound.
+    pub hi: f64,
+}
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.lo {
+            vec![self.lo, self.lo + (*v - self.lo) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vec-of-f64 generator (random length) shrinking by halving the tail.
+pub struct VecF64 {
+    /// Minimum length.
+    pub min_len: usize,
+    /// Maximum length.
+    pub max_len: usize,
+    /// Element range.
+    pub lo: f64,
+    /// Element range.
+    pub hi: f64,
+}
+
+impl Gen for VecF64 {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let len =
+            rng.gen_range_u64(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len)
+            .map(|_| self.lo + (self.hi - self.lo) * rng.next_f64())
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        out
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<V> {
+    /// All cases passed.
+    Pass,
+    /// A (shrunk) counterexample.
+    Fail {
+        /// The minimal failing input found.
+        minimal: V,
+        /// Failure message of the original (pre-shrink) case.
+        message: String,
+        /// Shrink steps taken.
+        shrinks: usize,
+    },
+}
+
+/// Property runner.
+pub struct Runner {
+    /// Number of random cases.
+    pub cases: usize,
+    /// RNG seed (fixed ⇒ reproducible failures).
+    pub seed: u64,
+    /// Maximum shrink iterations.
+    pub max_shrinks: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0x9E37, max_shrinks: 200 }
+    }
+}
+
+impl Runner {
+    /// Run `prop` over random inputs; returns the shrunk counterexample on
+    /// failure. `prop` returns `Err(message)` to signal failure.
+    pub fn run<G: Gen>(
+        &self,
+        gen: &G,
+        prop: impl Fn(&G::Value) -> Result<(), String>,
+    ) -> PropResult<G::Value> {
+        let mut rng = Pcg64::seed_stream(self.seed, 0x9907);
+        for _ in 0..self.cases {
+            let value = gen.generate(&mut rng);
+            if let Err(message) = prop(&value) {
+                // Shrink.
+                let mut minimal = value;
+                let mut shrinks = 0;
+                'outer: while shrinks < self.max_shrinks {
+                    for cand in gen.shrink(&minimal) {
+                        if prop(&cand).is_err() {
+                            minimal = cand;
+                            shrinks += 1;
+                            continue 'outer;
+                        }
+                    }
+                    break;
+                }
+                return PropResult::Fail { minimal, message, shrinks };
+            }
+        }
+        PropResult::Pass
+    }
+
+    /// Panic with the counterexample on failure (test-friendly wrapper).
+    pub fn check<G: Gen>(
+        &self,
+        name: &str,
+        gen: &G,
+        prop: impl Fn(&G::Value) -> Result<(), String>,
+    ) {
+        if let PropResult::Fail { minimal, message, shrinks } =
+            self.run(gen, prop)
+        {
+            panic!(
+                "property '{name}' failed: {message}\n  minimal \
+                 counterexample (after {shrinks} shrinks): {minimal:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = Runner::default();
+        r.check("le", &UsizeRange { lo: 0, hi: 100 }, |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let r = Runner { cases: 500, ..Default::default() };
+        match r.run(&UsizeRange { lo: 0, hi: 1000 }, |&v| {
+            if v < 17 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 17"))
+            }
+        }) {
+            PropResult::Fail { minimal, .. } => {
+                // Shrinker should land near the boundary.
+                assert!(minimal >= 17 && minimal <= 30, "minimal={minimal}");
+            }
+            PropResult::Pass => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecF64 { min_len: 2, max_len: 10, lo: -1.0, hi: 1.0 };
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() >= 2 && v.len() <= 10);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn pair_combinator_shrinks_both_sides() {
+        let g = Pair(UsizeRange { lo: 0, hi: 10 }, UsizeRange { lo: 5, hi: 9 });
+        let shrunk = g.shrink(&(10, 9));
+        assert!(shrunk.iter().any(|&(a, _)| a < 10));
+        assert!(shrunk.iter().any(|&(_, b)| b < 9));
+    }
+}

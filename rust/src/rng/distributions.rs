@@ -1,0 +1,341 @@
+//! Continuous/discrete distributions over any [`Rng`](super::Rng).
+//!
+//! These are the building blocks of the straggler delay models
+//! (`straggler::*`) and the synthetic data generator (`data::synthetic`).
+//! All samplers use inverse-CDF or Box–Muller forms chosen for numerical
+//! robustness rather than peak speed — delay sampling is nowhere near the
+//! hot path (one draw per worker per iteration).
+
+use super::Rng;
+
+/// A sampleable distribution.
+pub trait Distribution {
+    /// Draw one sample.
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64;
+
+    /// Analytic mean, if finite.
+    fn mean(&self) -> f64;
+
+    /// Analytic variance, if finite.
+    fn variance(&self) -> f64;
+}
+
+/// Uniform on `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "Uniform requires hi > lo");
+        Self { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+    fn mean(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+    fn variance(&self) -> f64 {
+        let w = self.hi - self.lo;
+        w * w / 12.0
+    }
+}
+
+/// Exponential with rate `lambda` (mean `1/lambda`) — the paper's §V model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "Exponential requires lambda > 0");
+        Self { lambda }
+    }
+}
+
+impl Distribution for Exponential {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        // Inverse CDF on the open interval so ln() never sees 0.
+        -rng.next_f64_open().ln() / self.lambda
+    }
+    fn mean(&self) -> f64 {
+        1.0 / self.lambda
+    }
+    fn variance(&self) -> f64 {
+        1.0 / (self.lambda * self.lambda)
+    }
+}
+
+/// Normal via Box–Muller (both variates cached would complicate the trait;
+/// we draw fresh — fine off the hot path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "Normal requires sigma >= 0");
+        Self { mu, sigma }
+    }
+
+    /// Standard normal draw.
+    #[inline]
+    pub fn standard<R: Rng + ?Sized>(rng: &mut R) -> f64 {
+        let u1 = rng.next_f64_open();
+        let u2 = rng.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+impl Distribution for Normal {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.mu + self.sigma * Self::standard(rng)
+    }
+    fn mean(&self) -> f64 {
+        self.mu
+    }
+    fn variance(&self) -> f64 {
+        self.sigma * self.sigma
+    }
+}
+
+/// Pareto (Type I) with scale `xm > 0` and shape `alpha > 0` — heavy-tailed
+/// straggling; mean finite iff `alpha > 1`, variance iff `alpha > 2`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pareto {
+    pub xm: f64,
+    pub alpha: f64,
+}
+
+impl Pareto {
+    pub fn new(xm: f64, alpha: f64) -> Self {
+        assert!(xm > 0.0 && alpha > 0.0, "Pareto requires xm, alpha > 0");
+        Self { xm, alpha }
+    }
+}
+
+impl Distribution for Pareto {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.xm / rng.next_f64_open().powf(1.0 / self.alpha)
+    }
+    fn mean(&self) -> f64 {
+        if self.alpha > 1.0 {
+            self.alpha * self.xm / (self.alpha - 1.0)
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn variance(&self) -> f64 {
+        if self.alpha > 2.0 {
+            let a = self.alpha;
+            self.xm * self.xm * a / ((a - 1.0) * (a - 1.0) * (a - 2.0))
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Weibull with scale `lambda` and shape `k`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weibull {
+    pub lambda: f64,
+    pub k: f64,
+}
+
+impl Weibull {
+    pub fn new(lambda: f64, k: f64) -> Self {
+        assert!(lambda > 0.0 && k > 0.0, "Weibull requires lambda, k > 0");
+        Self { lambda, k }
+    }
+}
+
+/// Lanczos ln-gamma (needed for Weibull moments).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos approximation, g = 7, n = 9.
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+fn gamma_fn(x: f64) -> f64 {
+    ln_gamma(x).exp()
+}
+
+impl Distribution for Weibull {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.lambda * (-rng.next_f64_open().ln()).powf(1.0 / self.k)
+    }
+    fn mean(&self) -> f64 {
+        self.lambda * gamma_fn(1.0 + 1.0 / self.k)
+    }
+    fn variance(&self) -> f64 {
+        let g1 = gamma_fn(1.0 + 1.0 / self.k);
+        let g2 = gamma_fn(1.0 + 2.0 / self.k);
+        self.lambda * self.lambda * (g2 - g1 * g1)
+    }
+}
+
+/// Bernoulli over {0, 1}.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bernoulli {
+    pub p: f64,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "Bernoulli requires p in [0,1]");
+        Self { p }
+    }
+
+    /// Boolean draw.
+    #[inline]
+    pub fn flip<R: Rng + ?Sized>(&self, rng: &mut R) -> bool {
+        rng.next_f64() < self.p
+    }
+}
+
+impl Distribution for Bernoulli {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        if self.flip(rng) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+    fn mean(&self) -> f64 {
+        self.p
+    }
+    fn variance(&self) -> f64 {
+        self.p * (1.0 - self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn moments<D: Distribution>(d: &D, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::seed(seed);
+        let samples: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var =
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let d = Exponential::new(2.0);
+        let (m, v) = moments(&d, 200_000, 1);
+        assert!((m - d.mean()).abs() < 0.01, "m={m}");
+        assert!((v - d.variance()).abs() < 0.02, "v={v}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let d = Normal::new(3.0, 1.5);
+        let (m, v) = moments(&d, 200_000, 2);
+        assert!((m - 3.0).abs() < 0.02);
+        assert!((v - 2.25).abs() < 0.05);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let d = Uniform::new(-1.0, 5.0);
+        let (m, v) = moments(&d, 200_000, 3);
+        assert!((m - 2.0).abs() < 0.02);
+        assert!((v - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn pareto_moments_alpha3() {
+        let d = Pareto::new(1.0, 3.0);
+        let (m, _v) = moments(&d, 400_000, 4);
+        assert!((m - d.mean()).abs() < 0.02, "m={m} want {}", d.mean());
+    }
+
+    #[test]
+    fn pareto_infinite_mean_flagged() {
+        assert!(Pareto::new(1.0, 0.9).mean().is_infinite());
+        assert!(Pareto::new(1.0, 1.5).variance().is_infinite());
+    }
+
+    #[test]
+    fn weibull_moments() {
+        let d = Weibull::new(2.0, 1.5);
+        let (m, v) = moments(&d, 200_000, 5);
+        assert!((m - d.mean()).abs() < 0.02, "m={m} want {}", d.mean());
+        assert!((v - d.variance()).abs() < 0.05, "v={v} want {}", d.variance());
+    }
+
+    #[test]
+    fn weibull_shape1_is_exponential() {
+        let w = Weibull::new(2.0, 1.0);
+        let e = Exponential::new(0.5);
+        assert!((w.mean() - e.mean()).abs() < 1e-9);
+        assert!((w.variance() - e.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bernoulli_mean() {
+        let d = Bernoulli::new(0.3);
+        let (m, _) = moments(&d, 100_000, 6);
+        assert!((m - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Gamma(1)=1, Gamma(2)=1, Gamma(3)=2, Gamma(0.5)=sqrt(pi)
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(3.0) - 2.0f64.ln()).abs() < 1e-10);
+        assert!(
+            (ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10
+        );
+    }
+
+    #[test]
+    fn exponential_samples_positive() {
+        let d = Exponential::new(1.0);
+        let mut rng = Pcg64::seed(9);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! PCG-64 (XSL-RR 128/64) — the experiment generator.
+//!
+//! 128-bit LCG state with an xorshift-rotate output permutation
+//! (O'Neill 2014). Chosen for: tiny state, excellent statistical quality,
+//! and cheap independent *streams* (odd increments), which we use to give
+//! every worker / component its own deterministic sequence.
+
+use super::{Rng, SplitMix64};
+
+const MULTIPLIER: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+/// PCG-64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    /// Stream selector; always odd.
+    inc: u128,
+}
+
+impl Pcg64 {
+    /// Seed via SplitMix64 expansion (any u64 seed is fine, including 0).
+    pub fn seed(seed: u64) -> Self {
+        Self::seed_stream(seed, 0)
+    }
+
+    /// Independent stream `stream` of the same seed. Streams produced by
+    /// different `stream` values are statistically independent sequences.
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ 0xA02B_DBF7_BB3C_0A7A);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut sm2 = SplitMix64::new(stream ^ 0x5851_F42D_4C95_7F2D);
+        let i0 = sm2.next_u64() as u128;
+        let i1 = sm2.next_u64() as u128;
+        let mut pcg = Self {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1, // force odd
+        };
+        // Decorrelate the seed from the first outputs.
+        pcg.state = pcg.state.wrapping_add(pcg.inc);
+        let _ = pcg.next_u64();
+        let _ = pcg.next_u64();
+        pcg
+    }
+
+    /// Derive a child generator (new stream) — the fan-out primitive used
+    /// to give each worker / component its own sequence.
+    pub fn stream(&mut self, stream: u64) -> Pcg64 {
+        let salt = self.next_u64();
+        Pcg64::seed_stream(salt, stream)
+    }
+}
+
+impl Rng for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(MULTIPLIER)
+            .wrapping_add(self.inc);
+        // XSL-RR output function.
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = {
+            let mut r = Pcg64::seed(99);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg64::seed(99);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut r1 = Pcg64::seed(1);
+        let mut r2 = Pcg64::seed(2);
+        assert_ne!(
+            (0..4).map(|_| r1.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| r2.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut r1 = Pcg64::seed_stream(1, 0);
+        let mut r2 = Pcg64::seed_stream(1, 1);
+        assert_ne!(
+            (0..4).map(|_| r1.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| r2.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn mean_of_uniform_is_half() {
+        let mut r = Pcg64::seed(2024);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| r.next_f64()).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn bits_are_balanced() {
+        let mut r = Pcg64::seed(77);
+        let mut ones = 0u64;
+        let n = 10_000;
+        for _ in 0..n {
+            ones += r.next_u64().count_ones() as u64;
+        }
+        let frac = ones as f64 / (n as f64 * 64.0);
+        assert!((frac - 0.5).abs() < 0.01, "frac={frac}");
+    }
+}

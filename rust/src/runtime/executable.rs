@@ -1,0 +1,160 @@
+//! A compiled artifact with a typed execute API.
+
+use super::{ArtifactInfo, DType, RuntimeError};
+
+/// Host-side tensor argument.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    /// f32 data.
+    F32(&'a [f32]),
+    /// i32 data.
+    I32(&'a [i32]),
+}
+
+impl Arg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(s) => s.len(),
+            Arg::I32(s) => s.len(),
+        }
+    }
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) => DType::F32,
+            Arg::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A compiled, ready-to-run artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    info: ArtifactInfo,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    pub(super) fn new(
+        exe: xla::PjRtLoadedExecutable,
+        info: ArtifactInfo,
+        client: xla::PjRtClient,
+    ) -> Self {
+        Self { exe, info, client }
+    }
+
+    /// Artifact metadata.
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    fn check_args(&self, args: &[Arg<'_>]) -> Result<(), RuntimeError> {
+        let sig = &self.info.inputs;
+        if args.len() != sig.len() {
+            return Err(RuntimeError::Signature {
+                name: self.info.name.clone(),
+                detail: format!("expected {} inputs, got {}", sig.len(), args.len()),
+            });
+        }
+        for (i, (a, spec)) in args.iter().zip(sig).enumerate() {
+            if a.len() != spec.elems() || a.dtype() != spec.dtype {
+                return Err(RuntimeError::Signature {
+                    name: self.info.name.clone(),
+                    detail: format!(
+                        "input {i}: expected {:?} x{} elems, got {:?} x{}",
+                        spec.dtype,
+                        spec.elems(),
+                        a.dtype(),
+                        a.len()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn literal_of(&self, a: &Arg<'_>, shape: &[usize]) -> Result<xla::Literal, RuntimeError> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match a {
+            Arg::F32(s) => xla::Literal::vec1(s),
+            Arg::I32(s) => xla::Literal::vec1(s),
+        };
+        // reshape() fails on rank-0; scalars keep the vec1 shape [1] and
+        // XLA accepts it only if the artifact expects [1] — aot.py always
+        // exports scalars as (1,1), so this path is for arrays.
+        if dims.is_empty() {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Execute with host slices; returns the output tuple as literals.
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        self.check_args(args)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&self.info.inputs)
+            .map(|(a, spec)| self.literal_of(a, &spec.shape))
+            .collect::<Result<_, _>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (the fast path — persistent
+    /// inputs are uploaded once via [`Executable::upload_f32`]).
+    pub fn run_b(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let result = self.exe.execute_b(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Upload an f32 tensor to the device for reuse across executions.
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer, RuntimeError> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(
+        &self,
+        data: &[i32],
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer, RuntimeError> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Convenience: run and copy output `idx` into `out` as f32.
+    pub fn run_into(
+        &self,
+        args: &[Arg<'_>],
+        idx: usize,
+        out: &mut [f32],
+    ) -> Result<(), RuntimeError> {
+        let outputs = self.run(args)?;
+        copy_f32(&outputs[idx], out, &self.info.name)
+    }
+}
+
+/// Copy a literal's f32 payload into a slice (size-checked).
+pub(crate) fn copy_f32(
+    lit: &xla::Literal,
+    out: &mut [f32],
+    name: &str,
+) -> Result<(), RuntimeError> {
+    let n = lit.element_count();
+    if n != out.len() {
+        return Err(RuntimeError::Signature {
+            name: name.to_string(),
+            detail: format!("output has {n} elems, expected {}", out.len()),
+        });
+    }
+    lit.copy_raw_to(out)?;
+    Ok(())
+}

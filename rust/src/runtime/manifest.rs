@@ -1,0 +1,209 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use crate::config::json::Json;
+use std::collections::BTreeMap;
+
+/// Element dtype of an artifact tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype '{other}'")),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// Manifest name (e.g. `linreg_grad_s40_d100`).
+    pub name: String,
+    /// HLO text file name within the artifact dir.
+    pub file: String,
+    /// Input signature.
+    pub inputs: Vec<TensorSpec>,
+    /// Output signature (the HLO returns these as one tuple).
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (`kind`, shape parameters, …).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactInfo {
+    /// The `kind` metadata field, if present.
+    pub fn kind(&self) -> Option<&str> {
+        self.meta.get("kind").and_then(|j| j.as_str())
+    }
+
+    /// Integer metadata field.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+}
+
+/// The parsed artifact registry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    entries: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let root = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = root
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or("manifest missing integer 'version'")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let entries = root
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing 'entries' array")?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            out.push(Self::parse_entry(e)?);
+        }
+        Ok(Self { entries: out })
+    }
+
+    fn parse_entry(e: &Json) -> Result<ArtifactInfo, String> {
+        let name = e
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or("entry missing 'name'")?
+            .to_string();
+        let file = e
+            .get("file")
+            .and_then(|v| v.as_str())
+            .ok_or("entry missing 'file'")?
+            .to_string();
+        let specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+            e.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or(format!("entry '{name}' missing '{key}'"))?
+                .iter()
+                .map(|t| {
+                    let shape = t
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .ok_or("tensor missing 'shape'")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                        .collect::<Result<Vec<usize>, String>>()?;
+                    let dtype = DType::parse(
+                        t.get("dtype")
+                            .and_then(|v| v.as_str())
+                            .ok_or("tensor missing 'dtype'")?,
+                    )?;
+                    Ok(TensorSpec { shape, dtype })
+                })
+                .collect()
+        };
+        let meta = match e.get("meta") {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        let inputs = specs("inputs")?;
+        let outputs = specs("outputs")?;
+        Ok(ArtifactInfo { name, file, inputs, outputs, meta })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find the first artifact with a given `kind`.
+    pub fn find_by_kind(&self, kind: &str) -> Option<&ArtifactInfo> {
+        self.entries.iter().find(|e| e.kind() == Some(kind))
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactInfo] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1,
+ "entries": [
+  {"name": "linreg_grad_s40_d100", "file": "linreg_grad_s40_d100.hlo.txt",
+   "inputs": [
+     {"shape": [40, 100], "dtype": "float32"},
+     {"shape": [40, 1], "dtype": "float32"},
+     {"shape": [100, 1], "dtype": "float32"}],
+   "outputs": [{"shape": [100, 1], "dtype": "float32"}],
+   "meta": {"kind": "linreg_grad", "s": 40, "d": 100}},
+  {"name": "tok", "file": "tok.hlo.txt",
+   "inputs": [{"shape": [8, 65], "dtype": "int32"}],
+   "outputs": [{"shape": [], "dtype": "float32"}],
+   "meta": {"kind": "transformer_grad"}}
+ ]
+}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let g = m.find("linreg_grad_s40_d100").unwrap();
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.inputs[0].shape, vec![40, 100]);
+        assert_eq!(g.inputs[0].elems(), 4000);
+        assert_eq!(g.kind(), Some("linreg_grad"));
+        assert_eq!(g.meta_usize("s"), Some(40));
+        assert!(m.find_by_kind("transformer_grad").is_some());
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn scalar_output_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let t = m.find("tok").unwrap();
+        assert_eq!(t.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(t.outputs[0].elems(), 1);
+        assert_eq!(t.inputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(Manifest::parse(r#"{"version": 2, "entries": []}"#).is_err());
+        assert!(Manifest::parse(r#"{"entries": []}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

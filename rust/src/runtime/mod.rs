@@ -1,0 +1,126 @@
+//! PJRT runtime — loads and executes the AOT-compiled HLO artifacts.
+//!
+//! The bridge of the three-layer architecture: `python/compile/aot.py`
+//! lowers the JAX/Pallas compute graphs to HLO *text* (the interchange
+//! format that survives the jax≥0.5 ↔ xla_extension 0.5.1 proto-id
+//! mismatch); this module parses them with
+//! [`xla::HloModuleProto::from_text_file`], compiles them on the CPU PJRT
+//! client, and exposes typed executables to the coordinator. Python never
+//! runs here.
+//!
+//! Performance: inputs that don't change across iterations (the shard
+//! matrices) are uploaded once as device-resident [`xla::PjRtBuffer`]s and
+//! executions go through `execute_b`, so the per-iteration host↔device
+//! traffic is only the model vector (see EXPERIMENTS.md §Perf).
+
+mod executable;
+mod manifest;
+mod xla_backend;
+
+pub use executable::{Arg, Executable};
+pub(crate) use executable::copy_f32;
+pub use manifest::{ArtifactInfo, DType, Manifest, TensorSpec};
+pub use xla_backend::{XlaApplyUpdate, XlaBackend, XlaLossEval};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Runtime failures.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    /// PJRT / XLA failure.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    /// Manifest parsing / lookup failure.
+    #[error("manifest: {0}")]
+    Manifest(String),
+    /// Caller passed inputs that don't match the artifact signature.
+    #[error("signature mismatch for '{name}': {detail}")]
+    Signature {
+        /// Artifact name.
+        name: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// I/O failure.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Shared PJRT CPU client + artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates the
+    /// PJRT CPU client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Self>, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)
+            .map_err(RuntimeError::Manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Arc::new(Self { client, dir, manifest }))
+    }
+
+    /// Open the default artifact directory: `$ADASGD_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn open_default() -> Result<Arc<Self>, RuntimeError> {
+        let dir = std::env::var("ADASGD_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// The PJRT client.
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// The artifact registry.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Executable, RuntimeError> {
+        let info = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| {
+                RuntimeError::Manifest(format!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.manifest.names().join(", ")
+                ))
+            })?
+            .clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable::new(exe, info, self.client.clone()))
+    }
+
+    /// Find the first artifact whose meta `kind` matches.
+    pub fn load_kind(&self, kind: &str) -> Result<Executable, RuntimeError> {
+        let name = self
+            .manifest
+            .find_by_kind(kind)
+            .ok_or_else(|| {
+                RuntimeError::Manifest(format!(
+                    "no artifact of kind '{kind}' in manifest"
+                ))
+            })?
+            .name
+            .clone();
+        self.load(&name)
+    }
+}

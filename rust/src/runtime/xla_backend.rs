@@ -1,0 +1,195 @@
+//! [`GradBackend`] over the AOT linreg artifacts — the production path.
+//!
+//! Each shard's `X_i` and `y_i` are uploaded to the device once at
+//! construction; per call only the model vector `w` crosses the host
+//! boundary, and the executable runs on persistent buffers (`execute_b`).
+
+use super::{Arg, Executable, Runtime, RuntimeError};
+use crate::data::Shards;
+use crate::grad::GradBackend;
+use std::sync::Arc;
+
+/// PJRT-backed partial-gradient backend (paper hot path through the
+/// Pallas kernel artifact).
+pub struct XlaBackend {
+    grad_exe: Executable,
+    /// Per-shard device-resident inputs (X_i, y_i).
+    shard_bufs: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// Batched all-shards path: `linreg_grad_all` executable plus the
+    /// stacked `(n,s,d)` / `(n,s,1)` device-resident inputs. Present when
+    /// the artifact exists in the manifest (§Perf: one dispatch/iteration
+    /// instead of k).
+    batched: Option<(Executable, xla::PjRtBuffer, xla::PjRtBuffer)>,
+    n: usize,
+    d: usize,
+    s: usize,
+}
+
+impl XlaBackend {
+    /// Build from shards; requires the `linreg_grad_s{s}_d{d}` artifact to
+    /// exist (shapes must match — HLO is shape-static).
+    pub fn new(runtime: &Arc<Runtime>, shards: &Shards) -> Result<Self, RuntimeError> {
+        let d = shards.x[0].cols();
+        let s = shards.s;
+        let name = format!("linreg_grad_s{s}_d{d}");
+        let grad_exe = runtime.load(&name)?;
+        for (i, x) in shards.x.iter().enumerate() {
+            if x.rows() != s {
+                return Err(RuntimeError::Signature {
+                    name: name.clone(),
+                    detail: format!(
+                        "shard {i} has {} rows but artifact expects s={s} \
+                         (uneven sharding requires per-size artifacts)",
+                        x.rows()
+                    ),
+                });
+            }
+        }
+        let mut shard_bufs = Vec::with_capacity(shards.n());
+        for i in 0..shards.n() {
+            let xb = grad_exe.upload_f32(shards.x[i].as_slice(), &[s, d])?;
+            let yb = grad_exe.upload_f32(&shards.y[i], &[s, 1])?;
+            shard_bufs.push((xb, yb));
+        }
+        let n = shards.n();
+        // Optional batched artifact: stack shards and pin on device.
+        let batched = match runtime
+            .load(&format!("linreg_grad_all_n{n}_s{s}_d{d}"))
+        {
+            Err(_) => None,
+            Ok(exe) => {
+                let mut x_all = Vec::with_capacity(n * s * d);
+                let mut y_all = Vec::with_capacity(n * s);
+                for i in 0..n {
+                    x_all.extend_from_slice(shards.x[i].as_slice());
+                    y_all.extend_from_slice(&shards.y[i]);
+                }
+                let xb = exe.upload_f32(&x_all, &[n, s, d])?;
+                let yb = exe.upload_f32(&y_all, &[n, s, 1])?;
+                Some((exe, xb, yb))
+            }
+        };
+        Ok(Self { grad_exe, shard_bufs, batched, n, d, s })
+    }
+
+    /// Rows per shard.
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Fallible partial gradient (the trait wrapper panics on runtime
+    /// errors; prefer this in library code that wants to handle them).
+    pub fn try_partial_grad(
+        &mut self,
+        shard: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), RuntimeError> {
+        let (xb, yb) = &self.shard_bufs[shard];
+        let wb = self.grad_exe.upload_f32(w, &[self.d, 1])?;
+        let outputs = self.grad_exe.run_b(&[xb, yb, &wb])?;
+        super::executable::copy_f32(&outputs[0], out, "linreg_grad")
+    }
+}
+
+impl GradBackend for XlaBackend {
+    fn partial_grad(&mut self, shard: usize, w: &[f32], out: &mut [f32]) {
+        self.try_partial_grad(shard, w, out)
+            .expect("PJRT partial-gradient execution failed");
+    }
+
+    fn supports_all_grads(&self) -> bool {
+        self.batched.is_some()
+    }
+
+    fn all_grads(&mut self, w: &[f32], out: &mut [f32]) -> bool {
+        let Some((exe, xb, yb)) = &self.batched else { return false };
+        debug_assert_eq!(out.len(), self.n * self.d);
+        let wb = exe
+            .upload_f32(w, &[self.d, 1])
+            .expect("PJRT upload failed");
+        let outputs =
+            exe.run_b(&[xb, yb, &wb]).expect("PJRT batched grad failed");
+        super::executable::copy_f32(&outputs[0], out, "linreg_grad_all")
+            .expect("PJRT batched grad output");
+        true
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shard_bufs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+/// Loss evaluator over the full dataset via the `linreg_loss` artifact.
+pub struct XlaLossEval {
+    exe: Executable,
+    x_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+    d: usize,
+}
+
+impl XlaLossEval {
+    /// Load `linreg_loss_m{m}_d{d}` and pin the dataset on device.
+    pub fn new(
+        runtime: &Arc<Runtime>,
+        x: &crate::linalg::Matrix,
+        y: &[f32],
+    ) -> Result<Self, RuntimeError> {
+        let (m, d) = (x.rows(), x.cols());
+        let exe = runtime.load(&format!("linreg_loss_m{m}_d{d}"))?;
+        let x_buf = exe.upload_f32(x.as_slice(), &[m, d])?;
+        let y_buf = exe.upload_f32(y, &[m, 1])?;
+        Ok(Self { exe, x_buf, y_buf, d })
+    }
+
+    /// `F(w)`.
+    pub fn loss(&self, w: &[f32]) -> Result<f64, RuntimeError> {
+        let wb = self.exe.upload_f32(w, &[self.d, 1])?;
+        let outputs = self.exe.run_b(&[&self.x_buf, &self.y_buf, &wb])?;
+        let mut out = [0.0f32];
+        super::executable::copy_f32(&outputs[0], &mut out, "linreg_loss")?;
+        Ok(out[0] as f64)
+    }
+}
+
+/// Fused fastest-k apply via the `apply_update` artifact: the masked
+/// gradient stack lives host-side; rows `k..n` must be zeroed by the
+/// caller; `step_scale = η/k`.
+pub struct XlaApplyUpdate {
+    exe: Executable,
+    n: usize,
+    d: usize,
+}
+
+impl XlaApplyUpdate {
+    /// Load `apply_update_n{n}_d{d}`.
+    pub fn new(runtime: &Arc<Runtime>, n: usize, d: usize) -> Result<Self, RuntimeError> {
+        let exe = runtime.load(&format!("apply_update_n{n}_d{d}"))?;
+        Ok(Self { exe, n, d })
+    }
+
+    /// `w ← w − step_scale · Σ_rows(G)` (in place on the host vector).
+    pub fn apply(
+        &self,
+        w: &mut [f32],
+        g_stack: &[f32],
+        step_scale: f32,
+    ) -> Result<(), RuntimeError> {
+        debug_assert_eq!(g_stack.len(), self.n * self.d);
+        let scale = [step_scale];
+        let outputs = self.exe.run(&[
+            Arg::F32(w),
+            Arg::F32(g_stack),
+            Arg::F32(&scale),
+        ])?;
+        super::executable::copy_f32(&outputs[0], w, "apply_update")
+    }
+}

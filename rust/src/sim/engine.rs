@@ -1,0 +1,140 @@
+//! Binary-heap event queue with a stable tie-break.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled event carrying a payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event<T> {
+    /// Virtual firing time.
+    pub time: f64,
+    /// Monotone sequence number: FIFO among equal times.
+    seq: u64,
+    /// Payload.
+    pub payload: T,
+}
+
+impl<T> Eq for Event<T> where T: PartialEq {}
+
+impl<T: PartialEq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: PartialEq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap behaviour on BinaryHeap (a max-heap).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of timed events over a virtual clock.
+#[derive(Debug)]
+pub struct EventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<T: PartialEq> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: PartialEq> EventQueue<T> {
+    /// Empty queue at time 0.
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at` (must not be in the past).
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        assert!(at >= self.now, "cannot schedule into the past");
+        assert!(at.is_finite(), "event time must be finite");
+        self.heap.push(Event { time: at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after a relative `delay >= 0`.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        assert!(delay >= 0.0, "delay must be non-negative");
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let ev = self.heap.pop()?;
+        self.now = ev.time;
+        Some(ev)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(1.0, 2);
+        q.schedule_at(1.0, 3);
+        assert_eq!(q.pop().unwrap().payload, 1);
+        assert_eq!(q.pop().unwrap().payload, 2);
+        assert_eq!(q.pop().unwrap().payload, 3);
+    }
+
+    #[test]
+    fn relative_scheduling_tracks_now() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, "x");
+        q.pop();
+        q.schedule_in(2.0, "y");
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, ());
+        q.pop();
+        q.schedule_at(1.0, ());
+    }
+}

@@ -1,0 +1,11 @@
+//! Discrete-event simulation engine.
+//!
+//! A tiny but general event queue over a virtual clock: the asynchronous
+//! SGD baseline and the ablation harnesses schedule worker-completion
+//! events on it. (The synchronous fastest-k loop doesn't need a queue —
+//! its iteration time is a single order statistic — so it advances the
+//! clock directly.)
+
+mod engine;
+
+pub use engine::{Event, EventQueue};

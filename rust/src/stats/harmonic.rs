@@ -1,0 +1,53 @@
+//! Harmonic numbers `H_n = Σ 1/i` and generalized `H_n^(2) = Σ 1/i²`.
+//!
+//! For iid `exp(λ)` response times the k-th order statistic has
+//! `E[X_(k)] = (H_n − H_{n−k})/λ` and
+//! `Var[X_(k)] = (H_n^(2) − H_{n−k}^(2))/λ²` (Rényi representation) —
+//! exactly the quantities in the paper's Example 1 and Lemma 1.
+
+/// `H_n = Σ_{i=1..n} 1/i`, with `H_0 = 0`.
+pub fn harmonic(n: usize) -> f64 {
+    // Direct summation is exact enough for any n we see (n ≤ 10⁶);
+    // summed smallest-first for accuracy.
+    (1..=n).rev().map(|i| 1.0 / i as f64).sum()
+}
+
+/// `H_n^(2) = Σ_{i=1..n} 1/i²`, with `H_0^(2) = 0`.
+pub fn harmonic_sq(n: usize) -> f64 {
+    (1..=n).rev().map(|i| 1.0 / (i as f64 * i as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values() {
+        assert_eq!(harmonic(0), 0.0);
+        assert_eq!(harmonic(1), 1.0);
+        assert!((harmonic(2) - 1.5).abs() < 1e-12);
+        assert!((harmonic(5) - 137.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymptotics() {
+        // H_n ~ ln n + gamma
+        let n = 1_000_000;
+        let gamma = 0.5772156649015329;
+        assert!((harmonic(n) - ((n as f64).ln() + gamma)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn harmonic_sq_converges_to_pi2_over_6() {
+        let want = std::f64::consts::PI * std::f64::consts::PI / 6.0;
+        assert!((harmonic_sq(1_000_000) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn monotone() {
+        for n in 1..100 {
+            assert!(harmonic(n) > harmonic(n - 1));
+            assert!(harmonic_sq(n) > harmonic_sq(n - 1));
+        }
+    }
+}

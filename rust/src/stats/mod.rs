@@ -1,0 +1,19 @@
+//! Statistics substrate: harmonic numbers, order statistics, running
+//! moments, quantiles.
+//!
+//! The paper's analysis lives on the k-th order statistic `X_(k)` of the
+//! n worker response times: the per-iteration wall-clock of fastest-k SGD.
+//! [`order_stats`] provides `μ_k = E[X_(k)]` and `σ_k² = Var[X_(k)]`
+//! analytically for the exponential model (via harmonic sums — the form
+//! used in the paper's Example 1) and by Monte-Carlo for arbitrary
+//! [`DelayModel`](crate::straggler::DelayModel)s.
+
+mod harmonic;
+mod order_stats;
+mod running;
+
+pub use harmonic::{harmonic, harmonic_sq};
+pub use order_stats::{
+    exponential_order_mean, exponential_order_var, OrderStats,
+};
+pub use running::{quantile, RunningStats};

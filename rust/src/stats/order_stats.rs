@@ -1,0 +1,154 @@
+//! Order statistics of worker response times.
+//!
+//! `X_(k)` — the k-th smallest of n iid response times — is THE quantity
+//! the paper's runtime analysis is built on: one fastest-k iteration takes
+//! exactly `X_(k)` wall-clock. We provide:
+//!
+//! * exact formulas for the exponential model (Rényi representation),
+//! * a Monte-Carlo estimator for arbitrary delay models (used by the
+//!   bound-optimal policy when delays are Pareto/Weibull/bimodal),
+//! * an [`OrderStats`] table caching `(μ_k, σ_k²)` for k = 1..=n.
+
+use crate::rng::Pcg64;
+use crate::stats::{harmonic, harmonic_sq};
+use crate::straggler::DelayModel;
+
+/// `E[X_(k)]` for n iid `exp(lambda)` variables: `(H_n − H_{n−k})/λ`.
+pub fn exponential_order_mean(n: usize, k: usize, lambda: f64) -> f64 {
+    assert!(k >= 1 && k <= n, "k must be in 1..=n (got k={k}, n={n})");
+    (harmonic(n) - harmonic(n - k)) / lambda
+}
+
+/// `Var[X_(k)]` for n iid `exp(lambda)`: `(H_n^(2) − H_{n−k}^(2))/λ²`.
+pub fn exponential_order_var(n: usize, k: usize, lambda: f64) -> f64 {
+    assert!(k >= 1 && k <= n, "k must be in 1..=n (got k={k}, n={n})");
+    (harmonic_sq(n) - harmonic_sq(n - k)) / (lambda * lambda)
+}
+
+/// Cached `(μ_k, σ_k²)` for every k of a given delay model.
+#[derive(Debug, Clone)]
+pub struct OrderStats {
+    n: usize,
+    mean: Vec<f64>, // mean[k-1] = μ_k
+    var: Vec<f64>,  // var[k-1]  = σ_k²
+}
+
+impl OrderStats {
+    /// Exact table for the exponential model.
+    pub fn exponential(n: usize, lambda: f64) -> Self {
+        let mean = (1..=n)
+            .map(|k| exponential_order_mean(n, k, lambda))
+            .collect();
+        let var = (1..=n)
+            .map(|k| exponential_order_var(n, k, lambda))
+            .collect();
+        Self { n, mean, var }
+    }
+
+    /// Monte-Carlo table for an arbitrary delay model. `rounds` full draws
+    /// of n response times; all k estimated from the same sorted samples.
+    pub fn monte_carlo<D: DelayModel + ?Sized>(
+        model: &D,
+        n: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::seed_stream(seed, 0x0515);
+        let mut sum = vec![0.0f64; n];
+        let mut sumsq = vec![0.0f64; n];
+        let mut draw = vec![0.0f64; n];
+        for round in 0..rounds {
+            for (i, d) in draw.iter_mut().enumerate() {
+                *d = model.sample(round as u64, i, &mut rng);
+            }
+            draw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in 0..n {
+                sum[k] += draw[k];
+                sumsq[k] += draw[k] * draw[k];
+            }
+        }
+        let r = rounds as f64;
+        let mean: Vec<f64> = sum.iter().map(|s| s / r).collect();
+        let var = sumsq
+            .iter()
+            .zip(&mean)
+            .map(|(sq, m)| (sq / r - m * m).max(0.0))
+            .collect();
+        Self { n, mean, var }
+    }
+
+    /// Number of workers n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `μ_k = E[X_(k)]`, k in 1..=n.
+    pub fn mean(&self, k: usize) -> f64 {
+        assert!(k >= 1 && k <= self.n, "k out of range");
+        self.mean[k - 1]
+    }
+
+    /// `σ_k² = Var[X_(k)]`, k in 1..=n.
+    pub fn var(&self, k: usize) -> f64 {
+        assert!(k >= 1 && k <= self.n, "k out of range");
+        self.var[k - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::ExponentialDelays;
+
+    #[test]
+    fn example1_harmonic_means() {
+        // Paper Example 1: μ_k = H_n − H_{n−k} (λ = 1), n = 5.
+        let n = 5;
+        let h5 = harmonic(5);
+        for k in 1..=n {
+            let want = h5 - harmonic(n - k);
+            assert!((exponential_order_mean(n, k, 1.0) - want).abs() < 1e-12);
+        }
+        // Min of 5 exp(1) has mean 1/5.
+        assert!((exponential_order_mean(5, 1, 1.0) - 0.2).abs() < 1e-12);
+        // Max has mean H_5.
+        assert!((exponential_order_mean(5, 5, 1.0) - h5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_is_increasing_in_k() {
+        let table = OrderStats::exponential(50, 1.0);
+        for k in 2..=50 {
+            assert!(table.mean(k) > table.mean(k - 1));
+        }
+    }
+
+    #[test]
+    fn rate_scales_means() {
+        // exp(λ): μ_k(λ) = μ_k(1)/λ.
+        for k in [1, 3, 5] {
+            let a = exponential_order_mean(5, k, 1.0);
+            let b = exponential_order_mean(5, k, 5.0);
+            assert!((a / 5.0 - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn monte_carlo_matches_exponential_exact() {
+        let model = ExponentialDelays::new(1.0);
+        let mc = OrderStats::monte_carlo(&model, 10, 60_000, 42);
+        let exact = OrderStats::exponential(10, 1.0);
+        for k in 1..=10 {
+            let rel = (mc.mean(k) - exact.mean(k)).abs() / exact.mean(k);
+            assert!(rel < 0.02, "k={k}: {} vs {}", mc.mean(k), exact.mean(k));
+            let relv = (mc.var(k) - exact.var(k)).abs() / exact.var(k);
+            assert!(relv < 0.1, "k={k} var: {} vs {}", mc.var(k), exact.var(k));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be in 1..=n")]
+    fn k_zero_rejected() {
+        exponential_order_mean(5, 0, 1.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Markov-modulated (time-correlated) delay model.
+//!
+//! Real clusters straggle in *bursts* — a worker that was slow at
+//! iteration j is likely still slow at j+1 (background jobs, thermal
+//! throttling). Each worker carries a 2-state Markov chain
+//! (fast ⇄ slow); its delay is exp(λ) scaled by `slow_factor` in the slow
+//! state. Violates the paper's iid-across-iterations assumption — used by
+//! ablations to probe how the Pflug policy degrades under correlation.
+//!
+//! Chain state is derived deterministically from (worker, iteration) by
+//! replaying the chain forward, so the model stays stateless/Sync like
+//! every other [`DelayModel`].
+
+use super::{DelayModel, DynRng, RngDyn};
+use crate::rng::{Distribution, Exponential, Pcg64, Rng};
+
+/// Two-state Markov-modulated exponential delays.
+#[derive(Debug, Clone)]
+pub struct MarkovDelays {
+    base: Exponential,
+    /// P(fast → slow) per iteration.
+    pub p_fs: f64,
+    /// P(slow → fast) per iteration.
+    pub p_sf: f64,
+    /// Multiplier while slow.
+    pub slow_factor: f64,
+    /// Chain seed (separate from the jitter stream the master provides).
+    pub seed: u64,
+}
+
+impl MarkovDelays {
+    /// New model; burst length ~ 1/p_sf iterations.
+    pub fn new(lambda: f64, p_fs: f64, p_sf: f64, slow_factor: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p_fs) && (0.0..=1.0).contains(&p_sf));
+        assert!(slow_factor >= 1.0);
+        Self { base: Exponential::new(lambda), p_fs, p_sf, slow_factor, seed }
+    }
+
+    /// Whether `worker` is in the slow state at `iteration` (stationary
+    /// start, chain replayed deterministically).
+    pub fn is_slow(&self, iteration: u64, worker: usize) -> bool {
+        let mut chain = Pcg64::seed_stream(self.seed, worker as u64);
+        // Stationary initial state: P(slow) = p_fs / (p_fs + p_sf).
+        let p_slow0 = if self.p_fs + self.p_sf > 0.0 {
+            self.p_fs / (self.p_fs + self.p_sf)
+        } else {
+            0.0
+        };
+        let mut slow = chain.next_f64() < p_slow0;
+        for _ in 0..iteration {
+            let u = chain.next_f64();
+            slow = if slow { u >= self.p_sf } else { u < self.p_fs };
+        }
+        slow
+    }
+}
+
+impl DelayModel for MarkovDelays {
+    fn sample(&self, iteration: u64, worker: usize, rng: &mut dyn RngDyn) -> f64 {
+        let x = self.base.sample(&mut DynRng(rng));
+        if self.is_slow(iteration, worker) {
+            x * self.slow_factor
+        } else {
+            x
+        }
+    }
+    fn name(&self) -> String {
+        format!(
+            "markov(p_fs={}, p_sf={}, factor={})",
+            self.p_fs, self.p_sf, self.slow_factor
+        )
+    }
+    fn is_iid(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn state_is_deterministic() {
+        let m = MarkovDelays::new(1.0, 0.1, 0.3, 10.0, 42);
+        for it in [0u64, 5, 100] {
+            for w in 0..4 {
+                assert_eq!(m.is_slow(it, w), m.is_slow(it, w));
+            }
+        }
+    }
+
+    #[test]
+    fn bursts_are_correlated() {
+        // P(slow at t+1 | slow at t) = 1 − p_sf = 0.9 ≫ stationary P(slow).
+        let m = MarkovDelays::new(1.0, 0.05, 0.1, 10.0, 7);
+        let mut joint = 0usize;
+        let mut slow_t = 0usize;
+        for w in 0..50 {
+            for it in 0..200u64 {
+                if m.is_slow(it, w) {
+                    slow_t += 1;
+                    if m.is_slow(it + 1, w) {
+                        joint += 1;
+                    }
+                }
+            }
+        }
+        assert!(slow_t > 100, "need slow samples, got {slow_t}");
+        let cond = joint as f64 / slow_t as f64;
+        assert!(cond > 0.8, "P(slow|slow) = {cond} should be ~0.9");
+    }
+
+    #[test]
+    fn stationary_fraction_matches() {
+        let m = MarkovDelays::new(1.0, 0.1, 0.3, 5.0, 9);
+        let mut slow = 0usize;
+        let total = 50 * 400;
+        for w in 0..50 {
+            for it in 0..400u64 {
+                if m.is_slow(it, w) {
+                    slow += 1;
+                }
+            }
+        }
+        let frac = slow as f64 / total as f64;
+        let want = 0.1 / 0.4;
+        assert!((frac - want).abs() < 0.05, "frac={frac} want={want}");
+    }
+
+    #[test]
+    fn slow_state_scales_delay() {
+        let m = MarkovDelays::new(1.0, 1.0, 0.0, 10.0, 1); // always slow after step 0
+        let mut rng = Pcg64::seed(3);
+        let mut mean = 0.0;
+        let n = 20_000;
+        for i in 0..n {
+            mean += m.sample(10, 0, &mut rng);
+            let _ = i;
+        }
+        mean /= n as f64;
+        assert!(mean > 5.0, "slow-state mean should be ~10, got {mean}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Straggler (worker response-time) models.
+//!
+//! The paper assumes response times `X_1..X_n` iid across workers and
+//! iterations, exponential in §V. We implement that model exactly, plus the
+//! heavier-tailed and non-iid variants used in the ablation benches — the
+//! substitution for "a physical cluster with naturally random delays"
+//! (DESIGN.md §3): all of the paper's quantities depend on delays only
+//! through their order statistics, which each model reproduces by
+//! construction.
+//!
+//! A model is queried once per (iteration, worker) pair and must be
+//! deterministic given the rng stream — the simulator and the threaded
+//! executor both consume the same draws, so results agree bit-for-bit
+//! across execution modes.
+
+mod markov;
+mod models;
+mod trace;
+
+pub use models::{
+    BimodalDelays, ExponentialDelays, ParetoDelays, ShiftedExponentialDelays,
+    WeibullDelays,
+};
+pub use markov::MarkovDelays;
+pub use trace::TraceDelays;
+
+use crate::rng::Rng;
+
+/// A worker response-time model.
+pub trait DelayModel: Send + Sync {
+    /// Response time of `worker` at `iteration` (> 0, finite).
+    fn sample(&self, iteration: u64, worker: usize, rng: &mut dyn RngDyn) -> f64;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// True if draws are iid across workers and iterations (the paper's
+    /// assumption; policies may exploit it).
+    fn is_iid(&self) -> bool {
+        true
+    }
+}
+
+/// Object-safe shim over [`Rng`] so `DelayModel` can be a trait object.
+pub trait RngDyn {
+    /// Next 64 random bits.
+    fn next_u64_dyn(&mut self) -> u64;
+}
+
+impl<R: Rng> RngDyn for R {
+    fn next_u64_dyn(&mut self) -> u64 {
+        self.next_u64()
+    }
+}
+
+/// Adapter giving `&mut dyn RngDyn` the full [`Rng`] API.
+pub struct DynRng<'a>(pub &'a mut dyn RngDyn);
+
+impl Rng for DynRng<'_> {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.0.next_u64_dyn()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn dyn_rng_round_trip() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(1);
+        let via_dyn = {
+            let d: &mut dyn RngDyn = &mut a;
+            DynRng(d).next_u64()
+        };
+        assert_eq!(via_dyn, b.next_u64());
+    }
+
+    #[test]
+    fn models_are_object_safe() {
+        let models: Vec<Box<dyn DelayModel>> = vec![
+            Box::new(ExponentialDelays::new(1.0)),
+            Box::new(ParetoDelays::new(1.0, 2.5)),
+        ];
+        let mut rng = Pcg64::seed(2);
+        for m in &models {
+            assert!(m.sample(0, 0, &mut rng) > 0.0);
+            assert!(!m.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Concrete delay models.
+
+use super::{DelayModel, DynRng, RngDyn};
+use crate::rng::{Bernoulli, Distribution, Exponential, Pareto, Weibull};
+
+/// iid `exp(λ)` response times — the paper's §V model (λ = 1 in Figs. 2–3).
+#[derive(Debug, Clone)]
+pub struct ExponentialDelays {
+    dist: Exponential,
+}
+
+impl ExponentialDelays {
+    pub fn new(lambda: f64) -> Self {
+        Self { dist: Exponential::new(lambda) }
+    }
+
+    /// The rate λ.
+    pub fn lambda(&self) -> f64 {
+        self.dist.lambda
+    }
+}
+
+impl DelayModel for ExponentialDelays {
+    fn sample(&self, _it: u64, _w: usize, rng: &mut dyn RngDyn) -> f64 {
+        self.dist.sample(&mut DynRng(rng))
+    }
+    fn name(&self) -> String {
+        format!("exp(lambda={})", self.dist.lambda)
+    }
+}
+
+/// Constant setup cost plus exponential tail: `Δ + exp(λ)`. The classic
+/// model for "every worker pays a fixed compute time, straggling is in the
+/// tail" (Lee et al. 2018).
+#[derive(Debug, Clone)]
+pub struct ShiftedExponentialDelays {
+    pub shift: f64,
+    dist: Exponential,
+}
+
+impl ShiftedExponentialDelays {
+    pub fn new(shift: f64, lambda: f64) -> Self {
+        assert!(shift >= 0.0, "shift must be non-negative");
+        Self { shift, dist: Exponential::new(lambda) }
+    }
+}
+
+impl DelayModel for ShiftedExponentialDelays {
+    fn sample(&self, _it: u64, _w: usize, rng: &mut dyn RngDyn) -> f64 {
+        self.shift + self.dist.sample(&mut DynRng(rng))
+    }
+    fn name(&self) -> String {
+        format!("shifted-exp(shift={}, lambda={})", self.shift, self.dist.lambda)
+    }
+}
+
+/// Heavy-tailed Pareto response times — stress test for the adaptive policy
+/// when `E[X_(n)]` is dominated by rare huge stalls.
+#[derive(Debug, Clone)]
+pub struct ParetoDelays {
+    dist: Pareto,
+}
+
+impl ParetoDelays {
+    pub fn new(xm: f64, alpha: f64) -> Self {
+        Self { dist: Pareto::new(xm, alpha) }
+    }
+}
+
+impl DelayModel for ParetoDelays {
+    fn sample(&self, _it: u64, _w: usize, rng: &mut dyn RngDyn) -> f64 {
+        self.dist.sample(&mut DynRng(rng))
+    }
+    fn name(&self) -> String {
+        format!("pareto(xm={}, alpha={})", self.dist.xm, self.dist.alpha)
+    }
+}
+
+/// Weibull response times (shape < 1: heavier than exponential).
+#[derive(Debug, Clone)]
+pub struct WeibullDelays {
+    dist: Weibull,
+}
+
+impl WeibullDelays {
+    pub fn new(lambda: f64, k: f64) -> Self {
+        Self { dist: Weibull::new(lambda, k) }
+    }
+}
+
+impl DelayModel for WeibullDelays {
+    fn sample(&self, _it: u64, _w: usize, rng: &mut dyn RngDyn) -> f64 {
+        self.dist.sample(&mut DynRng(rng))
+    }
+    fn name(&self) -> String {
+        format!("weibull(lambda={}, k={})", self.dist.lambda, self.dist.k)
+    }
+}
+
+/// Non-iid extension: a fixed subset of workers is *persistently* slow
+/// (their draws are scaled by `slow_factor`), modelling degraded hosts
+/// rather than transient noise. With `p_slow` per-iteration mode mixing on
+/// top, this reproduces the bimodal delay profiles of real clusters
+/// ("tail at scale", Dean & Barroso 2013).
+#[derive(Debug, Clone)]
+pub struct BimodalDelays {
+    base: Exponential,
+    /// Workers with index < `n_slow` are persistently slow.
+    pub n_slow: usize,
+    /// Multiplier applied to slow workers' draws.
+    pub slow_factor: f64,
+    /// Probability that a *fast* worker transiently straggles anyway.
+    transient: Bernoulli,
+}
+
+impl BimodalDelays {
+    pub fn new(lambda: f64, n_slow: usize, slow_factor: f64, p_transient: f64) -> Self {
+        assert!(slow_factor >= 1.0, "slow_factor must be >= 1");
+        Self {
+            base: Exponential::new(lambda),
+            n_slow,
+            slow_factor,
+            transient: Bernoulli::new(p_transient),
+        }
+    }
+}
+
+impl DelayModel for BimodalDelays {
+    fn sample(&self, _it: u64, worker: usize, rng: &mut dyn RngDyn) -> f64 {
+        let mut r = DynRng(rng);
+        let x = self.base.sample(&mut r);
+        if worker < self.n_slow || self.transient.flip(&mut r) {
+            x * self.slow_factor
+        } else {
+            x
+        }
+    }
+    fn name(&self) -> String {
+        format!(
+            "bimodal(n_slow={}, factor={}, p_transient={})",
+            self.n_slow, self.slow_factor, self.transient.p
+        )
+    }
+    fn is_iid(&self) -> bool {
+        self.n_slow == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::stats::RunningStats;
+
+    fn mean_of<M: DelayModel>(m: &M, worker: usize, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::seed(seed);
+        let mut rs = RunningStats::new();
+        for it in 0..n {
+            rs.push(m.sample(it as u64, worker, &mut rng));
+        }
+        rs.mean()
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let m = ExponentialDelays::new(2.0);
+        assert!((mean_of(&m, 0, 100_000, 1) - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn shifted_exponential_floor() {
+        let m = ShiftedExponentialDelays::new(1.5, 1.0);
+        let mut rng = Pcg64::seed(2);
+        for it in 0..10_000 {
+            assert!(m.sample(it, 0, &mut rng) >= 1.5);
+        }
+        assert!((mean_of(&m, 0, 100_000, 3) - 2.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn bimodal_slow_workers_are_slower() {
+        let m = BimodalDelays::new(1.0, 2, 10.0, 0.0);
+        let slow = mean_of(&m, 0, 50_000, 4);
+        let fast = mean_of(&m, 5, 50_000, 5);
+        assert!(slow > 5.0 * fast, "slow={slow} fast={fast}");
+        assert!(!m.is_iid());
+    }
+
+    #[test]
+    fn pareto_min_is_xm() {
+        let m = ParetoDelays::new(2.0, 3.0);
+        let mut rng = Pcg64::seed(6);
+        for it in 0..10_000 {
+            assert!(m.sample(it, 0, &mut rng) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn weibull_positive() {
+        let m = WeibullDelays::new(1.0, 0.7);
+        let mut rng = Pcg64::seed(7);
+        for it in 0..10_000 {
+            assert!(m.sample(it, 0, &mut rng) > 0.0);
+        }
+    }
+}

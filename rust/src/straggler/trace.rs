@@ -1,0 +1,139 @@
+//! Empirical trace replay.
+//!
+//! Substitution for production delay traces (which we don't have): a
+//! `TraceDelays` replays a recorded `(iteration x worker)` table of
+//! response times, cycling if the run outlives the trace. Traces can be
+//! loaded from a simple CSV (one iteration per line) or synthesized and
+//! saved by the workload generator, so benches are reproducible inputs
+//! rather than live draws.
+
+use super::{DelayModel, RngDyn};
+
+/// Replay of a fixed delay table.
+#[derive(Debug, Clone)]
+pub struct TraceDelays {
+    /// `rows x n_workers` response times.
+    table: Vec<Vec<f64>>,
+    name: String,
+}
+
+impl TraceDelays {
+    /// Build from an in-memory table (each row = one iteration).
+    pub fn new(table: Vec<Vec<f64>>) -> Self {
+        assert!(!table.is_empty(), "trace must have at least one row");
+        let w = table[0].len();
+        assert!(w > 0, "trace rows must be non-empty");
+        assert!(
+            table.iter().all(|r| r.len() == w),
+            "all trace rows must have the same worker count"
+        );
+        assert!(
+            table.iter().flatten().all(|&x| x.is_finite() && x > 0.0),
+            "trace delays must be positive and finite"
+        );
+        Self { table, name: "trace(memory)".into() }
+    }
+
+    /// Parse a CSV string: one iteration per line, comma-separated delays.
+    pub fn from_csv(text: &str) -> Result<Self, String> {
+        let mut table = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let row: Result<Vec<f64>, _> = line
+                .split(',')
+                .map(|tok| tok.trim().parse::<f64>())
+                .collect();
+            let row =
+                row.map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+            table.push(row);
+        }
+        if table.is_empty() {
+            return Err("trace csv has no data rows".into());
+        }
+        let w = table[0].len();
+        if !table.iter().all(|r| r.len() == w) {
+            return Err("trace csv rows have inconsistent widths".into());
+        }
+        let mut t = Self::new(table);
+        t.name = "trace(csv)".into();
+        Ok(t)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let mut t = Self::from_csv(&text)?;
+        t.name = format!("trace({})", path.display());
+        Ok(t)
+    }
+
+    /// Number of workers per row.
+    pub fn workers(&self) -> usize {
+        self.table[0].len()
+    }
+
+    /// Number of recorded iterations.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// True if empty (never — construction forbids it; for clippy symmetry).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl DelayModel for TraceDelays {
+    fn sample(&self, iteration: u64, worker: usize, _rng: &mut dyn RngDyn) -> f64 {
+        let row = &self.table[(iteration as usize) % self.table.len()];
+        row[worker % row.len()]
+    }
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+    fn is_iid(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn replay_and_cycle() {
+        let t = TraceDelays::new(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut rng = Pcg64::seed(0);
+        assert_eq!(t.sample(0, 0, &mut rng), 1.0);
+        assert_eq!(t.sample(0, 1, &mut rng), 2.0);
+        assert_eq!(t.sample(1, 1, &mut rng), 4.0);
+        assert_eq!(t.sample(2, 0, &mut rng), 1.0); // cycles
+        assert_eq!(t.workers(), 2);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let t = TraceDelays::from_csv("# comment\n1.0, 2.5\n0.5, 3.5\n").unwrap();
+        let mut rng = Pcg64::seed(0);
+        assert_eq!(t.sample(1, 1, &mut rng), 3.5);
+    }
+
+    #[test]
+    fn csv_errors() {
+        assert!(TraceDelays::from_csv("").is_err());
+        assert!(TraceDelays::from_csv("1.0,x").is_err());
+        assert!(TraceDelays::from_csv("1.0\n1.0,2.0").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn rejects_nonpositive() {
+        TraceDelays::new(vec![vec![0.0]]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Lemma 1 — error of fastest-k SGD vs *wall-clock time*.
+//!
+//! With high probability for large t (Eq. 3 of the paper, constant error
+//! term ε dropped exactly as in the paper's analysis):
+//!
+//! ```text
+//! E[F(w_t) − F*]  ≤  ηLσ²/(2cks)  +  (1 − ηc)^{t/μ_k} · (E₀ − ηLσ²/(2cks))
+//! ```
+//!
+//! where `μ_k = E[X_(k)]` converts iterations to time (renewal reward),
+//! and the first term is the *error floor* of waiting for only k workers.
+
+use crate::stats::OrderStats;
+
+/// System parameters of Proposition 1 / Lemma 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundParams {
+    /// Step size η (must satisfy ηc < 1).
+    pub eta: f64,
+    /// Lipschitz constant L of ∇F.
+    pub l: f64,
+    /// Strong-convexity constant c.
+    pub c: f64,
+    /// Gradient-variance bound σ².
+    pub sigma2: f64,
+    /// Rows per shard s = m/n.
+    pub s: usize,
+    /// Initial sub-optimality F(w₀) − F*.
+    pub f0_err: f64,
+}
+
+impl BoundParams {
+    /// Paper Example 1 parameter set (n = 5 companion: see `OrderStats`).
+    pub fn example1() -> Self {
+        Self { eta: 0.001, l: 2.0, c: 1.0, sigma2: 10.0, s: 10, f0_err: 100.0 }
+    }
+
+    /// Validate the standing assumptions (ηc < 1, positivity).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.eta <= 0.0 || self.l <= 0.0 || self.c <= 0.0 {
+            return Err("eta, L, c must be positive".into());
+        }
+        if self.eta * self.c >= 1.0 {
+            return Err(format!(
+                "need eta*c < 1 (got {})",
+                self.eta * self.c
+            ));
+        }
+        if self.sigma2 < 0.0 || self.f0_err < 0.0 {
+            return Err("sigma2 and f0_err must be non-negative".into());
+        }
+        if self.s == 0 {
+            return Err("s must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// The Lemma-1 bound, specialized to a delay model via its order-statistic
+/// table.
+#[derive(Debug, Clone)]
+pub struct ErrorBound {
+    params: BoundParams,
+    order: OrderStats,
+}
+
+impl ErrorBound {
+    /// Couple bound parameters with the delay model's order statistics.
+    pub fn new(params: BoundParams, order: OrderStats) -> Self {
+        params.validate().expect("invalid bound parameters");
+        Self { params, order }
+    }
+
+    /// Borrow the parameters.
+    pub fn params(&self) -> &BoundParams {
+        &self.params
+    }
+
+    /// Borrow the order-statistic table.
+    pub fn order(&self) -> &OrderStats {
+        &self.order
+    }
+
+    /// The stationary error floor `ηLσ²/(2cks)` for a given k.
+    pub fn floor(&self, k: usize) -> f64 {
+        let p = &self.params;
+        p.eta * p.l * p.sigma2 / (2.0 * p.c * k as f64 * p.s as f64)
+    }
+
+    /// `μ_k = E[X_(k)]`.
+    pub fn mu(&self, k: usize) -> f64 {
+        self.order.mean(k)
+    }
+
+    /// Evaluate the bound at time `t ≥ t0`, running with k, having started
+    /// at error `e0` at time `t0` (Eq. 3 with the renewal clock shifted).
+    pub fn eval_from(&self, k: usize, t: f64, t0: f64, e0: f64) -> f64 {
+        assert!(t >= t0, "t must be >= t0");
+        let rho = 1.0 - self.params.eta * self.params.c;
+        let fl = self.floor(k);
+        fl + rho.powf((t - t0) / self.mu(k)) * (e0 - fl)
+    }
+
+    /// Evaluate the bound from the start (t0 = 0, e0 = F(w₀) − F*).
+    pub fn eval(&self, k: usize, t: f64) -> f64 {
+        self.eval_from(k, t, 0.0, self.params.f0_err)
+    }
+
+    /// The high-probability failure bound of Lemma 1:
+    /// `σ_k²/ε² · (2/(t μ_k) + 1/t²)` — how loose the w.h.p. claim is at t.
+    pub fn failure_prob(&self, k: usize, t: f64, eps: f64) -> f64 {
+        let var = self.order.var(k);
+        (var / (eps * eps)) * (2.0 / (t * self.mu(k)) + 1.0 / (t * t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example1_bound() -> ErrorBound {
+        // X_i ~ exp(mu) with mu=5 per Example 1; μ_k = (H_n − H_{n−k})/5.
+        ErrorBound::new(BoundParams::example1(), OrderStats::exponential(5, 5.0))
+    }
+
+    #[test]
+    fn bound_starts_at_f0() {
+        let b = example1_bound();
+        for k in 1..=5 {
+            assert!((b.eval(k, 0.0) - 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bound_decreases_to_floor() {
+        let b = example1_bound();
+        for k in 1..=5 {
+            let fl = b.floor(k);
+            let huge = b.eval(k, 1e7);
+            assert!((huge - fl).abs() < 1e-9, "k={k}");
+            // Monotone decreasing in t.
+            let mut prev = f64::INFINITY;
+            for i in 0..50 {
+                let v = b.eval(k, i as f64 * 100.0);
+                assert!(v <= prev + 1e-12);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn floor_is_decreasing_in_k() {
+        let b = example1_bound();
+        for k in 2..=5 {
+            assert!(b.floor(k) < b.floor(k - 1));
+        }
+        // Explicit Example-1 value: floor(1) = ηLσ²/(2cs) = 0.001*2*10/20.
+        assert!((b.floor(1) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_k_decreases_faster_initially() {
+        let b = example1_bound();
+        // Early on, k=1 has the smallest bound (fastest iterations).
+        let t = 5.0;
+        let v1 = b.eval(1, t);
+        let v5 = b.eval(5, t);
+        assert!(v1 < v5, "early: k=1 {v1} should beat k=5 {v5}");
+        // Late, k=5 wins (lowest floor).
+        let t = 1e5;
+        assert!(b.eval(5, t) < b.eval(1, t));
+    }
+
+    #[test]
+    fn eval_from_chains_consistently() {
+        let b = example1_bound();
+        // Evaluating 0→t1→t2 with the same k equals evaluating 0→t2.
+        let (t1, t2) = (50.0, 120.0);
+        let e1 = b.eval(3, t1);
+        let chained = b.eval_from(3, t2, t1, e1);
+        let direct = b.eval(3, t2);
+        assert!((chained - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failure_prob_decays_in_t() {
+        let b = example1_bound();
+        assert!(b.failure_prob(3, 1000.0, 0.1) < b.failure_prob(3, 100.0, 0.1));
+    }
+
+    #[test]
+    fn validate_catches_bad_params() {
+        let mut p = BoundParams::example1();
+        p.eta = 2.0; // eta*c = 2 >= 1
+        assert!(p.validate().is_err());
+        let mut p2 = BoundParams::example1();
+        p2.s = 0;
+        assert!(p2.validate().is_err());
+    }
+}

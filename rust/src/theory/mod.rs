@@ -1,0 +1,11 @@
+//! Theoretical machinery: the Lemma-1 error bound and the Theorem-1
+//! bound-optimal switching times.
+//!
+//! Everything needed to regenerate Fig. 1 / Example 1, and to drive the
+//! [`BoundOptimal`](crate::policy::BoundOptimal) oracle policy.
+
+mod bound;
+mod switching;
+
+pub use bound::{BoundParams, ErrorBound};
+pub use switching::{adaptive_envelope, switching_times, SwitchPoint};

@@ -1,0 +1,180 @@
+//! Theorem 1 — the bound-optimal switching times.
+//!
+//! Starting from k = 1 at t₀ = 0, the bound-optimal time to switch from
+//! waiting-for-k to waiting-for-(k+1) is (paper, Theorem 1):
+//!
+//! ```text
+//! t_k = t_{k−1} + μ_k/(−ln(1−ηc)) · [ ln(μ_{k+1} − μ_k) − ln(ηLσ²μ_k)
+//!        + ln(2ck(k+1)s·E(t_{k−1}) − ηL(k+1)σ²) ]
+//! ```
+//!
+//! where `E(t_{k−1})` is the bound value at the previous switch. The
+//! bracket is `ln` of
+//! `(μ_{k+1} − μ_k) · k(k+1) · (E(t_{k−1}) − floor_k) / (floor(1)·k·μ_k)`
+//! — equivalently, the switch happens exactly when the *instantaneous
+//! decrease rates* of the k and k+1 curves coincide:
+//! `(E − floor_k)/μ_k = (E − floor_{k+1})/μ_{k+1}` (verified in tests).
+
+use super::{ErrorBound};
+
+/// One switch: at `time`, move to `k_next`, with the bound value there.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchPoint {
+    /// Wall-clock time of the switch t_k.
+    pub time: f64,
+    /// k after the switch (= k+1).
+    pub k_next: usize,
+    /// Bound value E(t_k) at the switch.
+    pub error: f64,
+}
+
+/// Compute the Theorem-1 switching times t_1 … t_{n−1}.
+///
+/// If the bracket's argument is ≤ 1 for some k (meaning staying with k is
+/// never better), the switch time collapses to the previous one (`dt = 0`).
+pub fn switching_times(bound: &ErrorBound) -> Vec<SwitchPoint> {
+    let n = bound.order().n();
+    let p = *bound.params();
+    let rho = 1.0 - p.eta * p.c;
+    let neg_ln_rho = -rho.ln();
+
+    let mut out = Vec::with_capacity(n - 1);
+    let mut t_prev = 0.0;
+    let mut e_prev = p.f0_err;
+    for k in 1..n {
+        let mu_k = bound.mu(k);
+        let mu_k1 = bound.mu(k + 1);
+        let kf = k as f64;
+        // Theorem-1 bracket, verbatim from the paper.
+        let lead = 2.0 * p.c * kf * (kf + 1.0) * p.s as f64 * e_prev
+            - p.eta * p.l * (kf + 1.0) * p.sigma2;
+        let dt = if lead <= 0.0 {
+            // Already below the crossing error: switch immediately.
+            0.0
+        } else {
+            let bracket =
+                (mu_k1 - mu_k).ln() - (p.eta * p.l * p.sigma2 * mu_k).ln()
+                    + lead.ln();
+            (mu_k / neg_ln_rho * bracket).max(0.0)
+        };
+        let t_k = t_prev + dt;
+        let e_k = bound.eval_from(k, t_k, t_prev, e_prev);
+        out.push(SwitchPoint { time: t_k, k_next: k + 1, error: e_k });
+        t_prev = t_k;
+        e_prev = e_k;
+    }
+    out
+}
+
+/// The adaptive bound envelope of Fig. 1: evaluate the piecewise bound
+/// that runs k = 1 on `[0, t_1)`, k = 2 on `[t_1, t_2)`, … at each query
+/// time in `ts`.
+pub fn adaptive_envelope(bound: &ErrorBound, ts: &[f64]) -> Vec<f64> {
+    let switches = switching_times(bound);
+    let p = *bound.params();
+    ts.iter()
+        .map(|&t| {
+            // Find the active segment.
+            let mut k = 1usize;
+            let mut t0 = 0.0;
+            let mut e0 = p.f0_err;
+            for sw in &switches {
+                if t < sw.time {
+                    break;
+                }
+                k = sw.k_next;
+                t0 = sw.time;
+                e0 = sw.error;
+            }
+            bound.eval_from(k, t, t0, e0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::OrderStats;
+    use crate::theory::BoundParams;
+
+    fn example1() -> ErrorBound {
+        ErrorBound::new(BoundParams::example1(), OrderStats::exponential(5, 5.0))
+    }
+
+    #[test]
+    fn times_are_nondecreasing() {
+        let sw = switching_times(&example1());
+        assert_eq!(sw.len(), 4);
+        for w in sw.windows(2) {
+            assert!(w[1].time >= w[0].time, "{sw:?}");
+        }
+        assert!(sw[0].time > 0.0, "first switch should be after a transient");
+    }
+
+    #[test]
+    fn errors_decrease_along_switches() {
+        let sw = switching_times(&example1());
+        for w in sw.windows(2) {
+            assert!(w[1].error < w[0].error, "{sw:?}");
+        }
+    }
+
+    #[test]
+    fn switch_matches_rate_equalization() {
+        // At t_k the decrease rates of curves k and k+1 must coincide:
+        // (E − floor_k)/μ_k = (E − floor_{k+1})/μ_{k+1}.
+        let b = example1();
+        let sw = switching_times(&b);
+        for (idx, s) in sw.iter().enumerate() {
+            let k = idx + 1;
+            if s.time == 0.0 {
+                continue;
+            }
+            let lhs = (s.error - b.floor(k)) / b.mu(k);
+            let rhs = (s.error - b.floor(k + 1)) / b.mu(k + 1);
+            let rel = (lhs - rhs).abs() / lhs.abs().max(1e-300);
+            assert!(rel < 1e-6, "k={k}: lhs={lhs} rhs={rhs}");
+        }
+    }
+
+    #[test]
+    fn envelope_is_min_like() {
+        // The envelope must never exceed the best fixed-k bound by more
+        // than numerical slack *after its own switch point*, and must beat
+        // every fixed-k curve somewhere.
+        let b = example1();
+        let ts: Vec<f64> = (0..2000).map(|i| i as f64 * 10.0).collect();
+        let env = adaptive_envelope(&b, &ts);
+        // Envelope starts at f0.
+        assert!((env[0] - 100.0).abs() < 1e-9);
+        // Envelope is (weakly) decreasing.
+        for w in env.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+        // At the far end the envelope reaches (near) the k=5 floor,
+        // which no fixed k < 5 can.
+        let last = *env.last().unwrap();
+        assert!(last < b.floor(4), "end value {last} vs floor4 {}", b.floor(4));
+    }
+
+    #[test]
+    fn envelope_tracks_k1_early() {
+        let b = example1();
+        let sw = switching_times(&b);
+        let t_probe = sw[0].time * 0.5;
+        let env = adaptive_envelope(&b, &[t_probe]);
+        assert!((env[0] - b.eval(1, t_probe)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn immediate_switch_when_f0_below_crossing() {
+        // Tiny initial error: every crossing error exceeds it, so all
+        // switches collapse to t = 0 — adaptive == fastest-n from the start.
+        let params = BoundParams { f0_err: 1e-9, ..BoundParams::example1() };
+        let b = ErrorBound::new(params, OrderStats::exponential(5, 5.0));
+        let sw = switching_times(&b);
+        for s in &sw {
+            assert_eq!(s.time, 0.0, "{sw:?}");
+        }
+    }
+}

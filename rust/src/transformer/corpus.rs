@@ -1,0 +1,107 @@
+//! Synthetic token corpus with learnable structure.
+//!
+//! Sequences are built from a per-seed random vocabulary of `n_words`
+//! fixed "words" (short token n-grams) sampled by a biased (Zipf-ish)
+//! distribution. A bigram LM can compress this well below the uniform
+//! `log V` entropy, so the e2e loss curve has real signal — unlike pure
+//! iid-random tokens, which are unlearnable by construction.
+
+use crate::rng::{Pcg64, Rng};
+
+/// Deterministic synthetic corpus generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticCorpus {
+    vocab: usize,
+    words: Vec<Vec<i32>>,
+    seed: u64,
+}
+
+impl SyntheticCorpus {
+    /// Build a corpus with `n_words` latent words over `vocab` tokens.
+    pub fn new(vocab: usize, n_words: usize, word_len: usize, seed: u64) -> Self {
+        assert!(vocab >= 4, "need a few tokens");
+        assert!(n_words >= 1 && word_len >= 1);
+        let mut rng = Pcg64::seed_stream(seed, 0xC0ff);
+        let words = (0..n_words)
+            .map(|_| {
+                (0..word_len)
+                    .map(|_| rng.gen_range_u64(0, vocab as u64 - 1) as i32)
+                    .collect()
+            })
+            .collect();
+        Self { vocab, words, seed }
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// One `(batch, seq_len + 1)` token batch, flattened row-major.
+    /// Deterministic in `(iteration, worker)` — workers regenerate their
+    /// microbatches instead of storing the corpus.
+    pub fn batch(
+        &self,
+        batch: usize,
+        seq_plus1: usize,
+        iteration: u64,
+        worker: usize,
+    ) -> Vec<i32> {
+        let mut rng = Pcg64::seed_stream(
+            self.seed ^ iteration.wrapping_mul(0x9E3779B97F4A7C15),
+            worker as u64,
+        );
+        let mut out = Vec::with_capacity(batch * seq_plus1);
+        for _ in 0..batch {
+            let mut row = Vec::with_capacity(seq_plus1 + 8);
+            while row.len() < seq_plus1 {
+                // Zipf-ish word pick: square the uniform to bias low ids.
+                let u = rng.next_f64();
+                let idx = ((u * u) * self.words.len() as f64) as usize;
+                row.extend_from_slice(&self.words[idx.min(self.words.len() - 1)]);
+            }
+            row.truncate(seq_plus1);
+            out.extend_from_slice(&row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_and_deterministic() {
+        let c = SyntheticCorpus::new(256, 32, 4, 7);
+        let a = c.batch(8, 65, 3, 1);
+        let b = c.batch(8, 65, 3, 1);
+        assert_eq!(a.len(), 8 * 65);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..256).contains(&t)));
+        // Different iteration/worker → different batch.
+        assert_ne!(a, c.batch(8, 65, 4, 1));
+        assert_ne!(a, c.batch(8, 65, 3, 2));
+    }
+
+    #[test]
+    fn corpus_has_structure() {
+        // Token bigrams must be far from uniform: count distinct bigrams
+        // in a large sample — with 32 words of length 4 over 256 tokens,
+        // the within-word transitions dominate and distinct bigrams are
+        // far fewer than the ~65k possible.
+        let c = SyntheticCorpus::new(256, 32, 4, 9);
+        let toks = c.batch(64, 257, 0, 0);
+        let mut seen = std::collections::HashSet::new();
+        for row in toks.chunks(257) {
+            for w in row.windows(2) {
+                seen.insert((w[0], w[1]));
+            }
+        }
+        assert!(
+            seen.len() < 6000,
+            "bigram support too large to be learnable: {}",
+            seen.len()
+        );
+    }
+}

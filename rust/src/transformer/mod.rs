@@ -1,0 +1,14 @@
+//! End-to-end transformer-LM training through the fastest-k coordinator.
+//!
+//! Proves the full stack composes: the Pallas matmul kernel sits inside
+//! the JAX train-step graph, AOT-lowered to `transformer_grad_{tag}` /
+//! `transformer_step_{tag}` HLO artifacts, which this module executes via
+//! PJRT from the same master loop that trains linear regression. The model
+//! is an opaque flat `f32` parameter vector to the coordinator — exactly
+//! how the paper's scheme is workload-agnostic.
+
+mod corpus;
+mod trainer;
+
+pub use corpus::SyntheticCorpus;
+pub use trainer::{TransformerBackend, TransformerSession};

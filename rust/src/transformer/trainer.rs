@@ -1,0 +1,186 @@
+//! PJRT-backed transformer training session.
+
+use super::SyntheticCorpus;
+use crate::grad::GradBackend;
+use crate::runtime::{Arg, Executable, Runtime, RuntimeError};
+use std::sync::Arc;
+
+/// Data-parallel transformer gradient backend: worker `i`'s "shard" is a
+/// rotating stream of microbatches; its partial gradient is the LM loss
+/// gradient of the current microbatch, computed by the
+/// `transformer_grad_{tag}` artifact (Pallas matmul inside).
+pub struct TransformerBackend {
+    grad_exe: Executable,
+    corpus: SyntheticCorpus,
+    n_workers: usize,
+    p: usize,
+    batch: usize,
+    seq_plus1: usize,
+    iteration: u64,
+    /// Loss of the most recent partial-gradient execution (diagnostics).
+    pub last_loss: f32,
+}
+
+impl TransformerBackend {
+    /// Load the grad artifact for `tag` and wrap a corpus.
+    pub fn new(
+        runtime: &Arc<Runtime>,
+        tag: &str,
+        n_workers: usize,
+        corpus_seed: u64,
+    ) -> Result<Self, RuntimeError> {
+        let grad_exe = runtime.load(&format!("transformer_grad_{tag}"))?;
+        let info = grad_exe.info();
+        let p = info.meta_usize("params").ok_or_else(|| {
+            RuntimeError::Manifest("transformer_grad missing 'params' meta".into())
+        })?;
+        let batch = info.meta_usize("batch").unwrap_or(8);
+        let seq_len = info.meta_usize("seq_len").unwrap_or(64);
+        let vocab = info.meta_usize("vocab").unwrap_or(256);
+        let corpus = SyntheticCorpus::new(vocab, 32, 4, corpus_seed);
+        Ok(Self {
+            grad_exe,
+            corpus,
+            n_workers,
+            p,
+            batch,
+            seq_plus1: seq_len + 1,
+            iteration: 0,
+            last_loss: f32::NAN,
+        })
+    }
+
+    /// Parameter count P.
+    pub fn params(&self) -> usize {
+        self.p
+    }
+
+    /// Gradient + loss on an explicit token batch.
+    pub fn grad_on(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        out: &mut [f32],
+    ) -> Result<f32, RuntimeError> {
+        let outputs =
+            self.grad_exe.run(&[Arg::F32(params), Arg::I32(tokens)])?;
+        let mut loss = [0.0f32];
+        crate::runtime::copy_f32(&outputs[0], out, "transformer_grad")?;
+        crate::runtime::copy_f32(&outputs[1], &mut loss, "transformer_grad")?;
+        Ok(loss[0])
+    }
+
+    /// A held-out evaluation batch (fixed across the run).
+    pub fn eval_tokens(&self) -> Vec<i32> {
+        self.corpus.batch(self.batch, self.seq_plus1, u64::MAX / 2, 0)
+    }
+
+    /// Evaluate the LM loss at `params` on the held-out batch.
+    pub fn eval_loss(&self, params: &[f32]) -> Result<f32, RuntimeError> {
+        let tokens = self.eval_tokens();
+        let mut scratch = vec![0.0f32; self.p];
+        self.grad_on(params, &tokens, &mut scratch)
+    }
+}
+
+impl GradBackend for TransformerBackend {
+    fn partial_grad(&mut self, shard: usize, w: &[f32], out: &mut [f32]) {
+        let tokens =
+            self.corpus
+                .batch(self.batch, self.seq_plus1, self.iteration, shard);
+        self.last_loss = self
+            .grad_on(w, &tokens, out)
+            .expect("transformer grad execution failed");
+    }
+
+    fn on_iteration(&mut self, j: u64) {
+        self.iteration = j;
+    }
+
+    fn dim(&self) -> usize {
+        self.p
+    }
+
+    fn n_shards(&self) -> usize {
+        self.n_workers
+    }
+
+    fn name(&self) -> &'static str {
+        "transformer-xla"
+    }
+}
+
+/// Single-process training session using the fused step artifact
+/// (`transformer_step_{tag}`) — the fastest path for the e2e example's
+/// baseline and for profiling L2.
+pub struct TransformerSession {
+    step_exe: Executable,
+    init_exe: Executable,
+    corpus: SyntheticCorpus,
+    p: usize,
+    batch: usize,
+    seq_plus1: usize,
+}
+
+impl TransformerSession {
+    /// Load the step + init artifacts for `tag`.
+    pub fn new(
+        runtime: &Arc<Runtime>,
+        tag: &str,
+        corpus_seed: u64,
+    ) -> Result<Self, RuntimeError> {
+        let step_exe = runtime.load(&format!("transformer_step_{tag}"))?;
+        let init_exe = runtime.load(&format!("transformer_init_{tag}"))?;
+        let info = step_exe.info();
+        let p = info.meta_usize("params").ok_or_else(|| {
+            RuntimeError::Manifest("transformer_step missing 'params' meta".into())
+        })?;
+        let batch = info.meta_usize("batch").unwrap_or(8);
+        let seq_len = info.meta_usize("seq_len").unwrap_or(64);
+        let vocab = info.meta_usize("vocab").unwrap_or(256);
+        Ok(Self {
+            step_exe,
+            init_exe,
+            corpus: SyntheticCorpus::new(vocab, 32, 4, corpus_seed),
+            p,
+            batch,
+            seq_plus1: seq_len + 1,
+        })
+    }
+
+    /// Parameter count P.
+    pub fn params(&self) -> usize {
+        self.p
+    }
+
+    /// Deterministic parameter init via the `transformer_init` artifact
+    /// (so Rust never reimplements the JAX init).
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>, RuntimeError> {
+        let outputs = self.init_exe.run(&[Arg::I32(&[seed])])?;
+        let mut params = vec![0.0f32; self.p];
+        crate::runtime::copy_f32(&outputs[0], &mut params, "transformer_init")?;
+        Ok(params)
+    }
+
+    /// One fused train step; returns the loss. `params` is updated in
+    /// place (host-side copy of the donated-style update).
+    pub fn step(
+        &self,
+        params: &mut [f32],
+        eta: f32,
+        iteration: u64,
+    ) -> Result<f32, RuntimeError> {
+        let tokens =
+            self.corpus.batch(self.batch, self.seq_plus1, iteration, 0);
+        let eta_arr = [eta];
+        let outputs = self.step_exe.run(&[
+            Arg::F32(params),
+            Arg::I32(&tokens),
+            Arg::F32(&eta_arr),
+        ])?;
+        let mut loss = [0.0f32];
+        crate::runtime::copy_f32(&outputs[0], params, "transformer_step")?;
+        crate::runtime::copy_f32(&outputs[1], &mut loss, "transformer_step")?;
+        Ok(loss[0])
+    }
+}

@@ -1,0 +1,249 @@
+//! Property-based tests over coordinator invariants, via the in-repo
+//! `proptest_lite` harness (no proptest crate offline).
+
+use adasgd::master::fastest_k_select;
+use adasgd::policy::{AdaptivePflug, FixedK, IterationObs, KPolicy, PflugParams};
+use adasgd::proptest_lite::{Gen, Pair, Runner, UsizeRange, VecF64};
+use adasgd::rng::{Pcg64, Rng};
+use adasgd::sim::EventQueue;
+use adasgd::stats::OrderStats;
+use adasgd::theory::{switching_times, BoundParams, ErrorBound};
+
+fn runner() -> Runner {
+    Runner { cases: 200, seed: 0xADA5, max_shrinks: 100 }
+}
+
+/// fastest_k_select must return exactly the k-th order statistic and the
+/// set of the k smallest entries, for any delays and any valid k.
+#[test]
+fn prop_fastest_k_select_matches_sort() {
+    let gen = Pair(
+        VecF64 { min_len: 1, max_len: 64, lo: 0.001, hi: 100.0 },
+        UsizeRange { lo: 0, hi: 1_000_000 },
+    );
+    runner().check("fastest_k_select", &gen, |(delays, kraw)| {
+        let n = delays.len();
+        let k = 1 + kraw % n;
+        let mut idx = Vec::new();
+        let (x_k, _) = fastest_k_select(delays, k, &mut idx);
+        let mut sorted = delays.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if (x_k - sorted[k - 1]).abs() > 1e-12 {
+            return Err(format!("x_k {} != sorted[k-1] {}", x_k, sorted[k - 1]));
+        }
+        let mut chosen: Vec<f64> = idx[..k].iter().map(|&i| delays[i]).collect();
+        chosen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (c, s) in chosen.iter().zip(&sorted[..k]) {
+            if (c - s).abs() > 1e-12 {
+                return Err(format!("selected set mismatch: {chosen:?}"));
+            }
+        }
+        // No duplicate worker indices.
+        let mut ids: Vec<usize> = idx[..k].to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != k {
+            return Err("duplicate worker in selection".into());
+        }
+        Ok(())
+    });
+}
+
+/// AdaptivePflug: k is monotone non-decreasing, within [k0, k_max], moves
+/// only in multiples of `step`, and switches are separated by > burnin.
+#[test]
+fn prop_adaptive_pflug_state_machine() {
+    let gen = Pair(
+        UsizeRange { lo: 2, hi: 64 },  // n
+        UsizeRange { lo: 0, hi: u32::MAX as usize }, // sign-pattern seed
+    );
+    runner().check("pflug_invariants", &gen, |&(n, seed)| {
+        let params = PflugParams {
+            k0: 1 + seed % n.max(1),
+            step: 1 + seed % 7,
+            thresh: 1 + (seed % 9) as i64,
+            burnin: (seed % 50) as u64,
+            k_max: n,
+        };
+        let params = PflugParams { k0: params.k0.min(n), ..params };
+        let mut p = AdaptivePflug::new(n, params);
+        let mut rng = Pcg64::seed(seed as u64);
+        let mut prev_k = p.initial_k();
+        let mut last_switch: Option<u64> = None;
+        for j in 0..2000u64 {
+            let inner = if rng.next_f64() < 0.6 { -1.0 } else { 1.0 };
+            let k = p.next_k(&IterationObs {
+                iteration: j,
+                time: j as f64,
+                k_used: prev_k,
+                grad_inner_prev: if j == 0 { None } else { Some(inner) },
+                grad_norm_sq: 1.0,
+            });
+            if k < prev_k {
+                return Err(format!("k decreased: {prev_k} -> {k} at j={j}"));
+            }
+            if k > params.k_max {
+                return Err(format!("k={k} above k_max={}", params.k_max));
+            }
+            if k != prev_k {
+                if (k - prev_k) != params.step {
+                    return Err(format!(
+                        "switch moved by {} not step={}",
+                        k - prev_k,
+                        params.step
+                    ));
+                }
+                if let Some(ls) = last_switch {
+                    if j - ls <= params.burnin {
+                        return Err(format!(
+                            "switches at {ls} and {j} violate burnin {}",
+                            params.burnin
+                        ));
+                    }
+                }
+                last_switch = Some(j);
+            }
+            prev_k = k;
+        }
+        Ok(())
+    });
+}
+
+/// The event queue must dequeue any schedule in non-decreasing time order
+/// and preserve FIFO among ties.
+#[test]
+fn prop_event_queue_orders_any_schedule() {
+    let gen = VecF64 { min_len: 1, max_len: 128, lo: 0.0, hi: 1000.0 };
+    runner().check("event_queue_order", &gen, |times| {
+        let mut q = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule_at(t, i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut popped = 0usize;
+        while let Some(ev) = q.pop() {
+            if ev.time < last {
+                return Err(format!("time went backwards: {last} -> {}", ev.time));
+            }
+            last = ev.time;
+            popped += 1;
+        }
+        if popped != times.len() {
+            return Err("lost events".into());
+        }
+        Ok(())
+    });
+}
+
+/// Theorem-1 switching times are monotone for ANY valid parameter set.
+#[test]
+fn prop_switching_times_monotone() {
+    let gen = Pair(
+        UsizeRange { lo: 2, hi: 40 },              // n
+        UsizeRange { lo: 1, hi: 1_000_000 },       // scaled f0_err
+    );
+    runner().check("theorem1_monotone", &gen, |&(n, f0x)| {
+        let params = BoundParams {
+            eta: 0.001,
+            l: 2.0,
+            c: 1.0,
+            sigma2: 10.0,
+            s: 10,
+            f0_err: f0x as f64 / 100.0,
+        };
+        let bound = ErrorBound::new(params, OrderStats::exponential(n, 1.0));
+        let sw = switching_times(&bound);
+        if sw.len() != n - 1 {
+            return Err(format!("expected {} switches, got {}", n - 1, sw.len()));
+        }
+        for w in sw.windows(2) {
+            if w[1].time < w[0].time - 1e-9 {
+                return Err(format!("switch times decrease: {w:?}"));
+            }
+            if w[1].error > w[0].error + 1e-9 {
+                return Err(format!("switch errors increase: {w:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FixedK is truly constant regardless of observations.
+#[test]
+fn prop_fixed_k_is_constant() {
+    let gen = Pair(
+        UsizeRange { lo: 1, hi: 64 },
+        UsizeRange { lo: 0, hi: 10_000 },
+    );
+    runner().check("fixed_k_constant", &gen, |&(k, jitter)| {
+        let mut p = FixedK::new(k);
+        for j in 0..50u64 {
+            let got = p.next_k(&IterationObs {
+                iteration: j,
+                time: (jitter as f64) * j as f64,
+                k_used: k,
+                grad_inner_prev: Some(if j % 2 == 0 { -1.0 } else { 1.0 }),
+                grad_norm_sq: jitter as f64,
+            });
+            if got != k {
+                return Err(format!("fixed k changed to {got}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Order-statistic means are monotone in k for every delay model we ship.
+#[test]
+fn prop_order_stats_monotone_across_models() {
+    use adasgd::straggler::*;
+    let models: Vec<Box<dyn DelayModel>> = vec![
+        Box::new(ExponentialDelays::new(1.0)),
+        Box::new(ShiftedExponentialDelays::new(0.5, 2.0)),
+        Box::new(ParetoDelays::new(1.0, 2.5)),
+        Box::new(WeibullDelays::new(1.0, 0.8)),
+        Box::new(BimodalDelays::new(1.0, 2, 5.0, 0.1)),
+    ];
+    for m in &models {
+        let os = OrderStats::monte_carlo(m.as_ref(), 12, 4000, 7);
+        for k in 2..=12 {
+            assert!(
+                os.mean(k) >= os.mean(k - 1),
+                "{}: mu_{k} < mu_{}",
+                m.name(),
+                k - 1
+            );
+        }
+    }
+}
+
+/// JSON parser round-trips machine-generated manifests of any size.
+#[test]
+fn prop_json_parses_generated_manifests() {
+    use adasgd::config::json::Json;
+    let gen = UsizeRange { lo: 0, hi: 40 };
+    runner().check("json_manifest", &gen, |&n_entries| {
+        let entries: Vec<String> = (0..n_entries)
+            .map(|i| {
+                format!(
+                    r#"{{"name": "a{i}", "file": "a{i}.hlo.txt",
+                        "inputs": [{{"shape": [{i}, 7], "dtype": "float32"}}],
+                        "outputs": [], "meta": {{"kind": "k{i}", "s": {i}}}}}"#
+                )
+            })
+            .collect();
+        let doc = format!(
+            r#"{{"version": 1, "entries": [{}]}}"#,
+            entries.join(",")
+        );
+        let parsed = Json::parse(&doc).map_err(|e| e.to_string())?;
+        let arr = parsed
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or("no entries")?;
+        if arr.len() != n_entries {
+            return Err(format!("lost entries: {} != {n_entries}", arr.len()));
+        }
+        Ok(())
+    });
+}

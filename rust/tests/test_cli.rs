@@ -1,0 +1,152 @@
+//! CLI integration: drive the built `adasgd` binary end-to-end.
+
+use std::process::Command;
+
+fn adasgd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_adasgd"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = adasgd().args(args).output().expect("spawn adasgd");
+    assert!(
+        out.status.success(),
+        "adasgd {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn help_lists_commands() {
+    let text = run_ok(&["help"]);
+    for cmd in ["fig1", "fig2", "fig3", "train", "train-transformer"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = adasgd().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn switching_times_prints_schedule() {
+    let text = run_ok(&["switching-times"]);
+    assert!(text.contains("switch to k=2"));
+    assert!(text.contains("switch to k=5"));
+}
+
+#[test]
+fn fig1_writes_csv() {
+    let dir = std::env::temp_dir().join("adasgd_cli_fig1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("fig1.csv");
+    let text = run_ok(&[
+        "fig1",
+        "--points",
+        "50",
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(text.contains("Theorem-1 switching times"));
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert!(body.starts_with("label,iteration,time,k,error"));
+    // 5 fixed curves + adaptive, 50 points each.
+    assert_eq!(body.lines().count(), 1 + 6 * 50);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_quick_run_reports_error() {
+    let dir = std::env::temp_dir().join("adasgd_cli_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("train.csv");
+    let text = run_ok(&[
+        "train",
+        "--n",
+        "10",
+        "--m",
+        "200",
+        "--d",
+        "10",
+        "--k",
+        "5",
+        "--eta",
+        "0.002",
+        "--max-iterations",
+        "300",
+        "--max-time",
+        "0",
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(text.contains("300 steps"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_rejects_bad_partition() {
+    let out = adasgd()
+        .args(["train", "--n", "7", "--m", "200", "--d", "5", "--quiet"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("divide"));
+}
+
+#[test]
+fn train_from_toml_config() {
+    let dir = std::env::temp_dir().join("adasgd_cli_toml");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+label = "toml-run"
+n = 10
+eta = 0.002
+max_iterations = 200
+max_time = 0.0
+
+[delays]
+kind = "exponential"
+lambda = 1.0
+
+[policy]
+kind = "fixed"
+k = 4
+
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+"#,
+    )
+    .unwrap();
+    let csv = dir.join("out.csv");
+    let text = run_ok(&[
+        "train",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(text.contains("toml-run"), "{text}");
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert!(body.contains("toml-run,"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn list_artifacts_shows_registry() {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let text = run_ok(&["list-artifacts", "--artifacts", artifacts]);
+    assert!(text.contains("linreg_grad_s40_d100"), "{text}");
+}

@@ -1,0 +1,117 @@
+//! Integration: transformer LM trains through the fastest-k coordinator
+//! via the AOT artifacts (the e2e stack proof, small-scale; the full run
+//! lives in examples/transformer_e2e.rs and EXPERIMENTS.md).
+
+use adasgd::grad::GradBackend;
+use adasgd::master::{run_fastest_k, MasterConfig};
+use adasgd::policy::FixedK;
+use adasgd::runtime::Runtime;
+use adasgd::straggler::ExponentialDelays;
+use adasgd::transformer::{TransformerBackend, TransformerSession};
+use std::sync::Arc;
+
+fn runtime() -> Arc<Runtime> {
+    let dir = std::env::var("ADASGD_ARTIFACTS")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into());
+    Runtime::open(&dir).expect("run `make artifacts` first")
+}
+
+#[test]
+fn init_params_deterministic_and_sized() {
+    let rt = runtime();
+    let session = TransformerSession::new(&rt, "tiny", 0).expect("session");
+    let p1 = session.init_params(7).expect("init");
+    let p2 = session.init_params(7).expect("init");
+    assert_eq!(p1.len(), session.params());
+    assert_eq!(p1, p2, "same seed must give identical params");
+    let p3 = session.init_params(8).expect("init");
+    assert_ne!(p1, p3);
+}
+
+#[test]
+fn fused_step_decreases_loss() {
+    let rt = runtime();
+    let session = TransformerSession::new(&rt, "tiny", 3).expect("session");
+    let mut params = session.init_params(1).expect("init");
+    let mut losses = Vec::new();
+    for j in 0..12 {
+        losses.push(session.step(&mut params, 0.05, j).expect("step"));
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.2),
+        "loss must drop: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn grad_backend_matches_step_semantics() {
+    // One fastest-n iteration with the grad artifact + host apply must
+    // track the fused step (same batch, same eta) closely.
+    let rt = runtime();
+    let session = TransformerSession::new(&rt, "tiny", 5).expect("session");
+    let mut backend = TransformerBackend::new(&rt, "tiny", 1, 5).expect("backend");
+    let params = session.init_params(2).expect("init");
+    let eta = 0.05f32;
+
+    // Path A: fused artifact.
+    let mut p_fused = params.clone();
+    let loss_fused = session.step(&mut p_fused, eta, 0).expect("step");
+
+    // Path B: grad artifact + host update (worker 0, same iteration 0).
+    backend.on_iteration(0);
+    let mut grad = vec![0.0f32; backend.params()];
+    backend.partial_grad(0, &params, &mut grad);
+    let loss_grad = backend.last_loss;
+    let p_host: Vec<f32> = params
+        .iter()
+        .zip(&grad)
+        .map(|(p, g)| p - eta * g)
+        .collect();
+
+    assert!(
+        (loss_fused - loss_grad).abs() < 1e-4,
+        "losses diverge: {loss_fused} vs {loss_grad}"
+    );
+    let max_rel = p_fused
+        .iter()
+        .zip(&p_host)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    assert!(max_rel < 1e-4, "params diverge by {max_rel}");
+}
+
+#[test]
+fn fastest_k_transformer_training_descends() {
+    let rt = runtime();
+    let session = TransformerSession::new(&rt, "tiny", 11).expect("session");
+    let workers = 4;
+    let mut backend =
+        TransformerBackend::new(&rt, "tiny", workers, 11).expect("backend");
+    let eval = TransformerBackend::new(&rt, "tiny", workers, 11).expect("eval");
+    let params0 = session.init_params(3).expect("init");
+    let delays = ExponentialDelays::new(1.0);
+    let mut policy = FixedK::new(2);
+    let cfg = MasterConfig {
+        eta: 0.05,
+        momentum: 0.0,
+        max_iterations: 25,
+        max_time: 0.0,
+        seed: 4,
+        record_stride: 5,
+    };
+    let run = run_fastest_k(
+        &mut backend,
+        &delays,
+        &mut policy,
+        &params0,
+        &cfg,
+        &mut |p| eval.eval_loss(p).unwrap() as f64,
+    );
+    let first = run.recorder.samples()[0].error;
+    let last = run.recorder.last().unwrap().error;
+    assert!(
+        last < first - 0.15,
+        "fastest-k transformer failed to learn: {first} -> {last}"
+    );
+}

@@ -1,0 +1,145 @@
+//! Shape assertions for the paper's figures: who wins, by roughly what
+//! factor, where the crossovers fall. Absolute error values are data- and
+//! seed-dependent; the *orderings* below are what the paper claims.
+
+use adasgd::coordinator::{fig1, fig2, fig3};
+use adasgd::stats::OrderStats;
+use adasgd::theory::{adaptive_envelope, switching_times, BoundParams, ErrorBound};
+
+#[test]
+fn fig1_adaptive_traces_the_lower_envelope() {
+    let bound = ErrorBound::new(
+        BoundParams::example1(),
+        OrderStats::exponential(5, 5.0),
+    );
+    let ts: Vec<f64> = (0..500).map(|i| i as f64 * 25.0).collect();
+    let env = adaptive_envelope(&bound, &ts);
+    // At every instant the envelope is within a hair of the best fixed k —
+    // and at late times strictly below every k < 5 floor.
+    for (i, &t) in ts.iter().enumerate() {
+        let best = (1..=5).map(|k| bound.eval(k, t)).fold(f64::INFINITY, f64::min);
+        assert!(
+            env[i] <= best + 1e-12,
+            "t={t}: envelope {} above best fixed {}",
+            env[i],
+            best
+        );
+    }
+    let t_end = *ts.last().unwrap();
+    for k in 1..5 {
+        assert!(env.last().unwrap() < &bound.eval(k, t_end));
+    }
+}
+
+#[test]
+fn fig1_switching_times_are_ordered_and_finite() {
+    let bound = ErrorBound::new(
+        BoundParams::example1(),
+        OrderStats::exponential(5, 5.0),
+    );
+    let sw = switching_times(&bound);
+    assert_eq!(sw.len(), 4);
+    for w in sw.windows(2) {
+        assert!(w[0].time < w[1].time);
+        assert!(w[0].error > w[1].error);
+    }
+    assert!(sw[0].time > 100.0 && sw[3].time < 1e5, "{sw:?}");
+}
+
+#[test]
+fn fig1_output_is_complete() {
+    let out = fig1(100);
+    assert_eq!(out.fixed.len(), 5);
+    assert_eq!(out.adaptive.samples().len(), 100);
+    assert!(!out.summary.is_empty());
+}
+
+/// Fig. 2's claims: (i) fixed-k floors are ordered floor(10) > floor(40);
+/// (ii) the adaptive run reaches the k=40 error level well before the
+/// fixed k=40 run; (iii) adaptive's minimum error is the lowest of all.
+#[test]
+fn fig2_adaptive_beats_fixed() {
+    let out = fig2(0, 6500.0);
+    let by_label = |needle: &str| {
+        out.runs
+            .iter()
+            .find(|r| r.label.contains(needle))
+            .unwrap_or_else(|| panic!("missing run {needle}"))
+    };
+    let k10 = by_label("k=10");
+    let k40 = by_label("k=40");
+    let adaptive = by_label("adaptive");
+
+    // (i) floor ordering: error at the end of the window.
+    let e10 = k10.last().unwrap().error;
+    let e40 = k40.last().unwrap().error;
+    assert!(
+        e10 > 2.0 * e40,
+        "k=10 floor ({e10:.3e}) should sit well above k=40 ({e40:.3e})"
+    );
+
+    // (ii) time-to-error: target = the k=40 terminal error level.
+    let target = e40 * 1.5;
+    let t_adaptive = adaptive
+        .time_to_error(target)
+        .expect("adaptive must reach the k=40 level");
+    let t_k40 = k40.time_to_error(target).expect("k=40 reaches its own level");
+    assert!(
+        t_adaptive < 0.75 * t_k40,
+        "adaptive should be much earlier: {t_adaptive:.0} vs {t_k40:.0}"
+    );
+    // k=10 never gets there at all.
+    assert!(k10.time_to_error(target).is_none());
+
+    // (iii) adaptive min error is the global best (small tolerance).
+    let adaptive_min = adaptive.min_error().unwrap();
+    for r in &out.runs {
+        assert!(
+            adaptive_min <= r.min_error().unwrap() * 1.10,
+            "adaptive {adaptive_min:.3e} vs {} {:.3e}",
+            r.label,
+            r.min_error().unwrap()
+        );
+    }
+}
+
+/// Fig. 3's claim: adaptive fastest-k reaches a lower error than fully
+/// asynchronous SGD within the same time budget.
+#[test]
+fn fig3_adaptive_beats_async() {
+    let out = fig3(0, 2500.0);
+    let adaptive = out
+        .runs
+        .iter()
+        .find(|r| r.label.contains("adaptive"))
+        .expect("adaptive run");
+    let async_run = out
+        .runs
+        .iter()
+        .find(|r| r.label.contains("async"))
+        .expect("async run");
+    let a = adaptive.min_error().unwrap();
+    let b = async_run.min_error().unwrap();
+    assert!(
+        a < 0.5 * b,
+        "adaptive ({a:.3e}) should clearly beat async ({b:.3e})"
+    );
+}
+
+/// Robustness: the Fig-2 ordering holds across seeds (not a lucky draw).
+#[test]
+fn fig2_ordering_is_seed_robust() {
+    for seed in [1u64, 2] {
+        let out = fig2(seed, 4000.0);
+        let adaptive = out
+            .runs
+            .iter()
+            .find(|r| r.label.contains("adaptive"))
+            .unwrap();
+        let k10 = out.runs.iter().find(|r| r.label.contains("k=10")).unwrap();
+        assert!(
+            adaptive.min_error().unwrap() < k10.min_error().unwrap(),
+            "seed {seed}"
+        );
+    }
+}

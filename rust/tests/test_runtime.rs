@@ -1,0 +1,226 @@
+//! Integration: PJRT runtime + AOT artifacts vs the native backend.
+//!
+//! Requires `make artifacts` (the default Fig-2 shapes). These tests are
+//! the numerical contract between the three layers: the Pallas kernel
+//! (inside the HLO) must agree with the Rust linalg to f32 precision.
+
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::{GradBackend, NativeBackend};
+use adasgd::master::{run_fastest_k, MasterConfig};
+use adasgd::model::LinRegProblem;
+use adasgd::policy::FixedK;
+use adasgd::runtime::{Runtime, XlaApplyUpdate, XlaBackend, XlaLossEval};
+use adasgd::straggler::ExponentialDelays;
+use std::sync::Arc;
+
+fn runtime() -> Arc<Runtime> {
+    let dir = std::env::var("ADASGD_ARTIFACTS")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into());
+    Runtime::open(&dir).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn fig2_data() -> (SyntheticDataset, Shards) {
+    let ds = SyntheticDataset::generate(SyntheticConfig::default(), 33);
+    let shards = Shards::partition(&ds, 50);
+    (ds, shards)
+}
+
+#[test]
+fn manifest_lists_linreg_artifacts() {
+    let rt = runtime();
+    let names = rt.manifest().names();
+    assert!(names.iter().any(|n| n == "linreg_grad_s40_d100"), "{names:?}");
+    assert!(names.iter().any(|n| n == "linreg_loss_m2000_d100"));
+    assert!(names.iter().any(|n| n == "apply_update_n50_d100"));
+}
+
+#[test]
+fn xla_partial_grad_matches_native() {
+    let rt = runtime();
+    let (_ds, shards) = fig2_data();
+    let mut xla = XlaBackend::new(&rt, &shards).expect("load xla backend");
+    let mut native = NativeBackend::new(shards.clone());
+
+    let w: Vec<f32> = (0..100).map(|i| (i as f32) * 0.7 - 30.0).collect();
+    let mut gx = vec![0.0f32; 100];
+    let mut gn = vec![0.0f32; 100];
+    for shard in [0usize, 7, 49] {
+        xla.partial_grad(shard, &w, &mut gx);
+        native.partial_grad(shard, &w, &mut gn);
+        for j in 0..100 {
+            let rel = (gx[j] - gn[j]).abs() / gn[j].abs().max(1.0);
+            assert!(
+                rel < 1e-4,
+                "shard {shard} j={j}: xla {} vs native {}",
+                gx[j],
+                gn[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_loss_matches_native() {
+    let rt = runtime();
+    let (ds, _) = fig2_data();
+    let eval = XlaLossEval::new(&rt, &ds.x, &ds.y).expect("load loss");
+    let w = vec![0.5f32; 100];
+    let xla_loss = eval.loss(&w).expect("loss exec");
+    let native_loss = adasgd::model::loss(&ds.x, &ds.y, &w);
+    let rel = (xla_loss - native_loss).abs() / native_loss;
+    assert!(rel < 1e-5, "xla {xla_loss} vs native {native_loss}");
+}
+
+#[test]
+fn xla_apply_update_matches_host_update() {
+    let rt = runtime();
+    let apply = XlaApplyUpdate::new(&rt, 50, 100).expect("load apply");
+    let mut w_xla: Vec<f32> = (0..100).map(|i| i as f32).collect();
+    let w0 = w_xla.clone();
+    // Stack: first k=3 rows populated, rest zero.
+    let mut g = vec![0.0f32; 50 * 100];
+    for r in 0..3 {
+        for c in 0..100 {
+            g[r * 100 + c] = (r + 1) as f32 * 0.01 * c as f32;
+        }
+    }
+    let eta = 0.05f32;
+    apply.apply(&mut w_xla, &g, eta / 3.0).expect("apply exec");
+    for c in 0..100 {
+        let sum: f32 = (0..3).map(|r| g[r * 100 + c]).sum();
+        let want = w0[c] - eta / 3.0 * sum;
+        assert!(
+            (w_xla[c] - want).abs() < 1e-4 * want.abs().max(1.0),
+            "c={c}: {} vs {}",
+            w_xla[c],
+            want
+        );
+    }
+}
+
+#[test]
+fn full_training_loop_through_pjrt() {
+    // The paper's Fig-2 workload, gradients through the Pallas artifact.
+    let rt = runtime();
+    let (ds, shards) = fig2_data();
+    let problem = LinRegProblem::new(&ds);
+    let mut backend = XlaBackend::new(&rt, &shards).expect("backend");
+    let delays = ExponentialDelays::new(1.0);
+    let mut policy = FixedK::new(10);
+    let cfg = MasterConfig {
+        eta: 5e-4,
+        momentum: 0.0,
+        max_iterations: 150,
+        max_time: 0.0,
+        seed: 9,
+        record_stride: 50,
+    };
+    let run = run_fastest_k(
+        &mut backend,
+        &delays,
+        &mut policy,
+        &vec![0.0f32; 100],
+        &cfg,
+        &mut |w| problem.error(w),
+    );
+    let first = run.recorder.samples()[0].error;
+    let last = run.recorder.last().unwrap().error;
+    assert!(last < first * 0.1, "PJRT training failed: {first} -> {last}");
+}
+
+#[test]
+fn xla_and_native_runs_agree_bitwise_on_delays() {
+    // Same seed ⇒ identical straggler pattern ⇒ identical iteration times,
+    // and near-identical trajectories (f32 kernel vs f32 linalg).
+    let rt = runtime();
+    let (ds, shards) = fig2_data();
+    let problem = LinRegProblem::new(&ds);
+    let delays = ExponentialDelays::new(1.0);
+    let cfg = MasterConfig {
+        eta: 5e-4,
+        momentum: 0.0,
+        max_iterations: 60,
+        max_time: 0.0,
+        seed: 12,
+        record_stride: 20,
+    };
+    let mut native = NativeBackend::new(shards.clone());
+    let mut p1 = FixedK::new(5);
+    let rn = run_fastest_k(
+        &mut native,
+        &delays,
+        &mut p1,
+        &vec![0.0f32; 100],
+        &cfg,
+        &mut |w| problem.error(w),
+    );
+    let mut xla = XlaBackend::new(&rt, &shards).expect("backend");
+    let mut p2 = FixedK::new(5);
+    let rx = run_fastest_k(
+        &mut xla,
+        &delays,
+        &mut p2,
+        &vec![0.0f32; 100],
+        &cfg,
+        &mut |w| problem.error(w),
+    );
+    assert_eq!(rn.total_time, rx.total_time, "delay streams must match");
+    // Trajectory parity: relative error of final iterates.
+    for j in 0..100 {
+        let rel = (rn.w[j] - rx.w[j]).abs() / rn.w[j].abs().max(1.0);
+        assert!(rel < 1e-3, "j={j}: native {} xla {}", rn.w[j], rx.w[j]);
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let rt = runtime();
+    let exe = rt.load("linreg_grad_s40_d100").expect("load");
+    let bad = vec![0.0f32; 10];
+    let err = match exe.run(&[
+        adasgd::runtime::Arg::F32(&bad),
+        adasgd::runtime::Arg::F32(&bad),
+        adasgd::runtime::Arg::F32(&bad),
+    ]) {
+        Ok(_) => panic!("wrong shapes must be rejected"),
+        Err(e) => e,
+    };
+    let msg = format!("{err}");
+    assert!(msg.contains("signature mismatch"), "{msg}");
+}
+
+#[test]
+fn runtime_unknown_artifact_is_helpful() {
+    let rt = runtime();
+    let err = match rt.load("nope") {
+        Ok(_) => panic!("unknown artifact must fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err}");
+    assert!(msg.contains("not in manifest"), "{msg}");
+    assert!(msg.contains("linreg_grad_s40_d100"), "should list known: {msg}");
+}
+
+#[test]
+fn batched_all_grads_matches_per_shard() {
+    let rt = runtime();
+    let (_ds, shards) = fig2_data();
+    let mut xla = XlaBackend::new(&rt, &shards).expect("backend");
+    let w: Vec<f32> = (0..100).map(|i| (i as f32) * 0.3 - 10.0).collect();
+    let mut all = vec![0.0f32; 50 * 100];
+    assert!(
+        xla.all_grads(&w, &mut all),
+        "batched artifact should be available after `make artifacts`"
+    );
+    let mut single = vec![0.0f32; 100];
+    for shard in [0usize, 13, 49] {
+        xla.partial_grad(shard, &w, &mut single);
+        for j in 0..100 {
+            let a = all[shard * 100 + j];
+            let rel = (a - single[j]).abs() / single[j].abs().max(1.0);
+            assert!(rel < 1e-4, "shard {shard} j={j}: {a} vs {}", single[j]);
+        }
+    }
+}
