@@ -13,6 +13,7 @@
 //! no synchronization barrier, so the clock advances on an event queue of
 //! per-worker completion times rather than an order statistic.
 
+use crate::comm::CommChannel;
 use crate::grad::GradBackend;
 use crate::metrics::{Recorder, Sample};
 use crate::rng::Pcg64;
@@ -71,9 +72,13 @@ pub struct AsyncRun {
     pub mean_staleness: f64,
     /// True if the run blew up (non-finite model) and stopped early.
     pub diverged: bool,
+    /// Encoded bytes of all applied gradient messages.
+    pub bytes_sent: u64,
+    /// Total upload time of applied messages.
+    pub comm_time: f64,
 }
 
-/// Run asynchronous SGD from `w0`.
+/// Run asynchronous SGD from `w0` with the zero-cost dense channel.
 pub fn run_async(
     backend: &mut dyn GradBackend,
     delays: &dyn DelayModel,
@@ -82,12 +87,44 @@ pub fn run_async(
     eval_error: &mut dyn FnMut(&[f32]) -> f64,
 ) -> AsyncRun {
     let n = backend.n_shards();
+    let mut channel = CommChannel::dense(n);
+    run_async_comm(backend, delays, &mut channel, w0, cfg, eval_error)
+}
+
+/// Run asynchronous SGD from `w0`, shipping every update through
+/// `channel`: a worker's completion event fires after compute delay plus
+/// the upload delay of its encoded message, and the applied gradient is
+/// the channel's reconstruction (error feedback applies every round here,
+/// since no async update is ever discarded).
+pub fn run_async_comm(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &AsyncConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> AsyncRun {
+    let n = backend.n_shards();
     let d = backend.dim();
     assert_eq!(w0.len(), d, "w0 dimension mismatch");
+    assert_eq!(
+        channel.n(),
+        n,
+        "comm channel sized for {} workers, backend has {n}",
+        channel.n()
+    );
 
     let mut rng = Pcg64::seed_stream(cfg.seed, 0xA57C);
+    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC045);
+    let bytes0 = channel.stats.bytes_sent;
+    let comm_t0 = channel.stats.comm_time;
     let mut w = w0.to_vec();
+    let mut g_raw = vec![0.0f32; d];
     let mut g = vec![0.0f32; d];
+
+    // Zero-cost links price every message at exactly 0.0, so the upload
+    // term can be added unconditionally without perturbing dense runs.
+    let msg_bytes = channel.message_bytes(d);
 
     // Each worker computes against its stale snapshot; in the simulated
     // timeline only the *version* matters for staleness accounting, and the
@@ -99,7 +136,8 @@ pub fn run_async(
 
     let mut queue: EventQueue<usize> = EventQueue::new();
     for i in 0..n {
-        let dt = delays.sample(0, i, &mut rng);
+        let dt = delays.sample(0, i, &mut rng)
+            + channel.link_upload_delay(i, msg_bytes);
         queue.schedule_in(dt, i);
     }
 
@@ -109,6 +147,7 @@ pub fn run_async(
         time: 0.0,
         k: 1,
         error: eval_error(&w),
+        ..Default::default()
     });
 
     let mut updates = 0u64;
@@ -123,8 +162,10 @@ pub fn run_async(
         }
         let i = ev.payload;
 
-        // Gradient at the worker's stale snapshot.
-        backend.partial_grad(i, &snapshots[i], &mut g);
+        // Gradient at the worker's stale snapshot, shipped through the
+        // channel (compression + error feedback + byte accounting).
+        backend.partial_grad(i, &snapshots[i], &mut g_raw);
+        channel.transmit(i, &g_raw, &mut g, &mut comm_rng);
         let staleness = version - read_version[i];
         let step = if cfg.staleness_damping {
             cfg.eta / (1.0 + staleness as f32)
@@ -144,6 +185,8 @@ pub fn run_async(
                 time: queue.now(),
                 k: 1,
                 error: f64::INFINITY,
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
             });
             break;
         }
@@ -151,7 +194,8 @@ pub fn run_async(
         // Worker restarts immediately with the fresh model.
         snapshots[i].copy_from_slice(&w);
         read_version[i] = version;
-        let dt = delays.sample(updates, i, &mut rng);
+        let dt = delays.sample(updates, i, &mut rng)
+            + channel.link_upload_delay(i, msg_bytes);
         queue.schedule_in(dt, i);
 
         if updates % cfg.record_stride == 0 {
@@ -160,6 +204,8 @@ pub fn run_async(
                 time: queue.now(),
                 k: 1,
                 error: eval_error(&w),
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
             });
         }
     }
@@ -171,6 +217,8 @@ pub fn run_async(
             time: total_time,
             k: 1,
             error: eval_error(&w),
+            bytes: channel.stats.bytes_sent - bytes0,
+            comm_time: channel.stats.comm_time - comm_t0,
         });
     }
 
@@ -185,6 +233,8 @@ pub fn run_async(
             0.0
         },
         diverged,
+        bytes_sent: channel.stats.bytes_sent - bytes0,
+        comm_time: channel.stats.comm_time - comm_t0,
     }
 }
 
@@ -274,6 +324,74 @@ mod tests {
         );
         let rate = run.updates as f64 / run.total_time;
         assert!((rate - 10.0).abs() < 1.5, "rate={rate}");
+    }
+
+    #[test]
+    fn dense_comm_channel_reproduces_the_plain_async_run() {
+        use crate::comm::CommChannel;
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.0005,
+            max_updates: 500,
+            seed: 8,
+            record_stride: 100,
+            ..Default::default()
+        };
+        let plain = {
+            let (mut backend, problem) = setup(10);
+            run_async(&mut backend, &delays, &vec![0.0; 10], &cfg, &mut |w| {
+                problem.error(w)
+            })
+        };
+        let comm = {
+            let (mut backend, problem) = setup(10);
+            let mut channel = CommChannel::dense(10);
+            run_async_comm(
+                &mut backend,
+                &delays,
+                &mut channel,
+                &vec![0.0; 10],
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        assert_eq!(plain.w, comm.w);
+        assert_eq!(plain.total_time, comm.total_time);
+        assert!(plain.bytes_sent > 0);
+        assert_eq!(plain.bytes_sent, comm.bytes_sent);
+    }
+
+    #[test]
+    fn finite_uplink_slows_async_updates() {
+        use crate::comm::{CommChannel, Dense, LinkModel};
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.0001,
+            max_updates: 2000,
+            seed: 9,
+            record_stride: 500,
+            ..Default::default()
+        };
+        let (mut backend, problem) = setup(10);
+        // d=10 -> 56-byte messages; bw 56 B/unit => +1.0 per completion.
+        let mut channel = CommChannel::new(
+            Box::new(Dense::new()),
+            LinkModel::uniform(10, 56.0, 0.0),
+            false,
+        );
+        let run = run_async_comm(
+            &mut backend,
+            &delays,
+            &mut channel,
+            &vec![0.0; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        // Per-worker cycle time is now ~2.0, so 10 workers apply ~5
+        // updates per unit time instead of ~10.
+        let rate = run.updates as f64 / run.total_time;
+        assert!((rate - 5.0).abs() < 1.0, "rate={rate}");
+        assert!(run.comm_time > 0.0);
     }
 
     #[test]

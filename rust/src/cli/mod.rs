@@ -17,13 +17,11 @@ pub struct Args {
 }
 
 /// CLI parse errors.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CliError {
     /// A --flag that expects a value hit the end of argv.
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
     /// A flag value failed to parse.
-    #[error("flag --{flag}: cannot parse '{value}' as {ty}")]
     BadValue {
         /// Flag name.
         flag: String,
@@ -34,12 +32,29 @@ pub enum CliError {
     },
 }
 
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(flag) => {
+                write!(f, "flag --{flag} expects a value")
+            }
+            CliError::BadValue { flag, value, ty } => {
+                write!(f, "flag --{flag}: cannot parse '{value}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
 /// Flags that take a value (everything else starting with `--` is a
 /// switch). Keep in sync with `print_help`.
 const VALUED_FLAGS: &[&str] = &[
     "config", "seed", "n", "k", "k0", "step", "thresh", "burnin", "k-max",
     "eta", "max-time", "max-iterations", "out", "artifacts", "steps",
-    "workers", "tag", "points", "time-scale", "m", "d", "lambda", "record-stride",
+    "workers", "tag", "points", "time-scale", "m", "d", "lambda",
+    "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
+    "link-latency",
 ];
 
 impl Args {
@@ -131,6 +146,14 @@ TRAIN FLAGS (no --config):
   --n N --k K | --k0 K0 --step S --thresh T --burnin B --k-max M
   --eta F --max-time T --max-iterations J --m M --d D --lambda L
   --async             run the asynchronous baseline instead of fastest-k
+
+COMM FLAGS (train; also in [comm] of a TOML config):
+  --comm SCHEME       dense | qsgd | topk | randk     (default dense)
+  --comm-levels S     qsgd quantization levels        (default 4)
+  --comm-frac F       topk/randk kept fraction        (default 0.1)
+  --bandwidth B       uplink bytes per time unit, 0 = infinite
+  --link-latency L    fixed per-message upload latency
+  --no-error-feedback disable the compression residual accumulator
 "#
     );
 }

@@ -134,6 +134,7 @@ pub fn run_coded_gd(
         time: 0.0,
         k: threshold,
         error: eval_error(&w),
+        ..Default::default()
     });
 
     let mut t = 0.0f64;
@@ -172,6 +173,7 @@ pub fn run_coded_gd(
                 time: t,
                 k: threshold,
                 error: eval_error(&w),
+                ..Default::default()
             });
         }
     }
@@ -181,6 +183,7 @@ pub fn run_coded_gd(
             time: t,
             k: threshold,
             error: eval_error(&w),
+            ..Default::default()
         });
     }
     CodedRun { recorder, w, iterations: j, total_time: t }

@@ -1,0 +1,236 @@
+//! The communication channel the training drivers route gradients through.
+
+use super::{Compressor, Dense, ErrorFeedback, LinkModel};
+use crate::straggler::RngDyn;
+
+/// Running totals of everything a channel moved.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// Encoded bytes of every accepted (transmitted) message.
+    pub bytes_sent: u64,
+    /// Sum of the upload delays of accepted messages. This is total
+    /// upload *work*, not critical-path time — the per-iteration critical
+    /// path is already folded into the driver's clock via the fastest-k
+    /// selection.
+    pub comm_time: f64,
+    /// Accepted messages.
+    pub messages: u64,
+}
+
+/// One message's accounting, as returned by [`CommChannel::transmit`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transmission {
+    /// Encoded size in bytes.
+    pub bytes: u64,
+    /// Virtual upload delay the sender's link charged.
+    pub upload_delay: f64,
+}
+
+/// Compressor + error feedback + link, bundled per cluster.
+///
+/// Drivers price every worker's upload from the data-independent size
+/// model *before* the fastest-k selection (see
+/// [`CommChannel::message_bytes`] / [`CommChannel::link_upload_delay`]),
+/// then [`CommChannel::transmit`] the gradients of the k accepted workers.
+pub struct CommChannel {
+    compressor: Box<dyn Compressor>,
+    link: LinkModel,
+    feedback: Option<ErrorFeedback>,
+    /// Scratch for the feedback-adjusted gradient `g + e_i`.
+    scratch: Vec<f32>,
+    /// Running totals (reset with [`CommChannel::reset_stats`]).
+    pub stats: CommStats,
+}
+
+impl CommChannel {
+    /// Build a channel over `link` (which fixes the worker count). Pass
+    /// `error_feedback: false` for lossless schemes to skip the (zero)
+    /// residual bookkeeping.
+    pub fn new(
+        compressor: Box<dyn Compressor>,
+        link: LinkModel,
+        error_feedback: bool,
+    ) -> Self {
+        let n = link.n();
+        Self {
+            compressor,
+            link,
+            feedback: if error_feedback {
+                Some(ErrorFeedback::new(n))
+            } else {
+                None
+            },
+            scratch: Vec::new(),
+            stats: CommStats::default(),
+        }
+    }
+
+    /// The zero-cost default: dense encoding over a free link, no error
+    /// feedback. Drivers using this reproduce pre-`comm` trajectories bit
+    /// for bit (the compressor is the identity and no extra rng is drawn
+    /// from the delay stream).
+    pub fn dense(n: usize) -> Self {
+        Self::new(Box::new(Dense::new()), LinkModel::zero_cost(n), false)
+    }
+
+    /// Number of workers the channel is sized for.
+    pub fn n(&self) -> usize {
+        self.link.n()
+    }
+
+    /// Encoded message size for a d-dimensional gradient
+    /// (data-independent, so it can be priced before any compute).
+    pub fn message_bytes(&self, d: usize) -> u64 {
+        self.compressor.encoded_bytes(d)
+    }
+
+    /// Upload delay of a `bytes`-sized message on worker `i`'s link.
+    pub fn link_upload_delay(&self, worker: usize, bytes: u64) -> f64 {
+        self.link.upload_delay(worker, bytes)
+    }
+
+    /// True iff the link adds no delay for any message.
+    pub fn link_is_zero_cost(&self) -> bool {
+        self.link.is_zero_cost()
+    }
+
+    /// Whether error feedback is accumulating residuals.
+    pub fn error_feedback_enabled(&self) -> bool {
+        self.feedback.is_some()
+    }
+
+    /// `‖e_i‖²` of worker `i`'s residual (0 without error feedback).
+    pub fn residual_norm_sq(&self, worker: usize) -> f64 {
+        self.feedback
+            .as_ref()
+            .map_or(0.0, |fb| fb.residual_norm_sq(worker))
+    }
+
+    /// Compress-and-deliver worker `i`'s raw gradient: applies error
+    /// feedback, writes the master-side reconstruction into `out`, updates
+    /// the worker's residual, and accounts bytes + upload time.
+    pub fn transmit(
+        &mut self,
+        worker: usize,
+        g: &[f32],
+        out: &mut [f32],
+        rng: &mut dyn RngDyn,
+    ) -> Transmission {
+        debug_assert_eq!(g.len(), out.len());
+        let bytes = if let Some(fb) = self.feedback.as_mut() {
+            self.scratch.clear();
+            self.scratch.extend_from_slice(g);
+            fb.add_residual(worker, &mut self.scratch);
+            let bytes = self.compressor.apply(&self.scratch, out, rng);
+            fb.update(worker, &self.scratch, out);
+            bytes
+        } else {
+            self.compressor.apply(g, out, rng)
+        };
+        let upload_delay = self.link.upload_delay(worker, bytes);
+        self.stats.bytes_sent += bytes;
+        self.stats.comm_time += upload_delay;
+        self.stats.messages += 1;
+        Transmission { bytes, upload_delay }
+    }
+
+    /// Zero the running totals (residuals are kept — they are model state,
+    /// not metrics).
+    pub fn reset_stats(&mut self) {
+        self.stats = CommStats::default();
+    }
+
+    /// `scheme over link` label for recorders and reports.
+    pub fn name(&self) -> String {
+        let mut s = self.compressor.name();
+        if self.error_feedback_enabled() {
+            s.push_str("+ef");
+        }
+        if !self.link.is_zero_cost() {
+            s.push_str(" over ");
+            s.push_str(&self.link.name());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{TopK, WireFormat};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn dense_channel_is_identity_and_free() {
+        let mut ch = CommChannel::dense(4);
+        assert!(ch.link_is_zero_cost());
+        assert!(!ch.error_feedback_enabled());
+        let g = [1.0f32, -2.0, 3.0];
+        let mut out = [0.0f32; 3];
+        let mut rng = Pcg64::seed(1);
+        let tx = ch.transmit(0, &g, &mut out, &mut rng);
+        assert_eq!(out, g);
+        assert_eq!(tx.upload_delay, 0.0);
+        assert_eq!(tx.bytes, WireFormat::default().dense(3));
+        assert_eq!(ch.stats.messages, 1);
+        assert_eq!(ch.stats.bytes_sent, tx.bytes);
+        assert_eq!(ch.stats.comm_time, 0.0);
+    }
+
+    #[test]
+    fn feedback_channel_recovers_dropped_mass_next_round() {
+        // top-1 of 3 coords with feedback: round 1 keeps the largest;
+        // round 2's feedback-adjusted gradient re-surfaces the rest.
+        let mut ch = CommChannel::new(
+            Box::new(TopK::new(1.0 / 3.0)),
+            LinkModel::zero_cost(1),
+            true,
+        );
+        let mut rng = Pcg64::seed(2);
+        let g = [3.0f32, 2.0, 1.0];
+        let mut out = [0.0f32; 3];
+        ch.transmit(0, &g, &mut out, &mut rng);
+        assert_eq!(out, [3.0, 0.0, 0.0]);
+        assert_eq!(ch.residual_norm_sq(0), 5.0);
+        // Same raw gradient again: residual (0,2,1) makes coord 1 win.
+        ch.transmit(0, &g, &mut out, &mut rng);
+        assert_eq!(out, [0.0, 4.0, 0.0]);
+        // Residual now (3, 0, 2).
+        assert_eq!(ch.residual_norm_sq(0), 13.0);
+    }
+
+    #[test]
+    fn finite_link_charges_upload_time() {
+        let mut ch = CommChannel::new(
+            Box::new(Dense::new()),
+            LinkModel::uniform(2, 100.0, 0.5),
+            false,
+        );
+        let d = 21; // 16 + 84 = 100 bytes
+        assert_eq!(ch.message_bytes(d), 100);
+        assert!((ch.link_upload_delay(0, 100) - 1.5).abs() < 1e-12);
+        let g = vec![1.0f32; d];
+        let mut out = vec![0.0f32; d];
+        let mut rng = Pcg64::seed(3);
+        let tx = ch.transmit(1, &g, &mut out, &mut rng);
+        assert!((tx.upload_delay - 1.5).abs() < 1e-12);
+        assert!((ch.stats.comm_time - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_stats_keeps_residuals() {
+        let mut ch = CommChannel::new(
+            Box::new(TopK::new(0.5)),
+            LinkModel::zero_cost(1),
+            true,
+        );
+        let mut rng = Pcg64::seed(4);
+        let mut out = [0.0f32; 2];
+        ch.transmit(0, &[5.0, 1.0], &mut out, &mut rng);
+        assert!(ch.stats.messages > 0);
+        let resid = ch.residual_norm_sq(0);
+        ch.reset_stats();
+        assert_eq!(ch.stats, CommStats::default());
+        assert_eq!(ch.residual_norm_sq(0), resid);
+    }
+}

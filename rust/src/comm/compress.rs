@@ -1,0 +1,435 @@
+//! Concrete gradient compression schemes.
+//!
+//! A [`Compressor`] is evaluated in simulation as the composite
+//! `decode ∘ encode`: [`Compressor::apply`] writes what the master would
+//! reconstruct after the round trip and returns the exact number of bytes
+//! the encoded message occupies on the wire. Sizes are data-independent by
+//! design — the drivers price every worker's upload *before* computing any
+//! gradient, so the fastest-k selection can include upload delays without
+//! doing the stragglers' work.
+//!
+//! The sparsifiers keep surviving coordinates **unscaled** (biased); the
+//! usual `d/k` unbiasing rescale is deliberately omitted because the
+//! drivers pair compression with [`ErrorFeedback`](super::ErrorFeedback),
+//! which both corrects the bias over time and makes the residual identity
+//! `decoded + residual == g` exact in f32.
+
+use super::WireFormat;
+use crate::rng::Rng;
+use crate::straggler::{DynRng, RngDyn};
+
+/// A gradient encoding scheme with an exact wire-size model.
+pub trait Compressor: Send + Sync {
+    /// Write `decode(encode(g))` into `out` (same length as `g`) and
+    /// return the encoded message size in bytes. Stochastic schemes draw
+    /// from `rng`; deterministic schemes must not touch it. Takes
+    /// `&mut self` so schemes can reuse internal scratch across the many
+    /// calls per iteration.
+    fn apply(&mut self, g: &[f32], out: &mut [f32], rng: &mut dyn RngDyn)
+        -> u64;
+
+    /// Encoded size in bytes for a d-dimensional gradient. Must be
+    /// data-independent and agree with what [`Compressor::apply`] returns.
+    fn encoded_bytes(&self, d: usize) -> u64;
+
+    /// Scheme name for labels/reports.
+    fn name(&self) -> String;
+}
+
+/// Identity encoding: full-precision f32 payload. The zero-loss baseline
+/// every driver uses by default.
+#[derive(Debug, Clone, Default)]
+pub struct Dense {
+    wire: WireFormat,
+}
+
+impl Dense {
+    /// Dense scheme with the default wire format.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Dense scheme with an explicit wire format.
+    pub fn with_wire(wire: WireFormat) -> Self {
+        Self { wire }
+    }
+}
+
+impl Compressor for Dense {
+    fn apply(
+        &mut self,
+        g: &[f32],
+        out: &mut [f32],
+        _rng: &mut dyn RngDyn,
+    ) -> u64 {
+        out.copy_from_slice(g);
+        self.wire.dense(g.len())
+    }
+
+    fn encoded_bytes(&self, d: usize) -> u64 {
+        self.wire.dense(d)
+    }
+
+    fn name(&self) -> String {
+        "dense".into()
+    }
+}
+
+/// QSGD-style stochastic s-level quantization (Alistarh et al. 2017).
+///
+/// Each coordinate is mapped to `‖g‖₂ · sign(gᵢ) · ξᵢ/s` where
+/// `ξᵢ ∈ {0..s}` stochastically rounds `s·|gᵢ|/‖g‖₂`, so the scheme is
+/// unbiased and the per-coordinate reconstruction error is at most
+/// `‖g‖₂ / s`.
+#[derive(Debug, Clone)]
+pub struct QuantizeQsgd {
+    levels: u32,
+    wire: WireFormat,
+}
+
+impl QuantizeQsgd {
+    /// `levels = s >= 1` quantization levels per sign.
+    pub fn new(levels: u32) -> Self {
+        Self::with_wire(levels, WireFormat::default())
+    }
+
+    /// With an explicit wire format.
+    pub fn with_wire(levels: u32, wire: WireFormat) -> Self {
+        assert!(levels >= 1, "QSGD needs at least one level");
+        Self { levels, wire }
+    }
+
+    /// The level count s.
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+}
+
+impl Compressor for QuantizeQsgd {
+    fn apply(
+        &mut self,
+        g: &[f32],
+        out: &mut [f32],
+        rng: &mut dyn RngDyn,
+    ) -> u64 {
+        debug_assert_eq!(g.len(), out.len());
+        let mut rng = DynRng(rng);
+        let norm = g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        let s = self.levels as f64;
+        if norm == 0.0 {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            // Draw nothing: the all-zero message is its own encoding, but
+            // the wire still carries the full frame in this size model.
+            return self.wire.quantized(g.len(), self.levels);
+        }
+        for (o, &v) in out.iter_mut().zip(g) {
+            let a = (v.abs() as f64) / norm * s; // in [0, s]
+            let low = a.floor();
+            let xi = if rng.next_f64() < a - low { low + 1.0 } else { low };
+            *o = (norm * (xi / s)) as f32 * v.signum();
+        }
+        self.wire.quantized(g.len(), self.levels)
+    }
+
+    fn encoded_bytes(&self, d: usize) -> u64 {
+        self.wire.quantized(d, self.levels)
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd(s={})", self.levels)
+    }
+}
+
+/// Kept-coordinate count shared by both sparsifiers: `ceil(frac·d)`, at
+/// least 1 for non-empty d. The schemes' `apply` and `encoded_bytes` (and
+/// therefore the drivers' precomputed upload pricing) must all agree on
+/// this rounding, so it lives in exactly one place.
+fn sparse_nnz(frac: f64, d: usize) -> usize {
+    ((frac * d as f64).ceil() as usize).clamp(d.min(1), d)
+}
+
+fn assert_frac(frac: f64) {
+    assert!(frac > 0.0 && frac <= 1.0, "frac must be in (0, 1]");
+}
+
+/// Top-k magnitude sparsification: keep the `ceil(frac·d)` coordinates of
+/// largest magnitude (ties broken toward the lower index, so the scheme is
+/// deterministic), zero the rest, and ship explicit (index, value) pairs.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    frac: f64,
+    wire: WireFormat,
+    /// Index scratch reused across calls (one transmit per accepted
+    /// worker per iteration — avoid a d-length allocation in each).
+    scratch: Vec<usize>,
+}
+
+impl TopK {
+    /// Keep fraction `frac ∈ (0, 1]` of the coordinates.
+    pub fn new(frac: f64) -> Self {
+        Self::with_wire(frac, WireFormat::default())
+    }
+
+    /// With an explicit wire format.
+    pub fn with_wire(frac: f64, wire: WireFormat) -> Self {
+        assert_frac(frac);
+        Self { frac, wire, scratch: Vec::new() }
+    }
+
+    /// Kept coordinates for dimension d (at least 1 for non-empty d).
+    pub fn nnz(&self, d: usize) -> usize {
+        sparse_nnz(self.frac, d)
+    }
+}
+
+impl Compressor for TopK {
+    fn apply(
+        &mut self,
+        g: &[f32],
+        out: &mut [f32],
+        _rng: &mut dyn RngDyn,
+    ) -> u64 {
+        debug_assert_eq!(g.len(), out.len());
+        let d = g.len();
+        let nnz = self.nnz(d);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        if nnz == 0 {
+            return self.wire.sparse(0);
+        }
+        let idx = &mut self.scratch;
+        idx.clear();
+        idx.extend(0..d);
+        if nnz < d {
+            // total_cmp: a NaN coordinate (diverged run) must not feed an
+            // inconsistent order into select_nth — NaNs sort as largest
+            // magnitude and get selected, never panic the selection.
+            idx.select_nth_unstable_by(nnz - 1, |&a, &b| {
+                g[b].abs()
+                    .total_cmp(&g[a].abs())
+                    .then_with(|| a.cmp(&b))
+            });
+        }
+        for &i in &idx[..nnz] {
+            out[i] = g[i];
+        }
+        self.wire.sparse(nnz)
+    }
+
+    fn encoded_bytes(&self, d: usize) -> u64 {
+        self.wire.sparse(self.nnz(d))
+    }
+
+    fn name(&self) -> String {
+        format!("topk(frac={})", self.frac)
+    }
+}
+
+/// Random-k sparsification: keep `ceil(frac·d)` uniformly random distinct
+/// coordinates. The index set is derived from a PRNG stream the master
+/// shares, so only the values and a seed go on the wire.
+#[derive(Debug, Clone)]
+pub struct RandK {
+    frac: f64,
+    wire: WireFormat,
+    /// Index scratch reused across calls.
+    scratch: Vec<usize>,
+}
+
+impl RandK {
+    /// Keep fraction `frac ∈ (0, 1]` of the coordinates.
+    pub fn new(frac: f64) -> Self {
+        Self::with_wire(frac, WireFormat::default())
+    }
+
+    /// With an explicit wire format.
+    pub fn with_wire(frac: f64, wire: WireFormat) -> Self {
+        assert_frac(frac);
+        Self { frac, wire, scratch: Vec::new() }
+    }
+
+    /// Kept coordinates for dimension d (at least 1 for non-empty d).
+    pub fn nnz(&self, d: usize) -> usize {
+        sparse_nnz(self.frac, d)
+    }
+}
+
+impl Compressor for RandK {
+    fn apply(
+        &mut self,
+        g: &[f32],
+        out: &mut [f32],
+        rng: &mut dyn RngDyn,
+    ) -> u64 {
+        debug_assert_eq!(g.len(), out.len());
+        let d = g.len();
+        let nnz = self.nnz(d);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut rng = DynRng(rng);
+        // Partial Fisher–Yates: the first nnz slots become a uniform
+        // sample of distinct indices.
+        let idx = &mut self.scratch;
+        idx.clear();
+        idx.extend(0..d);
+        for i in 0..nnz.min(d.saturating_sub(1)) {
+            let j = i + rng.next_below((d - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        for &i in &idx[..nnz] {
+            out[i] = g[i];
+        }
+        self.wire.seeded_sparse(nnz)
+    }
+
+    fn encoded_bytes(&self, d: usize) -> u64 {
+        self.wire.seeded_sparse(self.nnz(d))
+    }
+
+    fn name(&self) -> String {
+        format!("randk(frac={})", self.frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gradient() -> Vec<f32> {
+        (0..64)
+            .map(|i| ((i as f32) * 0.37 - 11.0) * if i % 3 == 0 { -1.0 } else { 1.0 })
+            .collect()
+    }
+
+    #[test]
+    fn dense_is_identity_and_prices_full_payload() {
+        let g = gradient();
+        let mut out = vec![0.0f32; g.len()];
+        let mut rng = Pcg64::seed(1);
+        let mut c = Dense::new();
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        assert_eq!(out, g);
+        assert_eq!(bytes, c.encoded_bytes(g.len()));
+        assert_eq!(bytes, 16 + 4 * 64);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_exactly() {
+        let g = gradient();
+        let mut out = vec![0.0f32; g.len()];
+        let mut rng = Pcg64::seed(2);
+        let mut c = TopK::new(0.25);
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        let nnz = c.nnz(g.len());
+        assert_eq!(nnz, 16);
+        assert_eq!(bytes, c.encoded_bytes(g.len()));
+        let kept: Vec<usize> =
+            (0..g.len()).filter(|&i| out[i] != 0.0).collect();
+        assert_eq!(kept.len(), nnz);
+        // Every kept coordinate is bitwise the input...
+        for &i in &kept {
+            assert_eq!(out[i], g[i]);
+        }
+        // ...and no dropped magnitude exceeds a kept one.
+        let min_kept =
+            kept.iter().map(|&i| g[i].abs()).fold(f32::INFINITY, f32::min);
+        for i in 0..g.len() {
+            if !kept.contains(&i) {
+                assert!(g[i].abs() <= min_kept);
+            }
+        }
+    }
+
+    #[test]
+    fn topk_is_deterministic_and_rng_free() {
+        let g = gradient();
+        let mut c = TopK::new(0.1);
+        let mut rng = Pcg64::seed(3);
+        let before = rng.clone().next_u64();
+        let mut a = vec![0.0f32; g.len()];
+        let mut b = vec![0.0f32; g.len()];
+        c.apply(&g, &mut a, &mut rng);
+        c.apply(&g, &mut b, &mut rng);
+        assert_eq!(a, b);
+        assert_eq!(rng.next_u64(), before, "TopK must not consume rng");
+    }
+
+    #[test]
+    fn topk_survives_nan_gradients_without_panicking() {
+        // A diverged run can hand the channel NaN coordinates; selection
+        // must stay a total order (total_cmp), not panic mid-run.
+        let g = vec![1.0f32, f32::NAN, -3.0, 2.0, f32::NAN, 0.5];
+        let mut c = TopK::new(0.5);
+        let mut rng = Pcg64::seed(8);
+        let mut out = vec![0.0f32; g.len()];
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        assert_eq!(bytes, c.encoded_bytes(g.len()));
+        // NaNs order above every finite magnitude, so both are selected.
+        assert!(out[1].is_nan() && out[4].is_nan());
+        assert_eq!(out[2], -3.0);
+    }
+
+    #[test]
+    fn randk_keeps_exactly_nnz_distinct_unscaled_coords() {
+        let g: Vec<f32> = (0..100).map(|i| 1.0 + i as f32).collect();
+        let mut c = RandK::new(0.1);
+        let mut rng = Pcg64::seed(4);
+        let mut out = vec![0.0f32; g.len()];
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        assert_eq!(bytes, c.encoded_bytes(g.len()));
+        let kept: Vec<usize> =
+            (0..g.len()).filter(|&i| out[i] != 0.0).collect();
+        assert_eq!(kept.len(), 10);
+        for &i in &kept {
+            assert_eq!(out[i], g[i]);
+        }
+        // A different rng state picks a different subset (overwhelmingly).
+        let mut rng2 = Pcg64::seed(5);
+        let mut out2 = vec![0.0f32; g.len()];
+        c.apply(&g, &mut out2, &mut rng2);
+        assert_ne!(out, out2);
+    }
+
+    #[test]
+    fn qsgd_is_within_the_per_coordinate_bound() {
+        let g = gradient();
+        let norm = g.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        for levels in [1u32, 2, 4, 16] {
+            let mut c = QuantizeQsgd::new(levels);
+            let mut rng = Pcg64::seed(6 + levels as u64);
+            let mut out = vec![0.0f32; g.len()];
+            let bytes = c.apply(&g, &mut out, &mut rng);
+            assert_eq!(bytes, c.encoded_bytes(g.len()));
+            let bound = norm / levels as f64 + 1e-4 * norm;
+            for (o, &v) in out.iter().zip(&g) {
+                assert!(
+                    ((*o as f64) - (v as f64)).abs() <= bound,
+                    "levels={levels}: |{o} - {v}| > {bound}"
+                );
+                // Sign is preserved or the coordinate collapsed to zero.
+                assert!(*o == 0.0 || o.signum() == v.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_gradient_stays_zero() {
+        let g = vec![0.0f32; 16];
+        let mut c = QuantizeQsgd::new(4);
+        let mut rng = Pcg64::seed(9);
+        let mut out = vec![1.0f32; 16];
+        c.apply(&g, &mut out, &mut rng);
+        assert!(out.iter().all(|&o| o == 0.0));
+    }
+
+    #[test]
+    fn schemes_order_by_wire_size_as_expected() {
+        let d = 100;
+        let dense = Dense::new().encoded_bytes(d);
+        let topk = TopK::new(0.1).encoded_bytes(d);
+        let randk = RandK::new(0.1).encoded_bytes(d);
+        let qsgd = QuantizeQsgd::new(4).encoded_bytes(d);
+        assert!(topk < dense);
+        assert!(randk < topk, "seeded indices beat explicit pairs");
+        assert!(qsgd < dense);
+    }
+}

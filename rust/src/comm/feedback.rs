@@ -1,0 +1,98 @@
+//! Per-worker error-feedback residual accumulators.
+//!
+//! Compressed SGD applies `decode(encode(g))`, discarding
+//! `g − decode(encode(g))` every round. Error feedback (Seide et al. 2014;
+//! Stich et al. 2018) keeps that residual per worker and adds it to the
+//! next gradient *before* compression, so dropped mass is delayed, not
+//! lost — the property that lets biased compressors such as unscaled
+//! top-k/rand-k converge like dense SGD.
+//!
+//! In fastest-k training only the k accepted workers' residuals update in
+//! a round: a straggler whose result is discarded never transmitted, so
+//! its accumulator is untouched (and its gradient is recomputed at a
+//! fresher model next time).
+
+/// Per-worker compression residuals `e_i`.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    residual: Vec<Vec<f32>>,
+}
+
+impl ErrorFeedback {
+    /// Zero residuals for `n` workers (buffers sized lazily on first use).
+    pub fn new(n: usize) -> Self {
+        Self { residual: vec![Vec::new(); n] }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.residual.len()
+    }
+
+    /// Add worker `i`'s residual into `g` in place: `g ← g + e_i`.
+    pub fn add_residual(&mut self, worker: usize, g: &mut [f32]) {
+        let e = &mut self.residual[worker];
+        if e.is_empty() {
+            return;
+        }
+        debug_assert_eq!(e.len(), g.len(), "residual/gradient dim mismatch");
+        for (gv, ev) in g.iter_mut().zip(e.iter()) {
+            *gv += *ev;
+        }
+    }
+
+    /// Record what compression dropped this round: `e_i ← g_fb − decoded`,
+    /// where `g_fb` is the feedback-adjusted gradient that was compressed.
+    pub fn update(&mut self, worker: usize, g_fb: &[f32], decoded: &[f32]) {
+        debug_assert_eq!(g_fb.len(), decoded.len());
+        let e = &mut self.residual[worker];
+        e.resize(g_fb.len(), 0.0);
+        for ((ev, gv), dv) in e.iter_mut().zip(g_fb).zip(decoded) {
+            *ev = *gv - *dv;
+        }
+    }
+
+    /// Worker `i`'s current residual (empty before its first update).
+    pub fn residual(&self, worker: usize) -> &[f32] {
+        &self.residual[worker]
+    }
+
+    /// `‖e_i‖²` — diagnostic for how much mass feedback is carrying.
+    pub fn residual_norm_sq(&self, worker: usize) -> f64 {
+        self.residual[worker]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_identity_is_exact_for_sparsifiers() {
+        // decoded keeps coords {0, 2} and zeroes the rest.
+        let g = [1.5f32, -2.25, 0.5, 4.0];
+        let decoded = [1.5f32, 0.0, 0.5, 0.0];
+        let mut fb = ErrorFeedback::new(1);
+        fb.update(0, &g, &decoded);
+        assert_eq!(fb.residual(0), &[0.0, -2.25, 0.0, 4.0]);
+        // Next round: the residual rides along.
+        let mut g2 = [0.0f32, 1.0, 0.0, -1.0];
+        fb.add_residual(0, &mut g2);
+        assert_eq!(g2, [0.0, -1.25, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn untouched_workers_keep_empty_residuals() {
+        let mut fb = ErrorFeedback::new(3);
+        fb.update(1, &[1.0, 2.0], &[1.0, 0.0]);
+        assert!(fb.residual(0).is_empty());
+        assert_eq!(fb.residual(1), &[0.0, 2.0]);
+        assert_eq!(fb.residual_norm_sq(1), 4.0);
+        let mut g = [10.0f32, 10.0];
+        fb.add_residual(2, &mut g); // no-op before first update
+        assert_eq!(g, [10.0, 10.0]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Per-worker uplink model: bandwidth + latency → virtual upload delay.
+//!
+//! The comm analogue of [`DelayModel`](crate::straggler::DelayModel):
+//! queried once per (iteration, worker) with the encoded message size and
+//! returning the virtual time the upload occupies. Deterministic — the
+//! stochasticity of a round lives in the compute-delay model; the link
+//! prices bytes.
+
+/// Per-worker uplink bandwidth and latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkModel {
+    /// Bytes per unit of virtual time; `f64::INFINITY` = free uplink.
+    bandwidth: Vec<f64>,
+    /// Fixed per-message latency in virtual time units.
+    latency: Vec<f64>,
+}
+
+impl LinkModel {
+    /// A link that costs nothing — the default every driver starts from;
+    /// with it, comm-aware runs match the pre-comm trajectories exactly.
+    pub fn zero_cost(n: usize) -> Self {
+        Self { bandwidth: vec![f64::INFINITY; n], latency: vec![0.0; n] }
+    }
+
+    /// Identical links: `bandwidth` bytes per virtual-time unit
+    /// (`<= 0` means infinite) and fixed per-message `latency`.
+    pub fn uniform(n: usize, bandwidth: f64, latency: f64) -> Self {
+        assert!(latency >= 0.0, "latency must be non-negative");
+        let bw = if bandwidth > 0.0 { bandwidth } else { f64::INFINITY };
+        Self { bandwidth: vec![bw; n], latency: vec![latency; n] }
+    }
+
+    /// Fully heterogeneous links.
+    pub fn per_worker(bandwidth: Vec<f64>, latency: Vec<f64>) -> Self {
+        assert_eq!(bandwidth.len(), latency.len(), "per-worker lens differ");
+        assert!(!bandwidth.is_empty(), "need at least one worker");
+        assert!(latency.iter().all(|&l| l >= 0.0), "negative latency");
+        let bandwidth = bandwidth
+            .into_iter()
+            .map(|b| if b > 0.0 { b } else { f64::INFINITY })
+            .collect();
+        Self { bandwidth, latency }
+    }
+
+    /// Uniform links with the last `n_slow` workers' bandwidth divided by
+    /// `slow_factor` — the bimodal-cluster idiom from `straggler/`.
+    pub fn uniform_with_slow(
+        n: usize,
+        bandwidth: f64,
+        latency: f64,
+        n_slow: usize,
+        slow_factor: f64,
+    ) -> Self {
+        assert!(n_slow <= n, "n_slow must be <= n");
+        assert!(slow_factor >= 1.0, "slow_factor must be >= 1");
+        let mut link = Self::uniform(n, bandwidth, latency);
+        for b in link.bandwidth[n - n_slow..].iter_mut() {
+            *b /= slow_factor;
+        }
+        link
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.bandwidth.len()
+    }
+
+    /// Virtual time worker `i`'s uplink needs for a `bytes`-sized message.
+    pub fn upload_delay(&self, worker: usize, bytes: u64) -> f64 {
+        let bw = self.bandwidth[worker];
+        let transfer =
+            if bw.is_finite() { bytes as f64 / bw } else { 0.0 };
+        self.latency[worker] + transfer
+    }
+
+    /// True iff every upload is free (infinite bandwidth, zero latency) —
+    /// the drivers use this to skip per-worker delay adjustments entirely.
+    pub fn is_zero_cost(&self) -> bool {
+        self.bandwidth.iter().all(|b| b.is_infinite())
+            && self.latency.iter().all(|&l| l == 0.0)
+    }
+
+    /// Human-readable description for labels.
+    pub fn name(&self) -> String {
+        if self.is_zero_cost() {
+            return "free-link".into();
+        }
+        let b0 = self.bandwidth[0];
+        let l0 = self.latency[0];
+        let uniform = self.bandwidth.iter().all(|&b| b == b0)
+            && self.latency.iter().all(|&l| l == l0);
+        if uniform {
+            format!("link(bw={b0}, lat={l0})")
+        } else {
+            format!("link(heterogeneous, n={})", self.n())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cost_is_free_everywhere() {
+        let l = LinkModel::zero_cost(8);
+        assert!(l.is_zero_cost());
+        for i in 0..8 {
+            assert_eq!(l.upload_delay(i, 1 << 30), 0.0);
+        }
+    }
+
+    #[test]
+    fn uniform_prices_bytes_linearly() {
+        let l = LinkModel::uniform(4, 100.0, 0.5);
+        assert!(!l.is_zero_cost());
+        assert!((l.upload_delay(0, 200) - 2.5).abs() < 1e-12);
+        assert!((l.upload_delay(3, 0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonpositive_bandwidth_means_infinite() {
+        let l = LinkModel::uniform(2, 0.0, 0.0);
+        assert!(l.is_zero_cost());
+        let l2 = LinkModel::per_worker(vec![100.0, -1.0], vec![0.0, 0.0]);
+        assert_eq!(l2.upload_delay(1, 1_000_000), 0.0);
+        assert!(l2.upload_delay(0, 100) > 0.0);
+    }
+
+    #[test]
+    fn slow_tail_is_slower() {
+        let l = LinkModel::uniform_with_slow(10, 100.0, 0.0, 3, 10.0);
+        assert!((l.upload_delay(0, 100) - 1.0).abs() < 1e-12);
+        assert!((l.upload_delay(9, 100) - 10.0).abs() < 1e-12);
+        assert_eq!(l.upload_delay(6, 100), l.upload_delay(0, 100));
+    }
+}

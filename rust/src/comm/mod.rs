@@ -1,0 +1,124 @@
+//! Gradient communication: compression, error feedback, and a
+//! bytes-on-the-wire cost model.
+//!
+//! The paper treats a worker's response time as a single scalar, but in a
+//! real cluster that delay is compute **plus** upload, and the upload cost
+//! depends on how the gradient is encoded (cf. the same authors' follow-up,
+//! arXiv 2208.03134). This module makes that axis explicit:
+//!
+//! * [`Compressor`] — lossy/lossless gradient encodings ([`Dense`],
+//!   [`QuantizeQsgd`], [`TopK`], [`RandK`]), each reporting its exact
+//!   encoded size through a shared [`WireFormat`] size model;
+//! * [`ErrorFeedback`] — the per-worker residual accumulator that carries
+//!   what compression dropped into the next round, preserving convergence
+//!   (Seide et al. 2014; Stich et al. 2018);
+//! * [`LinkModel`] — per-worker uplink bandwidth + latency (the comm
+//!   analogue of [`DelayModel`](crate::straggler::DelayModel)) converting
+//!   encoded bytes into a virtual upload delay;
+//! * [`CommChannel`] — the bundle the training drivers route gradients
+//!   through. [`CommChannel::dense`] is the zero-cost default, and with it
+//!   every driver reproduces the pre-`comm` trajectories bit for bit.
+//!
+//! Because the upload delay is added to the compute delay **before** the
+//! fastest-k gather, compression genuinely changes which workers land in
+//! the top k — the error-runtime trade-off the `fig_comm_tradeoff` bench
+//! sweeps.
+
+mod channel;
+mod compress;
+mod feedback;
+mod link;
+
+pub use channel::{CommChannel, CommStats, Transmission};
+pub use compress::{Compressor, Dense, QuantizeQsgd, RandK, TopK};
+pub use feedback::ErrorFeedback;
+pub use link::LinkModel;
+
+/// Byte-accounting model for encoded gradient messages.
+///
+/// Kept separate from the compressors so every scheme prices its payload
+/// with the same framing assumptions and the benches can sweep the model
+/// (e.g. 2-byte indices for d < 65536).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireFormat {
+    /// Fixed per-message framing: generation tag, worker id, payload
+    /// length, checksum.
+    pub header_bytes: u64,
+    /// Bytes per dense value (f32 on the wire).
+    pub value_bytes: u64,
+    /// Bytes per coordinate index in a sparse message.
+    pub index_bytes: u64,
+    /// Bytes for a PRNG seed shipped in place of explicit indices.
+    pub seed_bytes: u64,
+}
+
+impl Default for WireFormat {
+    fn default() -> Self {
+        Self { header_bytes: 16, value_bytes: 4, index_bytes: 4, seed_bytes: 8 }
+    }
+}
+
+impl WireFormat {
+    /// Size of a dense d-vector message.
+    pub fn dense(&self, d: usize) -> u64 {
+        self.header_bytes + self.value_bytes * d as u64
+    }
+
+    /// Size of a sparse message with explicit (index, value) pairs.
+    pub fn sparse(&self, nnz: usize) -> u64 {
+        self.header_bytes + (self.index_bytes + self.value_bytes) * nnz as u64
+    }
+
+    /// Size of a sparse message whose indices are reconstructed from a
+    /// shared PRNG seed (values only + the seed).
+    pub fn seeded_sparse(&self, nnz: usize) -> u64 {
+        self.header_bytes + self.seed_bytes + self.value_bytes * nnz as u64
+    }
+
+    /// Size of an s-level stochastically quantized d-vector: one f32 norm
+    /// plus `ceil(log2(2s+1))` bits per coordinate (sign ⊗ level ∪ zero),
+    /// rounded up to whole bytes.
+    pub fn quantized(&self, d: usize, levels: u32) -> u64 {
+        let bits = Self::bits_per_symbol(levels) * d as u64;
+        self.header_bytes + self.value_bytes + (bits + 7) / 8
+    }
+
+    /// Bits to address the `2·levels + 1` quantization symbols.
+    pub fn bits_per_symbol(levels: u32) -> u64 {
+        let symbols = 2 * levels as u64 + 1;
+        // ceil(log2(symbols)) for symbols >= 2.
+        64 - (symbols - 1).leading_zeros() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes_are_exact() {
+        let w = WireFormat::default();
+        assert_eq!(w.dense(100), 16 + 400);
+        assert_eq!(w.sparse(10), 16 + 80);
+        assert_eq!(w.seeded_sparse(10), 16 + 8 + 40);
+        // 4 levels -> 9 symbols -> 4 bits/coord -> 50 payload bytes.
+        assert_eq!(w.quantized(100, 4), 16 + 4 + 50);
+    }
+
+    #[test]
+    fn bits_per_symbol_is_ceil_log2() {
+        assert_eq!(WireFormat::bits_per_symbol(1), 2); // 3 symbols
+        assert_eq!(WireFormat::bits_per_symbol(2), 3); // 5 symbols
+        assert_eq!(WireFormat::bits_per_symbol(4), 4); // 9 symbols
+        assert_eq!(WireFormat::bits_per_symbol(127), 8); // 255 symbols
+        assert_eq!(WireFormat::bits_per_symbol(128), 9); // 257 symbols
+    }
+
+    #[test]
+    fn sparsification_beats_dense_only_below_half_density() {
+        let w = WireFormat::default();
+        // (index, value) pairs double the per-coordinate cost.
+        assert!(w.sparse(50) < w.dense(100) + w.header_bytes);
+        assert!(w.sparse(10) * 4 < w.dense(100));
+    }
+}

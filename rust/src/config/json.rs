@@ -78,14 +78,21 @@ impl Json {
 }
 
 /// Parse failure with byte offset.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct JsonError {
     /// Byte offset of the failure.
     pub pos: usize,
     /// Description.
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -15,4 +15,7 @@ pub mod toml;
 
 mod schema;
 
-pub use schema::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
+pub use schema::{
+    CommSpec, CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec,
+    WorkloadSpec,
+};

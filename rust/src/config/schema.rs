@@ -82,6 +82,111 @@ impl DelaySpec {
     }
 }
 
+/// Which gradient compression scheme to apply on the uplink.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressorSpec {
+    /// Full-precision f32 payload (the default; lossless).
+    Dense,
+    /// QSGD stochastic quantization with `levels` levels per sign.
+    Qsgd {
+        /// Quantization levels s >= 1.
+        levels: u32,
+    },
+    /// Top-k magnitude sparsification keeping fraction `frac`.
+    TopK {
+        /// Kept coordinate fraction in (0, 1].
+        frac: f64,
+    },
+    /// Seeded random sparsification keeping fraction `frac`.
+    RandK {
+        /// Kept coordinate fraction in (0, 1].
+        frac: f64,
+    },
+}
+
+/// Uplink communication model: scheme + error feedback + link parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommSpec {
+    /// Compression scheme.
+    pub scheme: CompressorSpec,
+    /// Carry compression residuals across rounds (ignored for `Dense`).
+    pub error_feedback: bool,
+    /// Uplink bandwidth in bytes per virtual-time unit (0 = infinite).
+    pub bandwidth: f64,
+    /// Fixed per-message upload latency in virtual-time units.
+    pub latency: f64,
+}
+
+impl Default for CommSpec {
+    /// Dense over a free link — the paper's compute-only timing.
+    fn default() -> Self {
+        Self {
+            scheme: CompressorSpec::Dense,
+            error_feedback: true,
+            bandwidth: 0.0,
+            latency: 0.0,
+        }
+    }
+}
+
+impl CommSpec {
+    /// Instantiate the channel for `n` workers.
+    pub fn build(&self, n: usize) -> crate::comm::CommChannel {
+        use crate::comm::{
+            CommChannel, Compressor, Dense, LinkModel, QuantizeQsgd, RandK,
+            TopK,
+        };
+        let compressor: Box<dyn Compressor> = match &self.scheme {
+            CompressorSpec::Dense => Box::new(Dense::new()),
+            CompressorSpec::Qsgd { levels } => {
+                Box::new(QuantizeQsgd::new(*levels))
+            }
+            CompressorSpec::TopK { frac } => Box::new(TopK::new(*frac)),
+            CompressorSpec::RandK { frac } => Box::new(RandK::new(*frac)),
+        };
+        let link = if self.bandwidth <= 0.0 && self.latency <= 0.0 {
+            LinkModel::zero_cost(n)
+        } else {
+            LinkModel::uniform(n, self.bandwidth, self.latency)
+        };
+        let feedback = self.error_feedback
+            && !matches!(self.scheme, CompressorSpec::Dense);
+        CommChannel::new(compressor, link, feedback)
+    }
+
+    /// Check scheme/link parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.scheme {
+            CompressorSpec::Qsgd { levels } if levels == 0 => {
+                return Err("comm.levels must be >= 1".into())
+            }
+            CompressorSpec::TopK { frac } | CompressorSpec::RandK { frac }
+                if !(frac > 0.0 && frac <= 1.0) =>
+            {
+                return Err(format!(
+                    "comm.frac={frac} must be in (0, 1]"
+                ))
+            }
+            _ => {}
+        }
+        // Finiteness matters: NaN slips past a `< 0.0` check and +inf
+        // panics deep in the drivers instead of failing here.
+        if !self.bandwidth.is_finite() || self.bandwidth < 0.0 {
+            return Err(format!(
+                "comm.bandwidth={} must be finite and >= 0 (0 = infinite)",
+                self.bandwidth
+            ));
+        }
+        if !self.latency.is_finite() || self.latency < 0.0 {
+            return Err(format!(
+                "comm.latency={} must be finite and >= 0",
+                self.latency
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Which k policy to run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PolicySpec {
@@ -136,6 +241,8 @@ pub struct ExperimentConfig {
     pub policy: PolicySpec,
     /// Workload.
     pub workload: WorkloadSpec,
+    /// Uplink communication model.
+    pub comm: CommSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -152,6 +259,7 @@ impl Default for ExperimentConfig {
             delays: DelaySpec::Exponential { lambda: 1.0 },
             policy: PolicySpec::Adaptive(PflugParams::default()),
             workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
+            comm: CommSpec::default(),
         }
     }
 }
@@ -247,6 +355,43 @@ impl ExperimentConfig {
             };
         }
 
+        if let Some(sec) = doc.section("comm") {
+            let kind = sec
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("dense");
+            let f = |key: &str, dflt: f64| {
+                sec.get(key).and_then(|v| v.as_float()).unwrap_or(dflt)
+            };
+            cfg.comm.scheme = match kind {
+                "dense" => CompressorSpec::Dense,
+                "qsgd" => {
+                    let levels = sec
+                        .get("levels")
+                        .and_then(|v| v.as_int())
+                        .unwrap_or(4);
+                    // Check the i64 before narrowing: `levels = -1` must
+                    // not wrap into a 4-billion-level "compressor".
+                    if !(1..=i64::from(u32::MAX)).contains(&levels) {
+                        return Err(format!(
+                            "comm.levels={levels} must be in 1..={}",
+                            u32::MAX
+                        ));
+                    }
+                    CompressorSpec::Qsgd { levels: levels as u32 }
+                }
+                "topk" => CompressorSpec::TopK { frac: f("frac", 0.1) },
+                "randk" => CompressorSpec::RandK { frac: f("frac", 0.1) },
+                other => return Err(format!("unknown comm.kind '{other}'")),
+            };
+            cfg.comm.error_feedback = sec
+                .get("error_feedback")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(true);
+            cfg.comm.bandwidth = f("bandwidth", 0.0);
+            cfg.comm.latency = f("latency", 0.0);
+        }
+
         if let Some(sec) = doc.section("workload") {
             let kind = sec
                 .get("kind")
@@ -309,6 +454,7 @@ impl ExperimentConfig {
                 ));
             }
         }
+        self.comm.validate()?;
         Ok(())
     }
 }
@@ -381,5 +527,86 @@ d = 50
         let spec = DelaySpec::Exponential { lambda: 2.0 };
         let model = spec.build().unwrap();
         assert!(model.name().contains("exp"));
+    }
+
+    #[test]
+    fn comm_section_parses_and_builds() {
+        let text = r#"
+n = 10
+
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+
+[comm]
+kind = "topk"
+frac = 0.25
+bandwidth = 500.0
+latency = 0.05
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.comm,
+            CommSpec {
+                scheme: CompressorSpec::TopK { frac: 0.25 },
+                error_feedback: true,
+                bandwidth: 500.0,
+                latency: 0.05,
+            }
+        );
+        let channel = cfg.comm.build(cfg.n);
+        assert_eq!(channel.n(), 10);
+        assert!(channel.error_feedback_enabled());
+        assert!(!channel.link_is_zero_cost());
+        // 25% of d=10 -> 3 (index, value) pairs + 16-byte header.
+        assert_eq!(channel.message_bytes(10), 16 + 3 * 8);
+    }
+
+    #[test]
+    fn comm_defaults_to_dense_free_link() {
+        let cfg = ExperimentConfig::from_toml("n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n").unwrap();
+        assert_eq!(cfg.comm, CommSpec::default());
+        let channel = cfg.comm.build(cfg.n);
+        assert!(channel.link_is_zero_cost());
+        assert!(!channel.error_feedback_enabled());
+        assert_eq!(channel.name(), "dense");
+    }
+
+    #[test]
+    fn comm_validation_rejects_bad_params() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.comm.scheme = CompressorSpec::TopK { frac: 0.0 };
+        assert!(cfg.validate().is_err());
+        cfg.comm.scheme = CompressorSpec::TopK { frac: 1.5 };
+        assert!(cfg.validate().is_err());
+        cfg.comm.scheme = CompressorSpec::Qsgd { levels: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.comm.scheme = CompressorSpec::Dense;
+        cfg.comm.bandwidth = -1.0;
+        assert!(cfg.validate().is_err());
+        assert!(ExperimentConfig::from_toml("[comm]\nkind = \"zip\"\n")
+            .is_err());
+        // Negative levels must be rejected, not wrapped through `as u32`.
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\nkind = \"qsgd\"\nlevels = -1\n"
+        )
+        .is_err());
+        // NaN/inf link parameters must fail validation, not panic later.
+        let mut cfg = ExperimentConfig::default();
+        cfg.comm.latency = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.comm.latency = 0.0;
+        cfg.comm.bandwidth = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn comm_error_feedback_can_be_disabled() {
+        let text = "[comm]\nkind = \"qsgd\"\nlevels = 8\nerror_feedback = false\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.comm.scheme, CompressorSpec::Qsgd { levels: 8 });
+        assert!(!cfg.comm.error_feedback);
+        assert!(!cfg.comm.build(cfg.n).error_feedback_enabled());
     }
 }

@@ -55,6 +55,7 @@ pub fn fig1(points: usize) -> Fig1Output {
                 time: t,
                 k,
                 error: bound.eval(k, t),
+                ..Default::default()
             });
         }
         fixed.push(rec);
@@ -63,7 +64,13 @@ pub fn fig1(points: usize) -> Fig1Output {
     let env = adaptive_envelope(&bound, &ts);
     let mut adaptive = Recorder::new("adaptive (Theorem 1)");
     for (i, (&t, &e)) in ts.iter().zip(&env).enumerate() {
-        adaptive.push_forced(Sample { iteration: i as u64, time: t, k: 0, error: e });
+        adaptive.push_forced(Sample {
+            iteration: i as u64,
+            time: t,
+            k: 0,
+            error: e,
+            ..Default::default()
+        });
     }
 
     let switches = switching_times(&bound);
@@ -99,6 +106,7 @@ fn fig2_base(seed: u64) -> ExperimentConfig {
         delays: DelaySpec::Exponential { lambda: 1.0 },
         policy: PolicySpec::Fixed { k: 10 },
         workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
+        comm: Default::default(),
     }
 }
 

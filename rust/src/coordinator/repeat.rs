@@ -101,6 +101,7 @@ mod tests {
             delays: DelaySpec::Exponential { lambda: 1.0 },
             policy: PolicySpec::Fixed { k: 5 },
             workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+            comm: Default::default(),
         }
     }
 

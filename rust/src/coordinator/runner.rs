@@ -1,10 +1,10 @@
 //! Config-driven experiment execution.
 
-use crate::async_sgd::{run_async, AsyncConfig};
+use crate::async_sgd::{run_async_comm, AsyncConfig};
 use crate::config::{ExperimentConfig, PolicySpec, WorkloadSpec};
 use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
 use crate::grad::NativeBackend;
-use crate::master::{run_fastest_k, MasterConfig};
+use crate::master::{run_fastest_k_comm, MasterConfig};
 use crate::metrics::Recorder;
 use crate::model::LinRegProblem;
 use crate::policy::{AdaptivePflug, FixedK, KPolicy};
@@ -19,6 +19,10 @@ pub struct ExperimentOutput {
     pub total_time: f64,
     /// k switch log (empty for fixed/async).
     pub k_changes: Vec<(u64, f64, usize)>,
+    /// Encoded bytes of all accepted gradient messages.
+    pub bytes_sent: u64,
+    /// Total upload time of accepted messages.
+    pub comm_time: f64,
 }
 
 /// Run one experiment end-to-end on the native backend.
@@ -45,6 +49,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
     let problem = LinRegProblem::new(&ds);
     let mut backend = NativeBackend::new(Shards::partition(&ds, cfg.n));
     let delays = cfg.delays.build()?;
+    let mut channel = cfg.comm.build(cfg.n);
     let w0 = vec![0.0f32; d];
 
     match &cfg.policy {
@@ -57,9 +62,10 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 record_stride: cfg.record_stride,
                 ..Default::default()
             };
-            let run = run_async(
+            let run = run_async_comm(
                 &mut backend,
                 delays.as_ref(),
+                &mut channel,
                 &w0,
                 &acfg,
                 &mut |w| problem.error(w),
@@ -71,6 +77,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 steps: run.updates,
                 total_time: run.total_time,
                 k_changes: Vec::new(),
+                bytes_sent: run.bytes_sent,
+                comm_time: run.comm_time,
             })
         }
         policy_spec => {
@@ -89,10 +97,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 seed: cfg.seed,
                 record_stride: cfg.record_stride,
             };
-            let run = run_fastest_k(
+            let run = run_fastest_k_comm(
                 &mut backend,
                 delays.as_ref(),
                 policy.as_mut(),
+                &mut channel,
                 &w0,
                 &mcfg,
                 &mut |w| problem.error(w),
@@ -104,6 +113,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 steps: run.iterations,
                 total_time: run.total_time,
                 k_changes: run.k_changes,
+                bytes_sent: run.bytes_sent,
+                comm_time: run.comm_time,
             })
         }
     }
@@ -127,6 +138,7 @@ mod tests {
             delays: DelaySpec::Exponential { lambda: 1.0 },
             policy: PolicySpec::Fixed { k: 5 },
             workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+            comm: Default::default(),
         }
     }
 
@@ -162,6 +174,31 @@ mod tests {
         let out = run_experiment(&cfg).unwrap();
         assert_eq!(out.steps, 300);
         assert!(out.k_changes.is_empty());
+    }
+
+    #[test]
+    fn compressed_channel_runs_and_meters_bytes() {
+        use crate::config::{CommSpec, CompressorSpec};
+        let mut cfg = base();
+        cfg.comm = CommSpec {
+            scheme: CompressorSpec::TopK { frac: 0.3 },
+            error_feedback: true,
+            bandwidth: 1000.0,
+            latency: 0.01,
+        };
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.steps, 300);
+        // 3-of-10 coords: 16 + 24 = 40 bytes per accepted message, k=5.
+        assert_eq!(out.bytes_sent, 300 * 5 * 40);
+        assert!(out.comm_time > 0.0);
+        assert!(
+            out.recorder.last().unwrap().error
+                < out.recorder.samples()[0].error
+        );
+        // The default dense config meters bytes but charges no time.
+        let dense = run_experiment(&base()).unwrap();
+        assert!(dense.bytes_sent > out.bytes_sent);
+        assert_eq!(dense.comm_time, 0.0);
     }
 
     #[test]

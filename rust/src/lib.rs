@@ -8,10 +8,24 @@
 //!
 //! * **L3 (this crate)** — fastest-k master loop, adaptive-k policies
 //!   (Algorithm 1's Pflug test, Theorem 1's bound-optimal schedule),
-//!   straggler simulation, async-SGD baseline, metrics, CLI.
+//!   straggler simulation, gradient communication model ([`comm`]:
+//!   compression, error feedback, per-worker uplink costs), async-SGD
+//!   baseline, metrics, CLI.
 //! * **L2/L1 (build-time Python)** — JAX models + Pallas kernels, AOT
 //!   lowered to HLO text in `artifacts/`, executed through the PJRT
-//!   runtime in [`runtime`]. Python never runs at training time.
+//!   runtime in `runtime` (behind the `pjrt` feature). Python never runs
+//!   at training time.
+//!
+//! ## Communication model
+//!
+//! Every driver ships gradients through a [`comm::CommChannel`]. The
+//! default channel ([`comm::CommChannel::dense`]) is dense f32 over a
+//! zero-cost link, which reproduces the paper's compute-only timing
+//! exactly; swapping in [`comm::TopK`]/[`comm::QuantizeQsgd`]/
+//! [`comm::RandK`] over a finite-bandwidth [`comm::LinkModel`] adds a
+//! per-worker virtual upload delay to each response time *before* the
+//! fastest-k gather, and [`comm::ErrorFeedback`] carries the compression
+//! residual so convergence is preserved. See `benches/fig_comm_tradeoff`.
 //!
 //! ## Quick start
 //!
@@ -37,6 +51,7 @@ pub mod async_sgd;
 pub mod bench_harness;
 pub mod cli;
 pub mod coding;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -49,6 +64,7 @@ pub mod model;
 pub mod policy;
 pub mod proptest_lite;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod stats;
@@ -58,10 +74,18 @@ pub mod transformer;
 
 /// One-stop imports for examples and benches.
 pub mod prelude {
-    pub use crate::async_sgd::{run_async, AsyncConfig, AsyncRun};
+    pub use crate::async_sgd::{
+        run_async, run_async_comm, AsyncConfig, AsyncRun,
+    };
+    pub use crate::comm::{
+        CommChannel, CommStats, Compressor, Dense, ErrorFeedback, LinkModel,
+        QuantizeQsgd, RandK, TopK, WireFormat,
+    };
     pub use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
     pub use crate::grad::{GradBackend, NativeBackend};
-    pub use crate::master::{run_fastest_k, FastestKRun, MasterConfig};
+    pub use crate::master::{
+        run_fastest_k, run_fastest_k_comm, FastestKRun, MasterConfig,
+    };
     pub use crate::metrics::{write_csv, AsciiPlot, Recorder, Sample};
     pub use crate::model::LinRegProblem;
     pub use crate::policy::{

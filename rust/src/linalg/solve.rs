@@ -9,15 +9,28 @@
 use super::Matrix;
 
 /// Failure modes of the SPD solve.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CholeskyError {
     /// The matrix is not positive definite (or badly conditioned).
-    #[error("matrix not positive definite at pivot {0}")]
     NotPositiveDefinite(usize),
     /// Shape mismatch between the matrix and right-hand side.
-    #[error("dimension mismatch: matrix is {0}x{0}, rhs has len {1}")]
     DimensionMismatch(usize, usize),
 }
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite(pivot) => {
+                write!(f, "matrix not positive definite at pivot {pivot}")
+            }
+            CholeskyError::DimensionMismatch(n, len) => {
+                write!(f, "dimension mismatch: matrix is {n}x{n}, rhs has len {len}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Solve `A x = b` for SPD `A` given as a dense row-major f64 buffer.
 /// End-to-end f64: assembling `XᵀX` and then narrowing to f32 before the

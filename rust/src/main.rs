@@ -3,14 +3,13 @@
 //! See `adasgd help` (or [`adasgd::cli::print_help`]) for the command map.
 
 use adasgd::cli::{print_help, Args};
-use adasgd::config::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
+use adasgd::config::{
+    CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
+};
 use adasgd::coordinator::{fig1, fig2, fig3, run_experiment, FigureOutput};
-use adasgd::master::{run_fastest_k, MasterConfig};
 use adasgd::metrics::{write_csv, AsciiPlot, Recorder};
-use adasgd::policy::{AdaptivePflug, FixedK, PflugParams};
-use adasgd::runtime::Runtime;
+use adasgd::policy::{FixedK, PflugParams};
 use adasgd::theory::{switching_times, BoundParams, ErrorBound};
-use adasgd::transformer::TransformerBackend;
 use std::path::Path;
 
 fn main() {
@@ -117,6 +116,27 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.workload = WorkloadSpec::LinReg { m, d };
         let lambda = args.get_parse("lambda", 1.0f64).unwrap_or(1.0);
         cfg.delays = DelaySpec::Exponential { lambda };
+        cfg.comm.scheme = match args.get("comm").unwrap_or("dense") {
+            "dense" => CompressorSpec::Dense,
+            "qsgd" => CompressorSpec::Qsgd {
+                levels: args.get_parse("comm-levels", 4u32).unwrap_or(4),
+            },
+            "topk" => CompressorSpec::TopK {
+                frac: args.get_parse("comm-frac", 0.1f64).unwrap_or(0.1),
+            },
+            "randk" => CompressorSpec::RandK {
+                frac: args.get_parse("comm-frac", 0.1f64).unwrap_or(0.1),
+            },
+            other => {
+                eprintln!("config error: unknown --comm scheme '{other}'");
+                return 2;
+            }
+        };
+        cfg.comm.error_feedback = !args.has("no-error-feedback");
+        cfg.comm.bandwidth =
+            args.get_parse("bandwidth", 0.0f64).unwrap_or(0.0);
+        cfg.comm.latency =
+            args.get_parse("link-latency", 0.0f64).unwrap_or(0.0);
         cfg.policy = if args.has("async") {
             PolicySpec::Async
         } else if let Some(kstr) = args.get("k") {
@@ -153,6 +173,10 @@ fn cmd_train(args: &Args) -> i32 {
                         .collect::<Vec<_>>()
                         .join(", ")
                 ),
+                format!(
+                    "comm: {} bytes uploaded, {:.1} upload time units",
+                    out.bytes_sent, out.comm_time
+                ),
             ];
             emit(args, "train", &[&out.recorder], &summary);
             0
@@ -164,7 +188,9 @@ fn cmd_train(args: &Args) -> i32 {
     }
 }
 
-fn open_runtime(args: &Args) -> Option<std::sync::Arc<Runtime>> {
+#[cfg(feature = "pjrt")]
+fn open_runtime(args: &Args) -> Option<std::sync::Arc<adasgd::runtime::Runtime>> {
+    use adasgd::runtime::Runtime;
     let res = match args.get("artifacts") {
         Some(dir) => Runtime::open(dir),
         None => Runtime::open_default(),
@@ -178,7 +204,28 @@ fn open_runtime(args: &Args) -> Option<std::sync::Arc<Runtime>> {
     }
 }
 
+/// Friendly failure for commands that need the PJRT runtime in a build
+/// without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> i32 {
+    eprintln!(
+        "runtime error: `{cmd}` needs the PJRT artifact runtime; rebuild \
+         with `cargo build --features pjrt` (and real xla_extension \
+         bindings in place of rust/vendor/xla)"
+    );
+    1
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_transformer(_args: &Args) -> i32 {
+    pjrt_unavailable("train-transformer")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_transformer(args: &Args) -> i32 {
+    use adasgd::master::{run_fastest_k, MasterConfig};
+    use adasgd::policy::AdaptivePflug;
+    use adasgd::transformer::TransformerBackend;
     let Some(runtime) = open_runtime(args) else { return 1 };
     let tag = args.get("tag").unwrap_or("tiny").to_string();
     let steps = args.get_parse::<u64>("steps", 200).unwrap_or(200);
@@ -304,6 +351,12 @@ fn cmd_threaded(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_list_artifacts(_args: &Args) -> i32 {
+    pjrt_unavailable("list-artifacts")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_list_artifacts(args: &Args) -> i32 {
     let Some(runtime) = open_runtime(args) else { return 1 };
     println!("artifact registry:");

@@ -15,7 +15,15 @@
 //! trains linear regression and the transformer. Wall-clock is *virtual*
 //! (drawn from the delay model): DESIGN.md §3 substitutions. The threaded
 //! executor (`exec`) replays the same draws with real OS threads.
+//!
+//! Step 2 is communication-aware: each response time is compute delay
+//! plus the virtual upload delay of the worker's encoded gradient (see
+//! [`crate::comm`]); with the default dense zero-cost channel the upload
+//! term is identically zero and the loop is exactly the paper's.
 
 mod sync;
 
-pub use sync::{fastest_k_select, run_fastest_k, FastestKRun, MasterConfig};
+pub use sync::{
+    fastest_k_select, run_fastest_k, run_fastest_k_comm, FastestKRun,
+    MasterConfig,
+};

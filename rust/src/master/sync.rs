@@ -1,5 +1,14 @@
 //! Synchronous fastest-k SGD driver.
+//!
+//! Gradients travel through a [`CommChannel`]: each worker's response time
+//! is its compute delay **plus** the virtual upload delay of its encoded
+//! gradient message, and the fastest-k selection runs on that total — so
+//! a smaller encoding genuinely changes which workers make the top k.
+//! [`run_fastest_k`] uses the zero-cost dense channel and reproduces the
+//! paper's compute-only timing exactly; [`run_fastest_k_comm`] takes an
+//! explicit channel.
 
+use crate::comm::CommChannel;
 use crate::grad::GradBackend;
 use crate::linalg::dot;
 use crate::metrics::{Recorder, Sample};
@@ -49,6 +58,11 @@ pub struct FastestKRun {
     pub total_time: f64,
     /// (iteration, time, new_k) for every k change the policy made.
     pub k_changes: Vec<(u64, f64, usize)>,
+    /// Encoded bytes of all accepted gradient messages.
+    pub bytes_sent: u64,
+    /// Total upload time of accepted messages (comm work, not critical
+    /// path — the critical path is folded into `total_time`).
+    pub comm_time: f64,
 }
 
 /// Select the indices of the k smallest delays and the k-th smallest value.
@@ -76,7 +90,8 @@ pub fn fastest_k_select(
     }
 }
 
-/// Run synchronous fastest-k SGD from `w0`.
+/// Run synchronous fastest-k SGD from `w0` with the zero-cost dense
+/// channel (gradients ship for free — the paper's timing model).
 ///
 /// `eval_error` maps the current model to the reported error metric
 /// (e.g. `F(w) − F*`); it is called every `record_stride` iterations.
@@ -89,14 +104,46 @@ pub fn run_fastest_k(
     eval_error: &mut dyn FnMut(&[f32]) -> f64,
 ) -> FastestKRun {
     let n = backend.n_shards();
+    let mut channel = CommChannel::dense(n);
+    run_fastest_k_comm(backend, delays, policy, &mut channel, w0, cfg, eval_error)
+}
+
+/// Run synchronous fastest-k SGD from `w0`, shipping every accepted
+/// gradient through `channel`.
+///
+/// Compression draws come from a dedicated rng stream, so the straggler
+/// delay sequence is identical across schemes for a fixed seed — scheme
+/// comparisons are paired. With [`CommChannel::dense`] this reproduces
+/// [`run_fastest_k`] (and the pre-comm seed figures) bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fastest_k_comm(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    policy: &mut dyn KPolicy,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &MasterConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> FastestKRun {
+    let n = backend.n_shards();
     let d = backend.dim();
     assert_eq!(w0.len(), d, "w0 dimension mismatch");
+    assert_eq!(
+        channel.n(),
+        n,
+        "comm channel sized for {} workers, backend has {n}",
+        channel.n()
+    );
 
     let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
+    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC044);
+    let bytes0 = channel.stats.bytes_sent;
+    let comm_t0 = channel.stats.comm_time;
     let mut w = w0.to_vec();
     let mut g = vec![0.0f32; d]; // ĝ_j
     let mut g_prev = vec![0.0f32; d]; // ĝ_{j−1}
     let mut partial = vec![0.0f32; d];
+    let mut decoded = vec![0.0f32; d];
     let mut velocity: Option<Vec<f32>> = None;
     // Batched-backend scratch (allocated only if the backend supports it).
     let mut all_buf: Option<Vec<f32>> = None;
@@ -110,19 +157,28 @@ pub fn run_fastest_k(
     let mut t = 0.0f64;
     let mut j = 0u64;
 
+    // Per-message upload pricing is data-independent, so the whole
+    // round's comm delays are known before any gradient is computed. On a
+    // zero-cost link the upload delay is exactly 0.0, and `x + 0.0` is
+    // bitwise identity for the positive compute delays, so no branch is
+    // needed to preserve the paper's compute-only trajectories.
+    let msg_bytes = channel.message_bytes(d);
+
     // Initial point.
     recorder.push_forced(Sample {
         iteration: 0,
         time: 0.0,
         k,
         error: eval_error(&w),
+        ..Default::default()
     });
 
     while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time) {
         backend.on_iteration(j);
-        // (2) response times + fastest-k selection.
+        // (2) response times (compute + upload) + fastest-k selection.
         for (i, slot) in delay_buf.iter_mut().enumerate() {
-            *slot = delays.sample(j, i, &mut rng);
+            *slot = delays.sample(j, i, &mut rng)
+                + channel.link_upload_delay(i, msg_bytes);
         }
         let (x_k, _) = fastest_k_select(&delay_buf, k, &mut idx_buf);
         t += x_k;
@@ -130,21 +186,24 @@ pub fn run_fastest_k(
         // (3) aggregate the k fastest partial gradients — through the
         // batched path when the backend has one and k is past the
         // dispatch-cost crossover (~n/4, see GradBackend::all_grads),
-        // else shard by shard.
+        // else shard by shard. Each accepted gradient passes through the
+        // channel (error feedback + compression + byte accounting).
         g.iter_mut().for_each(|v| *v = 0.0);
         let use_batched = backend.supports_all_grads() && 4 * k >= n;
         let buf = all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
         if use_batched && backend.all_grads(&w, buf) {
             for &worker in &idx_buf[..k] {
                 let row = &buf[worker * d..(worker + 1) * d];
-                for (gv, pv) in g.iter_mut().zip(row) {
+                channel.transmit(worker, row, &mut decoded, &mut comm_rng);
+                for (gv, pv) in g.iter_mut().zip(&decoded) {
                     *gv += *pv;
                 }
             }
         } else {
             for &worker in &idx_buf[..k] {
                 backend.partial_grad(worker, &w, &mut partial);
-                for (gv, pv) in g.iter_mut().zip(&partial) {
+                channel.transmit(worker, &partial, &mut decoded, &mut comm_rng);
+                for (gv, pv) in g.iter_mut().zip(&decoded) {
                     *gv += *pv;
                 }
             }
@@ -191,6 +250,8 @@ pub fn run_fastest_k(
                 time: t,
                 k,
                 error: eval_error(&w),
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
             });
         }
     }
@@ -202,10 +263,20 @@ pub fn run_fastest_k(
             time: t,
             k,
             error: eval_error(&w),
+            bytes: channel.stats.bytes_sent - bytes0,
+            comm_time: channel.stats.comm_time - comm_t0,
         });
     }
 
-    FastestKRun { recorder, w, iterations: j, total_time: t, k_changes }
+    FastestKRun {
+        recorder,
+        w,
+        iterations: j,
+        total_time: t,
+        k_changes,
+        bytes_sent: channel.stats.bytes_sent - bytes0,
+        comm_time: channel.stats.comm_time - comm_t0,
+    }
 }
 
 #[cfg(test)]
@@ -327,6 +398,149 @@ mod tests {
         let b = run_once();
         assert_eq!(a.w, b.w);
         assert_eq!(a.total_time, b.total_time);
+    }
+
+    #[test]
+    fn dense_comm_channel_reproduces_the_plain_run_bitwise() {
+        use crate::comm::CommChannel;
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 120,
+            seed: 13,
+            record_stride: 20,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let plain = {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(4);
+            run_fastest_k(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let comm = {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(4);
+            let mut channel = CommChannel::dense(10);
+            run_fastest_k_comm(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        assert_eq!(plain.w, comm.w);
+        assert_eq!(plain.total_time, comm.total_time);
+        assert_eq!(
+            plain.recorder.samples().len(),
+            comm.recorder.samples().len()
+        );
+        for (a, b) in
+            plain.recorder.samples().iter().zip(comm.recorder.samples())
+        {
+            assert_eq!(a, b);
+        }
+        // Dense still meters bytes: 120 iters × k=4 × (16 + 40) bytes.
+        assert_eq!(plain.bytes_sent, 120 * 4 * 56);
+        assert_eq!(plain.comm_time, 0.0);
+    }
+
+    #[test]
+    fn finite_bandwidth_slows_the_clock_and_is_metered() {
+        use crate::comm::{CommChannel, Dense, LinkModel};
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.001,
+            max_iterations: 100,
+            seed: 21,
+            record_stride: 50,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run_with_bw = |bandwidth: f64| {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(5);
+            let link = if bandwidth > 0.0 {
+                LinkModel::uniform(10, bandwidth, 0.0)
+            } else {
+                LinkModel::zero_cost(10)
+            };
+            let mut channel =
+                CommChannel::new(Box::new(Dense::new()), link, false);
+            run_fastest_k_comm(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let free = run_with_bw(0.0);
+        let slow = run_with_bw(56.0); // dense msg = 56 bytes -> +1.0/iter
+        assert!(
+            slow.total_time > free.total_time + 99.0,
+            "upload delay must push every iteration out: {} vs {}",
+            slow.total_time,
+            free.total_time
+        );
+        assert!(slow.comm_time > 0.0);
+        assert_eq!(slow.bytes_sent, free.bytes_sent);
+        // The gradient math is identical — only the clock differs.
+        assert_eq!(slow.w, free.w);
+    }
+
+    #[test]
+    fn topk_with_feedback_trains_and_sends_fewer_bytes() {
+        use crate::comm::{CommChannel, LinkModel, TopK};
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 2500,
+            seed: 5,
+            record_stride: 100,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let (mut backend, problem) = small_setup();
+        let mut policy = FixedK::new(5);
+        let mut channel = CommChannel::new(
+            Box::new(TopK::new(0.3)),
+            LinkModel::zero_cost(10),
+            true,
+        );
+        let run = run_fastest_k_comm(
+            &mut backend,
+            &delays,
+            &mut policy,
+            &mut channel,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(
+            last < first * 1e-2,
+            "top-k + error feedback failed to descend: {first} -> {last}"
+        );
+        // 3 of 10 coords as (index, value) pairs: 16 + 3*8 = 40 < 56.
+        assert_eq!(run.bytes_sent, 2500 * 5 * 40);
+        // Cumulative bytes must be monotone in the recorded series.
+        let samples = run.recorder.samples();
+        for pair in samples.windows(2) {
+            assert!(pair[1].bytes >= pair[0].bytes);
+        }
     }
 
     #[test]

@@ -96,8 +96,20 @@ mod tests {
         let mut b = Recorder::new("fixed-k10");
         for j in 0..100u64 {
             let t = j as f64;
-            a.push(Sample { iteration: j, time: t, k: 1, error: 100.0 * (-0.05 * t).exp() + 0.01 });
-            b.push(Sample { iteration: j, time: t, k: 10, error: 100.0 * (-0.02 * t).exp() + 0.1 });
+            a.push(Sample {
+                iteration: j,
+                time: t,
+                k: 1,
+                error: 100.0 * (-0.05 * t).exp() + 0.01,
+                ..Default::default()
+            });
+            b.push(Sample {
+                iteration: j,
+                time: t,
+                k: 10,
+                error: 100.0 * (-0.02 * t).exp() + 0.1,
+                ..Default::default()
+            });
         }
         let plot = AsciiPlot::new("test", 60, 16).render(&[&a, &b]);
         assert!(plot.contains("adaptive"));

@@ -1,31 +1,76 @@
 //! CSV export of run records (no serde offline — hand-rolled writer).
+//!
+//! # Column schema (v2)
+//!
+//! One long-format table, one row per recorded [`Sample`] per run:
+//!
+//! | column      | type  | meaning                                           |
+//! |-------------|-------|---------------------------------------------------|
+//! | `label`     | str   | run label (policy / scheme name)                  |
+//! | `iteration` | u64   | iteration (sync) or update (async) index          |
+//! | `time`      | f64   | virtual wall-clock after the iteration            |
+//! | `k`         | usize | k in effect for the iteration (1 for async)       |
+//! | `error`     | f64   | `F(w) − F*` (or raw loss), scientific notation    |
+//! | `bytes`     | u64   | cumulative accepted gradient-message bytes        |
+//! | `comm_time` | f64   | cumulative upload time of accepted messages       |
+//!
+//! The first line of every file is a `#`-prefixed comment naming the
+//! columns, followed by the machine-readable header row — downstream plot
+//! scripts should match columns by name from either line rather than
+//! hardcoding indices. Labels must not contain commas.
 
 use super::Recorder;
 use std::io::Write;
 use std::path::Path;
 
+/// The column list, single source of truth for header + comment lines.
+pub const CSV_COLUMNS: &str = "label,iteration,time,k,error,bytes,comm_time";
+
 /// CSV writing failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CsvError {
     /// Underlying I/O failure.
-    #[error("csv io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-/// Write one or more run records into a single long-format CSV:
-/// `label,iteration,time,k,error`.
+impl std::fmt::Display for CsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvError::Io(e) => write!(f, "csv io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CsvError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CsvError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<std::io::Error> for CsvError {
+    fn from(e: std::io::Error) -> Self {
+        CsvError::Io(e)
+    }
+}
+
+/// Write one or more run records into a single long-format CSV (see the
+/// module docs for the column schema).
 pub fn write_csv(path: &Path, runs: &[&Recorder]) -> Result<(), CsvError> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "label,iteration,time,k,error")?;
+    writeln!(f, "# adasgd run series v2; columns: {CSV_COLUMNS}")?;
+    writeln!(f, "{CSV_COLUMNS}")?;
     for run in runs {
         for s in run.samples() {
             writeln!(
                 f,
-                "{},{},{:.6},{},{:.9e}",
-                run.label, s.iteration, s.time, s.k, s.error
+                "{},{},{:.6},{},{:.9e},{},{:.6}",
+                run.label, s.iteration, s.time, s.k, s.error, s.bytes,
+                s.comm_time
             )?;
         }
     }
@@ -41,15 +86,33 @@ mod tests {
     #[test]
     fn round_trip_via_fs() {
         let mut r = Recorder::new("runA");
-        r.push(Sample { iteration: 0, time: 0.5, k: 2, error: 3.25 });
+        r.push(Sample {
+            iteration: 0,
+            time: 0.5,
+            k: 2,
+            error: 3.25,
+            bytes: 416,
+            comm_time: 1.25,
+        });
         let dir = std::env::temp_dir().join("adasgd_csv_test");
         let path = dir.join("out.csv");
         write_csv(&path, &[&r]).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let mut lines = text.lines();
-        assert_eq!(lines.next().unwrap(), "label,iteration,time,k,error");
+        let comment = lines.next().unwrap();
+        assert!(comment.starts_with('#'), "{comment}");
+        assert!(comment.contains(CSV_COLUMNS));
+        assert_eq!(lines.next().unwrap(), CSV_COLUMNS);
         let row = lines.next().unwrap();
         assert!(row.starts_with("runA,0,0.5"), "{row}");
+        assert!(row.contains(",416,"), "{row}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_and_comment_share_the_column_list() {
+        // Guards against the comment line drifting from the real header.
+        assert_eq!(CSV_COLUMNS.split(',').count(), 7);
+        assert!(CSV_COLUMNS.ends_with("bytes,comm_time"));
     }
 }

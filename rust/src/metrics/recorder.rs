@@ -1,7 +1,7 @@
 //! Error-vs-wall-clock time series of a training run.
 
 /// One recorded point of a run.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Sample {
     /// Iteration index j.
     pub iteration: u64,
@@ -11,6 +11,12 @@ pub struct Sample {
     pub k: usize,
     /// Error metric F(w_j) − F* (or raw loss for workloads without F*).
     pub error: f64,
+    /// Cumulative gradient-message bytes accepted by the master so far
+    /// (0 for runs that predate / bypass the comm channel).
+    pub bytes: u64,
+    /// Cumulative upload time of accepted messages so far (total comm
+    /// work, not critical path — see `comm::CommStats`).
+    pub comm_time: f64,
 }
 
 /// Growable run record with optional sub-sampling.
@@ -87,7 +93,7 @@ mod tests {
     use super::*;
 
     fn sample(it: u64, time: f64, error: f64) -> Sample {
-        Sample { iteration: it, time, k: 1, error }
+        Sample { iteration: it, time, k: 1, error, ..Default::default() }
     }
 
     #[test]

@@ -26,16 +26,13 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Runtime failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
     /// PJRT / XLA failure.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
     /// Manifest parsing / lookup failure.
-    #[error("manifest: {0}")]
     Manifest(String),
     /// Caller passed inputs that don't match the artifact signature.
-    #[error("signature mismatch for '{name}': {detail}")]
     Signature {
         /// Artifact name.
         name: String,
@@ -43,8 +40,42 @@ pub enum RuntimeError {
         detail: String,
     },
     /// I/O failure.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            RuntimeError::Manifest(msg) => write!(f, "manifest: {msg}"),
+            RuntimeError::Signature { name, detail } => {
+                write!(f, "signature mismatch for '{name}': {detail}")
+            }
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Xla(e) => Some(e),
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 /// Shared PJRT CPU client + artifact registry.

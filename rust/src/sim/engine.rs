@@ -25,10 +25,13 @@ impl<T: PartialEq> PartialOrd for Event<T> {
 impl<T: PartialEq> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap behaviour on BinaryHeap (a max-heap).
+        // total_cmp instead of partial_cmp: a NaN time would otherwise
+        // silently compare Equal and corrupt the heap order. NaN can't
+        // get in (schedule_at asserts finiteness) but the ordering must
+        // not be the line that depends on it.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -58,16 +61,21 @@ impl<T: PartialEq> EventQueue<T> {
         self.now
     }
 
-    /// Schedule `payload` at absolute time `at` (must not be in the past).
+    /// Schedule `payload` at absolute time `at` (must be finite and not
+    /// in the past). The finiteness check runs first: a NaN `at` must
+    /// report "not finite", not the misleading "in the past" (NaN fails
+    /// every comparison).
     pub fn schedule_at(&mut self, at: f64, payload: T) {
+        assert!(at.is_finite(), "event time must be finite (got {at})");
         assert!(at >= self.now, "cannot schedule into the past");
-        assert!(at.is_finite(), "event time must be finite");
         self.heap.push(Event { time: at, seq: self.seq, payload });
         self.seq += 1;
     }
 
-    /// Schedule `payload` after a relative `delay >= 0`.
+    /// Schedule `payload` after a relative `delay >= 0` (finite; NaN and
+    /// +inf are rejected).
     pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        assert!(delay.is_finite(), "delay must be finite (got {delay})");
         assert!(delay >= 0.0, "delay must be non-negative");
         self.schedule_at(self.now + delay, payload);
     }
@@ -136,5 +144,46 @@ mod tests {
         q.schedule_at(5.0, ());
         q.pop();
         q.schedule_at(1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_time_with_the_right_message() {
+        // Regression: NaN used to fall into the `>= now` assert and report
+        // "cannot schedule into the past".
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_infinite_delay() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::INFINITY, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_delay() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, ());
+    }
+
+    #[test]
+    fn fifo_ties_survive_interleaved_pops_and_pushes() {
+        // Ties at the same timestamp must pop in insertion order even
+        // when the heap has seen pops and later events in between.
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, "a1");
+        q.schedule_at(0.5, "early");
+        q.schedule_at(1.0, "a2");
+        assert_eq!(q.pop().unwrap().payload, "early");
+        q.schedule_at(1.0, "a3");
+        q.schedule_at(2.0, "late");
+        assert_eq!(q.pop().unwrap().payload, "a1");
+        assert_eq!(q.pop().unwrap().payload, "a2");
+        assert_eq!(q.pop().unwrap().payload, "a3");
+        assert_eq!(q.pop().unwrap().payload, "late");
+        assert!(q.pop().is_none());
     }
 }

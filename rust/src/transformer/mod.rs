@@ -8,7 +8,9 @@
 //! how the paper's scheme is workload-agnostic.
 
 mod corpus;
+#[cfg(feature = "pjrt")]
 mod trainer;
 
 pub use corpus::SyntheticCorpus;
+#[cfg(feature = "pjrt")]
 pub use trainer::{TransformerBackend, TransformerSession};

@@ -247,3 +247,201 @@ fn prop_json_parses_generated_manifests() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Compressor round-trip properties (comm subsystem).
+//
+// The contract every scheme must keep: `decode(encode(g))` plus the error-
+// feedback residual reconstructs `g` — exactly for the sparsifiers (kept
+// coordinates are bitwise, dropped ones land whole in the residual), and
+// within the QSGD quantization bound `‖g‖₂ / s` per coordinate for the
+// stochastic quantizer. Sizes must match the data-independent size model.
+// ---------------------------------------------------------------------------
+
+use adasgd::comm::{
+    Compressor, Dense, ErrorFeedback, QuantizeQsgd, RandK, TopK,
+};
+
+fn grad_gen() -> VecF64 {
+    VecF64 { min_len: 1, max_len: 96, lo: -40.0, hi: 40.0 }
+}
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// Apply `c` through a fresh error-feedback accumulator; return
+/// (decoded, residual, bytes).
+fn round_trip(
+    c: &mut dyn Compressor,
+    g: &[f32],
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    let mut rng = Pcg64::seed(seed);
+    let mut out = vec![0.0f32; g.len()];
+    let bytes = c.apply(g, &mut out, &mut rng);
+    let mut fb = ErrorFeedback::new(1);
+    fb.update(0, g, &out);
+    (out, fb.residual(0).to_vec(), bytes)
+}
+
+#[test]
+fn prop_dense_round_trip_is_bitwise() {
+    runner().check("dense_roundtrip", &grad_gen(), |v| {
+        let g = to_f32(v);
+        let mut c = Dense::new();
+        let (out, resid, bytes) = round_trip(&mut c, &g, 1);
+        if out != g {
+            return Err("dense must be the identity".into());
+        }
+        if resid.iter().any(|&r| r != 0.0) {
+            return Err("dense residual must be zero".into());
+        }
+        if bytes != c.encoded_bytes(g.len()) {
+            return Err(format!(
+                "size model mismatch: {bytes} != {}",
+                c.encoded_bytes(g.len())
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Shared exact-reconstruction check for the sparsifiers.
+fn sparsifier_round_trip_exact(
+    c: &mut dyn Compressor,
+    expected_nnz: usize,
+    g: &[f32],
+    seed: u64,
+) -> Result<(), String> {
+    let (out, resid, bytes) = round_trip(c, g, seed);
+    if bytes != c.encoded_bytes(g.len()) {
+        return Err(format!(
+            "size model mismatch: {bytes} != {}",
+            c.encoded_bytes(g.len())
+        ));
+    }
+    let mut kept = 0usize;
+    for i in 0..g.len() {
+        // Each coordinate is either transmitted bitwise or dropped whole.
+        if out[i] != 0.0 || (g[i] == 0.0 && resid[i] == 0.0) {
+            if out[i] != 0.0 && out[i] != g[i] {
+                return Err(format!(
+                    "coord {i}: kept value {} != input {}",
+                    out[i], g[i]
+                ));
+            }
+        }
+        // decode(encode(g)) + residual == g, exactly (f32 equality).
+        if out[i] + resid[i] != g[i] {
+            return Err(format!(
+                "coord {i}: {} + {} != {}",
+                out[i], resid[i], g[i]
+            ));
+        }
+        if out[i] != 0.0 {
+            kept += 1;
+        }
+    }
+    // Zeros among the top magnitudes can deflate the count; only assert
+    // the upper bound plus exactness above.
+    if kept > expected_nnz {
+        return Err(format!("kept {kept} > nnz {expected_nnz}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_topk_round_trip_is_exact() {
+    let gen = Pair(grad_gen(), UsizeRange { lo: 1, hi: 100 });
+    runner().check("topk_roundtrip", &gen, |(v, pct)| {
+        let g = to_f32(v);
+        let frac = *pct as f64 / 100.0;
+        let mut c = TopK::new(frac);
+        let nnz = c.nnz(g.len());
+        sparsifier_round_trip_exact(&mut c, nnz, &g, 2)
+    });
+}
+
+#[test]
+fn prop_randk_round_trip_is_exact() {
+    let gen = Pair(grad_gen(), UsizeRange { lo: 1, hi: 100 });
+    runner().check("randk_roundtrip", &gen, |(v, pct)| {
+        let g = to_f32(v);
+        let frac = *pct as f64 / 100.0;
+        let mut c = RandK::new(frac);
+        let nnz = c.nnz(g.len());
+        // Different seeds per case come from the value itself.
+        sparsifier_round_trip_exact(&mut c, nnz, &g, 3 + g.len() as u64)
+    });
+}
+
+#[test]
+fn prop_qsgd_round_trip_is_within_the_quantization_bound() {
+    let gen = Pair(grad_gen(), UsizeRange { lo: 1, hi: 64 });
+    runner().check("qsgd_roundtrip", &gen, |(v, levels)| {
+        let g = to_f32(v);
+        let s = *levels as u32;
+        let mut c = QuantizeQsgd::new(s);
+        let (out, resid, bytes) = round_trip(&mut c, &g, 5);
+        if bytes != c.encoded_bytes(g.len()) {
+            return Err(format!(
+                "size model mismatch: {bytes} != {}",
+                c.encoded_bytes(g.len())
+            ));
+        }
+        let norm =
+            g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        // Per-coordinate quantization bound, with f32 rounding headroom.
+        let bound = norm / s as f64 + 1e-4 * norm + 1e-6;
+        for i in 0..g.len() {
+            let err = ((out[i] as f64) - (g[i] as f64)).abs();
+            if err > bound {
+                return Err(format!(
+                    "coord {i}: |{} - {}| = {err} > {bound} (s={s})",
+                    out[i], g[i]
+                ));
+            }
+            // The residual is what feedback will replay: out + resid must
+            // reconstruct g to f32 rounding.
+            let recon = out[i] + resid[i];
+            let tol = (g[i].abs() + out[i].abs()) * f32::EPSILON * 4.0;
+            if (recon - g[i]).abs() > tol {
+                return Err(format!(
+                    "coord {i}: reconstruction {recon} != {} (tol {tol})",
+                    g[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_bytes_are_data_independent() {
+    let gen = UsizeRange { lo: 1, hi: 256 };
+    runner().check("size_model", &gen, |&d| {
+        let zeros = vec![0.0f32; d];
+        let spiky: Vec<f32> =
+            (0..d).map(|i| if i % 7 == 0 { 1e6 } else { -3.0 }).collect();
+        for mut c in [
+            Box::new(Dense::new()) as Box<dyn Compressor>,
+            Box::new(TopK::new(0.1)),
+            Box::new(RandK::new(0.1)),
+            Box::new(QuantizeQsgd::new(4)),
+        ] {
+            let mut rng = Pcg64::seed(7);
+            let mut out = vec![0.0f32; d];
+            let b0 = c.apply(&zeros, &mut out, &mut rng);
+            let b1 = c.apply(&spiky, &mut out, &mut rng);
+            if b0 != b1 || b0 != c.encoded_bytes(d) {
+                return Err(format!(
+                    "{}: sizes vary with data: {b0} vs {b1} (model {})",
+                    c.name(),
+                    c.encoded_bytes(d)
+                ));
+            }
+        }
+        Ok(())
+    });
+}

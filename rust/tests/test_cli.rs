@@ -55,9 +55,14 @@ fn fig1_writes_csv() {
     ]);
     assert!(text.contains("Theorem-1 switching times"));
     let body = std::fs::read_to_string(&csv).unwrap();
-    assert!(body.starts_with("label,iteration,time,k,error"));
-    // 5 fixed curves + adaptive, 50 points each.
-    assert_eq!(body.lines().count(), 1 + 6 * 50);
+    let mut lines = body.lines();
+    assert!(lines.next().unwrap().starts_with("# adasgd run series"));
+    assert_eq!(
+        lines.next().unwrap(),
+        "label,iteration,time,k,error,bytes,comm_time"
+    );
+    // Comment + header, then 5 fixed curves + adaptive, 50 points each.
+    assert_eq!(body.lines().count(), 2 + 6 * 50);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -145,8 +150,71 @@ d = 10
 }
 
 #[test]
-fn list_artifacts_shows_registry() {
+fn train_with_topk_comm_reports_bytes() {
+    let dir = std::env::temp_dir().join("adasgd_cli_comm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("comm.csv");
+    let text = run_ok(&[
+        "train",
+        "--n",
+        "10",
+        "--m",
+        "200",
+        "--d",
+        "10",
+        "--k",
+        "5",
+        "--eta",
+        "0.002",
+        "--max-iterations",
+        "200",
+        "--max-time",
+        "0",
+        "--comm",
+        "topk",
+        "--comm-frac",
+        "0.3",
+        "--bandwidth",
+        "100",
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    // 3-of-10 coords -> 40 bytes per message, 200 iterations x k=5.
+    assert!(text.contains("40000 bytes uploaded"), "{text}");
+    let body = std::fs::read_to_string(&csv).unwrap();
+    // The final recorded sample carries the cumulative byte count.
+    assert!(body.contains(",40000,"), "{body}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_comm_scheme_fails_cleanly() {
+    let out = adasgd()
+        .args(["train", "--n", "10", "--m", "200", "--d", "10", "--comm", "zip"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("comm"));
+}
+
+#[test]
+fn list_artifacts_without_runtime_fails_cleanly() {
+    // Without the pjrt feature (the default build) the command must fail
+    // with a pointer at the feature, not panic. With pjrt + artifacts
+    // present it lists the registry.
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let text = run_ok(&["list-artifacts", "--artifacts", artifacts]);
-    assert!(text.contains("linreg_grad_s40_d100"), "{text}");
+    let out = adasgd()
+        .args(["list-artifacts", "--artifacts", artifacts])
+        .output()
+        .unwrap();
+    if cfg!(feature = "pjrt") && std::path::Path::new(artifacts).exists() {
+        assert!(out.status.success());
+        assert!(String::from_utf8_lossy(&out.stdout)
+            .contains("linreg_grad_s40_d100"));
+    } else {
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("runtime error"), "{err}");
+    }
 }

@@ -1,0 +1,176 @@
+//! Offline **API stub** for the `xla` / `xla_extension` PJRT bindings.
+//!
+//! The build environment for this repository has no network access and no
+//! prebuilt `xla_extension`, so this crate mirrors the small API surface
+//! `adasgd::runtime` consumes — just enough for `--features pjrt` code to
+//! type-check. Every entry point that would touch PJRT returns
+//! [`Error::Unavailable`] at runtime.
+//!
+//! To actually execute artifacts, replace this crate with the real
+//! bindings, e.g. in the workspace `Cargo.toml`:
+//!
+//! ```toml
+//! [patch.'crates-io']          # or edit the path dependency directly
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+
+use std::fmt;
+use std::path::Path;
+
+/// XLA/PJRT failure (stub: always [`Error::Unavailable`]).
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub backend cannot execute anything.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "PJRT unavailable ({what}): built against the offline xla \
+                 API stub; install real xla_extension bindings to execute \
+                 artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file (stub: always fails).
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self(())
+    }
+}
+
+/// Host- or device-side tensor value (stub).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice (stub value).
+    pub fn vec1<T: Copy>(_data: &[T]) -> Self {
+        Self(())
+    }
+
+    /// Reshape (stub: always fails).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Number of elements.
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    /// Copy the payload into a host slice (stub: always fails).
+    pub fn copy_raw_to<T: Copy>(&self, _out: &mut [T]) -> Result<()> {
+        unavailable("Literal::copy_raw_to")
+    }
+
+    /// Destructure a tuple literal (stub: always fails).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Device-resident buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Download to a host literal (stub: always fails).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals (stub: always fails).
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    /// Execute with device buffers (stub: always fails).
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU client (stub: always fails, so no stubbed executable
+    /// can ever be reached through a successfully-constructed runtime).
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation (stub: always fails).
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a host buffer to the device (stub: always fails).
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0f32]);
+        assert!(lit.reshape(&[1]).is_err());
+        assert_eq!(lit.element_count(), 0);
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
