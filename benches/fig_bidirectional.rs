@@ -1,0 +1,187 @@
+//! Bidirectional link sweep: downlink scheme × ingress capacity × k-policy.
+//!
+//! Fig-2 setup (n = 50, exp(1) compute delays, η = 5·10⁻⁴, §V.A data)
+//! with the uplink fixed at the `fig_comm_tradeoff` operating point
+//! (dense, 400 B per virtual-time unit) and the *new* axes swept:
+//!
+//! * **downlink** — free dense full-model broadcast vs priced dense vs
+//!   compressed model deltas (top-k / QSGD with a master-side residual)
+//!   over a 400 B/t downlink, and
+//! * **ingress** — unlimited (independent uploads, the PR-1 model) vs a
+//!   shared master NIC the k accepted uploads serialize through.
+//!
+//! The point the sweep makes: with fat models and large k the
+//! uplink-only model *understates* the round time exactly where
+//! adaptive-k matters most — finite ingress punishes large fixed k, and
+//! compressed delta broadcast buys back most of the downlink cost.
+//!
+//! Run: `cargo bench --bench fig_bidirectional`
+
+use adasgd::bench_harness::section;
+use adasgd::config::{
+    CommSpec, CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec,
+    WorkloadSpec,
+};
+use adasgd::coordinator::run_experiment;
+use adasgd::metrics::{write_csv, Recorder};
+use adasgd::policy::PflugParams;
+
+const UP_BANDWIDTH: f64 = 400.0; // bytes per virtual-time unit
+const DOWN_BANDWIDTH: f64 = 400.0;
+const MAX_TIME: f64 = 4000.0;
+
+fn base(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        label: String::new(),
+        n: 50,
+        eta: 5e-4,
+        max_iterations: 200_000,
+        max_time: MAX_TIME,
+        seed,
+        record_stride: 25,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 40 },
+        workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
+        comm: CommSpec::default(),
+    }
+}
+
+/// (label, downlink scheme, downlink bandwidth): free dense is the PR-1
+/// baseline; the rest price the broadcast.
+fn downlinks() -> Vec<(&'static str, CompressorSpec, f64)> {
+    vec![
+        ("downfree", CompressorSpec::Dense, 0.0),
+        ("downdense", CompressorSpec::Dense, DOWN_BANDWIDTH),
+        (
+            "downtopk10",
+            CompressorSpec::TopK { frac: 0.1 },
+            DOWN_BANDWIDTH,
+        ),
+        (
+            "downqsgd4",
+            CompressorSpec::Qsgd { levels: 4 },
+            DOWN_BANDWIDTH,
+        ),
+    ]
+}
+
+/// (label, shared master-ingress capacity): 0 = unlimited.
+fn ingresses() -> Vec<(&'static str, f64)> {
+    vec![("ing-inf", 0.0), ("ing4k", 4000.0)]
+}
+
+fn policies() -> Vec<(&'static str, PolicySpec)> {
+    vec![
+        ("k=40", PolicySpec::Fixed { k: 40 }),
+        (
+            "adaptive",
+            PolicySpec::Adaptive(PflugParams {
+                k0: 10,
+                step: 10,
+                thresh: 10,
+                burnin: 200,
+                k_max: 40,
+            }),
+        ),
+    ]
+}
+
+fn main() {
+    let seed = 0u64;
+    section(&format!(
+        "bidirectional sweep: downlink x ingress x policy (n=50, exp(1), \
+         uplink dense {UP_BANDWIDTH} B/t, T={MAX_TIME})"
+    ));
+
+    let mut runs: Vec<Recorder> = Vec::new();
+    let mut rows = Vec::new();
+    for (dname, downlink, down_bw) in downlinks() {
+        for (iname, ingress_bw) in ingresses() {
+            for (pname, policy) in policies() {
+                let mut cfg = base(seed);
+                cfg.label = format!("{dname}/{iname}/{pname}");
+                cfg.policy = policy;
+                cfg.comm = CommSpec {
+                    bandwidth: UP_BANDWIDTH,
+                    downlink: downlink.clone(),
+                    down_bandwidth: down_bw,
+                    ingress_bw,
+                    ..Default::default()
+                };
+                let out = run_experiment(&cfg).expect("sweep run");
+                rows.push((
+                    cfg.label.clone(),
+                    out.recorder.min_error().unwrap_or(f64::NAN),
+                    out.steps,
+                    out.bytes_sent,
+                    out.bytes_down,
+                    out.total_time,
+                ));
+                runs.push(out.recorder);
+            }
+        }
+    }
+
+    println!(
+        "{:<28} {:>12} {:>8} {:>13} {:>13} {:>9}",
+        "downlink/ingress/policy", "min error", "iters", "bytes_up",
+        "bytes_down", "t_end"
+    );
+    for (label, min_err, steps, up, down, t_end) in &rows {
+        println!(
+            "{label:<28} {min_err:>12.4e} {steps:>8} {up:>13} {down:>13} \
+             {t_end:>9.0}"
+        );
+    }
+
+    // Invariant spot-check: at the same policy and downlink, finite
+    // ingress must complete strictly fewer iterations in the same
+    // time budget than unlimited ingress (every round is longer).
+    section("congestion sanity: finite ingress completes fewer rounds");
+    let steps_of = |label: &str| {
+        rows.iter()
+            .find(|r| r.0 == label)
+            .map(|r| r.2)
+            .expect("labelled run")
+    };
+    let free = steps_of("downfree/ing-inf/k=40");
+    let congested = steps_of("downfree/ing4k/k=40");
+    if congested < free {
+        println!(
+            "  OK: ing4k ran {congested} rounds vs {free} unlimited \
+             (shared ingress stretches every k=40 round)"
+        );
+    } else {
+        println!(
+            "  WARNING: expected fewer rounds under finite ingress; got \
+             {congested} vs {free}"
+        );
+    }
+
+    // Headline: wall-clock to the free-downlink k=40 floor.
+    section("time-to-error at the free-downlink k=40 floor");
+    let baseline = runs
+        .iter()
+        .find(|r| r.label == "downfree/ing-inf/k=40")
+        .expect("baseline run");
+    let target = baseline.min_error().unwrap() * 1.5;
+    println!("  target error: {target:.4e}");
+    let base_t = baseline.time_to_error(target);
+    for r in &runs {
+        match r.time_to_error(target) {
+            Some(t) => {
+                let speedup = base_t.map(|bt| bt / t).unwrap_or(f64::NAN);
+                println!(
+                    "  {:<28} t = {t:>7.0}   ({speedup:.2}x vs baseline)",
+                    r.label
+                );
+            }
+            None => println!("  {:<28} never reaches it", r.label),
+        }
+    }
+
+    let refs: Vec<&Recorder> = runs.iter().collect();
+    write_csv(std::path::Path::new("results/bench_bidirectional.csv"), &refs)
+        .ok();
+    println!("  series written to results/bench_bidirectional.csv");
+}

@@ -83,6 +83,7 @@ fn main() {
                 error_feedback: true,
                 bandwidth: BANDWIDTH,
                 latency: LATENCY,
+                ..Default::default()
             };
             let out = run_experiment(&cfg).expect("sweep run");
             rows.push((

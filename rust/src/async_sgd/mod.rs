@@ -13,7 +13,7 @@
 //! no synchronization barrier, so the clock advances on an event queue of
 //! per-worker completion times rather than an order statistic.
 
-use crate::comm::CommChannel;
+use crate::comm::{CommChannel, DownlinkMode};
 use crate::grad::GradBackend;
 use crate::metrics::{Recorder, Sample};
 use crate::rng::Pcg64;
@@ -76,6 +76,11 @@ pub struct AsyncRun {
     pub bytes_sent: u64,
     /// Total upload time of applied messages.
     pub comm_time: f64,
+    /// Encoded bytes of all model downloads (one per applied update —
+    /// the async downlink is unicast).
+    pub bytes_down: u64,
+    /// Total download time charged.
+    pub down_time: f64,
 }
 
 /// Run asynchronous SGD from `w0` with the zero-cost dense channel.
@@ -96,6 +101,18 @@ pub fn run_async(
 /// the upload delay of its encoded message, and the applied gradient is
 /// the channel's reconstruction (error feedback applies every round here,
 /// since no async update is ever discarded).
+///
+/// Bidirectional pricing: with a finite master-ingress capacity an
+/// arriving upload waits for the NIC to free (FIFO — arrivals pop in
+/// time order, so the queue discipline is consistent) before it is
+/// applied, and each restart downloads the fresh model through the
+/// channel's downlink, adding a download delay to the worker's next
+/// cycle. Workers are assumed to know `w0`, so the initial dispatch
+/// carries no download. A `Delta` downlink models a master streaming one
+/// shared delta log that every worker replays up to its latest restart:
+/// a restarting worker downloads every delta appended since it last
+/// pulled (one per intervening update, i.e. staleness + 1 messages),
+/// each priced at the scheme's encoded size.
 pub fn run_async_comm(
     backend: &mut dyn GradBackend,
     delays: &dyn DelayModel,
@@ -116,11 +133,22 @@ pub fn run_async_comm(
 
     let mut rng = Pcg64::seed_stream(cfg.seed, 0xA57C);
     let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC045);
+    // Downlink encoder stream (dense draws nothing — delay stream intact).
+    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04E);
     let bytes0 = channel.stats.bytes_sent;
     let comm_t0 = channel.stats.comm_time;
+    let down0 = channel.stats.bytes_down;
+    let down_t0 = channel.stats.down_time;
     let mut w = w0.to_vec();
     let mut g_raw = vec![0.0f32; d];
     let mut g = vec![0.0f32; d];
+    // Shared master-ingress state: when the NIC next frees. With the
+    // unlimited default, serve_at is bitwise the arrival time.
+    let ingress = *channel.ingress();
+    let mut ingress_free = f64::NEG_INFINITY;
+    // The effective clock: completion time of the last applied update
+    // (equals the event-queue clock when the ingress is unlimited).
+    let mut clock = 0.0f64;
 
     // Zero-cost links price every message at exactly 0.0, so the upload
     // term can be added unconditionally without perturbing dense runs.
@@ -157,7 +185,12 @@ pub fn run_async_comm(
             Some(e) => e,
             None => break,
         };
-        if cfg.max_time > 0.0 && ev.time > cfg.max_time {
+        // Congested ingress: the upload that *arrived* at ev.time is
+        // applied once the master's NIC has served it.
+        let t_apply = ingress.serve_at(ev.time, ingress_free, msg_bytes);
+        ingress_free = t_apply;
+        clock = t_apply;
+        if cfg.max_time > 0.0 && t_apply > cfg.max_time {
             break;
         }
         let i = ev.payload;
@@ -182,35 +215,56 @@ pub fn run_async_comm(
             diverged = true;
             recorder.push_forced(Sample {
                 iteration: updates,
-                time: queue.now(),
+                time: clock,
                 k: 1,
                 error: f64::INFINITY,
                 bytes: channel.stats.bytes_sent - bytes0,
                 comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
             });
             break;
         }
 
-        // Worker restarts immediately with the fresh model.
-        snapshots[i].copy_from_slice(&w);
+        // Worker restarts immediately: it downloads the fresh model
+        // through the priced downlink (its snapshot becomes the decoded
+        // view — bitwise `w` on the default dense downlink), then its
+        // next cycle covers download + compute + upload. Delta mode
+        // streams one delta per update, so the worker replays every
+        // delta appended since its last restart: the staleness + 1
+        // updates applied since it last pulled, one message each.
+        let replay = match channel.downlink_mode() {
+            DownlinkMode::Full => 1,
+            DownlinkMode::Delta => staleness + 1,
+        };
+        let (_, down_delay) = channel.push_model(
+            i,
+            &w,
+            &mut snapshots[i],
+            replay,
+            &mut bcast_rng,
+        );
         read_version[i] = version;
         let dt = delays.sample(updates, i, &mut rng)
-            + channel.link_upload_delay(i, msg_bytes);
-        queue.schedule_in(dt, i);
+            + channel.link_upload_delay(i, msg_bytes)
+            + down_delay;
+        queue.schedule_at(t_apply + dt, i);
 
         if updates % cfg.record_stride == 0 {
             recorder.push_forced(Sample {
                 iteration: updates,
-                time: queue.now(),
+                time: clock,
                 k: 1,
                 error: eval_error(&w),
                 bytes: channel.stats.bytes_sent - bytes0,
                 comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
             });
         }
     }
 
-    let total_time = queue.now();
+    let total_time = clock;
     if !diverged && updates % cfg.record_stride != 0 {
         recorder.push_forced(Sample {
             iteration: updates,
@@ -219,6 +273,8 @@ pub fn run_async_comm(
             error: eval_error(&w),
             bytes: channel.stats.bytes_sent - bytes0,
             comm_time: channel.stats.comm_time - comm_t0,
+            bytes_down: channel.stats.bytes_down - down0,
+            down_time: channel.stats.down_time - down_t0,
         });
     }
 
@@ -235,6 +291,8 @@ pub fn run_async_comm(
         diverged,
         bytes_sent: channel.stats.bytes_sent - bytes0,
         comm_time: channel.stats.comm_time - comm_t0,
+        bytes_down: channel.stats.bytes_down - down0,
+        down_time: channel.stats.down_time - down_t0,
     }
 }
 
@@ -392,6 +450,49 @@ mod tests {
         let rate = run.updates as f64 / run.total_time;
         assert!((rate - 5.0).abs() < 1.0, "rate={rate}");
         assert!(run.comm_time > 0.0);
+    }
+
+    #[test]
+    fn delta_downlink_replay_charges_the_whole_log() {
+        use crate::comm::{
+            Broadcast, CommChannel, DownlinkMode, LinkModel, TopK,
+        };
+        let (mut backend, problem) = setup(10);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.0001,
+            max_updates: 1000,
+            seed: 12,
+            record_stride: 200,
+            ..Default::default()
+        };
+        let mut channel = CommChannel::dense(10).with_broadcast(
+            Broadcast::new(
+                Box::new(TopK::new(0.3)),
+                LinkModel::zero_cost(10),
+                DownlinkMode::Delta,
+            ),
+        );
+        let run = run_async_comm(
+            &mut backend,
+            &delays,
+            &mut channel,
+            &vec![0.0; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        // With 10 workers, mean staleness ≈ 9, so each restart replays
+        // ≈ 10 deltas of the shared log: downlink traffic must be far
+        // more than one 40-byte delta per update, but bounded by a full
+        // staleness-scaled replay.
+        let per_msg = 40u64; // top-3-of-10 delta message
+        assert!(
+            run.bytes_down > cfg.max_updates * per_msg * 5,
+            "replay accounting lost: bytes_down={}",
+            run.bytes_down
+        );
+        assert!(run.bytes_down < cfg.max_updates * per_msg * 20);
+        assert!(!run.diverged);
     }
 
     #[test]

@@ -54,7 +54,8 @@ const VALUED_FLAGS: &[&str] = &[
     "eta", "max-time", "max-iterations", "out", "artifacts", "steps",
     "workers", "tag", "points", "time-scale", "m", "d", "lambda",
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
-    "link-latency",
+    "link-latency", "downlink", "down-levels", "down-frac",
+    "down-bandwidth", "down-latency", "ingress-bw",
 ];
 
 impl Args {
@@ -148,12 +149,21 @@ TRAIN FLAGS (no --config):
   --async             run the asynchronous baseline instead of fastest-k
 
 COMM FLAGS (train; also in [comm] of a TOML config):
-  --comm SCHEME       dense | qsgd | topk | randk     (default dense)
+  --comm SCHEME       uplink: dense | qsgd | topk | randk  (default dense)
   --comm-levels S     qsgd quantization levels        (default 4)
   --comm-frac F       topk/randk kept fraction        (default 0.1)
   --bandwidth B       uplink bytes per time unit, 0 = infinite
   --link-latency L    fixed per-message upload latency
   --no-error-feedback disable the compression residual accumulator
+  --downlink SCHEME   model broadcast: dense = full model (default);
+                      qsgd | topk | randk = compressed model deltas
+                      with a master-side error-feedback residual
+  --down-levels S     downlink qsgd levels            (default 4)
+  --down-frac F       downlink topk/randk fraction    (default 0.1)
+  --down-bandwidth B  downlink bytes per time unit, 0 = infinite
+  --down-latency L    fixed per-message download latency
+  --ingress-bw C      shared master-ingress bytes per time unit,
+                      0 = infinite (independent uploads)
 "#
     );
 }

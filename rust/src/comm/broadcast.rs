@@ -1,0 +1,311 @@
+//! Downlink side of the channel: priced model broadcast.
+//!
+//! PR 1 priced only the uplink — the master's model broadcast was free.
+//! This module makes the downlink symmetric: the master encodes the model
+//! (or the model *delta* since the last broadcast, with a master-side
+//! [`ErrorFeedback`] residual, following the communication-efficient
+//! adaptive-SGD line of arXiv 2208.03134) and every worker is charged a
+//! download delay from a per-worker [`LinkModel`] before its compute
+//! starts. The default — dense encoding over a zero-cost link — prices
+//! every download at exactly `0.0` and reconstructs the model bitwise, so
+//! drivers using it reproduce the uplink-only trajectories bit for bit.
+
+use super::{Compressor, Dense, ErrorFeedback, LinkModel, WireFormat};
+use crate::straggler::RngDyn;
+
+/// How the model is encoded on the downlink.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownlinkMode {
+    /// Encode the full model every round (`decode(encode(w))`). With the
+    /// [`Dense`] compressor this is lossless and the workers' view is
+    /// bitwise the master's model — the default.
+    Full,
+    /// Encode the model *delta* since the previous broadcast; a
+    /// master-side [`ErrorFeedback`] residual carries what compression
+    /// dropped into the next delta, so the workers' view tracks the
+    /// master's model with bounded lag. The first broadcast bootstraps
+    /// the workers with a dense full model.
+    Delta,
+}
+
+/// The master's model broadcast: encoder + downlink pricing.
+///
+/// One instance per cluster; [`Broadcast::push`] encodes the current
+/// model and writes the *workers' reconstruction* (what every worker will
+/// compute its next gradient against) into the caller's buffer. In
+/// [`DownlinkMode::Delta`] the reconstruction satisfies the error-feedback
+/// telescoping identity `w − view == residual` (exactly in real
+/// arithmetic, to f32 rounding here), so the view's lag behind the master
+/// is precisely the residual the next delta re-ships.
+pub struct Broadcast {
+    compressor: Box<dyn Compressor>,
+    link: LinkModel,
+    mode: DownlinkMode,
+    /// Master-side residual for Delta mode (a single accumulator — the
+    /// broadcast has exactly one sender).
+    feedback: ErrorFeedback,
+    /// Last model a delta was encoded against.
+    prev: Vec<f32>,
+    /// The workers' reconstructed model view (Delta mode).
+    view: Vec<f32>,
+    /// Scratch: the feedback-adjusted delta.
+    delta: Vec<f32>,
+    /// Scratch: the decoded delta.
+    decoded: Vec<f32>,
+    /// Wire model for the Delta bootstrap (dense full-model) message.
+    wire: WireFormat,
+    initialized: bool,
+}
+
+impl Broadcast {
+    /// The free default: dense full-model broadcast over a zero-cost
+    /// link. Drivers using it reproduce uplink-only trajectories bit for
+    /// bit (the encode is a bitwise copy, every download delay is exactly
+    /// `0.0`, and no rng is drawn).
+    pub fn free(n: usize) -> Self {
+        Self::new(
+            Box::new(Dense::new()),
+            LinkModel::zero_cost(n),
+            DownlinkMode::Full,
+        )
+    }
+
+    /// Broadcast over `link` (which fixes the worker count) with the
+    /// given encoding.
+    pub fn new(
+        compressor: Box<dyn Compressor>,
+        link: LinkModel,
+        mode: DownlinkMode,
+    ) -> Self {
+        Self {
+            compressor,
+            link,
+            mode,
+            feedback: ErrorFeedback::new(1),
+            prev: Vec::new(),
+            view: Vec::new(),
+            delta: Vec::new(),
+            decoded: Vec::new(),
+            wire: WireFormat::default(),
+            initialized: false,
+        }
+    }
+
+    /// Number of workers the downlink is sized for.
+    pub fn n(&self) -> usize {
+        self.link.n()
+    }
+
+    /// The encoding mode.
+    pub fn mode(&self) -> DownlinkMode {
+        self.mode
+    }
+
+    /// True iff the downlink charges no delay for any message.
+    pub fn link_is_zero_cost(&self) -> bool {
+        self.link.is_zero_cost()
+    }
+
+    /// Virtual time worker `i` needs to download a `bytes`-sized model
+    /// message (same bandwidth + latency pricing as the uplink, applied
+    /// in the other direction).
+    pub fn download_delay(&self, worker: usize, bytes: u64) -> f64 {
+        self.link.upload_delay(worker, bytes)
+    }
+
+    /// Encoded size of the *next* push for a d-dimensional model
+    /// (data-independent; the Delta bootstrap round ships dense).
+    pub fn message_bytes(&self, d: usize) -> u64 {
+        match self.mode {
+            DownlinkMode::Full => self.compressor.encoded_bytes(d),
+            DownlinkMode::Delta if !self.initialized => self.wire.dense(d),
+            DownlinkMode::Delta => self.compressor.encoded_bytes(d),
+        }
+    }
+
+    /// Encode the master's model `w` and write the workers'
+    /// reconstruction into `out`; returns the encoded size in bytes.
+    /// Stochastic compressors draw from `rng`; [`Dense`] draws nothing.
+    pub fn push(
+        &mut self,
+        w: &[f32],
+        out: &mut [f32],
+        rng: &mut dyn RngDyn,
+    ) -> u64 {
+        debug_assert_eq!(w.len(), out.len());
+        match self.mode {
+            DownlinkMode::Full => self.compressor.apply(w, out, rng),
+            DownlinkMode::Delta => {
+                if !self.initialized {
+                    // Bootstrap: workers receive the full model dense.
+                    self.initialized = true;
+                    self.prev.clear();
+                    self.prev.extend_from_slice(w);
+                    self.view.clear();
+                    self.view.extend_from_slice(w);
+                    out.copy_from_slice(w);
+                    return self.wire.dense(w.len());
+                }
+                self.delta.clear();
+                self.delta
+                    .extend(w.iter().zip(&self.prev).map(|(a, b)| a - b));
+                self.feedback.add_residual(0, &mut self.delta);
+                self.decoded.resize(w.len(), 0.0);
+                let bytes =
+                    self.compressor.apply(&self.delta, &mut self.decoded, rng);
+                self.feedback.update(0, &self.delta, &self.decoded);
+                for (v, c) in self.view.iter_mut().zip(&self.decoded) {
+                    *v += *c;
+                }
+                self.prev.copy_from_slice(w);
+                out.copy_from_slice(&self.view);
+                bytes
+            }
+        }
+    }
+
+    /// `‖residual‖²` of the master-side accumulator — how much model mass
+    /// the workers' view currently lags by (0 in Full mode).
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.feedback.residual_norm_sq(0)
+    }
+
+    /// `scheme over link` label for recorders and reports.
+    pub fn name(&self) -> String {
+        let mut s = match self.mode {
+            DownlinkMode::Full => self.compressor.name(),
+            DownlinkMode::Delta => format!("delta-{}", self.compressor.name()),
+        };
+        if !self.link.is_zero_cost() {
+            s.push_str(" over ");
+            s.push_str(&self.link.name());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{QuantizeQsgd, TopK};
+    use crate::rng::{Pcg64, Rng};
+
+    fn model(seed: f32) -> Vec<f32> {
+        (0..32).map(|i| (i as f32 * 0.7 - 9.0) * seed.cos()).collect()
+    }
+
+    #[test]
+    fn free_broadcast_is_bitwise_identity_and_charges_nothing() {
+        let mut b = Broadcast::free(4);
+        assert!(b.link_is_zero_cost());
+        let w = model(1.0);
+        let mut out = vec![0.0f32; w.len()];
+        let mut rng = Pcg64::seed(1);
+        let before = rng.clone().next_u64();
+        let bytes = b.push(&w, &mut out, &mut rng);
+        assert_eq!(out, w);
+        assert_eq!(bytes, WireFormat::default().dense(w.len()));
+        assert_eq!(bytes, b.message_bytes(w.len()));
+        for i in 0..4 {
+            assert_eq!(b.download_delay(i, bytes), 0.0);
+        }
+        assert_eq!(rng.next_u64(), before, "dense must not consume rng");
+        assert_eq!(b.residual_norm_sq(), 0.0);
+    }
+
+    #[test]
+    fn delta_bootstrap_ships_dense_then_compressed() {
+        let mut b = Broadcast::new(
+            Box::new(TopK::new(0.25)),
+            LinkModel::zero_cost(2),
+            DownlinkMode::Delta,
+        );
+        let w = model(2.0);
+        let d = w.len();
+        let mut out = vec![0.0f32; d];
+        let mut rng = Pcg64::seed(2);
+        assert_eq!(b.message_bytes(d), WireFormat::default().dense(d));
+        let b0 = b.push(&w, &mut out, &mut rng);
+        assert_eq!(b0, WireFormat::default().dense(d));
+        assert_eq!(out, w, "bootstrap view is exact");
+        // Second push is a compressed delta.
+        assert_eq!(b.message_bytes(d), TopK::new(0.25).encoded_bytes(d));
+        let w2: Vec<f32> = w.iter().map(|v| v + 1.0).collect();
+        let b1 = b.push(&w2, &mut out, &mut rng);
+        assert_eq!(b1, TopK::new(0.25).encoded_bytes(d));
+        assert!(b1 < b0, "delta messages are smaller than the bootstrap");
+    }
+
+    #[test]
+    fn delta_view_lag_equals_the_residual() {
+        // The error-feedback telescoping identity: w − view == residual
+        // (up to f32 rounding) after every push.
+        let mut b = Broadcast::new(
+            Box::new(QuantizeQsgd::new(4)),
+            LinkModel::zero_cost(1),
+            DownlinkMode::Delta,
+        );
+        let mut rng = Pcg64::seed(3);
+        let mut out = vec![0.0f32; 32];
+        let mut w = model(3.0);
+        b.push(&w, &mut out, &mut rng);
+        for step in 0..10 {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v += ((step * 7 + i) as f32 * 0.31).sin() * 0.1;
+            }
+            b.push(&w, &mut out, &mut rng);
+            let gap_sq: f64 = w
+                .iter()
+                .zip(&out)
+                .map(|(a, c)| ((a - c) as f64).powi(2))
+                .sum();
+            let resid = b.residual_norm_sq();
+            // The identity is exact in real arithmetic; f32 rounding in
+            // the view accumulation leaves a small slack.
+            assert!(
+                (gap_sq - resid).abs() <= 1e-3 * (1.0 + resid),
+                "step {step}: gap {gap_sq} vs residual {resid}"
+            );
+        }
+    }
+
+    #[test]
+    fn delta_topk_converges_to_the_model_when_it_stops_moving() {
+        let mut b = Broadcast::new(
+            Box::new(TopK::new(0.25)),
+            LinkModel::zero_cost(1),
+            DownlinkMode::Delta,
+        );
+        let mut rng = Pcg64::seed(4);
+        let w = model(4.0);
+        let mut out = vec![0.0f32; w.len()];
+        b.push(&w, &mut out, &mut rng);
+        let w2: Vec<f32> = w.iter().map(|v| v * 2.0 + 0.5).collect();
+        // Push the same target repeatedly: top-k of the residual drains
+        // it within ceil(1/frac) rounds.
+        for _ in 0..6 {
+            b.push(&w2, &mut out, &mut rng);
+        }
+        let gap: f64 = w2
+            .iter()
+            .zip(&out)
+            .map(|(a, c)| ((a - c) as f64).abs())
+            .sum();
+        // The residual drains exactly; the remaining gap is only the f32
+        // rounding of the view accumulation (~ulp per coordinate).
+        assert!(gap < 1e-3, "view failed to converge: gap {gap}");
+        assert!(b.residual_norm_sq() < 1e-10);
+    }
+
+    #[test]
+    fn finite_downlink_prices_downloads() {
+        let b = Broadcast::new(
+            Box::new(Dense::new()),
+            LinkModel::uniform(3, 100.0, 0.5),
+            DownlinkMode::Full,
+        );
+        assert!(!b.link_is_zero_cost());
+        assert!((b.download_delay(0, 200) - 2.5).abs() < 1e-12);
+        assert!(b.name().contains("over"));
+    }
+}

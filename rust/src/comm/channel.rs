@@ -1,6 +1,8 @@
 //! The communication channel the training drivers route gradients through.
 
-use super::{Compressor, Dense, ErrorFeedback, LinkModel};
+use super::{
+    Broadcast, Compressor, Dense, ErrorFeedback, IngressModel, LinkModel,
+};
 use crate::straggler::RngDyn;
 
 /// Running totals of everything a channel moved.
@@ -15,6 +17,13 @@ pub struct CommStats {
     pub comm_time: f64,
     /// Accepted messages.
     pub messages: u64,
+    /// Encoded bytes of every model download. A sync broadcast counts
+    /// once per receiving worker (n downloads of one encoding); an async
+    /// unicast push counts once.
+    pub bytes_down: u64,
+    /// Sum of the per-worker download delays charged (download *work*,
+    /// not critical path, mirroring `comm_time`).
+    pub down_time: f64,
 }
 
 /// One message's accounting, as returned by [`CommChannel::transmit`].
@@ -26,16 +35,27 @@ pub struct Transmission {
     pub upload_delay: f64,
 }
 
-/// Compressor + error feedback + link, bundled per cluster.
+/// Compressor + error feedback + link + downlink + ingress, bundled per
+/// cluster — the full bidirectional channel.
 ///
 /// Drivers price every worker's upload from the data-independent size
 /// model *before* the fastest-k selection (see
 /// [`CommChannel::message_bytes`] / [`CommChannel::link_upload_delay`]),
 /// then [`CommChannel::transmit`] the gradients of the k accepted workers.
+/// The downlink side ([`CommChannel::broadcast_model`] /
+/// [`CommChannel::push_model`]) encodes the model through a [`Broadcast`]
+/// and charges each worker a download delay; the [`IngressModel`] lets a
+/// round's accepted uploads contend on the master's shared ingress. Both
+/// default to free/unlimited, preserving the uplink-only trajectories bit
+/// for bit.
 pub struct CommChannel {
     compressor: Box<dyn Compressor>,
     link: LinkModel,
     feedback: Option<ErrorFeedback>,
+    /// Downlink: priced model broadcast (free dense by default).
+    broadcast: Broadcast,
+    /// Shared master-ingress capacity (unlimited by default).
+    ingress: IngressModel,
     /// Scratch for the feedback-adjusted gradient `g + e_i`.
     scratch: Vec<f32>,
     /// Running totals (reset with [`CommChannel::reset_stats`]).
@@ -45,7 +65,9 @@ pub struct CommChannel {
 impl CommChannel {
     /// Build a channel over `link` (which fixes the worker count). Pass
     /// `error_feedback: false` for lossless schemes to skip the (zero)
-    /// residual bookkeeping.
+    /// residual bookkeeping. The downlink starts free and the ingress
+    /// unlimited; override with [`CommChannel::with_broadcast`] /
+    /// [`CommChannel::with_ingress`].
     pub fn new(
         compressor: Box<dyn Compressor>,
         link: LinkModel,
@@ -60,9 +82,30 @@ impl CommChannel {
             } else {
                 None
             },
+            broadcast: Broadcast::free(n),
+            ingress: IngressModel::unlimited(),
             scratch: Vec::new(),
             stats: CommStats::default(),
         }
+    }
+
+    /// Replace the downlink broadcast (must be sized for the same n).
+    pub fn with_broadcast(mut self, broadcast: Broadcast) -> Self {
+        assert_eq!(
+            broadcast.n(),
+            self.n(),
+            "broadcast sized for {} workers, channel has {}",
+            broadcast.n(),
+            self.n()
+        );
+        self.broadcast = broadcast;
+        self
+    }
+
+    /// Replace the master-ingress model.
+    pub fn with_ingress(mut self, ingress: IngressModel) -> Self {
+        self.ingress = ingress;
+        self
     }
 
     /// The zero-cost default: dense encoding over a free link, no error
@@ -92,6 +135,83 @@ impl CommChannel {
     /// True iff the link adds no delay for any message.
     pub fn link_is_zero_cost(&self) -> bool {
         self.link.is_zero_cost()
+    }
+
+    /// Broadcast the model to all `n` workers (sync drivers): encodes
+    /// once through the downlink, writes the workers' reconstruction into
+    /// `out`, accounts `bytes × n` downloads plus every worker's download
+    /// delay, and returns the encoded size for per-worker pricing.
+    pub fn broadcast_model(
+        &mut self,
+        w: &[f32],
+        out: &mut [f32],
+        rng: &mut dyn RngDyn,
+    ) -> u64 {
+        let bytes = self.broadcast.push(w, out, rng);
+        let n = self.n();
+        self.stats.bytes_down += bytes * n as u64;
+        for i in 0..n {
+            let delay = self.broadcast.download_delay(i, bytes);
+            self.stats.down_time += delay;
+        }
+        bytes
+    }
+
+    /// Send the model to a single `worker` (async unicast): encodes
+    /// through the downlink, writes the workers' reconstruction into
+    /// `out`, and returns `(bytes, total download delay)`.
+    ///
+    /// `replay >= 1` is the number of downlink messages the worker must
+    /// pull. In [`super::DownlinkMode::Full`] a message is
+    /// self-contained, so `replay` is 1; in [`super::DownlinkMode::Delta`]
+    /// the encoder's view state is shared — the master streams one delta
+    /// log all workers replay — so a restarting worker downloads every
+    /// delta appended since its last restart. Each replayed message is
+    /// priced at this push's encoded size (earlier deltas of the same
+    /// scheme have the same data-independent size; the one dense
+    /// bootstrap is the only approximation).
+    pub fn push_model(
+        &mut self,
+        worker: usize,
+        w: &[f32],
+        out: &mut [f32],
+        replay: u64,
+        rng: &mut dyn RngDyn,
+    ) -> (u64, f64) {
+        debug_assert!(replay >= 1, "a restart pulls at least one message");
+        let bytes = self.broadcast.push(w, out, rng);
+        let delay =
+            self.broadcast.download_delay(worker, bytes) * replay as f64;
+        self.stats.bytes_down += bytes * replay;
+        self.stats.down_time += delay;
+        (bytes, delay)
+    }
+
+    /// The downlink encoding mode (drivers branch replay accounting on
+    /// it).
+    pub fn downlink_mode(&self) -> super::DownlinkMode {
+        self.broadcast.mode()
+    }
+
+    /// Download delay of a `bytes`-sized model message to worker `i`.
+    pub fn download_delay(&self, worker: usize, bytes: u64) -> f64 {
+        self.broadcast.download_delay(worker, bytes)
+    }
+
+    /// True iff the downlink adds no delay for any message.
+    pub fn downlink_is_free(&self) -> bool {
+        self.broadcast.link_is_zero_cost()
+    }
+
+    /// The shared master-ingress model (Copy — drivers may hoist it out
+    /// of the per-iteration channel borrow).
+    pub fn ingress(&self) -> &IngressModel {
+        &self.ingress
+    }
+
+    /// `‖residual‖²` of the master-side broadcast accumulator.
+    pub fn broadcast_residual_norm_sq(&self) -> f64 {
+        self.broadcast.residual_norm_sq()
     }
 
     /// Whether error feedback is accumulating residuals.
@@ -140,7 +260,8 @@ impl CommChannel {
         self.stats = CommStats::default();
     }
 
-    /// `scheme over link` label for recorders and reports.
+    /// `scheme over link` label for recorders and reports; non-default
+    /// downlink and ingress models are appended.
     pub fn name(&self) -> String {
         let mut s = self.compressor.name();
         if self.error_feedback_enabled() {
@@ -149,6 +270,15 @@ impl CommChannel {
         if !self.link.is_zero_cost() {
             s.push_str(" over ");
             s.push_str(&self.link.name());
+        }
+        let down = self.broadcast.name();
+        if down != "dense" {
+            s.push_str(" / down:");
+            s.push_str(&down);
+        }
+        if !self.ingress.is_unlimited() {
+            s.push_str(" / ");
+            s.push_str(&self.ingress.name());
         }
         s
     }
@@ -215,6 +345,61 @@ mod tests {
         let tx = ch.transmit(1, &g, &mut out, &mut rng);
         assert!((tx.upload_delay - 1.5).abs() < 1e-12);
         assert!((ch.stats.comm_time - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_channel_downlink_is_free_and_ingress_unlimited() {
+        let mut ch = CommChannel::dense(4);
+        assert!(ch.downlink_is_free());
+        assert!(ch.ingress().is_unlimited());
+        let w = [1.0f32, -2.0, 3.0];
+        let mut view = [0.0f32; 3];
+        let mut rng = Pcg64::seed(11);
+        let bytes = ch.broadcast_model(&w, &mut view, &mut rng);
+        assert_eq!(view, w, "free dense broadcast is bitwise");
+        assert_eq!(bytes, WireFormat::default().dense(3));
+        assert_eq!(ch.stats.bytes_down, bytes * 4);
+        assert_eq!(ch.stats.down_time, 0.0);
+        assert_eq!(ch.download_delay(2, bytes), 0.0);
+    }
+
+    #[test]
+    fn priced_downlink_charges_downloads() {
+        use crate::comm::{Broadcast, DownlinkMode, IngressModel};
+        let mut ch = CommChannel::dense(2)
+            .with_broadcast(Broadcast::new(
+                Box::new(Dense::new()),
+                LinkModel::uniform(2, 100.0, 0.0),
+                DownlinkMode::Full,
+            ))
+            .with_ingress(IngressModel::new(500.0));
+        assert!(!ch.downlink_is_free());
+        assert!(!ch.ingress().is_unlimited());
+        let w = vec![1.0f32; 21]; // dense message = 100 bytes
+        let mut view = vec![0.0f32; 21];
+        let mut rng = Pcg64::seed(12);
+        let (bytes, delay) = ch.push_model(0, &w, &mut view, 1, &mut rng);
+        assert_eq!(bytes, 100);
+        assert!((delay - 1.0).abs() < 1e-12);
+        assert_eq!(ch.stats.bytes_down, 100);
+        assert!((ch.stats.down_time - 1.0).abs() < 1e-12);
+        // A replay of 3 messages charges 3x bytes and 3x delay.
+        let (_, d3) = ch.push_model(1, &w, &mut view, 3, &mut rng);
+        assert!((d3 - 3.0).abs() < 1e-12);
+        assert_eq!(ch.stats.bytes_down, 100 + 300);
+        assert!((ch.stats.down_time - 4.0).abs() < 1e-12);
+        let b2 = ch.broadcast_model(&w, &mut view, &mut rng);
+        assert_eq!(ch.stats.bytes_down, 400 + 2 * b2);
+        assert!((ch.stats.down_time - 6.0).abs() < 1e-12);
+        assert!(ch.name().contains("ingress"));
+        assert!(ch.name().contains("down:"));
+    }
+
+    #[test]
+    #[should_panic(expected = "broadcast sized for")]
+    fn mismatched_broadcast_size_is_rejected() {
+        use crate::comm::Broadcast;
+        let _ = CommChannel::dense(4).with_broadcast(Broadcast::free(3));
     }
 
     #[test]

@@ -1,15 +1,18 @@
-//! Per-worker uplink model: bandwidth + latency → virtual upload delay.
+//! Per-worker link model: bandwidth + latency → virtual transfer delay,
+//! plus the shared master-ingress capacity concurrent uploads contend on.
 //!
 //! The comm analogue of [`DelayModel`](crate::straggler::DelayModel):
 //! queried once per (iteration, worker) with the encoded message size and
-//! returning the virtual time the upload occupies. Deterministic — the
+//! returning the virtual time the transfer occupies. Deterministic — the
 //! stochasticity of a round lives in the compute-delay model; the link
-//! prices bytes.
+//! prices bytes. The same model serves both directions: the uplink of
+//! gradient messages and (via [`Broadcast`](super::Broadcast)) the
+//! downlink of model messages.
 
-/// Per-worker uplink bandwidth and latency.
+/// Per-worker link bandwidth and latency (one direction).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkModel {
-    /// Bytes per unit of virtual time; `f64::INFINITY` = free uplink.
+    /// Bytes per unit of virtual time; `f64::INFINITY` = free link.
     bandwidth: Vec<f64>,
     /// Fixed per-message latency in virtual time units.
     latency: Vec<f64>,
@@ -23,17 +26,22 @@ impl LinkModel {
     }
 
     /// Identical links: `bandwidth` bytes per virtual-time unit
-    /// (`<= 0` means infinite) and fixed per-message `latency`.
+    /// (`<= 0` means infinite; NaN is rejected) and fixed per-message
+    /// `latency`.
     pub fn uniform(n: usize, bandwidth: f64, latency: f64) -> Self {
+        assert!(!bandwidth.is_nan(), "bandwidth must not be NaN");
         assert!(latency >= 0.0, "latency must be non-negative");
         let bw = if bandwidth > 0.0 { bandwidth } else { f64::INFINITY };
         Self { bandwidth: vec![bw; n], latency: vec![latency; n] }
     }
 
-    /// Fully heterogeneous links.
+    /// Fully heterogeneous links. NaN bandwidth is rejected the same way
+    /// NaN latency already is (it fails the `>= 0` check) — a NaN must
+    /// not silently map to "infinite" via the `> 0` test.
     pub fn per_worker(bandwidth: Vec<f64>, latency: Vec<f64>) -> Self {
         assert_eq!(bandwidth.len(), latency.len(), "per-worker lens differ");
         assert!(!bandwidth.is_empty(), "need at least one worker");
+        assert!(bandwidth.iter().all(|b| !b.is_nan()), "NaN bandwidth");
         assert!(latency.iter().all(|&l| l >= 0.0), "negative latency");
         let bandwidth = bandwidth
             .into_iter()
@@ -44,6 +52,11 @@ impl LinkModel {
 
     /// Uniform links with the last `n_slow` workers' bandwidth divided by
     /// `slow_factor` — the bimodal-cluster idiom from `straggler/`.
+    ///
+    /// With `n_slow > 0` the base `bandwidth` must be finite and positive:
+    /// a non-positive bandwidth means *infinite* in this model, and
+    /// `∞ / slow_factor` is still `∞`, so the "slow" tail would silently
+    /// be exactly as free as everyone else.
     pub fn uniform_with_slow(
         n: usize,
         bandwidth: f64,
@@ -53,6 +66,11 @@ impl LinkModel {
     ) -> Self {
         assert!(n_slow <= n, "n_slow must be <= n");
         assert!(slow_factor >= 1.0, "slow_factor must be >= 1");
+        assert!(
+            n_slow == 0 || (bandwidth > 0.0 && bandwidth.is_finite()),
+            "uniform_with_slow: bandwidth {bandwidth} means an infinite \
+             link, which cannot be slowed — pass a finite bandwidth > 0"
+        );
         let mut link = Self::uniform(n, bandwidth, latency);
         for b in link.bandwidth[n - n_slow..].iter_mut() {
             *b /= slow_factor;
@@ -97,6 +115,106 @@ impl LinkModel {
     }
 }
 
+/// Shared master-ingress capacity: concurrent uploads contend on the
+/// master's NIC instead of arriving independently.
+///
+/// The contention discipline is **FIFO store-and-forward** (not processor
+/// sharing): a message first traverses its sender's own link (the
+/// [`LinkModel`] pricing, bandwidth + latency), *arrives* at the master's
+/// ingress, and then queues in arrival order, occupying the ingress for
+/// `bytes / capacity` time units before it is decoded. FIFO was chosen
+/// over processor sharing because the round completion has a closed form
+/// over the sorted arrivals and it matches the one-message-at-a-time
+/// decode loop every driver already runs; both disciplines agree on the
+/// completion time of the *last* message when all messages are equal
+/// sized, which is the quantity the round clock needs.
+///
+/// With infinite capacity ([`IngressModel::unlimited`], the default) the
+/// completion of each message is exactly its arrival — the independent-
+/// upload model of PR 1, preserved bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IngressModel {
+    /// Bytes per virtual-time unit; `f64::INFINITY` = no contention.
+    capacity: f64,
+}
+
+impl Default for IngressModel {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+impl IngressModel {
+    /// No contention: every upload completes at its arrival time.
+    pub fn unlimited() -> Self {
+        Self { capacity: f64::INFINITY }
+    }
+
+    /// Shared ingress of `capacity` bytes per virtual-time unit
+    /// (`<= 0` means unlimited, mirroring [`LinkModel::uniform`]; NaN is
+    /// rejected).
+    pub fn new(capacity: f64) -> Self {
+        assert!(!capacity.is_nan(), "ingress capacity must not be NaN");
+        let capacity =
+            if capacity > 0.0 { capacity } else { f64::INFINITY };
+        Self { capacity }
+    }
+
+    /// True iff uploads never contend (the PR-1 independent model).
+    pub fn is_unlimited(&self) -> bool {
+        self.capacity.is_infinite()
+    }
+
+    /// Ingress service time of one `bytes`-sized message.
+    pub fn service_time(&self, bytes: u64) -> f64 {
+        if self.capacity.is_finite() {
+            bytes as f64 / self.capacity
+        } else {
+            0.0
+        }
+    }
+
+    /// Completion time of the *last* message of a round: sorts `arrivals`
+    /// in place (total order — NaN arrivals sort last rather than
+    /// corrupting the order) and serializes them FIFO through the
+    /// ingress, each occupying it for `bytes / capacity`.
+    ///
+    /// Invariants (tested in `proptests.rs`): the result is ≥ the max
+    /// arrival (the independent-upload round time), strictly greater for
+    /// any finite capacity with `bytes > 0`, and equal when unlimited.
+    pub fn round_completion(&self, arrivals: &mut [f64], bytes: u64) -> f64 {
+        assert!(!arrivals.is_empty(), "a round needs at least one arrival");
+        arrivals.sort_unstable_by(|a, b| a.total_cmp(b));
+        let per = self.service_time(bytes);
+        if per == 0.0 {
+            return arrivals[arrivals.len() - 1];
+        }
+        let mut free = f64::NEG_INFINITY;
+        for &a in arrivals.iter() {
+            free = if a > free { a } else { free } + per;
+        }
+        free
+    }
+
+    /// Serve one message arriving at `arrival` when the ingress frees at
+    /// `free_at` (the async driver's running state): completion is
+    /// `max(arrival, free_at) + bytes/capacity`. With unlimited capacity
+    /// this is bitwise `arrival` for any `free_at <= arrival`.
+    pub fn serve_at(&self, arrival: f64, free_at: f64, bytes: u64) -> f64 {
+        let start = if arrival > free_at { arrival } else { free_at };
+        start + self.service_time(bytes)
+    }
+
+    /// Human-readable description for labels.
+    pub fn name(&self) -> String {
+        if self.is_unlimited() {
+            "ingress(unlimited)".into()
+        } else {
+            format!("ingress(bw={})", self.capacity)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +251,83 @@ mod tests {
         assert!((l.upload_delay(0, 100) - 1.0).abs() < 1e-12);
         assert!((l.upload_delay(9, 100) - 10.0).abs() < 1e-12);
         assert_eq!(l.upload_delay(6, 100), l.upload_delay(0, 100));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be slowed")]
+    fn uniform_with_slow_rejects_infinite_bandwidth() {
+        // bandwidth <= 0 means infinite; a "slow" tail on an infinite
+        // link would silently be as free as everyone else.
+        let _ = LinkModel::uniform_with_slow(10, 0.0, 0.0, 3, 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be slowed")]
+    fn uniform_with_slow_rejects_explicit_infinity() {
+        let _ =
+            LinkModel::uniform_with_slow(4, f64::INFINITY, 0.0, 1, 2.0);
+    }
+
+    #[test]
+    fn uniform_with_slow_allows_free_link_without_slow_tail() {
+        // n_slow == 0 keeps the old "0 = infinite" semantics.
+        let l = LinkModel::uniform_with_slow(4, 0.0, 0.0, 0, 10.0);
+        assert!(l.is_zero_cost());
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn per_worker_rejects_nan_bandwidth() {
+        let _ = LinkModel::per_worker(vec![100.0, f64::NAN], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn uniform_rejects_nan_bandwidth() {
+        let _ = LinkModel::uniform(2, f64::NAN, 0.0);
+    }
+
+    #[test]
+    fn unlimited_ingress_is_the_independent_model() {
+        let ing = IngressModel::unlimited();
+        assert!(ing.is_unlimited());
+        assert_eq!(ing.service_time(1 << 30), 0.0);
+        let mut arrivals = vec![3.0, 1.0, 2.0];
+        assert_eq!(ing.round_completion(&mut arrivals, 1 << 20), 3.0);
+        assert_eq!(ing.serve_at(5.0, 1.0, 1 << 20), 5.0);
+        // Nonpositive capacity means unlimited, as in LinkModel.
+        assert!(IngressModel::new(0.0).is_unlimited());
+        assert!(IngressModel::new(-3.0).is_unlimited());
+    }
+
+    #[test]
+    fn finite_ingress_serializes_fifo() {
+        // capacity 100 B/t, 100-B messages -> 1.0 service each.
+        let ing = IngressModel::new(100.0);
+        assert!(!ing.is_unlimited());
+        // Arrivals 0, 0.2, 5: first two queue back-to-back (finish 1, 2),
+        // the third finds the ingress idle (finish 6).
+        let mut arrivals = vec![5.0, 0.0, 0.2];
+        let t = ing.round_completion(&mut arrivals, 100);
+        assert!((t - 6.0).abs() < 1e-12);
+        // A fully bunched round degenerates to pure serialization.
+        let mut bunched = vec![1.0; 4];
+        let t = ing.round_completion(&mut bunched, 100);
+        assert!((t - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finite_ingress_strictly_exceeds_independent_time() {
+        let ing = IngressModel::new(50.0);
+        let mut arrivals = vec![0.5, 1.5, 4.0];
+        let independent = 4.0;
+        let t = ing.round_completion(&mut arrivals, 100);
+        assert!(t > independent, "{t} must exceed {independent}");
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn ingress_rejects_nan_capacity() {
+        let _ = IngressModel::new(f64::NAN);
     }
 }

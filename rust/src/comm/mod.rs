@@ -12,27 +12,38 @@
 //! * [`ErrorFeedback`] — the per-worker residual accumulator that carries
 //!   what compression dropped into the next round, preserving convergence
 //!   (Seide et al. 2014; Stich et al. 2018);
-//! * [`LinkModel`] — per-worker uplink bandwidth + latency (the comm
-//!   analogue of [`DelayModel`](crate::straggler::DelayModel)) converting
-//!   encoded bytes into a virtual upload delay;
+//! * [`LinkModel`] — per-worker bandwidth + latency (the comm analogue
+//!   of [`DelayModel`](crate::straggler::DelayModel)) converting encoded
+//!   bytes into a virtual transfer delay, used by both directions;
+//! * [`Broadcast`] — the **downlink**: the master's model broadcast,
+//!   encoded dense or as compressed model deltas with a master-side
+//!   error-feedback residual ([`DownlinkMode`]), each worker charged a
+//!   download delay before its compute starts (cf. arXiv 2208.03134);
+//! * [`IngressModel`] — shared master-ingress capacity: a round's
+//!   accepted uploads serialize FIFO through the master's NIC instead of
+//!   arriving independently, so the round's critical path becomes
+//!   compute + *congested* transfer;
 //! * [`CommChannel`] — the bundle the training drivers route gradients
-//!   through. [`CommChannel::dense`] is the zero-cost default, and with it
-//!   every driver reproduces the pre-`comm` trajectories bit for bit.
+//!   through. [`CommChannel::dense`] is the zero-cost default (free
+//!   dense downlink, unlimited ingress), and with it every driver
+//!   reproduces the pre-`comm` trajectories bit for bit.
 //!
-//! Because the upload delay is added to the compute delay **before** the
-//! fastest-k gather, compression genuinely changes which workers land in
-//! the top k — the error-runtime trade-off the `fig_comm_tradeoff` bench
-//! sweeps.
+//! Because the download + upload delays are added to the compute delay
+//! **before** the fastest-k gather, compression genuinely changes which
+//! workers land in the top k — the error-runtime trade-off the
+//! `fig_comm_tradeoff` and `fig_bidirectional` benches sweep.
 
+mod broadcast;
 mod channel;
 mod compress;
 mod feedback;
 mod link;
 
+pub use broadcast::{Broadcast, DownlinkMode};
 pub use channel::{CommChannel, CommStats, Transmission};
 pub use compress::{Compressor, Dense, QuantizeQsgd, RandK, TopK};
 pub use feedback::ErrorFeedback;
-pub use link::LinkModel;
+pub use link::{IngressModel, LinkModel};
 
 /// Byte-accounting model for encoded gradient messages.
 ///

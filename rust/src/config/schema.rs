@@ -104,10 +104,12 @@ pub enum CompressorSpec {
     },
 }
 
-/// Uplink communication model: scheme + error feedback + link parameters.
+/// Bidirectional communication model: uplink scheme + error feedback +
+/// link parameters, downlink (model broadcast) scheme + link, and the
+/// shared master-ingress capacity.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CommSpec {
-    /// Compression scheme.
+    /// Uplink compression scheme.
     pub scheme: CompressorSpec,
     /// Carry compression residuals across rounds (ignored for `Dense`).
     pub error_feedback: bool,
@@ -115,35 +117,81 @@ pub struct CommSpec {
     pub bandwidth: f64,
     /// Fixed per-message upload latency in virtual-time units.
     pub latency: f64,
+    /// Downlink (model broadcast) scheme. `Dense` broadcasts the full
+    /// model; any compressed scheme broadcasts *model deltas* with a
+    /// master-side error-feedback residual.
+    pub downlink: CompressorSpec,
+    /// Downlink bandwidth in bytes per virtual-time unit (0 = infinite).
+    pub down_bandwidth: f64,
+    /// Fixed per-message download latency in virtual-time units.
+    pub down_latency: f64,
+    /// Shared master-ingress capacity in bytes per virtual-time unit
+    /// (0 = infinite, i.e. independent uploads).
+    pub ingress_bw: f64,
 }
 
 impl Default for CommSpec {
-    /// Dense over a free link — the paper's compute-only timing.
+    /// Dense over free links both ways, unlimited ingress — the paper's
+    /// compute-only timing.
     fn default() -> Self {
         Self {
             scheme: CompressorSpec::Dense,
             error_feedback: true,
             bandwidth: 0.0,
             latency: 0.0,
+            downlink: CompressorSpec::Dense,
+            down_bandwidth: 0.0,
+            down_latency: 0.0,
+            ingress_bw: 0.0,
         }
     }
+}
+
+/// Build the compressor named by a [`CompressorSpec`].
+fn build_compressor(spec: &CompressorSpec) -> Box<dyn crate::comm::Compressor> {
+    use crate::comm::{Dense, QuantizeQsgd, RandK, TopK};
+    match spec {
+        CompressorSpec::Dense => Box::new(Dense::new()),
+        CompressorSpec::Qsgd { levels } => Box::new(QuantizeQsgd::new(*levels)),
+        CompressorSpec::TopK { frac } => Box::new(TopK::new(*frac)),
+        CompressorSpec::RandK { frac } => Box::new(RandK::new(*frac)),
+    }
+}
+
+/// Scheme-parameter checks shared by the uplink and downlink fields.
+fn validate_scheme(spec: &CompressorSpec, key: &str) -> Result<(), String> {
+    match *spec {
+        CompressorSpec::Qsgd { levels } if levels == 0 => {
+            Err(format!("comm.{key}: levels must be >= 1"))
+        }
+        CompressorSpec::TopK { frac } | CompressorSpec::RandK { frac }
+            if !(frac > 0.0 && frac <= 1.0) =>
+        {
+            Err(format!("comm.{key}: frac={frac} must be in (0, 1]"))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Finite non-negative check for a link/ingress rate parameter.
+fn validate_rate(value: f64, key: &str) -> Result<(), String> {
+    // Finiteness matters: NaN slips past a `< 0.0` check and +inf
+    // panics deep in the drivers instead of failing here.
+    if !value.is_finite() || value < 0.0 {
+        return Err(format!(
+            "comm.{key}={value} must be finite and >= 0 (0 = infinite/free)"
+        ));
+    }
+    Ok(())
 }
 
 impl CommSpec {
     /// Instantiate the channel for `n` workers.
     pub fn build(&self, n: usize) -> crate::comm::CommChannel {
         use crate::comm::{
-            CommChannel, Compressor, Dense, LinkModel, QuantizeQsgd, RandK,
-            TopK,
+            Broadcast, CommChannel, DownlinkMode, IngressModel, LinkModel,
         };
-        let compressor: Box<dyn Compressor> = match &self.scheme {
-            CompressorSpec::Dense => Box::new(Dense::new()),
-            CompressorSpec::Qsgd { levels } => {
-                Box::new(QuantizeQsgd::new(*levels))
-            }
-            CompressorSpec::TopK { frac } => Box::new(TopK::new(*frac)),
-            CompressorSpec::RandK { frac } => Box::new(RandK::new(*frac)),
-        };
+        let compressor = build_compressor(&self.scheme);
         let link = if self.bandwidth <= 0.0 && self.latency <= 0.0 {
             LinkModel::zero_cost(n)
         } else {
@@ -151,38 +199,35 @@ impl CommSpec {
         };
         let feedback = self.error_feedback
             && !matches!(self.scheme, CompressorSpec::Dense);
+        let down_link =
+            if self.down_bandwidth <= 0.0 && self.down_latency <= 0.0 {
+                LinkModel::zero_cost(n)
+            } else {
+                LinkModel::uniform(n, self.down_bandwidth, self.down_latency)
+            };
+        let mode = if matches!(self.downlink, CompressorSpec::Dense) {
+            DownlinkMode::Full
+        } else {
+            DownlinkMode::Delta
+        };
         CommChannel::new(compressor, link, feedback)
+            .with_broadcast(Broadcast::new(
+                build_compressor(&self.downlink),
+                down_link,
+                mode,
+            ))
+            .with_ingress(IngressModel::new(self.ingress_bw))
     }
 
-    /// Check scheme/link parameters.
+    /// Check scheme/link/ingress parameters.
     pub fn validate(&self) -> Result<(), String> {
-        match self.scheme {
-            CompressorSpec::Qsgd { levels } if levels == 0 => {
-                return Err("comm.levels must be >= 1".into())
-            }
-            CompressorSpec::TopK { frac } | CompressorSpec::RandK { frac }
-                if !(frac > 0.0 && frac <= 1.0) =>
-            {
-                return Err(format!(
-                    "comm.frac={frac} must be in (0, 1]"
-                ))
-            }
-            _ => {}
-        }
-        // Finiteness matters: NaN slips past a `< 0.0` check and +inf
-        // panics deep in the drivers instead of failing here.
-        if !self.bandwidth.is_finite() || self.bandwidth < 0.0 {
-            return Err(format!(
-                "comm.bandwidth={} must be finite and >= 0 (0 = infinite)",
-                self.bandwidth
-            ));
-        }
-        if !self.latency.is_finite() || self.latency < 0.0 {
-            return Err(format!(
-                "comm.latency={} must be finite and >= 0",
-                self.latency
-            ));
-        }
+        validate_scheme(&self.scheme, "scheme")?;
+        validate_scheme(&self.downlink, "downlink")?;
+        validate_rate(self.bandwidth, "bandwidth")?;
+        validate_rate(self.latency, "latency")?;
+        validate_rate(self.down_bandwidth, "down_bandwidth")?;
+        validate_rate(self.down_latency, "down_latency")?;
+        validate_rate(self.ingress_bw, "ingress_bw")?;
         Ok(())
     }
 }
@@ -356,40 +401,61 @@ impl ExperimentConfig {
         }
 
         if let Some(sec) = doc.section("comm") {
-            let kind = sec
-                .get("kind")
-                .and_then(|v| v.as_str())
-                .unwrap_or("dense");
             let f = |key: &str, dflt: f64| {
                 sec.get(key).and_then(|v| v.as_float()).unwrap_or(dflt)
             };
-            cfg.comm.scheme = match kind {
-                "dense" => CompressorSpec::Dense,
-                "qsgd" => {
-                    let levels = sec
-                        .get("levels")
-                        .and_then(|v| v.as_int())
-                        .unwrap_or(4);
-                    // Check the i64 before narrowing: `levels = -1` must
-                    // not wrap into a 4-billion-level "compressor".
-                    if !(1..=i64::from(u32::MAX)).contains(&levels) {
-                        return Err(format!(
-                            "comm.levels={levels} must be in 1..={}",
-                            u32::MAX
-                        ));
+            // Shared scheme parser for the uplink (`kind`/`levels`/`frac`)
+            // and downlink (`downlink`/`down_levels`/`down_frac`) keys.
+            let scheme = |kind_key: &str,
+                          levels_key: &str,
+                          frac_key: &str|
+             -> Result<CompressorSpec, String> {
+                let kind = sec
+                    .get(kind_key)
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("dense");
+                Ok(match kind {
+                    "dense" => CompressorSpec::Dense,
+                    "qsgd" => {
+                        let levels = sec
+                            .get(levels_key)
+                            .and_then(|v| v.as_int())
+                            .unwrap_or(4);
+                        // Check the i64 before narrowing: `levels = -1`
+                        // must not wrap into a 4-billion-level scheme.
+                        if !(1..=i64::from(u32::MAX)).contains(&levels) {
+                            return Err(format!(
+                                "comm.{levels_key}={levels} must be in 1..={}",
+                                u32::MAX
+                            ));
+                        }
+                        CompressorSpec::Qsgd { levels: levels as u32 }
                     }
-                    CompressorSpec::Qsgd { levels: levels as u32 }
-                }
-                "topk" => CompressorSpec::TopK { frac: f("frac", 0.1) },
-                "randk" => CompressorSpec::RandK { frac: f("frac", 0.1) },
-                other => return Err(format!("unknown comm.kind '{other}'")),
+                    "topk" => {
+                        CompressorSpec::TopK { frac: f(frac_key, 0.1) }
+                    }
+                    "randk" => {
+                        CompressorSpec::RandK { frac: f(frac_key, 0.1) }
+                    }
+                    other => {
+                        return Err(format!(
+                            "unknown comm.{kind_key} '{other}'"
+                        ))
+                    }
+                })
             };
+            cfg.comm.scheme = scheme("kind", "levels", "frac")?;
+            cfg.comm.downlink =
+                scheme("downlink", "down_levels", "down_frac")?;
             cfg.comm.error_feedback = sec
                 .get("error_feedback")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(true);
             cfg.comm.bandwidth = f("bandwidth", 0.0);
             cfg.comm.latency = f("latency", 0.0);
+            cfg.comm.down_bandwidth = f("down_bandwidth", 0.0);
+            cfg.comm.down_latency = f("down_latency", 0.0);
+            cfg.comm.ingress_bw = f("ingress_bw", 0.0);
         }
 
         if let Some(sec) = doc.section("workload") {
@@ -553,6 +619,7 @@ latency = 0.05
                 error_feedback: true,
                 bandwidth: 500.0,
                 latency: 0.05,
+                ..Default::default()
             }
         );
         let channel = cfg.comm.build(cfg.n);
@@ -599,6 +666,75 @@ latency = 0.05
         cfg.comm.latency = 0.0;
         cfg.comm.bandwidth = f64::INFINITY;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn downlink_and_ingress_parse_and_build() {
+        let text = r#"
+n = 10
+
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+
+[comm]
+kind = "dense"
+downlink = "qsgd"
+down_levels = 8
+down_bandwidth = 400.0
+down_latency = 0.02
+ingress_bw = 1000.0
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.comm.downlink, CompressorSpec::Qsgd { levels: 8 });
+        assert_eq!(cfg.comm.down_bandwidth, 400.0);
+        assert_eq!(cfg.comm.down_latency, 0.02);
+        assert_eq!(cfg.comm.ingress_bw, 1000.0);
+        let channel = cfg.comm.build(cfg.n);
+        assert!(!channel.downlink_is_free());
+        assert!(!channel.ingress().is_unlimited());
+        assert!(channel.name().contains("down:delta-qsgd"));
+        assert!(channel.name().contains("ingress"));
+    }
+
+    #[test]
+    fn downlink_and_ingress_default_to_free() {
+        let cfg = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm.downlink, CompressorSpec::Dense);
+        let channel = cfg.comm.build(cfg.n);
+        assert!(channel.downlink_is_free());
+        assert!(channel.ingress().is_unlimited());
+        assert_eq!(channel.name(), "dense");
+    }
+
+    #[test]
+    fn downlink_and_ingress_validation_rejects_bad_params() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.comm.ingress_bw = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.comm.ingress_bw = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        cfg.comm.ingress_bw = 0.0;
+        cfg.comm.down_bandwidth = -2.0;
+        assert!(cfg.validate().is_err());
+        cfg.comm.down_bandwidth = 0.0;
+        cfg.comm.down_latency = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.comm.down_latency = 0.0;
+        cfg.comm.downlink = CompressorSpec::TopK { frac: 2.0 };
+        assert!(cfg.validate().is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\ndownlink = \"zip\"\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\ndownlink = \"qsgd\"\ndown_levels = -1\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct ExperimentOutput {
     pub bytes_sent: u64,
     /// Total upload time of accepted messages.
     pub comm_time: f64,
+    /// Encoded bytes of all model downloads.
+    pub bytes_down: u64,
+    /// Total download time charged.
+    pub down_time: f64,
 }
 
 /// Run one experiment end-to-end on the native backend.
@@ -79,6 +83,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 k_changes: Vec::new(),
                 bytes_sent: run.bytes_sent,
                 comm_time: run.comm_time,
+                bytes_down: run.bytes_down,
+                down_time: run.down_time,
             })
         }
         policy_spec => {
@@ -115,6 +121,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 k_changes: run.k_changes,
                 bytes_sent: run.bytes_sent,
                 comm_time: run.comm_time,
+                bytes_down: run.bytes_down,
+                down_time: run.down_time,
             })
         }
     }
@@ -185,6 +193,7 @@ mod tests {
             error_feedback: true,
             bandwidth: 1000.0,
             latency: 0.01,
+            ..Default::default()
         };
         let out = run_experiment(&cfg).unwrap();
         assert_eq!(out.steps, 300);
@@ -199,6 +208,37 @@ mod tests {
         let dense = run_experiment(&base()).unwrap();
         assert!(dense.bytes_sent > out.bytes_sent);
         assert_eq!(dense.comm_time, 0.0);
+    }
+
+    #[test]
+    fn bidirectional_config_runs_and_meters_the_downlink() {
+        use crate::config::{CommSpec, CompressorSpec};
+        let mut cfg = base();
+        cfg.comm = CommSpec {
+            downlink: CompressorSpec::TopK { frac: 0.3 },
+            ingress_bw: 2000.0,
+            ..Default::default()
+        };
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.steps, 300);
+        // Delta downlink: dense bootstrap (56 B) + 299 top-3-of-10
+        // deltas (40 B), each received by all 10 workers.
+        assert_eq!(out.bytes_down, 10 * (56 + 299 * 40));
+        assert!(
+            out.recorder.last().unwrap().error
+                < out.recorder.samples()[0].error
+        );
+        // The default config still prices the downlink at zero but
+        // meters its dense traffic.
+        let dense = run_experiment(&base()).unwrap();
+        assert_eq!(dense.bytes_down, 300 * 10 * 56);
+        assert_eq!(dense.down_time, 0.0);
+        // With finite ingress the clock runs strictly slower than the
+        // independent-upload model of the same config.
+        let mut slow = base();
+        slow.comm.ingress_bw = 100.0;
+        let congested = run_experiment(&slow).unwrap();
+        assert!(congested.total_time > dense.total_time);
     }
 
     #[test]

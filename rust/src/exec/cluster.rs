@@ -1,9 +1,12 @@
 //! Threaded master/worker cluster with fastest-k gather.
 //!
 //! Communication-aware like the simulator: the master prices each
-//! worker's upload from the channel's size model and folds it into the
-//! injected virtual delay (the worker sleeps compute + upload), then
-//! decodes accepted gradients through the channel on receipt.
+//! worker's download + upload from the channel's size models and folds
+//! both into the injected virtual delay (the worker sleeps download +
+//! compute + upload), broadcasts the *downlink view* of the model, and
+//! decodes accepted gradients through the channel on receipt. With a
+//! finite master-ingress capacity the round's virtual time is the FIFO
+//! ingress completion of the accepted responses, not their max.
 
 use crate::comm::CommChannel;
 use crate::data::Shards;
@@ -60,6 +63,10 @@ pub struct ThreadedRunStats {
     pub bytes_sent: u64,
     /// Total upload time of accepted messages (virtual units).
     pub comm_time: f64,
+    /// Encoded bytes of all model downloads (once per worker per round).
+    pub bytes_down: u64,
+    /// Total download time charged (virtual units).
+    pub down_time: f64,
 }
 
 struct Job {
@@ -202,9 +209,17 @@ impl ThreadedCluster {
         let mut comm_rngs: Vec<Pcg64> = (0..n)
             .map(|i| Pcg64::seed_stream(cfg.seed, 0xC046_0000 + i as u64))
             .collect();
+        // Downlink encoder stream (the broadcast is master-side and
+        // single-threaded, so one stream suffices and stays reproducible).
+        let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04F);
         let bytes0 = channel.stats.bytes_sent;
         let comm_t0 = channel.stats.comm_time;
+        let down0 = channel.stats.bytes_down;
+        let down_t0 = channel.stats.down_time;
         let mut w = w0.to_vec();
+        // Workers' model view: what the downlink broadcast reconstructs
+        // (bitwise `w` on the default dense downlink).
+        let mut w_view = w0.to_vec();
         let mut g = vec![0.0f32; d];
         let mut g_prev = vec![0.0f32; d];
         let mut decoded = vec![0.0f32; d];
@@ -213,6 +228,9 @@ impl ThreadedCluster {
         let mut late = 0u64;
         // Zero-cost links price messages at exactly 0.0 — no branch needed.
         let msg_bytes = channel.message_bytes(d);
+        let ingress = *channel.ingress();
+        // Accepted responses' virtual delays, for the congested clock.
+        let mut accepted_delays: Vec<f64> = Vec::with_capacity(n);
         let mut recorder = Recorder::with_stride(
             format!("threaded/{}", policy.name()),
             cfg.record_stride,
@@ -226,12 +244,17 @@ impl ThreadedCluster {
         });
 
         for j in 0..cfg.max_iterations {
-            // Broadcast w_j with per-worker injected delays covering both
-            // compute and the priced upload of the coming response.
-            let w_shared = Arc::new(w.clone());
+            // Broadcast w_j through the priced downlink: workers compute
+            // at the decoded view, and each injected delay covers the
+            // download, the compute, and the priced upload of the coming
+            // response.
+            let down_bytes =
+                channel.broadcast_model(&w, &mut w_view, &mut bcast_rng);
+            let w_shared = Arc::new(w_view.clone());
             for (i, tx) in self.job_txs.iter().enumerate() {
                 let delay = delays.sample(j, i, rng)
-                    + channel.link_upload_delay(i, msg_bytes);
+                    + channel.link_upload_delay(i, msg_bytes)
+                    + channel.download_delay(i, down_bytes);
                 tx.send(Job {
                     generation: j,
                     w: Arc::clone(&w_shared),
@@ -245,6 +268,7 @@ impl ThreadedCluster {
             g.iter_mut().for_each(|v| *v = 0.0);
             let mut got = 0usize;
             let mut iter_vt = 0.0f64;
+            accepted_delays.clear();
             while got < k {
                 let resp = self.resp_rx.recv().expect("cluster closed");
                 if resp.generation != j {
@@ -253,6 +277,7 @@ impl ThreadedCluster {
                 }
                 got += 1;
                 iter_vt = iter_vt.max(resp.delay);
+                accepted_delays.push(resp.delay);
                 channel.transmit(
                     resp.worker,
                     &resp.grad,
@@ -262,6 +287,14 @@ impl ThreadedCluster {
                 for (gv, pv) in g.iter_mut().zip(&decoded) {
                     *gv += *pv;
                 }
+            }
+            // Congested clock: with finite ingress the round's virtual
+            // time is the FIFO completion of the accepted uploads (real
+            // arrival order is thread-nondeterministic, so the virtual
+            // FIFO order is by virtual delay — sorted inside).
+            if !ingress.is_unlimited() {
+                iter_vt =
+                    ingress.round_completion(&mut accepted_delays, msg_bytes);
             }
             let inv_k = 1.0 / k as f32;
             g.iter_mut().for_each(|v| *v *= inv_k);
@@ -290,6 +323,8 @@ impl ThreadedCluster {
                     error: eval_error(&w),
                     bytes: channel.stats.bytes_sent - bytes0,
                     comm_time: channel.stats.comm_time - comm_t0,
+                    bytes_down: channel.stats.bytes_down - down0,
+                    down_time: channel.stats.down_time - down_t0,
                 });
             }
         }
@@ -302,6 +337,8 @@ impl ThreadedCluster {
             late_responses: late,
             bytes_sent: channel.stats.bytes_sent - bytes0,
             comm_time: channel.stats.comm_time - comm_t0,
+            bytes_down: channel.stats.bytes_down - down0,
+            down_time: channel.stats.down_time - down_t0,
         }
     }
 }
@@ -418,6 +455,60 @@ mod tests {
         assert!(
             run.late_responses > 0,
             "with k=1 of 4, late responses are inevitable"
+        );
+    }
+
+    #[test]
+    fn bidirectional_channel_slows_the_virtual_clock_on_the_live_cluster() {
+        use crate::comm::{
+            Broadcast, CommChannel, Dense, DownlinkMode, IngressModel,
+            LinkModel,
+        };
+        use crate::straggler::ExponentialDelays;
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 40, d: 4, ..Default::default() },
+            24,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let shards = Shards::partition(&ds, 4);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = ThreadedConfig {
+            eta: 0.001,
+            max_iterations: 40,
+            time_scale: 1e-5,
+            seed: 8,
+            record_stride: 10,
+        };
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-5);
+        let mut policy = FixedK::new(2);
+        // d=4 -> 32-byte messages both ways; downlink 32 B/t (+1.0 per
+        // round per worker) and ingress 32 B/t (+1.0 serialization per
+        // accepted upload).
+        let mut channel = CommChannel::dense(4)
+            .with_broadcast(Broadcast::new(
+                Box::new(Dense::new()),
+                LinkModel::uniform(4, 32.0, 0.0),
+                DownlinkMode::Full,
+            ))
+            .with_ingress(IngressModel::new(32.0));
+        let run = cluster.run_with_comm(
+            &delays,
+            &mut channel,
+            &mut policy,
+            &vec![0.0; 4],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        // Deterministic accounting regardless of thread scheduling:
+        // every round all 4 workers download one 32-byte model at 1.0
+        // each, and every round's clock is at least download (1.0) +
+        // two serialized ingress services (2.0).
+        assert_eq!(run.bytes_down, 40 * 4 * 32);
+        assert!((run.down_time - 40.0 * 4.0).abs() < 1e-9);
+        assert!(
+            run.virtual_time >= 40.0 * 3.0 - 1e-9,
+            "congested clock too small: {}",
+            run.virtual_time
         );
     }
 

@@ -25,7 +25,12 @@
 //! [`comm::RandK`] over a finite-bandwidth [`comm::LinkModel`] adds a
 //! per-worker virtual upload delay to each response time *before* the
 //! fastest-k gather, and [`comm::ErrorFeedback`] carries the compression
-//! residual so convergence is preserved. See `benches/fig_comm_tradeoff`.
+//! residual so convergence is preserved. The link is bidirectional: a
+//! [`comm::Broadcast`] prices the master's model downlink (dense, or
+//! compressed model deltas with a master-side residual), and a
+//! [`comm::IngressModel`] makes a round's accepted uploads contend on
+//! the master's shared ingress (FIFO) instead of arriving independently.
+//! See `benches/fig_comm_tradeoff` and `benches/fig_bidirectional`.
 //!
 //! ## Quick start
 //!
@@ -78,8 +83,9 @@ pub mod prelude {
         run_async, run_async_comm, AsyncConfig, AsyncRun,
     };
     pub use crate::comm::{
-        CommChannel, CommStats, Compressor, Dense, ErrorFeedback, LinkModel,
-        QuantizeQsgd, RandK, TopK, WireFormat,
+        Broadcast, CommChannel, CommStats, Compressor, Dense, DownlinkMode,
+        ErrorFeedback, IngressModel, LinkModel, QuantizeQsgd, RandK, TopK,
+        WireFormat,
     };
     pub use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
     pub use crate::grad::{GradBackend, NativeBackend};

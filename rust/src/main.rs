@@ -88,6 +88,32 @@ fn cmd_figure(args: &Args, which: u8) -> i32 {
     0
 }
 
+/// Parse one compression-scheme flag triple (shared by the uplink
+/// `--comm`/`--comm-levels`/`--comm-frac` and the downlink
+/// `--downlink`/`--down-levels`/`--down-frac` families).
+fn parse_scheme_flag(
+    args: &Args,
+    flag: &str,
+    levels_flag: &str,
+    frac_flag: &str,
+) -> Result<CompressorSpec, String> {
+    Ok(match args.get(flag).unwrap_or("dense") {
+        "dense" => CompressorSpec::Dense,
+        "qsgd" => CompressorSpec::Qsgd {
+            levels: args.get_parse(levels_flag, 4u32).unwrap_or(4),
+        },
+        "topk" => CompressorSpec::TopK {
+            frac: args.get_parse(frac_flag, 0.1f64).unwrap_or(0.1),
+        },
+        "randk" => CompressorSpec::RandK {
+            frac: args.get_parse(frac_flag, 0.1f64).unwrap_or(0.1),
+        },
+        other => {
+            return Err(format!("unknown --{flag} scheme '{other}'"))
+        }
+    })
+}
+
 fn cmd_train(args: &Args) -> i32 {
     let cfg = if let Some(path) = args.get("config") {
         match std::fs::read_to_string(path)
@@ -116,19 +142,24 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.workload = WorkloadSpec::LinReg { m, d };
         let lambda = args.get_parse("lambda", 1.0f64).unwrap_or(1.0);
         cfg.delays = DelaySpec::Exponential { lambda };
-        cfg.comm.scheme = match args.get("comm").unwrap_or("dense") {
-            "dense" => CompressorSpec::Dense,
-            "qsgd" => CompressorSpec::Qsgd {
-                levels: args.get_parse("comm-levels", 4u32).unwrap_or(4),
-            },
-            "topk" => CompressorSpec::TopK {
-                frac: args.get_parse("comm-frac", 0.1f64).unwrap_or(0.1),
-            },
-            "randk" => CompressorSpec::RandK {
-                frac: args.get_parse("comm-frac", 0.1f64).unwrap_or(0.1),
-            },
-            other => {
-                eprintln!("config error: unknown --comm scheme '{other}'");
+        cfg.comm.scheme =
+            match parse_scheme_flag(args, "comm", "comm-levels", "comm-frac")
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    return 2;
+                }
+            };
+        cfg.comm.downlink = match parse_scheme_flag(
+            args,
+            "downlink",
+            "down-levels",
+            "down-frac",
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("config error: {e}");
                 return 2;
             }
         };
@@ -137,6 +168,12 @@ fn cmd_train(args: &Args) -> i32 {
             args.get_parse("bandwidth", 0.0f64).unwrap_or(0.0);
         cfg.comm.latency =
             args.get_parse("link-latency", 0.0f64).unwrap_or(0.0);
+        cfg.comm.down_bandwidth =
+            args.get_parse("down-bandwidth", 0.0f64).unwrap_or(0.0);
+        cfg.comm.down_latency =
+            args.get_parse("down-latency", 0.0f64).unwrap_or(0.0);
+        cfg.comm.ingress_bw =
+            args.get_parse("ingress-bw", 0.0f64).unwrap_or(0.0);
         cfg.policy = if args.has("async") {
             PolicySpec::Async
         } else if let Some(kstr) = args.get("k") {
@@ -174,8 +211,10 @@ fn cmd_train(args: &Args) -> i32 {
                         .join(", ")
                 ),
                 format!(
-                    "comm: {} bytes uploaded, {:.1} upload time units",
-                    out.bytes_sent, out.comm_time
+                    "comm: {} bytes up ({:.1} upload time), {} bytes down \
+                     ({:.1} download time)",
+                    out.bytes_sent, out.comm_time, out.bytes_down,
+                    out.down_time
                 ),
             ];
             emit(args, "train", &[&out.recorder], &summary);

@@ -1,9 +1,14 @@
 //! Synchronous fastest-k SGD driver.
 //!
 //! Gradients travel through a [`CommChannel`]: each worker's response time
-//! is its compute delay **plus** the virtual upload delay of its encoded
-//! gradient message, and the fastest-k selection runs on that total — so
-//! a smaller encoding genuinely changes which workers make the top k.
+//! is its model-download delay **plus** compute delay **plus** the virtual
+//! upload delay of its encoded gradient message, and the fastest-k
+//! selection runs on that total — so a smaller encoding genuinely changes
+//! which workers make the top k. Workers compute against the *broadcast
+//! view* of the model (bitwise the master's model on the default dense
+//! downlink, a residual-tracked reconstruction for compressed deltas),
+//! and with a finite master-ingress capacity the k accepted uploads
+//! serialize FIFO, pushing the round past the k-th arrival.
 //! [`run_fastest_k`] uses the zero-cost dense channel and reproduces the
 //! paper's compute-only timing exactly; [`run_fastest_k_comm`] takes an
 //! explicit channel.
@@ -63,6 +68,11 @@ pub struct FastestKRun {
     /// Total upload time of accepted messages (comm work, not critical
     /// path — the critical path is folded into `total_time`).
     pub comm_time: f64,
+    /// Encoded bytes of all model downloads (each broadcast counts once
+    /// per receiving worker).
+    pub bytes_down: u64,
+    /// Total download time charged (download work, mirroring `comm_time`).
+    pub down_time: f64,
 }
 
 /// Select the indices of the k smallest delays and the k-th smallest value.
@@ -77,8 +87,11 @@ pub fn fastest_k_select(
     idx.clear();
     idx.extend(0..n);
     if k < n {
+        // total_cmp, not partial_cmp(..).unwrap(): a NaN delay (e.g. a
+        // misconfigured trace or a poisoned link model) must sort as
+        // slowest-of-all and lose the selection, never panic the run.
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            delays[a].partial_cmp(&delays[b]).unwrap()
+            delays[a].total_cmp(&delays[b])
         });
         // After select_nth, positions 0..k hold the k fastest (unordered),
         // with the k-th order statistic exactly at position k-1.
@@ -137,18 +150,30 @@ pub fn run_fastest_k_comm(
 
     let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
     let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC044);
+    // Dedicated stream for the downlink encoder; the default dense
+    // broadcast draws nothing, so the delay stream is untouched.
+    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04D);
     let bytes0 = channel.stats.bytes_sent;
     let comm_t0 = channel.stats.comm_time;
+    let down0 = channel.stats.bytes_down;
+    let down_t0 = channel.stats.down_time;
     let mut w = w0.to_vec();
+    // The workers' model view: what the downlink broadcast reconstructs
+    // each round (bitwise `w` on the default dense downlink).
+    let mut w_view = w0.to_vec();
     let mut g = vec![0.0f32; d]; // ĝ_j
     let mut g_prev = vec![0.0f32; d]; // ĝ_{j−1}
     let mut partial = vec![0.0f32; d];
     let mut decoded = vec![0.0f32; d];
     let mut velocity: Option<Vec<f32>> = None;
-    // Batched-backend scratch (allocated only if the backend supports it).
+    // Batched-backend scratch (allocated lazily, and only on the batched
+    // aggregation path — shard-by-shard runs never pay the O(n·d) memory).
     let mut all_buf: Option<Vec<f32>> = None;
     let mut delay_buf = vec![0.0f64; n];
     let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
+    // Accepted-arrival scratch for the shared-ingress round clock.
+    let mut arrival_buf: Vec<f64> = Vec::with_capacity(n);
+    let ingress = *channel.ingress();
 
     let mut recorder =
         Recorder::with_stride(policy.name(), cfg.record_stride);
@@ -159,9 +184,10 @@ pub fn run_fastest_k_comm(
 
     // Per-message upload pricing is data-independent, so the whole
     // round's comm delays are known before any gradient is computed. On a
-    // zero-cost link the upload delay is exactly 0.0, and `x + 0.0` is
-    // bitwise identity for the positive compute delays, so no branch is
-    // needed to preserve the paper's compute-only trajectories.
+    // zero-cost link the upload (and download) delay is exactly 0.0, and
+    // `x + 0.0` is bitwise identity for the positive compute delays, so
+    // no branch is needed to preserve the paper's compute-only
+    // trajectories.
     let msg_bytes = channel.message_bytes(d);
 
     // Initial point.
@@ -175,13 +201,30 @@ pub fn run_fastest_k_comm(
 
     while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time) {
         backend.on_iteration(j);
-        // (2) response times (compute + upload) + fastest-k selection.
+        // (1) downlink: broadcast w_j; every worker computes against the
+        // decoded view and is charged its download before compute starts.
+        let down_bytes = channel.broadcast_model(&w, &mut w_view, &mut bcast_rng);
+        // (2) response times (download + compute + upload) + fastest-k
+        // selection. The free-downlink download delay is exactly 0.0, so
+        // appending it preserves the uplink-only sums bitwise.
         for (i, slot) in delay_buf.iter_mut().enumerate() {
             *slot = delays.sample(j, i, &mut rng)
-                + channel.link_upload_delay(i, msg_bytes);
+                + channel.link_upload_delay(i, msg_bytes)
+                + channel.download_delay(i, down_bytes);
         }
         let (x_k, _) = fastest_k_select(&delay_buf, k, &mut idx_buf);
-        t += x_k;
+        // (2b) shared-ingress congestion: with finite master ingress the
+        // k accepted uploads serialize FIFO, so the round ends at the
+        // last accepted message's ingress finish, not the k-th arrival.
+        // The unlimited default skips the sort and keeps x_k bitwise.
+        let round_time = if ingress.is_unlimited() {
+            x_k
+        } else {
+            arrival_buf.clear();
+            arrival_buf.extend(idx_buf[..k].iter().map(|&i| delay_buf[i]));
+            ingress.round_completion(&mut arrival_buf, msg_bytes)
+        };
+        t += round_time;
 
         // (3) aggregate the k fastest partial gradients — through the
         // batched path when the backend has one and k is past the
@@ -190,8 +233,17 @@ pub fn run_fastest_k_comm(
         // channel (error feedback + compression + byte accounting).
         g.iter_mut().for_each(|v| *v = 0.0);
         let use_batched = backend.supports_all_grads() && 4 * k >= n;
-        let buf = all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
-        if use_batched && backend.all_grads(&w, buf) {
+        // The n*d scratch is allocated only when the batched path is
+        // actually taken (hoisted behind the check — shard-by-shard runs
+        // used to pay the full O(n·d) allocation for nothing).
+        let mut batched = false;
+        if use_batched {
+            let buf = all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
+            batched = backend.all_grads(&w_view, buf);
+        }
+        if batched {
+            let buf =
+                all_buf.as_ref().expect("batched scratch allocated above");
             for &worker in &idx_buf[..k] {
                 let row = &buf[worker * d..(worker + 1) * d];
                 channel.transmit(worker, row, &mut decoded, &mut comm_rng);
@@ -201,7 +253,7 @@ pub fn run_fastest_k_comm(
             }
         } else {
             for &worker in &idx_buf[..k] {
-                backend.partial_grad(worker, &w, &mut partial);
+                backend.partial_grad(worker, &w_view, &mut partial);
                 channel.transmit(worker, &partial, &mut decoded, &mut comm_rng);
                 for (gv, pv) in g.iter_mut().zip(&decoded) {
                     *gv += *pv;
@@ -252,6 +304,8 @@ pub fn run_fastest_k_comm(
                 error: eval_error(&w),
                 bytes: channel.stats.bytes_sent - bytes0,
                 comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
             });
         }
     }
@@ -265,6 +319,8 @@ pub fn run_fastest_k_comm(
             error: eval_error(&w),
             bytes: channel.stats.bytes_sent - bytes0,
             comm_time: channel.stats.comm_time - comm_t0,
+            bytes_down: channel.stats.bytes_down - down0,
+            down_time: channel.stats.down_time - down_t0,
         });
     }
 
@@ -276,6 +332,8 @@ pub fn run_fastest_k_comm(
         k_changes,
         bytes_sent: channel.stats.bytes_sent - bytes0,
         comm_time: channel.stats.comm_time - comm_t0,
+        bytes_down: channel.stats.bytes_down - down0,
+        down_time: channel.stats.down_time - down_t0,
     }
 }
 
@@ -308,6 +366,23 @@ mod tests {
         fastest.sort_unstable();
         assert_eq!(fastest, vec![1, 3]);
         // k = n degenerates to the max.
+        let (x5, _) = fastest_k_select(&delays, 5, &mut idx);
+        assert_eq!(x5, 5.0);
+    }
+
+    #[test]
+    fn fastest_k_select_survives_nan_delays() {
+        // Regression: a NaN delay used to panic the
+        // partial_cmp(..).unwrap() inside select_nth_unstable_by. Under
+        // total_cmp a NaN orders as slowest and simply loses.
+        let delays = vec![5.0, f64::NAN, 1.0, f64::NAN, 3.0];
+        let mut idx = Vec::new();
+        let (x2, _) = fastest_k_select(&delays, 2, &mut idx);
+        assert_eq!(x2, 3.0);
+        let mut fastest: Vec<usize> = idx[..2].to_vec();
+        fastest.sort_unstable();
+        assert_eq!(fastest, vec![2, 4], "NaN workers must not be selected");
+        // k = n must not panic either (f64::max ignores NaN).
         let (x5, _) = fastest_k_select(&delays, 5, &mut idx);
         assert_eq!(x5, 5.0);
     }
@@ -541,6 +616,194 @@ mod tests {
         for pair in samples.windows(2) {
             assert!(pair[1].bytes >= pair[0].bytes);
         }
+    }
+
+    #[test]
+    fn explicit_free_bidirectional_channel_is_bitwise_the_plain_run() {
+        // A channel with every new axis spelled out at its default
+        // (dense free broadcast, unlimited ingress) must reproduce the
+        // pre-downlink trajectories bit for bit.
+        use crate::comm::{
+            Broadcast, CommChannel, Dense, IngressModel, LinkModel,
+        };
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 150,
+            seed: 17,
+            record_stride: 30,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run = |explicit: bool| {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(4);
+            let mut channel = if explicit {
+                CommChannel::new(
+                    Box::new(Dense::new()),
+                    LinkModel::zero_cost(10),
+                    false,
+                )
+                .with_broadcast(Broadcast::free(10))
+                .with_ingress(IngressModel::unlimited())
+            } else {
+                CommChannel::dense(10)
+            };
+            run_fastest_k_comm(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.recorder.samples(), b.recorder.samples());
+        assert_eq!(a.bytes_down, b.bytes_down);
+        // The free broadcast still meters downlink traffic: one dense
+        // model per worker per iteration (d=10 -> 56 bytes).
+        assert_eq!(a.bytes_down, 150 * 10 * 56);
+        assert_eq!(a.down_time, 0.0);
+    }
+
+    #[test]
+    fn finite_ingress_strictly_slows_rounds_but_keeps_the_math() {
+        use crate::comm::{CommChannel, IngressModel};
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.001,
+            max_iterations: 200,
+            seed: 23,
+            record_stride: 50,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run_with_ingress = |capacity: f64| {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(5);
+            let mut channel = CommChannel::dense(10)
+                .with_ingress(IngressModel::new(capacity));
+            run_fastest_k_comm(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let free = run_with_ingress(0.0); // unlimited
+        // 56-byte dense messages at 56 B/t: 1.0 ingress service each, so
+        // each k=5 round gains at least one service time.
+        let congested = run_with_ingress(56.0);
+        assert!(
+            congested.total_time >= free.total_time + 200.0 - 1e-6,
+            "ingress serialization must stretch every round: {} vs {}",
+            congested.total_time,
+            free.total_time
+        );
+        // Selection and gradient math are untouched — only the clock.
+        assert_eq!(congested.w, free.w);
+        assert_eq!(congested.bytes_sent, free.bytes_sent);
+    }
+
+    #[test]
+    fn finite_downlink_bandwidth_slows_the_clock_only() {
+        use crate::comm::{
+            Broadcast, CommChannel, Dense, DownlinkMode, LinkModel,
+        };
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.001,
+            max_iterations: 100,
+            seed: 29,
+            record_stride: 50,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run_with_down_bw = |bw: f64| {
+            let (mut backend, problem) = small_setup();
+            let mut policy = FixedK::new(5);
+            let link = if bw > 0.0 {
+                LinkModel::uniform(10, bw, 0.0)
+            } else {
+                LinkModel::zero_cost(10)
+            };
+            let mut channel = CommChannel::dense(10).with_broadcast(
+                Broadcast::new(Box::new(Dense::new()), link, DownlinkMode::Full),
+            );
+            run_fastest_k_comm(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let free = run_with_down_bw(0.0);
+        let slow = run_with_down_bw(56.0); // 56-byte model -> +1.0/round
+        assert!(
+            slow.total_time > free.total_time + 99.0,
+            "every worker's download must push every round out: {} vs {}",
+            slow.total_time,
+            free.total_time
+        );
+        assert!(slow.down_time > 0.0);
+        assert_eq!(slow.bytes_down, free.bytes_down);
+        assert_eq!(slow.w, free.w, "dense downlink must not change the math");
+    }
+
+    #[test]
+    fn delta_downlink_trains_and_sends_fewer_downlink_bytes() {
+        use crate::comm::{
+            Broadcast, CommChannel, DownlinkMode, LinkModel, TopK,
+        };
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 2000,
+            seed: 31,
+            record_stride: 100,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let (mut backend, problem) = small_setup();
+        let mut policy = FixedK::new(5);
+        let mut channel = CommChannel::dense(10).with_broadcast(
+            Broadcast::new(
+                Box::new(TopK::new(0.3)),
+                LinkModel::zero_cost(10),
+                DownlinkMode::Delta,
+            ),
+        );
+        let run = run_fastest_k_comm(
+            &mut backend,
+            &delays,
+            &mut policy,
+            &mut channel,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(
+            last < first * 1e-2,
+            "delta downlink failed to descend: {first} -> {last}"
+        );
+        // Bootstrap round ships dense (56 B), the rest top-3-of-10 delta
+        // messages (16 + 24 = 40 B), each received by all 10 workers.
+        assert_eq!(run.bytes_down, 10 * (56 + 1999 * 40));
+        // Residual-tracked view stays within a bounded lag of the model.
+        assert!(channel.broadcast_residual_norm_sq().is_finite());
     }
 
     #[test]

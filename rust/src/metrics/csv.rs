@@ -1,30 +1,35 @@
 //! CSV export of run records (no serde offline — hand-rolled writer).
 //!
-//! # Column schema (v2)
+//! # Column schema (v3)
 //!
 //! One long-format table, one row per recorded [`Sample`] per run:
 //!
-//! | column      | type  | meaning                                           |
-//! |-------------|-------|---------------------------------------------------|
-//! | `label`     | str   | run label (policy / scheme name)                  |
-//! | `iteration` | u64   | iteration (sync) or update (async) index          |
-//! | `time`      | f64   | virtual wall-clock after the iteration            |
-//! | `k`         | usize | k in effect for the iteration (1 for async)       |
-//! | `error`     | f64   | `F(w) − F*` (or raw loss), scientific notation    |
-//! | `bytes`     | u64   | cumulative accepted gradient-message bytes        |
-//! | `comm_time` | f64   | cumulative upload time of accepted messages       |
+//! | column       | type  | meaning                                           |
+//! |--------------|-------|---------------------------------------------------|
+//! | `label`      | str   | run label (policy / scheme name)                  |
+//! | `iteration`  | u64   | iteration (sync) or update (async) index          |
+//! | `time`       | f64   | virtual wall-clock after the iteration            |
+//! | `k`          | usize | k in effect for the iteration (1 for async)       |
+//! | `error`      | f64   | `F(w) − F*` (or raw loss), scientific notation    |
+//! | `bytes`      | u64   | cumulative accepted gradient-message bytes (uplink) |
+//! | `comm_time`  | f64   | cumulative upload time of accepted messages       |
+//! | `bytes_down` | u64   | cumulative model-download bytes (sync broadcasts count once per receiving worker) |
+//! | `down_time`  | f64   | cumulative download time charged                  |
 //!
-//! The first line of every file is a `#`-prefixed comment naming the
-//! columns, followed by the machine-readable header row — downstream plot
-//! scripts should match columns by name from either line rather than
-//! hardcoding indices. Labels must not contain commas.
+//! v3 appends the per-direction downlink columns (`bytes_down`,
+//! `down_time`); v2 files are a column-prefix of v3. The first line of
+//! every file is a `#`-prefixed comment naming the columns, followed by
+//! the machine-readable header row — downstream plot scripts should match
+//! columns by name from either line rather than hardcoding indices.
+//! Labels must not contain commas.
 
 use super::Recorder;
 use std::io::Write;
 use std::path::Path;
 
 /// The column list, single source of truth for header + comment lines.
-pub const CSV_COLUMNS: &str = "label,iteration,time,k,error,bytes,comm_time";
+pub const CSV_COLUMNS: &str =
+    "label,iteration,time,k,error,bytes,comm_time,bytes_down,down_time";
 
 /// CSV writing failures.
 #[derive(Debug)]
@@ -62,15 +67,15 @@ pub fn write_csv(path: &Path, runs: &[&Recorder]) -> Result<(), CsvError> {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "# adasgd run series v2; columns: {CSV_COLUMNS}")?;
+    writeln!(f, "# adasgd run series v3; columns: {CSV_COLUMNS}")?;
     writeln!(f, "{CSV_COLUMNS}")?;
     for run in runs {
         for s in run.samples() {
             writeln!(
                 f,
-                "{},{},{:.6},{},{:.9e},{},{:.6}",
+                "{},{},{:.6},{},{:.9e},{},{:.6},{},{:.6}",
                 run.label, s.iteration, s.time, s.k, s.error, s.bytes,
-                s.comm_time
+                s.comm_time, s.bytes_down, s.down_time
             )?;
         }
     }
@@ -93,6 +98,8 @@ mod tests {
             error: 3.25,
             bytes: 416,
             comm_time: 1.25,
+            bytes_down: 832,
+            down_time: 0.5,
         });
         let dir = std::env::temp_dir().join("adasgd_csv_test");
         let path = dir.join("out.csv");
@@ -106,13 +113,17 @@ mod tests {
         let row = lines.next().unwrap();
         assert!(row.starts_with("runA,0,0.5"), "{row}");
         assert!(row.contains(",416,"), "{row}");
+        assert!(row.contains(",832,"), "{row}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn header_and_comment_share_the_column_list() {
         // Guards against the comment line drifting from the real header.
-        assert_eq!(CSV_COLUMNS.split(',').count(), 7);
-        assert!(CSV_COLUMNS.ends_with("bytes,comm_time"));
+        assert_eq!(CSV_COLUMNS.split(',').count(), 9);
+        assert!(CSV_COLUMNS.ends_with("bytes_down,down_time"));
+        // v2 files must remain a column-prefix of v3.
+        assert!(CSV_COLUMNS
+            .starts_with("label,iteration,time,k,error,bytes,comm_time"));
     }
 }

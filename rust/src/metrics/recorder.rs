@@ -17,6 +17,12 @@ pub struct Sample {
     /// Cumulative upload time of accepted messages so far (total comm
     /// work, not critical path — see `comm::CommStats`).
     pub comm_time: f64,
+    /// Cumulative model-download bytes so far (a sync broadcast counts
+    /// once per receiving worker; 0 for pre-downlink runs).
+    pub bytes_down: u64,
+    /// Cumulative download time charged so far (total download work,
+    /// mirroring `comm_time`).
+    pub down_time: f64,
 }
 
 /// Growable run record with optional sub-sampling.
@@ -70,12 +76,12 @@ impl Recorder {
         self.samples.iter().find(|s| s.error <= target).map(|s| s.time)
     }
 
-    /// Minimum error seen.
+    /// Minimum error seen. Total order (`total_cmp`), so a NaN error
+    /// sample — a diverged async run — ranks above every finite value
+    /// and `+inf` instead of panicking post-run analysis; an all-NaN
+    /// record reports NaN.
     pub fn min_error(&self) -> Option<f64> {
-        self.samples
-            .iter()
-            .map(|s| s.error)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        self.samples.iter().map(|s| s.error).min_by(|a, b| a.total_cmp(b))
     }
 
     /// Error of the last sample at or before time `t` (step interpolation).
@@ -118,6 +124,24 @@ mod tests {
         assert_eq!(r.time_to_error(1.5), Some(2.0));
         assert_eq!(r.time_to_error(0.1), None);
         assert_eq!(r.min_error(), Some(1.0));
+    }
+
+    #[test]
+    fn min_error_survives_nan_samples() {
+        // Regression: a diverged run's NaN error used to panic the
+        // `partial_cmp(..).unwrap()` inside min_by mid-analysis.
+        let mut r = Recorder::new("diverged");
+        r.push(sample(0, 0.0, 10.0));
+        r.push(sample(1, 1.0, f64::NAN));
+        r.push(sample(2, 2.0, 3.0));
+        r.push(sample(3, 3.0, f64::INFINITY));
+        assert_eq!(r.min_error(), Some(3.0));
+        // time_to_error must not treat NaN as a crossing either.
+        assert_eq!(r.time_to_error(5.0), Some(2.0));
+        // An all-NaN record reports NaN instead of aborting.
+        let mut all_nan = Recorder::new("nan");
+        all_nan.push(sample(0, 0.0, f64::NAN));
+        assert!(all_nan.min_error().unwrap().is_nan());
     }
 
     #[test]

@@ -445,3 +445,145 @@ fn prop_encoded_bytes_are_data_independent() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Downlink broadcast + shared-ingress invariants (PR 2). The broadcast
+// must reconstruct the model exactly for the dense default, track it
+// within the master-side residual for compressed deltas, and the FIFO
+// ingress round time must dominate the independent-upload round time,
+// collapsing to it exactly when the capacity is unlimited.
+// ---------------------------------------------------------------------------
+
+use adasgd::comm::{Broadcast, DownlinkMode, IngressModel, LinkModel};
+
+fn model_gen() -> VecF64 {
+    VecF64 { min_len: 1, max_len: 64, lo: -20.0, hi: 20.0 }
+}
+
+#[test]
+fn prop_free_broadcast_reconstructs_bitwise() {
+    runner().check("broadcast_dense", &model_gen(), |v| {
+        let w = to_f32(v);
+        let mut b = Broadcast::free(4);
+        let mut out = vec![0.0f32; w.len()];
+        let mut rng = Pcg64::seed(11);
+        // Repeated pushes of evolving models all reconstruct exactly.
+        for step in 0..4u32 {
+            let cur: Vec<f32> =
+                w.iter().map(|x| x + step as f32 * 0.25).collect();
+            let bytes = b.push(&cur, &mut out, &mut rng);
+            if out != cur {
+                return Err(format!("push {step}: view is not bitwise"));
+            }
+            if bytes != b.message_bytes(w.len()) {
+                return Err("size model mismatch".into());
+            }
+            for i in 0..4 {
+                if b.download_delay(i, bytes) != 0.0 {
+                    return Err("free link charged a download".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_broadcast_view_lag_is_the_residual() {
+    // For drop-based delta compression the telescoping identity
+    // `w − view == residual` holds to f32 rounding after every push.
+    let gen = Pair(model_gen(), UsizeRange { lo: 10, hi: 90 });
+    runner().check("broadcast_delta", &gen, |(v, pct)| {
+        let w0 = to_f32(v);
+        let frac = *pct as f64 / 100.0;
+        let mut b = Broadcast::new(
+            Box::new(TopK::new(frac)),
+            LinkModel::zero_cost(1),
+            DownlinkMode::Delta,
+        );
+        let mut rng = Pcg64::seed(13);
+        let mut out = vec![0.0f32; w0.len()];
+        let b0 = b.push(&w0, &mut out, &mut rng);
+        if out != w0 {
+            return Err("bootstrap must ship the model exactly".into());
+        }
+        if b0 != adasgd::comm::WireFormat::default().dense(w0.len()) {
+            return Err("bootstrap must be priced dense".into());
+        }
+        let mut w = w0;
+        for step in 0..6 {
+            for (i, x) in w.iter_mut().enumerate() {
+                *x += (((step * 13 + i * 7) % 11) as f32 - 5.0) * 0.05;
+            }
+            b.push(&w, &mut out, &mut rng);
+            let gap_sq: f64 = w
+                .iter()
+                .zip(&out)
+                .map(|(a, c)| ((a - c) as f64).powi(2))
+                .sum();
+            let resid = b.residual_norm_sq();
+            if (gap_sq - resid).abs() > 1e-3 * (1.0 + resid) {
+                return Err(format!(
+                    "step {step}: view gap {gap_sq} != residual {resid}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_congested_round_dominates_independent_round() {
+    let gen = Pair(
+        VecF64 { min_len: 1, max_len: 40, lo: 0.01, hi: 50.0 },
+        Pair(
+            UsizeRange { lo: 1, hi: 4096 },    // message bytes
+            UsizeRange { lo: 1, hi: 100_000 }, // capacity (scaled below)
+        ),
+    );
+    runner().check("ingress_invariant", &gen, |(arrivals, (bytes, cap))| {
+        let bytes = *bytes as u64;
+        let capacity = *cap as f64 / 10.0;
+        let independent = arrivals
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        // Unlimited capacity reproduces the independent model exactly.
+        let mut a = arrivals.clone();
+        let free = IngressModel::unlimited().round_completion(&mut a, bytes);
+        if free != independent {
+            return Err(format!(
+                "unlimited ingress changed the clock: {free} vs {independent}"
+            ));
+        }
+        // Finite capacity strictly exceeds it (bytes > 0 always here)...
+        let ing = IngressModel::new(capacity);
+        let mut a = arrivals.clone();
+        let congested = ing.round_completion(&mut a, bytes);
+        if congested <= independent {
+            return Err(format!(
+                "congested {congested} must exceed independent {independent}"
+            ));
+        }
+        // ...by at least one service time, and by at most a full
+        // serialization of the round.
+        let per = bytes as f64 / capacity;
+        let k = arrivals.len() as f64;
+        if congested < independent + per - 1e-9 {
+            return Err("last message must still be served".into());
+        }
+        if congested > independent + k * per + 1e-9 {
+            return Err("worse than full serialization".into());
+        }
+        // Monotone in capacity: doubling the capacity cannot slow it.
+        let mut a = arrivals.clone();
+        let faster =
+            IngressModel::new(capacity * 2.0).round_completion(&mut a, bytes);
+        if faster > congested + 1e-12 {
+            return Err(format!(
+                "more capacity slowed the round: {faster} > {congested}"
+            ));
+        }
+        Ok(())
+    });
+}

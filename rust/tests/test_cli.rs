@@ -59,7 +59,7 @@ fn fig1_writes_csv() {
     assert!(lines.next().unwrap().starts_with("# adasgd run series"));
     assert_eq!(
         lines.next().unwrap(),
-        "label,iteration,time,k,error,bytes,comm_time"
+        "label,iteration,time,k,error,bytes,comm_time,bytes_down,down_time"
     );
     // Comment + header, then 5 fixed curves + adaptive, 50 points each.
     assert_eq!(body.lines().count(), 2 + 6 * 50);
@@ -181,11 +181,63 @@ fn train_with_topk_comm_reports_bytes() {
         csv.to_str().unwrap(),
     ]);
     // 3-of-10 coords -> 40 bytes per message, 200 iterations x k=5.
-    assert!(text.contains("40000 bytes uploaded"), "{text}");
+    assert!(text.contains("40000 bytes up"), "{text}");
     let body = std::fs::read_to_string(&csv).unwrap();
     // The final recorded sample carries the cumulative byte count.
     assert!(body.contains(",40000,"), "{body}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_with_priced_downlink_and_ingress_reports_downlink_bytes() {
+    let dir = std::env::temp_dir().join("adasgd_cli_bidir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("bidir.csv");
+    let text = run_ok(&[
+        "train",
+        "--n",
+        "10",
+        "--m",
+        "200",
+        "--d",
+        "10",
+        "--k",
+        "5",
+        "--eta",
+        "0.002",
+        "--max-iterations",
+        "100",
+        "--max-time",
+        "0",
+        "--downlink",
+        "topk",
+        "--down-frac",
+        "0.3",
+        "--down-bandwidth",
+        "100",
+        "--ingress-bw",
+        "500",
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    // Delta downlink: dense bootstrap (56 B) + 99 x 40-B deltas, to 10
+    // workers each.
+    assert!(text.contains("40160 bytes down"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_downlink_scheme_fails_cleanly() {
+    let out = adasgd()
+        .args([
+            "train", "--n", "10", "--m", "200", "--d", "10", "--downlink",
+            "zip",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("downlink"));
 }
 
 #[test]
