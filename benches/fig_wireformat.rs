@@ -1,0 +1,177 @@
+//! Wire-format sweep: message framing × compression scheme.
+//!
+//! The byte model of `comm::WireFormat` is itself a design axis: 2-byte
+//! (`u16`) coordinate indices address any `d ≤ 65536` at half the index
+//! cost, and 2-byte (f16) values halve the payload at ~3 decimal digits
+//! of precision — with the value loss *modelled* (survivors round
+//! through f16 on the way to the master; error feedback recovers the
+//! residual). This sweep runs the Fig-2 setup (n = 50, exp(1) compute
+//! delays, d = 100) over a finite uplink and compares, per scheme:
+//!
+//! * `f32/u32` — the default framing (4-byte values, 4-byte indices),
+//! * `f32/u16` — compact indices (sparse schemes only benefit),
+//! * `f16/u32` — half-precision values,
+//! * `f16/u16` — both.
+//!
+//! The point: for top-k at 10% density the index stream is half the
+//! message, so `u16` indices buy almost as much wall-clock as halving
+//! the values — and the two together beat QSGD's 4-level packing on
+//! time-to-error while staying a trivial encoder.
+//!
+//! Run: `cargo bench --bench fig_wireformat`
+
+use adasgd::bench_harness::section;
+use adasgd::comm::{
+    CommChannel, Compressor, Dense, LinkModel, QuantizeQsgd, RandK, TopK,
+    WireFormat,
+};
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::NativeBackend;
+use adasgd::master::{run_fastest_k_comm, MasterConfig};
+use adasgd::metrics::{write_csv, Recorder};
+use adasgd::model::LinRegProblem;
+use adasgd::policy::FixedK;
+use adasgd::straggler::ExponentialDelays;
+use std::path::Path;
+
+const N: usize = 50;
+const D: usize = 100;
+const K: usize = 40;
+const BANDWIDTH: f64 = 400.0; // bytes per virtual-time unit
+const MAX_TIME: f64 = 3000.0;
+
+/// (label, wire format) — the four framing corners.
+fn wires() -> Vec<(&'static str, WireFormat)> {
+    vec![
+        ("f32-u32", WireFormat::default()),
+        ("f32-u16", WireFormat::default().compact_indices()),
+        ("f16-u32", WireFormat::default().f16_values()),
+        ("f16-u16", WireFormat::default().compact_indices().f16_values()),
+    ]
+}
+
+/// (label, compressor for a given wire, error feedback). QSGD rides
+/// along as the packing-based comparator: only its norm scalar feels
+/// the value width (the per-coordinate payload is already sub-byte).
+fn schemes(
+    wire: WireFormat,
+) -> Vec<(&'static str, Box<dyn Compressor>, bool)> {
+    vec![
+        ("dense", Box::new(Dense::with_wire(wire)), false),
+        ("topk10", Box::new(TopK::with_wire(0.1, wire)), true),
+        ("randk10", Box::new(RandK::with_wire(0.1, wire)), true),
+        ("qsgd4", Box::new(QuantizeQsgd::with_wire(4, wire)), true),
+    ]
+}
+
+fn main() {
+    let seed = 0u64;
+    section(&format!(
+        "wire-format sweep: framing x scheme (n={N}, d={D}, k={K}, \
+         uplink {BANDWIDTH} B/t, T={MAX_TIME})"
+    ));
+
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 2000, d: D, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+
+    let mut runs: Vec<Recorder> = Vec::new();
+    let mut rows = Vec::new();
+    for (wname, wire) in wires() {
+        for (sname, compressor, feedback) in schemes(wire) {
+            let msg_bytes = compressor.encoded_bytes(D);
+            let mut backend =
+                NativeBackend::new(Shards::partition(&ds, N));
+            let delays = ExponentialDelays::new(1.0);
+            let mut policy = FixedK::new(K);
+            let mut channel = CommChannel::new(
+                compressor,
+                LinkModel::uniform(N, BANDWIDTH, 0.0),
+                feedback,
+            );
+            let cfg = MasterConfig {
+                eta: 5e-4,
+                max_iterations: 200_000,
+                max_time: MAX_TIME,
+                seed,
+                record_stride: 25,
+                ..Default::default()
+            };
+            let run = run_fastest_k_comm(
+                &mut backend,
+                &delays,
+                &mut policy,
+                &mut channel,
+                &vec![0.0f32; D],
+                &cfg,
+                &mut |w| problem.error(w),
+            );
+            let label = format!("{sname}/{wname}");
+            let mut recorder = run.recorder;
+            recorder.label = label.clone();
+            rows.push((
+                label,
+                msg_bytes,
+                recorder.min_error().unwrap_or(f64::NAN),
+                run.iterations,
+                run.bytes_sent,
+                run.total_time,
+            ));
+            runs.push(recorder);
+        }
+    }
+
+    println!(
+        "{:<18} {:>9} {:>12} {:>8} {:>13} {:>9}",
+        "scheme/wire", "msg B", "min error", "iters", "bytes_up", "t_end"
+    );
+    for (label, msg, min_err, iters, up, t_end) in &rows {
+        println!(
+            "{label:<18} {msg:>9} {min_err:>12.4e} {iters:>8} {up:>13} \
+             {t_end:>9.0}"
+        );
+    }
+
+    // Exact byte accounting spot-checks (the sweep's whole point).
+    section("framing arithmetic: exact encoded sizes");
+    let dflt = WireFormat::default();
+    println!(
+        "  dense d={D}: {} B (f32) vs {} B (f16)",
+        dflt.dense(D),
+        dflt.f16_values().dense(D)
+    );
+    println!(
+        "  topk 10% of d={D}: {} B (f32/u32) vs {} B (f32/u16) vs {} B \
+         (f16/u16)",
+        dflt.sparse(10),
+        dflt.compact_indices().sparse(10),
+        dflt.compact_indices().f16_values().sparse(10)
+    );
+    assert_eq!(dflt.sparse(10), 16 + 10 * 8);
+    assert_eq!(dflt.compact_indices().sparse(10), 16 + 10 * 6);
+    assert_eq!(dflt.compact_indices().f16_values().sparse(10), 16 + 10 * 4);
+    assert_eq!(dflt.f16_values().dense(D), 16 + 2 * D as u64);
+
+    // Sanity: in a fixed time budget, smaller frames mean more
+    // iterations for the same scheme.
+    section("smaller frames complete more rounds in the budget");
+    let iters_of = |label: &str| {
+        rows.iter().find(|r| r.0 == label).map(|r| r.3).unwrap()
+    };
+    let full = iters_of("topk10/f32-u32");
+    let compact = iters_of("topk10/f16-u16");
+    println!("  topk10: {full} iters (f32/u32) -> {compact} (f16/u16)");
+    assert!(
+        compact > full,
+        "compact framing must buy iterations: {compact} vs {full}"
+    );
+
+    let refs: Vec<&Recorder> = runs.iter().collect();
+    let out = Path::new("results/fig_wireformat.csv");
+    match write_csv(out, &refs) {
+        Ok(()) => println!("\n  series written to {}", out.display()),
+        Err(e) => println!("\n  (csv not written: {e})"),
+    }
+}

@@ -12,12 +12,20 @@
 //! hands the worker the fresh model, and the worker starts over. There is
 //! no synchronization barrier, so the clock advances on an event queue of
 //! per-worker completion times rather than an order statistic.
+//!
+//! Both entry points are compatibility shims over the round engine: they
+//! build an [`engine::EngineCore`](crate::engine::EngineCore) with the
+//! historical async rng streams and run the
+//! [`engine::StalenessGather`](crate::engine::StalenessGather)
+//! discipline, preserving the pre-engine trajectories bit for bit
+//! (asserted by `rust/tests/test_engine_equivalence.rs`).
 
-use crate::comm::{CommChannel, DownlinkMode};
+use crate::comm::CommChannel;
+use crate::engine::{
+    EngineConfig, EngineCore, RngStreams, RoundEngine, StalenessGather,
+};
 use crate::grad::GradBackend;
-use crate::metrics::{Recorder, Sample};
-use crate::rng::Pcg64;
-use crate::sim::EventQueue;
+use crate::metrics::Recorder;
 use crate::straggler::DelayModel;
 
 /// Async-run configuration.
@@ -103,9 +111,13 @@ pub fn run_async(
 /// since no async update is ever discarded).
 ///
 /// Bidirectional pricing: with a finite master-ingress capacity an
-/// arriving upload waits for the NIC to free (FIFO — arrivals pop in
-/// time order, so the queue discipline is consistent) before it is
-/// applied, and each restart downloads the fresh model through the
+/// arriving upload contends for the NIC before it is applied — FIFO
+/// store-and-forward by default (a running free-chain), or exact
+/// processor sharing when the channel's
+/// [`IngressDiscipline`](crate::comm::IngressDiscipline) says so (the
+/// engine simulates the shared drain with completion events, so each
+/// update's apply time reflects true PS) — and each restart downloads
+/// the fresh model through the
 /// channel's downlink, adding a download delay to the worker's next
 /// cycle. Workers are assumed to know `w0`, so the initial dispatch
 /// carries no download. A `Delta` downlink models a master streaming one
@@ -131,168 +143,36 @@ pub fn run_async_comm(
         channel.n()
     );
 
-    let mut rng = Pcg64::seed_stream(cfg.seed, 0xA57C);
-    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC045);
-    // Downlink encoder stream (dense draws nothing — delay stream intact).
-    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04E);
-    let bytes0 = channel.stats.bytes_sent;
-    let comm_t0 = channel.stats.comm_time;
-    let down0 = channel.stats.bytes_down;
-    let down_t0 = channel.stats.down_time;
-    let mut w = w0.to_vec();
-    let mut g_raw = vec![0.0f32; d];
-    let mut g = vec![0.0f32; d];
-    // Shared master-ingress state: when the NIC next frees. With the
-    // unlimited default, serve_at is bitwise the arrival time.
-    let ingress = *channel.ingress();
-    let mut ingress_free = f64::NEG_INFINITY;
-    // The effective clock: completion time of the last applied update
-    // (equals the event-queue clock when the ingress is unlimited).
-    let mut clock = 0.0f64;
-
-    // Zero-cost links price every message at exactly 0.0, so the upload
-    // term can be added unconditionally without perturbing dense runs.
-    let msg_bytes = channel.message_bytes(d);
-
-    // Each worker computes against its stale snapshot; in the simulated
-    // timeline only the *version* matters for staleness accounting, and the
-    // gradient is computed lazily at completion using the stale snapshot.
-    let mut snapshots: Vec<Vec<f32>> = vec![w.clone(); n];
-    let mut read_version = vec![0u64; n];
-    let mut version = 0u64;
-    let mut staleness_sum = 0.0f64;
-
-    let mut queue: EventQueue<usize> = EventQueue::new();
-    for i in 0..n {
-        let dt = delays.sample(0, i, &mut rng)
-            + channel.link_upload_delay(i, msg_bytes);
-        queue.schedule_in(dt, i);
-    }
-
-    let mut recorder = Recorder::with_stride("async", cfg.record_stride);
-    recorder.push_forced(Sample {
-        iteration: 0,
-        time: 0.0,
-        k: 1,
-        error: eval_error(&w),
-        ..Default::default()
-    });
-
-    let mut updates = 0u64;
-    let mut diverged = false;
-    while updates < cfg.max_updates {
-        let ev = match queue.pop() {
-            Some(e) => e,
-            None => break,
-        };
-        // Congested ingress: the upload that *arrived* at ev.time is
-        // applied once the master's NIC has served it.
-        let t_apply = ingress.serve_at(ev.time, ingress_free, msg_bytes);
-        ingress_free = t_apply;
-        clock = t_apply;
-        if cfg.max_time > 0.0 && t_apply > cfg.max_time {
-            break;
-        }
-        let i = ev.payload;
-
-        // Gradient at the worker's stale snapshot, shipped through the
-        // channel (compression + error feedback + byte accounting).
-        backend.partial_grad(i, &snapshots[i], &mut g_raw);
-        channel.transmit(i, &g_raw, &mut g, &mut comm_rng);
-        let staleness = version - read_version[i];
-        let step = if cfg.staleness_damping {
-            cfg.eta / (1.0 + staleness as f32)
-        } else {
-            cfg.eta
-        };
-        for (wv, gv) in w.iter_mut().zip(&g) {
-            *wv -= step * *gv;
-        }
-        version += 1;
-        staleness_sum += staleness as f64;
-        updates += 1;
-        if !w[0].is_finite() {
-            diverged = true;
-            recorder.push_forced(Sample {
-                iteration: updates,
-                time: clock,
-                k: 1,
-                error: f64::INFINITY,
-                bytes: channel.stats.bytes_sent - bytes0,
-                comm_time: channel.stats.comm_time - comm_t0,
-                bytes_down: channel.stats.bytes_down - down0,
-                down_time: channel.stats.down_time - down_t0,
-            });
-            break;
-        }
-
-        // Worker restarts immediately: it downloads the fresh model
-        // through the priced downlink (its snapshot becomes the decoded
-        // view — bitwise `w` on the default dense downlink), then its
-        // next cycle covers download + compute + upload. Delta mode
-        // streams one delta per update, so the worker replays every
-        // delta appended since its last restart: the staleness + 1
-        // updates applied since it last pulled, one message each.
-        let replay = match channel.downlink_mode() {
-            DownlinkMode::Full => 1,
-            DownlinkMode::Delta => staleness + 1,
-        };
-        let (_, down_delay) = channel.push_model(
-            i,
-            &w,
-            &mut snapshots[i],
-            replay,
-            &mut bcast_rng,
-        );
-        read_version[i] = version;
-        let dt = delays.sample(updates, i, &mut rng)
-            + channel.link_upload_delay(i, msg_bytes)
-            + down_delay;
-        queue.schedule_at(t_apply + dt, i);
-
-        if updates % cfg.record_stride == 0 {
-            recorder.push_forced(Sample {
-                iteration: updates,
-                time: clock,
-                k: 1,
-                error: eval_error(&w),
-                bytes: channel.stats.bytes_sent - bytes0,
-                comm_time: channel.stats.comm_time - comm_t0,
-                bytes_down: channel.stats.bytes_down - down0,
-                down_time: channel.stats.down_time - down_t0,
-            });
-        }
-    }
-
-    let total_time = clock;
-    if !diverged && updates % cfg.record_stride != 0 {
-        recorder.push_forced(Sample {
-            iteration: updates,
-            time: total_time,
-            k: 1,
-            error: eval_error(&w),
-            bytes: channel.stats.bytes_sent - bytes0,
-            comm_time: channel.stats.comm_time - comm_t0,
-            bytes_down: channel.stats.bytes_down - down0,
-            down_time: channel.stats.down_time - down_t0,
-        });
-    }
-
+    let engine_cfg = EngineConfig {
+        eta: cfg.eta,
+        momentum: 0.0,
+        max_steps: cfg.max_updates,
+        max_time: cfg.max_time,
+        seed: cfg.seed,
+        record_stride: cfg.record_stride,
+    };
+    let core = EngineCore::new(
+        "async",
+        channel,
+        delays,
+        eval_error,
+        w0,
+        engine_cfg,
+        RngStreams::asynchronous(cfg.seed),
+    );
+    let mut gather = StalenessGather::new(backend, cfg.staleness_damping);
+    let run = RoundEngine::new(core).run(&mut gather);
     AsyncRun {
-        recorder,
-        w,
-        updates,
-        total_time,
-        mean_staleness: if updates > 0 {
-            staleness_sum / updates as f64
-        } else {
-            0.0
-        },
-        diverged,
-        bytes_sent: channel.stats.bytes_sent - bytes0,
-        comm_time: channel.stats.comm_time - comm_t0,
-        bytes_down: channel.stats.bytes_down - down0,
-        down_time: channel.stats.down_time - down_t0,
+        recorder: run.recorder,
+        w: run.w,
+        updates: run.steps,
+        total_time: run.total_time,
+        mean_staleness: run.mean_staleness,
+        diverged: run.diverged,
+        bytes_sent: run.bytes_sent,
+        comm_time: run.comm_time,
+        bytes_down: run.bytes_down,
+        down_time: run.down_time,
     }
 }
 

@@ -55,7 +55,8 @@ const VALUED_FLAGS: &[&str] = &[
     "workers", "tag", "points", "time-scale", "m", "d", "lambda",
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
     "link-latency", "downlink", "down-levels", "down-frac",
-    "down-bandwidth", "down-latency", "ingress-bw",
+    "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
+    "ingress",
 ];
 
 impl Args {
@@ -161,9 +162,13 @@ COMM FLAGS (train; also in [comm] of a TOML config):
   --down-levels S     downlink qsgd levels            (default 4)
   --down-frac F       downlink topk/randk fraction    (default 0.1)
   --down-bandwidth B  downlink bytes per time unit, 0 = infinite
+  --down-bandwidths L comma-separated per-worker downlink bandwidths
+                      (n entries; 0 = infinite for that worker)
   --down-latency L    fixed per-message download latency
   --ingress-bw C      shared master-ingress bytes per time unit,
                       0 = infinite (independent uploads)
+  --ingress D         ingress discipline: fifo (store-and-forward,
+                      default) | ps (processor sharing)
 "#
     );
 }

@@ -62,7 +62,16 @@ impl Compressor for Dense {
         out: &mut [f32],
         _rng: &mut dyn RngDyn,
     ) -> u64 {
-        out.copy_from_slice(g);
+        debug_assert_eq!(g.len(), out.len());
+        if self.wire.value_bytes >= 4 {
+            // Full-precision wire: bitwise identity (the default path).
+            out.copy_from_slice(g);
+        } else {
+            // 2-byte wire: every value rounds through f16.
+            for (o, &v) in out.iter_mut().zip(g) {
+                *o = self.wire.decode_value(v);
+            }
+        }
         self.wire.dense(g.len())
     }
 
@@ -122,11 +131,26 @@ impl Compressor for QuantizeQsgd {
             // the wire still carries the full frame in this size model.
             return self.wire.quantized(g.len(), self.levels);
         }
+        // The ‖g‖ scale factor is the one full value the scheme ships; on
+        // a 2-byte wire it rounds through f16. The *levels* are still
+        // drawn against the sender's full-precision norm — that keeps
+        // ξ ∈ {0..s}, the alphabet the wire's ceil(log2(2s+1)) bits per
+        // symbol actually price — and only the master's reconstruction
+        // uses the rounded scalar. The clamp keeps an f64 norm beyond
+        // f32 range *finite* through the cast so it saturates to F16_MAX
+        // like every other finite value (an inf recon_norm would decode
+        // ξ = 0 coordinates as inf·0 = NaN and poison error feedback).
+        // Identity on the default 4-byte wire.
+        let recon_norm = if self.wire.value_bytes < 4 {
+            super::f16_round_trip(norm.min(f32::MAX as f64) as f32) as f64
+        } else {
+            norm
+        };
         for (o, &v) in out.iter_mut().zip(g) {
             let a = (v.abs() as f64) / norm * s; // in [0, s]
             let low = a.floor();
             let xi = if rng.next_f64() < a - low { low + 1.0 } else { low };
-            *o = (norm * (xi / s)) as f32 * v.signum();
+            *o = (recon_norm * (xi / s)) as f32 * v.signum();
         }
         self.wire.quantized(g.len(), self.levels)
     }
@@ -191,6 +215,11 @@ impl Compressor for TopK {
     ) -> u64 {
         debug_assert_eq!(g.len(), out.len());
         let d = g.len();
+        assert!(
+            d == 0 || (d - 1) as u64 <= self.wire.max_index(),
+            "wire format's {}-byte indices cannot address d={d}",
+            self.wire.index_bytes
+        );
         let nnz = self.nnz(d);
         out.iter_mut().for_each(|o| *o = 0.0);
         if nnz == 0 {
@@ -210,7 +239,9 @@ impl Compressor for TopK {
             });
         }
         for &i in &idx[..nnz] {
-            out[i] = g[i];
+            // decode_value is the bitwise identity on the default 4-byte
+            // wire; the 2-byte wire rounds survivors through f16.
+            out[i] = self.wire.decode_value(g[i]);
         }
         self.wire.sparse(nnz)
     }
@@ -275,7 +306,10 @@ impl Compressor for RandK {
             idx.swap(i, j);
         }
         for &i in &idx[..nnz] {
-            out[i] = g[i];
+            // Identity on the default wire; f16 rounding on the 2-byte
+            // wire. (RandK ships a seed, not indices, so the index width
+            // does not constrain d here.)
+            out[i] = self.wire.decode_value(g[i]);
         }
         self.wire.seeded_sparse(nnz)
     }
@@ -419,6 +453,88 @@ mod tests {
         let mut out = vec![1.0f32; 16];
         c.apply(&g, &mut out, &mut rng);
         assert!(out.iter().all(|&o| o == 0.0));
+    }
+
+    #[test]
+    fn f16_wire_rounds_values_and_halves_the_payload() {
+        use crate::comm::{f16_round_trip, WireFormat};
+        let g = gradient();
+        let mut rng = Pcg64::seed(11);
+        let mut out = vec![0.0f32; g.len()];
+        let mut c = Dense::with_wire(WireFormat::default().f16_values());
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        assert_eq!(bytes, 16 + 2 * 64);
+        assert_eq!(bytes, c.encoded_bytes(g.len()));
+        for (o, &v) in out.iter().zip(&g) {
+            assert_eq!(o.to_bits(), f16_round_trip(v).to_bits());
+            // f16 keeps ~3 decimal digits: the loss is bounded.
+            assert!((o - v).abs() <= v.abs() * 1e-3 + 1e-7);
+        }
+        // TopK on the same wire rounds only the survivors.
+        let mut t =
+            TopK::with_wire(0.25, WireFormat::default().f16_values());
+        let tb = t.apply(&g, &mut out, &mut rng);
+        assert_eq!(tb, 16 + 16 * (4 + 2));
+        for (i, o) in out.iter().enumerate() {
+            assert!(
+                *o == 0.0 || o.to_bits() == f16_round_trip(g[i]).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn u16_indices_halve_sparse_index_cost() {
+        use crate::comm::WireFormat;
+        let g = gradient();
+        let mut rng = Pcg64::seed(12);
+        let mut out = vec![0.0f32; g.len()];
+        let mut c =
+            TopK::with_wire(0.25, WireFormat::default().compact_indices());
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        assert_eq!(bytes, 16 + 16 * (2 + 4));
+        // Values are untouched on the full-precision value wire.
+        let kept: Vec<usize> =
+            (0..g.len()).filter(|&i| out[i] != 0.0).collect();
+        for &i in &kept {
+            assert_eq!(out[i].to_bits(), g[i].to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot address")]
+    fn u16_indices_reject_oversized_dimensions() {
+        let g = vec![1.0f32; 70_000];
+        let mut out = vec![0.0f32; 70_000];
+        let mut rng = Pcg64::seed(13);
+        let mut c = TopK::with_wire(
+            0.01,
+            crate::comm::WireFormat::default().compact_indices(),
+        );
+        let _ = c.apply(&g, &mut out, &mut rng);
+    }
+
+    #[test]
+    fn qsgd_f16_wire_rounds_the_norm_only() {
+        use crate::comm::{f16_round_trip, WireFormat};
+        let g = gradient();
+        let norm =
+            g.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        let mut c =
+            QuantizeQsgd::with_wire(4, WireFormat::default().f16_values());
+        let mut rng = Pcg64::seed(14);
+        let mut out = vec![0.0f32; g.len()];
+        let bytes = c.apply(&g, &mut out, &mut rng);
+        // Norm scalar is 2 bytes now: 16 + 2 + ceil(64·4/8).
+        assert_eq!(bytes, 16 + 2 + 32);
+        // Every nonzero reconstruction is a multiple of the f16 norm / s.
+        let f16_norm = f16_round_trip(norm as f32) as f64;
+        for o in out.iter().filter(|o| **o != 0.0) {
+            let ratio = (o.abs() as f64) / (f16_norm / 4.0);
+            assert!(
+                (ratio - ratio.round()).abs() < 1e-3,
+                "{o} is not a level multiple of the f16 norm"
+            );
+        }
     }
 
     #[test]

@@ -115,19 +115,39 @@ impl LinkModel {
     }
 }
 
+/// How concurrent uploads share the master's ingress capacity.
+///
+/// Both disciplines are work-conserving (the NIC never idles while a
+/// message is in flight), so for equal-sized messages they agree on the
+/// time the *last* message of a round completes — the quantity the sync
+/// round clock needs (a property test asserts this makespan invariance).
+/// They differ on *per-message* completion times, which is observable in
+/// the async driver: under FIFO the first of a bunch of simultaneous
+/// arrivals is decoded one service time in, while under PS the whole
+/// bunch drains together and every apply lands near the makespan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IngressDiscipline {
+    /// Store-and-forward: messages queue in arrival order, each occupying
+    /// the full capacity for `bytes / capacity` time units.
+    #[default]
+    Fifo,
+    /// Processor sharing: all in-flight messages drain simultaneously,
+    /// each receiving `capacity / m` while `m` are active.
+    Ps,
+}
+
 /// Shared master-ingress capacity: concurrent uploads contend on the
 /// master's NIC instead of arriving independently.
 ///
-/// The contention discipline is **FIFO store-and-forward** (not processor
-/// sharing): a message first traverses its sender's own link (the
-/// [`LinkModel`] pricing, bandwidth + latency), *arrives* at the master's
-/// ingress, and then queues in arrival order, occupying the ingress for
-/// `bytes / capacity` time units before it is decoded. FIFO was chosen
-/// over processor sharing because the round completion has a closed form
-/// over the sorted arrivals and it matches the one-message-at-a-time
-/// decode loop every driver already runs; both disciplines agree on the
-/// completion time of the *last* message when all messages are equal
-/// sized, which is the quantity the round clock needs.
+/// A message first traverses its sender's own link (the [`LinkModel`]
+/// pricing, bandwidth + latency), *arrives* at the master's ingress, and
+/// then contends under an [`IngressDiscipline`]: **FIFO
+/// store-and-forward** (the default — completion has a closed form over
+/// the sorted arrivals and matches the one-message-at-a-time decode loop
+/// the round drivers run) or **processor sharing** (all in-flight
+/// messages drain together). Equal-sized messages make the two agree on
+/// the round makespan; per-message completions differ (see
+/// [`IngressDiscipline`]).
 ///
 /// With infinite capacity ([`IngressModel::unlimited`], the default) the
 /// completion of each message is exactly its arrival — the independent-
@@ -136,6 +156,8 @@ impl LinkModel {
 pub struct IngressModel {
     /// Bytes per virtual-time unit; `f64::INFINITY` = no contention.
     capacity: f64,
+    /// Queueing discipline for concurrent arrivals.
+    discipline: IngressDiscipline,
 }
 
 impl Default for IngressModel {
@@ -147,17 +169,34 @@ impl Default for IngressModel {
 impl IngressModel {
     /// No contention: every upload completes at its arrival time.
     pub fn unlimited() -> Self {
-        Self { capacity: f64::INFINITY }
+        Self {
+            capacity: f64::INFINITY,
+            discipline: IngressDiscipline::Fifo,
+        }
     }
 
     /// Shared ingress of `capacity` bytes per virtual-time unit
     /// (`<= 0` means unlimited, mirroring [`LinkModel::uniform`]; NaN is
-    /// rejected).
+    /// rejected). FIFO store-and-forward; see
+    /// [`IngressModel::with_discipline`] for processor sharing.
     pub fn new(capacity: f64) -> Self {
+        Self::with_discipline(capacity, IngressDiscipline::Fifo)
+    }
+
+    /// Shared ingress with an explicit queueing discipline.
+    pub fn with_discipline(
+        capacity: f64,
+        discipline: IngressDiscipline,
+    ) -> Self {
         assert!(!capacity.is_nan(), "ingress capacity must not be NaN");
         let capacity =
             if capacity > 0.0 { capacity } else { f64::INFINITY };
-        Self { capacity }
+        Self { capacity, discipline }
+    }
+
+    /// The queueing discipline for concurrent arrivals.
+    pub fn discipline(&self) -> IngressDiscipline {
+        self.discipline
     }
 
     /// True iff uploads never contend (the PR-1 independent model).
@@ -176,12 +215,15 @@ impl IngressModel {
 
     /// Completion time of the *last* message of a round: sorts `arrivals`
     /// in place (total order — NaN arrivals sort last rather than
-    /// corrupting the order) and serializes them FIFO through the
-    /// ingress, each occupying it for `bytes / capacity`.
+    /// corrupting the order) and drains them through the ingress under
+    /// the configured discipline, each needing `bytes / capacity` of
+    /// service.
     ///
     /// Invariants (tested in `proptests.rs`): the result is ≥ the max
     /// arrival (the independent-upload round time), strictly greater for
-    /// any finite capacity with `bytes > 0`, and equal when unlimited.
+    /// any finite capacity with `bytes > 0`, equal when unlimited, and —
+    /// because both disciplines are work-conserving over equal-sized
+    /// messages — FIFO and PS agree on it up to float associativity.
     pub fn round_completion(&self, arrivals: &mut [f64], bytes: u64) -> f64 {
         assert!(!arrivals.is_empty(), "a round needs at least one arrival");
         arrivals.sort_unstable_by(|a, b| a.total_cmp(b));
@@ -189,17 +231,25 @@ impl IngressModel {
         if per == 0.0 {
             return arrivals[arrivals.len() - 1];
         }
-        let mut free = f64::NEG_INFINITY;
-        for &a in arrivals.iter() {
-            free = if a > free { a } else { free } + per;
+        match self.discipline {
+            IngressDiscipline::Fifo => {
+                let mut free = f64::NEG_INFINITY;
+                for &a in arrivals.iter() {
+                    free = if a > free { a } else { free } + per;
+                }
+                free
+            }
+            IngressDiscipline::Ps => ps_completion(arrivals, per),
         }
-        free
     }
 
     /// Serve one message arriving at `arrival` when the ingress frees at
-    /// `free_at` (the async driver's running state): completion is
-    /// `max(arrival, free_at) + bytes/capacity`. With unlimited capacity
-    /// this is bitwise `arrival` for any `free_at <= arrival`.
+    /// `free_at` — the **FIFO** running state the async driver keeps:
+    /// completion is `max(arrival, free_at) + bytes/capacity`. With
+    /// unlimited capacity this is bitwise `arrival` for any
+    /// `free_at <= arrival`. (The PS discipline has no single-scalar
+    /// running state; the engine's async gather simulates it exactly with
+    /// completion events — see `engine::StalenessGather`.)
     pub fn serve_at(&self, arrival: f64, free_at: f64, bytes: u64) -> f64 {
         let start = if arrival > free_at { arrival } else { free_at };
         start + self.service_time(bytes)
@@ -210,9 +260,124 @@ impl IngressModel {
         if self.is_unlimited() {
             "ingress(unlimited)".into()
         } else {
-            format!("ingress(bw={})", self.capacity)
+            match self.discipline {
+                IngressDiscipline::Fifo => {
+                    format!("ingress(bw={})", self.capacity)
+                }
+                IngressDiscipline::Ps => {
+                    format!("ingress(bw={}, ps)", self.capacity)
+                }
+            }
         }
     }
+}
+
+/// Incremental processor-sharing server: the ONE implementation of the
+/// shared fluid drain, used both by the batch
+/// [`IngressModel::round_completion`] (sync/threaded round clock) and by
+/// the engine's event-driven async gather (per-message apply times).
+///
+/// All in-flight messages drain simultaneously, each at rate `1/m` of
+/// the server while `m` are active. With equal service requirements the
+/// oldest message always holds the least remaining work, so completions
+/// happen in arrival order and only the front's completion ever needs
+/// projecting. The caller owns the clock: [`PsServer::advance`] between
+/// events, [`PsServer::admit`] on arrival, [`PsServer::next_completion`]
+/// to project, [`PsServer::complete_front`] at a completion.
+#[derive(Debug, Clone, Default)]
+pub struct PsServer {
+    /// (caller tag, remaining full-rate service), oldest first.
+    active: std::collections::VecDeque<(usize, f64)>,
+    /// Clock of the last advance.
+    last: f64,
+}
+
+impl PsServer {
+    /// An idle server at clock 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when nothing is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Drain to `to`: each of the m in-flight messages progressed at
+    /// rate 1/m since the last event (clamped against float slop; a
+    /// non-increasing or NaN step is a no-op). Must not cross a
+    /// completion — project those with [`PsServer::next_completion`] and
+    /// deliver them first.
+    pub fn advance(&mut self, to: f64) {
+        let dt = to - self.last;
+        self.last = to;
+        if !(dt > 0.0) || self.active.is_empty() {
+            return;
+        }
+        let share = dt / self.active.len() as f64;
+        for m in self.active.iter_mut() {
+            m.1 = (m.1 - share).max(0.0);
+        }
+    }
+
+    /// Admit a message needing `service` full-rate time at the current
+    /// clock ([`PsServer::advance`] there first).
+    pub fn admit(&mut self, tag: usize, service: f64) {
+        self.active.push_back((tag, service));
+    }
+
+    /// Projected completion time of the oldest in-flight message under
+    /// the *current* active set — exact until the next admission, which
+    /// reshares the drain and invalidates it.
+    pub fn next_completion(&self) -> Option<f64> {
+        let &(_, rem) = self.active.front()?;
+        Some(self.last + rem * self.active.len() as f64)
+    }
+
+    /// Pop the completed oldest message ([`PsServer::advance`] to its
+    /// completion time first), returning its tag.
+    pub fn complete_front(&mut self) -> Option<usize> {
+        self.active.pop_front().map(|(tag, _)| tag)
+    }
+}
+
+/// Batch fluid drain over sorted `arrivals`, each message needing `per`
+/// time units of dedicated service, via [`PsServer`]. The returned time
+/// is the last completion — the busy-period end, which work conservation
+/// makes agree with the FIFO chain.
+fn ps_completion(arrivals: &[f64], per: f64) -> f64 {
+    let mut srv = PsServer::new();
+    let mut next = 0usize;
+    let mut t = f64::NEG_INFINITY;
+    while next < arrivals.len() || !srv.is_empty() {
+        if srv.is_empty() && arrivals[next] > t {
+            // Idle gap: jump to the next arrival.
+            t = arrivals[next];
+        }
+        // Admit everything due. The negated comparison also admits NaN
+        // arrivals (sorted last): they fail every comparison and join
+        // immediately, exactly as the FIFO chain serves them — without
+        // this, a NaN would neither advance `next` nor enter the server
+        // and the drain would spin forever.
+        while next < arrivals.len() && !(arrivals[next] > t) {
+            srv.advance(t);
+            srv.admit(next, per);
+            next += 1;
+        }
+        let t_complete =
+            srv.next_completion().expect("server has in-flight work");
+        if next < arrivals.len() && arrivals[next] < t_complete {
+            // An arrival interrupts the drain: advance to it and admit
+            // (next loop iteration).
+            t = arrivals[next];
+        } else {
+            // The front message finishes before the next arrival.
+            srv.advance(t_complete);
+            srv.complete_front();
+            t = t_complete;
+        }
+    }
+    t
 }
 
 #[cfg(test)]
@@ -329,5 +494,103 @@ mod tests {
     #[should_panic(expected = "NaN")]
     fn ingress_rejects_nan_capacity() {
         let _ = IngressModel::new(f64::NAN);
+    }
+
+    #[test]
+    fn ps_agrees_with_fifo_on_the_round_makespan() {
+        // Both disciplines are work-conserving, so the completion of the
+        // last equal-sized message — the sync round clock — matches.
+        let fifo = IngressModel::new(100.0);
+        let ps =
+            IngressModel::with_discipline(100.0, IngressDiscipline::Ps);
+        for arrivals in [
+            vec![0.0, 0.2, 5.0],
+            vec![1.0; 4],
+            vec![0.5, 1.5, 4.0, 4.1, 9.0],
+            vec![3.0],
+        ] {
+            let mut a = arrivals.clone();
+            let mut b = arrivals.clone();
+            let tf = fifo.round_completion(&mut a, 100);
+            let tp = ps.round_completion(&mut b, 100);
+            assert!(
+                (tf - tp).abs() < 1e-9,
+                "{arrivals:?}: fifo {tf} vs ps {tp}"
+            );
+        }
+    }
+
+    #[test]
+    fn ps_drains_idle_gaps_like_fifo() {
+        // Arrivals 0 and 5 with 1.0 service each never overlap: both
+        // disciplines finish at 6.
+        let ps =
+            IngressModel::with_discipline(100.0, IngressDiscipline::Ps);
+        let mut arrivals = vec![5.0, 0.0];
+        let t = ps.round_completion(&mut arrivals, 100);
+        assert!((t - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_server_incremental_drain_matches_hand_computation() {
+        // Two unit-service messages: A arrives at t=0, B at t=0.5. From
+        // 0.5 they share the server, so A's remaining 0.5 drains at rate
+        // 1/2 → A completes at 1.5 (FIFO: 1.0); B drained 0.5 over
+        // [0.5, 1.5] and finishes its last 0.5 alone at 2.0 — the same
+        // makespan as FIFO (work conservation), later first completion.
+        let mut srv = PsServer::new();
+        srv.advance(0.0);
+        srv.admit(0, 1.0);
+        assert_eq!(srv.next_completion(), Some(1.0));
+        srv.advance(0.5);
+        srv.admit(1, 1.0);
+        // A has 0.5 remaining, two sharing: projected 0.5 + 0.5·2 = 1.5.
+        assert_eq!(srv.next_completion(), Some(1.5));
+        srv.advance(1.5);
+        assert_eq!(srv.complete_front(), Some(0));
+        // B drained 0.5 over [0.5, 1.5] at rate 1/2: 0.5 left, alone.
+        assert_eq!(srv.next_completion(), Some(2.0));
+        srv.advance(2.0);
+        assert_eq!(srv.complete_front(), Some(1));
+        assert!(srv.is_empty());
+        assert_eq!(srv.next_completion(), None);
+    }
+
+    #[test]
+    fn ps_survives_nan_arrivals_like_fifo() {
+        // Regression: a NaN arrival (sorted last under total_cmp) used
+        // to leave the PS fluid drain spinning forever — it neither
+        // compared due nor advanced the cursor. Both disciplines must
+        // serve it immediately at the busy-period end, like the FIFO
+        // chain where NaN fails the `a > free` test.
+        let fifo = IngressModel::new(100.0);
+        let ps =
+            IngressModel::with_discipline(100.0, IngressDiscipline::Ps);
+        let mut a = vec![0.0, f64::NAN, 0.2];
+        let tf = fifo.round_completion(&mut a, 100);
+        let mut b = vec![0.0, f64::NAN, 0.2];
+        let tp = ps.round_completion(&mut b, 100);
+        assert!(tf.is_finite() && tp.is_finite());
+        assert!((tf - tp).abs() < 1e-9, "fifo {tf} vs ps {tp}");
+        // Finite arrivals 0, 0.2 chain to 1, 2; the NaN is served next.
+        assert!((tf - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discipline_defaults_to_fifo_and_labels_ps() {
+        assert_eq!(
+            IngressModel::new(50.0).discipline(),
+            IngressDiscipline::Fifo
+        );
+        let ps =
+            IngressModel::with_discipline(50.0, IngressDiscipline::Ps);
+        assert_eq!(ps.discipline(), IngressDiscipline::Ps);
+        assert!(ps.name().contains("ps"));
+        assert!(!IngressModel::new(50.0).name().contains("ps"));
+        // Unlimited PS is still the independent model.
+        let free = IngressModel::with_discipline(0.0, IngressDiscipline::Ps);
+        assert!(free.is_unlimited());
+        let mut arrivals = vec![3.0, 1.0];
+        assert_eq!(free.round_completion(&mut arrivals, 1 << 20), 3.0);
     }
 }

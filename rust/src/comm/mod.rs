@@ -20,8 +20,9 @@
 //!   error-feedback residual ([`DownlinkMode`]), each worker charged a
 //!   download delay before its compute starts (cf. arXiv 2208.03134);
 //! * [`IngressModel`] — shared master-ingress capacity: a round's
-//!   accepted uploads serialize FIFO through the master's NIC instead of
-//!   arriving independently, so the round's critical path becomes
+//!   accepted uploads contend on the master's NIC instead of arriving
+//!   independently — FIFO store-and-forward or processor sharing
+//!   ([`IngressDiscipline`]) — so the round's critical path becomes
 //!   compute + *congested* transfer;
 //! * [`CommChannel`] — the bundle the training drivers route gradients
 //!   through. [`CommChannel::dense`] is the zero-cost default (free
@@ -43,7 +44,7 @@ pub use broadcast::{Broadcast, DownlinkMode};
 pub use channel::{CommChannel, CommStats, Transmission};
 pub use compress::{Compressor, Dense, QuantizeQsgd, RandK, TopK};
 pub use feedback::ErrorFeedback;
-pub use link::{IngressModel, LinkModel};
+pub use link::{IngressDiscipline, IngressModel, LinkModel, PsServer};
 
 /// Byte-accounting model for encoded gradient messages.
 ///
@@ -70,6 +71,45 @@ impl Default for WireFormat {
 }
 
 impl WireFormat {
+    /// 2-byte coordinate indices (`u16` on the wire): halves the
+    /// per-coordinate index cost of sparse messages for any `d ≤ 65536`.
+    /// The sparsifiers assert the dimension fits at encode time.
+    pub fn compact_indices(mut self) -> Self {
+        self.index_bytes = 2;
+        self
+    }
+
+    /// 2-byte values (IEEE 754 binary16 on the wire): halves the
+    /// per-coordinate value cost. Value-preserving schemes
+    /// ([`Dense`]/[`TopK`]/[`RandK`]) round each shipped value through
+    /// f16 (round-to-nearest-even), so the reconstruction loss is
+    /// modelled, not just the bytes; [`ErrorFeedback`] recovers the
+    /// rounding residual like any other compression error.
+    pub fn f16_values(mut self) -> Self {
+        self.value_bytes = 2;
+        self
+    }
+
+    /// Largest coordinate index this format can address.
+    pub fn max_index(&self) -> u64 {
+        if self.index_bytes >= 8 {
+            u64::MAX
+        } else {
+            (1u64 << (8 * self.index_bytes)) - 1
+        }
+    }
+
+    /// What a shipped value decodes to under this format: the identity
+    /// for full-precision (`value_bytes >= 4`) wires, the f16 round trip
+    /// for 2-byte wires. Exactly bitwise for the default format.
+    pub fn decode_value(&self, x: f32) -> f32 {
+        if self.value_bytes >= 4 {
+            x
+        } else {
+            f16_round_trip(x)
+        }
+    }
+
     /// Size of a dense d-vector message.
     pub fn dense(&self, d: usize) -> u64 {
         self.header_bytes + self.value_bytes * d as u64
@@ -102,6 +142,75 @@ impl WireFormat {
     }
 }
 
+/// Largest finite IEEE 754 binary16 value (the f16 saturation point).
+pub const F16_MAX: f32 = 65504.0;
+
+/// Convert an `f32` to IEEE 754 binary16 bits, round-to-nearest-even.
+///
+/// Finite inputs beyond the f16 range **saturate** to ±[`F16_MAX`]
+/// (the convention of ML accelerators) instead of rounding to ±inf — an
+/// infinite decode would poison the error-feedback residual forever,
+/// turning one oversized coordinate into a permanently broken worker.
+/// Actual ±inf and NaN inputs keep their class.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: preserve the class (NaN keeps a quiet payload bit).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15; // rebias
+    if e >= 0x1f {
+        return sign | 0x7bff; // finite overflow saturates to ±F16_MAX
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow to ±0
+        }
+        // Subnormal: shift the 24-bit significand into place,
+        // round-to-nearest-even.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32; // in 14..=24
+        let half = 1u32 << (shift - 1);
+        let rounded = (m + half - 1 + ((m >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // Normal: round the 23-bit mantissa to 10 bits, nearest-even; a
+    // mantissa carry propagates into the exponent through the packing.
+    let half = 0x0fff + ((mant >> 13) & 1);
+    let packed = ((e as u32) << 10) + ((mant + half) >> 13);
+    if packed >= 0x7c00 {
+        return sign | 0x7bff; // carry past the top exponent saturates
+    }
+    sign | packed as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to `f32` (exact — every f16 value
+/// is representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        // ±0 and subnormals: mant · 2⁻²⁴, exact in f32 (≤ 10 significant
+        // bits times an exact power of two).
+        let mag = mant as f32 * f32::from_bits(0x3380_0000); // 2⁻²⁴
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (mant << 13))
+}
+
+/// `decode(encode(x))` through the 2-byte wire: what the master
+/// reconstructs from an f16-shipped value.
+pub fn f16_round_trip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +240,71 @@ mod tests {
         // (index, value) pairs double the per-coordinate cost.
         assert!(w.sparse(50) < w.dense(100) + w.header_bytes);
         assert!(w.sparse(10) * 4 < w.dense(100));
+    }
+
+    #[test]
+    fn compact_wire_formats_price_exactly() {
+        let w = WireFormat::default().compact_indices();
+        assert_eq!(w.index_bytes, 2);
+        assert_eq!(w.sparse(10), 16 + 10 * (2 + 4));
+        assert_eq!(w.max_index(), 65535);
+        let w = WireFormat::default().f16_values();
+        assert_eq!(w.value_bytes, 2);
+        assert_eq!(w.dense(100), 16 + 200);
+        assert_eq!(w.sparse(10), 16 + 10 * (4 + 2));
+        let both = WireFormat::default().compact_indices().f16_values();
+        assert_eq!(both.sparse(10), 16 + 10 * 4);
+        // The default format addresses any dimension and decodes bitwise.
+        assert_eq!(WireFormat::default().max_index(), u64::MAX >> 32);
+        assert_eq!(WireFormat::default().decode_value(1.2345), 1.2345);
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_on_representable_values() {
+        for &x in &[
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            2.0,
+            65504.0,
+            -65504.0,
+            f32::powi(2.0, -14), // smallest f16 normal
+            f32::powi(2.0, -24), // smallest f16 subnormal
+            1.5,
+            -0.25,
+            1024.0,
+        ] {
+            let y = f16_round_trip(x);
+            assert_eq!(y.to_bits(), x.to_bits(), "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_saturates() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16 (1 + 2^-10):
+        // nearest-even rounds down to 1.0.
+        assert_eq!(f16_round_trip(1.0 + f32::powi(2.0, -11)), 1.0);
+        // 1 + 3·2^-11 is between 1+2^-10 and 1+2^-9: rounds to even, up.
+        assert_eq!(
+            f16_round_trip(1.0 + 3.0 * f32::powi(2.0, -11)),
+            1.0 + 2.0 * f32::powi(2.0, -10)
+        );
+        // Finite overflow saturates instead of producing inf.
+        assert_eq!(f16_round_trip(1e30), F16_MAX);
+        assert_eq!(f16_round_trip(-1e30), -F16_MAX);
+        assert_eq!(f16_round_trip(65520.0), F16_MAX);
+        // True infinities and NaN keep their class.
+        assert!(f16_round_trip(f32::INFINITY).is_infinite());
+        assert!(f16_round_trip(f32::NEG_INFINITY) < 0.0);
+        assert!(f16_round_trip(f32::NAN).is_nan());
+        // Tiny values underflow to signed zero.
+        assert_eq!(f16_round_trip(1e-10).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_round_trip(-1e-10).to_bits(), (-0.0f32).to_bits());
+        // decode_value is the identity on the 4-byte wire and the f16
+        // round trip on the 2-byte wire.
+        let w2 = WireFormat::default().f16_values();
+        assert_eq!(w2.decode_value(1.2345), f16_round_trip(1.2345));
     }
 }

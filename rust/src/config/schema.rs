@@ -1,6 +1,7 @@
 //! Typed experiment configuration with TOML loading + validation.
 
 use super::toml::TomlDoc;
+use crate::comm::IngressDiscipline;
 use crate::policy::PflugParams;
 
 /// Which delay model to simulate.
@@ -123,11 +124,19 @@ pub struct CommSpec {
     pub downlink: CompressorSpec,
     /// Downlink bandwidth in bytes per virtual-time unit (0 = infinite).
     pub down_bandwidth: f64,
+    /// Per-worker downlink bandwidths (bytes per virtual-time unit,
+    /// 0 = infinite for that worker). Empty = uniform `down_bandwidth`
+    /// for everyone; non-empty must have exactly `n` entries and
+    /// overrides `down_bandwidth`.
+    pub down_bandwidths: Vec<f64>,
     /// Fixed per-message download latency in virtual-time units.
     pub down_latency: f64,
     /// Shared master-ingress capacity in bytes per virtual-time unit
     /// (0 = infinite, i.e. independent uploads).
     pub ingress_bw: f64,
+    /// Queueing discipline of the shared ingress (FIFO store-and-forward
+    /// or processor sharing; only observable with a finite `ingress_bw`).
+    pub ingress: IngressDiscipline,
 }
 
 impl Default for CommSpec {
@@ -141,8 +150,10 @@ impl Default for CommSpec {
             latency: 0.0,
             downlink: CompressorSpec::Dense,
             down_bandwidth: 0.0,
+            down_bandwidths: Vec::new(),
             down_latency: 0.0,
             ingress_bw: 0.0,
+            ingress: IngressDiscipline::Fifo,
         }
     }
 }
@@ -199,12 +210,24 @@ impl CommSpec {
         };
         let feedback = self.error_feedback
             && !matches!(self.scheme, CompressorSpec::Dense);
-        let down_link =
-            if self.down_bandwidth <= 0.0 && self.down_latency <= 0.0 {
-                LinkModel::zero_cost(n)
-            } else {
-                LinkModel::uniform(n, self.down_bandwidth, self.down_latency)
-            };
+        let down_link = if !self.down_bandwidths.is_empty() {
+            // Heterogeneous downlinks: one bandwidth per worker (0 =
+            // infinite for that worker), shared latency.
+            assert_eq!(
+                self.down_bandwidths.len(),
+                n,
+                "down_bandwidths must list all {n} workers (validate() \
+                 reports this as a config error)"
+            );
+            LinkModel::per_worker(
+                self.down_bandwidths.clone(),
+                vec![self.down_latency; n],
+            )
+        } else if self.down_bandwidth <= 0.0 && self.down_latency <= 0.0 {
+            LinkModel::zero_cost(n)
+        } else {
+            LinkModel::uniform(n, self.down_bandwidth, self.down_latency)
+        };
         let mode = if matches!(self.downlink, CompressorSpec::Dense) {
             DownlinkMode::Full
         } else {
@@ -216,11 +239,15 @@ impl CommSpec {
                 down_link,
                 mode,
             ))
-            .with_ingress(IngressModel::new(self.ingress_bw))
+            .with_ingress(IngressModel::with_discipline(
+                self.ingress_bw,
+                self.ingress,
+            ))
     }
 
-    /// Check scheme/link/ingress parameters.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Check scheme/link/ingress parameters. `n` = 0 skips the
+    /// per-worker length check (callers without a worker count).
+    pub fn validate(&self, n: usize) -> Result<(), String> {
         validate_scheme(&self.scheme, "scheme")?;
         validate_scheme(&self.downlink, "downlink")?;
         validate_rate(self.bandwidth, "bandwidth")?;
@@ -228,6 +255,18 @@ impl CommSpec {
         validate_rate(self.down_bandwidth, "down_bandwidth")?;
         validate_rate(self.down_latency, "down_latency")?;
         validate_rate(self.ingress_bw, "ingress_bw")?;
+        for (i, &bw) in self.down_bandwidths.iter().enumerate() {
+            validate_rate(bw, &format!("down_bandwidths[{i}]"))?;
+        }
+        if !self.down_bandwidths.is_empty()
+            && n > 0
+            && self.down_bandwidths.len() != n
+        {
+            return Err(format!(
+                "comm.down_bandwidths has {} entries but n={n}",
+                self.down_bandwidths.len()
+            ));
+        }
         Ok(())
     }
 }
@@ -456,6 +495,32 @@ impl ExperimentConfig {
             cfg.comm.down_bandwidth = f("down_bandwidth", 0.0);
             cfg.comm.down_latency = f("down_latency", 0.0);
             cfg.comm.ingress_bw = f("ingress_bw", 0.0);
+            if let Some(v) = sec.get("down_bandwidths") {
+                let arr = v
+                    .as_arr()
+                    .ok_or("comm.down_bandwidths must be an array")?;
+                cfg.comm.down_bandwidths = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_float().ok_or_else(|| {
+                            "comm.down_bandwidths entries must be numbers"
+                                .to_string()
+                        })
+                    })
+                    .collect::<Result<Vec<f64>, String>>()?;
+            }
+            if let Some(v) = sec.get("ingress") {
+                cfg.comm.ingress = match v.as_str() {
+                    Some("fifo") => IngressDiscipline::Fifo,
+                    Some("ps") => IngressDiscipline::Ps,
+                    other => {
+                        return Err(format!(
+                            "comm.ingress must be \"fifo\" or \"ps\", got \
+                             {other:?}"
+                        ))
+                    }
+                };
+            }
         }
 
         if let Some(sec) = doc.section("workload") {
@@ -520,7 +585,7 @@ impl ExperimentConfig {
                 ));
             }
         }
-        self.comm.validate()?;
+        self.comm.validate(self.n)?;
         Ok(())
     }
 }
@@ -733,6 +798,87 @@ ingress_bw = 1000.0
         .is_err());
         assert!(ExperimentConfig::from_toml(
             "[comm]\ndownlink = \"qsgd\"\ndown_levels = -1\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn ingress_discipline_parses_and_builds() {
+        let text = r#"
+n = 10
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+[comm]
+ingress_bw = 500.0
+ingress = "ps"
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.comm.ingress, IngressDiscipline::Ps);
+        let channel = cfg.comm.build(cfg.n);
+        assert_eq!(
+            channel.ingress().discipline(),
+            IngressDiscipline::Ps
+        );
+        assert!(channel.name().contains("ps"));
+        // Default is FIFO; junk is rejected.
+        let dflt = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n",
+        )
+        .unwrap();
+        assert_eq!(dflt.comm.ingress, IngressDiscipline::Fifo);
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\ningress = \"roundrobin\"\n"
+        )
+        .is_err());
+        assert!(
+            ExperimentConfig::from_toml("[comm]\ningress = 3\n").is_err()
+        );
+    }
+
+    #[test]
+    fn per_worker_downlinks_parse_validate_and_build() {
+        let text = r#"
+n = 4
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+[comm]
+down_bandwidths = [100.0, 200, 0, 50.0]
+down_latency = 0.5
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.comm.down_bandwidths,
+            vec![100.0, 200.0, 0.0, 50.0]
+        );
+        let channel = cfg.comm.build(cfg.n);
+        assert!(!channel.downlink_is_free());
+        // Worker 1's downlink is twice worker 0's bandwidth; worker 2's
+        // 0 means infinite (latency only).
+        let b = 1000u64;
+        let d0 = channel.download_delay(0, b);
+        let d1 = channel.download_delay(1, b);
+        let d2 = channel.download_delay(2, b);
+        let d3 = channel.download_delay(3, b);
+        assert!((d0 - (0.5 + 10.0)).abs() < 1e-12);
+        assert!((d1 - (0.5 + 5.0)).abs() < 1e-12);
+        assert!((d2 - 0.5).abs() < 1e-12);
+        assert!((d3 - (0.5 + 20.0)).abs() < 1e-12);
+
+        // Wrong length fails validation against n.
+        let mut bad = ExperimentConfig::default();
+        bad.comm.down_bandwidths = vec![100.0, 200.0];
+        assert!(bad.validate().unwrap_err().contains("down_bandwidths"));
+        // NaN entries are rejected.
+        let mut nan = ExperimentConfig::default();
+        nan.comm.down_bandwidths = vec![f64::NAN; nan.n];
+        assert!(nan.validate().is_err());
+        // Non-array TOML is rejected.
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\ndown_bandwidths = 7\n"
         )
         .is_err());
     }

@@ -1,0 +1,568 @@
+//! Shared state and mechanics of the round engine.
+//!
+//! [`EngineCore`] is the single home of every per-round mechanism the
+//! training drivers used to duplicate: model-broadcast pricing
+//! ([`EngineCore::broadcast_round`] / [`EngineCore::push_model_to`]),
+//! worker response-delay composition ([`EngineCore::response_delay`] /
+//! [`EngineCore::cycle_delay`]), uplink transmit + aggregation
+//! ([`EngineCore::accept_into_g`] / [`EngineCore::transmit`]),
+//! shared-ingress clocks ([`EngineCore::round_completion`] /
+//! [`EngineCore::serve_ingress`]), the SGD apply
+//! ([`EngineCore::apply_g_sgd`] / [`EngineCore::apply_decoded`]), and
+//! metric recording ([`EngineCore::maybe_record`] and friends). A
+//! [`GatherPolicy`](super::GatherPolicy) composes these into a
+//! discipline; it never touches the channel, the rng streams, or the
+//! recorder directly, so a new discipline cannot re-implement pricing
+//! differently by accident.
+//!
+//! Reproducibility contract: every method performs the exact operations
+//! (same floating-point order, same rng stream constants, same draw
+//! order) of the pre-engine drivers, so the compatibility shims in
+//! [`master`](crate::master), [`async_sgd`](crate::async_sgd), and
+//! [`exec`](crate::exec) reproduce their historical trajectories bit for
+//! bit on the default channel (asserted by
+//! `rust/tests/test_engine_equivalence.rs`).
+
+use crate::comm::{CommChannel, DownlinkMode, IngressDiscipline, IngressModel};
+use crate::linalg::dot;
+use crate::metrics::{Recorder, Sample};
+use crate::policy::{IterationObs, KPolicy};
+use crate::rng::Pcg64;
+use crate::straggler::DelayModel;
+
+/// Engine loop bounds and step parameters, the superset of the three
+/// drivers' configs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Step size η.
+    pub eta: f32,
+    /// Heavy-ball momentum β (0 = plain SGD; only the sync gather uses
+    /// it).
+    pub momentum: f32,
+    /// Hard step cap: iterations for round disciplines, updates for the
+    /// async discipline.
+    pub max_steps: u64,
+    /// Stop once the virtual clock passes this (0 = no time budget).
+    pub max_time: f64,
+    /// Seed the rng streams derive from.
+    pub seed: u64,
+    /// Evaluate + record the error every this many steps.
+    pub record_stride: u64,
+}
+
+/// The uplink-compression rng: one shared stream for the single-threaded
+/// simulators, one stream per worker for the threaded cluster (responses
+/// arrive in nondeterministic order there, so a shared stream would hand
+/// different draws to different workers across runs of the same seed).
+pub enum CommStream {
+    /// One stream, drawn in acceptance order (the simulators' model).
+    Shared(Pcg64),
+    /// One stream per worker, independent of arrival order.
+    PerWorker(Vec<Pcg64>),
+}
+
+impl CommStream {
+    fn for_worker(&mut self, worker: usize) -> &mut Pcg64 {
+        match self {
+            CommStream::Shared(rng) => rng,
+            CommStream::PerWorker(rngs) => &mut rngs[worker],
+        }
+    }
+}
+
+/// The three rng streams an engine run draws from, with the historical
+/// per-driver stream constants (changing any would change trajectories).
+pub struct RngStreams {
+    /// Compute-delay draws.
+    pub delay: Pcg64,
+    /// Downlink (broadcast) encoder draws.
+    pub bcast: Pcg64,
+    /// Uplink compression draws.
+    pub comm: CommStream,
+}
+
+impl RngStreams {
+    /// The synchronous simulator's streams.
+    pub fn sync(seed: u64) -> Self {
+        Self {
+            delay: Pcg64::seed_stream(seed, 0xFA57),
+            bcast: Pcg64::seed_stream(seed, 0xB04D),
+            comm: CommStream::Shared(Pcg64::seed_stream(seed, 0xC044)),
+        }
+    }
+
+    /// The asynchronous simulator's streams.
+    pub fn asynchronous(seed: u64) -> Self {
+        Self {
+            delay: Pcg64::seed_stream(seed, 0xA57C),
+            bcast: Pcg64::seed_stream(seed, 0xB04E),
+            comm: CommStream::Shared(Pcg64::seed_stream(seed, 0xC045)),
+        }
+    }
+
+    /// The threaded cluster's streams (delay stream shared with the sync
+    /// simulator so both replay the same straggler pattern; per-worker
+    /// compression streams).
+    pub fn threaded(seed: u64, n: usize) -> Self {
+        Self {
+            delay: Pcg64::seed_stream(seed, 0xFA57),
+            bcast: Pcg64::seed_stream(seed, 0xB04F),
+            comm: CommStream::PerWorker(
+                (0..n)
+                    .map(|i| {
+                        Pcg64::seed_stream(seed, 0xC046_0000 + i as u64)
+                    })
+                    .collect(),
+            ),
+        }
+    }
+}
+
+/// What every engine run produces; discipline-specific fields default to
+/// zero/empty and are filled by the gather's
+/// [`annotate`](super::GatherPolicy::annotate).
+pub struct EngineRun {
+    /// Error-vs-time record.
+    pub recorder: Recorder,
+    /// Final model.
+    pub w: Vec<f32>,
+    /// Steps completed (iterations or updates).
+    pub steps: u64,
+    /// Final virtual clock.
+    pub total_time: f64,
+    /// Encoded bytes of all accepted gradient messages.
+    pub bytes_sent: u64,
+    /// Total upload time of accepted messages.
+    pub comm_time: f64,
+    /// Encoded bytes of all model downloads.
+    pub bytes_down: u64,
+    /// Total download time charged.
+    pub down_time: f64,
+    /// (iteration, time, new_k) log — fastest-k disciplines.
+    pub k_changes: Vec<(u64, f64, usize)>,
+    /// Mean staleness — the async discipline.
+    pub mean_staleness: f64,
+    /// True if the run blew up (non-finite model) and stopped early.
+    pub diverged: bool,
+    /// Late (discarded) responses — the threaded discipline.
+    pub late_responses: u64,
+}
+
+/// Shared engine state: model, buffers, rng streams, channel plumbing,
+/// clock, and recorder. See the module docs for the method inventory.
+pub struct EngineCore<'a> {
+    /// Loop bounds and step parameters.
+    pub cfg: EngineConfig,
+    channel: &'a mut CommChannel,
+    delays: &'a dyn DelayModel,
+    eval: &'a mut dyn FnMut(&[f32]) -> f64,
+    delay_rng: Pcg64,
+    bcast_rng: Pcg64,
+    comm_rng: CommStream,
+    /// The master's model `w_j`.
+    pub w: Vec<f32>,
+    /// The workers' model view — what the downlink broadcast reconstructs
+    /// (bitwise `w` on the default dense downlink).
+    pub w_view: Vec<f32>,
+    /// Aggregated (or, for async, scratch) gradient `ĝ_j`.
+    pub g: Vec<f32>,
+    g_prev: Vec<f32>,
+    decoded: Vec<f32>,
+    velocity: Option<Vec<f32>>,
+    msg_bytes: u64,
+    ingress: IngressModel,
+    ingress_free: f64,
+    bytes0: u64,
+    comm_t0: f64,
+    down0: u64,
+    down_t0: f64,
+    recorder: Recorder,
+    /// Virtual clock.
+    pub t: f64,
+    /// Steps completed (iterations or updates — the discipline's unit).
+    pub steps: u64,
+}
+
+impl<'a> EngineCore<'a> {
+    /// Build a core over the caller's channel/delay-model/evaluator, with
+    /// the model initialised to `w0` and the recorder labelled `label`.
+    pub fn new(
+        label: impl Into<String>,
+        channel: &'a mut CommChannel,
+        delays: &'a dyn DelayModel,
+        eval: &'a mut dyn FnMut(&[f32]) -> f64,
+        w0: &[f32],
+        cfg: EngineConfig,
+        streams: RngStreams,
+    ) -> Self {
+        let d = w0.len();
+        // Per-message upload pricing is data-independent, so the whole
+        // run's message size is known up front; on a zero-cost link every
+        // priced delay is exactly 0.0 and `x + 0.0` is bitwise identity
+        // for the positive compute delays — no branch needed to preserve
+        // compute-only trajectories.
+        let msg_bytes = channel.message_bytes(d);
+        let ingress = *channel.ingress();
+        let recorder = Recorder::with_stride(label, cfg.record_stride);
+        Self {
+            bytes0: channel.stats.bytes_sent,
+            comm_t0: channel.stats.comm_time,
+            down0: channel.stats.bytes_down,
+            down_t0: channel.stats.down_time,
+            channel,
+            delays,
+            eval,
+            delay_rng: streams.delay,
+            bcast_rng: streams.bcast,
+            comm_rng: streams.comm,
+            w: w0.to_vec(),
+            w_view: w0.to_vec(),
+            g: vec![0.0f32; d],
+            g_prev: vec![0.0f32; d],
+            decoded: vec![0.0f32; d],
+            velocity: None,
+            msg_bytes,
+            ingress,
+            ingress_free: f64::NEG_INFINITY,
+            recorder,
+            t: 0.0,
+            steps: 0,
+            cfg,
+        }
+    }
+
+    /// Workers the channel is sized for.
+    pub fn n(&self) -> usize {
+        self.channel.n()
+    }
+
+    /// Model dimension.
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Encoded uplink message size (data-independent).
+    pub fn msg_bytes(&self) -> u64 {
+        self.msg_bytes
+    }
+
+    // ------------------------------------------------------------------
+    // Downlink: model broadcast pricing (the one place it happens).
+    // ------------------------------------------------------------------
+
+    /// Broadcast `w` to all workers (round disciplines): encodes once
+    /// through the downlink into `w_view`, accounts bytes × n downloads
+    /// plus every worker's download delay, and returns the encoded size
+    /// for per-worker response pricing.
+    pub fn broadcast_round(&mut self) -> u64 {
+        self.channel.broadcast_model(
+            &self.w,
+            &mut self.w_view,
+            &mut self.bcast_rng,
+        )
+    }
+
+    /// Unicast `w` to one restarting worker (the async discipline),
+    /// writing the decoded view into `out` (the worker's snapshot) and
+    /// charging `replay` downlink messages; returns `(bytes, download
+    /// delay)`.
+    pub fn push_model_to(
+        &mut self,
+        worker: usize,
+        out: &mut [f32],
+        replay: u64,
+    ) -> (u64, f64) {
+        self.channel.push_model(
+            worker,
+            &self.w,
+            out,
+            replay,
+            &mut self.bcast_rng,
+        )
+    }
+
+    /// The downlink encoding mode (disciplines branch replay accounting
+    /// on it).
+    pub fn downlink_mode(&self) -> DownlinkMode {
+        self.channel.downlink_mode()
+    }
+
+    // ------------------------------------------------------------------
+    // Response-delay composition (the one place delays are sampled).
+    // ------------------------------------------------------------------
+
+    /// A round worker's full response time: compute delay (drawn from the
+    /// delay stream) + priced upload + priced download of a
+    /// `down_bytes`-sized model message. Free links contribute exactly
+    /// 0.0, preserving compute-only sums bitwise.
+    pub fn response_delay(
+        &mut self,
+        iteration: u64,
+        worker: usize,
+        down_bytes: u64,
+    ) -> f64 {
+        self.delays.sample(iteration, worker, &mut self.delay_rng)
+            + self.channel.link_upload_delay(worker, self.msg_bytes)
+            + self.channel.download_delay(worker, down_bytes)
+    }
+
+    /// An async worker's next cycle: compute delay + priced upload +
+    /// the already-priced download delay of its restart (0.0 for the
+    /// initial dispatch — workers are assumed to know `w0`).
+    pub fn cycle_delay(
+        &mut self,
+        step: u64,
+        worker: usize,
+        down_delay: f64,
+    ) -> f64 {
+        self.delays.sample(step, worker, &mut self.delay_rng)
+            + self.channel.link_upload_delay(worker, self.msg_bytes)
+            + down_delay
+    }
+
+    // ------------------------------------------------------------------
+    // Shared-ingress clocks (the one place contention is priced).
+    // ------------------------------------------------------------------
+
+    /// True iff uploads never contend (the independent-upload model).
+    pub fn ingress_unlimited(&self) -> bool {
+        self.ingress.is_unlimited()
+    }
+
+    /// The ingress queueing discipline.
+    pub fn ingress_discipline(&self) -> IngressDiscipline {
+        self.ingress.discipline()
+    }
+
+    /// Ingress service time of one uplink message.
+    pub fn ingress_service_time(&self) -> f64 {
+        self.ingress.service_time(self.msg_bytes)
+    }
+
+    /// Round clock under contention: completion of the last accepted
+    /// upload, FIFO or PS per the channel's discipline (sorts `arrivals`
+    /// in place).
+    pub fn round_completion(&self, arrivals: &mut [f64]) -> f64 {
+        self.ingress.round_completion(arrivals, self.msg_bytes)
+    }
+
+    /// Serve one arriving upload through the FIFO ingress chain (the
+    /// async discipline's running state lives here): completion is
+    /// `max(arrival, free) + service`, bitwise the arrival when
+    /// unlimited.
+    pub fn serve_ingress(&mut self, arrival: f64) -> f64 {
+        let t =
+            self.ingress.serve_at(arrival, self.ingress_free, self.msg_bytes);
+        self.ingress_free = t;
+        t
+    }
+
+    // ------------------------------------------------------------------
+    // Uplink transmit + aggregation (the one place gradients ship).
+    // ------------------------------------------------------------------
+
+    /// Ship worker `i`'s raw gradient through the channel (error feedback
+    /// + compression + byte accounting) and add the master's
+    /// reconstruction into `g`.
+    pub fn accept_into_g(&mut self, worker: usize, raw: &[f32]) {
+        let rng = self.comm_rng.for_worker(worker);
+        self.channel.transmit(worker, raw, &mut self.decoded, rng);
+        for (gv, pv) in self.g.iter_mut().zip(&self.decoded) {
+            *gv += *pv;
+        }
+    }
+
+    /// Ship worker `i`'s raw gradient through the channel, leaving the
+    /// reconstruction in the decoded buffer (applied by
+    /// [`EngineCore::apply_decoded`] — the async discipline).
+    pub fn transmit(&mut self, worker: usize, raw: &[f32]) {
+        let rng = self.comm_rng.for_worker(worker);
+        self.channel.transmit(worker, raw, &mut self.decoded, rng);
+    }
+
+    /// Zero the aggregation buffer for a new round.
+    pub fn zero_g(&mut self) {
+        self.g.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Scale the aggregate by `1/k` (the fastest-k mean).
+    pub fn scale_g(&mut self, k: usize) {
+        let inv_k = 1.0 / k as f32;
+        for gv in self.g.iter_mut() {
+            *gv *= inv_k;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // The gradient apply (the one place the model moves).
+    // ------------------------------------------------------------------
+
+    /// SGD step from the aggregated `g`: heavy-ball when momentum > 0
+    /// (velocity allocated lazily), plain descent otherwise.
+    pub fn apply_g_sgd(&mut self) {
+        if self.cfg.momentum > 0.0 {
+            let v = self
+                .velocity
+                .get_or_insert_with(|| vec![0.0f32; self.w.len()]);
+            for ((vv, wv), gv) in
+                v.iter_mut().zip(self.w.iter_mut()).zip(&self.g)
+            {
+                *vv = self.cfg.momentum * *vv + *gv;
+                *wv -= self.cfg.eta * *vv;
+            }
+        } else {
+            for (wv, gv) in self.w.iter_mut().zip(&self.g) {
+                *wv -= self.cfg.eta * *gv;
+            }
+        }
+    }
+
+    /// Apply the decoded single-worker gradient with an explicit step
+    /// size (the async discipline's staleness-damped update).
+    pub fn apply_decoded(&mut self, step: f32) {
+        for (wv, gv) in self.w.iter_mut().zip(&self.decoded) {
+            *wv -= step * *gv;
+        }
+    }
+
+    /// The shared tail of every fastest-k round, after the clock has
+    /// advanced and the k accepted gradients are summed in `g`:
+    /// mean-scale, apply the SGD step, feed the `policy` its
+    /// [`IterationObs`] (logging any k switch into `k_changes`), rotate
+    /// the gradient history, advance the step counter, and record on
+    /// stride. Returns the k for the next round. Both the simulated and
+    /// the threaded fastest-k disciplines call this, so the round
+    /// composition cannot fork again.
+    pub fn finish_fastest_k_round(
+        &mut self,
+        j: u64,
+        n: usize,
+        k: usize,
+        policy: &mut dyn KPolicy,
+        k_changes: &mut Vec<(u64, f64, usize)>,
+    ) -> usize {
+        self.scale_g(k);
+        self.apply_g_sgd();
+        let inner =
+            if j == 0 { None } else { Some(self.grad_inner_prev()) };
+        let obs = IterationObs {
+            iteration: j,
+            time: self.t,
+            k_used: k,
+            grad_inner_prev: inner,
+            grad_norm_sq: self.grad_norm_sq(),
+        };
+        let k_next = policy.next_k(&obs).clamp(1, n);
+        let k_new = if k_next != k {
+            k_changes.push((j, self.t, k_next));
+            k_next
+        } else {
+            k
+        };
+        self.swap_g();
+        self.steps = j + 1;
+        self.maybe_record(self.steps, k_new);
+        k_new
+    }
+
+    /// True while the model is finite (divergence guard, first
+    /// coordinate — the historical async check).
+    pub fn model_is_finite(&self) -> bool {
+        self.w[0].is_finite()
+    }
+
+    // ------------------------------------------------------------------
+    // Policy observables.
+    // ------------------------------------------------------------------
+
+    /// `⟨ĝ_j, ĝ_{j−1}⟩` for the k policies.
+    pub fn grad_inner_prev(&self) -> f64 {
+        dot(&self.g, &self.g_prev)
+    }
+
+    /// `‖ĝ_j‖²`.
+    pub fn grad_norm_sq(&self) -> f64 {
+        dot(&self.g, &self.g)
+    }
+
+    /// Rotate `g` into `g_prev` for the next round's inner product.
+    pub fn swap_g(&mut self) {
+        std::mem::swap(&mut self.g, &mut self.g_prev);
+    }
+
+    // ------------------------------------------------------------------
+    // Metric recording (the one place samples are built).
+    // ------------------------------------------------------------------
+
+    /// A sample at the current clock with the given error value (the one
+    /// place the stats-delta fields are assembled).
+    fn sample_with_error(&self, step: u64, k: usize, error: f64) -> Sample {
+        Sample {
+            iteration: step,
+            time: self.t,
+            k,
+            error,
+            bytes: self.channel.stats.bytes_sent - self.bytes0,
+            comm_time: self.channel.stats.comm_time - self.comm_t0,
+            bytes_down: self.channel.stats.bytes_down - self.down0,
+            down_time: self.channel.stats.down_time - self.down_t0,
+        }
+    }
+
+    fn stats_sample(&mut self, step: u64, k: usize) -> Sample {
+        let error = (self.eval)(&self.w);
+        self.sample_with_error(step, k, error)
+    }
+
+    /// Record the initial point (iteration 0, time 0, zero traffic).
+    pub fn record_initial(&mut self, k: usize) {
+        let error = (self.eval)(&self.w);
+        self.recorder.push_forced(Sample {
+            iteration: 0,
+            time: 0.0,
+            k,
+            error,
+            ..Default::default()
+        });
+    }
+
+    /// Record a full sample if `step` lands on the record stride.
+    pub fn maybe_record(&mut self, step: u64, k: usize) {
+        if step % self.cfg.record_stride == 0 {
+            let s = self.stats_sample(step, k);
+            self.recorder.push_forced(s);
+        }
+    }
+
+    /// Record the end state unless the stride already captured it.
+    pub fn record_final(&mut self, step: u64, k: usize) {
+        if step % self.cfg.record_stride != 0 {
+            let s = self.stats_sample(step, k);
+            self.recorder.push_forced(s);
+        }
+    }
+
+    /// Record a divergence marker (error = ∞, no model evaluation).
+    pub fn record_diverged(&mut self, step: u64, k: usize) {
+        let s = self.sample_with_error(step, k, f64::INFINITY);
+        self.recorder.push_forced(s);
+    }
+
+    /// Consume the core into the run result (discipline extras default).
+    pub fn into_run(self) -> EngineRun {
+        EngineRun {
+            bytes_sent: self.channel.stats.bytes_sent - self.bytes0,
+            comm_time: self.channel.stats.comm_time - self.comm_t0,
+            bytes_down: self.channel.stats.bytes_down - self.down0,
+            down_time: self.channel.stats.down_time - self.down_t0,
+            recorder: self.recorder,
+            w: self.w,
+            steps: self.steps,
+            total_time: self.t,
+            k_changes: Vec::new(),
+            mean_staleness: 0.0,
+            diverged: false,
+            late_responses: 0,
+        }
+    }
+}

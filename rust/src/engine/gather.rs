@@ -1,0 +1,390 @@
+//! Gather disciplines: how a round's worker responses become a model
+//! update.
+//!
+//! A [`GatherPolicy`] drives the engine loop one step at a time through
+//! the [`EngineCore`] primitives — it decides *which* responses count and
+//! *when* the clock advances, while every mechanism (pricing, transmit,
+//! apply, recording) stays in the core. The two simulator disciplines
+//! live here:
+//!
+//! * [`FastestKGather`] — the paper's synchronous fastest-k round: price
+//!   all n responses, select the k fastest, aggregate their gradients,
+//!   one SGD step, feed the [`KPolicy`].
+//! * [`StalenessGather`] — Dutta et al.'s fully-asynchronous comparator:
+//!   an event per worker completion, each (possibly stale) gradient
+//!   applied immediately with optional staleness damping.
+//!
+//! The threaded cluster's discipline (real threads as the delay source)
+//! implements the same trait privately in
+//! [`exec::cluster`](crate::exec). A new discipline is one more impl —
+//! roughly 100 lines against the core's primitives — instead of a fourth
+//! driver fork.
+
+use super::core::{EngineCore, EngineRun};
+use crate::comm::{DownlinkMode, IngressDiscipline, PsServer};
+use crate::grad::GradBackend;
+use crate::master::fastest_k_select;
+use crate::policy::KPolicy;
+use crate::sim::EventQueue;
+
+/// A pluggable gather discipline driven by
+/// [`RoundEngine::run`](super::RoundEngine::run).
+pub trait GatherPolicy {
+    /// The k column of the initial sample (called after
+    /// [`GatherPolicy::start`]).
+    fn initial_k(&self) -> usize;
+
+    /// One-time setup: schedule initial work, snapshot state.
+    fn start(&mut self, _core: &mut EngineCore) {}
+
+    /// Advance one step (a round, or one event); `false` ends the run.
+    fn step(&mut self, core: &mut EngineCore) -> bool;
+
+    /// Post-loop bookkeeping (e.g. force the final sample).
+    fn finish(&mut self, _core: &mut EngineCore) {}
+
+    /// Move discipline-specific results (k switches, staleness, lateness)
+    /// into the run.
+    fn annotate(&mut self, _run: &mut EngineRun) {}
+}
+
+/// The synchronous fastest-k discipline over a simulated
+/// [`GradBackend`].
+pub struct FastestKGather<'a> {
+    backend: &'a mut dyn GradBackend,
+    policy: &'a mut dyn KPolicy,
+    k: usize,
+    delay_buf: Vec<f64>,
+    idx_buf: Vec<usize>,
+    /// Accepted-arrival scratch for the shared-ingress round clock.
+    arrival_buf: Vec<f64>,
+    partial: Vec<f32>,
+    /// Batched-backend scratch (allocated lazily, and only on the batched
+    /// aggregation path — shard-by-shard runs never pay the O(n·d)
+    /// memory).
+    all_buf: Option<Vec<f32>>,
+    k_changes: Vec<(u64, f64, usize)>,
+}
+
+impl<'a> FastestKGather<'a> {
+    /// Gather the `policy`-chosen k fastest of `backend`'s shards.
+    pub fn new(
+        backend: &'a mut dyn GradBackend,
+        policy: &'a mut dyn KPolicy,
+    ) -> Self {
+        let n = backend.n_shards();
+        let d = backend.dim();
+        Self {
+            backend,
+            policy,
+            k: 1,
+            delay_buf: vec![0.0f64; n],
+            idx_buf: Vec::with_capacity(n),
+            arrival_buf: Vec::with_capacity(n),
+            partial: vec![0.0f32; d],
+            all_buf: None,
+            k_changes: Vec::new(),
+        }
+    }
+}
+
+impl GatherPolicy for FastestKGather<'_> {
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+
+    fn start(&mut self, _core: &mut EngineCore) {
+        let n = self.backend.n_shards();
+        self.k = self.policy.initial_k().min(n).max(1);
+    }
+
+    fn step(&mut self, core: &mut EngineCore) -> bool {
+        let n = self.backend.n_shards();
+        let d = self.backend.dim();
+        let j = core.steps;
+        if j >= core.cfg.max_steps
+            || (core.cfg.max_time > 0.0 && core.t >= core.cfg.max_time)
+        {
+            return false;
+        }
+        self.backend.on_iteration(j);
+        // (1) downlink: broadcast w_j; every worker computes against the
+        // decoded view and is charged its download before compute starts.
+        let down_bytes = core.broadcast_round();
+        // (2) response times (download + compute + upload) + fastest-k
+        // selection.
+        for (i, slot) in self.delay_buf.iter_mut().enumerate() {
+            *slot = core.response_delay(j, i, down_bytes);
+        }
+        let (x_k, _) =
+            fastest_k_select(&self.delay_buf, self.k, &mut self.idx_buf);
+        // (2b) shared-ingress congestion: with finite master ingress the
+        // k accepted uploads contend, so the round ends at the last
+        // accepted message's ingress finish, not the k-th arrival. The
+        // unlimited default skips the sort and keeps x_k bitwise.
+        let round_time = if core.ingress_unlimited() {
+            x_k
+        } else {
+            self.arrival_buf.clear();
+            self.arrival_buf
+                .extend(self.idx_buf[..self.k].iter().map(|&i| self.delay_buf[i]));
+            core.round_completion(&mut self.arrival_buf)
+        };
+        core.t += round_time;
+
+        // (3) aggregate the k fastest partial gradients — through the
+        // batched path when the backend has one and k is past the
+        // dispatch-cost crossover (~n/4, see GradBackend::all_grads),
+        // else shard by shard. Each accepted gradient passes through the
+        // channel (error feedback + compression + byte accounting).
+        core.zero_g();
+        let use_batched =
+            self.backend.supports_all_grads() && 4 * self.k >= n;
+        let mut batched = false;
+        if use_batched {
+            let buf =
+                self.all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
+            batched = self.backend.all_grads(&core.w_view, buf);
+        }
+        if batched {
+            let buf = self
+                .all_buf
+                .as_ref()
+                .expect("batched scratch allocated above");
+            for &worker in &self.idx_buf[..self.k] {
+                core.accept_into_g(worker, &buf[worker * d..(worker + 1) * d]);
+            }
+        } else {
+            for &worker in &self.idx_buf[..self.k] {
+                self.backend.partial_grad(
+                    worker,
+                    &core.w_view,
+                    &mut self.partial,
+                );
+                core.accept_into_g(worker, &self.partial);
+            }
+        }
+        // (4, 5) the shared round tail: mean-scale + SGD update + policy
+        // feedback + recording, in exactly one place (engine/core.rs).
+        self.k = core.finish_fastest_k_round(
+            j,
+            n,
+            self.k,
+            &mut *self.policy,
+            &mut self.k_changes,
+        );
+        true
+    }
+
+    fn finish(&mut self, core: &mut EngineCore) {
+        // Always record the end state.
+        core.record_final(core.steps, self.k);
+    }
+
+    fn annotate(&mut self, run: &mut EngineRun) {
+        run.k_changes = std::mem::take(&mut self.k_changes);
+    }
+}
+
+/// Event payload of the asynchronous discipline: a worker's upload
+/// arriving at the master, or (processor-sharing ingress only) a
+/// tentative drain completion tagged with the epoch it was computed in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum AsyncEv {
+    /// Worker `i`'s upload reaches the master ingress.
+    Arrive(usize),
+    /// The oldest in-flight message finishes draining (stale if the
+    /// active set changed since this epoch).
+    Complete(u64),
+}
+
+/// The fully-asynchronous discipline: every worker computes against its
+/// stale snapshot; each completion is applied immediately.
+///
+/// Ingress handling: the FIFO discipline keeps the historical running
+/// `free`-chain (bitwise the pre-engine driver); the processor-sharing
+/// discipline is simulated exactly by driving the shared
+/// [`PsServer`] fluid drain with tentative completion events — each
+/// arrival reshares the drain and invalidates the scheduled completion
+/// by epoch, so per-update apply times reflect true PS. With unlimited
+/// ingress both collapse to "apply at arrival".
+pub struct StalenessGather<'a> {
+    backend: &'a mut dyn GradBackend,
+    damping: bool,
+    queue: EventQueue<AsyncEv>,
+    snapshots: Vec<Vec<f32>>,
+    read_version: Vec<u64>,
+    version: u64,
+    staleness_sum: f64,
+    g_raw: Vec<f32>,
+    diverged: bool,
+    /// True when the finite-ingress PS event machinery is active.
+    use_ps: bool,
+    /// The shared PS drain (tags are worker ids).
+    ps: PsServer,
+    ps_epoch: u64,
+    ps_service: f64,
+}
+
+impl<'a> StalenessGather<'a> {
+    /// Asynchronous SGD over `backend` with optional staleness damping
+    /// (`η/(1 + staleness)` per update).
+    pub fn new(backend: &'a mut dyn GradBackend, damping: bool) -> Self {
+        let d = backend.dim();
+        Self {
+            backend,
+            damping,
+            queue: EventQueue::new(),
+            snapshots: Vec::new(),
+            read_version: Vec::new(),
+            version: 0,
+            staleness_sum: 0.0,
+            g_raw: vec![0.0f32; d],
+            diverged: false,
+            use_ps: false,
+            ps: PsServer::new(),
+            ps_epoch: 0,
+            ps_service: 0.0,
+        }
+    }
+
+    /// Schedule the tentative completion of the oldest in-flight message
+    /// under the current active set (equal sizes → oldest always
+    /// completes first). Any later arrival bumps the epoch and
+    /// supersedes it.
+    fn ps_schedule_front(&mut self) {
+        if let Some(t_complete) = self.ps.next_completion() {
+            self.queue
+                .schedule_at(t_complete, AsyncEv::Complete(self.ps_epoch));
+        }
+    }
+
+    /// Apply worker `i`'s update at `t_apply`: decode, staleness-damped
+    /// step, divergence guard, restart the worker through the priced
+    /// downlink. Returns `false` when the run must stop.
+    fn apply_update(
+        &mut self,
+        core: &mut EngineCore,
+        i: usize,
+        t_apply: f64,
+    ) -> bool {
+        core.t = t_apply;
+        if core.cfg.max_time > 0.0 && t_apply > core.cfg.max_time {
+            return false;
+        }
+        // Gradient at the worker's stale snapshot, shipped through the
+        // channel (compression + error feedback + byte accounting).
+        self.backend.partial_grad(i, &self.snapshots[i], &mut self.g_raw);
+        core.transmit(i, &self.g_raw);
+        let staleness = self.version - self.read_version[i];
+        let step = if self.damping {
+            core.cfg.eta / (1.0 + staleness as f32)
+        } else {
+            core.cfg.eta
+        };
+        core.apply_decoded(step);
+        self.version += 1;
+        self.staleness_sum += staleness as f64;
+        core.steps += 1;
+        if !core.model_is_finite() {
+            self.diverged = true;
+            core.record_diverged(core.steps, 1);
+            return false;
+        }
+
+        // Worker restarts immediately: it downloads the fresh model
+        // through the priced downlink (its snapshot becomes the decoded
+        // view), then its next cycle covers download + compute + upload.
+        // Delta mode streams one delta per update, so the worker replays
+        // every delta appended since its last restart: staleness + 1
+        // messages, one download each.
+        let replay = match core.downlink_mode() {
+            DownlinkMode::Full => 1,
+            DownlinkMode::Delta => staleness + 1,
+        };
+        let (_, down_delay) =
+            core.push_model_to(i, &mut self.snapshots[i], replay);
+        self.read_version[i] = self.version;
+        let dt = core.cycle_delay(core.steps, i, down_delay);
+        self.queue.schedule_at(t_apply + dt, AsyncEv::Arrive(i));
+
+        core.maybe_record(core.steps, 1);
+        true
+    }
+}
+
+impl GatherPolicy for StalenessGather<'_> {
+    fn initial_k(&self) -> usize {
+        1
+    }
+
+    fn start(&mut self, core: &mut EngineCore) {
+        let n = self.backend.n_shards();
+        self.snapshots = vec![core.w.clone(); n];
+        self.read_version = vec![0u64; n];
+        self.use_ps = !core.ingress_unlimited()
+            && core.ingress_discipline() == IngressDiscipline::Ps;
+        self.ps_service = core.ingress_service_time();
+        for i in 0..n {
+            // Workers know w0, so the initial dispatch carries no
+            // download (the 0.0 download term is bitwise inert).
+            let dt = core.cycle_delay(0, i, 0.0);
+            self.queue.schedule_in(dt, AsyncEv::Arrive(i));
+        }
+    }
+
+    fn step(&mut self, core: &mut EngineCore) -> bool {
+        if core.steps >= core.cfg.max_steps {
+            return false;
+        }
+        let ev = match self.queue.pop() {
+            Some(e) => e,
+            None => return false,
+        };
+        match ev.payload {
+            AsyncEv::Arrive(i) if !self.use_ps => {
+                // Congested FIFO ingress: the upload that *arrived* at
+                // ev.time is applied once the master's NIC has served it.
+                let t_apply = core.serve_ingress(ev.time);
+                self.apply_update(core, i, t_apply)
+            }
+            AsyncEv::Arrive(i) => {
+                // PS ingress: join the drain; the pending tentative
+                // completion is now stale (one more message sharing).
+                self.ps.advance(ev.time);
+                self.ps.admit(i, self.ps_service);
+                self.ps_epoch += 1;
+                self.ps_schedule_front();
+                true
+            }
+            AsyncEv::Complete(epoch) => {
+                if epoch != self.ps_epoch {
+                    return true; // superseded by a later arrival
+                }
+                self.ps.advance(ev.time);
+                let i = self
+                    .ps
+                    .complete_front()
+                    .expect("valid completion with empty PS server");
+                self.ps_epoch += 1;
+                self.ps_schedule_front();
+                self.apply_update(core, i, ev.time)
+            }
+        }
+    }
+
+    fn finish(&mut self, core: &mut EngineCore) {
+        if !self.diverged {
+            core.record_final(core.steps, 1);
+        }
+    }
+
+    fn annotate(&mut self, run: &mut EngineRun) {
+        run.diverged = self.diverged;
+        run.mean_staleness = if run.steps > 0 {
+            self.staleness_sum / run.steps as f64
+        } else {
+            0.0
+        };
+    }
+}

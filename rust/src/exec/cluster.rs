@@ -5,15 +5,27 @@
 //! both into the injected virtual delay (the worker sleeps download +
 //! compute + upload), broadcasts the *downlink view* of the model, and
 //! decodes accepted gradients through the channel on receipt. With a
-//! finite master-ingress capacity the round's virtual time is the FIFO
+//! finite master-ingress capacity the round's virtual time is the
 //! ingress completion of the accepted responses, not their max.
+//!
+//! The run loop is the round engine's: the cluster implements a private
+//! [`GatherPolicy`](crate::engine::GatherPolicy) whose job is only to
+//! dispatch jobs to the worker threads and gather fresh responses — all
+//! pricing (broadcast, response delays, ingress clock), the SGD apply,
+//! and recording go through the shared
+//! [`EngineCore`](crate::engine::EngineCore), so the real threads are
+//! reduced to a delay-and-gradient source feeding the same engine as
+//! the simulators.
 
 use crate::comm::CommChannel;
 use crate::data::Shards;
-use crate::linalg::{dot, gemv, gemv_t, Matrix};
-use crate::metrics::{Recorder, Sample};
-use crate::policy::{IterationObs, KPolicy};
-use crate::rng::Pcg64;
+use crate::engine::{
+    EngineConfig, EngineCore, EngineRun, GatherPolicy, RngStreams,
+    RoundEngine,
+};
+use crate::linalg::{gemv, gemv_t, Matrix};
+use crate::metrics::Recorder;
+use crate::policy::KPolicy;
 use crate::straggler::DelayModel;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -129,20 +141,9 @@ impl ThreadedCluster {
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
     ) -> ThreadedRunStats {
         assert_eq!(w0.len(), self.d);
-        let start = Instant::now();
-        let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57); // same as sim
         let delay_model = crate::straggler::ExponentialDelays::new(1.0);
         let mut channel = CommChannel::dense(self.n);
-        self.run_inner(
-            policy,
-            w0,
-            cfg,
-            eval_error,
-            &delay_model,
-            &mut channel,
-            &mut rng,
-            start,
-        )
+        self.run_inner(policy, w0, cfg, eval_error, &delay_model, &mut channel)
     }
 
     /// Run with an explicit delay model (free link).
@@ -154,12 +155,8 @@ impl ThreadedCluster {
         cfg: &ThreadedConfig,
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
     ) -> ThreadedRunStats {
-        let start = Instant::now();
-        let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
         let mut channel = CommChannel::dense(self.n);
-        self.run_inner(
-            policy, w0, cfg, eval_error, delays, &mut channel, &mut rng, start,
-        )
+        self.run_inner(policy, w0, cfg, eval_error, delays, &mut channel)
     }
 
     /// Run with an explicit delay model *and* comm channel: worker sleeps
@@ -174,14 +171,12 @@ impl ThreadedCluster {
         cfg: &ThreadedConfig,
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
     ) -> ThreadedRunStats {
-        let start = Instant::now();
-        let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
-        self.run_inner(
-            policy, w0, cfg, eval_error, delays, channel, &mut rng, start,
-        )
+        self.run_inner(policy, w0, cfg, eval_error, delays, channel)
     }
 
-    #[allow(clippy::too_many_arguments)]
+    /// Build an engine core (threaded rng streams: delay stream shared
+    /// with the simulator, per-worker compression streams) and run the
+    /// cluster's gather discipline on it.
     fn run_inner(
         &mut self,
         policy: &mut dyn KPolicy,
@@ -190,156 +185,145 @@ impl ThreadedCluster {
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
         delays: &dyn DelayModel,
         channel: &mut CommChannel,
-        rng: &mut Pcg64,
-        start: Instant,
     ) -> ThreadedRunStats {
         let n = self.n;
-        let d = self.d;
         assert_eq!(
             channel.n(),
             n,
             "comm channel sized for {} workers, cluster has {n}",
             channel.n()
         );
-        // One compression stream per worker: responses are gathered in
-        // nondeterministic arrival order, so a single shared stream would
-        // hand different draws to different workers across runs of the
-        // same seed. Per-worker streams keep stochastic compressors
-        // (QSGD/RandK) reproducible regardless of thread scheduling.
-        let mut comm_rngs: Vec<Pcg64> = (0..n)
-            .map(|i| Pcg64::seed_stream(cfg.seed, 0xC046_0000 + i as u64))
-            .collect();
-        // Downlink encoder stream (the broadcast is master-side and
-        // single-threaded, so one stream suffices and stays reproducible).
-        let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04F);
-        let bytes0 = channel.stats.bytes_sent;
-        let comm_t0 = channel.stats.comm_time;
-        let down0 = channel.stats.bytes_down;
-        let down_t0 = channel.stats.down_time;
-        let mut w = w0.to_vec();
-        // Workers' model view: what the downlink broadcast reconstructs
-        // (bitwise `w` on the default dense downlink).
-        let mut w_view = w0.to_vec();
-        let mut g = vec![0.0f32; d];
-        let mut g_prev = vec![0.0f32; d];
-        let mut decoded = vec![0.0f32; d];
-        let mut k = policy.initial_k().clamp(1, n);
-        let mut vt = 0.0f64;
-        let mut late = 0u64;
-        // Zero-cost links price messages at exactly 0.0 — no branch needed.
-        let msg_bytes = channel.message_bytes(d);
-        let ingress = *channel.ingress();
-        // Accepted responses' virtual delays, for the congested clock.
-        let mut accepted_delays: Vec<f64> = Vec::with_capacity(n);
-        let mut recorder = Recorder::with_stride(
+        let start = Instant::now();
+        let engine_cfg = EngineConfig {
+            eta: cfg.eta,
+            momentum: 0.0,
+            max_steps: cfg.max_iterations,
+            max_time: 0.0,
+            seed: cfg.seed,
+            record_stride: cfg.record_stride,
+        };
+        let core = EngineCore::new(
             format!("threaded/{}", policy.name()),
-            cfg.record_stride,
+            channel,
+            delays,
+            eval_error,
+            w0,
+            engine_cfg,
+            RngStreams::threaded(cfg.seed, n),
         );
-        recorder.push_forced(Sample {
-            iteration: 0,
-            time: 0.0,
-            k,
-            error: eval_error(&w),
-            ..Default::default()
-        });
-
-        for j in 0..cfg.max_iterations {
-            // Broadcast w_j through the priced downlink: workers compute
-            // at the decoded view, and each injected delay covers the
-            // download, the compute, and the priced upload of the coming
-            // response.
-            let down_bytes =
-                channel.broadcast_model(&w, &mut w_view, &mut bcast_rng);
-            let w_shared = Arc::new(w_view.clone());
-            for (i, tx) in self.job_txs.iter().enumerate() {
-                let delay = delays.sample(j, i, rng)
-                    + channel.link_upload_delay(i, msg_bytes)
-                    + channel.download_delay(i, down_bytes);
-                tx.send(Job {
-                    generation: j,
-                    w: Arc::clone(&w_shared),
-                    delay,
-                })
-                .expect("worker died");
-            }
-
-            // Gather the fastest k fresh responses, decoding each through
-            // the channel.
-            g.iter_mut().for_each(|v| *v = 0.0);
-            let mut got = 0usize;
-            let mut iter_vt = 0.0f64;
-            accepted_delays.clear();
-            while got < k {
-                let resp = self.resp_rx.recv().expect("cluster closed");
-                if resp.generation != j {
-                    late += 1; // straggler from an earlier round: discard
-                    continue;
-                }
-                got += 1;
-                iter_vt = iter_vt.max(resp.delay);
-                accepted_delays.push(resp.delay);
-                channel.transmit(
-                    resp.worker,
-                    &resp.grad,
-                    &mut decoded,
-                    &mut comm_rngs[resp.worker],
-                );
-                for (gv, pv) in g.iter_mut().zip(&decoded) {
-                    *gv += *pv;
-                }
-            }
-            // Congested clock: with finite ingress the round's virtual
-            // time is the FIFO completion of the accepted uploads (real
-            // arrival order is thread-nondeterministic, so the virtual
-            // FIFO order is by virtual delay — sorted inside).
-            if !ingress.is_unlimited() {
-                iter_vt =
-                    ingress.round_completion(&mut accepted_delays, msg_bytes);
-            }
-            let inv_k = 1.0 / k as f32;
-            g.iter_mut().for_each(|v| *v *= inv_k);
-            vt += iter_vt;
-
-            for (wv, gv) in w.iter_mut().zip(&g) {
-                *wv -= cfg.eta * *gv;
-            }
-
-            let inner = if j == 0 { None } else { Some(dot(&g, &g_prev)) };
-            let obs = IterationObs {
-                iteration: j,
-                time: vt,
-                k_used: k,
-                grad_inner_prev: inner,
-                grad_norm_sq: dot(&g, &g),
-            };
-            k = policy.next_k(&obs).clamp(1, n);
-            std::mem::swap(&mut g, &mut g_prev);
-
-            if (j + 1) % cfg.record_stride == 0 {
-                recorder.push_forced(Sample {
-                    iteration: j + 1,
-                    time: vt,
-                    k,
-                    error: eval_error(&w),
-                    bytes: channel.stats.bytes_sent - bytes0,
-                    comm_time: channel.stats.comm_time - comm_t0,
-                    bytes_down: channel.stats.bytes_down - down0,
-                    down_time: channel.stats.down_time - down_t0,
-                });
-            }
-        }
-
+        let mut gather = ThreadedGather {
+            job_txs: &self.job_txs,
+            resp_rx: &self.resp_rx,
+            policy,
+            n,
+            k: 1,
+            accepted_delays: Vec::with_capacity(n),
+            late: 0,
+            k_changes: Vec::new(),
+        };
+        let run = RoundEngine::new(core).run(&mut gather);
         ThreadedRunStats {
-            recorder,
-            w,
-            virtual_time: vt,
+            recorder: run.recorder,
+            w: run.w,
+            virtual_time: run.total_time,
             real_time: start.elapsed().as_secs_f64(),
-            late_responses: late,
-            bytes_sent: channel.stats.bytes_sent - bytes0,
-            comm_time: channel.stats.comm_time - comm_t0,
-            bytes_down: channel.stats.bytes_down - down0,
-            down_time: channel.stats.down_time - down_t0,
+            late_responses: run.late_responses,
+            bytes_sent: run.bytes_sent,
+            comm_time: run.comm_time,
+            bytes_down: run.bytes_down,
+            down_time: run.down_time,
         }
+    }
+}
+
+/// The cluster's gather discipline: real worker threads as the delay and
+/// gradient source. Dispatch sends every worker its priced virtual delay
+/// (the worker sleeps download + compute + upload, scaled); gathering
+/// accepts the first k *fresh* responses and discards stragglers from
+/// earlier generations. Everything priced or recorded goes through the
+/// [`EngineCore`].
+struct ThreadedGather<'a> {
+    job_txs: &'a [mpsc::Sender<Job>],
+    resp_rx: &'a mpsc::Receiver<Response>,
+    policy: &'a mut dyn KPolicy,
+    n: usize,
+    k: usize,
+    /// Accepted responses' virtual delays, for the congested clock.
+    accepted_delays: Vec<f64>,
+    late: u64,
+    k_changes: Vec<(u64, f64, usize)>,
+}
+
+impl GatherPolicy for ThreadedGather<'_> {
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+
+    fn start(&mut self, _core: &mut EngineCore) {
+        self.k = self.policy.initial_k().clamp(1, self.n);
+    }
+
+    fn step(&mut self, core: &mut EngineCore) -> bool {
+        let j = core.steps;
+        if j >= core.cfg.max_steps {
+            return false;
+        }
+        // Broadcast w_j through the priced downlink: workers compute at
+        // the decoded view, and each injected delay covers the download,
+        // the compute, and the priced upload of the coming response.
+        let down_bytes = core.broadcast_round();
+        let w_shared = Arc::new(core.w_view.clone());
+        for (i, tx) in self.job_txs.iter().enumerate() {
+            let delay = core.response_delay(j, i, down_bytes);
+            tx.send(Job {
+                generation: j,
+                w: Arc::clone(&w_shared),
+                delay,
+            })
+            .expect("worker died");
+        }
+
+        // Gather the fastest k fresh responses, decoding each through
+        // the channel.
+        core.zero_g();
+        let mut got = 0usize;
+        let mut iter_vt = 0.0f64;
+        self.accepted_delays.clear();
+        while got < self.k {
+            let resp = self.resp_rx.recv().expect("cluster closed");
+            if resp.generation != j {
+                self.late += 1; // straggler from an earlier round: discard
+                continue;
+            }
+            got += 1;
+            iter_vt = iter_vt.max(resp.delay);
+            self.accepted_delays.push(resp.delay);
+            core.accept_into_g(resp.worker, &resp.grad);
+        }
+        // Congested clock: with finite ingress the round's virtual time
+        // is the ingress completion of the accepted uploads (real
+        // arrival order is thread-nondeterministic, so the virtual
+        // order is by virtual delay — sorted inside).
+        if !core.ingress_unlimited() {
+            iter_vt = core.round_completion(&mut self.accepted_delays);
+        }
+        core.t += iter_vt;
+
+        // The shared round tail: mean-scale + SGD update + policy
+        // feedback + recording, in exactly one place (engine/core.rs).
+        self.k = core.finish_fastest_k_round(
+            j,
+            self.n,
+            self.k,
+            &mut *self.policy,
+            &mut self.k_changes,
+        );
+        true
+    }
+
+    fn annotate(&mut self, run: &mut EngineRun) {
+        run.late_responses = self.late;
+        run.k_changes = std::mem::take(&mut self.k_changes);
     }
 }
 

@@ -16,6 +16,24 @@
 //!   runtime in `runtime` (behind the `pjrt` feature). Python never runs
 //!   at training time.
 //!
+//! ## Driver architecture
+//!
+//! All training drivers are thin adapters over one event-driven
+//! simulation core, [`engine`]: an [`engine::EngineCore`] owns the
+//! per-round mechanics (broadcast pricing, delay sampling, uplink
+//! transmit, ingress clocks, the SGD apply, metric recording — each in
+//! exactly one place), and an [`engine::GatherPolicy`] plugs in the
+//! gather discipline. [`master::run_fastest_k_comm`] runs
+//! [`engine::FastestKGather`] (the paper's sync round),
+//! [`async_sgd::run_async_comm`] runs [`engine::StalenessGather`]
+//! (Dutta et al.'s async comparator, with exact processor-sharing
+//! ingress via completion events), and
+//! [`exec::ThreadedCluster::run_with_comm`] feeds the same engine from
+//! real OS threads. Default-channel trajectories are bit-for-bit the
+//! pre-engine drivers' (asserted by
+//! `rust/tests/test_engine_equivalence.rs`); a new discipline is one
+//! more `GatherPolicy` impl, not a new driver.
+//!
 //! ## Communication model
 //!
 //! Every driver ships gradients through a [`comm::CommChannel`]. The
@@ -60,6 +78,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod exec;
 pub mod grad;
 pub mod linalg;
@@ -84,10 +103,14 @@ pub mod prelude {
     };
     pub use crate::comm::{
         Broadcast, CommChannel, CommStats, Compressor, Dense, DownlinkMode,
-        ErrorFeedback, IngressModel, LinkModel, QuantizeQsgd, RandK, TopK,
-        WireFormat,
+        ErrorFeedback, IngressDiscipline, IngressModel, LinkModel,
+        QuantizeQsgd, RandK, TopK, WireFormat,
     };
     pub use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    pub use crate::engine::{
+        EngineConfig, EngineCore, EngineRun, FastestKGather, GatherPolicy,
+        RngStreams, RoundEngine, StalenessGather,
+    };
     pub use crate::grad::{GradBackend, NativeBackend};
     pub use crate::master::{
         run_fastest_k, run_fastest_k_comm, FastestKRun, MasterConfig,

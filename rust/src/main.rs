@@ -3,6 +3,7 @@
 //! See `adasgd help` (or [`adasgd::cli::print_help`]) for the command map.
 
 use adasgd::cli::{print_help, Args};
+use adasgd::comm::IngressDiscipline;
 use adasgd::config::{
     CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
 };
@@ -170,10 +171,37 @@ fn cmd_train(args: &Args) -> i32 {
             args.get_parse("link-latency", 0.0f64).unwrap_or(0.0);
         cfg.comm.down_bandwidth =
             args.get_parse("down-bandwidth", 0.0f64).unwrap_or(0.0);
+        if let Some(list) = args.get("down-bandwidths") {
+            match list
+                .split(',')
+                .map(|t| t.trim().parse::<f64>())
+                .collect::<Result<Vec<f64>, _>>()
+            {
+                Ok(v) => cfg.comm.down_bandwidths = v,
+                Err(_) => {
+                    eprintln!(
+                        "config error: --down-bandwidths expects \
+                         comma-separated numbers, got '{list}'"
+                    );
+                    return 2;
+                }
+            }
+        }
         cfg.comm.down_latency =
             args.get_parse("down-latency", 0.0f64).unwrap_or(0.0);
         cfg.comm.ingress_bw =
             args.get_parse("ingress-bw", 0.0f64).unwrap_or(0.0);
+        cfg.comm.ingress = match args.get("ingress") {
+            None | Some("fifo") => IngressDiscipline::Fifo,
+            Some("ps") => IngressDiscipline::Ps,
+            Some(other) => {
+                eprintln!(
+                    "config error: --ingress must be fifo or ps, got \
+                     '{other}'"
+                );
+                return 2;
+            }
+        };
         cfg.policy = if args.has("async") {
             PolicySpec::Async
         } else if let Some(kstr) = args.get("k") {

@@ -12,13 +12,21 @@
 //! [`run_fastest_k`] uses the zero-cost dense channel and reproduces the
 //! paper's compute-only timing exactly; [`run_fastest_k_comm`] takes an
 //! explicit channel.
+//!
+//! Both are compatibility shims over the round engine: they build an
+//! [`engine::EngineCore`](crate::engine::EngineCore) with the historical
+//! sync rng streams and run the
+//! [`engine::FastestKGather`](crate::engine::FastestKGather) discipline,
+//! which preserves the pre-engine trajectories bit for bit (asserted by
+//! `rust/tests/test_engine_equivalence.rs`).
 
 use crate::comm::CommChannel;
+use crate::engine::{
+    EngineConfig, EngineCore, FastestKGather, RngStreams, RoundEngine,
+};
 use crate::grad::GradBackend;
-use crate::linalg::dot;
-use crate::metrics::{Recorder, Sample};
-use crate::policy::{IterationObs, KPolicy};
-use crate::rng::Pcg64;
+use crate::metrics::Recorder;
+use crate::policy::KPolicy;
 use crate::straggler::DelayModel;
 
 /// Loop configuration.
@@ -148,192 +156,35 @@ pub fn run_fastest_k_comm(
         channel.n()
     );
 
-    let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
-    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC044);
-    // Dedicated stream for the downlink encoder; the default dense
-    // broadcast draws nothing, so the delay stream is untouched.
-    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04D);
-    let bytes0 = channel.stats.bytes_sent;
-    let comm_t0 = channel.stats.comm_time;
-    let down0 = channel.stats.bytes_down;
-    let down_t0 = channel.stats.down_time;
-    let mut w = w0.to_vec();
-    // The workers' model view: what the downlink broadcast reconstructs
-    // each round (bitwise `w` on the default dense downlink).
-    let mut w_view = w0.to_vec();
-    let mut g = vec![0.0f32; d]; // ĝ_j
-    let mut g_prev = vec![0.0f32; d]; // ĝ_{j−1}
-    let mut partial = vec![0.0f32; d];
-    let mut decoded = vec![0.0f32; d];
-    let mut velocity: Option<Vec<f32>> = None;
-    // Batched-backend scratch (allocated lazily, and only on the batched
-    // aggregation path — shard-by-shard runs never pay the O(n·d) memory).
-    let mut all_buf: Option<Vec<f32>> = None;
-    let mut delay_buf = vec![0.0f64; n];
-    let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
-    // Accepted-arrival scratch for the shared-ingress round clock.
-    let mut arrival_buf: Vec<f64> = Vec::with_capacity(n);
-    let ingress = *channel.ingress();
-
-    let mut recorder =
-        Recorder::with_stride(policy.name(), cfg.record_stride);
-    let mut k_changes = Vec::new();
-    let mut k = policy.initial_k().min(n).max(1);
-    let mut t = 0.0f64;
-    let mut j = 0u64;
-
-    // Per-message upload pricing is data-independent, so the whole
-    // round's comm delays are known before any gradient is computed. On a
-    // zero-cost link the upload (and download) delay is exactly 0.0, and
-    // `x + 0.0` is bitwise identity for the positive compute delays, so
-    // no branch is needed to preserve the paper's compute-only
-    // trajectories.
-    let msg_bytes = channel.message_bytes(d);
-
-    // Initial point.
-    recorder.push_forced(Sample {
-        iteration: 0,
-        time: 0.0,
-        k,
-        error: eval_error(&w),
-        ..Default::default()
-    });
-
-    while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time) {
-        backend.on_iteration(j);
-        // (1) downlink: broadcast w_j; every worker computes against the
-        // decoded view and is charged its download before compute starts.
-        let down_bytes = channel.broadcast_model(&w, &mut w_view, &mut bcast_rng);
-        // (2) response times (download + compute + upload) + fastest-k
-        // selection. The free-downlink download delay is exactly 0.0, so
-        // appending it preserves the uplink-only sums bitwise.
-        for (i, slot) in delay_buf.iter_mut().enumerate() {
-            *slot = delays.sample(j, i, &mut rng)
-                + channel.link_upload_delay(i, msg_bytes)
-                + channel.download_delay(i, down_bytes);
-        }
-        let (x_k, _) = fastest_k_select(&delay_buf, k, &mut idx_buf);
-        // (2b) shared-ingress congestion: with finite master ingress the
-        // k accepted uploads serialize FIFO, so the round ends at the
-        // last accepted message's ingress finish, not the k-th arrival.
-        // The unlimited default skips the sort and keeps x_k bitwise.
-        let round_time = if ingress.is_unlimited() {
-            x_k
-        } else {
-            arrival_buf.clear();
-            arrival_buf.extend(idx_buf[..k].iter().map(|&i| delay_buf[i]));
-            ingress.round_completion(&mut arrival_buf, msg_bytes)
-        };
-        t += round_time;
-
-        // (3) aggregate the k fastest partial gradients — through the
-        // batched path when the backend has one and k is past the
-        // dispatch-cost crossover (~n/4, see GradBackend::all_grads),
-        // else shard by shard. Each accepted gradient passes through the
-        // channel (error feedback + compression + byte accounting).
-        g.iter_mut().for_each(|v| *v = 0.0);
-        let use_batched = backend.supports_all_grads() && 4 * k >= n;
-        // The n*d scratch is allocated only when the batched path is
-        // actually taken (hoisted behind the check — shard-by-shard runs
-        // used to pay the full O(n·d) allocation for nothing).
-        let mut batched = false;
-        if use_batched {
-            let buf = all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
-            batched = backend.all_grads(&w_view, buf);
-        }
-        if batched {
-            let buf =
-                all_buf.as_ref().expect("batched scratch allocated above");
-            for &worker in &idx_buf[..k] {
-                let row = &buf[worker * d..(worker + 1) * d];
-                channel.transmit(worker, row, &mut decoded, &mut comm_rng);
-                for (gv, pv) in g.iter_mut().zip(&decoded) {
-                    *gv += *pv;
-                }
-            }
-        } else {
-            for &worker in &idx_buf[..k] {
-                backend.partial_grad(worker, &w_view, &mut partial);
-                channel.transmit(worker, &partial, &mut decoded, &mut comm_rng);
-                for (gv, pv) in g.iter_mut().zip(&decoded) {
-                    *gv += *pv;
-                }
-            }
-        }
-        let inv_k = 1.0 / k as f32;
-        for gv in g.iter_mut() {
-            *gv *= inv_k;
-        }
-
-        // (4) SGD update (heavy-ball when momentum > 0; v reused across
-        // iterations, allocated lazily only if needed).
-        if cfg.momentum > 0.0 {
-            let v = velocity.get_or_insert_with(|| vec![0.0f32; d]);
-            for ((vv, wv), gv) in v.iter_mut().zip(w.iter_mut()).zip(&g) {
-                *vv = cfg.momentum * *vv + *gv;
-                *wv -= cfg.eta * *vv;
-            }
-        } else {
-            for (wv, gv) in w.iter_mut().zip(&g) {
-                *wv -= cfg.eta * *gv;
-            }
-        }
-
-        // (5) policy feedback.
-        let inner = if j == 0 { None } else { Some(dot(&g, &g_prev)) };
-        let obs = IterationObs {
-            iteration: j,
-            time: t,
-            k_used: k,
-            grad_inner_prev: inner,
-            grad_norm_sq: dot(&g, &g),
-        };
-        let k_next = policy.next_k(&obs).min(n).max(1);
-        if k_next != k {
-            k_changes.push((j, t, k_next));
-            k = k_next;
-        }
-        std::mem::swap(&mut g, &mut g_prev);
-
-        j += 1;
-        if j % cfg.record_stride == 0 {
-            recorder.push_forced(Sample {
-                iteration: j,
-                time: t,
-                k,
-                error: eval_error(&w),
-                bytes: channel.stats.bytes_sent - bytes0,
-                comm_time: channel.stats.comm_time - comm_t0,
-                bytes_down: channel.stats.bytes_down - down0,
-                down_time: channel.stats.down_time - down_t0,
-            });
-        }
-    }
-
-    // Always record the end state.
-    if j % cfg.record_stride != 0 {
-        recorder.push_forced(Sample {
-            iteration: j,
-            time: t,
-            k,
-            error: eval_error(&w),
-            bytes: channel.stats.bytes_sent - bytes0,
-            comm_time: channel.stats.comm_time - comm_t0,
-            bytes_down: channel.stats.bytes_down - down0,
-            down_time: channel.stats.down_time - down_t0,
-        });
-    }
-
+    let engine_cfg = EngineConfig {
+        eta: cfg.eta,
+        momentum: cfg.momentum,
+        max_steps: cfg.max_iterations,
+        max_time: cfg.max_time,
+        seed: cfg.seed,
+        record_stride: cfg.record_stride,
+    };
+    let core = EngineCore::new(
+        policy.name(),
+        channel,
+        delays,
+        eval_error,
+        w0,
+        engine_cfg,
+        RngStreams::sync(cfg.seed),
+    );
+    let mut gather = FastestKGather::new(backend, policy);
+    let run = RoundEngine::new(core).run(&mut gather);
     FastestKRun {
-        recorder,
-        w,
-        iterations: j,
-        total_time: t,
-        k_changes,
-        bytes_sent: channel.stats.bytes_sent - bytes0,
-        comm_time: channel.stats.comm_time - comm_t0,
-        bytes_down: channel.stats.bytes_down - down0,
-        down_time: channel.stats.down_time - down_t0,
+        recorder: run.recorder,
+        w: run.w,
+        iterations: run.steps,
+        total_time: run.total_time,
+        k_changes: run.k_changes,
+        bytes_sent: run.bytes_sent,
+        comm_time: run.comm_time,
+        bytes_down: run.bytes_down,
+        down_time: run.down_time,
     }
 }
 

@@ -587,3 +587,49 @@ fn prop_congested_round_dominates_independent_round() {
         Ok(())
     });
 }
+
+/// FIFO store-and-forward and processor sharing are both work-conserving
+/// over equal-sized messages, so the completion of a round's *last*
+/// message — the sync drivers' round clock — is discipline-invariant
+/// (PR 3). PS differs only in per-message completions, which the async
+/// engine path observes.
+#[test]
+fn prop_ps_and_fifo_agree_on_the_round_makespan() {
+    use adasgd::comm::IngressDiscipline;
+    let gen = Pair(
+        VecF64 { min_len: 1, max_len: 40, lo: 0.01, hi: 50.0 },
+        Pair(
+            UsizeRange { lo: 1, hi: 4096 },    // message bytes
+            UsizeRange { lo: 1, hi: 100_000 }, // capacity (scaled below)
+        ),
+    );
+    runner().check("ps_fifo_makespan", &gen, |(arrivals, (bytes, cap))| {
+        let bytes = *bytes as u64;
+        let capacity = *cap as f64 / 10.0;
+        let mut a = arrivals.clone();
+        let fifo =
+            IngressModel::new(capacity).round_completion(&mut a, bytes);
+        let mut a = arrivals.clone();
+        let ps = IngressModel::with_discipline(
+            capacity,
+            IngressDiscipline::Ps,
+        )
+        .round_completion(&mut a, bytes);
+        let scale = fifo.abs().max(1.0);
+        if (fifo - ps).abs() > 1e-9 * scale {
+            return Err(format!(
+                "work conservation violated: fifo {fifo} vs ps {ps} for \
+                 {arrivals:?}"
+            ));
+        }
+        // PS must also dominate the independent round time.
+        let independent =
+            arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if ps < independent - 1e-9 * scale {
+            return Err(format!(
+                "ps finished before the last arrival: {ps} < {independent}"
+            ));
+        }
+        Ok(())
+    });
+}

@@ -228,6 +228,56 @@ fn train_with_priced_downlink_and_ingress_reports_downlink_bytes() {
 }
 
 #[test]
+fn train_accepts_ps_ingress_and_per_worker_downlinks() {
+    let text = run_ok(&[
+        "train",
+        "--n",
+        "4",
+        "--m",
+        "200",
+        "--d",
+        "10",
+        "--k",
+        "2",
+        "--eta",
+        "0.002",
+        "--max-iterations",
+        "50",
+        "--max-time",
+        "0",
+        "--ingress-bw",
+        "500",
+        "--ingress",
+        "ps",
+        "--down-bandwidths",
+        "100, 200, 0, 50",
+        "--quiet",
+    ]);
+    assert!(text.contains("steps"), "{text}");
+    // Heterogeneous finite downlinks charge download time.
+    assert!(text.contains("bytes down"), "{text}");
+}
+
+#[test]
+fn bad_ingress_discipline_and_bandwidth_lists_fail_cleanly() {
+    for args in [
+        vec!["train", "--n", "4", "--m", "200", "--d", "10", "--ingress", "lifo"],
+        vec![
+            "train", "--n", "4", "--m", "200", "--d", "10",
+            "--down-bandwidths", "1,two,3",
+        ],
+        // Wrong entry count is a validation error against n.
+        vec![
+            "train", "--n", "4", "--m", "200", "--d", "10",
+            "--down-bandwidths", "1,2",
+        ],
+    ] {
+        let out = adasgd().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} should fail");
+    }
+}
+
+#[test]
 fn unknown_downlink_scheme_fails_cleanly() {
     let out = adasgd()
         .args([

@@ -1,0 +1,676 @@
+//! Driver ↔ engine equivalence: the PR-3 refactor moved all three
+//! training drivers onto `engine::RoundEngine`. This file keeps the
+//! *pre-refactor* sync and async run loops alive as executable
+//! specifications (transplanted verbatim below, minus the result-struct
+//! plumbing) and asserts the engine-backed drivers reproduce them —
+//! bit for bit on the default dense channel, and sample-for-sample
+//! (still exact: the engine performs the identical operations in the
+//! identical order) under non-trivial comm configurations.
+
+use adasgd::async_sgd::{run_async_comm, AsyncConfig};
+use adasgd::comm::{
+    Broadcast, CommChannel, Dense, DownlinkMode, IngressModel, LinkModel,
+    QuantizeQsgd, TopK,
+};
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::{GradBackend, NativeBackend};
+use adasgd::master::{fastest_k_select, run_fastest_k_comm, MasterConfig};
+use adasgd::metrics::{Recorder, Sample};
+use adasgd::model::LinRegProblem;
+use adasgd::policy::{
+    AdaptivePflug, FixedK, IterationObs, KPolicy, PflugParams,
+};
+use adasgd::rng::Pcg64;
+use adasgd::sim::EventQueue;
+use adasgd::straggler::DelayModel;
+
+/// What both the reference loops and the engine shims are compared on.
+struct RefRun {
+    w: Vec<f32>,
+    total_time: f64,
+    steps: u64,
+    samples: Vec<Sample>,
+    k_changes: Vec<(u64, f64, usize)>,
+}
+
+/// The pre-engine synchronous fastest-k loop, verbatim.
+fn reference_fastest_k(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    policy: &mut dyn KPolicy,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &MasterConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> RefRun {
+    let n = backend.n_shards();
+    let d = backend.dim();
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0xFA57);
+    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC044);
+    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04D);
+    let bytes0 = channel.stats.bytes_sent;
+    let comm_t0 = channel.stats.comm_time;
+    let down0 = channel.stats.bytes_down;
+    let down_t0 = channel.stats.down_time;
+    let mut w = w0.to_vec();
+    let mut w_view = w0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut g_prev = vec![0.0f32; d];
+    let mut partial = vec![0.0f32; d];
+    let mut decoded = vec![0.0f32; d];
+    let mut velocity: Option<Vec<f32>> = None;
+    let mut all_buf: Option<Vec<f32>> = None;
+    let mut delay_buf = vec![0.0f64; n];
+    let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
+    let mut arrival_buf: Vec<f64> = Vec::with_capacity(n);
+    let ingress = *channel.ingress();
+
+    let mut recorder =
+        Recorder::with_stride(policy.name(), cfg.record_stride);
+    let mut k_changes = Vec::new();
+    let mut k = policy.initial_k().min(n).max(1);
+    let mut t = 0.0f64;
+    let mut j = 0u64;
+    let msg_bytes = channel.message_bytes(d);
+
+    recorder.push_forced(Sample {
+        iteration: 0,
+        time: 0.0,
+        k,
+        error: eval_error(&w),
+        ..Default::default()
+    });
+
+    while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time)
+    {
+        backend.on_iteration(j);
+        let down_bytes =
+            channel.broadcast_model(&w, &mut w_view, &mut bcast_rng);
+        for (i, slot) in delay_buf.iter_mut().enumerate() {
+            *slot = delays.sample(j, i, &mut rng)
+                + channel.link_upload_delay(i, msg_bytes)
+                + channel.download_delay(i, down_bytes);
+        }
+        let (x_k, _) = fastest_k_select(&delay_buf, k, &mut idx_buf);
+        let round_time = if ingress.is_unlimited() {
+            x_k
+        } else {
+            arrival_buf.clear();
+            arrival_buf.extend(idx_buf[..k].iter().map(|&i| delay_buf[i]));
+            ingress.round_completion(&mut arrival_buf, msg_bytes)
+        };
+        t += round_time;
+
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let use_batched = backend.supports_all_grads() && 4 * k >= n;
+        let mut batched = false;
+        if use_batched {
+            let buf = all_buf.get_or_insert_with(|| vec![0.0f32; n * d]);
+            batched = backend.all_grads(&w_view, buf);
+        }
+        if batched {
+            let buf =
+                all_buf.as_ref().expect("batched scratch allocated above");
+            for &worker in &idx_buf[..k] {
+                let row = &buf[worker * d..(worker + 1) * d];
+                channel.transmit(worker, row, &mut decoded, &mut comm_rng);
+                for (gv, pv) in g.iter_mut().zip(&decoded) {
+                    *gv += *pv;
+                }
+            }
+        } else {
+            for &worker in &idx_buf[..k] {
+                backend.partial_grad(worker, &w_view, &mut partial);
+                channel.transmit(
+                    worker,
+                    &partial,
+                    &mut decoded,
+                    &mut comm_rng,
+                );
+                for (gv, pv) in g.iter_mut().zip(&decoded) {
+                    *gv += *pv;
+                }
+            }
+        }
+        let inv_k = 1.0 / k as f32;
+        for gv in g.iter_mut() {
+            *gv *= inv_k;
+        }
+
+        if cfg.momentum > 0.0 {
+            let v = velocity.get_or_insert_with(|| vec![0.0f32; d]);
+            for ((vv, wv), gv) in v.iter_mut().zip(w.iter_mut()).zip(&g) {
+                *vv = cfg.momentum * *vv + *gv;
+                *wv -= cfg.eta * *vv;
+            }
+        } else {
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= cfg.eta * *gv;
+            }
+        }
+
+        let inner = if j == 0 {
+            None
+        } else {
+            Some(adasgd::linalg::dot(&g, &g_prev))
+        };
+        let obs = IterationObs {
+            iteration: j,
+            time: t,
+            k_used: k,
+            grad_inner_prev: inner,
+            grad_norm_sq: adasgd::linalg::dot(&g, &g),
+        };
+        let k_next = policy.next_k(&obs).min(n).max(1);
+        if k_next != k {
+            k_changes.push((j, t, k_next));
+            k = k_next;
+        }
+        std::mem::swap(&mut g, &mut g_prev);
+
+        j += 1;
+        if j % cfg.record_stride == 0 {
+            recorder.push_forced(Sample {
+                iteration: j,
+                time: t,
+                k,
+                error: eval_error(&w),
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
+            });
+        }
+    }
+
+    if j % cfg.record_stride != 0 {
+        recorder.push_forced(Sample {
+            iteration: j,
+            time: t,
+            k,
+            error: eval_error(&w),
+            bytes: channel.stats.bytes_sent - bytes0,
+            comm_time: channel.stats.comm_time - comm_t0,
+            bytes_down: channel.stats.bytes_down - down0,
+            down_time: channel.stats.down_time - down_t0,
+        });
+    }
+
+    RefRun {
+        w,
+        total_time: t,
+        steps: j,
+        samples: recorder.samples().to_vec(),
+        k_changes,
+    }
+}
+
+/// The pre-engine asynchronous loop, verbatim (FIFO ingress chain).
+fn reference_async(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &AsyncConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> RefRun {
+    let n = backend.n_shards();
+    let d = backend.dim();
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0xA57C);
+    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC045);
+    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB04E);
+    let bytes0 = channel.stats.bytes_sent;
+    let comm_t0 = channel.stats.comm_time;
+    let down0 = channel.stats.bytes_down;
+    let down_t0 = channel.stats.down_time;
+    let mut w = w0.to_vec();
+    let mut g_raw = vec![0.0f32; d];
+    let mut g = vec![0.0f32; d];
+    let ingress = *channel.ingress();
+    let mut ingress_free = f64::NEG_INFINITY;
+    let mut clock = 0.0f64;
+    let msg_bytes = channel.message_bytes(d);
+
+    let mut snapshots: Vec<Vec<f32>> = vec![w.clone(); n];
+    let mut read_version = vec![0u64; n];
+    let mut version = 0u64;
+
+    let mut queue: EventQueue<usize> = EventQueue::new();
+    for i in 0..n {
+        let dt = delays.sample(0, i, &mut rng)
+            + channel.link_upload_delay(i, msg_bytes);
+        queue.schedule_in(dt, i);
+    }
+
+    let mut recorder = Recorder::with_stride("async", cfg.record_stride);
+    recorder.push_forced(Sample {
+        iteration: 0,
+        time: 0.0,
+        k: 1,
+        error: eval_error(&w),
+        ..Default::default()
+    });
+
+    let mut updates = 0u64;
+    while updates < cfg.max_updates {
+        let ev = match queue.pop() {
+            Some(e) => e,
+            None => break,
+        };
+        let t_apply = ingress.serve_at(ev.time, ingress_free, msg_bytes);
+        ingress_free = t_apply;
+        clock = t_apply;
+        if cfg.max_time > 0.0 && t_apply > cfg.max_time {
+            break;
+        }
+        let i = ev.payload;
+
+        backend.partial_grad(i, &snapshots[i], &mut g_raw);
+        channel.transmit(i, &g_raw, &mut g, &mut comm_rng);
+        let staleness = version - read_version[i];
+        let step = if cfg.staleness_damping {
+            cfg.eta / (1.0 + staleness as f32)
+        } else {
+            cfg.eta
+        };
+        for (wv, gv) in w.iter_mut().zip(&g) {
+            *wv -= step * *gv;
+        }
+        version += 1;
+        updates += 1;
+        if !w[0].is_finite() {
+            recorder.push_forced(Sample {
+                iteration: updates,
+                time: clock,
+                k: 1,
+                error: f64::INFINITY,
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
+            });
+            break;
+        }
+
+        let replay = match channel.downlink_mode() {
+            DownlinkMode::Full => 1,
+            DownlinkMode::Delta => staleness + 1,
+        };
+        let (_, down_delay) = channel.push_model(
+            i,
+            &w,
+            &mut snapshots[i],
+            replay,
+            &mut bcast_rng,
+        );
+        read_version[i] = version;
+        let dt = delays.sample(updates, i, &mut rng)
+            + channel.link_upload_delay(i, msg_bytes)
+            + down_delay;
+        queue.schedule_at(t_apply + dt, i);
+
+        if updates % cfg.record_stride == 0 {
+            recorder.push_forced(Sample {
+                iteration: updates,
+                time: clock,
+                k: 1,
+                error: eval_error(&w),
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
+            });
+        }
+    }
+
+    let total_time = clock;
+    if w[0].is_finite() && updates % cfg.record_stride != 0 {
+        recorder.push_forced(Sample {
+            iteration: updates,
+            time: total_time,
+            k: 1,
+            error: eval_error(&w),
+            bytes: channel.stats.bytes_sent - bytes0,
+            comm_time: channel.stats.comm_time - comm_t0,
+            bytes_down: channel.stats.bytes_down - down0,
+            down_time: channel.stats.down_time - down_t0,
+        });
+    }
+
+    RefRun {
+        w,
+        total_time,
+        steps: updates,
+        samples: recorder.samples().to_vec(),
+        k_changes: Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixtures.
+// ---------------------------------------------------------------------
+
+fn setup(seed: u64) -> (NativeBackend, LinRegProblem) {
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 200, d: 10, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    (NativeBackend::new(Shards::partition(&ds, 10)), problem)
+}
+
+type ChannelFactory = Box<dyn Fn() -> CommChannel>;
+
+/// The channel configurations both drivers are compared under. Index 0
+/// is the default dense channel (the bit-for-bit contract); the rest
+/// exercise compression, error feedback, finite links, delta downlink,
+/// and finite FIFO ingress together.
+fn channels() -> Vec<(&'static str, ChannelFactory)> {
+    vec![
+        ("dense-default", Box::new(|| CommChannel::dense(10))),
+        (
+            "topk-ef-uplink",
+            Box::new(|| {
+                CommChannel::new(
+                    Box::new(TopK::new(0.3)),
+                    LinkModel::uniform(10, 400.0, 0.01),
+                    true,
+                )
+            }),
+        ),
+        (
+            "qsgd-delta-ingress",
+            Box::new(|| {
+                CommChannel::new(
+                    Box::new(QuantizeQsgd::new(4)),
+                    LinkModel::uniform(10, 800.0, 0.0),
+                    true,
+                )
+                .with_broadcast(Broadcast::new(
+                    Box::new(TopK::new(0.5)),
+                    LinkModel::uniform(10, 400.0, 0.0),
+                    DownlinkMode::Delta,
+                ))
+                .with_ingress(IngressModel::new(500.0))
+            }),
+        ),
+        (
+            "dense-hetero-downlink",
+            Box::new(|| {
+                CommChannel::new(
+                    Box::new(Dense::new()),
+                    LinkModel::zero_cost(10),
+                    false,
+                )
+                .with_broadcast(Broadcast::new(
+                    Box::new(Dense::new()),
+                    LinkModel::per_worker(
+                        (0..10).map(|i| 100.0 * (i + 1) as f64).collect(),
+                        vec![0.0; 10],
+                    ),
+                    DownlinkMode::Full,
+                ))
+            }),
+        ),
+    ]
+}
+
+fn assert_runs_equal(tag: &str, reference: &RefRun, engine: &RefRun) {
+    assert_eq!(reference.steps, engine.steps, "{tag}: steps");
+    assert_eq!(
+        reference.w, engine.w,
+        "{tag}: final model must be bitwise identical"
+    );
+    assert_eq!(
+        reference.total_time.to_bits(),
+        engine.total_time.to_bits(),
+        "{tag}: clock must be bitwise identical ({} vs {})",
+        reference.total_time,
+        engine.total_time
+    );
+    assert_eq!(
+        reference.k_changes, engine.k_changes,
+        "{tag}: k-switch log"
+    );
+    assert_eq!(
+        reference.samples.len(),
+        engine.samples.len(),
+        "{tag}: sample count"
+    );
+    for (a, b) in reference.samples.iter().zip(&engine.samples) {
+        assert_eq!(a, b, "{tag}: recorded sample mismatch");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sync equivalence.
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_reproduces_the_pre_refactor_sync_driver() {
+    for seed in [0u64, 1, 7, 23] {
+        for (name, make_channel) in channels() {
+            let cfg = MasterConfig {
+                eta: 0.002,
+                max_iterations: 150,
+                seed,
+                record_stride: 20,
+                ..Default::default()
+            };
+            let w0 = vec![0.0f32; 10];
+            let reference = {
+                let (mut backend, problem) = setup(seed);
+                let mut policy = FixedK::new(4);
+                let mut channel = make_channel();
+                reference_fastest_k(
+                    &mut backend,
+                    &delays(),
+                    &mut policy,
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                )
+            };
+            let engine = {
+                let (mut backend, problem) = setup(seed);
+                let mut policy = FixedK::new(4);
+                let mut channel = make_channel();
+                let run = run_fastest_k_comm(
+                    &mut backend,
+                    &delays(),
+                    &mut policy,
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                );
+                RefRun {
+                    w: run.w,
+                    total_time: run.total_time,
+                    steps: run.iterations,
+                    samples: run.recorder.samples().to_vec(),
+                    k_changes: run.k_changes,
+                }
+            };
+            assert_runs_equal(
+                &format!("sync/{name}/seed{seed}"),
+                &reference,
+                &engine,
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_reproduces_the_adaptive_sync_driver_with_time_budget() {
+    // The adaptive policy exercises the k-change path; the time budget
+    // exercises the stop condition.
+    for seed in [3u64, 11] {
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: u64::MAX / 2,
+            max_time: 40.0,
+            seed,
+            record_stride: 10,
+            ..Default::default()
+        };
+        let params = PflugParams {
+            k0: 2,
+            step: 3,
+            thresh: 5,
+            burnin: 10,
+            k_max: 10,
+        };
+        let w0 = vec![0.0f32; 10];
+        let reference = {
+            let (mut backend, problem) = setup(seed);
+            let mut policy = AdaptivePflug::new(10, params);
+            let mut channel = CommChannel::dense(10);
+            reference_fastest_k(
+                &mut backend,
+                &delays(),
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            )
+        };
+        let engine = {
+            let (mut backend, problem) = setup(seed);
+            let mut policy = AdaptivePflug::new(10, params);
+            let mut channel = CommChannel::dense(10);
+            let run = run_fastest_k_comm(
+                &mut backend,
+                &delays(),
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+            );
+            RefRun {
+                w: run.w,
+                total_time: run.total_time,
+                steps: run.iterations,
+                samples: run.recorder.samples().to_vec(),
+                k_changes: run.k_changes,
+            }
+        };
+        assert_runs_equal(
+            &format!("sync/adaptive/seed{seed}"),
+            &reference,
+            &engine,
+        );
+        assert!(
+            !reference.k_changes.is_empty(),
+            "fixture must exercise k switches to be meaningful"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Async equivalence.
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_reproduces_the_pre_refactor_async_driver() {
+    for seed in [0u64, 5, 13] {
+        for (name, make_channel) in channels() {
+            let cfg = AsyncConfig {
+                eta: 0.0005,
+                max_updates: 800,
+                seed,
+                record_stride: 100,
+                ..Default::default()
+            };
+            let w0 = vec![0.0f32; 10];
+            let reference = {
+                let (mut backend, problem) = setup(seed);
+                let mut channel = make_channel();
+                reference_async(
+                    &mut backend,
+                    &delays(),
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                )
+            };
+            let engine = {
+                let (mut backend, problem) = setup(seed);
+                let mut channel = make_channel();
+                let run = run_async_comm(
+                    &mut backend,
+                    &delays(),
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                );
+                RefRun {
+                    w: run.w,
+                    total_time: run.total_time,
+                    steps: run.updates,
+                    samples: run.recorder.samples().to_vec(),
+                    k_changes: Vec::new(),
+                }
+            };
+            assert_runs_equal(
+                &format!("async/{name}/seed{seed}"),
+                &reference,
+                &engine,
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_reproduces_the_async_driver_under_a_time_budget() {
+    let cfg = AsyncConfig {
+        eta: 0.0002,
+        max_updates: u64::MAX / 2,
+        max_time: 25.0,
+        seed: 9,
+        record_stride: 50,
+        ..Default::default()
+    };
+    let w0 = vec![0.0f32; 10];
+    let reference = {
+        let (mut backend, problem) = setup(9);
+        let mut channel = CommChannel::dense(10);
+        reference_async(
+            &mut backend,
+            &delays(),
+            &mut channel,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        )
+    };
+    let engine = {
+        let (mut backend, problem) = setup(9);
+        let mut channel = CommChannel::dense(10);
+        let run = run_async_comm(
+            &mut backend,
+            &delays(),
+            &mut channel,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        RefRun {
+            w: run.w,
+            total_time: run.total_time,
+            steps: run.updates,
+            samples: run.recorder.samples().to_vec(),
+            k_changes: Vec::new(),
+        }
+    };
+    assert_runs_equal("async/time-budget", &reference, &engine);
+}
+
+fn delays() -> adasgd::straggler::ExponentialDelays {
+    adasgd::straggler::ExponentialDelays::new(1.0)
+}
