@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench ablations`
 
 use adasgd::bench_harness::section;
-use adasgd::coding::{run_coded_gd, CodedConfig, FrcScheme};
+use adasgd::coding::{run_coded_gd, CodedConfig, CodingScheme, FrcScheme};
 use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
 use adasgd::grad::NativeBackend;
 use adasgd::master::{run_fastest_k, MasterConfig};
@@ -175,7 +175,7 @@ fn main() {
     // noisy gradient from k cheap responses.
     for r in [1usize, 2, 5] {
         let shards = Shards::partition(&ds, 50);
-        let scheme = FrcScheme::new(50, r);
+        let scheme = FrcScheme::new(50, r).expect("r divides 50");
         let mut backend = NativeBackend::new(shards);
         let cfg = CodedConfig {
             eta: 5e-4,

@@ -43,6 +43,7 @@ fn base(seed: u64) -> ExperimentConfig {
         policy: PolicySpec::Fixed { k: 40 },
         workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
         comm: CommSpec::default(),
+        coding: None,
     }
 }
 

@@ -56,7 +56,7 @@ const VALUED_FLAGS: &[&str] = &[
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
     "link-latency", "downlink", "down-levels", "down-frac",
     "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
-    "ingress",
+    "ingress", "coding", "replication",
 ];
 
 impl Args {
@@ -148,6 +148,12 @@ TRAIN FLAGS (no --config):
   --n N --k K | --k0 K0 --step S --thresh T --burnin B --k-max M
   --eta F --max-time T --max-iterations J --m M --d D --lambda L
   --async             run the asynchronous baseline instead of fastest-k
+  --coding SCHEME     gradient coding: frc | cyclic | bernoulli
+                      (redundant shards, exact-gradient rounds; the k
+                      policy adapts the wait target and each round waits
+                      for the first decodable responder set)
+  --replication R     shards per worker for --coding (default 2;
+                      frc needs R | N, cyclic/bernoulli take any R <= N)
 
 COMM FLAGS (train; also in [comm] of a TOML config):
   --comm SCHEME       uplink: dense | qsgd | topk | randk  (default dense)

@@ -1,0 +1,79 @@
+//! Engine-backed coded-gather driver.
+
+use super::scheme::CodingScheme;
+use crate::comm::CommChannel;
+use crate::engine::{
+    CodedGather, EngineConfig, EngineCore, RngStreams, RoundEngine,
+};
+use crate::grad::GradBackend;
+use crate::master::{FastestKRun, MasterConfig};
+use crate::policy::KPolicy;
+use crate::straggler::DelayModel;
+
+/// Run coded gradient descent through the round engine, shipping every
+/// contributing message through `channel`.
+///
+/// This is the full-stack coded path: model broadcast is priced on the
+/// downlink, each worker's response time is `r ×` compute plus upload
+/// plus download, accepted uploads contend on the shared master ingress,
+/// contributing messages pass through uplink compression + error
+/// feedback, and `policy` adapts the *wait target* — the engine extends
+/// past it along the arrival order to the first decodable responder set
+/// (see [`CodedGather`]). Delay draws come from the historical coded rng
+/// stream ([`RngStreams::coded`]), so coded trajectories are paired
+/// across schemes, replication factors, and channels at a fixed seed.
+#[allow(clippy::too_many_arguments)]
+pub fn run_coded_comm(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    scheme: &dyn CodingScheme,
+    policy: &mut dyn KPolicy,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &MasterConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> FastestKRun {
+    let n = backend.n_shards();
+    assert_eq!(
+        scheme.n(),
+        n,
+        "coding scheme built for {} workers, backend has {n}",
+        scheme.n()
+    );
+    assert_eq!(
+        channel.n(),
+        n,
+        "comm channel sized for {} workers, backend has {n}",
+        channel.n()
+    );
+    let engine_cfg = EngineConfig {
+        eta: cfg.eta,
+        momentum: cfg.momentum,
+        max_steps: cfg.max_iterations,
+        max_time: cfg.max_time,
+        seed: cfg.seed,
+        record_stride: cfg.record_stride,
+    };
+    let core = EngineCore::new(
+        format!("coded-{}", scheme.name()),
+        channel,
+        delays,
+        eval_error,
+        w0,
+        engine_cfg,
+        RngStreams::coded(cfg.seed),
+    );
+    let mut gather = CodedGather::new(backend, scheme, policy);
+    let run = RoundEngine::new(core).run(&mut gather);
+    FastestKRun {
+        recorder: run.recorder,
+        w: run.w,
+        iterations: run.steps,
+        total_time: run.total_time,
+        k_changes: run.k_changes,
+        bytes_sent: run.bytes_sent,
+        comm_time: run.comm_time,
+        bytes_down: run.bytes_down,
+        down_time: run.down_time,
+    }
+}

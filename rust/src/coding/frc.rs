@@ -1,14 +1,20 @@
-//! Fractional repetition gradient coding.
+//! Fractional repetition gradient coding (grouped placement), plus the
+//! legacy coded-GD entry point — now a compatibility shim over the round
+//! engine.
 
+use super::driver::run_coded_comm;
+use super::scheme::CodingScheme;
+use crate::comm::CommChannel;
 use crate::data::Shards;
 use crate::grad::GradBackend;
 use crate::linalg::Matrix;
-use crate::master::fastest_k_select;
-use crate::metrics::{Recorder, Sample};
-use crate::rng::Pcg64;
+use crate::master::MasterConfig;
+use crate::metrics::Recorder;
+use crate::policy::FixedK;
 use crate::straggler::DelayModel;
 
-/// A fractional-repetition assignment: `n` workers, replication `r`.
+/// A fractional-repetition assignment: `n` workers, replication `r`,
+/// `n/r` groups of `r` workers sharing the same `r` shards.
 #[derive(Debug, Clone)]
 pub struct FrcScheme {
     n: usize,
@@ -18,10 +24,23 @@ pub struct FrcScheme {
 }
 
 impl FrcScheme {
-    /// Build the grouped assignment. Requires `r | n`; shards are the
-    /// n data shards (one per worker in the uncoded scheme).
-    pub fn new(n: usize, r: usize) -> Self {
-        assert!(r >= 1 && r <= n && n % r == 0, "need r | n (n={n}, r={r})");
+    /// Build the grouped assignment; shards are the n data shards (one
+    /// per worker in the uncoded scheme).
+    ///
+    /// Requires `r | n`, surfaced as an `Err` so user-supplied configs
+    /// fail at validation time with an actionable message instead of
+    /// panicking mid-run.
+    pub fn new(n: usize, r: usize) -> Result<Self, String> {
+        if n == 0 {
+            return Err("frc coding needs n >= 1".into());
+        }
+        if !(1..=n).contains(&r) || n % r != 0 {
+            return Err(format!(
+                "frc replication r={r} must divide n={n} (groups of r \
+                 workers share r shards); pick r from the divisors of n, \
+                 or scheme = \"cyclic\" which allows any r <= n"
+            ));
+        }
         let groups = n / r;
         let mut assign = vec![Vec::new(); n];
         for g in 0..groups {
@@ -31,46 +50,35 @@ impl FrcScheme {
                 assign[g * r + member] = shard_ids.clone();
             }
         }
-        Self { n, r, assign }
-    }
-
-    /// Workers n.
-    pub fn n(&self) -> usize {
-        self.n
-    }
-
-    /// Replication factor r.
-    pub fn r(&self) -> usize {
-        self.r
-    }
-
-    /// Shards worker `w` computes.
-    pub fn assignment(&self, w: usize) -> &[usize] {
-        &self.assign[w]
-    }
-
-    /// How many responses guarantee exact recovery: `n − r + 1`.
-    pub fn recovery_threshold(&self) -> usize {
-        self.n - self.r + 1
-    }
-
-    /// Greedy decode: given the set of responding workers, pick one
-    /// representative per group. Returns `None` if some group has no
-    /// responder (cannot happen with ≥ threshold responses).
-    pub fn decode(&self, responders: &[usize]) -> Option<Vec<usize>> {
-        let groups = self.n / self.r;
-        let mut pick: Vec<Option<usize>> = vec![None; groups];
-        for &w in responders {
-            let g = w / self.r;
-            if pick[g].is_none() {
-                pick[g] = Some(w);
-            }
-        }
-        pick.into_iter().collect()
+        Ok(Self { n, r, assign })
     }
 }
 
-/// Coded-GD run configuration.
+impl CodingScheme for FrcScheme {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn r(&self) -> usize {
+        self.r
+    }
+
+    fn assignment(&self, worker: usize) -> &[usize] {
+        &self.assign[worker]
+    }
+
+    /// How many responses guarantee exact recovery: `n − r + 1` (the
+    /// `r − 1` missing workers cannot empty any group of `r`).
+    fn recovery_threshold(&self) -> usize {
+        self.n - self.r + 1
+    }
+
+    fn name(&self) -> String {
+        format!("frc(r={})", self.r)
+    }
+}
+
+/// Coded-GD run configuration (legacy shim interface).
 #[derive(Debug, Clone)]
 pub struct CodedConfig {
     /// Step size η.
@@ -83,11 +91,12 @@ pub struct CodedConfig {
     pub seed: u64,
     /// Record stride.
     pub record_stride: u64,
-    /// Replication factor r.
+    /// Replication factor r (informational — the scheme argument is
+    /// authoritative).
     pub r: usize,
 }
 
-/// Result of a coded run.
+/// Result of a coded run (legacy shim interface).
 pub struct CodedRun {
     /// Error-vs-time record.
     pub recorder: Recorder,
@@ -99,98 +108,60 @@ pub struct CodedRun {
     pub total_time: f64,
 }
 
-/// Run exact-recovery coded gradient descent: each iteration waits for the
-/// fastest `n − r + 1` workers, decodes one representative per group, and
-/// applies the *exact* full gradient (no stochastic noise).
+/// Run exact-recovery coded gradient descent on the zero-cost dense
+/// channel: each iteration waits for the fastest
+/// [`recovery_threshold`](CodingScheme::recovery_threshold) workers,
+/// decodes a shard cover, and applies the *exact* full gradient (no
+/// stochastic noise). A worker's compute delay is scaled by `r` — it
+/// computes r partial gradients, so redundancy costs compute.
 ///
-/// A worker's response time is its delay draw scaled by `r` (it computes
-/// r partial gradients — redundancy costs compute).
+/// Compatibility shim over the round engine: builds a
+/// [`FixedK`](crate::policy::FixedK) wait target at the recovery
+/// threshold and delegates to [`run_coded_comm`] (the engine path with
+/// full communication pricing). `rust/tests/test_coded_equivalence.rs`
+/// keeps the straight-line coded loop as an executable specification of
+/// this composition.
 pub fn run_coded_gd(
     backend: &mut dyn GradBackend,
     delays: &dyn DelayModel,
-    scheme: &FrcScheme,
+    scheme: &dyn CodingScheme,
     w0: &[f32],
     cfg: &CodedConfig,
     eval_error: &mut dyn FnMut(&[f32]) -> f64,
 ) -> CodedRun {
-    let n = scheme.n();
-    assert_eq!(backend.n_shards(), n, "scheme/backend shard mismatch");
-    let d = backend.dim();
-    let threshold = scheme.recovery_threshold();
-
-    let mut rng = Pcg64::seed_stream(cfg.seed, 0xC0DE);
-    let mut w = w0.to_vec();
-    let mut g = vec![0.0f32; d];
-    let mut partial = vec![0.0f32; d];
-    let mut delay_buf = vec![0.0f64; n];
-    let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
-
-    let mut recorder = Recorder::with_stride(
-        format!("coded-frc(r={})", scheme.r()),
-        cfg.record_stride,
+    let mut channel = CommChannel::dense(backend.n_shards());
+    let mut policy = FixedK::new(scheme.recovery_threshold());
+    let mcfg = MasterConfig {
+        eta: cfg.eta,
+        momentum: 0.0,
+        max_iterations: cfg.max_iterations,
+        max_time: cfg.max_time,
+        seed: cfg.seed,
+        record_stride: cfg.record_stride,
+    };
+    let run = run_coded_comm(
+        backend,
+        delays,
+        scheme,
+        &mut policy,
+        &mut channel,
+        w0,
+        &mcfg,
+        eval_error,
     );
-    recorder.push_forced(Sample {
-        iteration: 0,
-        time: 0.0,
-        k: threshold,
-        error: eval_error(&w),
-        ..Default::default()
-    });
-
-    let mut t = 0.0f64;
-    let mut j = 0u64;
-    while j < cfg.max_iterations && (cfg.max_time <= 0.0 || t < cfg.max_time) {
-        backend.on_iteration(j);
-        for (i, slot) in delay_buf.iter_mut().enumerate() {
-            // r shards per worker → r× compute per response.
-            *slot = delays.sample(j, i, &mut rng) * scheme.r() as f64;
-        }
-        let (x_thr, _) = fastest_k_select(&delay_buf, threshold, &mut idx_buf);
-        t += x_thr;
-
-        let reps = scheme
-            .decode(&idx_buf[..threshold])
-            .expect("threshold responses always decode");
-        // Exact full gradient: average each group's r shard gradients.
-        g.iter_mut().for_each(|v| *v = 0.0);
-        for rep in reps {
-            for &shard in scheme.assignment(rep) {
-                backend.partial_grad(shard, &w, &mut partial);
-                for (gv, pv) in g.iter_mut().zip(&partial) {
-                    *gv += *pv;
-                }
-            }
-        }
-        let inv_n = 1.0 / n as f32;
-        for (wv, gv) in w.iter_mut().zip(g.iter()) {
-            *wv -= cfg.eta * *gv * inv_n;
-        }
-
-        j += 1;
-        if j % cfg.record_stride == 0 {
-            recorder.push_forced(Sample {
-                iteration: j,
-                time: t,
-                k: threshold,
-                error: eval_error(&w),
-                ..Default::default()
-            });
-        }
+    CodedRun {
+        recorder: run.recorder,
+        w: run.w,
+        iterations: run.iterations,
+        total_time: run.total_time,
     }
-    if j % cfg.record_stride != 0 {
-        recorder.push_forced(Sample {
-            iteration: j,
-            time: t,
-            k: threshold,
-            error: eval_error(&w),
-            ..Default::default()
-        });
-    }
-    CodedRun { recorder, w, iterations: j, total_time: t }
 }
 
 /// Convenience: shards + scheme consistency check.
-pub fn check_scheme(shards: &Shards, scheme: &FrcScheme) -> Result<(), String> {
+pub fn check_scheme(
+    shards: &Shards,
+    scheme: &dyn CodingScheme,
+) -> Result<(), String> {
     if shards.n() != scheme.n() {
         return Err(format!(
             "scheme built for n={} but shards have n={}",
@@ -216,7 +187,7 @@ mod tests {
 
     #[test]
     fn assignment_covers_all_shards_r_times() {
-        let s = FrcScheme::new(12, 3);
+        let s = FrcScheme::new(12, 3).unwrap();
         let mut count = vec![0usize; 12];
         for w in 0..12 {
             assert_eq!(s.assignment(w).len(), 3);
@@ -230,18 +201,25 @@ mod tests {
 
     #[test]
     fn decode_from_threshold_always_succeeds() {
-        let s = FrcScheme::new(12, 3);
+        let s = FrcScheme::new(12, 3).unwrap();
         // Worst case: the r−1 = 2 missing workers are in the same group.
-        let responders: Vec<usize> = (0..12).filter(|&w| w != 0 && w != 1).collect();
-        let reps = s.decode(&responders).expect("decode");
-        assert_eq!(reps.len(), 4);
-        // Group 0 must be represented by worker 2.
-        assert_eq!(reps[0], 2);
+        let responders: Vec<usize> =
+            (0..12).filter(|&w| w != 0 && w != 1).collect();
+        let parts = s.decode(&responders).expect("decode");
+        assert_eq!(parts.len(), 4);
+        // Group 0 must be represented by worker 2, contributing all
+        // three of the group's shards.
+        assert_eq!(parts[0].worker, 2);
+        assert_eq!(parts[0].shards, vec![0, 1, 2]);
+        let mut covered: Vec<usize> =
+            parts.iter().flat_map(|p| p.shards.clone()).collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..12).collect::<Vec<_>>());
     }
 
     #[test]
     fn decode_fails_below_threshold_when_group_lost() {
-        let s = FrcScheme::new(6, 2);
+        let s = FrcScheme::new(6, 2).unwrap();
         // Both members of group 0 missing.
         assert!(s.decode(&[2, 3, 4, 5]).is_none());
     }
@@ -254,7 +232,7 @@ mod tests {
             7,
         );
         let shards = Shards::partition(&ds, 6);
-        let scheme = FrcScheme::new(6, 2);
+        let scheme = FrcScheme::new(6, 2).unwrap();
         check_scheme(&shards, &scheme).unwrap();
         let mut backend = NativeBackend::new(shards);
         let problem = LinRegProblem::new(&ds);
@@ -292,7 +270,7 @@ mod tests {
             8,
         );
         let shards = Shards::partition(&ds, 10);
-        let scheme = FrcScheme::new(10, 2);
+        let scheme = FrcScheme::new(10, 2).unwrap();
         let mut backend = NativeBackend::new(shards);
         let problem = LinRegProblem::new(&ds);
         let delays = ExponentialDelays::new(1.0);
@@ -329,7 +307,7 @@ mod tests {
         let delays = ExponentialDelays::new(1.0);
         let time_of = |r: usize| {
             let shards = Shards::partition(&ds, 12);
-            let scheme = FrcScheme::new(12, r);
+            let scheme = FrcScheme::new(12, r).unwrap();
             let mut backend = NativeBackend::new(shards);
             let cfg = CodedConfig {
                 eta: 1e-3,
@@ -357,8 +335,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "need r | n")]
-    fn rejects_bad_replication() {
-        FrcScheme::new(10, 3);
+    fn rejects_bad_replication_as_err_not_panic() {
+        let err = FrcScheme::new(10, 3).unwrap_err();
+        assert!(err.contains("divide"), "{err}");
+        assert!(err.contains("cyclic"), "should point at the fix: {err}");
+        assert!(FrcScheme::new(10, 0).is_err());
+        assert!(FrcScheme::new(10, 11).is_err());
     }
 }

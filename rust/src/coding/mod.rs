@@ -1,18 +1,37 @@
 //! Gradient coding — the redundancy-based straggler-mitigation family the
-//! paper positions itself against (§I.A, refs [11]–[27]).
+//! paper positions itself against (§I.A, refs [11]–[27]) — as a
+//! first-class engine discipline.
 //!
-//! Implemented scheme: **fractional repetition coding** (Tandon et al.,
-//! ICML 2017). With replication factor `r`, the n workers are split into
-//! `n/r` groups; every worker in a group holds the *same* r shards and
-//! sends a fixed linear combination. The master recovers the **exact**
-//! full gradient from any `n − r + 1` responses — i.e. it tolerates
-//! `r − 1` stragglers per iteration at an `r×` compute/storage overhead.
+//! The layer splits placement from execution:
 //!
-//! The bench `ablations`/`coded_vs_adaptive` compares this against
-//! fastest-k SGD: coded GD pays `X_(n−r+1)` per iteration and gets the
-//! exact gradient; fastest-k pays `X_(k)` and accepts gradient noise —
-//! exactly the trade-off the paper's introduction sketches.
+//! * [`CodingScheme`] describes the *placement*: which `r` shards each
+//!   worker holds, the guaranteed recovery threshold, and a greedy
+//!   cover-based `decode(responders) → [CoverPart]` that names which
+//!   responders contribute which shards (every shard exactly once ⇒ the
+//!   combined update is the **exact** full gradient). Implementations:
+//!   [`FrcScheme`] (grouped fractional repetition, Tandon et al. ICML
+//!   2017; needs `r | n`), [`CyclicRepetition`] (cyclic windows, any
+//!   `r ≤ n`), and [`BernoulliScheme`] (seeded random r-regular
+//!   placement, probabilistic decode below the threshold).
+//! * [`CodedGather`](crate::engine::CodedGather) is the *execution*: a
+//!   [`GatherPolicy`](crate::engine::GatherPolicy) that waits for a
+//!   policy-adapted target, then extends along the arrival order to the
+//!   first decodable responder set — and thereby inherits the engine's
+//!   broadcast pricing, uplink compression + error feedback, shared
+//!   ingress clocks, and [`KPolicy`](crate::policy::KPolicy) adaptation.
+//!
+//! [`run_coded_comm`] is the full-stack driver; [`run_coded_gd`] is the
+//! legacy compute-only entry point, now a shim over it (fixed wait
+//! target at the recovery threshold, dense zero-cost channel). The
+//! trade-off the bench `benches/fig_coding.rs` sweeps: coded GD pays
+//! `r ×` compute and waits `X_(n−r+1)` for the exact gradient;
+//! fastest-k pays `X_(k)` and accepts gradient noise — §I.A's framing,
+//! now on one clock with communication priced.
 
+mod driver;
 mod frc;
+mod scheme;
 
-pub use frc::{run_coded_gd, CodedConfig, CodedRun, FrcScheme};
+pub use driver::run_coded_comm;
+pub use frc::{check_scheme, run_coded_gd, CodedConfig, CodedRun, FrcScheme};
+pub use scheme::{BernoulliScheme, CodingScheme, CoverPart, CyclicRepetition};

@@ -1,0 +1,401 @@
+//! The [`CodingScheme`] abstraction: redundant shard placement plus a
+//! cover-based decoder.
+//!
+//! A scheme assigns every worker `r` of the `n` data shards; a coded
+//! response carries the worker's *combined* gradient over (a subset of)
+//! its shards. The master decodes a responder set into a [`CoverPart`]
+//! list — which workers contribute, and which of their shards — such
+//! that every shard is covered **exactly once**, making the combined
+//! update the exact full gradient.
+//!
+//! Three placements:
+//!
+//! * [`FrcScheme`](super::FrcScheme) — grouped fractional repetition
+//!   (Tandon et al., ICML 2017): `n/r` groups of `r` workers sharing the
+//!   same `r` shards. Requires `r | n`.
+//! * [`CyclicRepetition`] — worker `w` holds the cyclic window
+//!   `{w, w+1, …, w+r−1} (mod n)`. Works for any `r ≤ n` and decodes
+//!   from every `n − r + 1` responders.
+//! * [`BernoulliScheme`] — a seeded random `r`-regular assignment (each
+//!   worker holds `r` distinct shards, each shard is held by exactly `r`
+//!   workers). The *guarantee* is the same `n − r + 1` threshold (at
+//!   most `r − 1` absentees cannot silence a shard's `r` holders), but
+//!   which smaller responder sets decode is a property of the random
+//!   draw — the probabilistic decode the gradient-coding literature
+//!   studies (Egger, Kas Hanna & Bitar 2023).
+//!
+//! Decoding is greedy shard cover in responder order (prefix-stable:
+//! extending the responder set never changes the parts already chosen),
+//! which is what lets the engine's
+//! [`CodedGather`](crate::engine::CodedGather) grow an undecodable set
+//! one arrival at a time until it decodes.
+
+use crate::rng::{Pcg64, Rng};
+
+/// One contributing worker in a decoded shard cover: the worker and the
+/// subset of its assigned shards whose gradients the master uses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoverPart {
+    /// The responding worker whose message the master decodes.
+    pub worker: usize,
+    /// The shards this worker contributes, ascending and disjoint from
+    /// every other part's shards.
+    pub shards: Vec<usize>,
+}
+
+/// A redundant shard placement with exact-recovery decoding.
+///
+/// Invariants every implementation must uphold (property-tested in
+/// `rust/tests/proptests.rs`):
+///
+/// * [`assignment`](CodingScheme::assignment) returns `r` distinct shard
+///   ids in ascending order, and every shard id in `0..n` is assigned to
+///   at least one worker — so the full responder set always decodes.
+/// * Any responder set of size ≥
+///   [`recovery_threshold`](CodingScheme::recovery_threshold) decodes.
+/// * Decoding is monotone: adding responders never breaks decodability.
+pub trait CodingScheme {
+    /// Workers (= shards) n.
+    fn n(&self) -> usize;
+
+    /// Replication factor r: shards per worker, and the compute
+    /// multiplier a coded worker pays per round.
+    fn r(&self) -> usize;
+
+    /// The shards worker `w` computes, ascending.
+    fn assignment(&self, worker: usize) -> &[usize];
+
+    /// The smallest responder count that *guarantees* decoding.
+    fn recovery_threshold(&self) -> usize;
+
+    /// Display name for labels/benches, e.g. `frc(r=2)`.
+    fn name(&self) -> String;
+
+    /// Greedy shard cover in responder order: each responder contributes
+    /// its not-yet-covered shards; succeeds once every shard is covered
+    /// exactly once. Returns `None` if the responder set leaves a shard
+    /// uncovered. Prefix-stable — the parts chosen for a responder
+    /// prefix never change when the set is extended.
+    fn decode(&self, responders: &[usize]) -> Option<Vec<CoverPart>> {
+        let n = self.n();
+        let mut covered = vec![false; n];
+        let mut remaining = n;
+        let mut parts: Vec<CoverPart> = Vec::new();
+        for &w in responders {
+            let shards: Vec<usize> = self
+                .assignment(w)
+                .iter()
+                .copied()
+                .filter(|&s| !covered[s])
+                .collect();
+            if shards.is_empty() {
+                continue;
+            }
+            for &s in &shards {
+                covered[s] = true;
+            }
+            remaining -= shards.len();
+            parts.push(CoverPart { worker: w, shards });
+            if remaining == 0 {
+                return Some(parts);
+            }
+        }
+        None
+    }
+}
+
+/// Cyclic repetition: worker `w` holds the window
+/// `{w, w+1, …, w+r−1} (mod n)`.
+///
+/// No divisibility constraint — this is the placement to reach for when
+/// `r ∤ n` rules out [`FrcScheme`](super::FrcScheme). Any shard `s` is
+/// held by the `r` workers `{s−r+1, …, s} (mod n)`, so at most `r − 1`
+/// missing workers can never silence a shard: every `(n−r+1)`-subset
+/// decodes.
+#[derive(Debug, Clone)]
+pub struct CyclicRepetition {
+    n: usize,
+    r: usize,
+    assign: Vec<Vec<usize>>,
+}
+
+impl CyclicRepetition {
+    /// Build the cyclic assignment. Requires `1 ≤ r ≤ n`.
+    pub fn new(n: usize, r: usize) -> Result<Self, String> {
+        if n == 0 {
+            return Err("cyclic coding needs n >= 1".into());
+        }
+        if !(1..=n).contains(&r) {
+            return Err(format!(
+                "cyclic replication r={r} must be in 1..=n (n={n})"
+            ));
+        }
+        let assign = (0..n)
+            .map(|w| {
+                let mut shards: Vec<usize> =
+                    (0..r).map(|j| (w + j) % n).collect();
+                shards.sort_unstable();
+                shards
+            })
+            .collect();
+        Ok(Self { n, r, assign })
+    }
+}
+
+impl CodingScheme for CyclicRepetition {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn r(&self) -> usize {
+        self.r
+    }
+
+    fn assignment(&self, worker: usize) -> &[usize] {
+        &self.assign[worker]
+    }
+
+    fn recovery_threshold(&self) -> usize {
+        self.n - self.r + 1
+    }
+
+    fn name(&self) -> String {
+        format!("cyclic(r={})", self.r)
+    }
+}
+
+/// Seeded random `r`-regular assignment ("Bernoulli" placement).
+///
+/// Each worker holds `r` distinct shards and each shard is held by
+/// exactly `r` workers — built from `r` random permutations (one shard
+/// per worker per round) with a duplicate-repair pass. Regularity keeps
+/// the worst-case guarantee at `n − r + 1` responders, while the
+/// decodability of *smaller* responder sets is a property of the random
+/// draw — the probabilistic decode regime.
+///
+/// The construction is a pure function of `(n, r, seed)`; for `r ≤ n/2`
+/// the repair pass provably always finds a swap partner, and for larger
+/// `r` the builder retries with fresh permutations and, as a last
+/// resort, uses a randomly relabelled cyclic layout — still r-regular,
+/// duplicate-free, and seed-sensitive.
+#[derive(Debug, Clone)]
+pub struct BernoulliScheme {
+    n: usize,
+    r: usize,
+    assign: Vec<Vec<usize>>,
+}
+
+impl BernoulliScheme {
+    /// Build a random `r`-regular assignment from `seed`. Requires
+    /// `1 ≤ r ≤ n`.
+    pub fn new(n: usize, r: usize, seed: u64) -> Result<Self, String> {
+        if n == 0 {
+            return Err("bernoulli coding needs n >= 1".into());
+        }
+        if !(1..=n).contains(&r) {
+            return Err(format!(
+                "bernoulli replication r={r} must be in 1..=n (n={n})"
+            ));
+        }
+        let mut rng = Pcg64::seed_stream(seed, 0xA551);
+        let mut assign = None;
+        // Repair can only fail for r > n/2; a fresh permutation draw
+        // almost always clears it, so a handful of retries suffice.
+        for _attempt in 0..8 {
+            assign = Self::random_regular(n, r, &mut rng);
+            if assign.is_some() {
+                break;
+            }
+        }
+        let mut assign = assign.unwrap_or_else(|| {
+            // Last resort: the cyclic layout relabelled by a random
+            // shard permutation σ — worker w holds σ of its window, so
+            // the code stays r-regular and duplicate-free while the
+            // placement still varies with the seed.
+            let mut sigma: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut sigma);
+            (0..n)
+                .map(|w| (0..r).map(|j| sigma[(w + j) % n]).collect())
+                .collect()
+        });
+        for shards in &mut assign {
+            shards.sort_unstable();
+        }
+        Ok(Self { n, r, assign })
+    }
+
+    /// `r` rounds of random permutations; round `j` hands worker `w` the
+    /// shard `perm[w]`. A within-worker duplicate is repaired by swapping
+    /// with a partner `w2` such that neither side re-duplicates; a
+    /// counting argument gives at least `n + 1 − 2r` candidates, so for
+    /// `r ≤ n/2` repair always succeeds. Returns `None` if a pass finds
+    /// no partner.
+    fn random_regular(
+        n: usize,
+        r: usize,
+        rng: &mut Pcg64,
+    ) -> Option<Vec<Vec<usize>>> {
+        let mut assign: Vec<Vec<usize>> = vec![Vec::with_capacity(r); n];
+        for _round in 0..r {
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            for w in 0..n {
+                if !assign[w].contains(&perm[w]) {
+                    continue;
+                }
+                let partner = (0..n).find(|&w2| {
+                    w2 != w
+                        && !assign[w2].contains(&perm[w])
+                        && !assign[w].contains(&perm[w2])
+                })?;
+                perm.swap(w, partner);
+            }
+            for (w, &shard) in perm.iter().enumerate() {
+                assign[w].push(shard);
+            }
+        }
+        Some(assign)
+    }
+}
+
+impl CodingScheme for BernoulliScheme {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn r(&self) -> usize {
+        self.r
+    }
+
+    fn assignment(&self, worker: usize) -> &[usize] {
+        &self.assign[worker]
+    }
+
+    fn recovery_threshold(&self) -> usize {
+        self.n - self.r + 1
+    }
+
+    fn name(&self) -> String {
+        format!("bernoulli(r={})", self.r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::FrcScheme;
+
+    fn assert_regular(scheme: &dyn CodingScheme) {
+        let (n, r) = (scheme.n(), scheme.r());
+        let mut count = vec![0usize; n];
+        for w in 0..n {
+            let a = scheme.assignment(w);
+            assert_eq!(a.len(), r, "worker {w} holds {a:?}");
+            let mut sorted = a.to_vec();
+            sorted.dedup();
+            assert_eq!(sorted.len(), r, "worker {w} duplicates: {a:?}");
+            assert!(
+                a.windows(2).all(|p| p[0] < p[1]),
+                "worker {w} assignment not ascending: {a:?}"
+            );
+            for &s in a {
+                count[s] += 1;
+            }
+        }
+        assert!(
+            count.iter().all(|&c| c == r),
+            "{}: not r-regular: {count:?}",
+            scheme.name()
+        );
+    }
+
+    #[test]
+    fn cyclic_windows_wrap_and_are_regular() {
+        let s = CyclicRepetition::new(5, 2).unwrap();
+        assert_eq!(s.assignment(4), &[0, 4]);
+        assert_eq!(s.assignment(0), &[0, 1]);
+        assert_eq!(s.recovery_threshold(), 4);
+        assert_regular(&s);
+    }
+
+    #[test]
+    fn cyclic_allows_r_not_dividing_n() {
+        let s = CyclicRepetition::new(10, 3).unwrap();
+        assert_regular(&s);
+        assert!(FrcScheme::new(10, 3).is_err(), "frc must reject r ∤ n");
+    }
+
+    #[test]
+    fn cyclic_rejects_out_of_range_r() {
+        assert!(CyclicRepetition::new(5, 0).is_err());
+        assert!(CyclicRepetition::new(5, 6).is_err());
+    }
+
+    // (Exhaustive (n−r+1)-subset decodability for cyclic codes lives in
+    // rust/tests/proptests.rs, which enumerates every n ≤ 10 and r.)
+
+    #[test]
+    fn bernoulli_is_regular_deterministic_and_seed_sensitive() {
+        for (n, r) in [(10, 2), (12, 4), (7, 3), (6, 5), (5, 5)] {
+            let s = BernoulliScheme::new(n, r, 42).unwrap();
+            assert_regular(&s);
+            assert_eq!(s.recovery_threshold(), n - r + 1);
+        }
+        let a = BernoulliScheme::new(12, 3, 1).unwrap();
+        let b = BernoulliScheme::new(12, 3, 1).unwrap();
+        for w in 0..12 {
+            assert_eq!(a.assignment(w), b.assignment(w));
+        }
+        let c = BernoulliScheme::new(12, 3, 2).unwrap();
+        let differs =
+            (0..12).any(|w| a.assignment(w) != c.assignment(w));
+        assert!(differs, "different seeds should draw different layouts");
+    }
+
+    #[test]
+    fn bernoulli_rejects_out_of_range_r() {
+        assert!(BernoulliScheme::new(8, 0, 0).is_err());
+        assert!(BernoulliScheme::new(8, 9, 0).is_err());
+    }
+
+    #[test]
+    fn decode_is_prefix_stable_under_extension() {
+        let s = CyclicRepetition::new(9, 3).unwrap();
+        let responders = [4usize, 0, 7, 2, 5, 8, 1];
+        let full = s.decode(&responders).expect("covers everything");
+        // Any successful decode of a prefix must be a prefix of the
+        // extended decode (the engine relies on this to grow the set).
+        for take in 1..responders.len() {
+            if let Some(prefix) = s.decode(&responders[..take]) {
+                assert_eq!(prefix, full, "greedy decode must early-return");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_skips_redundant_responders() {
+        // FRC group mates after the first contribute nothing and must
+        // not appear as parts.
+        let s = FrcScheme::new(6, 2).unwrap();
+        let parts = s.decode(&[0, 1, 2, 4]).expect("full cover");
+        let workers: Vec<usize> = parts.iter().map(|p| p.worker).collect();
+        assert_eq!(workers, vec![0, 2, 4], "worker 1 duplicates group 0");
+    }
+
+    #[test]
+    fn schemes_are_object_safe() {
+        let schemes: Vec<Box<dyn CodingScheme>> = vec![
+            Box::new(FrcScheme::new(12, 3).unwrap()),
+            Box::new(CyclicRepetition::new(12, 5).unwrap()),
+            Box::new(BernoulliScheme::new(12, 3, 9).unwrap()),
+        ];
+        for s in &schemes {
+            let all: Vec<usize> = (0..s.n()).collect();
+            let parts = s.decode(&all).expect("full set always decodes");
+            let mut covered: Vec<usize> =
+                parts.iter().flat_map(|p| p.shards.clone()).collect();
+            covered.sort_unstable();
+            assert_eq!(covered, all, "{}", s.name());
+        }
+    }
+}

@@ -16,6 +16,6 @@ pub mod toml;
 mod schema;
 
 pub use schema::{
-    CommSpec, CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec,
-    WorkloadSpec,
+    CodingSchemeSpec, CodingSpec, CommSpec, CompressorSpec, DelaySpec,
+    ExperimentConfig, PolicySpec, WorkloadSpec,
 };

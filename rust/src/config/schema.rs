@@ -271,6 +271,71 @@ impl CommSpec {
     }
 }
 
+/// Which gradient-coding placement assigns redundant shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodingSchemeSpec {
+    /// Grouped fractional repetition (requires `r | n`).
+    Frc,
+    /// Cyclic windows (any `r <= n`).
+    Cyclic,
+    /// Seeded random r-regular placement (probabilistic decode below
+    /// the threshold).
+    Bernoulli,
+}
+
+impl std::fmt::Display for CodingSchemeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CodingSchemeSpec::Frc => "frc",
+            CodingSchemeSpec::Cyclic => "cyclic",
+            CodingSchemeSpec::Bernoulli => "bernoulli",
+        })
+    }
+}
+
+/// Gradient-coding configuration: placement family + replication factor.
+/// When present, the experiment runs the engine's
+/// [`CodedGather`](crate::engine::CodedGather) discipline — the k policy
+/// adapts the *wait target*, and each round applies the exact full
+/// gradient decoded from the first decodable responder set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodingSpec {
+    /// Placement family.
+    pub scheme: CodingSchemeSpec,
+    /// Replication factor r (shards per worker, compute multiplier).
+    pub r: usize,
+}
+
+impl CodingSpec {
+    /// Instantiate the scheme for `n` workers (the Bernoulli placement
+    /// derives its assignment from `seed`).
+    pub fn build(
+        &self,
+        n: usize,
+        seed: u64,
+    ) -> Result<Box<dyn crate::coding::CodingScheme>, String> {
+        use crate::coding::{BernoulliScheme, CyclicRepetition, FrcScheme};
+        let scheme: Box<dyn crate::coding::CodingScheme> = match self.scheme
+        {
+            CodingSchemeSpec::Frc => Box::new(FrcScheme::new(n, self.r)?),
+            CodingSchemeSpec::Cyclic => {
+                Box::new(CyclicRepetition::new(n, self.r)?)
+            }
+            CodingSchemeSpec::Bernoulli => {
+                Box::new(BernoulliScheme::new(n, self.r, seed)?)
+            }
+        };
+        Ok(scheme)
+    }
+
+    /// Check the placement against the worker count — user-supplied
+    /// `r ∤ n` (frc) or out-of-range r fail here with an actionable
+    /// message instead of panicking mid-run.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        self.build(n, 0).map(|_| ()).map_err(|e| format!("coding: {e}"))
+    }
+}
+
 /// Which k policy to run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PolicySpec {
@@ -327,6 +392,8 @@ pub struct ExperimentConfig {
     pub workload: WorkloadSpec,
     /// Uplink communication model.
     pub comm: CommSpec,
+    /// Gradient coding (None = the uncoded fastest-k / async paths).
+    pub coding: Option<CodingSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -344,6 +411,7 @@ impl Default for ExperimentConfig {
             policy: PolicySpec::Adaptive(PflugParams::default()),
             workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
             comm: CommSpec::default(),
+            coding: None,
         }
     }
 }
@@ -523,6 +591,41 @@ impl ExperimentConfig {
             }
         }
 
+        if let Some(sec) = doc.section("coding") {
+            // Wrong-typed values are errors, not silent defaults — a
+            // coded run must never execute a scheme/r the user did not
+            // choose.
+            let scheme = match sec.get("scheme") {
+                None => CodingSchemeSpec::Frc,
+                Some(v) => match v.as_str() {
+                    Some("frc") => CodingSchemeSpec::Frc,
+                    Some("cyclic") => CodingSchemeSpec::Cyclic,
+                    Some("bernoulli") => CodingSchemeSpec::Bernoulli,
+                    Some(other) => {
+                        return Err(format!(
+                            "unknown coding.scheme '{other}' (frc | \
+                             cyclic | bernoulli)"
+                        ))
+                    }
+                    None => {
+                        return Err("coding.scheme must be a string \
+                                    (frc | cyclic | bernoulli)"
+                            .into())
+                    }
+                },
+            };
+            let r = match sec.get("r") {
+                None => 2,
+                Some(v) => {
+                    v.as_int().ok_or("coding.r must be an integer")?
+                }
+            };
+            if r < 1 {
+                return Err(format!("coding.r={r} must be >= 1"));
+            }
+            cfg.coding = Some(CodingSpec { scheme, r: r as usize });
+        }
+
         if let Some(sec) = doc.section("workload") {
             let kind = sec
                 .get("kind")
@@ -586,6 +689,16 @@ impl ExperimentConfig {
             }
         }
         self.comm.validate(self.n)?;
+        if let Some(coding) = &self.coding {
+            if self.policy == PolicySpec::Async {
+                return Err(
+                    "coded gather runs in rounds; [policy] kind = \
+                     \"async\" cannot be combined with [coding]"
+                        .into(),
+                );
+            }
+            coding.validate(self.n)?;
+        }
         Ok(())
     }
 }
@@ -881,6 +994,81 @@ down_latency = 0.5
             "[comm]\ndown_bandwidths = 7\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn coding_section_parses_and_builds() {
+        use crate::coding::CodingScheme;
+        let text = r#"
+n = 10
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+[policy]
+kind = "fixed"
+k = 9
+[coding]
+scheme = "cyclic"
+r = 3
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let coding = cfg.coding.clone().expect("coding parsed");
+        assert_eq!(coding.scheme, CodingSchemeSpec::Cyclic);
+        assert_eq!(coding.r, 3);
+        let scheme = coding.build(cfg.n, cfg.seed).unwrap();
+        assert_eq!(scheme.n(), 10);
+        assert_eq!(scheme.recovery_threshold(), 8);
+        assert_eq!(format!("{}", coding.scheme), "cyclic");
+        // Scheme defaults to frc; r defaults to 2. (The TOML-subset
+        // parser only materialises a section once it has a key, so the
+        // minimal coding section is `r = 2`.)
+        let dflt = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [coding]\nr = 2\n",
+        )
+        .unwrap();
+        assert_eq!(
+            dflt.coding,
+            Some(CodingSpec { scheme: CodingSchemeSpec::Frc, r: 2 })
+        );
+    }
+
+    #[test]
+    fn coding_frc_with_r_not_dividing_n_errs_at_parse_time() {
+        // The r ∤ n case used to panic inside FrcScheme::new; it must
+        // surface as an actionable config error instead.
+        let text = "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\n\
+                    d = 10\n[coding]\nscheme = \"frc\"\nr = 3\n";
+        let err = ExperimentConfig::from_toml(text).unwrap_err();
+        assert!(err.contains("divide"), "{err}");
+        assert!(err.contains("cyclic"), "should point at the fix: {err}");
+        // Out-of-range r and junk schemes are rejected too.
+        assert!(ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [coding]\nr = 11\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml("[coding]\nr = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[coding]\nscheme = \"mds\"\n"
+        )
+        .is_err());
+        // Wrong-typed values must error, not silently default.
+        assert!(
+            ExperimentConfig::from_toml("[coding]\nscheme = 3\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml("[coding]\nr = 2.5\n").is_err()
+        );
+    }
+
+    #[test]
+    fn coding_cannot_combine_with_the_async_policy() {
+        let text = "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\n\
+                    d = 10\n[policy]\nkind = \"async\"\n[coding]\nr = 2\n";
+        let err = ExperimentConfig::from_toml(text).unwrap_err();
+        assert!(err.contains("async"), "{err}");
     }
 
     #[test]

@@ -107,6 +107,7 @@ fn fig2_base(seed: u64) -> ExperimentConfig {
         policy: PolicySpec::Fixed { k: 10 },
         workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
         comm: Default::default(),
+        coding: None,
     }
 }
 

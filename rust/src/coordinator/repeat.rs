@@ -102,6 +102,7 @@ mod tests {
             policy: PolicySpec::Fixed { k: 5 },
             workload: WorkloadSpec::LinReg { m: 200, d: 10 },
             comm: Default::default(),
+            coding: None,
         }
     }
 

@@ -1,6 +1,7 @@
 //! Config-driven experiment execution.
 
 use crate::async_sgd::{run_async_comm, AsyncConfig};
+use crate::coding::run_coded_comm;
 use crate::config::{ExperimentConfig, PolicySpec, WorkloadSpec};
 use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
 use crate::grad::NativeBackend;
@@ -55,6 +56,50 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
     let delays = cfg.delays.build()?;
     let mut channel = cfg.comm.build(cfg.n);
     let w0 = vec![0.0f32; d];
+
+    // Gradient coding: the k policy adapts the wait target of the
+    // engine's CodedGather discipline (validate() already rejected the
+    // async policy for coded runs).
+    if let Some(coding) = &cfg.coding {
+        let scheme = coding.build(cfg.n, cfg.seed)?;
+        let mut policy: Box<dyn KPolicy> = match &cfg.policy {
+            PolicySpec::Fixed { k } => Box::new(FixedK::new(*k)),
+            PolicySpec::Adaptive(p) => {
+                Box::new(AdaptivePflug::new(cfg.n, *p))
+            }
+            PolicySpec::Async => unreachable!("validate() rejects this"),
+        };
+        let mcfg = MasterConfig {
+            eta: cfg.eta as f32,
+            momentum: 0.0,
+            max_iterations: cfg.max_iterations,
+            max_time: cfg.max_time,
+            seed: cfg.seed,
+            record_stride: cfg.record_stride,
+        };
+        let run = run_coded_comm(
+            &mut backend,
+            delays.as_ref(),
+            scheme.as_ref(),
+            policy.as_mut(),
+            &mut channel,
+            &w0,
+            &mcfg,
+            &mut |w| problem.error(w),
+        );
+        let mut recorder = run.recorder;
+        recorder.label = cfg.label.clone();
+        return Ok(ExperimentOutput {
+            recorder,
+            steps: run.iterations,
+            total_time: run.total_time,
+            k_changes: run.k_changes,
+            bytes_sent: run.bytes_sent,
+            comm_time: run.comm_time,
+            bytes_down: run.bytes_down,
+            down_time: run.down_time,
+        });
+    }
 
     match &cfg.policy {
         PolicySpec::Async => {
@@ -147,6 +192,7 @@ mod tests {
             policy: PolicySpec::Fixed { k: 5 },
             workload: WorkloadSpec::LinReg { m: 200, d: 10 },
             comm: Default::default(),
+            coding: None,
         }
     }
 
@@ -239,6 +285,48 @@ mod tests {
         slow.comm.ingress_bw = 100.0;
         let congested = run_experiment(&slow).unwrap();
         assert!(congested.total_time > dense.total_time);
+    }
+
+    #[test]
+    fn coded_experiment_runs_and_meters_comm() {
+        use crate::config::{CodingSchemeSpec, CodingSpec};
+        let mut cfg = base();
+        cfg.policy = PolicySpec::Fixed { k: 9 }; // the recovery threshold
+        cfg.coding =
+            Some(CodingSpec { scheme: CodingSchemeSpec::Frc, r: 2 });
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.steps, 300);
+        assert!(
+            out.recorder.last().unwrap().error
+                < out.recorder.samples()[0].error
+        );
+        // Exact-gradient rounds still meter the contributing uploads:
+        // n/r = 5 messages × 56 bytes × 300 rounds on the dense channel.
+        assert_eq!(out.bytes_sent, 300 * 5 * 56);
+        // Cyclic and bernoulli placements run through the same path.
+        for scheme in [CodingSchemeSpec::Cyclic, CodingSchemeSpec::Bernoulli]
+        {
+            let mut c = base();
+            c.policy = PolicySpec::Fixed { k: 8 };
+            c.coding = Some(CodingSpec { scheme, r: 3 });
+            let out = run_experiment(&c).unwrap();
+            assert_eq!(out.steps, 300, "{scheme}");
+            assert!(out.bytes_sent > 0, "{scheme}");
+        }
+    }
+
+    #[test]
+    fn coded_experiment_rejects_async_and_bad_r() {
+        use crate::config::{CodingSchemeSpec, CodingSpec};
+        let mut cfg = base();
+        cfg.policy = PolicySpec::Async;
+        cfg.coding =
+            Some(CodingSpec { scheme: CodingSchemeSpec::Frc, r: 2 });
+        assert!(run_experiment(&cfg).unwrap_err().contains("async"));
+        let mut cfg = base();
+        cfg.coding =
+            Some(CodingSpec { scheme: CodingSchemeSpec::Frc, r: 3 });
+        assert!(run_experiment(&cfg).unwrap_err().contains("divide"));
     }
 
     #[test]

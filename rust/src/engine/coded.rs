@@ -1,0 +1,422 @@
+//! The coded-gradients gather discipline.
+//!
+//! [`CodedGather`] runs a [`CodingScheme`] placement through the round
+//! engine: each round it prices the model broadcast, samples every
+//! worker's response time with the compute term scaled by the
+//! replication factor `r`, waits for the policy's target count, and —
+//! when that set is not yet decodable — extends along the arrival order
+//! to the **first decodable responder set**. The decoded cover names
+//! which responders contribute which shards (each shard exactly once),
+//! so the applied update is the *exact* full gradient; each contributing
+//! worker ships one message (the sum of its covered shards' gradients)
+//! through the channel, inheriting uplink compression, error feedback,
+//! byte metering, and the shared-ingress round clock for free.
+//!
+//! Degenerate identities (asserted bit-for-bit by
+//! `rust/tests/test_coded_equivalence.rs`):
+//!
+//! * With a fixed wait target at the recovery threshold, the round is
+//!   the classic coded-GD loop — decode always succeeds at the target,
+//!   the clock is `r · X_(n−r+1)` on the free channel.
+//! * With `r = 1` every worker holds exactly its own shard, the only
+//!   decodable set is all n, and the discipline is
+//!   [`FastestKGather`](super::FastestKGather) at `k = n` — including
+//!   on comm-priced channels.
+
+use super::core::EngineCore;
+use super::gather::GatherPolicy;
+use crate::coding::CodingScheme;
+use crate::engine::EngineRun;
+use crate::grad::GradBackend;
+use crate::master::fastest_k_select;
+use crate::policy::KPolicy;
+
+/// The coded gather: wait for the policy's target, extend to the first
+/// decodable responder set, combine the covered shards' gradients into
+/// the exact full gradient.
+pub struct CodedGather<'a> {
+    backend: &'a mut dyn GradBackend,
+    scheme: &'a dyn CodingScheme,
+    policy: &'a mut dyn KPolicy,
+    /// The wait target (the k the policy adapts).
+    k: usize,
+    delay_buf: Vec<f64>,
+    idx_buf: Vec<usize>,
+    /// Shard-coverage bitmap of the accepted responders (the cheap
+    /// necessary condition for decodability, maintained incrementally
+    /// during extension so the decoder runs once per round).
+    covered: Vec<bool>,
+    /// Accepted-arrival scratch for the shared-ingress round clock.
+    arrival_buf: Vec<f64>,
+    /// Per-shard gradient scratch.
+    partial: Vec<f32>,
+    /// A contributing worker's wire message: the sum of its covered
+    /// shards' gradients.
+    message: Vec<f32>,
+    k_changes: Vec<(u64, f64, usize)>,
+}
+
+impl<'a> CodedGather<'a> {
+    /// Gather `scheme`-coded gradients over `backend`'s shards, with
+    /// `policy` adapting the wait target.
+    pub fn new(
+        backend: &'a mut dyn GradBackend,
+        scheme: &'a dyn CodingScheme,
+        policy: &'a mut dyn KPolicy,
+    ) -> Self {
+        let n = backend.n_shards();
+        assert_eq!(
+            scheme.n(),
+            n,
+            "coding scheme built for {} workers, backend has {n}",
+            scheme.n()
+        );
+        let d = backend.dim();
+        Self {
+            backend,
+            scheme,
+            policy,
+            k: 1,
+            delay_buf: vec![0.0f64; n],
+            idx_buf: Vec::with_capacity(n),
+            covered: vec![false; n],
+            arrival_buf: Vec::with_capacity(n),
+            partial: vec![0.0f32; d],
+            message: vec![0.0f32; d],
+            k_changes: Vec::new(),
+        }
+    }
+}
+
+impl GatherPolicy for CodedGather<'_> {
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+
+    fn start(&mut self, _core: &mut EngineCore) {
+        let n = self.scheme.n();
+        self.k = self.policy.initial_k().min(n).max(1);
+    }
+
+    fn step(&mut self, core: &mut EngineCore) -> bool {
+        let n = self.scheme.n();
+        let j = core.steps;
+        if j >= core.cfg.max_steps
+            || (core.cfg.max_time > 0.0 && core.t >= core.cfg.max_time)
+        {
+            return false;
+        }
+        self.backend.on_iteration(j);
+        // (1) downlink: broadcast w_j; every worker is charged its
+        // download before compute starts.
+        let down_bytes = core.broadcast_round();
+        // (2) response times: a coded worker computes r shard gradients,
+        // so its compute delay scales by r before the (unscaled) upload
+        // and download terms.
+        let scale = self.scheme.r() as f64;
+        for (i, slot) in self.delay_buf.iter_mut().enumerate() {
+            *slot = core.response_delay_scaled(j, i, down_bytes, scale);
+        }
+        // (3) wait for the target's k fastest, then extend one arrival
+        // at a time to the first decodable responder set. Any decodable
+        // cover draws only from the responders' own assignments, so
+        // full union coverage is a *necessary* condition — the bitmap
+        // tracks it incrementally (O(r) per added responder) and the
+        // decoder itself runs only once it holds (for the greedy cover
+        // decode it is also sufficient, so decode runs once per round).
+        let scheme = self.scheme;
+        let (x_k, _) =
+            fastest_k_select(&self.delay_buf, self.k, &mut self.idx_buf);
+        let mut accepted = self.k;
+        let mut last_arrival = x_k;
+        for slot in self.covered.iter_mut() {
+            *slot = false;
+        }
+        let mut remaining = n;
+        for &w in &self.idx_buf[..accepted] {
+            for &s in scheme.assignment(w) {
+                if !self.covered[s] {
+                    self.covered[s] = true;
+                    remaining -= 1;
+                }
+            }
+        }
+        let mut sorted_rest = false;
+        let mut cover = None;
+        loop {
+            if remaining == 0 {
+                cover = scheme.decode(&self.idx_buf[..accepted]);
+                if cover.is_some() {
+                    break;
+                }
+            }
+            if accepted >= n {
+                break;
+            }
+            if !sorted_rest {
+                // Lazily order the remainder by arrival once extension
+                // is actually needed.
+                let delays = &self.delay_buf;
+                self.idx_buf[accepted..].sort_unstable_by(|&a, &b| {
+                    delays[a].total_cmp(&delays[b])
+                });
+                sorted_rest = true;
+            }
+            let w = self.idx_buf[accepted];
+            accepted += 1;
+            last_arrival = self.delay_buf[w];
+            for &s in scheme.assignment(w) {
+                if !self.covered[s] {
+                    self.covered[s] = true;
+                    remaining -= 1;
+                }
+            }
+        }
+        let cover = cover.expect(
+            "coding-scheme invariant violated: the full responder set \
+             must always decode (every shard held by >= 1 worker)",
+        );
+        // (3b) shared-ingress congestion over every accepted upload —
+        // redundant responders hit the master's NIC too, even when their
+        // message adds no new shard.
+        let round_time = if core.ingress_unlimited() {
+            last_arrival
+        } else {
+            self.arrival_buf.clear();
+            self.arrival_buf.extend(
+                self.idx_buf[..accepted].iter().map(|&i| self.delay_buf[i]),
+            );
+            core.round_completion(&mut self.arrival_buf)
+        };
+        core.t += round_time;
+
+        // (4) decode: each contributing worker ships one message — the
+        // sum of its covered shards' gradients — through the channel
+        // (compression + error feedback + byte accounting).
+        core.zero_g();
+        for part in &cover {
+            let (&first, rest) = part
+                .shards
+                .split_first()
+                .expect("decode never emits an empty part");
+            self.backend.partial_grad(
+                first,
+                &core.w_view,
+                &mut self.message,
+            );
+            for &shard in rest {
+                self.backend.partial_grad(
+                    shard,
+                    &core.w_view,
+                    &mut self.partial,
+                );
+                for (mv, pv) in self.message.iter_mut().zip(&self.partial)
+                {
+                    *mv += *pv;
+                }
+            }
+            core.accept_into_g(part.worker, &self.message);
+        }
+        // (5) the shared round tail. Every shard is covered exactly once,
+        // so the mean divides by n (the exact full gradient) while the
+        // policy adapts the wait target k.
+        self.k = core.finish_round_scaled(
+            j,
+            n,
+            self.k,
+            n,
+            &mut *self.policy,
+            &mut self.k_changes,
+        );
+        true
+    }
+
+    fn finish(&mut self, core: &mut EngineCore) {
+        core.record_final(core.steps, self.k);
+    }
+
+    fn annotate(&mut self, run: &mut EngineRun) {
+        run.k_changes = std::mem::take(&mut self.k_changes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{BernoulliScheme, CyclicRepetition, FrcScheme};
+    use crate::comm::CommChannel;
+    use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use crate::engine::{EngineConfig, EngineCore, RngStreams, RoundEngine};
+    use crate::grad::NativeBackend;
+    use crate::model::{full_gradient, LinRegProblem};
+    use crate::policy::{AdaptivePflug, FixedK, PflugParams};
+    use crate::straggler::ExponentialDelays;
+
+    fn run_coded(
+        scheme: &dyn CodingScheme,
+        target: usize,
+        max_steps: u64,
+        eta: f32,
+        seed: u64,
+    ) -> crate::engine::EngineRun {
+        let n = scheme.n();
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 20 * n, d: 8, ..Default::default() },
+            seed,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let mut backend = NativeBackend::new(Shards::partition(&ds, n));
+        let delays = ExponentialDelays::new(1.0);
+        let mut policy = FixedK::new(target);
+        let mut channel = CommChannel::dense(n);
+        let mut eval = |w: &[f32]| problem.error(w);
+        let cfg = EngineConfig {
+            eta,
+            momentum: 0.0,
+            max_steps,
+            max_time: 0.0,
+            seed,
+            record_stride: 50,
+        };
+        let core = EngineCore::new(
+            scheme.name(),
+            &mut channel,
+            &delays,
+            &mut eval,
+            &vec![0.0f32; 8],
+            cfg,
+            RngStreams::coded(seed),
+        );
+        let mut gather = CodedGather::new(&mut backend, scheme, &mut policy);
+        RoundEngine::new(core).run(&mut gather)
+    }
+
+    #[test]
+    fn coded_gather_applies_the_exact_full_gradient_below_threshold() {
+        // Target 1 forces the decode-extension path; the update must
+        // still be the exact full gradient.
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 120, d: 6, ..Default::default() },
+            7,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 6));
+        let scheme = FrcScheme::new(6, 2).unwrap();
+        let delays = ExponentialDelays::new(1.0);
+        let mut policy = FixedK::new(1);
+        let mut channel = CommChannel::dense(6);
+        let mut eval = |w: &[f32]| problem.error(w);
+        let cfg = EngineConfig {
+            eta: 1e-3,
+            momentum: 0.0,
+            max_steps: 1,
+            max_time: 0.0,
+            seed: 1,
+            record_stride: 1,
+        };
+        let core = EngineCore::new(
+            "coded",
+            &mut channel,
+            &delays,
+            &mut eval,
+            &vec![0.0f32; 6],
+            cfg,
+            RngStreams::coded(1),
+        );
+        let mut gather =
+            CodedGather::new(&mut backend, &scheme, &mut policy);
+        let run = RoundEngine::new(core).run(&mut gather);
+        let mut gfull = vec![0.0f32; 6];
+        full_gradient(&ds.x, &ds.y, &[0.0f32; 6], &mut gfull);
+        for j in 0..6 {
+            let want = -1e-3 * gfull[j];
+            let rel = (run.w[j] - want).abs() / want.abs().max(1e-6);
+            assert!(rel < 1e-3, "j={j}: {} vs {}", run.w[j], want);
+        }
+    }
+
+    #[test]
+    fn first_decodable_wait_never_exceeds_the_threshold_wait() {
+        // Same seed → same delay draws; per round the first decodable
+        // prefix arrives no later than the guaranteed threshold count,
+        // and the applied gradient is exact either way.
+        let scheme = FrcScheme::new(12, 3).unwrap();
+        let thr = scheme.recovery_threshold();
+        let eager = run_coded(&scheme, 1, 200, 1e-3, 5);
+        let classic = run_coded(&scheme, thr, 200, 1e-3, 5);
+        assert_eq!(eager.steps, classic.steps);
+        assert!(
+            eager.total_time <= classic.total_time + 1e-9,
+            "decodability-driven wait must not be slower: {} vs {}",
+            eager.total_time,
+            classic.total_time
+        );
+        let e_last = eager.recorder.last().unwrap().error;
+        let c_last = classic.recorder.last().unwrap().error;
+        // Both are exact GD — identical math up to fp reassociation
+        // (different part groupings), so the errors track closely.
+        let rel = (e_last - c_last).abs() / c_last.abs().max(1e-12);
+        assert!(rel < 5e-2, "{e_last} vs {c_last}");
+    }
+
+    #[test]
+    fn cyclic_and_bernoulli_schemes_converge_through_the_engine() {
+        let cyclic = CyclicRepetition::new(10, 3).unwrap();
+        let run_c = run_coded(&cyclic, 4, 400, 2e-3, 2);
+        assert_eq!(run_c.steps, 400);
+        let first = run_c.recorder.samples()[0].error;
+        let last = run_c.recorder.last().unwrap().error;
+        assert!(last < first * 1e-2, "cyclic: {first} -> {last}");
+
+        let bern = BernoulliScheme::new(10, 3, 11).unwrap();
+        let run_b = run_coded(&bern, 4, 400, 2e-3, 2);
+        let first = run_b.recorder.samples()[0].error;
+        let last = run_b.recorder.last().unwrap().error;
+        assert!(last < first * 1e-2, "bernoulli: {first} -> {last}");
+    }
+
+    #[test]
+    fn adaptive_wait_target_runs_and_is_clamped() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 200, d: 10, ..Default::default() },
+            3,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 10));
+        let scheme = CyclicRepetition::new(10, 2).unwrap();
+        let delays = ExponentialDelays::new(1.0);
+        let mut policy = AdaptivePflug::new(
+            10,
+            PflugParams { k0: 2, step: 3, thresh: 5, burnin: 10, k_max: 10 },
+        );
+        let mut channel = CommChannel::dense(10);
+        let mut eval = |w: &[f32]| problem.error(w);
+        let cfg = EngineConfig {
+            eta: 2e-3,
+            momentum: 0.0,
+            max_steps: 300,
+            max_time: 0.0,
+            seed: 4,
+            record_stride: 50,
+        };
+        let core = EngineCore::new(
+            "coded-adaptive",
+            &mut channel,
+            &delays,
+            &mut eval,
+            &vec![0.0f32; 10],
+            cfg,
+            RngStreams::coded(4),
+        );
+        let mut gather =
+            CodedGather::new(&mut backend, &scheme, &mut policy);
+        let run = RoundEngine::new(core).run(&mut gather);
+        assert_eq!(run.steps, 300);
+        for &(_, _, k) in &run.k_changes {
+            assert!((1..=10).contains(&k));
+        }
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 1e-2, "{first} -> {last}");
+    }
+}

@@ -116,6 +116,18 @@ impl RngStreams {
             ),
         }
     }
+
+    /// The coded-gather driver's streams. The delay constant is the
+    /// historical `run_coded_gd` stream, so coded trajectories keep
+    /// their pre-engine straggler pattern and stay paired across
+    /// schemes/replication factors at a fixed seed.
+    pub fn coded(seed: u64) -> Self {
+        Self {
+            delay: Pcg64::seed_stream(seed, 0xC0DE),
+            bcast: Pcg64::seed_stream(seed, 0xB050),
+            comm: CommStream::Shared(Pcg64::seed_stream(seed, 0xC047)),
+        }
+    }
 }
 
 /// What every engine run produces; discipline-specific fields default to
@@ -301,7 +313,23 @@ impl<'a> EngineCore<'a> {
         worker: usize,
         down_bytes: u64,
     ) -> f64 {
+        self.response_delay_scaled(iteration, worker, down_bytes, 1.0)
+    }
+
+    /// A round worker's response time with the compute term scaled: a
+    /// coded worker computes `r` shard gradients per round, so its
+    /// sampled delay is multiplied by `compute_scale = r` before the
+    /// (unscaled) upload and download terms. `compute_scale = 1.0` is
+    /// bitwise inert, so the uncoded disciplines are unchanged.
+    pub fn response_delay_scaled(
+        &mut self,
+        iteration: u64,
+        worker: usize,
+        down_bytes: u64,
+        compute_scale: f64,
+    ) -> f64 {
         self.delays.sample(iteration, worker, &mut self.delay_rng)
+            * compute_scale
             + self.channel.link_upload_delay(worker, self.msg_bytes)
             + self.channel.download_delay(worker, down_bytes)
     }
@@ -441,7 +469,26 @@ impl<'a> EngineCore<'a> {
         policy: &mut dyn KPolicy,
         k_changes: &mut Vec<(u64, f64, usize)>,
     ) -> usize {
-        self.scale_g(k);
+        self.finish_round_scaled(j, n, k, k, policy, k_changes)
+    }
+
+    /// [`EngineCore::finish_fastest_k_round`] with the aggregate's mean
+    /// divisor decoupled from the policy variable: the fastest-k mean
+    /// divides by the k accepted gradients (`scale_count = k`), while the
+    /// coded gather's exact full gradient divides by n (every shard
+    /// covered exactly once) even as the policy adapts the wait target
+    /// `k`. The two coincide at `scale_count = k`, which
+    /// `finish_fastest_k_round` delegates with.
+    pub fn finish_round_scaled(
+        &mut self,
+        j: u64,
+        n: usize,
+        k: usize,
+        scale_count: usize,
+        policy: &mut dyn KPolicy,
+        k_changes: &mut Vec<(u64, f64, usize)>,
+    ) -> usize {
+        self.scale_g(scale_count);
         self.apply_g_sgd();
         let inner =
             if j == 0 { None } else { Some(self.grad_inner_prev()) };

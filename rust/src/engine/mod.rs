@@ -13,9 +13,13 @@
 //! * [`GatherPolicy`] is the pluggable discipline: [`FastestKGather`]
 //!   (the paper's sync round), [`StalenessGather`] (fully async,
 //!   staleness-aware, with exact processor-sharing ingress via
-//!   completion events on the [`sim::EventQueue`](crate::sim)), and the
-//!   threaded cluster's private impl in [`exec`](crate::exec) (real
-//!   threads reduced to a delay/gradient source).
+//!   completion events on the [`sim::EventQueue`](crate::sim)),
+//!   [`CodedGather`] (redundant shard placement via a
+//!   [`coding::CodingScheme`](crate::coding::CodingScheme); waits for
+//!   the first decodable responder set and applies the exact full
+//!   gradient), and the threaded cluster's private impls in
+//!   [`exec`](crate::exec) (real threads reduced to a delay/gradient
+//!   source, round-based and fully asynchronous).
 //! * [`RoundEngine`] drives a core through a discipline and returns the
 //!   uniform [`EngineRun`].
 //!
@@ -25,19 +29,23 @@
 //! build a core + gather and delegate here; their default-channel
 //! trajectories are preserved bit for bit (see
 //! `rust/tests/test_engine_equivalence.rs`, which replays the
-//! pre-engine loops as executable specifications). A new gather
-//! discipline — coded gradients, another ingress model, heterogeneous
-//! links — is one ~100-line [`GatherPolicy`] impl instead of a fourth
-//! driver fork.
+//! pre-engine loops as executable specifications; the coded path has
+//! the same contract in `rust/tests/test_coded_equivalence.rs`). A new
+//! gather discipline — another ingress model, heterogeneous links, a
+//! new code — is one ~100-line [`GatherPolicy`] impl instead of a
+//! driver fork: [`CodedGather`] retired the standalone coded driver
+//! exactly this way.
 //!
 //! [`master::run_fastest_k_comm`]: crate::master::run_fastest_k_comm
 //! [`async_sgd::run_async_comm`]: crate::async_sgd::run_async_comm
 //! [`exec::ThreadedCluster::run_with_comm`]:
 //!     crate::exec::ThreadedCluster::run_with_comm
 
+mod coded;
 mod core;
 mod gather;
 
+pub use self::coded::CodedGather;
 pub use self::core::{
     CommStream, EngineConfig, EngineCore, EngineRun, RngStreams,
 };

@@ -1,4 +1,5 @@
-//! Threaded master/worker cluster with fastest-k gather.
+//! Threaded master/worker cluster: fastest-k rounds and a fully
+//! asynchronous mode, both deterministic.
 //!
 //! Communication-aware like the simulator: the master prices each
 //! worker's download + upload from the channel's size models and folds
@@ -8,24 +9,36 @@
 //! finite master-ingress capacity the round's virtual time is the
 //! ingress completion of the accepted responses, not their max.
 //!
-//! The run loop is the round engine's: the cluster implements a private
-//! [`GatherPolicy`](crate::engine::GatherPolicy) whose job is only to
-//! dispatch jobs to the worker threads and gather fresh responses — all
+//! The run loops are the round engine's: the cluster implements private
+//! [`GatherPolicy`](crate::engine::GatherPolicy) impls whose job is only
+//! to dispatch jobs to the worker threads and collect responses — all
 //! pricing (broadcast, response delays, ingress clock), the SGD apply,
 //! and recording go through the shared
 //! [`EngineCore`](crate::engine::EngineCore), so the real threads are
 //! reduced to a delay-and-gradient source feeding the same engine as
 //! the simulators.
+//!
+//! **Determinism.** The master decides by *virtual* time, never by real
+//! arrival order: the fastest-k round selects the k smallest injected
+//! delays (it computed every delay before dispatch) and waits for
+//! exactly those workers' responses, and the async mode applies
+//! responses in virtual completion order (buffering early real
+//! arrivals). Thread scheduling therefore cannot change a trajectory —
+//! an adaptive [`KPolicy`] sees the simulator's observable sequence bit
+//! for bit, asserted by `rust/tests/test_engine_equivalence.rs`.
 
-use crate::comm::CommChannel;
+use crate::async_sgd::AsyncConfig;
+use crate::comm::{CommChannel, DownlinkMode, IngressDiscipline};
 use crate::data::Shards;
 use crate::engine::{
     EngineConfig, EngineCore, EngineRun, GatherPolicy, RngStreams,
     RoundEngine,
 };
 use crate::linalg::{gemv, gemv_t, Matrix};
+use crate::master::fastest_k_select;
 use crate::metrics::Recorder;
 use crate::policy::KPolicy;
+use crate::sim::EventQueue;
 use crate::straggler::DelayModel;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -69,8 +82,19 @@ pub struct ThreadedRunStats {
     pub virtual_time: f64,
     /// Total real wall-clock seconds.
     pub real_time: f64,
-    /// Late (discarded) responses observed — wasted straggler work.
+    /// Discarded responses — wasted straggler work: stale generations
+    /// plus fresh responses outside the virtual fastest-k (0 for the
+    /// async mode, which applies everything).
     pub late_responses: u64,
+    /// (iteration, time, new_k) for every k change the policy made
+    /// (empty for the async mode).
+    pub k_changes: Vec<(u64, f64, usize)>,
+    /// Mean staleness of applied updates — the async mode (0 for
+    /// rounds).
+    pub mean_staleness: f64,
+    /// True if the run blew up (non-finite model) and stopped early —
+    /// the async mode's divergence guard.
+    pub diverged: bool,
     /// Encoded bytes of all accepted gradient messages.
     pub bytes_sent: u64,
     /// Total upload time of accepted messages (virtual units).
@@ -82,6 +106,9 @@ pub struct ThreadedRunStats {
 }
 
 struct Job {
+    /// Which run_* invocation dispatched this job (stale responses from
+    /// an earlier run on a reused cluster are filtered by epoch).
+    epoch: u64,
     generation: u64,
     w: Arc<Vec<f32>>,
     /// Injected virtual delay for this worker at this iteration.
@@ -89,11 +116,10 @@ struct Job {
 }
 
 struct Response {
+    epoch: u64,
     generation: u64,
     worker: usize,
     grad: Vec<f32>,
-    /// Virtual delay echoed back.
-    delay: f64,
 }
 
 /// A running cluster of worker threads pinned to their shards.
@@ -103,6 +129,9 @@ pub struct ThreadedCluster {
     handles: Vec<std::thread::JoinHandle<()>>,
     n: usize,
     d: usize,
+    /// Bumped per run_* call; in-flight responses from an earlier run
+    /// on this cluster can never be mistaken for the current run's.
+    epoch: u64,
 }
 
 impl ThreadedCluster {
@@ -124,7 +153,7 @@ impl ThreadedCluster {
                 worker_loop(i, x, y, rx, resp_tx, time_scale);
             }));
         }
-        Self { job_txs, resp_rx, handles, n, d }
+        Self { job_txs, resp_rx, handles, n, d, epoch: 0 }
     }
 
     /// Number of workers.
@@ -193,6 +222,7 @@ impl ThreadedCluster {
             "comm channel sized for {} workers, cluster has {n}",
             channel.n()
         );
+        self.epoch += 1;
         let start = Instant::now();
         let engine_cfg = EngineConfig {
             eta: cfg.eta,
@@ -214,20 +244,120 @@ impl ThreadedCluster {
         let mut gather = ThreadedGather {
             job_txs: &self.job_txs,
             resp_rx: &self.resp_rx,
+            epoch: self.epoch,
             policy,
             n,
             k: 1,
+            delay_buf: vec![0.0f64; n],
+            idx_buf: Vec::with_capacity(n),
+            grad_buf: vec![None; n],
             accepted_delays: Vec::with_capacity(n),
             late: 0,
             k_changes: Vec::new(),
         };
         let run = RoundEngine::new(core).run(&mut gather);
+        Self::stats_from(run, start)
+    }
+
+    /// Run the fully-asynchronous discipline on the live cluster with
+    /// the zero-cost dense channel.
+    pub fn run_async(
+        &mut self,
+        delays: &dyn DelayModel,
+        w0: &[f32],
+        cfg: &AsyncConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    ) -> ThreadedRunStats {
+        let mut channel = CommChannel::dense(self.n);
+        self.run_async_comm(delays, &mut channel, w0, cfg, eval_error)
+    }
+
+    /// Threaded asynchronous SGD: every worker computes continuously
+    /// against the model view it was last handed; the master applies
+    /// each (possibly stale) gradient immediately, with optional
+    /// staleness damping, and restarts the worker through the priced
+    /// downlink.
+    ///
+    /// Deterministic by construction: the master computed every injected
+    /// delay before dispatch, so it applies responses in *virtual*
+    /// completion order (FIFO among ties, the simulator's event-queue
+    /// rule), buffering real arrivals that come in early. With the same
+    /// seed, channel, and config this reproduces the simulated
+    /// [`run_async_comm`](crate::async_sgd::run_async_comm) bit for bit
+    /// — same rng streams, and the worker threads run the same gemv
+    /// kernels as [`NativeBackend`](crate::grad::NativeBackend)
+    /// (asserted by `rust/tests/test_engine_equivalence.rs`).
+    ///
+    /// Processor-sharing ingress needs the simulator's tentative-event
+    /// machinery and is rejected here; use unlimited or FIFO ingress.
+    pub fn run_async_comm(
+        &mut self,
+        delays: &dyn DelayModel,
+        channel: &mut CommChannel,
+        w0: &[f32],
+        cfg: &AsyncConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    ) -> ThreadedRunStats {
+        let n = self.n;
+        assert_eq!(w0.len(), self.d, "w0 dimension mismatch");
+        assert_eq!(
+            channel.n(),
+            n,
+            "comm channel sized for {} workers, cluster has {n}",
+            channel.n()
+        );
+        assert!(
+            channel.ingress().is_unlimited()
+                || channel.ingress().discipline() == IngressDiscipline::Fifo,
+            "threaded async supports unlimited or FIFO ingress; processor \
+             sharing needs the simulated path (async_sgd::run_async_comm)"
+        );
+        self.epoch += 1;
+        let start = Instant::now();
+        let engine_cfg = EngineConfig {
+            eta: cfg.eta,
+            momentum: 0.0,
+            max_steps: cfg.max_updates,
+            max_time: cfg.max_time,
+            seed: cfg.seed,
+            record_stride: cfg.record_stride,
+        };
+        let core = EngineCore::new(
+            "threaded-async",
+            channel,
+            delays,
+            eval_error,
+            w0,
+            engine_cfg,
+            RngStreams::asynchronous(cfg.seed),
+        );
+        let mut gather = ThreadedAsyncGather {
+            job_txs: &self.job_txs,
+            resp_rx: &self.resp_rx,
+            epoch: self.epoch,
+            damping: cfg.staleness_damping,
+            queue: EventQueue::new(),
+            grad_buf: vec![None; n],
+            view_buf: vec![0.0f32; self.d],
+            read_version: vec![0u64; n],
+            version: 0,
+            staleness_sum: 0.0,
+            diverged: false,
+        };
+        let run = RoundEngine::new(core).run(&mut gather);
+        Self::stats_from(run, start)
+    }
+
+    fn stats_from(run: EngineRun, start: Instant) -> ThreadedRunStats {
         ThreadedRunStats {
             recorder: run.recorder,
             w: run.w,
             virtual_time: run.total_time,
             real_time: start.elapsed().as_secs_f64(),
             late_responses: run.late_responses,
+            k_changes: run.k_changes,
+            mean_staleness: run.mean_staleness,
+            diverged: run.diverged,
             bytes_sent: run.bytes_sent,
             comm_time: run.comm_time,
             bytes_down: run.bytes_down,
@@ -236,18 +366,29 @@ impl ThreadedCluster {
     }
 }
 
-/// The cluster's gather discipline: real worker threads as the delay and
+/// The cluster's fastest-k gather: real worker threads as the delay and
 /// gradient source. Dispatch sends every worker its priced virtual delay
-/// (the worker sleeps download + compute + upload, scaled); gathering
-/// accepts the first k *fresh* responses and discards stragglers from
-/// earlier generations. Everything priced or recorded goes through the
-/// [`EngineCore`].
+/// (the worker sleeps download + compute + upload, scaled); the round
+/// accepts the k smallest *virtual* delays — the master computed every
+/// delay before dispatch, so the accepted set, the aggregation order,
+/// and hence the whole trajectory are independent of thread scheduling
+/// and match the simulated [`FastestKGather`](crate::engine)'s. Fresh
+/// responses outside the selection and stragglers from earlier
+/// generations are discarded (counted as `late`). Everything priced or
+/// recorded goes through the [`EngineCore`].
 struct ThreadedGather<'a> {
     job_txs: &'a [mpsc::Sender<Job>],
     resp_rx: &'a mpsc::Receiver<Response>,
+    epoch: u64,
     policy: &'a mut dyn KPolicy,
     n: usize,
     k: usize,
+    /// Injected virtual delays of the current round.
+    delay_buf: Vec<f64>,
+    /// Selection scratch (quickselect permutation).
+    idx_buf: Vec<usize>,
+    /// Selected workers' gradients, buffered until the set is complete.
+    grad_buf: Vec<Option<Vec<f32>>>,
     /// Accepted responses' virtual delays, for the congested clock.
     accepted_delays: Vec<f64>,
     late: u64,
@@ -275,7 +416,9 @@ impl GatherPolicy for ThreadedGather<'_> {
         let w_shared = Arc::new(core.w_view.clone());
         for (i, tx) in self.job_txs.iter().enumerate() {
             let delay = core.response_delay(j, i, down_bytes);
+            self.delay_buf[i] = delay;
             tx.send(Job {
+                epoch: self.epoch,
                 generation: j,
                 w: Arc::clone(&w_shared),
                 delay,
@@ -283,31 +426,51 @@ impl GatherPolicy for ThreadedGather<'_> {
             .expect("worker died");
         }
 
-        // Gather the fastest k fresh responses, decoding each through
-        // the channel.
-        core.zero_g();
+        // Deterministic selection + clock, exactly the simulator's: the
+        // k fastest by virtual delay, ingress completion when the
+        // master's NIC is finite.
+        let (x_k, _) =
+            fastest_k_select(&self.delay_buf, self.k, &mut self.idx_buf);
+        let round_time = if core.ingress_unlimited() {
+            x_k
+        } else {
+            self.accepted_delays.clear();
+            self.accepted_delays.extend(
+                self.idx_buf[..self.k].iter().map(|&i| self.delay_buf[i]),
+            );
+            core.round_completion(&mut self.accepted_delays)
+        };
+        core.t += round_time;
+
+        // Wait for exactly the selected workers' fresh responses; real
+        // arrival order only affects buffering, never the result.
+        for slot in self.grad_buf.iter_mut() {
+            *slot = None;
+        }
         let mut got = 0usize;
-        let mut iter_vt = 0.0f64;
-        self.accepted_delays.clear();
         while got < self.k {
             let resp = self.resp_rx.recv().expect("cluster closed");
-            if resp.generation != j {
+            if resp.epoch != self.epoch || resp.generation != j {
                 self.late += 1; // straggler from an earlier round: discard
                 continue;
             }
-            got += 1;
-            iter_vt = iter_vt.max(resp.delay);
-            self.accepted_delays.push(resp.delay);
-            core.accept_into_g(resp.worker, &resp.grad);
+            if !self.idx_buf[..self.k].contains(&resp.worker) {
+                self.late += 1; // fresh but outside the virtual fastest-k
+                continue;
+            }
+            if self.grad_buf[resp.worker].replace(resp.grad).is_none() {
+                got += 1;
+            }
         }
-        // Congested clock: with finite ingress the round's virtual time
-        // is the ingress completion of the accepted uploads (real
-        // arrival order is thread-nondeterministic, so the virtual
-        // order is by virtual delay — sorted inside).
-        if !core.ingress_unlimited() {
-            iter_vt = core.round_completion(&mut self.accepted_delays);
+        // Aggregate in selection order (the simulator's), decoding each
+        // accepted gradient through the channel.
+        core.zero_g();
+        for &worker in &self.idx_buf[..self.k] {
+            let grad = self.grad_buf[worker]
+                .take()
+                .expect("selected response gathered above");
+            core.accept_into_g(worker, &grad);
         }
-        core.t += iter_vt;
 
         // The shared round tail: mean-scale + SGD update + policy
         // feedback + recording, in exactly one place (engine/core.rs).
@@ -324,6 +487,138 @@ impl GatherPolicy for ThreadedGather<'_> {
     fn annotate(&mut self, run: &mut EngineRun) {
         run.late_responses = self.late;
         run.k_changes = std::mem::take(&mut self.k_changes);
+    }
+}
+
+/// The cluster's fully-asynchronous discipline: the mirror of
+/// [`StalenessGather`](crate::engine::StalenessGather) with the real
+/// threads as the gradient source. The master applies responses in
+/// *virtual* completion order from its own event queue (it computed
+/// every injected delay at dispatch), buffering early real arrivals, so
+/// the trajectory is thread-schedule-independent and bitwise the
+/// simulator's.
+struct ThreadedAsyncGather<'a> {
+    job_txs: &'a [mpsc::Sender<Job>],
+    resp_rx: &'a mpsc::Receiver<Response>,
+    epoch: u64,
+    damping: bool,
+    /// Virtual completion times of outstanding jobs (FIFO among ties —
+    /// the simulator's event-queue rule).
+    queue: EventQueue<usize>,
+    /// Early real arrivals buffered until their virtual turn.
+    grad_buf: Vec<Option<Vec<f32>>>,
+    /// Decode target for the per-worker model push.
+    view_buf: Vec<f32>,
+    read_version: Vec<u64>,
+    version: u64,
+    staleness_sum: f64,
+    diverged: bool,
+}
+
+impl GatherPolicy for ThreadedAsyncGather<'_> {
+    fn initial_k(&self) -> usize {
+        1
+    }
+
+    fn start(&mut self, core: &mut EngineCore) {
+        // Workers know w0, so the initial dispatch carries no download
+        // (mirrors StalenessGather::start, same draw order).
+        let w0 = Arc::new(core.w.clone());
+        for (i, tx) in self.job_txs.iter().enumerate() {
+            let dt = core.cycle_delay(0, i, 0.0);
+            tx.send(Job {
+                epoch: self.epoch,
+                generation: 0,
+                w: Arc::clone(&w0),
+                delay: dt,
+            })
+            .expect("worker died");
+            self.queue.schedule_in(dt, i);
+        }
+    }
+
+    fn step(&mut self, core: &mut EngineCore) -> bool {
+        if core.steps >= core.cfg.max_steps {
+            return false;
+        }
+        let ev = match self.queue.pop() {
+            Some(e) => e,
+            None => return false,
+        };
+        let i = ev.payload;
+        // FIFO (or free) ingress: the upload that virtually arrived at
+        // ev.time is applied once the master's NIC has served it.
+        let t_apply = core.serve_ingress(ev.time);
+        core.t = t_apply;
+        if core.cfg.max_time > 0.0 && t_apply > core.cfg.max_time {
+            return false;
+        }
+        // The worker's real compute: fetch its response (∇F_i at the
+        // view it was dispatched), buffering any that arrive early.
+        let grad = loop {
+            if let Some(g) = self.grad_buf[i].take() {
+                break g;
+            }
+            let resp = self.resp_rx.recv().expect("cluster closed");
+            if resp.epoch != self.epoch {
+                continue; // stale response from an earlier run: drop
+            }
+            self.grad_buf[resp.worker] = Some(resp.grad);
+        };
+        core.transmit(i, &grad);
+        let staleness = self.version - self.read_version[i];
+        let step = if self.damping {
+            core.cfg.eta / (1.0 + staleness as f32)
+        } else {
+            core.cfg.eta
+        };
+        core.apply_decoded(step);
+        self.version += 1;
+        self.staleness_sum += staleness as f64;
+        core.steps += 1;
+        if !core.model_is_finite() {
+            self.diverged = true;
+            core.record_diverged(core.steps, 1);
+            return false;
+        }
+
+        // Restart the worker through the priced downlink (delta mode
+        // replays one message per elapsed update, like the simulator).
+        let replay = match core.downlink_mode() {
+            DownlinkMode::Full => 1,
+            DownlinkMode::Delta => staleness + 1,
+        };
+        let (_, down_delay) =
+            core.push_model_to(i, &mut self.view_buf, replay);
+        self.read_version[i] = self.version;
+        let dt = core.cycle_delay(core.steps, i, down_delay);
+        self.queue.schedule_at(t_apply + dt, i);
+        self.job_txs[i]
+            .send(Job {
+                epoch: self.epoch,
+                generation: core.steps,
+                w: Arc::new(self.view_buf.clone()),
+                delay: dt,
+            })
+            .expect("worker died");
+
+        core.maybe_record(core.steps, 1);
+        true
+    }
+
+    fn finish(&mut self, core: &mut EngineCore) {
+        if !self.diverged {
+            core.record_final(core.steps, 1);
+        }
+    }
+
+    fn annotate(&mut self, run: &mut EngineRun) {
+        run.diverged = self.diverged;
+        run.mean_staleness = if run.steps > 0 {
+            self.staleness_sum / run.steps as f64
+        } else {
+            0.0
+        };
     }
 }
 
@@ -362,10 +657,10 @@ fn worker_loop(
         }
         if tx
             .send(Response {
+                epoch: job.epoch,
                 generation: job.generation,
                 worker: id,
                 grad,
-                delay: job.delay,
             })
             .is_err()
         {
@@ -409,6 +704,72 @@ mod tests {
         assert!(last < first * 0.05, "{first} -> {last}");
         assert!(run.virtual_time > 0.0);
         assert!(run.real_time > 0.0);
+    }
+
+    #[test]
+    fn threaded_async_training_descends_and_reports_staleness() {
+        use crate::straggler::ExponentialDelays;
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 120, d: 8, ..Default::default() },
+            25,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let shards = Shards::partition(&ds, 6);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+        let delays = ExponentialDelays::new(1.0);
+        let cfg = AsyncConfig {
+            eta: 0.001,
+            max_updates: 900,
+            max_time: 0.0,
+            seed: 9,
+            record_stride: 150,
+            staleness_damping: true,
+        };
+        let run = cluster.run_async(
+            &delays,
+            &vec![0.0; 8],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 0.05, "{first} -> {last}");
+        // 6 concurrent workers → mean staleness ≈ 5.
+        assert!(run.mean_staleness > 2.0, "{}", run.mean_staleness);
+        assert!(!run.diverged);
+        // Async applies everything — nothing is "late".
+        assert_eq!(run.late_responses, 0);
+        assert!(run.k_changes.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "processor")]
+    fn threaded_async_rejects_ps_ingress() {
+        use crate::comm::{IngressDiscipline, IngressModel};
+        use crate::straggler::ExponentialDelays;
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 40, d: 4, ..Default::default() },
+            26,
+        );
+        let shards = Shards::partition(&ds, 4);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+        let delays = ExponentialDelays::new(1.0);
+        let mut channel = CommChannel::dense(4).with_ingress(
+            IngressModel::with_discipline(32.0, IngressDiscipline::Ps),
+        );
+        let cfg = AsyncConfig {
+            eta: 0.001,
+            max_updates: 10,
+            ..Default::default()
+        };
+        let problem = LinRegProblem::new(&ds);
+        cluster.run_async_comm(
+            &delays,
+            &mut channel,
+            &vec![0.0; 4],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
     }
 
     #[test]

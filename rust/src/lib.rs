@@ -27,12 +27,34 @@
 //! [`engine::FastestKGather`] (the paper's sync round),
 //! [`async_sgd::run_async_comm`] runs [`engine::StalenessGather`]
 //! (Dutta et al.'s async comparator, with exact processor-sharing
-//! ingress via completion events), and
-//! [`exec::ThreadedCluster::run_with_comm`] feeds the same engine from
-//! real OS threads. Default-channel trajectories are bit-for-bit the
-//! pre-engine drivers' (asserted by
+//! ingress via completion events), [`coding::run_coded_comm`] runs
+//! [`engine::CodedGather`] (below), and
+//! [`exec::ThreadedCluster::run_with_comm`] /
+//! [`exec::ThreadedCluster::run_async_comm`] feed the same engine from
+//! real OS threads — deterministically, since the threaded master
+//! decides by *virtual* time, so the live cluster reproduces the
+//! simulator bit for bit. Default-channel trajectories are bit-for-bit
+//! the pre-engine drivers' (asserted by
 //! `rust/tests/test_engine_equivalence.rs`); a new discipline is one
 //! more `GatherPolicy` impl, not a new driver.
+//!
+//! ## Gradient coding
+//!
+//! [`coding`] is a placement/execution split: a [`coding::CodingScheme`]
+//! (fractional repetition, cyclic windows, or a seeded random r-regular
+//! "Bernoulli" placement) describes which `r` shards each worker holds
+//! and how a responder set decodes into a shard cover, while
+//! [`engine::CodedGather`] executes any such scheme through the engine —
+//! the k policy adapts the *wait target*, the round extends along the
+//! arrival order to the first decodable responder set, and each round
+//! applies the **exact** full gradient at `r ×` compute (and `r ×`
+//! straggler tolerance). Because it rides the engine, coded GD is priced
+//! on the same clock as fastest-k: broadcast downlink, uplink
+//! compression + error feedback, and shared-ingress contention all
+//! apply (`benches/fig_coding.rs` sweeps scheme × r × k-policy ×
+//! ingress). `coding::run_coded_gd` keeps the legacy compute-only
+//! interface as a shim; `rust/tests/test_coded_equivalence.rs` holds
+//! the loop-vs-engine and `r = 1` ≡ fastest-k bitwise contracts.
 //!
 //! ## Communication model
 //!
@@ -108,8 +130,8 @@ pub mod prelude {
     };
     pub use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
     pub use crate::engine::{
-        EngineConfig, EngineCore, EngineRun, FastestKGather, GatherPolicy,
-        RngStreams, RoundEngine, StalenessGather,
+        CodedGather, EngineConfig, EngineCore, EngineRun, FastestKGather,
+        GatherPolicy, RngStreams, RoundEngine, StalenessGather,
     };
     pub use crate::grad::{GradBackend, NativeBackend};
     pub use crate::master::{
@@ -123,7 +145,10 @@ pub mod prelude {
     };
     pub use crate::rng::{Pcg64, Rng};
     pub use crate::stats::OrderStats;
-    pub use crate::coding::{run_coded_gd, CodedConfig, FrcScheme};
+    pub use crate::coding::{
+        run_coded_comm, run_coded_gd, BernoulliScheme, CodedConfig,
+        CodingScheme, CoverPart, CyclicRepetition, FrcScheme,
+    };
     pub use crate::straggler::{
         BimodalDelays, DelayModel, ExponentialDelays, MarkovDelays,
         ParetoDelays, ShiftedExponentialDelays, TraceDelays, WeibullDelays,

@@ -5,10 +5,11 @@
 use adasgd::cli::{print_help, Args};
 use adasgd::comm::IngressDiscipline;
 use adasgd::config::{
-    CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
+    CodingSchemeSpec, CodingSpec, CompressorSpec, DelaySpec,
+    ExperimentConfig, PolicySpec, WorkloadSpec,
 };
 use adasgd::coordinator::{fig1, fig2, fig3, run_experiment, FigureOutput};
-use adasgd::metrics::{write_csv, AsciiPlot, Recorder};
+use adasgd::metrics::{write_csv_with_header, AsciiPlot, Recorder};
 use adasgd::policy::{FixedK, PflugParams};
 use adasgd::theory::{switching_times, BoundParams, ErrorBound};
 use std::path::Path;
@@ -44,7 +45,13 @@ fn main() {
     std::process::exit(code);
 }
 
-fn emit(args: &Args, name: &str, runs: &[&Recorder], summary: &[String]) {
+fn emit(
+    args: &Args,
+    name: &str,
+    runs: &[&Recorder],
+    summary: &[String],
+    meta: &[String],
+) {
     if !args.has("quiet") {
         let plot = AsciiPlot::new(
             format!("{name}: error vs wall-clock (log y)"),
@@ -58,7 +65,7 @@ fn emit(args: &Args, name: &str, runs: &[&Recorder], summary: &[String]) {
     }
     let default_out = format!("results/{name}.csv");
     let out = args.get("out").unwrap_or(&default_out);
-    if let Err(e) = write_csv(Path::new(out), runs) {
+    if let Err(e) = write_csv_with_header(Path::new(out), runs, meta) {
         eprintln!("warning: could not write {out}: {e}");
     } else {
         println!("  series written to {out}");
@@ -70,7 +77,7 @@ fn cmd_fig1(args: &Args) -> i32 {
     let out = fig1(points);
     let mut runs: Vec<&Recorder> = out.fixed.iter().collect();
     runs.push(&out.adaptive);
-    emit(args, "fig1", &runs, &out.summary);
+    emit(args, "fig1", &runs, &out.summary, &[]);
     0
 }
 
@@ -85,7 +92,7 @@ fn cmd_figure(args: &Args, which: u8) -> i32 {
         fig3(seed, max_time)
     };
     let refs: Vec<&Recorder> = runs.iter().collect();
-    emit(args, &name, &refs, &summary);
+    emit(args, &name, &refs, &summary, &[]);
     0
 }
 
@@ -202,6 +209,30 @@ fn cmd_train(args: &Args) -> i32 {
                 return 2;
             }
         };
+        if let Some(scheme) = args.get("coding") {
+            let scheme = match scheme {
+                "frc" => CodingSchemeSpec::Frc,
+                "cyclic" => CodingSchemeSpec::Cyclic,
+                "bernoulli" => CodingSchemeSpec::Bernoulli,
+                other => {
+                    eprintln!(
+                        "config error: unknown --coding scheme '{other}' \
+                         (frc | cyclic | bernoulli)"
+                    );
+                    return 2;
+                }
+            };
+            // Strict parse: a malformed r must not silently run a
+            // different code than the user asked for.
+            let r = match args.get_parse("replication", 2usize) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    return 2;
+                }
+            };
+            cfg.coding = Some(CodingSpec { scheme, r });
+        }
         cfg.policy = if args.has("async") {
             PolicySpec::Async
         } else if let Some(kstr) = args.get("k") {
@@ -245,7 +276,14 @@ fn cmd_train(args: &Args) -> i32 {
                     out.down_time
                 ),
             ];
-            emit(args, "train", &[&out.recorder], &summary);
+            // The CSV run-header records what produced the series; the
+            // coding line is what downstream plots key scheme/r off.
+            let meta: Vec<String> = cfg
+                .coding
+                .iter()
+                .map(|c| format!("coding: scheme={} r={}", c.scheme, c.r))
+                .collect();
+            emit(args, "train", &[&out.recorder], &summary, &meta);
             0
         }
         Err(e) => {
@@ -368,7 +406,7 @@ fn cmd_train_transformer(args: &Args) -> i32 {
         ),
         format!("k switches: {:?}", run.k_changes),
     ];
-    emit(args, "transformer", &[&run.recorder], &summary);
+    emit(args, "transformer", &[&run.recorder], &summary, &[]);
     0
 }
 

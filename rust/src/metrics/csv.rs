@@ -63,11 +63,26 @@ impl From<std::io::Error> for CsvError {
 /// Write one or more run records into a single long-format CSV (see the
 /// module docs for the column schema).
 pub fn write_csv(path: &Path, runs: &[&Recorder]) -> Result<(), CsvError> {
+    write_csv_with_header(path, runs, &[])
+}
+
+/// [`write_csv`] with extra run-header comment lines: each `meta` entry
+/// becomes one `# `-prefixed line between the version comment and the
+/// column header (e.g. `coding: scheme=frc r=2`, so a results file
+/// records *what* produced it, not just the series).
+pub fn write_csv_with_header(
+    path: &Path,
+    runs: &[&Recorder],
+    meta: &[String],
+) -> Result<(), CsvError> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(f, "# adasgd run series v3; columns: {CSV_COLUMNS}")?;
+    for line in meta {
+        writeln!(f, "# {line}")?;
+    }
     writeln!(f, "{CSV_COLUMNS}")?;
     for run in runs {
         for s in run.samples() {
@@ -114,6 +129,26 @@ mod tests {
         assert!(row.starts_with("runA,0,0.5"), "{row}");
         assert!(row.contains(",416,"), "{row}");
         assert!(row.contains(",832,"), "{row}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_lines_land_between_version_comment_and_header() {
+        let mut r = Recorder::new("runB");
+        r.push(Sample { iteration: 0, ..Default::default() });
+        let dir = std::env::temp_dir().join("adasgd_csv_meta_test");
+        let path = dir.join("out.csv");
+        write_csv_with_header(
+            &path,
+            &[&r],
+            &["coding: scheme=frc r=2".to_string()],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("# adasgd run series"));
+        assert_eq!(lines[1], "# coding: scheme=frc r=2");
+        assert_eq!(lines[2], CSV_COLUMNS);
         std::fs::remove_dir_all(&dir).ok();
     }
 

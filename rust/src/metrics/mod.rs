@@ -5,5 +5,5 @@ mod csv;
 mod recorder;
 
 pub use ascii_plot::AsciiPlot;
-pub use csv::{write_csv, CsvError, CSV_COLUMNS};
+pub use csv::{write_csv, write_csv_with_header, CsvError, CSV_COLUMNS};
 pub use recorder::{Recorder, Sample};

@@ -320,3 +320,89 @@ fn list_artifacts_without_runtime_fails_cleanly() {
         assert!(err.contains("runtime error"), "{err}");
     }
 }
+
+#[test]
+fn train_with_coding_runs_and_records_scheme_in_the_csv_header() {
+    let dir = std::env::temp_dir().join("adasgd_cli_coding");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("coded.csv");
+    let text = run_ok(&[
+        "train",
+        "--n",
+        "10",
+        "--m",
+        "200",
+        "--d",
+        "10",
+        "--k",
+        "9",
+        "--coding",
+        "frc",
+        "--replication",
+        "2",
+        "--eta",
+        "0.002",
+        "--max-iterations",
+        "100",
+        "--max-time",
+        "0",
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(text.contains("100 steps"), "{text}");
+    let body = std::fs::read_to_string(&csv).unwrap();
+    // The run-header comment records the coding scheme and r.
+    assert!(body.contains("# coding: scheme=frc r=2"), "{body}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_rejects_frc_replication_not_dividing_n() {
+    // Regression: r ∤ n used to panic inside FrcScheme::new; it must be
+    // a clean config error pointing at the fix.
+    let out = adasgd()
+        .args([
+            "train", "--n", "10", "--m", "200", "--d", "10", "--coding",
+            "frc", "--replication", "3", "--quiet",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("divide"), "{stderr}");
+    assert!(stderr.contains("cyclic"), "{stderr}");
+    // And the suggested fix works: cyclic takes the same r.
+    let dir = std::env::temp_dir().join("adasgd_cli_coding_cyclic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("cyclic.csv");
+    let ok = adasgd()
+        .args([
+            "train",
+            "--n",
+            "10",
+            "--m",
+            "200",
+            "--d",
+            "10",
+            "--coding",
+            "cyclic",
+            "--replication",
+            "3",
+            "--max-iterations",
+            "50",
+            "--max-time",
+            "0",
+            "--quiet",
+            "--out",
+            csv.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        ok.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

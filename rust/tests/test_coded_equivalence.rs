@@ -1,0 +1,541 @@
+//! Coded-gather ↔ engine equivalence.
+//!
+//! PR 4 retired the standalone coded driver (`coding::run_coded_gd`'s
+//! hand-rolled loop) in favour of the engine's `CodedGather` discipline.
+//! This file keeps the straight-line coded round loop alive as an
+//! executable specification and asserts two contracts:
+//!
+//! 1. **Spec ≡ engine.** With the wait target fixed at the recovery
+//!    threshold, the engine path reproduces the straight-line loop
+//!    bit for bit — model, clock, and recorded samples — on the dense
+//!    zero-cost channel *and* on comm-priced channels, for all three
+//!    placement schemes across seeds.
+//! 2. **r = 1 ≡ fastest-k.** With no redundancy the only decodable
+//!    responder set is all n workers, and `CodedGather` must be
+//!    `FastestKGather` at `k = n` bit for bit — including on priced
+//!    channels (top-k + error feedback uplink, FIFO ingress, delta
+//!    downlink, QSGD).
+//!
+//! Two normalisations distinguish the spec below from the *pre-refactor*
+//! `run_coded_gd` (whose trajectories were pinned only up to tolerances,
+//! by `coding/frc.rs` tests that still pass): per-group shard sums now
+//! accumulate per contributing message in responder order (the wire
+//! model: one message per contributing worker), and the mean is applied
+//! as `g/n` before the step rather than fused into it — both are the
+//! engine's canonical operation order.
+
+use adasgd::coding::{
+    run_coded_comm, run_coded_gd, BernoulliScheme, CodedConfig,
+    CodingScheme, CyclicRepetition, FrcScheme,
+};
+use adasgd::comm::{
+    Broadcast, CommChannel, DownlinkMode, IngressModel, LinkModel,
+    QuantizeQsgd, TopK,
+};
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::engine::{
+    CodedGather, EngineConfig, EngineCore, RngStreams, RoundEngine,
+};
+use adasgd::grad::{GradBackend, NativeBackend};
+use adasgd::master::{
+    fastest_k_select, run_fastest_k_comm, MasterConfig,
+};
+use adasgd::metrics::{Recorder, Sample};
+use adasgd::model::LinRegProblem;
+use adasgd::policy::FixedK;
+use adasgd::rng::Pcg64;
+use adasgd::straggler::{DelayModel, ExponentialDelays};
+
+/// What the spec loop and the engine paths are compared on.
+struct RefRun {
+    w: Vec<f32>,
+    total_time: f64,
+    steps: u64,
+    samples: Vec<Sample>,
+}
+
+/// The straight-line coded round loop: the executable specification of
+/// what `CodedGather` + `RngStreams::coded` must compute when the wait
+/// target is the recovery threshold (where decode always succeeds, so
+/// the first decodable responder set *is* the threshold set).
+fn reference_coded(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    scheme: &dyn CodingScheme,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &CodedConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+) -> RefRun {
+    let n = scheme.n();
+    assert_eq!(backend.n_shards(), n);
+    let d = backend.dim();
+    let threshold = scheme.recovery_threshold();
+    let r = scheme.r() as f64;
+
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0xC0DE);
+    let mut bcast_rng = Pcg64::seed_stream(cfg.seed, 0xB050);
+    let mut comm_rng = Pcg64::seed_stream(cfg.seed, 0xC047);
+    let bytes0 = channel.stats.bytes_sent;
+    let comm_t0 = channel.stats.comm_time;
+    let down0 = channel.stats.bytes_down;
+    let down_t0 = channel.stats.down_time;
+    let msg_bytes = channel.message_bytes(d);
+    let ingress = *channel.ingress();
+
+    let mut w = w0.to_vec();
+    let mut w_view = w0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut partial = vec![0.0f32; d];
+    let mut message = vec![0.0f32; d];
+    let mut decoded = vec![0.0f32; d];
+    let mut delay_buf = vec![0.0f64; n];
+    let mut idx_buf: Vec<usize> = Vec::with_capacity(n);
+    let mut arrival_buf: Vec<f64> = Vec::with_capacity(n);
+
+    let mut recorder =
+        Recorder::with_stride("coded-spec", cfg.record_stride);
+    recorder.push_forced(Sample {
+        iteration: 0,
+        time: 0.0,
+        k: threshold,
+        error: eval_error(&w),
+        ..Default::default()
+    });
+
+    let mut t = 0.0f64;
+    let mut j = 0u64;
+    while j < cfg.max_iterations
+        && (cfg.max_time <= 0.0 || t < cfg.max_time)
+    {
+        backend.on_iteration(j);
+        let down_bytes =
+            channel.broadcast_model(&w, &mut w_view, &mut bcast_rng);
+        for (i, slot) in delay_buf.iter_mut().enumerate() {
+            // r shards per worker → r× compute per response, plus the
+            // priced upload and download.
+            *slot = delays.sample(j, i, &mut rng) * r
+                + channel.link_upload_delay(i, msg_bytes)
+                + channel.download_delay(i, down_bytes);
+        }
+        let (x_thr, _) =
+            fastest_k_select(&delay_buf, threshold, &mut idx_buf);
+        let round_time = if ingress.is_unlimited() {
+            x_thr
+        } else {
+            arrival_buf.clear();
+            arrival_buf
+                .extend(idx_buf[..threshold].iter().map(|&i| delay_buf[i]));
+            ingress.round_completion(&mut arrival_buf, msg_bytes)
+        };
+        t += round_time;
+
+        let cover = scheme
+            .decode(&idx_buf[..threshold])
+            .expect("threshold responses always decode");
+        g.iter_mut().for_each(|v| *v = 0.0);
+        for part in &cover {
+            let (&first, rest) = part.shards.split_first().unwrap();
+            backend.partial_grad(first, &w_view, &mut message);
+            for &shard in rest {
+                backend.partial_grad(shard, &w_view, &mut partial);
+                for (mv, pv) in message.iter_mut().zip(&partial) {
+                    *mv += *pv;
+                }
+            }
+            channel.transmit(
+                part.worker,
+                &message,
+                &mut decoded,
+                &mut comm_rng,
+            );
+            for (gv, pv) in g.iter_mut().zip(&decoded) {
+                *gv += *pv;
+            }
+        }
+        // Exact full gradient: every shard covered once → mean over n.
+        let inv_n = 1.0 / n as f32;
+        for gv in g.iter_mut() {
+            *gv *= inv_n;
+        }
+        for (wv, gv) in w.iter_mut().zip(&g) {
+            *wv -= cfg.eta * *gv;
+        }
+
+        j += 1;
+        if j % cfg.record_stride == 0 {
+            recorder.push_forced(Sample {
+                iteration: j,
+                time: t,
+                k: threshold,
+                error: eval_error(&w),
+                bytes: channel.stats.bytes_sent - bytes0,
+                comm_time: channel.stats.comm_time - comm_t0,
+                bytes_down: channel.stats.bytes_down - down0,
+                down_time: channel.stats.down_time - down_t0,
+            });
+        }
+    }
+    if j % cfg.record_stride != 0 {
+        recorder.push_forced(Sample {
+            iteration: j,
+            time: t,
+            k: threshold,
+            error: eval_error(&w),
+            bytes: channel.stats.bytes_sent - bytes0,
+            comm_time: channel.stats.comm_time - comm_t0,
+            bytes_down: channel.stats.bytes_down - down0,
+            down_time: channel.stats.down_time - down_t0,
+        });
+    }
+
+    RefRun {
+        w,
+        total_time: t,
+        steps: j,
+        samples: recorder.samples().to_vec(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixtures.
+// ---------------------------------------------------------------------
+
+fn setup(seed: u64) -> (NativeBackend, LinRegProblem) {
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 200, d: 10, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    (NativeBackend::new(Shards::partition(&ds, 10)), problem)
+}
+
+fn delays() -> ExponentialDelays {
+    ExponentialDelays::new(1.0)
+}
+
+type ChannelFactory = Box<dyn Fn() -> CommChannel>;
+
+/// Index 0 is the dense zero-cost default (the headline bitwise
+/// contract); the rest exercise compression + error feedback, finite
+/// links, delta downlink, and finite FIFO ingress.
+fn channels() -> Vec<(&'static str, ChannelFactory)> {
+    vec![
+        ("dense-default", Box::new(|| CommChannel::dense(10))),
+        (
+            "topk-ef-uplink",
+            Box::new(|| {
+                CommChannel::new(
+                    Box::new(TopK::new(0.3)),
+                    LinkModel::uniform(10, 400.0, 0.01),
+                    true,
+                )
+            }),
+        ),
+        (
+            "qsgd-delta-ingress",
+            Box::new(|| {
+                CommChannel::new(
+                    Box::new(QuantizeQsgd::new(4)),
+                    LinkModel::uniform(10, 800.0, 0.0),
+                    true,
+                )
+                .with_broadcast(Broadcast::new(
+                    Box::new(TopK::new(0.5)),
+                    LinkModel::uniform(10, 400.0, 0.0),
+                    DownlinkMode::Delta,
+                ))
+                .with_ingress(IngressModel::new(500.0))
+            }),
+        ),
+    ]
+}
+
+fn schemes() -> Vec<(&'static str, Box<dyn CodingScheme>)> {
+    vec![
+        ("frc-r2", Box::new(FrcScheme::new(10, 2).unwrap())),
+        ("frc-r5", Box::new(FrcScheme::new(10, 5).unwrap())),
+        ("cyclic-r3", Box::new(CyclicRepetition::new(10, 3).unwrap())),
+        (
+            "bernoulli-r3",
+            Box::new(BernoulliScheme::new(10, 3, 77).unwrap()),
+        ),
+    ]
+}
+
+fn assert_runs_equal(tag: &str, reference: &RefRun, engine: &RefRun) {
+    assert_eq!(reference.steps, engine.steps, "{tag}: steps");
+    assert_eq!(
+        reference.w, engine.w,
+        "{tag}: final model must be bitwise identical"
+    );
+    assert_eq!(
+        reference.total_time.to_bits(),
+        engine.total_time.to_bits(),
+        "{tag}: clock must be bitwise identical ({} vs {})",
+        reference.total_time,
+        engine.total_time
+    );
+    assert_eq!(
+        reference.samples.len(),
+        engine.samples.len(),
+        "{tag}: sample count"
+    );
+    for (a, b) in reference.samples.iter().zip(&engine.samples) {
+        assert_eq!(a, b, "{tag}: recorded sample mismatch");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Contract 1: spec loop ≡ engine path.
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_reproduces_the_coded_spec_on_the_dense_channel() {
+    // The legacy shim (run_coded_gd → engine) against the straight-line
+    // loop, across ≥ 3 seeds and all placement schemes.
+    for seed in [0u64, 1, 7, 23] {
+        for (sname, scheme) in schemes() {
+            let cfg = CodedConfig {
+                eta: 0.002,
+                max_iterations: 150,
+                max_time: 0.0,
+                seed,
+                record_stride: 20,
+                r: scheme.r(),
+            };
+            let w0 = vec![0.0f32; 10];
+            let reference = {
+                let (mut backend, problem) = setup(seed);
+                let mut channel = CommChannel::dense(10);
+                reference_coded(
+                    &mut backend,
+                    &delays(),
+                    scheme.as_ref(),
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                )
+            };
+            let engine = {
+                let (mut backend, problem) = setup(seed);
+                let run = run_coded_gd(
+                    &mut backend,
+                    &delays(),
+                    scheme.as_ref(),
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                );
+                RefRun {
+                    w: run.w,
+                    total_time: run.total_time,
+                    steps: run.iterations,
+                    samples: run.recorder.samples().to_vec(),
+                }
+            };
+            assert_runs_equal(
+                &format!("coded/{sname}/seed{seed}"),
+                &reference,
+                &engine,
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_reproduces_the_coded_spec_on_priced_channels() {
+    // Same contract with the full bidirectional pricing stack turned
+    // on: the spec performs the identical operations in the identical
+    // order, so equality stays exact.
+    for seed in [3u64, 11] {
+        for (cname, make_channel) in channels() {
+            let scheme = FrcScheme::new(10, 2).unwrap();
+            let threshold = scheme.recovery_threshold();
+            let cfg = CodedConfig {
+                eta: 0.002,
+                max_iterations: 120,
+                max_time: 0.0,
+                seed,
+                record_stride: 20,
+                r: 2,
+            };
+            let mcfg = MasterConfig {
+                eta: cfg.eta,
+                momentum: 0.0,
+                max_iterations: cfg.max_iterations,
+                max_time: cfg.max_time,
+                seed: cfg.seed,
+                record_stride: cfg.record_stride,
+            };
+            let w0 = vec![0.0f32; 10];
+            let reference = {
+                let (mut backend, problem) = setup(seed);
+                let mut channel = make_channel();
+                reference_coded(
+                    &mut backend,
+                    &delays(),
+                    &scheme,
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                )
+            };
+            let engine = {
+                let (mut backend, problem) = setup(seed);
+                let mut channel = make_channel();
+                let mut policy = FixedK::new(threshold);
+                let run = run_coded_comm(
+                    &mut backend,
+                    &delays(),
+                    &scheme,
+                    &mut policy,
+                    &mut channel,
+                    &w0,
+                    &mcfg,
+                    &mut |w| problem.error(w),
+                );
+                RefRun {
+                    w: run.w,
+                    total_time: run.total_time,
+                    steps: run.iterations,
+                    samples: run.recorder.samples().to_vec(),
+                }
+            };
+            assert_runs_equal(
+                &format!("coded-comm/{cname}/seed{seed}"),
+                &reference,
+                &engine,
+            );
+        }
+    }
+}
+
+#[test]
+fn coded_spec_respects_a_time_budget() {
+    let scheme = FrcScheme::new(10, 2).unwrap();
+    let cfg = CodedConfig {
+        eta: 0.001,
+        max_iterations: u64::MAX / 2,
+        max_time: 30.0,
+        seed: 5,
+        record_stride: 10,
+        r: 2,
+    };
+    let w0 = vec![0.0f32; 10];
+    let reference = {
+        let (mut backend, problem) = setup(5);
+        let mut channel = CommChannel::dense(10);
+        reference_coded(
+            &mut backend,
+            &delays(),
+            &scheme,
+            &mut channel,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        )
+    };
+    let engine = {
+        let (mut backend, problem) = setup(5);
+        let run = run_coded_gd(
+            &mut backend,
+            &delays(),
+            &scheme,
+            &w0,
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        RefRun {
+            w: run.w,
+            total_time: run.total_time,
+            steps: run.iterations,
+            samples: run.recorder.samples().to_vec(),
+        }
+    };
+    assert!(reference.total_time >= 30.0);
+    assert_runs_equal("coded/time-budget", &reference, &engine);
+}
+
+// ---------------------------------------------------------------------
+// Contract 2: r = 1 degenerates to fastest-k at k = n, bit for bit,
+// including comm-priced channels.
+// ---------------------------------------------------------------------
+
+#[test]
+fn coded_r1_is_fastest_k_at_n_bitwise_including_priced_channels() {
+    for seed in [0u64, 9, 17] {
+        for (cname, make_channel) in channels() {
+            let cfg = MasterConfig {
+                eta: 0.002,
+                max_iterations: 120,
+                seed,
+                record_stride: 20,
+                ..Default::default()
+            };
+            let w0 = vec![0.0f32; 10];
+            // Both sides share the *sync* rng streams so the delay and
+            // compression draws line up draw for draw.
+            let fastest = {
+                let (mut backend, problem) = setup(seed);
+                let mut policy = FixedK::new(10);
+                let mut channel = make_channel();
+                let run = run_fastest_k_comm(
+                    &mut backend,
+                    &delays(),
+                    &mut policy,
+                    &mut channel,
+                    &w0,
+                    &cfg,
+                    &mut |w| problem.error(w),
+                );
+                RefRun {
+                    w: run.w,
+                    total_time: run.total_time,
+                    steps: run.iterations,
+                    samples: run.recorder.samples().to_vec(),
+                }
+            };
+            let coded = {
+                let (mut backend, problem) = setup(seed);
+                let scheme = FrcScheme::new(10, 1).unwrap();
+                let mut policy = FixedK::new(10);
+                let mut channel = make_channel();
+                let mut eval = |w: &[f32]| problem.error(w);
+                let engine_cfg = EngineConfig {
+                    eta: cfg.eta,
+                    momentum: cfg.momentum,
+                    max_steps: cfg.max_iterations,
+                    max_time: cfg.max_time,
+                    seed: cfg.seed,
+                    record_stride: cfg.record_stride,
+                };
+                let core = EngineCore::new(
+                    "coded-r1",
+                    &mut channel,
+                    &delays(),
+                    &mut eval,
+                    &w0,
+                    engine_cfg,
+                    RngStreams::sync(seed),
+                );
+                let mut gather =
+                    CodedGather::new(&mut backend, &scheme, &mut policy);
+                let run = RoundEngine::new(core).run(&mut gather);
+                RefRun {
+                    w: run.w,
+                    total_time: run.total_time,
+                    steps: run.steps,
+                    samples: run.recorder.samples().to_vec(),
+                }
+            };
+            assert_runs_equal(
+                &format!("r1-vs-fastest/{cname}/seed{seed}"),
+                &fastest,
+                &coded,
+            );
+        }
+    }
+}

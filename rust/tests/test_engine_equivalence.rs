@@ -674,3 +674,168 @@ fn engine_reproduces_the_async_driver_under_a_time_budget() {
 fn delays() -> adasgd::straggler::ExponentialDelays {
     adasgd::straggler::ExponentialDelays::new(1.0)
 }
+
+// ---------------------------------------------------------------------
+// Threaded ↔ simulated determinism: the live cluster decides by virtual
+// time, so real thread scheduling cannot change a trajectory.
+// ---------------------------------------------------------------------
+
+#[test]
+fn threaded_fastest_k_with_an_adaptive_policy_reproduces_the_simulator() {
+    use adasgd::exec::{ThreadedCluster, ThreadedConfig};
+    // TopK + error feedback over a finite uplink with finite FIFO
+    // ingress: the compressor draws no rng, so the threaded per-worker
+    // comm streams and the simulator's shared stream are both inert and
+    // the two paths must agree bit for bit — including every adaptive
+    // k switch, which depends on exact gradient inner products.
+    // Same scale as the PR-3 adaptive equivalence fixture, which is
+    // known to trigger Pflug switches early.
+    let seed = 3u64;
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 200, d: 10, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    let params = PflugParams {
+        k0: 2,
+        step: 3,
+        thresh: 5,
+        burnin: 10,
+        k_max: 10,
+    };
+    let make_channel = || {
+        CommChannel::new(
+            Box::new(TopK::new(0.5)),
+            LinkModel::uniform(10, 500.0, 0.01),
+            true,
+        )
+        .with_ingress(IngressModel::new(300.0))
+    };
+    let sim = {
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 10));
+        let mut policy = AdaptivePflug::new(10, params);
+        let mut channel = make_channel();
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 600,
+            seed,
+            record_stride: 50,
+            ..Default::default()
+        };
+        run_fastest_k_comm(
+            &mut backend,
+            &delays(),
+            &mut policy,
+            &mut channel,
+            &vec![0.0f32; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        )
+    };
+    let threaded = {
+        let shards = Shards::partition(&ds, 10);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+        let mut policy = AdaptivePflug::new(10, params);
+        let mut channel = make_channel();
+        let cfg = ThreadedConfig {
+            eta: 0.002,
+            max_iterations: 600,
+            time_scale: 1e-6,
+            seed,
+            record_stride: 50,
+        };
+        cluster.run_with_comm(
+            &delays(),
+            &mut channel,
+            &mut policy,
+            &vec![0.0f32; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+        )
+    };
+    assert_eq!(sim.w, threaded.w, "final model");
+    assert_eq!(
+        sim.total_time.to_bits(),
+        threaded.virtual_time.to_bits(),
+        "virtual clock"
+    );
+    assert_eq!(sim.k_changes, threaded.k_changes, "adaptive k switches");
+    assert!(
+        !sim.k_changes.is_empty(),
+        "fixture must exercise k switches to be meaningful"
+    );
+    assert_eq!(
+        sim.recorder.samples(),
+        threaded.recorder.samples(),
+        "recorded series"
+    );
+    assert_eq!(sim.bytes_sent, threaded.bytes_sent);
+}
+
+#[test]
+fn threaded_async_reproduces_the_simulated_async_path() {
+    use adasgd::exec::ThreadedCluster;
+    // The threaded async master applies responses in virtual completion
+    // order with the simulator's rng streams; the worker threads run
+    // the same gemv kernels as NativeBackend. Exact across channels —
+    // even QSGD, whose shared comm stream draws in apply order on both
+    // paths. (PS ingress is simulator-only and excluded here.)
+    for seed in [2u64, 13] {
+        for (name, make_channel) in channels() {
+            let ds = SyntheticDataset::generate(
+                SyntheticConfig { m: 200, d: 10, ..Default::default() },
+                seed,
+            );
+            let problem = LinRegProblem::new(&ds);
+            let cfg = AsyncConfig {
+                eta: 0.0005,
+                max_updates: 500,
+                seed,
+                record_stride: 100,
+                ..Default::default()
+            };
+            let sim = {
+                let mut backend =
+                    NativeBackend::new(Shards::partition(&ds, 10));
+                let mut channel = make_channel();
+                run_async_comm(
+                    &mut backend,
+                    &delays(),
+                    &mut channel,
+                    &vec![0.0f32; 10],
+                    &cfg,
+                    &mut |w| problem.error(w),
+                )
+            };
+            let threaded = {
+                let shards = Shards::partition(&ds, 10);
+                let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+                let mut channel = make_channel();
+                cluster.run_async_comm(
+                    &delays(),
+                    &mut channel,
+                    &vec![0.0f32; 10],
+                    &cfg,
+                    &mut |w| problem.error(w),
+                )
+            };
+            let tag = format!("threaded-async/{name}/seed{seed}");
+            assert_eq!(sim.w, threaded.w, "{tag}: final model");
+            assert_eq!(
+                sim.total_time.to_bits(),
+                threaded.virtual_time.to_bits(),
+                "{tag}: virtual clock"
+            );
+            assert_eq!(
+                sim.recorder.samples(),
+                threaded.recorder.samples(),
+                "{tag}: recorded series"
+            );
+            assert_eq!(
+                sim.mean_staleness, threaded.mean_staleness,
+                "{tag}: staleness"
+            );
+            assert_eq!(sim.diverged, threaded.diverged, "{tag}");
+        }
+    }
+}
