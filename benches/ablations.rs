@@ -5,21 +5,28 @@
 //! 3. Theorem-1 oracle vs Algorithm-1 heuristic (how much does knowing
 //!    the system parameters buy?).
 //!
-//! Run: `cargo bench --bench ablations`
+//! The parameter and delay-model grids fan out over
+//! `sweep::SweepExecutor::map` (`--jobs N`, 0 = all cores) — each cell
+//! builds its own delay model and policy from its index, so the numbers
+//! are identical for every worker count. `--smoke` shrinks the grids.
+//!
+//! Run: `cargo bench --bench ablations [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::section;
+use adasgd::bench_harness::{section, BenchArgs};
 use adasgd::coding::{run_coded_gd, CodedConfig, CodingScheme, FrcScheme};
 use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
 use adasgd::grad::NativeBackend;
 use adasgd::master::{run_fastest_k, MasterConfig};
+use adasgd::model::LinRegProblem;
 use adasgd::policy::{
     AdaptivePflug, BoundOptimal, FixedK, KPolicy, PflugParams, VarianceTest,
     VarianceTestParams,
 };
-use adasgd::model::LinRegProblem;
 use adasgd::stats::OrderStats;
 use adasgd::straggler::*;
+use adasgd::sweep::SweepExecutor;
 use adasgd::theory::{BoundParams, ErrorBound};
+use std::sync::Arc;
 
 fn run(
     ds: &SyntheticDataset,
@@ -50,34 +57,73 @@ fn run(
     (r.recorder.min_error().unwrap(), final_k)
 }
 
-fn main() {
-    let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
-    let problem = LinRegProblem::new(&ds);
-    let exp = ExponentialDelays::new(1.0);
-    let budget = 2500.0;
+/// The delay-model zoo for ablation 2, built by index so sweep cells can
+/// construct their own copy (trait objects are not shared across jobs).
+fn model_zoo(i: usize) -> Box<dyn DelayModel> {
+    match i {
+        0 => Box::new(ExponentialDelays::new(1.0)),
+        1 => Box::new(ParetoDelays::new(0.5, 2.2)),
+        2 => Box::new(WeibullDelays::new(1.0, 0.7)),
+        3 => Box::new(BimodalDelays::new(1.0, 5, 8.0, 0.05)),
+        _ => Box::new(ShiftedExponentialDelays::new(0.5, 2.0)),
+    }
+}
 
-    section("ablation 1 — Algorithm-1 parameter sensitivity (t <= 2500)");
+fn main() {
+    let args = BenchArgs::from_env();
+    let exec = SweepExecutor::new(args.jobs);
+    let ds = Arc::new(SyntheticDataset::generate(
+        SyntheticConfig::default(),
+        0,
+    ));
+    let problem = Arc::new(LinRegProblem::new(&ds));
+    let exp = ExponentialDelays::new(1.0);
+    let budget = if args.smoke { 300.0 } else { 2500.0 };
+
+    section(&format!(
+        "ablation 1 — Algorithm-1 parameter sensitivity (t <= {budget}, \
+         jobs={})",
+        exec.jobs()
+    ));
     println!(
         "{:>8} {:>6} {:>8} {:>14} {:>8}",
         "thresh", "step", "burnin", "min error", "final k"
     );
-    for thresh in [2i64, 10, 40] {
-        for step in [5usize, 10, 20] {
-            for burnin in [50u64, 200, 800] {
-                let mut p = AdaptivePflug::new(50, PflugParams {
-                    k0: 10,
-                    step,
-                    thresh,
-                    burnin,
-                    k_max: 40,
-                });
-                let (err, final_k) =
-                    run(&ds, &problem, &exp, &mut p, budget, 0);
-                println!(
-                    "{thresh:>8} {step:>6} {burnin:>8} {err:>14.4e} {final_k:>8}"
-                );
-            }
-        }
+    let (threshes, steps, burnins): (Vec<i64>, Vec<usize>, Vec<u64>) =
+        if args.smoke {
+            (vec![10], vec![10], vec![50, 200])
+        } else {
+            (vec![2, 10, 40], vec![5, 10, 20], vec![50, 200, 800])
+        };
+    let cells: Vec<(i64, usize, u64)> = threshes
+        .iter()
+        .flat_map(|&thresh| {
+            steps.iter().flat_map(move |&step| {
+                burnins.iter().map(move |&burnin| (thresh, step, burnin))
+            })
+        })
+        .collect();
+    let rows = {
+        let ds = Arc::clone(&ds);
+        let problem = Arc::clone(&problem);
+        let cells = cells.clone();
+        exec.map(cells.len(), move |i| {
+            let (thresh, step, burnin) = cells[i];
+            let mut p = AdaptivePflug::new(50, PflugParams {
+                k0: 10,
+                step,
+                thresh,
+                burnin,
+                k_max: 40,
+            });
+            let exp = ExponentialDelays::new(1.0);
+            run(&ds, &problem, &exp, &mut p, budget, 0)
+        })
+    };
+    for ((thresh, step, burnin), (err, final_k)) in cells.iter().zip(&rows) {
+        println!(
+            "{thresh:>8} {step:>6} {burnin:>8} {err:>14.4e} {final_k:>8}"
+        );
     }
     println!(
         "(robust region: min error varies little across thresh/step — \
@@ -85,33 +131,42 @@ fn main() {
     );
 
     section("ablation 2 — delay-model sensitivity (adaptive vs fixed)");
-    let models: Vec<Box<dyn DelayModel>> = vec![
-        Box::new(ExponentialDelays::new(1.0)),
-        Box::new(ParetoDelays::new(0.5, 2.2)),
-        Box::new(WeibullDelays::new(1.0, 0.7)),
-        Box::new(BimodalDelays::new(1.0, 5, 8.0, 0.05)),
-        Box::new(ShiftedExponentialDelays::new(0.5, 2.0)),
-    ];
+    let n_models = if args.smoke { 2 } else { 5 };
     println!(
         "{:<44} {:>13} {:>13} {:>13}",
         "model", "fixed k=10", "fixed k=40", "adaptive"
     );
-    for m in &models {
-        let os = OrderStats::monte_carlo(m.as_ref(), 50, 2000, 5);
-        let budget_m = budget * os.mean(40) / 1.57;
-        let (e10, _) =
-            run(&ds, &problem, m.as_ref(), &mut FixedK::new(10), budget_m, 1);
-        let (e40, _) =
-            run(&ds, &problem, m.as_ref(), &mut FixedK::new(40), budget_m, 1);
-        let mut ap = AdaptivePflug::new(50, PflugParams::default());
-        let (ea, _) = run(&ds, &problem, m.as_ref(), &mut ap, budget_m, 1);
-        println!(
-            "{:<44} {:>13.4e} {:>13.4e} {:>13.4e}",
-            m.name(),
-            e10,
-            e40,
-            ea
-        );
+    let model_rows = {
+        let ds = Arc::clone(&ds);
+        let problem = Arc::clone(&problem);
+        exec.map(n_models, move |i| {
+            let m = model_zoo(i);
+            let os = OrderStats::monte_carlo(m.as_ref(), 50, 2000, 5);
+            let budget_m = budget * os.mean(40) / 1.57;
+            let (e10, _) = run(
+                &ds,
+                &problem,
+                m.as_ref(),
+                &mut FixedK::new(10),
+                budget_m,
+                1,
+            );
+            let (e40, _) = run(
+                &ds,
+                &problem,
+                m.as_ref(),
+                &mut FixedK::new(40),
+                budget_m,
+                1,
+            );
+            let mut ap = AdaptivePflug::new(50, PflugParams::default());
+            let (ea, _) =
+                run(&ds, &problem, m.as_ref(), &mut ap, budget_m, 1);
+            (m.name().to_string(), e10, e40, ea)
+        })
+    };
+    for (name, e10, e40, ea) in &model_rows {
+        println!("{name:<44} {e10:>13.4e} {e40:>13.4e} {ea:>13.4e}");
     }
 
     section("ablation 3 — Theorem-1 oracle vs Algorithm-1 heuristic");
@@ -172,32 +227,45 @@ fn main() {
     section("ablation 5 — redundancy (coded GD) vs ignoring stragglers");
     // The §I.A comparison: fractional-repetition gradient coding gets the
     // EXACT gradient from n-r+1 responses at r x compute; fastest-k gets a
-    // noisy gradient from k cheap responses.
-    for r in [1usize, 2, 5] {
-        let shards = Shards::partition(&ds, 50);
-        let scheme = FrcScheme::new(50, r).expect("r divides 50");
-        let mut backend = NativeBackend::new(shards);
-        let cfg = CodedConfig {
-            eta: 5e-4,
-            max_iterations: 1_000_000,
-            max_time: budget,
-            seed: 4,
-            record_stride: 50,
-            r,
-        };
-        let run = run_coded_gd(
-            &mut backend,
-            &exp,
-            &scheme,
-            &vec![0.0f32; problem.d()],
-            &cfg,
-            &mut |w| problem.error(w),
-        );
+    // noisy gradient from k cheap responses. One executor cell per r.
+    let coded_rows = {
+        let ds = Arc::clone(&ds);
+        let problem = Arc::clone(&problem);
+        let rs = [1usize, 2, 5];
+        exec.map(rs.len(), move |i| {
+            let r = rs[i];
+            let shards = Shards::partition(&ds, 50);
+            let scheme = FrcScheme::new(50, r).expect("r divides 50");
+            let mut backend = NativeBackend::new(shards);
+            let cfg = CodedConfig {
+                eta: 5e-4,
+                max_iterations: 1_000_000,
+                max_time: budget,
+                seed: 4,
+                record_stride: 50,
+                r,
+            };
+            let exp = ExponentialDelays::new(1.0);
+            let run = run_coded_gd(
+                &mut backend,
+                &exp,
+                &scheme,
+                &vec![0.0f32; problem.d()],
+                &cfg,
+                &mut |w| problem.error(w),
+            );
+            (
+                r,
+                scheme.recovery_threshold(),
+                run.iterations,
+                run.recorder.min_error().unwrap(),
+            )
+        })
+    };
+    for (r, threshold, iters, err) in &coded_rows {
         println!(
-            "  coded r={r}: waits for fastest {} of 50, {:>5} iters, min error {:.4e}",
-            scheme.recovery_threshold(),
-            run.iterations,
-            run.recorder.min_error().unwrap()
+            "  coded r={r}: waits for fastest {threshold} of 50, {iters:>5} \
+             iters, min error {err:.4e}"
         );
     }
     let mut ap = AdaptivePflug::new(50, PflugParams::default());

@@ -3,48 +3,53 @@
 //!
 //! Prints the same series the paper plots (error at sampled times per k,
 //! plus the adaptive envelope and the switching times), then times the
-//! theory computations.
+//! theory computations. The per-k bound curves come from
+//! `coordinator::fig1_jobs`, i.e. through the sweep executor
+//! (`--jobs N`, 0 = all cores; identical numbers for every N).
 //!
-//! Run: `cargo bench --bench fig1_bound`
+//! Run: `cargo bench --bench fig1_bound [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::{section, Bencher};
+use adasgd::bench_harness::{section, BenchArgs, Bencher};
+use adasgd::coordinator::fig1_jobs;
 use adasgd::stats::OrderStats;
 use adasgd::theory::{
     adaptive_envelope, switching_times, BoundParams, ErrorBound,
 };
 
 fn main() {
+    let args = BenchArgs::from_env();
     section("Fig. 1 — bound curves (paper Example 1)");
-    let bound = ErrorBound::new(
-        BoundParams::example1(),
-        OrderStats::exponential(5, 5.0),
-    );
-    let ts: Vec<f64> = (0..=14).map(|i| i as f64 * 1000.0).collect();
+    // 15 grid points over [0, 14000]: exactly the 1000-spaced probe rows
+    // the original table printed.
+    let out = fig1_jobs(15, args.jobs);
     print!("{:>8}", "t");
     for k in 1..=5 {
         print!(" {:>12}", format!("k={k}"));
     }
     println!(" {:>12}", "adaptive");
-    let env = adaptive_envelope(&bound, &ts);
-    for (i, &t) in ts.iter().enumerate() {
-        print!("{t:>8.0}");
-        for k in 1..=5 {
-            print!(" {:>12.4e}", bound.eval(k, t));
+    for (i, env) in out.adaptive.samples().iter().enumerate() {
+        print!("{:>8.0}", env.time);
+        for rec in &out.fixed {
+            print!(" {:>12.4e}", rec.samples()[i].error);
         }
-        println!(" {:>12.4e}", env[i]);
+        println!(" {:>12.4e}", env.error);
     }
 
     section("Theorem-1 switching times");
-    for s in switching_times(&bound) {
-        println!(
-            "  t_{} = {:>8.1}   (error at switch: {:.4e})",
-            s.k_next - 1,
-            s.time,
-            s.error
-        );
+    for line in &out.summary {
+        println!("  {line}");
+    }
+
+    if args.smoke {
+        println!("\n(smoke mode: skipping the micro-benchmarks)");
+        return;
     }
 
     section("timings");
+    let bound = ErrorBound::new(
+        BoundParams::example1(),
+        OrderStats::exponential(5, 5.0),
+    );
     let b = Bencher::micro();
     println!(
         "{}",

@@ -4,20 +4,31 @@
 //!
 //! Prints the paper's series (error vs wall-clock per policy), the
 //! time-to-error comparison the paper quotes (adaptive ≈ t=2000 vs fixed
-//! k=40 ≈ t=6000 for the same error), then times a full simulation.
+//! k=40 ≈ t=6000 for the same error), then times a full simulation. The
+//! five runs execute in parallel through `coordinator::fig2_jobs` /
+//! `sweep::SweepExecutor` (`--jobs N`, 0 = all cores — byte-identical
+//! output either way); `--smoke` shrinks the horizon for CI.
 //!
-//! Run: `cargo bench --bench fig2_adaptive_vs_fixed`
+//! Run: `cargo bench --bench fig2_adaptive_vs_fixed [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::{section, Bencher};
-use adasgd::coordinator::fig2;
+use adasgd::bench_harness::{section, BenchArgs, Bencher};
+use adasgd::coordinator::fig2_jobs;
 use adasgd::metrics::write_csv;
 
 fn main() {
-    section("Fig. 2 — error vs wall-clock (n=50, exp(1), eta=5e-4)");
-    let out = fig2(0, 6500.0);
+    let args = BenchArgs::from_env();
+    let max_time = if args.smoke { 400.0 } else { 6500.0 };
+    section(&format!(
+        "Fig. 2 — error vs wall-clock (n=50, exp(1), eta=5e-4, T={max_time})"
+    ));
+    let out = fig2_jobs(0, max_time, args.jobs);
 
     // Print a downsampled table of the series (what the paper plots).
-    let probe_ts = [250.0, 500.0, 1000.0, 2000.0, 4000.0, 6000.0];
+    let probe_ts: Vec<f64> = if args.smoke {
+        vec![100.0, 200.0, 400.0]
+    } else {
+        vec![250.0, 500.0, 1000.0, 2000.0, 4000.0, 6000.0]
+    };
     print!("{:>8}", "t");
     for r in &out.runs {
         print!(" {:>22}", r.label.chars().take(22).collect::<String>());
@@ -61,12 +72,18 @@ fn main() {
 
     section("simulation throughput");
     let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    let bench_t = if args.smoke { 200.0 } else { 1000.0 };
+    // Timed at jobs=1 on purpose: this entry tracks *engine* throughput
+    // across commits, so it must not vary with the host's core count.
     println!(
         "{}",
-        b.run("fig2 adaptive run to t=1000", || {
-            let out = adasgd::coordinator::fig2(1, 1000.0);
-            std::hint::black_box(out.runs.len());
-        })
+        b.run(
+            &format!("fig2 adaptive run to t={bench_t:.0} (jobs=1)"),
+            move || {
+                let out = fig2_jobs(1, bench_t, 1);
+                std::hint::black_box(out.runs.len());
+            }
+        )
         .summary()
     );
 }

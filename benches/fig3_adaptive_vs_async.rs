@@ -5,11 +5,15 @@
 //! documents: undamped async at the paper's parameters diverges
 //! (η·λ_max·staleness ≈ 30), damped async converges but above adaptive.
 //!
-//! Run: `cargo bench --bench fig3_adaptive_vs_async`
+//! The two figure runs execute in parallel through
+//! `coordinator::fig3_jobs` / the sweep executor (`--jobs N`, 0 = all
+//! cores; byte-identical output); `--smoke` shrinks the horizon for CI.
+//!
+//! Run: `cargo bench --bench fig3_adaptive_vs_async [-- --jobs N --smoke]`
 
 use adasgd::async_sgd::{run_async, AsyncConfig};
-use adasgd::bench_harness::{section, Bencher};
-use adasgd::coordinator::fig3;
+use adasgd::bench_harness::{section, BenchArgs, Bencher};
+use adasgd::coordinator::fig3_jobs;
 use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
 use adasgd::grad::NativeBackend;
 use adasgd::metrics::write_csv;
@@ -17,9 +21,18 @@ use adasgd::model::LinRegProblem;
 use adasgd::straggler::ExponentialDelays;
 
 fn main() {
-    section("Fig. 3 — adaptive fastest-k vs asynchronous SGD (eta=2e-4)");
-    let out = fig3(0, 2500.0);
-    let probe_ts = [100.0, 250.0, 500.0, 1000.0, 1500.0, 2500.0];
+    let args = BenchArgs::from_env();
+    let max_time = if args.smoke { 300.0 } else { 2500.0 };
+    section(&format!(
+        "Fig. 3 — adaptive fastest-k vs asynchronous SGD (eta=2e-4, \
+         T={max_time})"
+    ));
+    let out = fig3_jobs(0, max_time, args.jobs);
+    let probe_ts: Vec<f64> = if args.smoke {
+        vec![100.0, 200.0, 300.0]
+    } else {
+        vec![100.0, 250.0, 500.0, 1000.0, 1500.0, 2500.0]
+    };
     print!("{:>8}", "t");
     for r in &out.runs {
         print!(" {:>22}", r.label.chars().take(22).collect::<String>());
@@ -45,14 +58,16 @@ fn main() {
     let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
     let problem = LinRegProblem::new(&ds);
     let delays = ExponentialDelays::new(1.0);
+    let (abl_updates, abl_time) =
+        if args.smoke { (5_000, 200.0) } else { (60_000, 1200.0) };
     for (label, damping) in
         [("undamped (paper params, raw)", false), ("staleness-damped", true)]
     {
         let mut backend = NativeBackend::new(Shards::partition(&ds, 50));
         let cfg = AsyncConfig {
             eta: 2e-4,
-            max_updates: 60_000,
-            max_time: 1200.0,
+            max_updates: abl_updates,
+            max_time: abl_time,
             seed: 0,
             record_stride: 200,
             staleness_damping: damping,
@@ -71,6 +86,11 @@ fn main() {
             run.mean_staleness,
             run.recorder.min_error().unwrap()
         );
+    }
+
+    if args.smoke {
+        println!("\n(smoke mode: skipping the throughput benchmark)");
+        return;
     }
 
     section("async engine throughput");

@@ -15,123 +15,126 @@
 //! adaptive-k matters most — finite ingress punishes large fixed k, and
 //! compressed delta broadcast buys back most of the downlink cost.
 //!
-//! Run: `cargo bench --bench fig_bidirectional`
+//! One `sweep::SweepGrid` declaration, executed in parallel by
+//! `sweep::SweepExecutor` (`--jobs N`, 0 = all cores; byte-identical
+//! output). `--smoke` shrinks the grid for CI.
+//!
+//! Run: `cargo bench --bench fig_bidirectional [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::section;
+use adasgd::bench_harness::{section, BenchArgs};
 use adasgd::config::{
     CommSpec, CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec,
     WorkloadSpec,
 };
-use adasgd::coordinator::run_experiment;
-use adasgd::metrics::{write_csv, Recorder};
 use adasgd::policy::PflugParams;
+use adasgd::sweep::{edit, write_sweep_csv, CfgEdit, SweepExecutor, SweepGrid};
 
 const UP_BANDWIDTH: f64 = 400.0; // bytes per virtual-time unit
 const DOWN_BANDWIDTH: f64 = 400.0;
-const MAX_TIME: f64 = 4000.0;
 
-fn base(seed: u64) -> ExperimentConfig {
+fn base(seed: u64, smoke: bool) -> ExperimentConfig {
+    let (n, m, d, max_time) =
+        if smoke { (10, 200, 10, 200.0) } else { (50, 2000, 100, 4000.0) };
     ExperimentConfig {
         label: String::new(),
-        n: 50,
+        n,
         eta: 5e-4,
         max_iterations: 200_000,
-        max_time: MAX_TIME,
+        max_time,
         seed,
         record_stride: 25,
         delays: DelaySpec::Exponential { lambda: 1.0 },
-        policy: PolicySpec::Fixed { k: 40 },
-        workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
-        comm: CommSpec::default(),
+        policy: PolicySpec::Fixed { k: 4 * n / 5 },
+        workload: WorkloadSpec::LinReg { m, d },
+        comm: CommSpec {
+            bandwidth: UP_BANDWIDTH,
+            ..Default::default()
+        },
         coding: None,
+        jobs: 0,
     }
 }
 
-/// (label, downlink scheme, downlink bandwidth): free dense is the PR-1
-/// baseline; the rest price the broadcast.
-fn downlinks() -> Vec<(&'static str, CompressorSpec, f64)> {
+/// Downlink axis: free dense is the PR-1 baseline; the rest price the
+/// broadcast (compressed schemes broadcast model deltas).
+fn downlink_axis() -> Vec<(String, CfgEdit)> {
+    let priced = |c: &mut ExperimentConfig, scheme: CompressorSpec| {
+        c.comm.downlink = scheme;
+        c.comm.down_bandwidth = DOWN_BANDWIDTH;
+    };
     vec![
-        ("downfree", CompressorSpec::Dense, 0.0),
-        ("downdense", CompressorSpec::Dense, DOWN_BANDWIDTH),
+        ("downfree".into(), edit(|c| c.comm.downlink = CompressorSpec::Dense)),
+        ("downdense".into(), edit(move |c| priced(c, CompressorSpec::Dense))),
         (
-            "downtopk10",
-            CompressorSpec::TopK { frac: 0.1 },
-            DOWN_BANDWIDTH,
+            "downtopk10".into(),
+            edit(move |c| priced(c, CompressorSpec::TopK { frac: 0.1 })),
         ),
         (
-            "downqsgd4",
-            CompressorSpec::Qsgd { levels: 4 },
-            DOWN_BANDWIDTH,
+            "downqsgd4".into(),
+            edit(move |c| priced(c, CompressorSpec::Qsgd { levels: 4 })),
         ),
     ]
 }
 
-/// (label, shared master-ingress capacity): 0 = unlimited.
-fn ingresses() -> Vec<(&'static str, f64)> {
-    vec![("ing-inf", 0.0), ("ing4k", 4000.0)]
-}
+#[path = "sweep_axes.rs"]
+mod sweep_axes;
+use sweep_axes::ingress_axis;
 
-fn policies() -> Vec<(&'static str, PolicySpec)> {
+fn policy_axis(n: usize) -> Vec<(String, CfgEdit)> {
+    let k = 4 * n / 5;
     vec![
-        ("k=40", PolicySpec::Fixed { k: 40 }),
+        (format!("k={k}"), edit(move |c| c.policy = PolicySpec::Fixed { k })),
         (
-            "adaptive",
-            PolicySpec::Adaptive(PflugParams {
-                k0: 10,
-                step: 10,
-                thresh: 10,
-                burnin: 200,
-                k_max: 40,
+            "adaptive".into(),
+            edit(move |c| {
+                c.policy = PolicySpec::Adaptive(PflugParams {
+                    k0: n / 5,
+                    step: n / 5,
+                    thresh: 10,
+                    burnin: 200,
+                    k_max: k,
+                })
             }),
         ),
     ]
 }
 
 fn main() {
+    let args = BenchArgs::from_env();
     let seed = 0u64;
+    let cfg0 = base(seed, args.smoke);
+    let n = cfg0.n;
+    let k_big = 4 * n / 5;
     section(&format!(
-        "bidirectional sweep: downlink x ingress x policy (n=50, exp(1), \
-         uplink dense {UP_BANDWIDTH} B/t, T={MAX_TIME})"
+        "bidirectional sweep: downlink x ingress x policy (n={n}, exp(1), \
+         uplink dense {UP_BANDWIDTH} B/t, T={}, jobs={})",
+        cfg0.max_time,
+        SweepExecutor::new(args.jobs).jobs()
     ));
 
-    let mut runs: Vec<Recorder> = Vec::new();
-    let mut rows = Vec::new();
-    for (dname, downlink, down_bw) in downlinks() {
-        for (iname, ingress_bw) in ingresses() {
-            for (pname, policy) in policies() {
-                let mut cfg = base(seed);
-                cfg.label = format!("{dname}/{iname}/{pname}");
-                cfg.policy = policy;
-                cfg.comm = CommSpec {
-                    bandwidth: UP_BANDWIDTH,
-                    downlink: downlink.clone(),
-                    down_bandwidth: down_bw,
-                    ingress_bw,
-                    ..Default::default()
-                };
-                let out = run_experiment(&cfg).expect("sweep run");
-                rows.push((
-                    cfg.label.clone(),
-                    out.recorder.min_error().unwrap_or(f64::NAN),
-                    out.steps,
-                    out.bytes_sent,
-                    out.bytes_down,
-                    out.total_time,
-                ));
-                runs.push(out.recorder);
-            }
-        }
-    }
+    let specs = SweepGrid::new(cfg0)
+        .axis("downlink", downlink_axis())
+        .axis("ingress", ingress_axis())
+        .axis("policy", policy_axis(n))
+        .build();
+    let outs = SweepExecutor::new(args.jobs)
+        .run(&specs)
+        .expect("bidirectional sweep");
 
     println!(
         "{:<28} {:>12} {:>8} {:>13} {:>13} {:>9}",
         "downlink/ingress/policy", "min error", "iters", "bytes_up",
         "bytes_down", "t_end"
     );
-    for (label, min_err, steps, up, down, t_end) in &rows {
+    for (spec, out) in specs.iter().zip(&outs) {
         println!(
-            "{label:<28} {min_err:>12.4e} {steps:>8} {up:>13} {down:>13} \
-             {t_end:>9.0}"
+            "{:<28} {:>12.4e} {:>8} {:>13} {:>13} {:>9.0}",
+            spec.label,
+            out.recorder.min_error().unwrap_or(f64::NAN),
+            out.steps,
+            out.bytes_sent,
+            out.bytes_down,
+            out.total_time
         );
     }
 
@@ -140,17 +143,18 @@ fn main() {
     // time budget than unlimited ingress (every round is longer).
     section("congestion sanity: finite ingress completes fewer rounds");
     let steps_of = |label: &str| {
-        rows.iter()
-            .find(|r| r.0 == label)
-            .map(|r| r.2)
+        specs
+            .iter()
+            .position(|s| s.label == label)
+            .map(|i| outs[i].steps)
             .expect("labelled run")
     };
-    let free = steps_of("downfree/ing-inf/k=40");
-    let congested = steps_of("downfree/ing4k/k=40");
+    let free = steps_of(&format!("downfree/ing-inf/k={k_big}"));
+    let congested = steps_of(&format!("downfree/ing4k/k={k_big}"));
     if congested < free {
         println!(
             "  OK: ing4k ran {congested} rounds vs {free} unlimited \
-             (shared ingress stretches every k=40 round)"
+             (shared ingress stretches every k={k_big} round)"
         );
     } else {
         println!(
@@ -159,16 +163,19 @@ fn main() {
         );
     }
 
-    // Headline: wall-clock to the free-downlink k=40 floor.
-    section("time-to-error at the free-downlink k=40 floor");
-    let baseline = runs
+    // Headline: wall-clock to the free-downlink k=large floor.
+    section("time-to-error at the free-downlink fixed-k floor");
+    let baseline_label = format!("downfree/ing-inf/k={k_big}");
+    let baseline = specs
         .iter()
-        .find(|r| r.label == "downfree/ing-inf/k=40")
+        .position(|s| s.label == baseline_label)
+        .map(|i| &outs[i].recorder)
         .expect("baseline run");
     let target = baseline.min_error().unwrap() * 1.5;
     println!("  target error: {target:.4e}");
     let base_t = baseline.time_to_error(target);
-    for r in &runs {
+    for out in &outs {
+        let r = &out.recorder;
         match r.time_to_error(target) {
             Some(t) => {
                 let speedup = base_t.map(|bt| bt / t).unwrap_or(f64::NAN);
@@ -181,8 +188,9 @@ fn main() {
         }
     }
 
-    let refs: Vec<&Recorder> = runs.iter().collect();
-    write_csv(std::path::Path::new("results/bench_bidirectional.csv"), &refs)
-        .ok();
-    println!("  series written to results/bench_bidirectional.csv");
+    let out_path = std::path::Path::new("results/bench_bidirectional.csv");
+    match write_sweep_csv(out_path, &specs, &outs) {
+        Ok(()) => println!("  series written to {}", out_path.display()),
+        Err(e) => println!("  (csv not written: {e})"),
+    }
 }

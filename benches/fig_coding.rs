@@ -19,141 +19,163 @@
 //! accepts gradient noise for cheaper rounds. The decodability floor
 //! shows how much of the classic threshold wait is slack.
 //!
-//! Run: `cargo bench --bench fig_coding`
+//! The grid (plus the uncoded baseline spec) executes in parallel
+//! through `sweep::SweepExecutor` (`--jobs N`, 0 = all cores;
+//! byte-identical output). `--smoke` shrinks the grid for CI.
+//!
+//! Run: `cargo bench --bench fig_coding [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::section;
+use adasgd::bench_harness::{section, BenchArgs};
 use adasgd::config::{
     CodingSchemeSpec, CodingSpec, CommSpec, DelaySpec, ExperimentConfig,
     PolicySpec, WorkloadSpec,
 };
-use adasgd::coordinator::run_experiment;
-use adasgd::metrics::{write_csv_with_header, Recorder};
 use adasgd::policy::PflugParams;
+use adasgd::sweep::{
+    edit, write_sweep_csv, CfgEdit, RunSpec, SweepExecutor, SweepGrid,
+};
 
-const N: usize = 50;
 const UP_BANDWIDTH: f64 = 400.0; // bytes per virtual-time unit
-const MAX_TIME: f64 = 1200.0;
 
-fn base(seed: u64) -> ExperimentConfig {
+fn base(seed: u64, smoke: bool) -> ExperimentConfig {
+    let (n, m, d, max_time) =
+        if smoke { (10, 200, 10, 120.0) } else { (50, 2000, 100, 1200.0) };
     ExperimentConfig {
         label: String::new(),
-        n: N,
+        n,
         eta: 5e-4,
         max_iterations: 200_000,
-        max_time: MAX_TIME,
+        max_time,
         seed,
         record_stride: 25,
         delays: DelaySpec::Exponential { lambda: 1.0 },
-        policy: PolicySpec::Fixed { k: N },
-        workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
-        comm: CommSpec {
-            bandwidth: UP_BANDWIDTH,
-            ..Default::default()
-        },
+        policy: PolicySpec::Fixed { k: n },
+        workload: WorkloadSpec::LinReg { m, d },
+        comm: CommSpec { bandwidth: UP_BANDWIDTH, ..Default::default() },
         coding: None,
+        jobs: 0,
     }
 }
 
-fn schemes() -> Vec<CodingSchemeSpec> {
-    vec![
+/// One combined (scheme × r) axis, so a cell's `CodingSpec` is set
+/// whole — no cross-axis backfill with silent defaults. The `/` in the
+/// value labels keeps the joined cell labels identical to a two-axis
+/// split ("frc/r2/fix-thr/ing-inf").
+fn coding_axis() -> Vec<(String, CfgEdit)> {
+    let mut values = Vec::new();
+    for scheme in [
         CodingSchemeSpec::Frc,
         CodingSchemeSpec::Cyclic,
         CodingSchemeSpec::Bernoulli,
-    ]
+    ] {
+        for r in [2usize, 5] {
+            values.push((
+                format!("{scheme}/r{r}"),
+                edit(move |c: &mut ExperimentConfig| {
+                    c.coding = Some(CodingSpec { scheme, r })
+                }),
+            ));
+        }
+    }
+    values
 }
 
-/// (label, policy) for a given replication factor.
-fn policies(r: usize) -> Vec<(String, PolicySpec)> {
-    let threshold = N - r + 1;
-    let floor = N / r;
+/// Wait-target axis (depends on n and r, so it reads both from the cfg;
+/// declare it *after* the coding axis — the edits assert that).
+fn policy_axis() -> Vec<(String, CfgEdit)> {
+    let r_of = |c: &ExperimentConfig| {
+        c.coding
+            .as_ref()
+            .expect("policy axis must come after the coding axis")
+            .r
+    };
+    let threshold = move |c: &ExperimentConfig| c.n - r_of(c) + 1;
+    let floor = move |c: &ExperimentConfig| c.n / r_of(c);
     vec![
-        (format!("fix-thr{threshold}"), PolicySpec::Fixed { k: threshold }),
-        (format!("fix-floor{floor}"), PolicySpec::Fixed { k: floor }),
         (
-            "adaptive".to_string(),
-            PolicySpec::Adaptive(PflugParams {
-                k0: floor,
-                step: 5,
-                thresh: 10,
-                burnin: 200,
-                k_max: N,
+            "fix-thr".into(),
+            edit(move |c| {
+                let k = threshold(c);
+                c.policy = PolicySpec::Fixed { k };
+            }),
+        ),
+        (
+            "fix-floor".into(),
+            edit(move |c| {
+                let k = floor(c);
+                c.policy = PolicySpec::Fixed { k };
+            }),
+        ),
+        (
+            "adaptive".into(),
+            edit(move |c| {
+                let k0 = floor(c);
+                let k_max = c.n;
+                c.policy = PolicySpec::Adaptive(PflugParams {
+                    k0,
+                    step: 5,
+                    thresh: 10,
+                    burnin: 200,
+                    k_max,
+                })
             }),
         ),
     ]
 }
 
-fn ingresses() -> Vec<(&'static str, f64)> {
-    vec![("ing-inf", 0.0), ("ing4k", 4000.0)]
-}
+#[path = "sweep_axes.rs"]
+mod sweep_axes;
+use sweep_axes::ingress_axis;
 
 fn main() {
+    let args = BenchArgs::from_env();
     let seed = 0u64;
+    let cfg0 = base(seed, args.smoke);
+    let n = cfg0.n;
     section(&format!(
-        "coding sweep: scheme x r x k-policy x ingress (n={N}, exp(1), \
-         uplink dense {UP_BANDWIDTH} B/t, T={MAX_TIME})"
+        "coding sweep: scheme x r x k-policy x ingress (n={n}, exp(1), \
+         uplink dense {UP_BANDWIDTH} B/t, T={}, jobs={})",
+        cfg0.max_time,
+        SweepExecutor::new(args.jobs).jobs()
     ));
 
-    let mut runs: Vec<Recorder> = Vec::new();
-    let mut meta: Vec<String> = Vec::new();
-    let mut rows = Vec::new();
+    // Uncoded adaptive fastest-k baseline on the same priced uplink,
+    // prepended to the coded grid as spec 0.
+    let mut baseline = cfg0.clone();
+    baseline.label = "uncoded/adaptive".into();
+    baseline.policy = PolicySpec::Adaptive(PflugParams {
+        k0: n / 5,
+        step: n / 5,
+        thresh: 10,
+        burnin: 200,
+        k_max: n,
+    });
+    let mut specs = vec![RunSpec::from_config(0, baseline)];
+    let grid = SweepGrid::new(cfg0)
+        .axis("coding", coding_axis())
+        .axis("policy", policy_axis())
+        .axis("ingress", ingress_axis())
+        .build();
+    specs.extend(grid.into_iter().map(|mut s| {
+        s.index += 1;
+        s
+    }));
 
-    // Uncoded adaptive fastest-k baseline on the same priced uplink.
-    {
-        let mut cfg = base(seed);
-        cfg.label = "uncoded/adaptive".into();
-        cfg.policy = PolicySpec::Adaptive(PflugParams {
-            k0: 10,
-            step: 10,
-            thresh: 10,
-            burnin: 200,
-            k_max: N,
-        });
-        let out = run_experiment(&cfg).expect("baseline run");
-        rows.push((
-            cfg.label.clone(),
-            out.recorder.min_error().unwrap_or(f64::NAN),
-            out.steps,
-            out.bytes_sent,
-            out.total_time,
-        ));
-        runs.push(out.recorder);
-        meta.push(format!("{}: coding=none", cfg.label));
-    }
-
-    for scheme in schemes() {
-        for r in [2usize, 5] {
-            for (pname, policy) in policies(r) {
-                for (iname, ingress_bw) in ingresses() {
-                    let mut cfg = base(seed);
-                    cfg.label = format!("{scheme}-r{r}/{pname}/{iname}");
-                    cfg.policy = policy.clone();
-                    cfg.comm.ingress_bw = ingress_bw;
-                    cfg.coding = Some(CodingSpec { scheme, r });
-                    let out = run_experiment(&cfg).expect("sweep run");
-                    rows.push((
-                        cfg.label.clone(),
-                        out.recorder.min_error().unwrap_or(f64::NAN),
-                        out.steps,
-                        out.bytes_sent,
-                        out.total_time,
-                    ));
-                    runs.push(out.recorder);
-                    meta.push(format!(
-                        "{}: coding: scheme={scheme} r={r}",
-                        cfg.label
-                    ));
-                }
-            }
-        }
-    }
+    let outs =
+        SweepExecutor::new(args.jobs).run(&specs).expect("coding sweep");
 
     println!(
         "{:<34} {:>12} {:>8} {:>13} {:>9}",
-        "scheme-r/policy/ingress", "min error", "iters", "bytes_up", "t_end"
+        "scheme/r/policy/ingress", "min error", "iters", "bytes_up", "t_end"
     );
-    for (label, min_err, steps, up, t_end) in &rows {
+    for (spec, out) in specs.iter().zip(&outs) {
         println!(
-            "{label:<34} {min_err:>12.4e} {steps:>8} {up:>13} {t_end:>9.0}"
+            "{:<34} {:>12.4e} {:>8} {:>13} {:>9.0}",
+            spec.label,
+            out.recorder.min_error().unwrap_or(f64::NAN),
+            out.steps,
+            out.bytes_sent,
+            out.total_time
         );
     }
 
@@ -161,13 +183,14 @@ fn main() {
     section("sanity: the decodability floor is never slower than the \
              threshold wait");
     let steps_of = |label: &str| {
-        rows.iter()
-            .find(|row| row.0 == label)
-            .map(|row| row.2)
+        specs
+            .iter()
+            .position(|s| s.label == label)
+            .map(|i| outs[i].steps)
             .expect("labelled run")
     };
-    let thr = steps_of("frc-r2/fix-thr49/ing-inf");
-    let floor = steps_of("frc-r2/fix-floor25/ing-inf");
+    let thr = steps_of("frc/r2/fix-thr/ing-inf");
+    let floor = steps_of("frc/r2/fix-floor/ing-inf");
     if floor >= thr {
         println!(
             "  OK: frc r=2 floor target ran {floor} rounds vs {thr} at \
@@ -180,14 +203,12 @@ fn main() {
     }
 
     section("time-to-error vs the uncoded adaptive baseline");
-    let baseline = runs
-        .iter()
-        .find(|r| r.label == "uncoded/adaptive")
-        .expect("baseline");
-    let target = baseline.min_error().unwrap() * 1.5;
+    let baseline_rec = &outs[0].recorder;
+    let target = baseline_rec.min_error().unwrap() * 1.5;
     println!("  target error: {target:.4e}");
-    let base_t = baseline.time_to_error(target);
-    for r in &runs {
+    let base_t = baseline_rec.time_to_error(target);
+    for out in &outs {
+        let r = &out.recorder;
         match r.time_to_error(target) {
             Some(t) => {
                 let speedup = base_t.map(|bt| bt / t).unwrap_or(f64::NAN);
@@ -200,12 +221,9 @@ fn main() {
         }
     }
 
-    let refs: Vec<&Recorder> = runs.iter().collect();
-    write_csv_with_header(
-        std::path::Path::new("results/bench_coding.csv"),
-        &refs,
-        &meta,
-    )
-    .ok();
-    println!("  series written to results/bench_coding.csv");
+    let out_path = std::path::Path::new("results/bench_coding.csv");
+    match write_sweep_csv(out_path, &specs, &outs) {
+        Ok(()) => println!("  series written to {}", out_path.display()),
+        Err(e) => println!("  (csv not written: {e})"),
+    }
 }

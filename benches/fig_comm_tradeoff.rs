@@ -8,121 +8,166 @@
 //! schemes reach the dense run's error floor in *less* wall-clock, and
 //! the adaptive policy composes with any scheme.
 //!
-//! Run: `cargo bench --bench fig_comm_tradeoff`
+//! The grid is a `sweep::SweepGrid` declaration executed in parallel by
+//! `sweep::SweepExecutor` (`--jobs N`, 0 = all cores — output is
+//! byte-identical for every N). `--smoke` shrinks the grid to a
+//! seconds-long end-to-end pass; CI runs exactly that
+//! (`cargo bench --bench fig_comm_tradeoff -- --smoke --jobs 2`).
+//!
+//! Run: `cargo bench --bench fig_comm_tradeoff [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::section;
+use adasgd::bench_harness::{section, BenchArgs};
 use adasgd::config::{
     CommSpec, CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec,
     WorkloadSpec,
 };
-use adasgd::coordinator::run_experiment;
-use adasgd::metrics::{write_csv, Recorder};
 use adasgd::policy::PflugParams;
+use adasgd::sweep::{edit, write_sweep_csv, CfgEdit, SweepExecutor, SweepGrid};
 
 const BANDWIDTH: f64 = 400.0; // bytes per virtual-time unit
 const LATENCY: f64 = 0.05;
-const MAX_TIME: f64 = 6500.0;
 
-fn base(seed: u64) -> ExperimentConfig {
-    ExperimentConfig {
-        label: String::new(),
-        n: 50,
-        eta: 5e-4,
-        max_iterations: 200_000,
-        max_time: MAX_TIME,
-        seed,
-        record_stride: 25,
-        delays: DelaySpec::Exponential { lambda: 1.0 },
-        policy: PolicySpec::Fixed { k: 40 },
-        workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
-        comm: CommSpec::default(),
-        coding: None,
+/// Scenario scale: the paper-sized grid, or a tiny smoke grid that
+/// exercises the same path end-to-end in seconds.
+struct Scale {
+    n: usize,
+    m: usize,
+    d: usize,
+    max_time: f64,
+    k_small: usize,
+    k_large: usize,
+}
+
+impl Scale {
+    fn new(smoke: bool) -> Self {
+        if smoke {
+            Self { n: 10, m: 200, d: 10, max_time: 150.0, k_small: 2, k_large: 8 }
+        } else {
+            Self { n: 50, m: 2000, d: 100, max_time: 6500.0, k_small: 10, k_large: 40 }
+        }
     }
 }
 
-fn schemes() -> Vec<(&'static str, CompressorSpec)> {
+fn base(seed: u64, s: &Scale) -> ExperimentConfig {
+    ExperimentConfig {
+        label: String::new(),
+        n: s.n,
+        eta: 5e-4,
+        max_iterations: 200_000,
+        max_time: s.max_time,
+        seed,
+        record_stride: 25,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: s.k_large },
+        workload: WorkloadSpec::LinReg { m: s.m, d: s.d },
+        comm: CommSpec {
+            error_feedback: true,
+            bandwidth: BANDWIDTH,
+            latency: LATENCY,
+            ..Default::default()
+        },
+        coding: None,
+        jobs: 0,
+    }
+}
+
+fn scheme_axis() -> Vec<(String, CfgEdit)> {
     vec![
-        ("dense", CompressorSpec::Dense),
-        ("topk10", CompressorSpec::TopK { frac: 0.1 }),
-        ("randk10", CompressorSpec::RandK { frac: 0.1 }),
-        ("qsgd4", CompressorSpec::Qsgd { levels: 4 }),
+        ("dense".into(), edit(|c| c.comm.scheme = CompressorSpec::Dense)),
+        (
+            "topk10".into(),
+            edit(|c| c.comm.scheme = CompressorSpec::TopK { frac: 0.1 }),
+        ),
+        (
+            "randk10".into(),
+            edit(|c| c.comm.scheme = CompressorSpec::RandK { frac: 0.1 }),
+        ),
+        (
+            "qsgd4".into(),
+            edit(|c| c.comm.scheme = CompressorSpec::Qsgd { levels: 4 }),
+        ),
     ]
 }
 
-fn policies() -> Vec<(&'static str, PolicySpec)> {
+fn policy_axis(s: &Scale) -> Vec<(String, CfgEdit)> {
+    let (k_small, k_large) = (s.k_small, s.k_large);
     vec![
-        ("k=10", PolicySpec::Fixed { k: 10 }),
-        ("k=40", PolicySpec::Fixed { k: 40 }),
         (
-            "adaptive",
-            PolicySpec::Adaptive(PflugParams {
-                k0: 10,
-                step: 10,
-                thresh: 10,
-                burnin: 200,
-                k_max: 40,
+            format!("k={k_small}"),
+            edit(move |c| c.policy = PolicySpec::Fixed { k: k_small }),
+        ),
+        (
+            format!("k={k_large}"),
+            edit(move |c| c.policy = PolicySpec::Fixed { k: k_large }),
+        ),
+        (
+            "adaptive".into(),
+            edit(move |c| {
+                c.policy = PolicySpec::Adaptive(PflugParams {
+                    k0: k_small,
+                    step: k_small,
+                    thresh: 10,
+                    burnin: 200,
+                    k_max: k_large,
+                })
             }),
         ),
     ]
 }
 
 fn main() {
+    let args = BenchArgs::from_env();
+    let scale = Scale::new(args.smoke);
     let seed = 0u64;
     section(&format!(
-        "comm trade-off: scheme x k-policy (n=50, exp(1), uplink {BANDWIDTH} B/t + {LATENCY} lat, T={MAX_TIME})"
+        "comm trade-off: scheme x k-policy (n={}, exp(1), uplink \
+         {BANDWIDTH} B/t + {LATENCY} lat, T={}, jobs={})",
+        scale.n,
+        scale.max_time,
+        SweepExecutor::new(args.jobs).jobs()
     ));
 
-    let mut runs: Vec<Recorder> = Vec::new();
-    let mut rows = Vec::new();
-    for (sname, scheme) in schemes() {
-        for (pname, policy) in policies() {
-            let mut cfg = base(seed);
-            cfg.label = format!("{sname}/{pname}");
-            cfg.policy = policy;
-            cfg.comm = CommSpec {
-                scheme: scheme.clone(),
-                error_feedback: true,
-                bandwidth: BANDWIDTH,
-                latency: LATENCY,
-                ..Default::default()
-            };
-            let out = run_experiment(&cfg).expect("sweep run");
-            rows.push((
-                cfg.label.clone(),
-                out.recorder.min_error().unwrap_or(f64::NAN),
-                out.steps,
-                out.bytes_sent,
-                out.total_time,
-            ));
-            runs.push(out.recorder);
-        }
-    }
+    let specs = SweepGrid::new(base(seed, &scale))
+        .axis("scheme", scheme_axis())
+        .axis("policy", policy_axis(&scale))
+        .build();
+    let outs = SweepExecutor::new(args.jobs)
+        .run(&specs)
+        .expect("comm trade-off sweep");
 
     println!(
         "{:<18} {:>12} {:>9} {:>14} {:>10}",
         "scheme/policy", "min error", "iters", "bytes", "t_end"
     );
-    for (label, min_err, steps, bytes, t_end) in &rows {
+    for (spec, out) in specs.iter().zip(&outs) {
         println!(
-            "{label:<18} {min_err:>12.4e} {steps:>9} {bytes:>14} {t_end:>10.0}"
+            "{:<18} {:>12.4e} {:>9} {:>14} {:>10.0}",
+            spec.label,
+            out.recorder.min_error().unwrap_or(f64::NAN),
+            out.steps,
+            out.bytes_sent,
+            out.total_time
         );
     }
 
-    // Headline: wall-clock to reach 1.5x the dense/k=40 floor.
-    section("time-to-error at the dense k=40 floor (the paper's metric, comm-priced)");
-    let dense_k40 = runs
+    // Headline: wall-clock to reach 1.5x the dense/k=large floor.
+    section("time-to-error at the dense k=large floor (the paper's metric, comm-priced)");
+    let dense_label = format!("dense/k={}", scale.k_large);
+    let dense_k40 = specs
         .iter()
-        .find(|r| r.label == "dense/k=40")
-        .expect("dense/k=40 run");
+        .position(|s| s.label == dense_label)
+        .map(|i| &outs[i].recorder)
+        .expect("dense/k=large run");
     let target = dense_k40.min_error().unwrap() * 1.5;
     println!("  target error: {target:.4e}");
     let dense_t = dense_k40.time_to_error(target);
-    for r in &runs {
+    for out in &outs {
+        let r = &out.recorder;
         match r.time_to_error(target) {
             Some(t) => {
                 let speedup = dense_t.map(|dt| dt / t).unwrap_or(f64::NAN);
                 println!(
-                    "  {:<18} t = {t:>7.0}   ({speedup:.2}x vs dense/k=40)",
+                    "  {:<18} t = {t:>7.0}   ({speedup:.2}x vs {dense_label})",
                     r.label
                 );
             }
@@ -132,22 +177,25 @@ fn main() {
 
     // The claim the sweep exists to check: at least one compressed scheme
     // strictly beats dense wall-clock at the same policy.
-    let topk_k40 = runs
+    let topk_label = format!("topk10/k={}", scale.k_large);
+    let topk_k40 = specs
         .iter()
-        .find(|r| r.label == "topk10/k=40")
-        .and_then(|r| r.time_to_error(target));
+        .position(|s| s.label == topk_label)
+        .and_then(|i| outs[i].recorder.time_to_error(target));
     match (dense_t, topk_k40) {
         (Some(dt), Some(tt)) if tt < dt => println!(
-            "\n  OK: topk10/k=40 reaches the target {:.2}x faster than dense/k=40",
+            "\n  OK: {topk_label} reaches the target {:.2}x faster than {dense_label}",
             dt / tt
         ),
         (dt, tt) => println!(
-            "\n  WARNING: expected topk10 < dense at k=40; got dense={dt:?}, topk={tt:?}"
+            "\n  WARNING: expected topk10 < dense at k={}; got dense={dt:?}, topk={tt:?}",
+            scale.k_large
         ),
     }
 
-    let refs: Vec<&Recorder> = runs.iter().collect();
-    write_csv(std::path::Path::new("results/bench_comm_tradeoff.csv"), &refs)
-        .ok();
-    println!("  series written to results/bench_comm_tradeoff.csv");
+    let out_path = std::path::Path::new("results/bench_comm_tradeoff.csv");
+    match write_sweep_csv(out_path, &specs, &outs) {
+        Ok(()) => println!("  series written to {}", out_path.display()),
+        Err(e) => println!("  (csv not written: {e})"),
+    }
 }

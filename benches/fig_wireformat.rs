@@ -18,9 +18,15 @@
 //! the values — and the two together beat QSGD's 4-level packing on
 //! time-to-error while staying a trivial encoder.
 //!
-//! Run: `cargo bench --bench fig_wireformat`
+//! Custom `WireFormat` channels are not an `ExperimentConfig` axis, so
+//! the 16 runs go through `sweep::SweepExecutor::map` — the same
+//! order-preserving parallel fan-out the config sweeps use (`--jobs N`,
+//! 0 = all cores; byte-identical output). `--smoke` shrinks the horizon
+//! for CI.
+//!
+//! Run: `cargo bench --bench fig_wireformat [-- --jobs N --smoke]`
 
-use adasgd::bench_harness::section;
+use adasgd::bench_harness::{section, BenchArgs};
 use adasgd::comm::{
     CommChannel, Compressor, Dense, LinkModel, QuantizeQsgd, RandK, TopK,
     WireFormat,
@@ -32,13 +38,14 @@ use adasgd::metrics::{write_csv, Recorder};
 use adasgd::model::LinRegProblem;
 use adasgd::policy::FixedK;
 use adasgd::straggler::ExponentialDelays;
+use adasgd::sweep::SweepExecutor;
 use std::path::Path;
+use std::sync::Arc;
 
 const N: usize = 50;
 const D: usize = 100;
 const K: usize = 40;
 const BANDWIDTH: f64 = 400.0; // bytes per virtual-time unit
-const MAX_TIME: f64 = 3000.0;
 
 /// (label, wire format) — the four framing corners.
 fn wires() -> Vec<(&'static str, WireFormat)> {
@@ -64,26 +71,59 @@ fn schemes(
     ]
 }
 
+/// One sweep cell's results (everything the report prints).
+struct Cell {
+    label: String,
+    msg_bytes: u64,
+    recorder: Recorder,
+    iterations: u64,
+    bytes_sent: u64,
+    total_time: f64,
+}
+
 fn main() {
+    let args = BenchArgs::from_env();
+    let max_time = if args.smoke { 300.0 } else { 3000.0 };
     let seed = 0u64;
     section(&format!(
         "wire-format sweep: framing x scheme (n={N}, d={D}, k={K}, \
-         uplink {BANDWIDTH} B/t, T={MAX_TIME})"
+         uplink {BANDWIDTH} B/t, T={max_time}, jobs={})",
+        SweepExecutor::new(args.jobs).jobs()
     ));
 
-    let ds = SyntheticDataset::generate(
+    let ds = Arc::new(SyntheticDataset::generate(
         SyntheticConfig { m: 2000, d: D, ..Default::default() },
         seed,
-    );
-    let problem = LinRegProblem::new(&ds);
+    ));
+    // Normal-equations build + solve happen once; cells share the handle.
+    let problem = Arc::new(LinRegProblem::new(&ds));
 
-    let mut runs: Vec<Recorder> = Vec::new();
-    let mut rows = Vec::new();
-    for (wname, wire) in wires() {
-        for (sname, compressor, feedback) in schemes(wire) {
+    // Flattened (wire x scheme) grid; each cell is a pure function of
+    // its index, executed order-preserving by the sweep executor.
+    let grid: Vec<(String, usize, usize)> = wires()
+        .iter()
+        .enumerate()
+        .flat_map(|(wi, (wname, wire))| {
+            schemes(*wire)
+                .iter()
+                .enumerate()
+                .map(|(si, (sname, _, _))| {
+                    (format!("{sname}/{wname}"), wi, si)
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    let cells: Vec<Cell> = {
+        let ds = Arc::clone(&ds);
+        let problem = Arc::clone(&problem);
+        let grid = grid.clone();
+        SweepExecutor::new(args.jobs).map(grid.len(), move |i| {
+            let (label, wi, si) = grid[i].clone();
+            let wire = wires()[wi].1;
+            let (_, compressor, feedback) = schemes(wire).swap_remove(si);
             let msg_bytes = compressor.encoded_bytes(D);
-            let mut backend =
-                NativeBackend::new(Shards::partition(&ds, N));
+            let mut backend = NativeBackend::new(Shards::partition(&ds, N));
             let delays = ExponentialDelays::new(1.0);
             let mut policy = FixedK::new(K);
             let mut channel = CommChannel::new(
@@ -94,7 +134,7 @@ fn main() {
             let cfg = MasterConfig {
                 eta: 5e-4,
                 max_iterations: 200_000,
-                max_time: MAX_TIME,
+                max_time,
                 seed,
                 record_stride: 25,
                 ..Default::default()
@@ -108,29 +148,32 @@ fn main() {
                 &cfg,
                 &mut |w| problem.error(w),
             );
-            let label = format!("{sname}/{wname}");
             let mut recorder = run.recorder;
             recorder.label = label.clone();
-            rows.push((
+            Cell {
                 label,
                 msg_bytes,
-                recorder.min_error().unwrap_or(f64::NAN),
-                run.iterations,
-                run.bytes_sent,
-                run.total_time,
-            ));
-            runs.push(recorder);
-        }
-    }
+                recorder,
+                iterations: run.iterations,
+                bytes_sent: run.bytes_sent,
+                total_time: run.total_time,
+            }
+        })
+    };
 
     println!(
         "{:<18} {:>9} {:>12} {:>8} {:>13} {:>9}",
         "scheme/wire", "msg B", "min error", "iters", "bytes_up", "t_end"
     );
-    for (label, msg, min_err, iters, up, t_end) in &rows {
+    for c in &cells {
         println!(
-            "{label:<18} {msg:>9} {min_err:>12.4e} {iters:>8} {up:>13} \
-             {t_end:>9.0}"
+            "{:<18} {:>9} {:>12.4e} {:>8} {:>13} {:>9.0}",
+            c.label,
+            c.msg_bytes,
+            c.recorder.min_error().unwrap_or(f64::NAN),
+            c.iterations,
+            c.bytes_sent,
+            c.total_time
         );
     }
 
@@ -158,17 +201,19 @@ fn main() {
     // iterations for the same scheme.
     section("smaller frames complete more rounds in the budget");
     let iters_of = |label: &str| {
-        rows.iter().find(|r| r.0 == label).map(|r| r.3).unwrap()
+        cells.iter().find(|c| c.label == label).map(|c| c.iterations).unwrap()
     };
     let full = iters_of("topk10/f32-u32");
     let compact = iters_of("topk10/f16-u16");
     println!("  topk10: {full} iters (f32/u32) -> {compact} (f16/u16)");
+    // At the smoke horizon the margin is a handful of rounds; only hold
+    // the full-scale run to the strict ordering.
     assert!(
-        compact > full,
+        args.smoke || compact > full,
         "compact framing must buy iterations: {compact} vs {full}"
     );
 
-    let refs: Vec<&Recorder> = runs.iter().collect();
+    let refs: Vec<&Recorder> = cells.iter().map(|c| &c.recorder).collect();
     let out = Path::new("results/fig_wireformat.csv");
     match write_csv(out, &refs) {
         Ok(()) => println!("\n  series written to {}", out.display()),

@@ -1,13 +1,26 @@
 //! Whole-stack hot-path microbenchmarks — the §Perf measurement harness.
 //!
-//! L3: fastest-k selection, master-iteration throughput, event queue.
-//! L3↔RT: PJRT execute latency (persistent-buffer vs literal upload).
-//! L1-analog: native fused partial gradient (the Rust mirror of the
-//! Pallas kernel's single-pass structure).
+//! L3: fastest-k selection, master-iteration throughput, event queue,
+//! sweep-executor fan-out. L3↔RT (with `--features pjrt`): PJRT execute
+//! latency (persistent-buffer vs literal upload). L1-analog: native
+//! fused partial gradient (the Rust mirror of the Pallas kernel's
+//! single-pass structure).
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! Besides the text report, every timed entry lands in
+//! `results/BENCH_hotpath.json` (name, median, p10/p90, mean, samples) —
+//! the machine-readable perf trajectory CI and future optimisation PRs
+//! diff against. `--jobs` is deliberately ignored here: the sweep
+//! fan-out section times the fixed pair jobs=1 vs jobs=0 so its two
+//! entries stay comparable across runs.
+//!
+//! Run: `cargo bench --bench perf_hotpath [-- --smoke]`
 
-use adasgd::bench_harness::{fmt_duration, section, Bencher};
+use adasgd::bench_harness::{
+    fmt_duration, section, BenchArgs, BenchResult, Bencher,
+};
+use adasgd::config::{
+    DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
+};
 use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
 use adasgd::grad::{GradBackend, NativeBackend};
 use adasgd::linalg::{gemm, gemv, Matrix};
@@ -15,12 +28,43 @@ use adasgd::master::{fastest_k_select, run_fastest_k, MasterConfig};
 use adasgd::model::LinRegProblem;
 use adasgd::policy::FixedK;
 use adasgd::rng::{Pcg64, Rng};
-use adasgd::runtime::{Runtime, XlaBackend};
 use adasgd::sim::EventQueue;
 use adasgd::straggler::ExponentialDelays;
+use adasgd::sweep::{RunSpec, SweepExecutor};
+
+/// Print an entry's one-line summary and keep it for the JSON report.
+fn emit(report: &mut Vec<BenchResult>, r: BenchResult) {
+    println!("{}", r.summary());
+    report.push(r);
+}
+
+/// A tiny but non-trivial experiment for the executor fan-out entry.
+fn sweep_spec(i: usize, iters: u64) -> RunSpec {
+    RunSpec::from_config(i, ExperimentConfig {
+        label: format!("hotpath-cell{i}"),
+        n: 10,
+        eta: 1e-3,
+        max_iterations: iters,
+        max_time: 0.0,
+        seed: i as u64,
+        record_stride: 1_000_000, // no eval in the timed loop
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 5 },
+        workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        comm: Default::default(),
+        coding: None,
+        jobs: 0,
+    })
+}
 
 fn main() {
-    let micro = Bencher::micro();
+    let args = BenchArgs::from_env();
+    let mut report: Vec<BenchResult> = Vec::new();
+    let micro = if args.smoke {
+        Bencher { warmup_iters: 5, samples: 8, iters_per_sample: 10 }
+    } else {
+        Bencher::micro()
+    };
     let ds = SyntheticDataset::generate(SyntheticConfig::default(), 0);
     let shards = Shards::partition(&ds, 50);
 
@@ -29,56 +73,38 @@ fn main() {
     let delays: Vec<f64> = (0..50).map(|_| rng.next_f64()).collect();
     let mut idx = Vec::with_capacity(50);
     for k in [1usize, 10, 25, 49, 50] {
-        println!(
-            "{}",
-            micro
-                .run(&format!("select k={k} of 50"), || {
-                    std::hint::black_box(fastest_k_select(
-                        &delays, k, &mut idx,
-                    ));
-                })
-                .summary()
-        );
+        let r = micro.run(&format!("select k={k} of 50"), || {
+            std::hint::black_box(fastest_k_select(&delays, k, &mut idx));
+        });
+        emit(&mut report, r);
     }
 
     section("L3 — event queue (async engine core)");
-    println!(
-        "{}",
-        micro
-            .run("schedule+pop 1000 events", || {
-                let mut q = EventQueue::new();
-                for i in 0..1000 {
-                    q.schedule_at((i * 7 % 1000) as f64, i);
-                }
-                while q.pop().is_some() {}
-            })
-            .summary()
-    );
+    let r = micro.run("schedule+pop 1000 events", || {
+        let mut q = EventQueue::new();
+        for i in 0..1000 {
+            q.schedule_at((i * 7 % 1000) as f64, i);
+        }
+        while q.pop().is_some() {}
+    });
+    emit(&mut report, r);
 
     section("native kernels (Rust mirror of the Pallas structure)");
     let x40 = shards.x[0].clone();
     let w: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
     let mut out = vec![0.0f32; 100];
     let mut backend = NativeBackend::new(shards.clone());
-    println!(
-        "{}",
-        micro
-            .run("partial_grad shard (s=40, d=100)", || {
-                backend.partial_grad(0, &w, &mut out);
-                std::hint::black_box(&out);
-            })
-            .summary()
-    );
+    let r = micro.run("partial_grad shard (s=40, d=100)", || {
+        backend.partial_grad(0, &w, &mut out);
+        std::hint::black_box(&out);
+    });
+    emit(&mut report, r);
     let mut resid = vec![0.0f32; 40];
-    println!(
-        "{}",
-        micro
-            .run("gemv 40x100", || {
-                gemv(1.0, &x40, &w, 0.0, &mut resid);
-                std::hint::black_box(&resid);
-            })
-            .summary()
-    );
+    let r = micro.run("gemv 40x100", || {
+        gemv(1.0, &x40, &w, 0.0, &mut resid);
+        std::hint::black_box(&resid);
+    });
+    emit(&mut report, r);
     let a = Matrix::zeros(256, 256);
     let b = Matrix::zeros(256, 256);
     let mut c = Matrix::zeros(256, 256);
@@ -93,20 +119,21 @@ fn main() {
         r.summary(),
         flops / r.median() / 1e9
     );
+    report.push(r);
 
     section("master loop end-to-end (native, n=50, fig-2 shapes)");
     let problem = LinRegProblem::new(&ds);
     let em = ExponentialDelays::new(1.0);
+    let loop_iters: u64 = if args.smoke { 200 } else { 2000 };
     for k in [10usize, 40] {
         let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
-        let iters = 2000u64;
-        let r = b.run(&format!("2000 iterations @ k={k}"), || {
+        let r = b.run(&format!("{loop_iters} iterations @ k={k}"), || {
             let mut backend = NativeBackend::new(shards.clone());
             let mut policy = FixedK::new(k);
             let cfg = MasterConfig {
                 eta: 5e-4,
                 momentum: 0.0,
-                max_iterations: iters,
+                max_iterations: loop_iters,
                 max_time: 0.0,
                 seed: 3,
                 record_stride: 1_000_000, // no eval in the timed loop
@@ -124,53 +151,101 @@ fn main() {
         println!(
             "{}   ({} per iteration)",
             r.summary(),
-            fmt_duration(r.median() / iters as f64)
+            fmt_duration(r.median() / loop_iters as f64)
         );
+        report.push(r);
     }
 
+    section("sweep executor — parallel experiment fan-out (8 specs)");
+    // The sweep layer's hot path: fan 8 independent tiny experiments out
+    // and reassemble in order. jobs=1 is the sequential reference; the
+    // parallel entry shows the thread-pool speedup on the same grid.
+    let cell_iters: u64 = if args.smoke { 200 } else { 1000 };
+    let specs: Vec<RunSpec> =
+        (0..8).map(|i| sweep_spec(i, cell_iters)).collect();
+    let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    for (tag, jobs) in [("jobs=1", 1usize), ("jobs=0 (all cores)", 0)] {
+        let exec = SweepExecutor::new(jobs);
+        let specs = specs.clone();
+        let name = format!("sweep 8x{cell_iters}-iter specs, {tag}");
+        let r = b.run(&name, move || {
+            let outs = exec.run(&specs).expect("hotpath sweep");
+            std::hint::black_box(outs.len());
+        });
+        emit(&mut report, r);
+    }
+
+    pjrt_section(&shards, &w, &mut out, &mut report);
+
+    let json = std::path::Path::new("results/BENCH_hotpath.json");
+    match adasgd::bench_harness::write_json_report(json, &report) {
+        Ok(()) => println!(
+            "\n{} entries written to {}",
+            report.len(),
+            json.display()
+        ),
+        Err(e) => println!("\n(json report not written: {e})"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section(
+    _shards: &Shards,
+    _w: &[f32],
+    _out: &mut [f32],
+    _report: &mut Vec<BenchResult>,
+) {
+    section("PJRT runtime");
+    println!("  skipped: build with --features pjrt (and real xla bindings)");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section(
+    shards: &Shards,
+    w: &[f32],
+    out: &mut [f32],
+    report: &mut Vec<BenchResult>,
+) {
+    use adasgd::runtime::{Runtime, XlaBackend};
     section("PJRT runtime (requires `make artifacts`)");
     match Runtime::open_default() {
         Err(e) => println!("  skipped: {e}"),
         Ok(rt) => {
-            let mut xla = XlaBackend::new(&rt, &shards).expect("backend");
-            let b = Bencher { warmup_iters: 20, samples: 15, iters_per_sample: 50 };
-            println!(
-                "{}",
-                b.run("pjrt partial_grad (persistent shard bufs)", || {
-                    xla.partial_grad(0, &w, &mut out);
-                    std::hint::black_box(&out);
-                })
-                .summary()
-            );
+            let mut xla = XlaBackend::new(&rt, shards).expect("backend");
+            let b =
+                Bencher { warmup_iters: 20, samples: 15, iters_per_sample: 50 };
+            let r = b.run("pjrt partial_grad (persistent shard bufs)", || {
+                xla.partial_grad(0, w, out);
+                std::hint::black_box(&out);
+            });
+            println!("{}", r.summary());
+            report.push(r);
             let mut all_out = vec![0.0f32; 50 * 100];
-            let b2 = Bencher { warmup_iters: 5, samples: 15, iters_per_sample: 10 };
-            if xla.all_grads(&w, &mut all_out) {
-                println!(
-                    "{}",
-                    b2.run("pjrt ALL 50 shard grads (batched artifact)", || {
-                        xla.all_grads(&w, &mut all_out);
-                        std::hint::black_box(&all_out);
-                    })
-                    .summary()
-                );
+            let b2 =
+                Bencher { warmup_iters: 5, samples: 15, iters_per_sample: 10 };
+            if xla.all_grads(w, &mut all_out) {
+                let r = b2.run("pjrt ALL 50 shard grads (batched artifact)", || {
+                    xla.all_grads(w, &mut all_out);
+                    std::hint::black_box(&all_out);
+                });
+                println!("{}", r.summary());
+                report.push(r);
             }
             let exe = rt.load("linreg_grad_s40_d100").expect("load");
             let xs = shards.x[0].as_slice();
             let ys = &shards.y[0];
-            println!(
-                "{}",
-                b.run("pjrt partial_grad (full literal upload)", || {
-                    let outs = exe
-                        .run(&[
-                            adasgd::runtime::Arg::F32(xs),
-                            adasgd::runtime::Arg::F32(ys),
-                            adasgd::runtime::Arg::F32(&w),
-                        ])
-                        .expect("exec");
-                    std::hint::black_box(outs.len());
-                })
-                .summary()
-            );
+            let r = b.run("pjrt partial_grad (full literal upload)", || {
+                let outs = exe
+                    .run(&[
+                        adasgd::runtime::Arg::F32(xs),
+                        adasgd::runtime::Arg::F32(ys),
+                        adasgd::runtime::Arg::F32(w),
+                    ])
+                    .expect("exec");
+                std::hint::black_box(outs.len());
+            });
+            println!("{}", r.summary());
+            report.push(r);
         }
     }
 }

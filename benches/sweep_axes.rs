@@ -1,0 +1,19 @@
+//! Axis builders shared by the figure benches.
+//!
+//! Bench targets are separate crates, so each bench that needs one of
+//! these includes this file with `#[path = "sweep_axes.rs"] mod …` —
+//! one definition for scenarios that must stay comparable across
+//! figures (same capacities, same labels the result tables key on).
+
+use adasgd::sweep::{edit, CfgEdit};
+
+/// The shared master-ingress axis: unlimited (independent uploads) vs a
+/// 4 kB/t master NIC the accepted uploads serialize through. Used by
+/// both the bidirectional and coding sweeps so their "ing4k" rows model
+/// the same NIC.
+pub fn ingress_axis() -> Vec<(String, CfgEdit)> {
+    vec![
+        ("ing-inf".into(), edit(|c| c.comm.ingress_bw = 0.0)),
+        ("ing4k".into(), edit(|c| c.comm.ingress_bw = 4000.0)),
+    ]
+}

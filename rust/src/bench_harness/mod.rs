@@ -1,9 +1,13 @@
 //! Criterion-lite: a tiny benchmark harness (criterion is not available
-//! offline). Warmup, timed iterations, robust summary stats, and a
-//! throughput-style report. `benches/*.rs` use `harness = false` and drive
-//! this directly.
+//! offline). Warmup, timed iterations, robust summary stats, a
+//! throughput-style report, machine-readable JSON emission
+//! ([`write_json_report`] → `BENCH_*.json`, the perf-trajectory record),
+//! and the flags shared by every bench binary ([`BenchArgs`]: `--smoke`
+//! tiny-grid CI mode, `--jobs` sweep parallelism). `benches/*.rs` use
+//! `harness = false` and drive this directly.
 
 use crate::stats::quantile;
+use std::path::Path;
 use std::time::Instant;
 
 /// Result of one benchmark.
@@ -36,6 +40,29 @@ impl BenchResult {
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
             / (n - 1) as f64)
             .sqrt()
+    }
+
+    /// q-quantile (0 ≤ q ≤ 1) of the seconds-per-iteration samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile(&self.samples, q)
+    }
+
+    /// One JSON object for the machine-readable bench report: name,
+    /// median, p10/p90 spread, mean/stddev, and the sample count.
+    /// Numbers use Rust's `{:e}` float form, which is valid JSON.
+    pub fn json_entry(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"median_s\":{:e},\"p10_s\":{:e},\
+             \"p90_s\":{:e},\"mean_s\":{:e},\"stddev_s\":{:e},\
+             \"samples\":{}}}",
+            json_escape(&self.name),
+            self.median(),
+            self.quantile(0.10),
+            self.quantile(0.90),
+            self.mean(),
+            self.stddev(),
+            self.samples.len()
+        )
     }
 
     /// Pretty one-line summary with adaptive units.
@@ -110,6 +137,121 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Escape a string for a JSON string literal: `"` and `\` get a
+/// backslash, control characters become `\u00XX`, and everything else
+/// (including non-ASCII like `§`/`×`, legal raw in JSON) passes through.
+/// Rust's `{:?}` is NOT a substitute — it emits `\u{a7}`-style escapes
+/// JSON parsers reject.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write a machine-readable bench report: a JSON array of
+/// [`BenchResult::json_entry`] objects. `perf_hotpath` emits
+/// `results/BENCH_hotpath.json` through this so perf runs leave a
+/// diffable trajectory next to the human-readable text report.
+pub fn write_json_report(
+    path: &Path,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "[")?;
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        writeln!(f, "  {}{sep}", r.json_entry())?;
+    }
+    writeln!(f, "]")?;
+    f.flush()
+}
+
+/// Flags shared by every bench binary, parsed from the argv cargo
+/// forwards after `--` (`cargo bench --bench X -- --smoke --jobs 2`).
+///
+/// * `--smoke` — shrink the grid to a seconds-long end-to-end pass (the
+///   CI smoke step runs one figure bench this way, so the sweep-executor
+///   path cannot silently rot);
+/// * `--jobs N` — sweep worker threads (`0` = all cores, the default;
+///   results are byte-identical for every value).
+///
+/// Unknown tokens (e.g. cargo's own `--bench`) are ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BenchArgs {
+    /// Tiny-grid CI mode.
+    pub smoke: bool,
+    /// Sweep worker threads (0 = all cores).
+    pub jobs: usize,
+}
+
+impl BenchArgs {
+    /// Parse from the process argv.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from any token stream (testable). Accepts both `--jobs N`
+    /// and `--jobs=N`.
+    pub fn parse(args: impl Iterator<Item = String>) -> Self {
+        let warn = |v: &str| {
+            eprintln!(
+                "warning: --jobs expects an integer, got '{v}'; using 0 \
+                 (all cores)"
+            )
+        };
+        let mut out = Self { smoke: false, jobs: 0 };
+        let mut expect_jobs = false;
+        for tok in args {
+            if expect_jobs {
+                expect_jobs = false;
+                // A flag is never the value: `--jobs --smoke` must not
+                // eat the next flag, only warn and keep parsing it.
+                if !tok.starts_with("--") {
+                    match tok.parse::<usize>() {
+                        Ok(j) => out.jobs = j,
+                        Err(_) => warn(&tok),
+                    }
+                    continue;
+                }
+                warn("<missing>");
+            }
+            match tok.as_str() {
+                "--smoke" => out.smoke = true,
+                "--jobs" => expect_jobs = true,
+                _ => {
+                    if let Some(v) = tok.strip_prefix("--jobs=") {
+                        match v.parse::<usize>() {
+                            Ok(j) => out.jobs = j,
+                            Err(_) => warn(v),
+                        }
+                    }
+                    // else: cargo's --bench, filters, etc.
+                }
+            }
+        }
+        if expect_jobs {
+            warn("<missing>");
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +270,75 @@ mod tests {
         assert!(r.mean() > 0.0);
         assert!(r.median() > 0.0);
         assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    fn json_report_round_trips_structurally() {
+        let r = BenchResult {
+            name: "spin".into(),
+            samples: vec![1.0e-3, 2.0e-3, 3.0e-3, 4.0e-3, 5.0e-3],
+        };
+        let entry = r.json_entry();
+        assert!(entry.starts_with("{\"name\":\"spin\""), "{entry}");
+        // Non-ASCII names pass through raw (legal JSON); quotes,
+        // backslashes, and control chars are escaped JSON-style.
+        let fancy = BenchResult {
+            name: "gemm 256³ — \"setup\"\tpath".into(),
+            samples: vec![1.0],
+        };
+        let e = fancy.json_entry();
+        assert!(
+            e.contains("\"gemm 256³ — \\\"setup\\\"\\tpath\""),
+            "{e}"
+        );
+        assert!(entry.contains("\"median_s\":3e-3"), "{entry}");
+        assert!(entry.contains("\"p10_s\":"), "{entry}");
+        assert!(entry.contains("\"samples\":5"), "{entry}");
+        assert_eq!(r.quantile(0.5), r.median());
+
+        let dir = std::env::temp_dir().join("adasgd_bench_json_test");
+        let path = dir.join("BENCH_test.json");
+        write_json_report(&path, &[r.clone(), r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "[");
+        assert!(lines[1].ends_with(','), "{}", lines[1]);
+        assert!(!lines[2].ends_with(','), "{}", lines[2]);
+        assert_eq!(*lines.last().unwrap(), "]");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_args_parse_and_ignore_unknown_tokens() {
+        let argv = |s: &str| s.split_whitespace().map(str::to_string);
+        assert_eq!(
+            BenchArgs::parse(argv("--bench --smoke --jobs 2")),
+            BenchArgs { smoke: true, jobs: 2 }
+        );
+        assert_eq!(
+            BenchArgs::parse(argv("--bench somefilter")),
+            BenchArgs { smoke: false, jobs: 0 }
+        );
+        // Malformed --jobs degrades to 0 with a warning, not a panic;
+        // so does a trailing --jobs with no value.
+        assert_eq!(
+            BenchArgs::parse(argv("--jobs lots")),
+            BenchArgs { smoke: false, jobs: 0 }
+        );
+        assert_eq!(
+            BenchArgs::parse(argv("--smoke --jobs")),
+            BenchArgs { smoke: true, jobs: 0 }
+        );
+        // The = form works too.
+        assert_eq!(
+            BenchArgs::parse(argv("--jobs=3")),
+            BenchArgs { smoke: false, jobs: 3 }
+        );
+        // A transposed `--jobs --smoke` must not eat the smoke flag.
+        assert_eq!(
+            BenchArgs::parse(argv("--jobs --smoke")),
+            BenchArgs { smoke: true, jobs: 0 }
+        );
     }
 
     #[test]

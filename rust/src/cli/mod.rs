@@ -56,7 +56,7 @@ const VALUED_FLAGS: &[&str] = &[
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
     "link-latency", "downlink", "down-levels", "down-frac",
     "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
-    "ingress", "coding", "replication",
+    "ingress", "coding", "replication", "jobs",
 ];
 
 impl Args {
@@ -142,6 +142,9 @@ COMMON FLAGS:
   --seed S            rng seed (default 0)
   --out FILE.csv      write run series as CSV
   --artifacts DIR     artifact directory (default ./artifacts or $ADASGD_ARTIFACTS)
+  --jobs N            sweep worker threads for fig1/fig2/fig3/repeat
+                      (0 = all cores, the default; also `[run] jobs` in
+                      TOML — results are byte-identical for every N)
   --quiet             suppress ASCII plots
 
 TRAIN FLAGS (no --config):

@@ -394,6 +394,12 @@ pub struct ExperimentConfig {
     pub comm: CommSpec,
     /// Gradient coding (None = the uncoded fastest-k / async paths).
     pub coding: Option<CodingSpec>,
+    /// Sweep parallelism for multi-run commands driven by this config
+    /// (`repeat`, figure regeneration): worker threads, `0` = all
+    /// available cores. TOML: `[run] jobs`. Never part of the
+    /// experiment's identity — `jobs = 1` and `jobs = N` produce
+    /// byte-identical results (see [`crate::sweep`]).
+    pub jobs: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -412,6 +418,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
             comm: CommSpec::default(),
             coding: None,
+            jobs: 0,
         }
     }
 }
@@ -624,6 +631,20 @@ impl ExperimentConfig {
                 return Err(format!("coding.r={r} must be >= 1"));
             }
             cfg.coding = Some(CodingSpec { scheme, r: r as usize });
+        }
+
+        if let Some(sec) = doc.section("run") {
+            if let Some(v) = sec.get("jobs") {
+                let jobs =
+                    v.as_int().ok_or("run.jobs must be an integer")?;
+                if jobs < 0 {
+                    return Err(format!(
+                        "run.jobs={jobs} must be >= 0 (0 = available \
+                         parallelism)"
+                    ));
+                }
+                cfg.jobs = jobs as usize;
+            }
         }
 
         if let Some(sec) = doc.section("workload") {
@@ -1069,6 +1090,29 @@ r = 3
                     d = 10\n[policy]\nkind = \"async\"\n[coding]\nr = 2\n";
         let err = ExperimentConfig::from_toml(text).unwrap_err();
         assert!(err.contains("async"), "{err}");
+    }
+
+    #[test]
+    fn run_jobs_parses_defaults_and_rejects_negatives() {
+        // Default: 0 = available parallelism (results are identical for
+        // every jobs value, so the fast default is safe).
+        let dflt = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n",
+        )
+        .unwrap();
+        assert_eq!(dflt.jobs, 0);
+        let cfg = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [run]\njobs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.jobs, 4);
+        let err =
+            ExperimentConfig::from_toml("[run]\njobs = -1\n").unwrap_err();
+        assert!(err.contains(">= 0"), "{err}");
+        assert!(
+            ExperimentConfig::from_toml("[run]\njobs = \"all\"\n").is_err()
+        );
     }
 
     #[test]

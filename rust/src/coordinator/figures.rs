@@ -4,13 +4,20 @@
 //! ASCII rendering + summary table and writes a CSV under `results/`. The
 //! *shape* comparisons the paper makes (who wins, by what factor, where
 //! curves cross) are asserted in `rust/tests/test_figures.rs`.
+//!
+//! All figure sweeps execute through [`crate::sweep::SweepExecutor`]:
+//! the `*_jobs` variants fan the runs out over a thread pool (`jobs = 0`
+//! ⇒ all cores) and are byte-identical to the single-threaded wrappers —
+//! every run's RNG streams derive from its own spec, so the worker count
+//! never reaches the results.
 
 use crate::config::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
-use crate::coordinator::run_experiment;
 use crate::metrics::{Recorder, Sample};
 use crate::policy::PflugParams;
 use crate::stats::OrderStats;
+use crate::sweep::{edit, SweepExecutor, SweepGrid};
 use crate::theory::{adaptive_envelope, switching_times, BoundParams, ErrorBound};
+use std::sync::Arc;
 
 /// Output of a simulation figure: labelled series.
 pub struct FigureOutput {
@@ -38,28 +45,44 @@ pub struct Fig1Output {
 /// adaptive envelope (n = 5, X ~ exp(5), η = 0.001, σ² = 10,
 /// F(w₀)−F* = 100, L = 2, c = 1, s = 10).
 pub fn fig1(points: usize) -> Fig1Output {
+    fig1_jobs(points, 1)
+}
+
+/// [`fig1`] with the per-k bound curves evaluated in parallel
+/// (`jobs = 0` ⇒ all cores).
+pub fn fig1_jobs(points: usize, jobs: usize) -> Fig1Output {
+    assert!(points >= 2, "fig1 needs at least two grid points");
     let n = 5;
-    let bound =
-        ErrorBound::new(BoundParams::example1(), OrderStats::exponential(n, 5.0));
+    let bound = Arc::new(ErrorBound::new(
+        BoundParams::example1(),
+        OrderStats::exponential(n, 5.0),
+    ));
     // Horizon: late enough that the k=5 floor is reached (cf. paper x-axis).
     let t_max = 14_000.0;
-    let ts: Vec<f64> =
-        (0..points).map(|i| t_max * i as f64 / (points - 1) as f64).collect();
+    let ts: Arc<Vec<f64>> = Arc::new(
+        (0..points).map(|i| t_max * i as f64 / (points - 1) as f64).collect(),
+    );
 
-    let mut fixed = Vec::with_capacity(n);
-    for k in 1..=n {
-        let mut rec = Recorder::new(format!("bound k={k}"));
-        for (i, &t) in ts.iter().enumerate() {
-            rec.push_forced(Sample {
-                iteration: i as u64,
-                time: t,
-                k,
-                error: bound.eval(k, t),
-                ..Default::default()
-            });
-        }
-        fixed.push(rec);
-    }
+    // One independent theory evaluation per k, order-reassembled by the
+    // executor (a pure function of k — the jobs-invariance contract).
+    let fixed = {
+        let bound = Arc::clone(&bound);
+        let ts = Arc::clone(&ts);
+        SweepExecutor::new(jobs).map(n, move |ki| {
+            let k = ki + 1;
+            let mut rec = Recorder::new(format!("bound k={k}"));
+            for (i, &t) in ts.iter().enumerate() {
+                rec.push_forced(Sample {
+                    iteration: i as u64,
+                    time: t,
+                    k,
+                    error: bound.eval(k, t),
+                    ..Default::default()
+                });
+            }
+            rec
+        })
+    };
 
     let env = adaptive_envelope(&bound, &ts);
     let mut adaptive = Recorder::new("adaptive (Theorem 1)");
@@ -108,98 +131,132 @@ fn fig2_base(seed: u64) -> ExperimentConfig {
         workload: WorkloadSpec::LinReg { m: 2000, d: 100 },
         comm: Default::default(),
         coding: None,
+        jobs: 0,
     }
+}
+
+/// The Fig-2/Fig-3 adaptive policy (paper: start k0, step, thresh 10,
+/// burnin 0.1·m = 200, cap k_max).
+fn paper_adaptive(k0: usize, step: usize, k_max: usize) -> PolicySpec {
+    PolicySpec::Adaptive(PflugParams {
+        k0,
+        step,
+        thresh: 10,
+        burnin: 200,
+        k_max,
+    })
 }
 
 /// Fig. 2 — adaptive fastest-k (k: 10→40 by 10, Algorithm 1) vs
 /// non-adaptive fixed k ∈ {10, 20, 30, 40}; n = 50, η = 5e-4, exp(1).
 pub fn fig2(seed: u64, max_time: f64) -> FigureOutput {
-    let mut runs = Vec::new();
-    let mut summary = Vec::new();
+    fig2_jobs(seed, max_time, 1)
+}
 
-    for k in [10usize, 20, 30, 40] {
-        let mut cfg = fig2_base(seed);
-        cfg.label = format!("fixed k={k}");
-        cfg.policy = PolicySpec::Fixed { k };
-        cfg.max_time = max_time;
-        let out = run_experiment(&cfg).expect("fig2 fixed run");
-        summary.push(format!(
-            "fixed k={k}: min error {:.4e} at t={:.0} ({} iters)",
-            out.recorder.min_error().unwrap(),
-            out.total_time,
-            out.steps
-        ));
+/// [`fig2`] with the five runs executed in parallel (`jobs = 0` ⇒ all
+/// cores; byte-identical to `jobs = 1`).
+pub fn fig2_jobs(seed: u64, max_time: f64, jobs: usize) -> FigureOutput {
+    let mut base = fig2_base(seed);
+    base.max_time = max_time;
+    let mut policies: Vec<(String, crate::sweep::CfgEdit)> = [10usize, 20, 30, 40]
+        .iter()
+        .map(|&k| {
+            (
+                format!("fixed k={k}"),
+                edit(move |c: &mut ExperimentConfig| {
+                    c.policy = PolicySpec::Fixed { k }
+                }),
+            )
+        })
+        .collect();
+    policies.push((
+        "adaptive (Algorithm 1)".into(),
+        edit(|c| c.policy = paper_adaptive(10, 10, 40)),
+    ));
+    let specs = SweepGrid::new(base).axis("policy", policies).build();
+    let outs =
+        SweepExecutor::new(jobs).run(&specs).expect("fig2 sweep runs");
+
+    let mut runs = Vec::with_capacity(outs.len());
+    let mut summary = Vec::with_capacity(outs.len());
+    for (spec, out) in specs.iter().zip(outs) {
+        match spec.cfg.policy {
+            PolicySpec::Fixed { k } => summary.push(format!(
+                "fixed k={k}: min error {:.4e} at t={:.0} ({} iters)",
+                out.recorder.min_error().unwrap(),
+                out.total_time,
+                out.steps
+            )),
+            _ => summary.push(format!(
+                "adaptive: min error {:.4e} at t={:.0}; switches at {}",
+                out.recorder.min_error().unwrap(),
+                out.total_time,
+                out.k_changes
+                    .iter()
+                    .map(|(_, t, k)| format!("t={t:.0}→k={k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )),
+        }
         runs.push(out.recorder);
     }
-
-    let mut cfg = fig2_base(seed);
-    cfg.label = "adaptive (Algorithm 1)".into();
-    // Paper: start k=10, step 10, thresh 10, burnin 0.1*m = 200, cap 40.
-    cfg.policy = PolicySpec::Adaptive(PflugParams {
-        k0: 10,
-        step: 10,
-        thresh: 10,
-        burnin: 200,
-        k_max: 40,
-    });
-    cfg.max_time = max_time;
-    let out = run_experiment(&cfg).expect("fig2 adaptive run");
-    summary.push(format!(
-        "adaptive: min error {:.4e} at t={:.0}; switches at {}",
-        out.recorder.min_error().unwrap(),
-        out.total_time,
-        out.k_changes
-            .iter()
-            .map(|(_, t, k)| format!("t={t:.0}→k={k}"))
-            .collect::<Vec<_>>()
-            .join(", ")
-    ));
-    runs.push(out.recorder);
-
     FigureOutput { name: "fig2".into(), runs, summary }
 }
 
 /// Fig. 3 — adaptive fastest-k (k: 1→36 by 5, Algorithm 1) vs fully
 /// asynchronous SGD; η = 2e-4.
 pub fn fig3(seed: u64, max_time: f64) -> FigureOutput {
-    let mut runs = Vec::new();
-    let mut summary = Vec::new();
+    fig3_jobs(seed, max_time, 1)
+}
 
-    let mut cfg = fig2_base(seed);
-    cfg.label = "adaptive (Algorithm 1)".into();
-    cfg.eta = 2e-4;
-    cfg.max_time = max_time;
-    cfg.policy = PolicySpec::Adaptive(PflugParams {
-        k0: 1,
-        step: 5,
-        thresh: 10,
-        burnin: 200,
-        k_max: 36,
-    });
-    let out = run_experiment(&cfg).expect("fig3 adaptive run");
-    summary.push(format!(
-        "adaptive: min error {:.4e}; switches: {}",
-        out.recorder.min_error().unwrap(),
-        out.k_changes.len()
-    ));
-    runs.push(out.recorder);
+/// [`fig3`] with both runs executed in parallel (`jobs = 0` ⇒ all
+/// cores; byte-identical to `jobs = 1`).
+pub fn fig3_jobs(seed: u64, max_time: f64, jobs: usize) -> FigureOutput {
+    let mut base = fig2_base(seed);
+    base.eta = 2e-4;
+    base.max_time = max_time;
+    let specs = SweepGrid::new(base)
+        .axis(
+            "driver",
+            vec![
+                (
+                    "adaptive (Algorithm 1)".to_string(),
+                    edit(|c| c.policy = paper_adaptive(1, 5, 36)),
+                ),
+                (
+                    "async SGD".to_string(),
+                    edit(|c| {
+                        // Async applies ~n updates per sync-iteration-
+                        // equivalent; give it the same *time* budget and
+                        // an ample update cap.
+                        c.policy = PolicySpec::Async;
+                        c.max_iterations = 2_000_000;
+                    }),
+                ),
+            ],
+        )
+        .build();
+    let outs =
+        SweepExecutor::new(jobs).run(&specs).expect("fig3 sweep runs");
 
-    let mut cfg = fig2_base(seed);
-    cfg.label = "async SGD".into();
-    cfg.eta = 2e-4;
-    cfg.max_time = max_time;
-    // Async applies ~n updates per sync-iteration-equivalent; give it the
-    // same *time* budget and an ample update cap.
-    cfg.max_iterations = 2_000_000;
-    cfg.policy = PolicySpec::Async;
-    let out = run_experiment(&cfg).expect("fig3 async run");
-    summary.push(format!(
-        "async: min error {:.4e} after {} updates",
-        out.recorder.min_error().unwrap(),
-        out.steps
-    ));
-    runs.push(out.recorder);
-
+    let mut runs = Vec::with_capacity(outs.len());
+    let mut summary = Vec::with_capacity(outs.len());
+    for (spec, out) in specs.iter().zip(outs) {
+        if spec.cfg.policy == PolicySpec::Async {
+            summary.push(format!(
+                "async: min error {:.4e} after {} updates",
+                out.recorder.min_error().unwrap(),
+                out.steps
+            ));
+        } else {
+            summary.push(format!(
+                "adaptive: min error {:.4e}; switches: {}",
+                out.recorder.min_error().unwrap(),
+                out.k_changes.len()
+            ));
+        }
+        runs.push(out.recorder);
+    }
     FigureOutput { name: "fig3".into(), runs, summary }
 }
 
@@ -218,5 +275,17 @@ mod tests {
         for k in 0..4 {
             assert!(env_end <= out.fixed[k].last().unwrap().error + 1e-12);
         }
+    }
+
+    #[test]
+    fn fig1_is_jobs_invariant() {
+        let seq = fig1_jobs(60, 1);
+        let par = fig1_jobs(60, 4);
+        assert_eq!(seq.fixed.len(), par.fixed.len());
+        for (a, b) in seq.fixed.iter().zip(&par.fixed) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.samples(), b.samples());
+        }
+        assert_eq!(seq.switch_times, par.switch_times);
     }
 }

@@ -1,10 +1,20 @@
 //! Experiment coordination: config → run → metrics, plus the paper-figure
 //! generators (`fig1`/`fig2`/`fig3`) shared by the CLI and the benches.
+//!
+//! [`run_experiment`] executes exactly one config; everything multi-run
+//! (figures, repeats, bench grids) goes through [`crate::sweep`], which
+//! fans independent specs out over a thread pool without changing a
+//! single output byte. The `*_jobs` variants expose the worker count
+//! (`0` = all cores).
 
 mod figures;
 mod repeat;
 mod runner;
 
-pub use figures::{fig1, fig2, fig3, Fig1Output, FigureOutput};
-pub use repeat::{run_repeated, AggregatedCurve};
+pub use figures::{
+    fig1, fig1_jobs, fig2, fig2_jobs, fig3, fig3_jobs, Fig1Output,
+    FigureOutput,
+};
+pub use repeat::{run_repeated, run_repeated_jobs, AggregatedCurve};
+pub(crate) use runner::reject_non_native;
 pub use runner::{run_experiment, ExperimentOutput};

@@ -2,14 +2,20 @@
 //! the error curves onto a common time grid (mean ± std), so figure
 //! comparisons are not single-draw artifacts. EXPERIMENTS.md reports the
 //! aggregated numbers.
+//!
+//! Repetitions execute through [`crate::sweep::SweepExecutor`] with
+//! `base.jobs` workers (0 = all cores). Each repetition is its own
+//! [`RunSpec`] whose seed is pinned *before* execution (`seed0 + r`, the
+//! documented `repeat` contract), and aggregation walks the collected
+//! outputs in spec order — so the thread count never changes the curve.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::run_experiment;
 use crate::metrics::Recorder;
 use crate::stats::RunningStats;
+use crate::sweep::{RunSpec, SweepExecutor};
 
 /// Aggregated error-vs-time curve across repetitions.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AggregatedCurve {
     /// Label.
     pub label: String,
@@ -47,27 +53,49 @@ fn sample_on_grid(rec: &Recorder, grid: &[f64]) -> Vec<f64> {
 }
 
 /// Run `base` under seeds `seed0..seed0+reps`, aggregating onto `points`
-/// uniform grid points over `[0, base.max_time]`.
+/// uniform grid points over `[0, base.max_time]`. Parallelism comes from
+/// `base.jobs` ([`run_repeated_jobs`] overrides it).
 pub fn run_repeated(
     base: &ExperimentConfig,
     seed0: u64,
     reps: usize,
     points: usize,
 ) -> Result<AggregatedCurve, String> {
+    run_repeated_jobs(base, seed0, reps, points, base.jobs)
+}
+
+/// [`run_repeated`] with an explicit worker count (0 = all cores). The
+/// jobs value is pure wall-clock: the aggregate is bitwise identical for
+/// every `jobs`.
+pub fn run_repeated_jobs(
+    base: &ExperimentConfig,
+    seed0: u64,
+    reps: usize,
+    points: usize,
+    jobs: usize,
+) -> Result<AggregatedCurve, String> {
     assert!(reps >= 1 && points >= 2);
     assert!(
         base.max_time > 0.0,
         "run_repeated needs a max_time so curves share a horizon"
     );
+    let specs: Vec<RunSpec> = (0..reps)
+        .map(|r| {
+            let mut cfg = base.clone();
+            cfg.seed = seed0 + r as u64;
+            RunSpec::from_config(r, cfg)
+        })
+        .collect();
+    let outs = SweepExecutor::new(jobs).run(&specs)?;
+
     let grid: Vec<f64> = (0..points)
         .map(|i| base.max_time * (i + 1) as f64 / points as f64)
         .collect();
     let mut acc: Vec<RunningStats> =
         (0..points).map(|_| RunningStats::new()).collect();
-    for r in 0..reps {
-        let mut cfg = base.clone();
-        cfg.seed = seed0 + r as u64;
-        let out = run_experiment(&cfg)?;
+    // Spec order, not completion order: Welford accumulation is not
+    // permutation-invariant in floating point.
+    for out in &outs {
         for (stats, v) in acc.iter_mut().zip(sample_on_grid(&out.recorder, &grid))
         {
             if v.is_finite() {
@@ -103,6 +131,7 @@ mod tests {
             workload: WorkloadSpec::LinReg { m: 200, d: 10 },
             comm: Default::default(),
             coding: None,
+            jobs: 0,
         }
     }
 
@@ -124,6 +153,15 @@ mod tests {
         let mid = (agg.mean[0] * agg.final_mean()).sqrt(); // geometric mid
         let t = agg.time_to_error(mid).expect("mean curve must cross");
         assert!(t > 0.0 && t <= 60.0);
+    }
+
+    #[test]
+    fn aggregate_is_jobs_invariant() {
+        // The sweep layer's contract at the aggregation level: the
+        // worker count must never reach the curve.
+        let seq = run_repeated_jobs(&base(), 100, 4, 12, 1).unwrap();
+        let par = run_repeated_jobs(&base(), 100, 4, 12, 4).unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

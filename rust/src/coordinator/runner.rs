@@ -30,6 +30,22 @@ pub struct ExperimentOutput {
     pub down_time: f64,
 }
 
+/// Reject workloads this native-backend runner cannot execute. Shared
+/// with the sweep executor's fail-fast pre-scan, so a grid aborts on
+/// such a cell *before* the fan-out instead of after it.
+pub(crate) fn reject_non_native(
+    cfg: &ExperimentConfig,
+) -> Result<(), String> {
+    match cfg.workload {
+        WorkloadSpec::LinReg { .. } => Ok(()),
+        WorkloadSpec::Transformer { .. } => Err(
+            "transformer workload requires the artifact runtime; use \
+             `adasgd train-transformer` or examples/transformer_e2e"
+                .into(),
+        ),
+    }
+}
+
 /// Run one experiment end-to-end on the native backend.
 ///
 /// (The XLA-backend path is exercised by the examples and integration
@@ -37,14 +53,11 @@ pub struct ExperimentOutput {
 /// for every shape.)
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String> {
     cfg.validate()?;
+    reject_non_native(cfg)?;
     let (m, d) = match cfg.workload {
         WorkloadSpec::LinReg { m, d } => (m, d),
         WorkloadSpec::Transformer { .. } => {
-            return Err(
-                "transformer workload requires the artifact runtime; use \
-                 `adasgd train-transformer` or examples/transformer_e2e"
-                    .into(),
-            )
+            unreachable!("reject_non_native() ruled this out")
         }
     };
     let ds = SyntheticDataset::generate(
@@ -193,6 +206,7 @@ mod tests {
             workload: WorkloadSpec::LinReg { m: 200, d: 10 },
             comm: Default::default(),
             coding: None,
+            jobs: 0,
         }
     }
 

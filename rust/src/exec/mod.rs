@@ -13,6 +13,9 @@
 //!   discarded by generation tag (wasted work — exactly the cost the
 //!   fastest-k scheme accepts to avoid the straggler tail).
 
+//! The module also hosts [`ThreadPool`], the generic job pool the sweep
+//! layer ([`crate::sweep`]) fans independent experiments out on.
+
 mod cluster;
 mod pool;
 

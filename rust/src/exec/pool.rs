@@ -1,9 +1,21 @@
 //! Minimal fixed-size thread pool (no rayon/tokio offline).
 //!
-//! Used by benches and the Monte-Carlo order-statistic estimator for
-//! embarrassingly-parallel jobs; the training cluster uses dedicated
-//! per-worker threads (`cluster.rs`) instead, because workers own state.
+//! Used by the sweep executor ([`crate::sweep::SweepExecutor`]) and
+//! benches for embarrassingly-parallel jobs; the training cluster uses
+//! dedicated per-worker threads (`cluster.rs`) instead, because workers
+//! own state.
+//!
+//! Panic policy: a panicking job must never wedge the pool. Worker
+//! threads catch job panics and keep serving the queue, and [`map`]
+//! forwards the first panic (in job-index order) to the submitting
+//! thread via `resume_unwind` — the alternative is a forever-blocked
+//! result channel. Fire-and-forget [`execute`] jobs that panic are
+//! caught and dropped.
+//!
+//! [`map`]: ThreadPool::map
+//! [`execute`]: ThreadPool::execute
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -17,9 +29,17 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn `size` threads.
-    pub fn new(size: usize) -> Self {
-        assert!(size > 0, "pool needs at least one thread");
+    /// Spawn `size` threads. `size == 0` is a config error, not a panic:
+    /// callers resolve "0 = available parallelism" *before* building the
+    /// pool (see `sweep::SweepExecutor::new`).
+    pub fn new(size: usize) -> Result<Self, String> {
+        if size == 0 {
+            return Err(
+                "exec: thread pool needs at least one worker (size 0; \
+                 resolve jobs=0 to the available parallelism first)"
+                    .into(),
+            );
+        }
         let (sender, receiver) = mpsc::channel::<Job>();
         let receiver = Arc::new(Mutex::new(receiver));
         let handles = (0..size)
@@ -31,16 +51,21 @@ impl ThreadPool {
                         guard.recv()
                     };
                     match job {
-                        Ok(job) => job(),
+                        // Catch panics so one bad job cannot kill the
+                        // worker and strand everything queued behind it.
+                        Ok(job) => {
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
                         Err(_) => break, // all senders dropped
                     }
                 })
             })
             .collect();
-        Self { sender: Some(sender), handles }
+        Ok(Self { sender: Some(sender), handles })
     }
 
-    /// Submit a job.
+    /// Submit a fire-and-forget job (its panic, if any, is swallowed —
+    /// use [`ThreadPool::map`] when the caller must observe failures).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.sender
             .as_ref()
@@ -49,27 +74,40 @@ impl ThreadPool {
             .expect("pool workers gone");
     }
 
-    /// Map `f` over `0..jobs` in parallel, collecting results in order.
+    /// Map `f` over `0..jobs` in parallel, collecting results in job
+    /// order. If any job panicked, the panic with the smallest job index
+    /// is re-raised on the calling thread after all jobs finished.
     pub fn map<T: Send + 'static>(
         &self,
         jobs: usize,
         f: impl Fn(usize) -> T + Send + Sync + 'static,
     ) -> Vec<T> {
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
         for i in 0..jobs {
             let f = Arc::clone(&f);
             let tx = tx.clone();
             self.execute(move || {
-                let _ = tx.send((i, f(i)));
+                let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let _ = tx.send((i, result));
             });
         }
         drop(tx);
-        let mut out: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+        let mut out: Vec<Option<std::thread::Result<T>>> =
+            (0..jobs).map(|_| None).collect();
+        // Every job sends exactly one message (panics included, caught
+        // above), so this drains without blocking on a dead worker.
         for (i, v) in rx {
             out[i] = Some(v);
         }
-        out.into_iter().map(|v| v.expect("job dropped")).collect()
+        let mut vals = Vec::with_capacity(jobs);
+        for v in out {
+            match v.expect("pool job vanished without reporting") {
+                Ok(t) => vals.push(t),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        vals
     }
 }
 
@@ -89,7 +127,7 @@ mod tests {
 
     #[test]
     fn executes_all_jobs() {
-        let pool = ThreadPool::new(4);
+        let pool = ThreadPool::new(4).unwrap();
         let counter = Arc::new(AtomicUsize::new(0));
         for _ in 0..100 {
             let c = Arc::clone(&counter);
@@ -103,8 +141,40 @@ mod tests {
 
     #[test]
     fn map_preserves_order() {
-        let pool = ThreadPool::new(8);
+        let pool = ThreadPool::new(8).unwrap();
         let out = pool.map(50, |i| i * i);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_size_is_a_config_error() {
+        let err = ThreadPool::new(0).unwrap_err();
+        assert!(err.contains("at least one worker"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "job 2 exploded")]
+    fn map_propagates_job_panics_to_the_submitter() {
+        // Regression: a panicking job used to kill its worker thread and
+        // leave `map` blocked on the result channel forever (single-
+        // thread pool) or panic with an opaque "job dropped".
+        let pool = ThreadPool::new(1).unwrap();
+        let _ = pool.map(5, |i| {
+            if i == 2 {
+                panic!("job 2 exploded");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_survives_panicking_execute_jobs() {
+        let pool = ThreadPool::new(2).unwrap();
+        for _ in 0..4 {
+            pool.execute(|| panic!("fire-and-forget failure"));
+        }
+        // The workers must still be alive to serve useful jobs.
+        let out = pool.map(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
     }
 }

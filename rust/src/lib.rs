@@ -72,6 +72,23 @@
 //! the master's shared ingress (FIFO) instead of arriving independently.
 //! See `benches/fig_comm_tradeoff` and `benches/fig_bidirectional`.
 //!
+//! ## Experiment sweeps
+//!
+//! Figures and comparators are grids of thousands of *independent*
+//! simulations, and [`sweep`] executes all of them: a
+//! [`sweep::SweepGrid`] expands cartesian products of config edits into
+//! ordered [`sweep::RunSpec`]s, and a [`sweep::SweepExecutor`] fans them
+//! out over [`exec::ThreadPool`] (`--jobs` / `[run] jobs`; `0` = all
+//! cores). The layer's determinism rule: every spec's RNG streams derive
+//! from its own seed, pinned at grid-build time
+//! ([`sweep::derive_seed`]), and outputs are reassembled in spec order —
+//! so `jobs = 1` and `jobs = N` are **byte-identical**, CSVs included
+//! (`rust/tests/test_sweep_equivalence.rs`). The coordinator's figure
+//! generators, `run_repeated`, and every `benches/fig_*.rs` grid run
+//! through this layer; CSV emission is unified through
+//! [`metrics::write_csv_with_header`] with the scenario axes as
+//! run-header meta lines ([`sweep::write_sweep_csv`]).
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -115,6 +132,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod straggler;
+pub mod sweep;
 pub mod theory;
 pub mod transformer;
 
@@ -152,6 +170,10 @@ pub mod prelude {
     pub use crate::straggler::{
         BimodalDelays, DelayModel, ExponentialDelays, MarkovDelays,
         ParetoDelays, ShiftedExponentialDelays, TraceDelays, WeibullDelays,
+    };
+    pub use crate::sweep::{
+        derive_seed, edit, sweep_meta, write_sweep_csv, CfgEdit, RunSpec,
+        SweepExecutor, SweepGrid,
     };
     pub use crate::theory::{
         adaptive_envelope, switching_times, BoundParams, ErrorBound,

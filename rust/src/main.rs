@@ -8,7 +8,9 @@ use adasgd::config::{
     CodingSchemeSpec, CodingSpec, CompressorSpec, DelaySpec,
     ExperimentConfig, PolicySpec, WorkloadSpec,
 };
-use adasgd::coordinator::{fig1, fig2, fig3, run_experiment, FigureOutput};
+use adasgd::coordinator::{
+    fig1_jobs, fig2_jobs, fig3_jobs, run_experiment, FigureOutput,
+};
 use adasgd::metrics::{write_csv_with_header, AsciiPlot, Recorder};
 use adasgd::policy::{FixedK, PflugParams};
 use adasgd::theory::{switching_times, BoundParams, ErrorBound};
@@ -72,9 +74,19 @@ fn emit(
     }
 }
 
+/// The sweep worker count: `--jobs N`, default 0 = all cores (pure
+/// wall-clock — results are byte-identical for every value).
+fn jobs_flag(args: &Args) -> usize {
+    args.get_parse::<usize>("jobs", 0).unwrap_or(0)
+}
+
 fn cmd_fig1(args: &Args) -> i32 {
     let points = args.get_parse::<usize>("points", 400).unwrap_or(400);
-    let out = fig1(points);
+    if points < 2 {
+        eprintln!("config error: --points {points} must be >= 2");
+        return 2;
+    }
+    let out = fig1_jobs(points, jobs_flag(args));
     let mut runs: Vec<&Recorder> = out.fixed.iter().collect();
     runs.push(&out.adaptive);
     emit(args, "fig1", &runs, &out.summary, &[]);
@@ -87,9 +99,9 @@ fn cmd_figure(args: &Args, which: u8) -> i32 {
     let max_time =
         args.get_parse::<f64>("max-time", default_t).unwrap_or(default_t);
     let FigureOutput { name, runs, summary } = if which == 2 {
-        fig2(seed, max_time)
+        fig2_jobs(seed, max_time, jobs_flag(args))
     } else {
-        fig3(seed, max_time)
+        fig3_jobs(seed, max_time, jobs_flag(args))
     };
     let refs: Vec<&Recorder> = runs.iter().collect();
     emit(args, &name, &refs, &summary, &[]);
@@ -482,7 +494,7 @@ fn cmd_list_artifacts(args: &Args) -> i32 {
 }
 
 fn cmd_repeat(args: &Args) -> i32 {
-    use adasgd::coordinator::run_repeated;
+    use adasgd::coordinator::run_repeated_jobs;
     let Some(path) = args.get("config") else {
         eprintln!("repeat requires --config exp.toml");
         return 2;
@@ -500,7 +512,10 @@ fn cmd_repeat(args: &Args) -> i32 {
     let reps = args.get_parse::<usize>("steps", 5).unwrap_or(5); // repetitions
     let seed0 = args.get_parse::<u64>("seed", 100).unwrap_or(100);
     let points = args.get_parse::<usize>("points", 24).unwrap_or(24);
-    match run_repeated(&cfg, seed0, reps, points) {
+    // --jobs overrides the config's `[run] jobs` (both mean: threads for
+    // the repetition fan-out; results are identical for every value).
+    let jobs = args.get_parse::<usize>("jobs", cfg.jobs).unwrap_or(cfg.jobs);
+    match run_repeated_jobs(&cfg, seed0, reps, points, jobs) {
         Ok(agg) => {
             println!(
                 "{} - mean +/- std over {} seeds ({}..{}):",

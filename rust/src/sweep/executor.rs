@@ -1,0 +1,256 @@
+//! Parallel, deterministic execution of [`RunSpec`] lists.
+//!
+//! [`SweepExecutor`] fans independent specs out over an
+//! [`exec::ThreadPool`](crate::exec::ThreadPool), collects results over
+//! a channel, and reassembles them **in spec order** — combined with the
+//! per-spec seed rule ([`super::derive_seed`]) this makes `jobs = 1` and
+//! `jobs = N` produce bit-for-bit identical outputs (test-asserted by
+//! `rust/tests/test_sweep_equivalence.rs`).
+
+use super::RunSpec;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_experiment, ExperimentOutput};
+use crate::exec::ThreadPool;
+use crate::metrics::{write_csv_with_header, CsvError, Recorder};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Runs experiment specs, sequentially or on a thread pool.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepExecutor {
+    jobs: usize,
+}
+
+impl SweepExecutor {
+    /// Executor with `jobs` worker threads; `0` resolves to the
+    /// machine's available parallelism (the `--jobs` / `[run] jobs`
+    /// convention). The worker count never affects results, only
+    /// wall-clock.
+    pub fn new(jobs: usize) -> Self {
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            jobs
+        };
+        Self { jobs }
+    }
+
+    /// Single-threaded executor (the reference order of execution).
+    pub fn sequential() -> Self {
+        Self { jobs: 1 }
+    }
+
+    /// Resolved worker count (≥ 1).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run every spec and return the outputs in spec order.
+    ///
+    /// Each spec is executed as a pure function of its own config (its
+    /// RNG streams derive from `spec.cfg.seed`; no state is shared), so
+    /// the thread schedule cannot reach the results. On failure the
+    /// first error *in spec order* is returned; the parallel path may
+    /// have run later specs already, but their outputs are discarded, so
+    /// the observable result still matches sequential execution.
+    pub fn run(
+        &self,
+        specs: &[RunSpec],
+    ) -> Result<Vec<ExperimentOutput>, String> {
+        // Fail fast on construction errors before running anything: a
+        // bad axis value (cross-field constraint, workload the native
+        // runner rejects, delay-model parameter) must not cost the rest
+        // of the grid's compute — on the sequential path either.
+        // Scanned in spec order and through the same checks
+        // run_experiment performs, so the reported error is the one the
+        // plain spec-by-spec loop would hit first. Delay models are
+        // probe-built once per *distinct* spec (a repeat sweep shares
+        // one; a trace model re-reads its file only once here).
+        let mut delays_checked: Vec<&crate::config::DelaySpec> = Vec::new();
+        for spec in specs {
+            spec.cfg.validate()?;
+            crate::coordinator::reject_non_native(&spec.cfg)?;
+            if !delays_checked.contains(&&spec.cfg.delays) {
+                spec.cfg.delays.build()?;
+                delays_checked.push(&spec.cfg.delays);
+            }
+        }
+        if self.jobs == 1 || specs.len() <= 1 {
+            return specs.iter().map(|s| run_experiment(&s.cfg)).collect();
+        }
+        let cfgs: Arc<Vec<ExperimentConfig>> =
+            Arc::new(specs.iter().map(|s| s.cfg.clone()).collect());
+        let pool = ThreadPool::new(self.jobs.min(specs.len()))?;
+        let results =
+            pool.map(specs.len(), move |i| run_experiment(&cfgs[i]));
+        let mut outs = Vec::with_capacity(results.len());
+        for r in results {
+            outs.push(r?);
+        }
+        Ok(outs)
+    }
+
+    /// Order-preserving parallel map for sweep-adjacent work that is not
+    /// an [`ExperimentConfig`] run (theory curves, custom-channel
+    /// drivers in benches). `f` must be a pure function of `i` for the
+    /// jobs-invariance contract to hold.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        if self.jobs == 1 || n <= 1 {
+            (0..n).map(f).collect()
+        } else {
+            let pool = ThreadPool::new(self.jobs.min(n))
+                .expect("resolved executor jobs are >= 1");
+            pool.map(n, f)
+        }
+    }
+}
+
+/// Run-header meta lines for a spec list: a `sweep:` summary line (run
+/// count + axis names) followed by one line per run recording its
+/// scenario axes and seed.
+pub fn sweep_meta(specs: &[RunSpec]) -> Vec<String> {
+    let mut axis_names: Vec<&str> = Vec::new();
+    for spec in specs {
+        for (name, _) in &spec.axes {
+            if !axis_names.contains(&name.as_str()) {
+                axis_names.push(name);
+            }
+        }
+    }
+    let over = if axis_names.is_empty() {
+        String::new()
+    } else {
+        format!(" over {}", axis_names.join(" x "))
+    };
+    let mut meta = Vec::with_capacity(specs.len() + 1);
+    meta.push(format!("sweep: {} runs{over}", specs.len()));
+    meta.extend(specs.iter().map(|s| s.meta_line()));
+    meta
+}
+
+/// Write a sweep's series through the unified CSV path
+/// ([`metrics::write_csv_with_header`](write_csv_with_header)): the
+/// scenario axes become run-header meta lines, so a results file records
+/// *what* produced each series, not just the numbers.
+pub fn write_sweep_csv(
+    path: &Path,
+    specs: &[RunSpec],
+    outs: &[ExperimentOutput],
+) -> Result<(), CsvError> {
+    assert_eq!(
+        specs.len(),
+        outs.len(),
+        "one output per spec (pass the executor's result unmodified)"
+    );
+    let refs: Vec<&Recorder> = outs.iter().map(|o| &o.recorder).collect();
+    write_csv_with_header(path, &refs, &sweep_meta(specs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicySpec, WorkloadSpec};
+    use crate::sweep::SweepGrid;
+
+    fn tiny() -> ExperimentConfig {
+        ExperimentConfig {
+            label: "tiny".into(),
+            n: 5,
+            max_iterations: 40,
+            max_time: 0.0,
+            record_stride: 10,
+            policy: PolicySpec::Fixed { k: 2 },
+            workload: WorkloadSpec::LinReg { m: 50, d: 5 },
+            ..Default::default()
+        }
+    }
+
+    fn tiny_specs() -> Vec<RunSpec> {
+        SweepGrid::new(tiny())
+            .axis_over(
+                "k",
+                vec![1usize, 2, 4],
+                |k| format!("k={k}"),
+                |k, cfg| cfg.policy = PolicySpec::Fixed { k: *k },
+            )
+            .axis_over(
+                "seed",
+                vec![0u64, 1],
+                |s| format!("s{s}"),
+                |s, cfg| cfg.seed = *s,
+            )
+            .build()
+    }
+
+    #[test]
+    fn parallel_run_matches_sequential_bitwise() {
+        let specs = tiny_specs();
+        let seq = SweepExecutor::sequential().run(&specs).unwrap();
+        let par = SweepExecutor::new(4).run(&specs).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.recorder.label, b.recorder.label);
+            assert_eq!(a.recorder.samples(), b.recorder.samples());
+            assert_eq!(a.steps, b.steps);
+            assert!(a.total_time.to_bits() == b.total_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn errors_surface_in_spec_order() {
+        let mut specs = tiny_specs();
+        // Corrupt the *second* spec; both paths must report this one.
+        specs[1].cfg.n = 0;
+        let seq = SweepExecutor::sequential().run(&specs).unwrap_err();
+        let par = SweepExecutor::new(3).run(&specs).unwrap_err();
+        assert_eq!(seq, par);
+        assert!(seq.contains("n must be"), "{seq}");
+    }
+
+    #[test]
+    fn map_is_order_preserving() {
+        let seq = SweepExecutor::sequential().map(20, |i| 3 * i);
+        let par = SweepExecutor::new(5).map(20, |i| 3 * i);
+        assert_eq!(seq, par);
+        assert_eq!(seq[7], 21);
+    }
+
+    #[test]
+    fn zero_jobs_resolves_to_available_parallelism() {
+        assert!(SweepExecutor::new(0).jobs() >= 1);
+        assert_eq!(SweepExecutor::new(3).jobs(), 3);
+        assert_eq!(SweepExecutor::sequential().jobs(), 1);
+    }
+
+    #[test]
+    fn meta_lines_record_axes_and_seeds() {
+        let specs = tiny_specs();
+        let meta = sweep_meta(&specs);
+        assert_eq!(meta.len(), specs.len() + 1);
+        assert_eq!(meta[0], "sweep: 6 runs over k x seed");
+        assert_eq!(meta[1], "run k=1/s0: k=k=1 seed=s0 rng_seed=0");
+        assert_eq!(meta[6], "run k=4/s1: k=k=4 seed=s1 rng_seed=1");
+    }
+
+    #[test]
+    fn sweep_csv_is_jobs_invariant() {
+        let specs = tiny_specs();
+        let dir = std::env::temp_dir().join("adasgd_sweep_csv_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("jobs1.csv");
+        let p4 = dir.join("jobs4.csv");
+        let seq = SweepExecutor::sequential().run(&specs).unwrap();
+        let par = SweepExecutor::new(4).run(&specs).unwrap();
+        write_sweep_csv(&p1, &specs, &seq).unwrap();
+        write_sweep_csv(&p4, &specs, &par).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b4 = std::fs::read(&p4).unwrap();
+        assert!(!b1.is_empty());
+        assert_eq!(b1, b4, "jobs must never reach the CSV bytes");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,323 @@
+//! Declarative sweep specifications.
+//!
+//! A [`RunSpec`] names one simulation — scenario axes, the fully
+//! materialised [`ExperimentConfig`] (seed included), and a stable grid
+//! index — and a [`SweepGrid`] expands cartesian products of config
+//! edits into an ordered spec list. Everything stochastic about a run is
+//! pinned *inside* its spec before execution starts, which is what lets
+//! the executor run specs on any number of threads without the schedule
+//! leaking into results.
+
+use crate::config::ExperimentConfig;
+use crate::rng::{Rng, SplitMix64};
+use std::sync::Arc;
+
+/// A config edit applied by one axis value (shared, so grid cells can
+/// reuse it; must be pure — it sees a fresh clone of the base config).
+pub type CfgEdit = Arc<dyn Fn(&mut ExperimentConfig) + Send + Sync>;
+
+/// Wrap a closure as a [`CfgEdit`] (sugar for `SweepGrid::axis` call
+/// sites, which would otherwise spell out the `Arc<dyn Fn…>` cast).
+pub fn edit<F>(f: F) -> CfgEdit
+where
+    F: Fn(&mut ExperimentConfig) + Send + Sync + 'static,
+{
+    Arc::new(f)
+}
+
+/// Derive the RNG seed of one spec from a sweep's base seed and the
+/// spec's grid index, via a SplitMix64 hash.
+///
+/// This is the sweep layer's determinism rule: every spec owns a seed
+/// that is a pure function of `(base_seed, index)` — specs never share a
+/// mutable RNG, so neither the worker count nor the completion order can
+/// reach any random stream, and `--jobs 1` ≡ `--jobs N` bit for bit.
+pub fn derive_seed(base_seed: u64, index: u64) -> u64 {
+    let mut mix = SplitMix64::new(base_seed);
+    let expanded = mix.next_u64();
+    let mut mix = SplitMix64::new(expanded ^ index);
+    mix.next_u64()
+}
+
+/// One fully-materialised experiment in a sweep.
+#[derive(Clone)]
+pub struct RunSpec {
+    /// Stable position in the sweep (defines output and CSV order).
+    pub index: usize,
+    /// Joined axis-value label (e.g. `"topk10/k=40"`); equals
+    /// `cfg.label`.
+    pub label: String,
+    /// `(axis name, value label)` pairs, outermost axis first (empty for
+    /// hand-built specs).
+    pub axes: Vec<(String, String)>,
+    /// The concrete experiment to run.
+    pub cfg: ExperimentConfig,
+}
+
+impl RunSpec {
+    /// Wrap a hand-built config as a one-off spec (no grid axes); the
+    /// spec label is the config's label.
+    pub fn from_config(index: usize, cfg: ExperimentConfig) -> Self {
+        Self { index, label: cfg.label.clone(), axes: Vec::new(), cfg }
+    }
+
+    /// Run-header meta line for the sweep CSV: the scenario axes and
+    /// seed that produced this series. The RNG seed is spelled
+    /// `rng_seed=` so it can never collide with a sweep axis named
+    /// `seed`.
+    pub fn meta_line(&self) -> String {
+        let mut line = format!("run {}:", self.label);
+        for (axis, value) in &self.axes {
+            line.push_str(&format!(" {axis}={value}"));
+        }
+        line.push_str(&format!(" rng_seed={}", self.cfg.seed));
+        line
+    }
+}
+
+/// One value of a sweep axis: a display label plus the config edit that
+/// realises it.
+struct AxisValue {
+    label: String,
+    edit: CfgEdit,
+}
+
+/// One sweep axis: a name plus its values.
+struct Axis {
+    name: String,
+    values: Vec<AxisValue>,
+}
+
+/// Cartesian-product builder over a base config.
+///
+/// Axes multiply: the first axis added varies slowest (row-major order),
+/// so `axis A × axis B` enumerates `a0/b0, a0/b1, …, a1/b0, …`. Each
+/// cell clones the base config and applies one edit per axis; the cell
+/// label is the `/`-joined value labels.
+pub struct SweepGrid {
+    base: ExperimentConfig,
+    axes: Vec<Axis>,
+    reseed: Option<u64>,
+}
+
+impl SweepGrid {
+    /// Start a grid from the shared base config.
+    pub fn new(base: ExperimentConfig) -> Self {
+        Self { base, axes: Vec::new(), reseed: None }
+    }
+
+    /// Add an axis from `(value label, edit)` pairs (see [`edit`]).
+    pub fn axis(
+        mut self,
+        name: impl Into<String>,
+        values: Vec<(String, CfgEdit)>,
+    ) -> Self {
+        self.axes.push(Axis {
+            name: name.into(),
+            values: values
+                .into_iter()
+                .map(|(label, edit)| AxisValue { label, edit })
+                .collect(),
+        });
+        self
+    }
+
+    /// Add an axis by mapping a shared `(label, apply)` pair over a list
+    /// of items — convenient for numeric axes like `k ∈ {10, 20, 40}`.
+    pub fn axis_over<T, L, F>(
+        self,
+        name: impl Into<String>,
+        items: Vec<T>,
+        label: L,
+        apply: F,
+    ) -> Self
+    where
+        T: Send + Sync + 'static,
+        L: Fn(&T) -> String,
+        F: Fn(&T, &mut ExperimentConfig) + Send + Sync + 'static,
+    {
+        let apply = Arc::new(apply);
+        let values = items
+            .into_iter()
+            .map(|item| {
+                let text = label(&item);
+                let apply = Arc::clone(&apply);
+                let cell: CfgEdit = Arc::new(move |cfg: &mut ExperimentConfig| {
+                    apply(&item, cfg)
+                });
+                (text, cell)
+            })
+            .collect();
+        self.axis(name, values)
+    }
+
+    /// Add a repetition axis: `reps` copies of every cell, each with an
+    /// independent RNG stream `derive_seed(base_seed, rep)` (see
+    /// [`derive_seed`] for why seeds are derived, never shared).
+    pub fn repeats(self, reps: usize, base_seed: u64) -> Self {
+        self.axis_over(
+            "rep",
+            (0..reps as u64).collect(),
+            |r| format!("rep{r}"),
+            move |r, cfg| cfg.seed = derive_seed(base_seed, *r),
+        )
+    }
+
+    /// Re-seed every cell from its grid *index* after the axis edits
+    /// run: `seed = derive_seed(base_seed, index)`. Use when the axes
+    /// themselves don't manage seeds and each cell should still draw an
+    /// independent stream.
+    pub fn with_derived_seeds(mut self, base_seed: u64) -> Self {
+        self.reseed = Some(base_seed);
+        self
+    }
+
+    /// Number of cells the grid will expand to.
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// True when some axis has no values (the grid expands to nothing).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian product into ordered [`RunSpec`]s.
+    pub fn build(&self) -> Vec<RunSpec> {
+        let total = self.len();
+        let mut specs = Vec::with_capacity(total);
+        for index in 0..total {
+            let mut cfg = self.base.clone();
+            let mut labels = Vec::with_capacity(self.axes.len());
+            let mut axes = Vec::with_capacity(self.axes.len());
+            let mut rem = index;
+            let mut stride = total;
+            for axis in &self.axes {
+                stride /= axis.values.len();
+                let value = &axis.values[rem / stride];
+                rem %= stride;
+                (value.edit)(&mut cfg);
+                labels.push(value.label.clone());
+                axes.push((axis.name.clone(), value.label.clone()));
+            }
+            let label = if labels.is_empty() {
+                cfg.label.clone()
+            } else {
+                labels.join("/")
+            };
+            cfg.label = label.clone();
+            if let Some(base_seed) = self.reseed {
+                cfg.seed = derive_seed(base_seed, index as u64);
+            }
+            specs.push(RunSpec { index, label, axes, cfg });
+        }
+        specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicySpec;
+
+    fn base() -> ExperimentConfig {
+        ExperimentConfig {
+            label: "base".into(),
+            n: 10,
+            max_iterations: 50,
+            max_time: 0.0,
+            workload: crate::config::WorkloadSpec::LinReg { m: 200, d: 10 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_is_row_major_and_labelled() {
+        let specs = SweepGrid::new(base())
+            .axis_over(
+                "k",
+                vec![2usize, 5],
+                |k| format!("k={k}"),
+                |k, cfg| cfg.policy = PolicySpec::Fixed { k: *k },
+            )
+            .axis(
+                "seed",
+                vec![
+                    ("s0".to_string(), edit(|c| c.seed = 0)),
+                    ("s1".to_string(), edit(|c| c.seed = 1)),
+                ],
+            )
+            .build();
+        assert_eq!(specs.len(), 4);
+        let labels: Vec<&str> =
+            specs.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, ["k=2/s0", "k=2/s1", "k=5/s0", "k=5/s1"]);
+        assert_eq!(specs[2].cfg.policy, PolicySpec::Fixed { k: 5 });
+        assert_eq!(specs[3].cfg.seed, 1);
+        assert_eq!(specs[3].index, 3);
+        assert_eq!(
+            specs[3].axes,
+            vec![
+                ("k".to_string(), "k=5".to_string()),
+                ("seed".to_string(), "s1".to_string())
+            ]
+        );
+        assert_eq!(
+            specs[0].meta_line(),
+            "run k=2/s0: k=k=2 seed=s0 rng_seed=0"
+        );
+    }
+
+    #[test]
+    fn axisless_grid_is_the_base_config() {
+        let specs = SweepGrid::new(base()).build();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].label, "base");
+        assert!(specs[0].axes.is_empty());
+    }
+
+    #[test]
+    fn empty_axis_expands_to_nothing() {
+        let grid = SweepGrid::new(base()).axis("empty", Vec::new());
+        assert!(grid.is_empty());
+        assert!(grid.build().is_empty());
+    }
+
+    #[test]
+    fn derived_seeds_are_stable_and_distinct() {
+        let a = derive_seed(7, 0);
+        assert_eq!(a, derive_seed(7, 0), "pure function of (base, index)");
+        let seeds: Vec<u64> = (0..64).map(|i| derive_seed(7, i)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len(), "no collisions in a sweep");
+        assert_ne!(derive_seed(7, 3), derive_seed(8, 3), "base matters");
+    }
+
+    #[test]
+    fn repeats_axis_derives_per_rep_seeds() {
+        let specs =
+            SweepGrid::new(base()).repeats(3, 99).build();
+        assert_eq!(specs.len(), 3);
+        let seeds: Vec<u64> = specs.iter().map(|s| s.cfg.seed).collect();
+        assert_eq!(seeds[0], derive_seed(99, 0));
+        assert_eq!(seeds[2], derive_seed(99, 2));
+        assert_eq!(specs[1].label, "rep1");
+    }
+
+    #[test]
+    fn with_derived_seeds_reseeds_by_cell_index() {
+        let specs = SweepGrid::new(base())
+            .axis_over(
+                "k",
+                vec![2usize, 5],
+                |k| format!("k={k}"),
+                |k, cfg| cfg.policy = PolicySpec::Fixed { k: *k },
+            )
+            .with_derived_seeds(42)
+            .build();
+        assert_eq!(specs[0].cfg.seed, derive_seed(42, 0));
+        assert_eq!(specs[1].cfg.seed, derive_seed(42, 1));
+    }
+}

@@ -1,0 +1,257 @@
+//! The sweep layer's core contract, asserted end to end: `--jobs 1` and
+//! `--jobs N` are **byte-identical** — same recorders, same aggregate
+//! curves, same CSV bytes — across a scenario grid of {delay models ×
+//! k-policies × coded/uncoded × priced/dense channels} (proptest-style
+//! exhaustive enumeration of the axes, plus async riders).
+//!
+//! Why this must hold: every spec's RNG streams derive from its own
+//! `cfg.seed`, pinned at grid-build time (`sweep::derive_seed` /
+//! explicit per-spec seeds); specs share no mutable state; and the
+//! executor reassembles completions into spec order. If any of those
+//! three breaks, parallel completion order leaks into results and these
+//! tests catch it.
+
+use adasgd::config::{
+    CodingSchemeSpec, CodingSpec, CommSpec, CompressorSpec, DelaySpec,
+    ExperimentConfig, PolicySpec, WorkloadSpec,
+};
+use adasgd::coordinator::{run_repeated_jobs, ExperimentOutput};
+use adasgd::policy::PflugParams;
+use adasgd::sweep::{
+    derive_seed, edit, sweep_meta, write_sweep_csv, RunSpec, SweepExecutor,
+    SweepGrid,
+};
+
+fn tiny_base() -> ExperimentConfig {
+    ExperimentConfig {
+        label: String::new(),
+        n: 10,
+        eta: 1e-3,
+        max_iterations: 120,
+        max_time: 0.0,
+        seed: 7,
+        record_stride: 20,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 5 },
+        workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        comm: Default::default(),
+        coding: None,
+        jobs: 0,
+    }
+}
+
+/// The scenario grid: 2 delay models × 2 policies × {uncoded, frc r=2}
+/// × {dense free channel, priced top-k + finite ingress} = 16 specs,
+/// plus 2 async riders (async × coding is rejected at validation, so
+/// async joins as explicit specs rather than a policy-axis value).
+fn scenario_specs() -> Vec<RunSpec> {
+    let mut specs = SweepGrid::new(tiny_base())
+        .axis(
+            "delay",
+            vec![
+                (
+                    "exp".to_string(),
+                    edit(|c| c.delays = DelaySpec::Exponential { lambda: 1.0 }),
+                ),
+                (
+                    "pareto".to_string(),
+                    edit(|c| {
+                        c.delays = DelaySpec::Pareto { xm: 0.5, alpha: 2.5 }
+                    }),
+                ),
+            ],
+        )
+        .axis(
+            "policy",
+            vec![
+                (
+                    "k5".to_string(),
+                    edit(|c| c.policy = PolicySpec::Fixed { k: 5 }),
+                ),
+                (
+                    "adaptive".to_string(),
+                    edit(|c| {
+                        c.policy = PolicySpec::Adaptive(PflugParams {
+                            k0: 2,
+                            step: 2,
+                            thresh: 5,
+                            burnin: 20,
+                            k_max: 10,
+                        })
+                    }),
+                ),
+            ],
+        )
+        .axis(
+            "coding",
+            vec![
+                ("uncoded".to_string(), edit(|c| c.coding = None)),
+                (
+                    "frc2".to_string(),
+                    edit(|c| {
+                        c.coding = Some(CodingSpec {
+                            scheme: CodingSchemeSpec::Frc,
+                            r: 2,
+                        })
+                    }),
+                ),
+            ],
+        )
+        .axis(
+            "channel",
+            vec![
+                (
+                    "dense-free".to_string(),
+                    edit(|c| c.comm = CommSpec::default()),
+                ),
+                (
+                    "topk-priced".to_string(),
+                    edit(|c| {
+                        c.comm.scheme = CompressorSpec::TopK { frac: 0.3 };
+                        c.comm.bandwidth = 500.0;
+                        c.comm.latency = 0.01;
+                        c.comm.ingress_bw = 2000.0;
+                    }),
+                ),
+            ],
+        )
+        .build();
+    for priced in [false, true] {
+        let mut cfg = tiny_base();
+        cfg.policy = PolicySpec::Async;
+        cfg.label = format!(
+            "async/{}",
+            if priced { "topk-priced" } else { "dense-free" }
+        );
+        if priced {
+            cfg.comm.scheme = CompressorSpec::TopK { frac: 0.3 };
+            cfg.comm.bandwidth = 500.0;
+            cfg.comm.latency = 0.01;
+            cfg.comm.ingress_bw = 2000.0;
+        }
+        specs.push(RunSpec::from_config(specs.len(), cfg));
+    }
+    specs
+}
+
+fn assert_outputs_identical(a: &ExperimentOutput, b: &ExperimentOutput) {
+    assert_eq!(a.recorder.label, b.recorder.label);
+    assert_eq!(
+        a.recorder.samples(),
+        b.recorder.samples(),
+        "{}: recorded series must be bitwise equal",
+        a.recorder.label
+    );
+    assert_eq!(a.steps, b.steps, "{}", a.recorder.label);
+    assert_eq!(
+        a.total_time.to_bits(),
+        b.total_time.to_bits(),
+        "{}: clock must be bitwise equal",
+        a.recorder.label
+    );
+    assert_eq!(a.k_changes, b.k_changes, "{}", a.recorder.label);
+    assert_eq!(a.bytes_sent, b.bytes_sent, "{}", a.recorder.label);
+    assert_eq!(a.bytes_down, b.bytes_down, "{}", a.recorder.label);
+    assert_eq!(
+        a.comm_time.to_bits(),
+        b.comm_time.to_bits(),
+        "{}",
+        a.recorder.label
+    );
+    assert_eq!(
+        a.down_time.to_bits(),
+        b.down_time.to_bits(),
+        "{}",
+        a.recorder.label
+    );
+}
+
+#[test]
+fn jobs_1_and_jobs_4_outputs_are_bitwise_identical() {
+    let specs = scenario_specs();
+    assert_eq!(specs.len(), 18, "2 delay x 2 policy x 2 coding x 2 channel + 2 async");
+    let seq = SweepExecutor::new(1).run(&specs).expect("sequential sweep");
+    let par = SweepExecutor::new(4).run(&specs).expect("parallel sweep");
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_outputs_identical(a, b);
+    }
+    // Sanity that the grid actually exercised distinct scenarios: the
+    // priced channels metered bytes and the labels are unique.
+    let mut labels: Vec<&str> =
+        specs.iter().map(|s| s.label.as_str()).collect();
+    labels.sort_unstable();
+    labels.dedup();
+    assert_eq!(labels.len(), specs.len(), "labels must be unique");
+    assert!(seq.iter().any(|o| o.comm_time > 0.0));
+}
+
+#[test]
+fn jobs_1_and_jobs_4_csvs_are_byte_identical() {
+    let specs = scenario_specs();
+    let dir = std::env::temp_dir().join("adasgd_sweep_equivalence_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1 = dir.join("jobs1.csv");
+    let p4 = dir.join("jobs4.csv");
+    let seq = SweepExecutor::new(1).run(&specs).expect("sequential sweep");
+    let par = SweepExecutor::new(4).run(&specs).expect("parallel sweep");
+    write_sweep_csv(&p1, &specs, &seq).unwrap();
+    write_sweep_csv(&p4, &specs, &par).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, "jobs must never reach the CSV bytes");
+    // The run-header meta lines carry the scenario axes.
+    let text = String::from_utf8(b1).unwrap();
+    assert!(
+        text.contains("# sweep: 18 runs over delay x policy x coding x channel"),
+        "{}",
+        text.lines().take(3).collect::<Vec<_>>().join("\n")
+    );
+    assert!(text.contains(
+        "# run exp/k5/frc2/topk-priced: delay=exp policy=k5 coding=frc2 \
+         channel=topk-priced rng_seed=7"
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn repeated_aggregate_is_jobs_invariant() {
+    let mut base = tiny_base();
+    base.label = "agg".into();
+    base.max_time = 40.0;
+    base.max_iterations = 10_000;
+    let seq = run_repeated_jobs(&base, 100, 5, 16, 1).unwrap();
+    let par = run_repeated_jobs(&base, 100, 5, 16, 4).unwrap();
+    assert_eq!(seq, par, "aggregation must walk outputs in spec order");
+    assert_eq!(seq.reps, 5);
+    assert!(seq.final_mean().is_finite());
+}
+
+#[test]
+fn derived_seeds_are_order_free_and_collision_free() {
+    // The RNG-derivation rule: a spec's seed depends only on (base,
+    // index) — evaluating in any order gives the same streams.
+    let forward: Vec<u64> = (0..32).map(|i| derive_seed(11, i)).collect();
+    let mut backward: Vec<u64> =
+        (0..32).rev().map(|i| derive_seed(11, i)).collect();
+    backward.reverse();
+    assert_eq!(forward, backward);
+    let mut dedup = forward.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), forward.len());
+}
+
+#[test]
+fn grid_meta_is_deterministic_and_ordered() {
+    let specs = scenario_specs();
+    let m1 = sweep_meta(&specs);
+    let m2 = sweep_meta(&scenario_specs());
+    assert_eq!(m1, m2);
+    assert_eq!(m1.len(), specs.len() + 1);
+    // Spec order in the meta mirrors spec order in the grid.
+    assert!(m1[1].starts_with("run exp/k5/uncoded/dense-free:"), "{}", m1[1]);
+    assert!(m1[16].starts_with("run pareto/adaptive/frc2/topk-priced:"), "{}", m1[16]);
+    assert!(m1[17].starts_with("run async/dense-free:"), "{}", m1[17]);
+}
