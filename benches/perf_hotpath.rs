@@ -24,7 +24,10 @@ use adasgd::config::{
 use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
 use adasgd::grad::{GradBackend, NativeBackend};
 use adasgd::linalg::{gemm, gemv, Matrix};
-use adasgd::master::{fastest_k_select, run_fastest_k, MasterConfig};
+use adasgd::comm::CommChannel;
+use adasgd::master::{
+    fastest_k_select, run_fastest_k, run_fastest_k_comm_traced, MasterConfig,
+};
 use adasgd::model::LinRegProblem;
 use adasgd::policy::FixedK;
 use adasgd::rng::{Pcg64, Rng};
@@ -54,6 +57,7 @@ fn sweep_spec(i: usize, iters: u64) -> RunSpec {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        trace: None,
     })
 }
 
@@ -174,6 +178,80 @@ fn main() {
         });
         emit(&mut report, r);
     }
+
+    section("event trace — record overhead + binary codec (n=50)");
+    // Observability must be near-free: the tracing-off entry is the
+    // baseline the tracing-on entry is diffed against (same seed, same
+    // trajectory — the trace is the only difference), and the codec
+    // entries price (de)serializing the recorded event stream.
+    let trace_iters: u64 = if args.smoke { 100 } else { 1000 };
+    let trace_cfg = MasterConfig {
+        eta: 5e-4,
+        momentum: 0.0,
+        max_iterations: trace_iters,
+        max_time: 0.0,
+        seed: 3,
+        record_stride: 1_000_000, // no eval in the timed loop
+    };
+    let bt = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    for (tag, on) in [("off", false), ("on", true)] {
+        let r = bt.run(
+            &format!("{trace_iters}-iter run @ k=10, tracing {tag}"),
+            || {
+                let mut backend = NativeBackend::new(shards.clone());
+                let mut policy = FixedK::new(10);
+                let mut channel = CommChannel::dense(50);
+                let run = run_fastest_k_comm_traced(
+                    &mut backend,
+                    &em,
+                    &mut policy,
+                    &mut channel,
+                    &vec![0.0f32; 100],
+                    &trace_cfg,
+                    &mut |w| problem.error(w),
+                    on,
+                );
+                std::hint::black_box(run.iterations);
+            },
+        );
+        emit(&mut report, r);
+    }
+    // One untimed traced run yields the event stream the codec entries
+    // chew on.
+    let trace = {
+        let mut backend = NativeBackend::new(shards.clone());
+        let mut policy = FixedK::new(10);
+        let mut channel = CommChannel::dense(50);
+        run_fastest_k_comm_traced(
+            &mut backend,
+            &em,
+            &mut policy,
+            &mut channel,
+            &vec![0.0f32; 100],
+            &trace_cfg,
+            &mut |w| problem.error(w),
+            true,
+        )
+        .trace
+        .expect("traced run must carry its trace")
+    };
+    let encoded = trace.to_bytes();
+    println!(
+        "  ({} events, {} bytes encoded)",
+        trace.len(),
+        encoded.len()
+    );
+    let bc = Bencher { warmup_iters: 2, samples: 10, iters_per_sample: 3 };
+    let r = bc.run("trace encode (to_bytes)", || {
+        std::hint::black_box(trace.to_bytes().len());
+    });
+    emit(&mut report, r);
+    let r = bc.run("trace decode (from_bytes)", || {
+        let t = adasgd::trace::Trace::from_bytes(&encoded)
+            .expect("round-trip decode");
+        std::hint::black_box(t.len());
+    });
+    emit(&mut report, r);
 
     pjrt_section(&shards, &w, &mut out, &mut report);
 

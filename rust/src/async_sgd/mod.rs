@@ -89,6 +89,12 @@ pub struct AsyncRun {
     pub bytes_down: u64,
     /// Total download time charged.
     pub down_time: f64,
+    /// Late (discarded) responses — always 0 here (no async update is
+    /// ever discarded); present for uniform CSV plumbing.
+    pub late_responses: u64,
+    /// The binary event trace when tracing was enabled (see
+    /// [`crate::trace`]), `None` otherwise.
+    pub trace: Option<crate::trace::Trace>,
 }
 
 /// Run asynchronous SGD from `w0` with the zero-cost dense channel.
@@ -133,6 +139,21 @@ pub fn run_async_comm(
     cfg: &AsyncConfig,
     eval_error: &mut dyn FnMut(&[f32]) -> f64,
 ) -> AsyncRun {
+    run_async_comm_traced(backend, delays, channel, w0, cfg, eval_error, false)
+}
+
+/// [`run_async_comm`] with opt-in binary event tracing (see
+/// [`crate::trace`]); the trajectory is bit-identical either way.
+#[allow(clippy::too_many_arguments)]
+pub fn run_async_comm_traced(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &AsyncConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    trace: bool,
+) -> AsyncRun {
     let n = backend.n_shards();
     let d = backend.dim();
     assert_eq!(w0.len(), d, "w0 dimension mismatch");
@@ -151,7 +172,7 @@ pub fn run_async_comm(
         seed: cfg.seed,
         record_stride: cfg.record_stride,
     };
-    let core = EngineCore::new(
+    let mut core = EngineCore::new(
         "async",
         channel,
         delays,
@@ -160,6 +181,9 @@ pub fn run_async_comm(
         engine_cfg,
         RngStreams::asynchronous(cfg.seed),
     );
+    if trace {
+        core.enable_trace(crate::trace::Discipline::Async);
+    }
     let mut gather = StalenessGather::new(backend, cfg.staleness_damping);
     let run = RoundEngine::new(core).run(&mut gather);
     AsyncRun {
@@ -173,6 +197,8 @@ pub fn run_async_comm(
         comm_time: run.comm_time,
         bytes_down: run.bytes_down,
         down_time: run.down_time,
+        late_responses: run.late_responses,
+        trace: run.trace,
     }
 }
 

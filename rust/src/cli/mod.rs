@@ -56,7 +56,7 @@ const VALUED_FLAGS: &[&str] = &[
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
     "link-latency", "downlink", "down-levels", "down-frac",
     "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
-    "ingress", "coding", "replication", "jobs",
+    "ingress", "coding", "replication", "jobs", "trace", "limit",
 ];
 
 impl Args {
@@ -134,6 +134,13 @@ COMMANDS:
   list-artifacts
               show the compiled artifact registry         [--artifacts DIR]
   repeat      multi-seed aggregate of a config            [--config exp.toml --steps R]
+  trace       inspect / replay a recorded event trace:
+                trace analyze FILE.trace
+                trace dump FILE.trace [--limit N]
+                trace replay FILE.trace --config exp.toml
+              (record with `train --trace DIR` or `[trace] dir`; replay
+              re-drives the engine from the recorded delays and verifies
+              the recorder series is bitwise-identical)
   switching-times
               print the Theorem-1 schedule for Example 1
   help        this message
@@ -150,6 +157,9 @@ COMMON FLAGS:
 TRAIN FLAGS (no --config):
   --n N --k K | --k0 K0 --step S --thresh T --burnin B --k-max M
   --eta F --max-time T --max-iterations J --m M --d D --lambda L
+  --trace DIR         record a binary event trace to
+                      DIR/<label>.trace (also `[trace] dir` in TOML;
+                      off by default — tracing never changes results)
   --async             run the asynchronous baseline instead of fastest-k
   --coding SCHEME     gradient coding: frc | cyclic | bernoulli
                       (redundant shards, exact-gradient rounds; the k

@@ -33,6 +33,25 @@ pub fn run_coded_comm(
     cfg: &MasterConfig,
     eval_error: &mut dyn FnMut(&[f32]) -> f64,
 ) -> FastestKRun {
+    run_coded_comm_traced(
+        backend, delays, scheme, policy, channel, w0, cfg, eval_error, false,
+    )
+}
+
+/// [`run_coded_comm`] with opt-in binary event tracing (see
+/// [`crate::trace`]); the trajectory is bit-identical either way.
+#[allow(clippy::too_many_arguments)]
+pub fn run_coded_comm_traced(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    scheme: &dyn CodingScheme,
+    policy: &mut dyn KPolicy,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &MasterConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    trace: bool,
+) -> FastestKRun {
     let n = backend.n_shards();
     assert_eq!(
         scheme.n(),
@@ -54,7 +73,7 @@ pub fn run_coded_comm(
         seed: cfg.seed,
         record_stride: cfg.record_stride,
     };
-    let core = EngineCore::new(
+    let mut core = EngineCore::new(
         format!("coded-{}", scheme.name()),
         channel,
         delays,
@@ -63,6 +82,9 @@ pub fn run_coded_comm(
         engine_cfg,
         RngStreams::coded(cfg.seed),
     );
+    if trace {
+        core.enable_trace(crate::trace::Discipline::Coded);
+    }
     let mut gather = CodedGather::new(backend, scheme, policy);
     let run = RoundEngine::new(core).run(&mut gather);
     FastestKRun {
@@ -75,5 +97,8 @@ pub fn run_coded_comm(
         comm_time: run.comm_time,
         bytes_down: run.bytes_down,
         down_time: run.down_time,
+        late_responses: run.late_responses,
+        mean_staleness: run.mean_staleness,
+        trace: run.trace,
     }
 }

@@ -32,6 +32,6 @@ mod driver;
 mod frc;
 mod scheme;
 
-pub use driver::run_coded_comm;
+pub use driver::{run_coded_comm, run_coded_comm_traced};
 pub use frc::{check_scheme, run_coded_gd, CodedConfig, CodedRun, FrcScheme};
 pub use scheme::{BernoulliScheme, CodingScheme, CoverPart, CyclicRepetition};

@@ -400,6 +400,12 @@ pub struct ExperimentConfig {
     /// experiment's identity — `jobs = 1` and `jobs = N` produce
     /// byte-identical results (see [`crate::sweep`]).
     pub jobs: usize,
+    /// Event-trace output directory (`None` = tracing off). TOML:
+    /// `[trace] dir`; CLI: `--trace <dir>`. When set, every run records
+    /// a binary event trace to `<dir>/<sanitized-label>.trace` (see
+    /// [`crate::trace`]). Never part of the experiment's identity —
+    /// tracing changes no RNG draw, clock value, or output byte.
+    pub trace: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -419,6 +425,7 @@ impl Default for ExperimentConfig {
             comm: CommSpec::default(),
             coding: None,
             jobs: 0,
+            trace: None,
         }
     }
 }
@@ -644,6 +651,18 @@ impl ExperimentConfig {
                     ));
                 }
                 cfg.jobs = jobs as usize;
+            }
+        }
+
+        if let Some(sec) = doc.section("trace") {
+            if let Some(v) = sec.get("dir") {
+                let dir = v
+                    .as_str()
+                    .ok_or("trace.dir must be a string (directory path)")?;
+                if dir.is_empty() {
+                    return Err("trace.dir must not be empty".into());
+                }
+                cfg.trace = Some(dir.into());
             }
         }
 
@@ -1113,6 +1132,26 @@ r = 3
         assert!(
             ExperimentConfig::from_toml("[run]\njobs = \"all\"\n").is_err()
         );
+    }
+
+    #[test]
+    fn trace_section_parses_and_defaults_off() {
+        // Off by default — existing configs keep byte-identical outputs.
+        let dflt = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n",
+        )
+        .unwrap();
+        assert_eq!(dflt.trace, None);
+        let cfg = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [trace]\ndir = \"traces/out\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some("traces/out"));
+        assert!(
+            ExperimentConfig::from_toml("[trace]\ndir = \"\"\n").is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[trace]\ndir = 3\n").is_err());
     }
 
     #[test]

@@ -17,4 +17,4 @@ pub use figures::{
 };
 pub use repeat::{run_repeated, run_repeated_jobs, AggregatedCurve};
 pub(crate) use runner::reject_non_native;
-pub use runner::{run_experiment, ExperimentOutput};
+pub use runner::{replay_experiment, run_experiment, ExperimentOutput};

@@ -1,14 +1,16 @@
 //! Config-driven experiment execution.
 
-use crate::async_sgd::{run_async_comm, AsyncConfig};
-use crate::coding::run_coded_comm;
+use crate::async_sgd::{run_async_comm_traced, AsyncConfig};
+use crate::coding::run_coded_comm_traced;
 use crate::config::{ExperimentConfig, PolicySpec, WorkloadSpec};
 use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
 use crate::grad::NativeBackend;
-use crate::master::{run_fastest_k_comm, MasterConfig};
+use crate::master::{run_fastest_k_comm_traced, MasterConfig};
 use crate::metrics::Recorder;
 use crate::model::LinRegProblem;
 use crate::policy::{AdaptivePflug, FixedK, KPolicy};
+use crate::straggler::DelayModel;
+use crate::trace::{sanitize_label, Discipline, ReplayDelays, Trace};
 
 /// What an experiment run produces.
 pub struct ExperimentOutput {
@@ -28,6 +30,14 @@ pub struct ExperimentOutput {
     pub bytes_down: u64,
     /// Total download time charged.
     pub down_time: f64,
+    /// Responses discarded by the gather (stale generations plus fresh
+    /// responses outside the fastest-k; 0 for async, which applies all).
+    pub late_responses: u64,
+    /// Mean staleness of applied updates (0 for round disciplines).
+    pub mean_staleness: f64,
+    /// The recorded event trace when `cfg.trace` is set (already saved
+    /// to disk by [`run_experiment`]; kept here for in-process use).
+    pub trace: Option<Trace>,
 }
 
 /// Reject workloads this native-backend runner cannot execute. Shared
@@ -48,10 +58,69 @@ pub(crate) fn reject_non_native(
 
 /// Run one experiment end-to-end on the native backend.
 ///
+/// When `cfg.trace` names a directory, the run records a binary event
+/// trace (see [`crate::trace`]) and saves it there as
+/// `<sanitized-label>.trace`; the trajectory and every other output are
+/// bit-identical with tracing on or off.
+///
 /// (The XLA-backend path is exercised by the examples and integration
 /// tests; sweeps use the native backend so they don't require artifacts
 /// for every shape.)
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String> {
+    let out = run_experiment_core(cfg, cfg.trace.is_some(), None)?;
+    if let (Some(dir), Some(trace)) = (&cfg.trace, &out.trace) {
+        let path = std::path::Path::new(dir)
+            .join(format!("{}.trace", sanitize_label(&cfg.label)));
+        trace.save(&path).map_err(|e| {
+            format!("failed to write trace {}: {e}", path.display())
+        })?;
+    }
+    Ok(out)
+}
+
+/// Re-drive an experiment from a recorded event trace: the trace's raw
+/// delay draws replace live sampling ([`ReplayDelays`]), so the replay
+/// reproduces the recorded run's model trajectory, virtual clock, and
+/// recorder samples *bitwise* — provided `cfg` matches the recording
+/// (worker count and discipline are pre-validated here; the remaining
+/// fields are the caller's contract, checked bitwise by `trace replay`).
+pub fn replay_experiment(
+    cfg: &ExperimentConfig,
+    trace: &Trace,
+) -> Result<ExperimentOutput, String> {
+    if trace.n_workers as usize != cfg.n {
+        return Err(format!(
+            "trace was recorded with {} workers but the config has n = {}; \
+             replay needs the exact recorded configuration",
+            trace.n_workers, cfg.n
+        ));
+    }
+    let expected = if cfg.coding.is_some() {
+        Discipline::Coded
+    } else if matches!(cfg.policy, PolicySpec::Async) {
+        Discipline::Async
+    } else {
+        Discipline::Sync
+    };
+    if trace.discipline != expected {
+        return Err(format!(
+            "trace was recorded under the `{}` discipline but the config \
+             runs `{}`; replay needs the exact recorded configuration",
+            trace.discipline, expected
+        ));
+    }
+    let replay = ReplayDelays::from_trace(trace)?;
+    run_experiment_core(cfg, false, Some(&replay))
+}
+
+/// Shared body: validate, build the problem, dispatch on discipline.
+/// `override_delays` (replay) substitutes for the config's delay model;
+/// `trace_on` records an event trace into the output.
+fn run_experiment_core(
+    cfg: &ExperimentConfig,
+    trace_on: bool,
+    override_delays: Option<&dyn DelayModel>,
+) -> Result<ExperimentOutput, String> {
     cfg.validate()?;
     reject_non_native(cfg)?;
     let (m, d) = match cfg.workload {
@@ -66,7 +135,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
     );
     let problem = LinRegProblem::new(&ds);
     let mut backend = NativeBackend::new(Shards::partition(&ds, cfg.n));
-    let delays = cfg.delays.build()?;
+    let built;
+    let delays: &dyn DelayModel = match override_delays {
+        Some(d) => d,
+        None => {
+            built = cfg.delays.build()?;
+            built.as_ref()
+        }
+    };
     let mut channel = cfg.comm.build(cfg.n);
     let w0 = vec![0.0f32; d];
 
@@ -90,15 +166,16 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
             seed: cfg.seed,
             record_stride: cfg.record_stride,
         };
-        let run = run_coded_comm(
+        let run = run_coded_comm_traced(
             &mut backend,
-            delays.as_ref(),
+            delays,
             scheme.as_ref(),
             policy.as_mut(),
             &mut channel,
             &w0,
             &mcfg,
             &mut |w| problem.error(w),
+            trace_on,
         );
         let mut recorder = run.recorder;
         recorder.label = cfg.label.clone();
@@ -111,6 +188,9 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
             comm_time: run.comm_time,
             bytes_down: run.bytes_down,
             down_time: run.down_time,
+            late_responses: run.late_responses,
+            mean_staleness: run.mean_staleness,
+            trace: run.trace,
         });
     }
 
@@ -124,13 +204,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 record_stride: cfg.record_stride,
                 ..Default::default()
             };
-            let run = run_async_comm(
+            let run = run_async_comm_traced(
                 &mut backend,
-                delays.as_ref(),
+                delays,
                 &mut channel,
                 &w0,
                 &acfg,
                 &mut |w| problem.error(w),
+                trace_on,
             );
             let mut recorder = run.recorder;
             recorder.label = cfg.label.clone();
@@ -143,6 +224,9 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 comm_time: run.comm_time,
                 bytes_down: run.bytes_down,
                 down_time: run.down_time,
+                late_responses: run.late_responses,
+                mean_staleness: run.mean_staleness,
+                trace: run.trace,
             })
         }
         policy_spec => {
@@ -161,14 +245,15 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 seed: cfg.seed,
                 record_stride: cfg.record_stride,
             };
-            let run = run_fastest_k_comm(
+            let run = run_fastest_k_comm_traced(
                 &mut backend,
-                delays.as_ref(),
+                delays,
                 policy.as_mut(),
                 &mut channel,
                 &w0,
                 &mcfg,
                 &mut |w| problem.error(w),
+                trace_on,
             );
             let mut recorder = run.recorder;
             recorder.label = cfg.label.clone();
@@ -181,6 +266,9 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput, String
                 comm_time: run.comm_time,
                 bytes_down: run.bytes_down,
                 down_time: run.down_time,
+                late_responses: run.late_responses,
+                mean_staleness: run.mean_staleness,
+                trace: run.trace,
             })
         }
     }
@@ -207,7 +295,25 @@ mod tests {
             comm: Default::default(),
             coding: None,
             jobs: 0,
+            trace: None,
         }
+    }
+
+    #[test]
+    fn replay_rejects_mismatched_config() {
+        let mut cfg = base();
+        let trace = Trace::new(Discipline::Sync, 10, "t");
+        // Wrong worker count.
+        cfg.n = 4;
+        assert!(replay_experiment(&cfg, &trace)
+            .unwrap_err()
+            .contains("workers"));
+        // Wrong discipline.
+        let mut cfg = base();
+        cfg.policy = PolicySpec::Async;
+        assert!(replay_experiment(&cfg, &trace)
+            .unwrap_err()
+            .contains("discipline"));
     }
 
     #[test]

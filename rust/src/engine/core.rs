@@ -29,6 +29,7 @@ use crate::metrics::{Recorder, Sample};
 use crate::policy::{IterationObs, KPolicy};
 use crate::rng::Pcg64;
 use crate::straggler::DelayModel;
+use crate::trace::{Discipline, Event, Trace};
 
 /// Engine loop bounds and step parameters, the superset of the three
 /// drivers' configs.
@@ -158,6 +159,9 @@ pub struct EngineRun {
     pub diverged: bool,
     /// Late (discarded) responses — the threaded discipline.
     pub late_responses: u64,
+    /// The binary event trace, when [`EngineCore::enable_trace`] was
+    /// called before the run (`None` otherwise — tracing is opt-in).
+    pub trace: Option<Trace>,
 }
 
 /// Shared engine state: model, buffers, rng streams, channel plumbing,
@@ -189,6 +193,7 @@ pub struct EngineCore<'a> {
     down0: u64,
     down_t0: f64,
     recorder: Recorder,
+    tracer: Option<Trace>,
     /// Virtual clock.
     pub t: f64,
     /// Steps completed (iterations or updates — the discipline's unit).
@@ -237,9 +242,58 @@ impl<'a> EngineCore<'a> {
             ingress,
             ingress_free: f64::NEG_INFINITY,
             recorder,
+            tracer: None,
             t: 0.0,
             steps: 0,
             cfg,
+        }
+    }
+
+    /// Turn on binary event tracing for this run (see [`crate::trace`]).
+    ///
+    /// Observationally free: no RNG draw, clock update, or recorder
+    /// push is added or reordered, so a traced run's trajectory is
+    /// bit-identical to the untraced one. The finished trace rides out
+    /// on [`EngineRun::trace`].
+    pub fn enable_trace(&mut self, discipline: Discipline) {
+        self.tracer = Some(Trace::new(
+            discipline,
+            self.channel.n() as u32,
+            self.recorder.label.clone(),
+        ));
+    }
+
+    /// True when tracing is enabled (gathers guard event construction
+    /// on it).
+    #[inline]
+    pub fn trace_on(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Append an event to the trace; no-op when tracing is off. Public
+    /// so gather disciplines can log what only they can see (applies
+    /// with staleness, for the async disciplines).
+    #[inline]
+    pub fn trace_event(&mut self, ev: Event) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.push(ev);
+        }
+    }
+
+    /// Mirror a recorder sample into the trace, so a replay can be
+    /// diffed against the trace file alone.
+    fn trace_sample(&mut self, s: &Sample) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.push(Event::Sample {
+                iteration: s.iteration,
+                time: s.time,
+                k: s.k as u32,
+                error: s.error,
+                bytes: s.bytes,
+                comm_time: s.comm_time,
+                bytes_down: s.bytes_down,
+                down_time: s.down_time,
+            });
         }
     }
 
@@ -267,11 +321,16 @@ impl<'a> EngineCore<'a> {
     /// plus every worker's download delay, and returns the encoded size
     /// for per-worker response pricing.
     pub fn broadcast_round(&mut self) -> u64 {
-        self.channel.broadcast_model(
+        let bytes = self.channel.broadcast_model(
             &self.w,
             &mut self.w_view,
             &mut self.bcast_rng,
-        )
+        );
+        if self.tracer.is_some() {
+            let (step, time) = (self.steps, self.t);
+            self.trace_event(Event::Broadcast { step, time, bytes });
+        }
+        bytes
     }
 
     /// Unicast `w` to one restarting worker (the async discipline),
@@ -284,13 +343,23 @@ impl<'a> EngineCore<'a> {
         out: &mut [f32],
         replay: u64,
     ) -> (u64, f64) {
-        self.channel.push_model(
+        let (bytes, delay) = self.channel.push_model(
             worker,
             &self.w,
             out,
             replay,
             &mut self.bcast_rng,
-        )
+        );
+        if self.tracer.is_some() {
+            let step = self.steps;
+            self.trace_event(Event::Push {
+                step,
+                worker: worker as u32,
+                bytes,
+                delay,
+            });
+        }
+        (bytes, delay)
     }
 
     /// The downlink encoding mode (disciplines branch replay accounting
@@ -328,10 +397,22 @@ impl<'a> EngineCore<'a> {
         down_bytes: u64,
         compute_scale: f64,
     ) -> f64 {
-        self.delays.sample(iteration, worker, &mut self.delay_rng)
-            * compute_scale
-            + self.channel.link_upload_delay(worker, self.msg_bytes)
-            + self.channel.download_delay(worker, down_bytes)
+        // Bound as locals in sampling order; the sum below keeps the
+        // historical left-to-right float association bit for bit.
+        let raw = self.delays.sample(iteration, worker, &mut self.delay_rng);
+        let upload = self.channel.link_upload_delay(worker, self.msg_bytes);
+        let download = self.channel.download_delay(worker, down_bytes);
+        if self.tracer.is_some() {
+            self.trace_event(Event::Compute {
+                iteration,
+                worker: worker as u32,
+                raw,
+                compute: raw * compute_scale,
+                upload,
+                download,
+            });
+        }
+        raw * compute_scale + upload + download
     }
 
     /// An async worker's next cycle: compute delay + priced upload +
@@ -343,9 +424,19 @@ impl<'a> EngineCore<'a> {
         worker: usize,
         down_delay: f64,
     ) -> f64 {
-        self.delays.sample(step, worker, &mut self.delay_rng)
-            + self.channel.link_upload_delay(worker, self.msg_bytes)
-            + down_delay
+        let raw = self.delays.sample(step, worker, &mut self.delay_rng);
+        let upload = self.channel.link_upload_delay(worker, self.msg_bytes);
+        if self.tracer.is_some() {
+            self.trace_event(Event::Compute {
+                iteration: step,
+                worker: worker as u32,
+                raw,
+                compute: raw,
+                upload,
+                download: down_delay,
+            });
+        }
+        raw + upload + down_delay
     }
 
     // ------------------------------------------------------------------
@@ -374,14 +465,21 @@ impl<'a> EngineCore<'a> {
         self.ingress.round_completion(arrivals, self.msg_bytes)
     }
 
-    /// Serve one arriving upload through the FIFO ingress chain (the
-    /// async discipline's running state lives here): completion is
+    /// Serve `worker`'s arriving upload through the FIFO ingress chain
+    /// (the async discipline's running state lives here): completion is
     /// `max(arrival, free) + service`, bitwise the arrival when
     /// unlimited.
-    pub fn serve_ingress(&mut self, arrival: f64) -> f64 {
+    pub fn serve_ingress(&mut self, worker: usize, arrival: f64) -> f64 {
         let t =
             self.ingress.serve_at(arrival, self.ingress_free, self.msg_bytes);
         self.ingress_free = t;
+        if self.tracer.is_some() {
+            self.trace_event(Event::IngressServe {
+                worker: worker as u32,
+                arrival,
+                served: t,
+            });
+        }
         t
     }
 
@@ -393,8 +491,7 @@ impl<'a> EngineCore<'a> {
     /// + compression + byte accounting) and add the master's
     /// reconstruction into `g`.
     pub fn accept_into_g(&mut self, worker: usize, raw: &[f32]) {
-        let rng = self.comm_rng.for_worker(worker);
-        self.channel.transmit(worker, raw, &mut self.decoded, rng);
+        self.transmit(worker, raw);
         for (gv, pv) in self.g.iter_mut().zip(&self.decoded) {
             *gv += *pv;
         }
@@ -406,6 +503,14 @@ impl<'a> EngineCore<'a> {
     pub fn transmit(&mut self, worker: usize, raw: &[f32]) {
         let rng = self.comm_rng.for_worker(worker);
         self.channel.transmit(worker, raw, &mut self.decoded, rng);
+        if self.tracer.is_some() {
+            let (step, bytes) = (self.steps, self.msg_bytes);
+            self.trace_event(Event::Transmit {
+                step,
+                worker: worker as u32,
+                bytes,
+            });
+        }
     }
 
     /// Zero the aggregation buffer for a new round.
@@ -490,6 +595,15 @@ impl<'a> EngineCore<'a> {
     ) -> usize {
         self.scale_g(scale_count);
         self.apply_g_sgd();
+        if self.tracer.is_some() {
+            let (time, k32) = (self.t, k as u32);
+            self.trace_event(Event::Apply {
+                step: j,
+                time,
+                k: k32,
+                staleness: 0,
+            });
+        }
         let inner =
             if j == 0 { None } else { Some(self.grad_inner_prev()) };
         let obs = IterationObs {
@@ -502,6 +616,14 @@ impl<'a> EngineCore<'a> {
         let k_next = policy.next_k(&obs).clamp(1, n);
         let k_new = if k_next != k {
             k_changes.push((j, self.t, k_next));
+            if self.tracer.is_some() {
+                let time = self.t;
+                self.trace_event(Event::KChange {
+                    step: j,
+                    time,
+                    k: k_next as u32,
+                });
+            }
             k_next
         } else {
             k
@@ -564,19 +686,22 @@ impl<'a> EngineCore<'a> {
     /// Record the initial point (iteration 0, time 0, zero traffic).
     pub fn record_initial(&mut self, k: usize) {
         let error = (self.eval)(&self.w);
-        self.recorder.push_forced(Sample {
+        let s = Sample {
             iteration: 0,
             time: 0.0,
             k,
             error,
             ..Default::default()
-        });
+        };
+        self.trace_sample(&s);
+        self.recorder.push_forced(s);
     }
 
     /// Record a full sample if `step` lands on the record stride.
     pub fn maybe_record(&mut self, step: u64, k: usize) {
         if step % self.cfg.record_stride == 0 {
             let s = self.stats_sample(step, k);
+            self.trace_sample(&s);
             self.recorder.push_forced(s);
         }
     }
@@ -585,6 +710,7 @@ impl<'a> EngineCore<'a> {
     pub fn record_final(&mut self, step: u64, k: usize) {
         if step % self.cfg.record_stride != 0 {
             let s = self.stats_sample(step, k);
+            self.trace_sample(&s);
             self.recorder.push_forced(s);
         }
     }
@@ -592,6 +718,7 @@ impl<'a> EngineCore<'a> {
     /// Record a divergence marker (error = ∞, no model evaluation).
     pub fn record_diverged(&mut self, step: u64, k: usize) {
         let s = self.sample_with_error(step, k, f64::INFINITY);
+        self.trace_sample(&s);
         self.recorder.push_forced(s);
     }
 
@@ -610,6 +737,7 @@ impl<'a> EngineCore<'a> {
             mean_staleness: 0.0,
             diverged: false,
             late_responses: 0,
+            trace: self.tracer,
         }
     }
 }

@@ -286,6 +286,14 @@ impl<'a> StalenessGather<'a> {
         self.version += 1;
         self.staleness_sum += staleness as f64;
         core.steps += 1;
+        if core.trace_on() {
+            core.trace_event(crate::trace::Event::Apply {
+                step: core.steps,
+                time: core.t,
+                k: 1,
+                staleness,
+            });
+        }
         if !core.model_is_finite() {
             self.diverged = true;
             core.record_diverged(core.steps, 1);
@@ -345,7 +353,7 @@ impl GatherPolicy for StalenessGather<'_> {
             AsyncEv::Arrive(i) if !self.use_ps => {
                 // Congested FIFO ingress: the upload that *arrived* at
                 // ev.time is applied once the master's NIC has served it.
-                let t_apply = core.serve_ingress(ev.time);
+                let t_apply = core.serve_ingress(i, ev.time);
                 self.apply_update(core, i, t_apply)
             }
             AsyncEv::Arrive(i) => {

@@ -103,6 +103,9 @@ pub struct ThreadedRunStats {
     pub bytes_down: u64,
     /// Total download time charged (virtual units).
     pub down_time: f64,
+    /// The recorded event trace when the run was started through a
+    /// `_traced` entry point with tracing on (see [`crate::trace`]).
+    pub trace: Option<crate::trace::Trace>,
 }
 
 struct Job {
@@ -200,12 +203,29 @@ impl ThreadedCluster {
         cfg: &ThreadedConfig,
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
     ) -> ThreadedRunStats {
-        self.run_inner(policy, w0, cfg, eval_error, delays, channel)
+        self.run_inner(policy, w0, cfg, eval_error, delays, channel, false)
+    }
+
+    /// [`Self::run_with_comm`] with opt-in binary event tracing (see
+    /// [`crate::trace`]); the trajectory is bit-identical either way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_comm_traced(
+        &mut self,
+        delays: &dyn DelayModel,
+        channel: &mut CommChannel,
+        policy: &mut dyn KPolicy,
+        w0: &[f32],
+        cfg: &ThreadedConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+        trace: bool,
+    ) -> ThreadedRunStats {
+        self.run_inner(policy, w0, cfg, eval_error, delays, channel, trace)
     }
 
     /// Build an engine core (threaded rng streams: delay stream shared
     /// with the simulator, per-worker compression streams) and run the
     /// cluster's gather discipline on it.
+    #[allow(clippy::too_many_arguments)]
     fn run_inner(
         &mut self,
         policy: &mut dyn KPolicy,
@@ -214,6 +234,7 @@ impl ThreadedCluster {
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
         delays: &dyn DelayModel,
         channel: &mut CommChannel,
+        trace: bool,
     ) -> ThreadedRunStats {
         let n = self.n;
         assert_eq!(
@@ -232,7 +253,7 @@ impl ThreadedCluster {
             seed: cfg.seed,
             record_stride: cfg.record_stride,
         };
-        let core = EngineCore::new(
+        let mut core = EngineCore::new(
             format!("threaded/{}", policy.name()),
             channel,
             delays,
@@ -241,6 +262,9 @@ impl ThreadedCluster {
             engine_cfg,
             RngStreams::threaded(cfg.seed, n),
         );
+        if trace {
+            core.enable_trace(crate::trace::Discipline::Threaded);
+        }
         let mut gather = ThreadedGather {
             job_txs: &self.job_txs,
             resp_rx: &self.resp_rx,
@@ -298,6 +322,20 @@ impl ThreadedCluster {
         cfg: &AsyncConfig,
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
     ) -> ThreadedRunStats {
+        self.run_async_comm_traced(delays, channel, w0, cfg, eval_error, false)
+    }
+
+    /// [`Self::run_async_comm`] with opt-in binary event tracing (see
+    /// [`crate::trace`]); the trajectory is bit-identical either way.
+    pub fn run_async_comm_traced(
+        &mut self,
+        delays: &dyn DelayModel,
+        channel: &mut CommChannel,
+        w0: &[f32],
+        cfg: &AsyncConfig,
+        eval_error: &mut dyn FnMut(&[f32]) -> f64,
+        trace: bool,
+    ) -> ThreadedRunStats {
         let n = self.n;
         assert_eq!(w0.len(), self.d, "w0 dimension mismatch");
         assert_eq!(
@@ -322,7 +360,7 @@ impl ThreadedCluster {
             seed: cfg.seed,
             record_stride: cfg.record_stride,
         };
-        let core = EngineCore::new(
+        let mut core = EngineCore::new(
             "threaded-async",
             channel,
             delays,
@@ -331,6 +369,9 @@ impl ThreadedCluster {
             engine_cfg,
             RngStreams::asynchronous(cfg.seed),
         );
+        if trace {
+            core.enable_trace(crate::trace::Discipline::ThreadedAsync);
+        }
         let mut gather = ThreadedAsyncGather {
             job_txs: &self.job_txs,
             resp_rx: &self.resp_rx,
@@ -362,6 +403,7 @@ impl ThreadedCluster {
             comm_time: run.comm_time,
             bytes_down: run.bytes_down,
             down_time: run.down_time,
+            trace: run.trace,
         }
     }
 }
@@ -548,7 +590,7 @@ impl GatherPolicy for ThreadedAsyncGather<'_> {
         let i = ev.payload;
         // FIFO (or free) ingress: the upload that virtually arrived at
         // ev.time is applied once the master's NIC has served it.
-        let t_apply = core.serve_ingress(ev.time);
+        let t_apply = core.serve_ingress(i, ev.time);
         core.t = t_apply;
         if core.cfg.max_time > 0.0 && t_apply > core.cfg.max_time {
             return false;
@@ -576,6 +618,14 @@ impl GatherPolicy for ThreadedAsyncGather<'_> {
         self.version += 1;
         self.staleness_sum += staleness as f64;
         core.steps += 1;
+        if core.trace_on() {
+            core.trace_event(crate::trace::Event::Apply {
+                step: core.steps,
+                time: core.t,
+                k: 1,
+                staleness,
+            });
+        }
         if !core.model_is_finite() {
             self.diverged = true;
             core.record_diverged(core.steps, 1);

@@ -89,6 +89,25 @@
 //! [`metrics::write_csv_with_header`] with the scenario axes as
 //! run-header meta lines ([`sweep::write_sweep_csv`]).
 //!
+//! ## Event tracing
+//!
+//! [`trace`] is the observability spine: with tracing enabled
+//! (`EngineCore::enable_trace`, the `[trace]` TOML section, or
+//! `--trace <dir>`), the engine records every broadcast, per-worker
+//! compute sample, uplink transmit, ingress service, gradient apply,
+//! and adaptive k-change into a versioned binary [`trace::Trace`] —
+//! under all four gather disciplines. The trace is a standalone
+//! artifact: [`trace::ReplayDelays`] re-drives the engine from it and
+//! reproduces the original model trajectory, clock, and recorder
+//! samples *bitwise* (the `trace replay` CLI command asserts this);
+//! [`trace::TraceAnalysis`] computes per-worker utilization, ingress
+//! queueing, staleness histograms, and per-round wait decomposition
+//! without re-running anything (`trace analyze`); and
+//! [`straggler::TraceDelays::from_event_trace`] mines the recorded
+//! delay sequence into a replayable straggler scenario for *new*
+//! experiments. Tracing is off by default and observationally free:
+//! enabling it changes no RNG draw, clock value, or output byte.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -134,12 +153,14 @@ pub mod stats;
 pub mod straggler;
 pub mod sweep;
 pub mod theory;
+pub mod trace;
 pub mod transformer;
 
 /// One-stop imports for examples and benches.
 pub mod prelude {
     pub use crate::async_sgd::{
-        run_async, run_async_comm, AsyncConfig, AsyncRun,
+        run_async, run_async_comm, run_async_comm_traced, AsyncConfig,
+        AsyncRun,
     };
     pub use crate::comm::{
         Broadcast, CommChannel, CommStats, Compressor, Dense, DownlinkMode,
@@ -153,7 +174,8 @@ pub mod prelude {
     };
     pub use crate::grad::{GradBackend, NativeBackend};
     pub use crate::master::{
-        run_fastest_k, run_fastest_k_comm, FastestKRun, MasterConfig,
+        run_fastest_k, run_fastest_k_comm, run_fastest_k_comm_traced,
+        FastestKRun, MasterConfig,
     };
     pub use crate::metrics::{write_csv, AsciiPlot, Recorder, Sample};
     pub use crate::model::LinRegProblem;
@@ -164,8 +186,8 @@ pub mod prelude {
     pub use crate::rng::{Pcg64, Rng};
     pub use crate::stats::OrderStats;
     pub use crate::coding::{
-        run_coded_comm, run_coded_gd, BernoulliScheme, CodedConfig,
-        CodingScheme, CoverPart, CyclicRepetition, FrcScheme,
+        run_coded_comm, run_coded_comm_traced, run_coded_gd, BernoulliScheme,
+        CodedConfig, CodingScheme, CoverPart, CyclicRepetition, FrcScheme,
     };
     pub use crate::straggler::{
         BimodalDelays, DelayModel, ExponentialDelays, MarkovDelays,
@@ -177,5 +199,8 @@ pub mod prelude {
     };
     pub use crate::theory::{
         adaptive_envelope, switching_times, BoundParams, ErrorBound,
+    };
+    pub use crate::trace::{
+        Discipline, Event, ReplayDelays, Trace, TraceAnalysis,
     };
 }

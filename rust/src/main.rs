@@ -9,9 +9,13 @@ use adasgd::config::{
     ExperimentConfig, PolicySpec, WorkloadSpec,
 };
 use adasgd::coordinator::{
-    fig1_jobs, fig2_jobs, fig3_jobs, run_experiment, FigureOutput,
+    fig1_jobs, fig2_jobs, fig3_jobs, replay_experiment, run_experiment,
+    FigureOutput,
 };
-use adasgd::metrics::{write_csv_with_header, AsciiPlot, Recorder};
+use adasgd::metrics::{
+    write_csv_with_scalars, AsciiPlot, Recorder, RunScalars, Sample,
+};
+use adasgd::trace::{Event, Trace, TraceAnalysis};
 use adasgd::policy::{FixedK, PflugParams};
 use adasgd::theory::{switching_times, BoundParams, ErrorBound};
 use std::path::Path;
@@ -34,6 +38,7 @@ fn main() {
         Some("threaded") => cmd_threaded(&args),
         Some("list-artifacts") => cmd_list_artifacts(&args),
         Some("repeat") => cmd_repeat(&args),
+        Some("trace") => cmd_trace(&args),
         Some("switching-times") => cmd_switching_times(),
         Some("help") | None => {
             print_help();
@@ -50,24 +55,25 @@ fn main() {
 fn emit(
     args: &Args,
     name: &str,
-    runs: &[&Recorder],
+    runs: &[(&Recorder, RunScalars)],
     summary: &[String],
     meta: &[String],
 ) {
+    let refs: Vec<&Recorder> = runs.iter().map(|(r, _)| *r).collect();
     if !args.has("quiet") {
         let plot = AsciiPlot::new(
             format!("{name}: error vs wall-clock (log y)"),
             96,
             24,
         );
-        println!("{}", plot.render(runs));
+        println!("{}", plot.render(&refs));
     }
     for line in summary {
         println!("  {line}");
     }
     let default_out = format!("results/{name}.csv");
     let out = args.get("out").unwrap_or(&default_out);
-    if let Err(e) = write_csv_with_header(Path::new(out), runs, meta) {
+    if let Err(e) = write_csv_with_scalars(Path::new(out), runs, meta) {
         eprintln!("warning: could not write {out}: {e}");
     } else {
         println!("  series written to {out}");
@@ -87,8 +93,9 @@ fn cmd_fig1(args: &Args) -> i32 {
         return 2;
     }
     let out = fig1_jobs(points, jobs_flag(args));
-    let mut runs: Vec<&Recorder> = out.fixed.iter().collect();
-    runs.push(&out.adaptive);
+    let mut runs: Vec<(&Recorder, RunScalars)> =
+        out.fixed.iter().map(|r| (r, RunScalars::default())).collect();
+    runs.push((&out.adaptive, RunScalars::default()));
     emit(args, "fig1", &runs, &out.summary, &[]);
     0
 }
@@ -103,7 +110,8 @@ fn cmd_figure(args: &Args, which: u8) -> i32 {
     } else {
         fig3_jobs(seed, max_time, jobs_flag(args))
     };
-    let refs: Vec<&Recorder> = runs.iter().collect();
+    let refs: Vec<(&Recorder, RunScalars)> =
+        runs.iter().map(|r| (r, RunScalars::default())).collect();
     emit(args, &name, &refs, &summary, &[]);
     0
 }
@@ -135,7 +143,7 @@ fn parse_scheme_flag(
 }
 
 fn cmd_train(args: &Args) -> i32 {
-    let cfg = if let Some(path) = args.get("config") {
+    let mut cfg = if let Some(path) = args.get("config") {
         match std::fs::read_to_string(path)
             .map_err(|e| e.to_string())
             .and_then(|t| ExperimentConfig::from_toml(&t))
@@ -261,6 +269,11 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.label = format!("train(seed={})", cfg.seed);
         cfg
     };
+    // --trace overrides the config's `[trace] dir` (tracing is purely
+    // observational; every other output is byte-identical either way).
+    if let Some(dir) = args.get("trace") {
+        cfg.trace = Some(dir.to_string());
+    }
 
     match run_experiment(&cfg) {
         Ok(out) => {
@@ -295,7 +308,18 @@ fn cmd_train(args: &Args) -> i32 {
                 .iter()
                 .map(|c| format!("coding: scheme={} r={}", c.scheme, c.r))
                 .collect();
-            emit(args, "train", &[&out.recorder], &summary, &meta);
+            if let Some(dir) = &cfg.trace {
+                println!(
+                    "  event trace written to {}/{}.trace",
+                    dir,
+                    adasgd::trace::sanitize_label(&cfg.label)
+                );
+            }
+            let scalars = RunScalars {
+                late_responses: out.late_responses,
+                mean_staleness: out.mean_staleness,
+            };
+            emit(args, "train", &[(&out.recorder, scalars)], &summary, &meta);
             0
         }
         Err(e) => {
@@ -418,7 +442,11 @@ fn cmd_train_transformer(args: &Args) -> i32 {
         ),
         format!("k switches: {:?}", run.k_changes),
     ];
-    emit(args, "transformer", &[&run.recorder], &summary, &[]);
+    let scalars = RunScalars {
+        late_responses: run.late_responses,
+        mean_staleness: run.mean_staleness,
+    };
+    emit(args, "transformer", &[(&run.recorder, scalars)], &summary, &[]);
     0
 }
 
@@ -538,6 +566,154 @@ fn cmd_repeat(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `trace analyze|dump|replay` — post-hoc tools over recorded binary
+/// event traces (see [`adasgd::trace`]).
+fn cmd_trace(args: &Args) -> i32 {
+    let usage = "usage: adasgd trace <analyze|dump|replay> FILE.trace \
+                 [--limit N] [--config exp.toml]";
+    let Some(sub) = args.positional.first().map(|s| s.as_str()) else {
+        eprintln!("{usage}");
+        return 2;
+    };
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("trace {sub} requires a trace file\n{usage}");
+        return 2;
+    };
+    let trace = match Trace::load(Path::new(path)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trace error: {e}");
+            return 1;
+        }
+    };
+    match sub {
+        "analyze" => {
+            let analysis = TraceAnalysis::from_trace(&trace);
+            println!("{}", analysis.report(&trace));
+            0
+        }
+        "dump" => {
+            // --limit N caps the listed events (0 = all; default 40).
+            let limit = match args.get_parse::<usize>("limit", 40) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let limit = if limit == 0 { None } else { Some(limit) };
+            print!("{}", trace.dump(limit));
+            0
+        }
+        "replay" => cmd_trace_replay(args, &trace),
+        other => {
+            eprintln!("unknown trace subcommand '{other}'\n{usage}");
+            2
+        }
+    }
+}
+
+/// Re-drive the experiment from the trace's recorded delay draws and
+/// verify the replayed recorder series is *bitwise* the recorded one.
+/// Exit 0 = identical, 1 = diverged (or the config doesn't match the
+/// recording).
+fn cmd_trace_replay(args: &Args, trace: &Trace) -> i32 {
+    let Some(path) = args.get("config") else {
+        eprintln!(
+            "trace replay requires --config exp.toml (the exact \
+             configuration of the recorded run)"
+        );
+        return 2;
+    };
+    let cfg = match std::fs::read_to_string(path)
+        .map_err(|e| e.to_string())
+        .and_then(|t| ExperimentConfig::from_toml(&t))
+    {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let out = match replay_experiment(&cfg, trace) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("replay error: {e}");
+            return 1;
+        }
+    };
+    let recorded: Vec<Sample> = trace
+        .events
+        .iter()
+        .filter_map(|e| match *e {
+            Event::Sample {
+                iteration,
+                time,
+                k,
+                error,
+                bytes,
+                comm_time,
+                bytes_down,
+                down_time,
+            } => Some(Sample {
+                iteration,
+                time,
+                k: k as usize,
+                error,
+                bytes,
+                comm_time,
+                bytes_down,
+                down_time,
+            }),
+            _ => None,
+        })
+        .collect();
+    let replayed = out.recorder.samples();
+    if recorded.len() != replayed.len() {
+        eprintln!(
+            "replay DIVERGED: {} recorded samples vs {} replayed",
+            recorded.len(),
+            replayed.len()
+        );
+        return 1;
+    }
+    let mut mismatches = 0usize;
+    for (i, (a, b)) in recorded.iter().zip(replayed).enumerate() {
+        let same = a.iteration == b.iteration
+            && a.time.to_bits() == b.time.to_bits()
+            && a.k == b.k
+            && a.error.to_bits() == b.error.to_bits()
+            && a.bytes == b.bytes
+            && a.comm_time.to_bits() == b.comm_time.to_bits()
+            && a.bytes_down == b.bytes_down
+            && a.down_time.to_bits() == b.down_time.to_bits();
+        if !same {
+            if mismatches == 0 {
+                eprintln!("first mismatch at sample {i}:");
+                eprintln!("  recorded: {a:?}");
+                eprintln!("  replayed: {b:?}");
+            }
+            mismatches += 1;
+        }
+    }
+    if mismatches > 0 {
+        eprintln!(
+            "replay DIVERGED: {mismatches}/{} samples differ",
+            recorded.len()
+        );
+        return 1;
+    }
+    println!(
+        "replay OK: {} samples bitwise-identical (discipline {}, {} \
+         workers, final t={:.6})",
+        recorded.len(),
+        trace.discipline,
+        trace.n_workers,
+        out.total_time
+    );
+    0
 }
 
 fn cmd_switching_times() -> i32 {

@@ -24,6 +24,6 @@
 mod sync;
 
 pub use sync::{
-    fastest_k_select, run_fastest_k, run_fastest_k_comm, FastestKRun,
-    MasterConfig,
+    fastest_k_select, run_fastest_k, run_fastest_k_comm,
+    run_fastest_k_comm_traced, FastestKRun, MasterConfig,
 };

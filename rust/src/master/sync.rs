@@ -28,6 +28,7 @@ use crate::grad::GradBackend;
 use crate::metrics::Recorder;
 use crate::policy::KPolicy;
 use crate::straggler::DelayModel;
+use crate::trace::{Discipline, Trace};
 
 /// Loop configuration.
 #[derive(Debug, Clone)]
@@ -81,6 +82,14 @@ pub struct FastestKRun {
     pub bytes_down: u64,
     /// Total download time charged (download work, mirroring `comm_time`).
     pub down_time: f64,
+    /// Late (discarded) responses — 0 for the simulated disciplines,
+    /// filled by the threaded cluster.
+    pub late_responses: u64,
+    /// Mean staleness of applied gradients — 0 for round disciplines.
+    pub mean_staleness: f64,
+    /// The binary event trace when tracing was enabled (see
+    /// [`crate::trace`]), `None` otherwise.
+    pub trace: Option<Trace>,
 }
 
 /// Select the indices of the k smallest delays and the k-th smallest value.
@@ -146,6 +155,26 @@ pub fn run_fastest_k_comm(
     cfg: &MasterConfig,
     eval_error: &mut dyn FnMut(&[f32]) -> f64,
 ) -> FastestKRun {
+    run_fastest_k_comm_traced(
+        backend, delays, policy, channel, w0, cfg, eval_error, false,
+    )
+}
+
+/// [`run_fastest_k_comm`] with opt-in binary event tracing: when `trace`
+/// is true the returned run carries a [`Trace`] of every engine event
+/// (see [`crate::trace`]); the trajectory itself is bit-identical either
+/// way.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fastest_k_comm_traced(
+    backend: &mut dyn GradBackend,
+    delays: &dyn DelayModel,
+    policy: &mut dyn KPolicy,
+    channel: &mut CommChannel,
+    w0: &[f32],
+    cfg: &MasterConfig,
+    eval_error: &mut dyn FnMut(&[f32]) -> f64,
+    trace: bool,
+) -> FastestKRun {
     let n = backend.n_shards();
     let d = backend.dim();
     assert_eq!(w0.len(), d, "w0 dimension mismatch");
@@ -164,7 +193,7 @@ pub fn run_fastest_k_comm(
         seed: cfg.seed,
         record_stride: cfg.record_stride,
     };
-    let core = EngineCore::new(
+    let mut core = EngineCore::new(
         policy.name(),
         channel,
         delays,
@@ -173,6 +202,9 @@ pub fn run_fastest_k_comm(
         engine_cfg,
         RngStreams::sync(cfg.seed),
     );
+    if trace {
+        core.enable_trace(Discipline::Sync);
+    }
     let mut gather = FastestKGather::new(backend, policy);
     let run = RoundEngine::new(core).run(&mut gather);
     FastestKRun {
@@ -185,6 +217,9 @@ pub fn run_fastest_k_comm(
         comm_time: run.comm_time,
         bytes_down: run.bytes_down,
         down_time: run.down_time,
+        late_responses: run.late_responses,
+        mean_staleness: run.mean_staleness,
+        trace: run.trace,
     }
 }
 

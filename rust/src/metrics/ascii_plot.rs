@@ -122,5 +122,84 @@ mod tests {
         let r = Recorder::new("empty");
         let plot = AsciiPlot::new("t", 40, 8).render(&[&r]);
         assert!(plot.contains("no positive data"));
+        // No runs at all behaves the same as runs with no samples.
+        let plot = AsciiPlot::new("t", 40, 8).render(&[]);
+        assert!(plot.contains("no positive data"));
+    }
+
+    #[test]
+    fn single_point_renders_without_degenerate_axes() {
+        // One sample: t_max > 0 and a zero log-y span — both axis
+        // normalizations must stay finite instead of dividing by zero.
+        let mut r = Recorder::new("one");
+        r.push(Sample {
+            iteration: 0,
+            time: 2.0,
+            k: 1,
+            error: 0.5,
+            ..Default::default()
+        });
+        let plot = AsciiPlot::new("t", 40, 8).render(&[&r]);
+        assert!(plot.contains("one"), "{plot}");
+        assert!(plot.contains('*'), "the point must land on the canvas:\n{plot}");
+        assert!(!plot.contains("no positive data"));
+    }
+
+    #[test]
+    fn single_point_at_time_zero_is_graceful() {
+        // t_max == 0 has no x axis to scale; the renderer must fall back
+        // to the no-data message rather than divide by zero.
+        let mut r = Recorder::new("t0");
+        r.push(Sample {
+            iteration: 0,
+            time: 0.0,
+            k: 1,
+            error: 1.0,
+            ..Default::default()
+        });
+        let plot = AsciiPlot::new("t", 40, 8).render(&[&r]);
+        assert!(plot.contains("no positive data"));
+    }
+
+    #[test]
+    fn nan_and_nonpositive_errors_are_skipped_not_plotted() {
+        // NaN errors fail both `> 0.0` (bounds) and the plot filter, so
+        // a diverged run renders its finite prefix and drops the rest.
+        let mut r = Recorder::new("diverged");
+        r.push(Sample {
+            iteration: 0,
+            time: 1.0,
+            k: 1,
+            error: 4.0,
+            ..Default::default()
+        });
+        r.push(Sample {
+            iteration: 1,
+            time: 2.0,
+            k: 1,
+            error: f64::NAN,
+            ..Default::default()
+        });
+        r.push(Sample {
+            iteration: 2,
+            time: 3.0,
+            k: 1,
+            error: -1.0,
+            ..Default::default()
+        });
+        let plot = AsciiPlot::new("t", 40, 8).render(&[&r]);
+        assert!(plot.contains("diverged"));
+        assert!(!plot.contains("NaN"), "{plot}");
+        // An all-NaN record has no positive data at all.
+        let mut nan_only = Recorder::new("nan");
+        nan_only.push(Sample {
+            iteration: 0,
+            time: 1.0,
+            k: 1,
+            error: f64::NAN,
+            ..Default::default()
+        });
+        let plot = AsciiPlot::new("t", 40, 8).render(&[&nan_only]);
+        assert!(plot.contains("no positive data"));
     }
 }

@@ -1,6 +1,6 @@
 //! CSV export of run records (no serde offline — hand-rolled writer).
 //!
-//! # Column schema (v3)
+//! # Column schema (v4)
 //!
 //! One long-format table, one row per recorded [`Sample`] per run:
 //!
@@ -15,11 +15,15 @@
 //! | `comm_time`  | f64   | cumulative upload time of accepted messages       |
 //! | `bytes_down` | u64   | cumulative model-download bytes (sync broadcasts count once per receiving worker) |
 //! | `down_time`  | f64   | cumulative download time charged                  |
+//! | `late_responses` | u64 | whole-run count of discarded responses (wasted straggler work; 0 for async), repeated on every row of the run |
+//! | `mean_staleness` | f64 | whole-run mean staleness of applied updates (0 for round disciplines), repeated on every row of the run |
 //!
-//! v3 appends the per-direction downlink columns (`bytes_down`,
-//! `down_time`); v2 files are a column-prefix of v3. The first line of
-//! every file is a `#`-prefixed comment naming the columns, followed by
-//! the machine-readable header row — downstream plot scripts should match
+//! The schema only ever grows on the right: v2 files are a column-prefix
+//! of v3 (which appended `bytes_down`/`down_time`), and v3 files are a
+//! column-prefix of v4 (which appends the whole-run scalars
+//! `late_responses`/`mean_staleness`). The first line of every file is a
+//! `#`-prefixed comment naming the columns, followed by the
+//! machine-readable header row — downstream plot scripts should match
 //! columns by name from either line rather than hardcoding indices.
 //! Labels must not contain commas.
 
@@ -28,8 +32,23 @@ use std::io::Write;
 use std::path::Path;
 
 /// The column list, single source of truth for header + comment lines.
-pub const CSV_COLUMNS: &str =
-    "label,iteration,time,k,error,bytes,comm_time,bytes_down,down_time";
+pub const CSV_COLUMNS: &str = "label,iteration,time,k,error,bytes,\
+                               comm_time,bytes_down,down_time,\
+                               late_responses,mean_staleness";
+
+/// Whole-run scalar columns of schema v4, repeated on every row of the
+/// run they describe (the long format has no per-run table to put them
+/// in). [`write_csv`]/[`write_csv_with_header`] fill them with
+/// [`RunScalars::default`] (all zero) for callers that only have
+/// recorders.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunScalars {
+    /// Responses the gather discarded (stale generations plus fresh
+    /// responses outside the fastest-k; 0 for async).
+    pub late_responses: u64,
+    /// Mean staleness of applied updates (0 for round disciplines).
+    pub mean_staleness: f64,
+}
 
 /// CSV writing failures.
 #[derive(Debug)]
@@ -61,7 +80,8 @@ impl From<std::io::Error> for CsvError {
 }
 
 /// Write one or more run records into a single long-format CSV (see the
-/// module docs for the column schema).
+/// module docs for the column schema). The v4 scalar columns are zero;
+/// use [`write_csv_with_scalars`] when the run statistics are at hand.
 pub fn write_csv(path: &Path, runs: &[&Recorder]) -> Result<(), CsvError> {
     write_csv_with_header(path, runs, &[])
 }
@@ -75,22 +95,43 @@ pub fn write_csv_with_header(
     runs: &[&Recorder],
     meta: &[String],
 ) -> Result<(), CsvError> {
+    let paired: Vec<(&Recorder, RunScalars)> =
+        runs.iter().map(|r| (*r, RunScalars::default())).collect();
+    write_csv_with_scalars(path, &paired, meta)
+}
+
+/// The full v4 writer: each run carries its whole-run scalar columns
+/// ([`RunScalars`]), repeated on every row of that run.
+pub fn write_csv_with_scalars(
+    path: &Path,
+    runs: &[(&Recorder, RunScalars)],
+    meta: &[String],
+) -> Result<(), CsvError> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "# adasgd run series v3; columns: {CSV_COLUMNS}")?;
+    writeln!(f, "# adasgd run series v4; columns: {CSV_COLUMNS}")?;
     for line in meta {
         writeln!(f, "# {line}")?;
     }
     writeln!(f, "{CSV_COLUMNS}")?;
-    for run in runs {
+    for (run, scalars) in runs {
         for s in run.samples() {
             writeln!(
                 f,
-                "{},{},{:.6},{},{:.9e},{},{:.6},{},{:.6}",
-                run.label, s.iteration, s.time, s.k, s.error, s.bytes,
-                s.comm_time, s.bytes_down, s.down_time
+                "{},{},{:.6},{},{:.9e},{},{:.6},{},{:.6},{},{:.6}",
+                run.label,
+                s.iteration,
+                s.time,
+                s.k,
+                s.error,
+                s.bytes,
+                s.comm_time,
+                s.bytes_down,
+                s.down_time,
+                scalars.late_responses,
+                scalars.mean_staleness
             )?;
         }
     }
@@ -129,6 +170,36 @@ mod tests {
         assert!(row.starts_with("runA,0,0.5"), "{row}");
         assert!(row.contains(",416,"), "{row}");
         assert!(row.contains(",832,"), "{row}");
+        // Scalar-less writers zero-fill the v4 columns.
+        assert!(row.ends_with(",0,0.000000"), "{row}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scalars_repeat_on_every_row_of_their_run() {
+        let mut a = Recorder::new("runA");
+        a.push(Sample { iteration: 0, ..Default::default() });
+        a.push(Sample { iteration: 1, ..Default::default() });
+        let mut b = Recorder::new("runB");
+        b.push(Sample { iteration: 0, ..Default::default() });
+        let dir = std::env::temp_dir().join("adasgd_csv_scalars_test");
+        let path = dir.join("out.csv");
+        write_csv_with_scalars(
+            &path,
+            &[
+                (&a, RunScalars { late_responses: 7, mean_staleness: 2.5 }),
+                (&b, RunScalars::default()),
+            ],
+            &[],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("run")).collect();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].ends_with(",7,2.500000"), "{}", rows[0]);
+        assert!(rows[1].ends_with(",7,2.500000"), "{}", rows[1]);
+        assert!(rows[2].ends_with(",0,0.000000"), "{}", rows[2]);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -146,7 +217,7 @@ mod tests {
         .unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert!(lines[0].starts_with("# adasgd run series"));
+        assert!(lines[0].starts_with("# adasgd run series v4"));
         assert_eq!(lines[1], "# coding: scheme=frc r=2");
         assert_eq!(lines[2], CSV_COLUMNS);
         std::fs::remove_dir_all(&dir).ok();
@@ -155,10 +226,15 @@ mod tests {
     #[test]
     fn header_and_comment_share_the_column_list() {
         // Guards against the comment line drifting from the real header.
-        assert_eq!(CSV_COLUMNS.split(',').count(), 9);
-        assert!(CSV_COLUMNS.ends_with("bytes_down,down_time"));
-        // v2 files must remain a column-prefix of v3.
+        assert_eq!(CSV_COLUMNS.split(',').count(), 11);
+        assert!(CSV_COLUMNS.ends_with("late_responses,mean_staleness"));
+        // Older files must remain a column-prefix of newer ones: v2 of
+        // v3, v3 of v4.
         assert!(CSV_COLUMNS
             .starts_with("label,iteration,time,k,error,bytes,comm_time"));
+        assert!(CSV_COLUMNS.starts_with(
+            "label,iteration,time,k,error,bytes,comm_time,bytes_down,\
+             down_time"
+        ));
     }
 }

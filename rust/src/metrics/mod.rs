@@ -5,5 +5,8 @@ mod csv;
 mod recorder;
 
 pub use ascii_plot::AsciiPlot;
-pub use csv::{write_csv, write_csv_with_header, CsvError, CSV_COLUMNS};
+pub use csv::{
+    write_csv, write_csv_with_header, write_csv_with_scalars, CsvError,
+    RunScalars, CSV_COLUMNS,
+};
 pub use recorder::{Recorder, Sample};

@@ -114,6 +114,51 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "stride must be >= 1")]
+    fn stride_zero_is_rejected() {
+        // A zero stride would make `iteration % every` divide by zero on
+        // the first push; construction refuses it up front.
+        Recorder::with_stride("x", 0);
+    }
+
+    #[test]
+    fn stride_one_records_every_iteration() {
+        let mut r = Recorder::with_stride("x", 1);
+        for j in 0..7 {
+            r.push(sample(j, j as f64, 1.0));
+        }
+        assert_eq!(r.samples().len(), 7);
+        // `new` is the stride-1 recorder.
+        let mut r2 = Recorder::new("y");
+        for j in 0..7 {
+            r2.push(sample(j, j as f64, 1.0));
+        }
+        assert_eq!(r2.samples().len(), r.samples().len());
+    }
+
+    #[test]
+    fn final_step_off_stride_needs_push_forced() {
+        // The engine contract: strided runs force-push their last step,
+        // because an off-stride final iteration would otherwise vanish.
+        let mut r = Recorder::with_stride("x", 10);
+        for j in 0..=99 {
+            r.push(sample(j, j as f64, 1.0));
+        }
+        // 0, 10, ..., 90 recorded; 99 dropped by the stride.
+        assert_eq!(r.samples().len(), 10);
+        assert_eq!(r.last().unwrap().iteration, 90);
+        r.push_forced(sample(99, 99.0, 0.5));
+        assert_eq!(r.last().unwrap().iteration, 99);
+        // An on-stride final step force-pushed twice duplicates — the
+        // engine's record_final only fires when the loop ends, exactly
+        // once, so the recorder itself does not dedup.
+        let mut r2 = Recorder::with_stride("y", 10);
+        r2.push(sample(100, 100.0, 1.0));
+        r2.push_forced(sample(100, 100.0, 1.0));
+        assert_eq!(r2.samples().len(), 2);
+    }
+
+    #[test]
     fn time_to_error_finds_first_crossing() {
         let mut r = Recorder::new("x");
         r.push(sample(0, 0.0, 10.0));

@@ -71,6 +71,70 @@ impl TraceDelays {
         Ok(t)
     }
 
+    /// Mine a recorded binary event trace (see [`crate::trace`]) into a
+    /// replayable straggler scenario: the *raw* (pre-scale, pre-comm)
+    /// delay draw of every `Compute` event becomes one table cell, keyed
+    /// `(iteration, worker)`. Only the leading run of *complete* rows
+    /// (all `n_workers` drawn) is kept, so a truncated last round never
+    /// yields a partial row. Round disciplines record one draw per
+    /// worker per round; the async disciplines draw all workers only at
+    /// start-up, so their traces mine to a single row (which cycles).
+    ///
+    /// This is how a recorded experiment's delay *sequence* gets reused
+    /// against new policies, channels, or codes: mine once, then run any
+    /// configuration with the mined model.
+    pub fn from_event_trace(
+        trace: &crate::trace::Trace,
+    ) -> Result<Self, String> {
+        let n = trace.n_workers as usize;
+        if n == 0 {
+            return Err("event trace reports 0 workers".into());
+        }
+        let mut table: Vec<Vec<Option<f64>>> = Vec::new();
+        for ev in &trace.events {
+            if let crate::trace::Event::Compute {
+                iteration, worker, raw, ..
+            } = *ev
+            {
+                let (it, w) = (iteration as usize, worker as usize);
+                if w >= n {
+                    return Err(format!(
+                        "event trace is corrupt: compute event for worker \
+                         {w} but the header says {n} workers"
+                    ));
+                }
+                if it >= table.len() {
+                    table.resize(it + 1, vec![None; n]);
+                }
+                if !(raw.is_finite() && raw > 0.0) {
+                    return Err(format!(
+                        "recorded delay for (iteration {it}, worker {w}) \
+                         is {raw}; mined delays must be positive and \
+                         finite"
+                    ));
+                }
+                table[it][w] = Some(raw);
+            }
+        }
+        // Keep the leading run of complete rows.
+        let complete: Vec<Vec<f64>> = table
+            .into_iter()
+            .map(|row| row.into_iter().collect::<Option<Vec<f64>>>())
+            .take_while(|row| row.is_some())
+            .map(|row| row.expect("take_while kept only Some rows"))
+            .collect();
+        if complete.is_empty() {
+            return Err(
+                "event trace has no complete iteration of compute events \
+                 to mine"
+                    .into(),
+            );
+        }
+        let mut t = Self::new(complete);
+        t.name = format!("trace(events:{})", trace.label);
+        Ok(t)
+    }
+
     /// Number of workers per row.
     pub fn workers(&self) -> usize {
         self.table[0].len()
@@ -135,5 +199,51 @@ mod tests {
     #[should_panic(expected = "positive and finite")]
     fn rejects_nonpositive() {
         TraceDelays::new(vec![vec![0.0]]);
+    }
+
+    #[test]
+    fn mines_compute_events_keeping_complete_rows() {
+        use crate::trace::{Discipline, Event, Trace};
+        let mut tr = Trace::new(Discipline::Sync, 2, "mine");
+        let compute = |iteration, worker, raw| Event::Compute {
+            iteration,
+            worker,
+            raw,
+            compute: raw,
+            upload: 0.0,
+            download: 0.0,
+        };
+        tr.push(compute(0, 0, 1.5));
+        tr.push(compute(0, 1, 2.5));
+        tr.push(compute(1, 1, 4.0));
+        tr.push(compute(1, 0, 3.0)); // out of order within the round: fine
+        tr.push(compute(2, 0, 9.0)); // truncated round: dropped
+        let t = TraceDelays::from_event_trace(&tr).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.workers(), 2);
+        let mut rng = Pcg64::seed(0);
+        assert_eq!(t.sample(0, 0, &mut rng), 1.5);
+        assert_eq!(t.sample(1, 0, &mut rng), 3.0);
+        assert_eq!(t.sample(1, 1, &mut rng), 4.0);
+        assert_eq!(t.sample(2, 1, &mut rng), 2.5); // cycles
+        assert!(t.name().contains("events:mine"), "{}", t.name());
+    }
+
+    #[test]
+    fn mining_rejects_traces_without_a_complete_round() {
+        use crate::trace::{Discipline, Event, Trace};
+        let mut tr = Trace::new(Discipline::Sync, 2, "partial");
+        tr.push(Event::Compute {
+            iteration: 0,
+            worker: 0,
+            raw: 1.0,
+            compute: 1.0,
+            upload: 0.0,
+            download: 0.0,
+        });
+        let err = TraceDelays::from_event_trace(&tr).unwrap_err();
+        assert!(err.contains("complete"), "{err}");
+        let empty = Trace::new(Discipline::Sync, 2, "empty");
+        assert!(TraceDelays::from_event_trace(&empty).is_err());
     }
 }

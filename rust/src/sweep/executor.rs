@@ -11,7 +11,7 @@ use super::RunSpec;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{run_experiment, ExperimentOutput};
 use crate::exec::ThreadPool;
-use crate::metrics::{write_csv_with_header, CsvError, Recorder};
+use crate::metrics::{write_csv_with_scalars, CsvError, Recorder, RunScalars};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -133,9 +133,11 @@ pub fn sweep_meta(specs: &[RunSpec]) -> Vec<String> {
 }
 
 /// Write a sweep's series through the unified CSV path
-/// ([`metrics::write_csv_with_header`](write_csv_with_header)): the
+/// ([`metrics::write_csv_with_scalars`](write_csv_with_scalars)): the
 /// scenario axes become run-header meta lines, so a results file records
-/// *what* produced each series, not just the numbers.
+/// *what* produced each series, not just the numbers, and each run's
+/// whole-run scalars (`late_responses`, `mean_staleness`) fill the v4
+/// columns.
 pub fn write_sweep_csv(
     path: &Path,
     specs: &[RunSpec],
@@ -146,8 +148,19 @@ pub fn write_sweep_csv(
         outs.len(),
         "one output per spec (pass the executor's result unmodified)"
     );
-    let refs: Vec<&Recorder> = outs.iter().map(|o| &o.recorder).collect();
-    write_csv_with_header(path, &refs, &sweep_meta(specs))
+    let runs: Vec<(&Recorder, RunScalars)> = outs
+        .iter()
+        .map(|o| {
+            (
+                &o.recorder,
+                RunScalars {
+                    late_responses: o.late_responses,
+                    mean_staleness: o.mean_staleness,
+                },
+            )
+        })
+        .collect();
+    write_csv_with_scalars(path, &runs, &sweep_meta(specs))
 }
 
 #[cfg(test)]

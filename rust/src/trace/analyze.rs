@@ -1,0 +1,285 @@
+//! Post-hoc analysis of recorded traces (`trace analyze` in the CLI).
+//!
+//! Everything here is computed from the event stream alone — no replay,
+//! no model, no RNG: per-worker utilization (arXiv:2304.08589 needs it
+//! to reason about load assignment), ingress queueing delay, staleness
+//! histograms (the per-round decompositions the error–runtime analysis
+//! of Dutta et al., arXiv:1803.01113, hinges on), and the per-round
+//! wait-time split between compute, upload, and download.
+
+use super::{Event, Trace};
+
+/// One worker's aggregate activity in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerUse {
+    /// Worker index.
+    pub worker: usize,
+    /// Number of compute responses sampled for this worker.
+    pub responses: u64,
+    /// Total sampled compute time (scaled share, excludes transfers).
+    pub busy: f64,
+    /// `busy / makespan`. Round disciplines sample every worker every
+    /// round but keep only the fastest k, so a straggler's utilization
+    /// counts work the round discarded and can exceed 1.
+    pub utilization: f64,
+}
+
+/// Aggregate statistics of one trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceAnalysis {
+    /// Largest clock value in the stream (end of the recorded run).
+    pub makespan: f64,
+    /// Number of gradient applies (rounds, or async updates).
+    pub applies: u64,
+    /// Per-worker activity, indexed by worker.
+    pub per_worker: Vec<WorkerUse>,
+    /// `staleness_hist[s]` = applies whose gradient was `s` versions
+    /// stale (round disciplines apply fresh gradients: all mass at 0).
+    pub staleness_hist: Vec<u64>,
+    /// Mean staleness over all applies.
+    pub mean_staleness: f64,
+    /// Arrivals served by the shared ingress (0 without an ingress).
+    pub ingress_served: u64,
+    /// Mean sojourn (queueing + service) at the ingress.
+    pub ingress_wait_mean: f64,
+    /// Worst-case sojourn at the ingress.
+    pub ingress_wait_max: f64,
+    /// Total sampled compute time across all workers.
+    pub compute_total: f64,
+    /// Total sampled uplink transfer time.
+    pub upload_total: f64,
+    /// Total sampled downlink transfer time.
+    pub download_total: f64,
+    /// Adaptive k-change decisions `(step, time, new k)`.
+    pub k_changes: Vec<(u64, f64, u32)>,
+}
+
+impl TraceAnalysis {
+    /// Compute every statistic in one pass over the events.
+    pub fn from_trace(trace: &Trace) -> Self {
+        let n = trace.n_workers as usize;
+        let mut per = vec![(0u64, 0.0f64); n];
+        let mut makespan = 0.0f64;
+        let mut applies = 0u64;
+        let mut staleness_hist: Vec<u64> = Vec::new();
+        let mut staleness_sum = 0u64;
+        let mut ingress_served = 0u64;
+        let mut ingress_wait_sum = 0.0;
+        let mut ingress_wait_max = 0.0f64;
+        let (mut compute_total, mut upload_total, mut download_total) =
+            (0.0, 0.0, 0.0);
+        let mut k_changes = Vec::new();
+        for ev in &trace.events {
+            match *ev {
+                Event::Broadcast { time, .. } => makespan = makespan.max(time),
+                Event::Compute {
+                    worker, compute, upload, download, ..
+                } => {
+                    if let Some(p) = per.get_mut(worker as usize) {
+                        p.0 += 1;
+                        p.1 += compute;
+                    }
+                    compute_total += compute;
+                    upload_total += upload;
+                    download_total += download;
+                }
+                Event::IngressServe { arrival, served, .. } => {
+                    let wait = served - arrival;
+                    ingress_served += 1;
+                    ingress_wait_sum += wait;
+                    ingress_wait_max = ingress_wait_max.max(wait);
+                    makespan = makespan.max(served);
+                }
+                Event::Apply { time, staleness, .. } => {
+                    applies += 1;
+                    staleness_sum += staleness;
+                    let s = staleness as usize;
+                    if staleness_hist.len() <= s {
+                        staleness_hist.resize(s + 1, 0);
+                    }
+                    staleness_hist[s] += 1;
+                    makespan = makespan.max(time);
+                }
+                Event::KChange { step, time, k } => {
+                    k_changes.push((step, time, k));
+                    makespan = makespan.max(time);
+                }
+                Event::Sample { time, .. } => {
+                    if time.is_finite() {
+                        makespan = makespan.max(time);
+                    }
+                }
+                Event::Transmit { .. } | Event::Push { .. } => {}
+            }
+        }
+        let per_worker = per
+            .into_iter()
+            .enumerate()
+            .map(|(worker, (responses, busy))| WorkerUse {
+                worker,
+                responses,
+                busy,
+                utilization: if makespan > 0.0 { busy / makespan } else { 0.0 },
+            })
+            .collect();
+        Self {
+            makespan,
+            applies,
+            per_worker,
+            staleness_hist,
+            mean_staleness: if applies > 0 {
+                staleness_sum as f64 / applies as f64
+            } else {
+                0.0
+            },
+            ingress_served,
+            ingress_wait_mean: if ingress_served > 0 {
+                ingress_wait_sum / ingress_served as f64
+            } else {
+                0.0
+            },
+            ingress_wait_max,
+            compute_total,
+            upload_total,
+            download_total,
+            k_changes,
+        }
+    }
+
+    /// Multi-section plain-text report.
+    pub fn report(&self, trace: &Trace) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace analysis: {} ({} workers, {} events)\n",
+            trace.label,
+            trace.n_workers,
+            trace.events.len()
+        ));
+        out.push_str(&format!(
+            "  discipline {} | makespan {:.6} | {} applies | {} k-changes\n",
+            trace.discipline,
+            self.makespan,
+            self.applies,
+            self.k_changes.len()
+        ));
+        out.push_str("\nper-round wait decomposition (mean per apply):\n");
+        let denom = self.applies.max(1) as f64;
+        out.push_str(&format!(
+            "  compute {:.6} | upload {:.6} | download {:.6}\n",
+            self.compute_total / denom,
+            self.upload_total / denom,
+            self.download_total / denom
+        ));
+        out.push_str("\nworker utilization (sampled compute / makespan):\n");
+        for w in &self.per_worker {
+            out.push_str(&format!(
+                "  w{:<3} responses={:<6} busy={:<12.6} util={:.3}\n",
+                w.worker, w.responses, w.busy, w.utilization
+            ));
+        }
+        if self.ingress_served > 0 {
+            out.push_str(&format!(
+                "\ningress: {} served | sojourn mean {:.6} max {:.6}\n",
+                self.ingress_served,
+                self.ingress_wait_mean,
+                self.ingress_wait_max
+            ));
+        }
+        out.push_str(&format!(
+            "\nstaleness: mean {:.3}\n",
+            self.mean_staleness
+        ));
+        for (s, count) in
+            self.staleness_hist.iter().enumerate().filter(|(_, &c)| c > 0)
+        {
+            out.push_str(&format!("  s={s:<3} {count}\n"));
+        }
+        if !self.k_changes.is_empty() {
+            out.push_str("\nk-changes:\n");
+            for (step, time, k) in &self.k_changes {
+                out.push_str(&format!(
+                    "  step={step} t={time:.6} k->{k}\n"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Discipline;
+    use super::*;
+
+    fn toy_trace() -> Trace {
+        let mut t = Trace::new(Discipline::Async, 2, "toy");
+        t.push(Event::Compute {
+            iteration: 0,
+            worker: 0,
+            raw: 1.0,
+            compute: 1.0,
+            upload: 0.5,
+            download: 0.25,
+        });
+        t.push(Event::Compute {
+            iteration: 0,
+            worker: 1,
+            raw: 3.0,
+            compute: 3.0,
+            upload: 0.5,
+            download: 0.25,
+        });
+        t.push(Event::IngressServe { worker: 0, arrival: 1.0, served: 1.5 });
+        t.push(Event::Apply { step: 1, time: 1.5, k: 1, staleness: 0 });
+        t.push(Event::IngressServe { worker: 1, arrival: 3.0, served: 4.5 });
+        t.push(Event::Apply { step: 2, time: 4.5, k: 1, staleness: 2 });
+        t.push(Event::KChange { step: 2, time: 4.5, k: 3 });
+        t
+    }
+
+    #[test]
+    fn one_pass_statistics_are_exact() {
+        let t = toy_trace();
+        let a = TraceAnalysis::from_trace(&t);
+        assert_eq!(a.makespan, 4.5);
+        assert_eq!(a.applies, 2);
+        assert_eq!(a.mean_staleness, 1.0);
+        assert_eq!(a.staleness_hist, vec![1, 0, 1]);
+        assert_eq!(a.ingress_served, 2);
+        assert_eq!(a.ingress_wait_mean, 1.0);
+        assert_eq!(a.ingress_wait_max, 1.5);
+        assert_eq!(a.per_worker.len(), 2);
+        assert_eq!(a.per_worker[1].busy, 3.0);
+        assert_eq!(a.per_worker[1].utilization, 3.0 / 4.5);
+        assert_eq!(a.compute_total, 4.0);
+        assert_eq!(a.upload_total, 1.0);
+        assert_eq!(a.k_changes, vec![(2, 4.5, 3)]);
+    }
+
+    #[test]
+    fn empty_trace_analyzes_to_zeroes() {
+        let t = Trace::new(Discipline::Sync, 3, "empty");
+        let a = TraceAnalysis::from_trace(&t);
+        assert_eq!(a.makespan, 0.0);
+        assert_eq!(a.applies, 0);
+        assert_eq!(a.mean_staleness, 0.0);
+        assert_eq!(a.per_worker.len(), 3);
+        assert_eq!(a.per_worker[0].utilization, 0.0);
+    }
+
+    #[test]
+    fn report_names_every_section() {
+        let t = toy_trace();
+        let rep = TraceAnalysis::from_trace(&t).report(&t);
+        for needle in [
+            "trace analysis",
+            "wait decomposition",
+            "worker utilization",
+            "ingress",
+            "staleness",
+            "k-changes",
+        ] {
+            assert!(rep.contains(needle), "missing {needle:?} in:\n{rep}");
+        }
+    }
+}

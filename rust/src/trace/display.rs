@@ -1,0 +1,115 @@
+//! Human-readable rendering of traces (`trace dump` in the CLI).
+
+use super::{Event, Trace};
+use std::fmt;
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Event::Broadcast { step, time, bytes } => write!(
+                f,
+                "broadcast  step={step} t={time:.6} bytes={bytes}"
+            ),
+            Event::Compute {
+                iteration,
+                worker,
+                raw,
+                compute,
+                upload,
+                download,
+            } => write!(
+                f,
+                "compute    it={iteration} w={worker} raw={raw:.6} \
+                 compute={compute:.6} up={upload:.6} down={download:.6}"
+            ),
+            Event::Transmit { step, worker, bytes } => write!(
+                f,
+                "transmit   step={step} w={worker} bytes={bytes}"
+            ),
+            Event::IngressServe { worker, arrival, served } => write!(
+                f,
+                "ingress    w={worker} arrival={arrival:.6} \
+                 served={served:.6} wait={:.6}",
+                served - arrival
+            ),
+            Event::Apply { step, time, k, staleness } => write!(
+                f,
+                "apply      step={step} t={time:.6} k={k} \
+                 staleness={staleness}"
+            ),
+            Event::KChange { step, time, k } => {
+                write!(f, "k-change   step={step} t={time:.6} k->{k}")
+            }
+            Event::Push { step, worker, bytes, delay } => write!(
+                f,
+                "push       step={step} w={worker} bytes={bytes} \
+                 delay={delay:.6}"
+            ),
+            Event::Sample {
+                iteration,
+                time,
+                k,
+                error,
+                bytes,
+                ..
+            } => write!(
+                f,
+                "sample     it={iteration} t={time:.6} k={k} \
+                 error={error:.6e} bytes={bytes}"
+            ),
+        }
+    }
+}
+
+impl Trace {
+    /// Multi-line dump: header line, then up to `limit` events (all when
+    /// `None`), then an elision count if events were cut.
+    pub fn dump(&self, limit: Option<usize>) -> String {
+        let mut out = format!(
+            "trace: discipline={} workers={} label={:?} events={}\n",
+            self.discipline,
+            self.n_workers,
+            self.label,
+            self.events.len()
+        );
+        let shown = limit.unwrap_or(self.events.len()).min(self.events.len());
+        for ev in &self.events[..shown] {
+            out.push_str(&format!("  {ev}\n"));
+        }
+        if shown < self.events.len() {
+            out.push_str(&format!(
+                "  ... {} more event(s)\n",
+                self.events.len() - shown
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Discipline;
+    use super::*;
+
+    #[test]
+    fn dump_honours_limit_and_reports_elision() {
+        let mut t = Trace::new(Discipline::Sync, 2, "d");
+        for j in 0..5 {
+            t.push(Event::KChange { step: j, time: j as f64, k: 1 });
+        }
+        let full = t.dump(None);
+        assert_eq!(full.lines().count(), 6);
+        assert!(full.starts_with("trace: discipline=sync workers=2"));
+        let cut = t.dump(Some(2));
+        assert_eq!(cut.lines().count(), 4);
+        assert!(cut.contains("... 3 more event(s)"), "{cut}");
+    }
+
+    #[test]
+    fn event_lines_name_their_kind() {
+        let ev = Event::IngressServe { worker: 3, arrival: 1.0, served: 1.5 };
+        let line = ev.to_string();
+        assert!(line.contains("ingress"), "{line}");
+        assert!(line.contains("wait=0.5"), "{line}");
+    }
+}

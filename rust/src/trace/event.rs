@@ -1,0 +1,365 @@
+//! The event vocabulary and its per-kind binary codec.
+//!
+//! Each variant maps to one frame kind with a fixed little-endian
+//! payload. Frame layout (kind byte + payload length byte + payload) is
+//! defined in `format.rs`; this module owns what goes *inside* the
+//! payload. Times are stored as raw `f64` bit patterns so decode is the
+//! exact inverse of encode.
+
+use super::format::Cursor;
+use super::reader::TraceError;
+
+/// Frame kind tags. Kind 0 is reserved (never written) so a zeroed
+/// buffer cannot parse as a valid frame stream.
+pub(super) const KIND_BROADCAST: u8 = 1;
+pub(super) const KIND_COMPUTE: u8 = 2;
+pub(super) const KIND_TRANSMIT: u8 = 3;
+pub(super) const KIND_INGRESS: u8 = 4;
+pub(super) const KIND_APPLY: u8 = 5;
+pub(super) const KIND_KCHANGE: u8 = 6;
+pub(super) const KIND_PUSH: u8 = 7;
+pub(super) const KIND_SAMPLE: u8 = 8;
+
+/// One engine event.
+///
+/// Step/iteration indexing follows the emitting discipline: round
+/// disciplines (sync, coded, threaded) use the round index `j` (the
+/// engine's pre-increment step counter), the async disciplines use the
+/// global update counter. `Compute.iteration` is always the key the
+/// delay model was sampled with, which is what makes replay exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// Model broadcast to all workers at the start of a round.
+    Broadcast {
+        /// Round index at broadcast time.
+        step: u64,
+        /// Virtual clock at broadcast time.
+        time: f64,
+        /// Downlink bytes charged for the broadcast.
+        bytes: u64,
+    },
+    /// One worker's sampled compute-plus-comm response.
+    Compute {
+        /// Delay-model iteration key (round index, or async cycle key).
+        iteration: u64,
+        /// Worker index.
+        worker: u32,
+        /// Raw delay-model draw, *before* any pricing — the replay key.
+        raw: f64,
+        /// Compute share after scaling (equals `raw` for uncoded runs).
+        compute: f64,
+        /// Uplink transfer share.
+        upload: f64,
+        /// Downlink transfer share.
+        download: f64,
+    },
+    /// Accepted uplink gradient message.
+    Transmit {
+        /// Engine step counter at acceptance.
+        step: u64,
+        /// Sending worker.
+        worker: u32,
+        /// Message size on the wire.
+        bytes: u64,
+    },
+    /// Shared-ingress service of one arrival.
+    IngressServe {
+        /// Worker whose message was served.
+        worker: u32,
+        /// Arrival time at the master.
+        arrival: f64,
+        /// Service-completion time (arrival + queueing + service).
+        served: f64,
+    },
+    /// Gradient applied to the model.
+    Apply {
+        /// Round index (sync/coded/threaded) or update index (async).
+        step: u64,
+        /// Virtual clock at the apply.
+        time: f64,
+        /// Number of gradients in the apply (k for rounds, 1 async).
+        k: u32,
+        /// Staleness of the applied gradient (0 for round disciplines).
+        staleness: u64,
+    },
+    /// Adaptive policy changed k.
+    KChange {
+        /// Round index of the decision.
+        step: u64,
+        /// Virtual clock at the decision.
+        time: f64,
+        /// New k (takes effect next round).
+        k: u32,
+    },
+    /// Model pushed to one worker (async downlink).
+    Push {
+        /// Engine step counter at the push.
+        step: u64,
+        /// Receiving worker.
+        worker: u32,
+        /// Downlink bytes charged.
+        bytes: u64,
+        /// Download delay charged.
+        delay: f64,
+    },
+    /// Mirror of a recorder sample ([`crate::metrics::Sample`]), so a
+    /// replay can be diffed against the trace alone.
+    Sample {
+        /// Iteration index of the sample.
+        iteration: u64,
+        /// Wall-clock time of the sample.
+        time: f64,
+        /// k at the sample.
+        k: u32,
+        /// Error metric at the sample.
+        error: f64,
+        /// Cumulative uplink bytes.
+        bytes: u64,
+        /// Cumulative upload time.
+        comm_time: f64,
+        /// Cumulative downlink bytes.
+        bytes_down: u64,
+        /// Cumulative download time.
+        down_time: f64,
+    },
+}
+
+impl Event {
+    /// Wire kind tag.
+    pub(super) fn kind(&self) -> u8 {
+        match self {
+            Event::Broadcast { .. } => KIND_BROADCAST,
+            Event::Compute { .. } => KIND_COMPUTE,
+            Event::Transmit { .. } => KIND_TRANSMIT,
+            Event::IngressServe { .. } => KIND_INGRESS,
+            Event::Apply { .. } => KIND_APPLY,
+            Event::KChange { .. } => KIND_KCHANGE,
+            Event::Push { .. } => KIND_PUSH,
+            Event::Sample { .. } => KIND_SAMPLE,
+        }
+    }
+
+    /// Append the payload bytes (fixed length per kind).
+    pub(super) fn encode_payload(&self, out: &mut Vec<u8>) {
+        match *self {
+            Event::Broadcast { step, time, bytes } => {
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&time.to_bits().to_le_bytes());
+                out.extend_from_slice(&bytes.to_le_bytes());
+            }
+            Event::Compute {
+                iteration,
+                worker,
+                raw,
+                compute,
+                upload,
+                download,
+            } => {
+                out.extend_from_slice(&iteration.to_le_bytes());
+                out.extend_from_slice(&worker.to_le_bytes());
+                out.extend_from_slice(&raw.to_bits().to_le_bytes());
+                out.extend_from_slice(&compute.to_bits().to_le_bytes());
+                out.extend_from_slice(&upload.to_bits().to_le_bytes());
+                out.extend_from_slice(&download.to_bits().to_le_bytes());
+            }
+            Event::Transmit { step, worker, bytes } => {
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&worker.to_le_bytes());
+                out.extend_from_slice(&bytes.to_le_bytes());
+            }
+            Event::IngressServe { worker, arrival, served } => {
+                out.extend_from_slice(&worker.to_le_bytes());
+                out.extend_from_slice(&arrival.to_bits().to_le_bytes());
+                out.extend_from_slice(&served.to_bits().to_le_bytes());
+            }
+            Event::Apply { step, time, k, staleness } => {
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&time.to_bits().to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&staleness.to_le_bytes());
+            }
+            Event::KChange { step, time, k } => {
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&time.to_bits().to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            Event::Push { step, worker, bytes, delay } => {
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&worker.to_le_bytes());
+                out.extend_from_slice(&bytes.to_le_bytes());
+                out.extend_from_slice(&delay.to_bits().to_le_bytes());
+            }
+            Event::Sample {
+                iteration,
+                time,
+                k,
+                error,
+                bytes,
+                comm_time,
+                bytes_down,
+                down_time,
+            } => {
+                out.extend_from_slice(&iteration.to_le_bytes());
+                out.extend_from_slice(&time.to_bits().to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&error.to_bits().to_le_bytes());
+                out.extend_from_slice(&bytes.to_le_bytes());
+                out.extend_from_slice(&comm_time.to_bits().to_le_bytes());
+                out.extend_from_slice(&bytes_down.to_le_bytes());
+                out.extend_from_slice(&down_time.to_bits().to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode a payload for a known kind; `Ok(None)` for kinds this
+    /// reader does not know (the caller already skipped the bytes).
+    pub(super) fn decode(
+        kind: u8,
+        payload: &[u8],
+    ) -> Result<Option<Event>, TraceError> {
+        let mut c = Cursor::new(payload);
+        let ev = match kind {
+            KIND_BROADCAST => Event::Broadcast {
+                step: c.u64("broadcast.step")?,
+                time: c.f64("broadcast.time")?,
+                bytes: c.u64("broadcast.bytes")?,
+            },
+            KIND_COMPUTE => Event::Compute {
+                iteration: c.u64("compute.iteration")?,
+                worker: c.u32("compute.worker")?,
+                raw: c.f64("compute.raw")?,
+                compute: c.f64("compute.compute")?,
+                upload: c.f64("compute.upload")?,
+                download: c.f64("compute.download")?,
+            },
+            KIND_TRANSMIT => Event::Transmit {
+                step: c.u64("transmit.step")?,
+                worker: c.u32("transmit.worker")?,
+                bytes: c.u64("transmit.bytes")?,
+            },
+            KIND_INGRESS => Event::IngressServe {
+                worker: c.u32("ingress.worker")?,
+                arrival: c.f64("ingress.arrival")?,
+                served: c.f64("ingress.served")?,
+            },
+            KIND_APPLY => Event::Apply {
+                step: c.u64("apply.step")?,
+                time: c.f64("apply.time")?,
+                k: c.u32("apply.k")?,
+                staleness: c.u64("apply.staleness")?,
+            },
+            KIND_KCHANGE => Event::KChange {
+                step: c.u64("kchange.step")?,
+                time: c.f64("kchange.time")?,
+                k: c.u32("kchange.k")?,
+            },
+            KIND_PUSH => Event::Push {
+                step: c.u64("push.step")?,
+                worker: c.u32("push.worker")?,
+                bytes: c.u64("push.bytes")?,
+                delay: c.f64("push.delay")?,
+            },
+            KIND_SAMPLE => Event::Sample {
+                iteration: c.u64("sample.iteration")?,
+                time: c.f64("sample.time")?,
+                k: c.u32("sample.k")?,
+                error: c.f64("sample.error")?,
+                bytes: c.u64("sample.bytes")?,
+                comm_time: c.f64("sample.comm_time")?,
+                bytes_down: c.u64("sample.bytes_down")?,
+                down_time: c.f64("sample.down_time")?,
+            },
+            _ => return Ok(None),
+        };
+        if !c.is_eof() {
+            return Err(TraceError::Format(format!(
+                "event kind {kind} payload longer than its fixed layout \
+                 ({} bytes)",
+                payload.len()
+            )));
+        }
+        Ok(Some(ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_events() -> Vec<Event> {
+        vec![
+            Event::Broadcast { step: 3, time: 1.5, bytes: 640 },
+            Event::Compute {
+                iteration: 3,
+                worker: 2,
+                raw: 0.25,
+                compute: 0.5,
+                upload: 0.125,
+                download: 0.0625,
+            },
+            Event::Transmit { step: 3, worker: 2, bytes: 96 },
+            Event::IngressServe { worker: 1, arrival: 2.0, served: 2.5 },
+            Event::Apply { step: 3, time: 2.5, k: 4, staleness: 2 },
+            Event::KChange { step: 3, time: 2.5, k: 5 },
+            Event::Push { step: 4, worker: 1, bytes: 640, delay: 0.5 },
+            Event::Sample {
+                iteration: 4,
+                time: 2.5,
+                k: 5,
+                error: 1e-3,
+                bytes: 736,
+                comm_time: 0.1875,
+                bytes_down: 1280,
+                down_time: 0.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        for ev in all_events() {
+            let mut payload = Vec::new();
+            ev.encode_payload(&mut payload);
+            let back = Event::decode(ev.kind(), &payload).unwrap().unwrap();
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn nan_and_infinite_times_survive_bitwise() {
+        let ev = Event::Sample {
+            iteration: 0,
+            time: f64::NAN,
+            k: 1,
+            error: f64::INFINITY,
+            bytes: 0,
+            comm_time: 0.0,
+            bytes_down: 0,
+            down_time: -0.0,
+        };
+        let mut payload = Vec::new();
+        ev.encode_payload(&mut payload);
+        match Event::decode(ev.kind(), &payload).unwrap().unwrap() {
+            Event::Sample { time, error, down_time, .. } => {
+                assert_eq!(time.to_bits(), f64::NAN.to_bits());
+                assert_eq!(error, f64::INFINITY);
+                assert_eq!(down_time.to_bits(), (-0.0f64).to_bits());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_kind_decodes_to_none() {
+        assert_eq!(Event::decode(99, &[1, 2, 3]).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected() {
+        let ev = Event::KChange { step: 0, time: 0.0, k: 1 };
+        let mut payload = Vec::new();
+        ev.encode_payload(&mut payload);
+        payload.push(0xFF);
+        assert!(Event::decode(ev.kind(), &payload).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Wire-level constants and primitives of the trace format.
+//!
+//! Layout of a trace file (all integers little-endian):
+//!
+//! ```text
+//! magic      8 bytes   b"ADSGTRC\0"
+//! major      u16       FORMAT_MAJOR
+//! minor      u16       FORMAT_MINOR
+//! discipline u8        Discipline tag
+//! n_workers  u32
+//! label_len  u16
+//! label      label_len bytes of UTF-8
+//! frames     until EOF:
+//!   kind        u8     event kind (see event.rs)
+//!   payload_len u8     fixed per kind within a major version
+//!   payload     payload_len bytes
+//! ```
+//!
+//! The per-frame `payload_len` is what makes minor versions
+//! forward-skippable: a reader that does not know a kind still knows
+//! how many bytes to jump. See the module docs of [`crate::trace`] for
+//! the full version/compatibility policy.
+
+use super::reader::TraceError;
+
+/// File magic: identifies an adasgd event trace.
+pub const MAGIC: [u8; 8] = *b"ADSGTRC\0";
+
+/// Current major format version. Bumped when existing frames change
+/// meaning or layout; readers must reject majors they don't support.
+pub const FORMAT_MAJOR: u16 = 1;
+
+/// Current minor format version. Bumped when event kinds are added;
+/// readers skip unknown kinds via the frame's payload length.
+pub const FORMAT_MINOR: u16 = 0;
+
+/// Gather discipline that produced a trace (header field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Synchronous fastest-k rounds (`master::run_fastest_k_comm`).
+    Sync,
+    /// Fully asynchronous staleness-aware updates (`async_sgd`).
+    Async,
+    /// Gradient-coded rounds (`coding::run_coded_comm`).
+    Coded,
+    /// Threaded cluster, round-based (`exec::ThreadedCluster`).
+    Threaded,
+    /// Threaded cluster, fully asynchronous.
+    ThreadedAsync,
+}
+
+impl Discipline {
+    /// Wire tag of the discipline.
+    pub fn tag(self) -> u8 {
+        match self {
+            Discipline::Sync => 0,
+            Discipline::Async => 1,
+            Discipline::Coded => 2,
+            Discipline::Threaded => 3,
+            Discipline::ThreadedAsync => 4,
+        }
+    }
+
+    /// Decode a wire tag.
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => Discipline::Sync,
+            1 => Discipline::Async,
+            2 => Discipline::Coded,
+            3 => Discipline::Threaded,
+            4 => Discipline::ThreadedAsync,
+            _ => return None,
+        })
+    }
+
+    /// True when updates are applied per-round (all workers sampled
+    /// every iteration) rather than per-completion. Round traces carry
+    /// complete per-iteration delay rows, which is what
+    /// `TraceDelays::from_event_trace` mines.
+    pub fn is_round_based(self) -> bool {
+        matches!(
+            self,
+            Discipline::Sync | Discipline::Coded | Discipline::Threaded
+        )
+    }
+}
+
+impl std::fmt::Display for Discipline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            Discipline::Sync => "sync",
+            Discipline::Async => "async",
+            Discipline::Coded => "coded",
+            Discipline::Threaded => "threaded",
+            Discipline::ThreadedAsync => "threaded-async",
+        };
+        f.write_str(name)
+    }
+}
+
+/// Little-endian byte cursor over a trace buffer; every read is
+/// bounds-checked and reports *what* was truncated.
+pub(super) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(super) fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub(super) fn is_eof(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    pub(super) fn take(
+        &mut self,
+        n: usize,
+        what: &str,
+    ) -> Result<&'a [u8], TraceError> {
+        if self.pos + n > self.buf.len() {
+            return Err(TraceError::Format(format!(
+                "truncated trace: expected {n} byte(s) of {what} at offset \
+                 {}, file has {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(super) fn u8(&mut self, what: &str) -> Result<u8, TraceError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub(super) fn u16(&mut self, what: &str) -> Result<u16, TraceError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub(super) fn u32(&mut self, what: &str) -> Result<u32, TraceError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(super) fn u64(&mut self, what: &str) -> Result<u64, TraceError> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub(super) fn f64(&mut self, what: &str) -> Result<f64, TraceError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discipline_tags_round_trip() {
+        for d in [
+            Discipline::Sync,
+            Discipline::Async,
+            Discipline::Coded,
+            Discipline::Threaded,
+            Discipline::ThreadedAsync,
+        ] {
+            assert_eq!(Discipline::from_tag(d.tag()), Some(d));
+        }
+        assert_eq!(Discipline::from_tag(250), None);
+        assert!(Discipline::Sync.is_round_based());
+        assert!(!Discipline::Async.is_round_based());
+    }
+
+    #[test]
+    fn cursor_reads_le_and_reports_truncation() {
+        let buf = [0x01, 0x02, 0x03, 0x04];
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.u16("x").unwrap(), 0x0201);
+        let err = c.u32("tail").unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("tail"), "{err}");
+    }
+}

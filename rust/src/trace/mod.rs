@@ -1,0 +1,151 @@
+//! Binary event trace: record, replay, and post-hoc analysis.
+//!
+//! Every question the paper's error–runtime trade-off raises — where
+//! wall-clock time goes inside a round, how stale applied gradients are,
+//! how long uploads queue at the master's ingress — used to require
+//! re-running sweeps with fatter CSV columns. This module records the
+//! answer once: the [`EngineCore`](crate::engine::EngineCore) emits a
+//! compact binary [`Event`] stream (model broadcasts, per-worker compute
+//! samples, uplink transmits, ingress service, gradient applies,
+//! adaptive k-changes, recorder samples) under **every** gather
+//! discipline — sync fastest-k, async staleness, coded, and the threaded
+//! cluster — and the stream is a standalone artifact:
+//!
+//! * **Record** — `EngineCore::enable_trace` turns the stream on; the
+//!   finished [`Trace`] rides out on
+//!   [`EngineRun::trace`](crate::engine::EngineRun). Off by default and
+//!   observationally free: no RNG draw, clock update, or recorder push
+//!   moves when tracing is enabled, so traced and untraced runs are
+//!   bit-identical (test-asserted).
+//! * **Replay** — [`ReplayDelays`] turns a trace back into a
+//!   [`DelayModel`](crate::straggler::DelayModel): re-running the same
+//!   config against it reproduces the model trajectory, virtual clock,
+//!   and recorder samples *bitwise*, because every live delay draw is
+//!   keyed by `(iteration, worker)` and the trace stores the raw sample
+//!   before pricing. [`TraceDelays::from_event_trace`]
+//!   (crate::straggler::TraceDelays::from_event_trace) mines the same
+//!   samples into a cyclic straggler scenario for new experiments.
+//! * **Analyze** — [`TraceAnalysis`] computes per-worker utilization,
+//!   ingress queueing delay, staleness histograms, and the per-round
+//!   wait-time decomposition from a trace file alone (`trace analyze`
+//!   in the CLI), without re-running anything.
+//!
+//! # On-disk format and version/compatibility policy
+//!
+//! A trace file is: an 8-byte magic (`b"ADSGTRC\0"`), a `u16` major and
+//! `u16` minor format version (little-endian), a header (discipline
+//! tag, worker count, run label), then length-prefixed event frames
+//! until EOF. All integers are little-endian; all times are `f64` bit
+//! patterns (`to_le_bytes`), so a round-trip through disk is exact.
+//!
+//! The compatibility contract, which readers MUST follow:
+//!
+//! * **Major version** (`FORMAT_MAJOR`): incremented when existing
+//!   frames change meaning or layout. A reader encountering a major it
+//!   does not support must reject the file with an actionable error
+//!   (what it read, what it supports, what to do) — never panic,
+//!   never guess.
+//! * **Minor version** (`FORMAT_MINOR`): incremented when new event
+//!   kinds are *added*. Every frame carries a one-byte payload length,
+//!   so an old reader skips unknown kinds within its supported major
+//!   and still parses the rest of the file.
+//!
+//! See `format.rs` for the wire layout and `reader.rs` for the
+//! enforcement.
+
+mod analyze;
+mod display;
+mod event;
+mod format;
+mod reader;
+mod replay;
+mod writer;
+
+pub use analyze::{TraceAnalysis, WorkerUse};
+pub use event::Event;
+pub use format::{Discipline, FORMAT_MAJOR, FORMAT_MINOR, MAGIC};
+pub use reader::TraceError;
+pub use replay::ReplayDelays;
+
+/// One recorded run: header fields plus the ordered event stream.
+///
+/// Construction sites are the engine (`EngineCore::enable_trace`) and
+/// the reader ([`Trace::from_bytes`] / [`Trace::load`]); both produce
+/// the same in-memory value, so everything downstream (replay, analyze,
+/// display) is agnostic to whether the trace was just recorded or read
+/// back from disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Which gather discipline produced the stream.
+    pub discipline: Discipline,
+    /// Worker count of the run (the comm channel's `n`).
+    pub n_workers: u32,
+    /// Run label (the engine's recorder label at enable time).
+    pub label: String,
+    /// Ordered event stream.
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    /// Empty trace with the given header.
+    pub fn new(
+        discipline: Discipline,
+        n_workers: u32,
+        label: impl Into<String>,
+    ) -> Self {
+        Self { discipline, n_workers, label: label.into(), events: Vec::new() }
+    }
+
+    /// Append one event.
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no events were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Map a run label to a filesystem-safe trace file stem: ASCII
+/// alphanumerics, `.`, `-`, and `_` pass through, everything else
+/// (sweep labels contain `/`) becomes `_`.
+pub fn sanitize_label(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '-' | '_') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_keeps_safe_chars_and_replaces_the_rest() {
+        assert_eq!(sanitize_label("train_seed-1.0"), "train_seed-1.0");
+        assert_eq!(sanitize_label("topk10/k=40"), "topk10_k_40");
+        assert_eq!(sanitize_label("a b\tc"), "a_b_c");
+    }
+
+    #[test]
+    fn trace_push_and_len() {
+        let mut t = Trace::new(Discipline::Sync, 4, "x");
+        assert!(t.is_empty());
+        t.push(Event::KChange { step: 0, time: 1.0, k: 2 });
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.n_workers, 4);
+    }
+}

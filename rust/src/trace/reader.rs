@@ -1,0 +1,166 @@
+//! Deserialisation and version enforcement for trace files.
+//!
+//! The reader implements the compatibility policy documented on
+//! [`crate::trace`]: a file whose major version is newer than this
+//! build is rejected with an actionable error (never a panic); frames
+//! whose kind this build does not know — a newer *minor* version —
+//! are skipped via their payload-length prefix.
+
+use super::event::Event;
+use super::format::{Cursor, Discipline, FORMAT_MAJOR, MAGIC};
+use super::Trace;
+use std::path::Path;
+
+/// Errors reading a trace file.
+#[derive(Debug)]
+pub enum TraceError {
+    /// Filesystem failure.
+    Io(std::io::Error),
+    /// The bytes are not a trace this build can parse.
+    Format(String),
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace io error: {e}"),
+            TraceError::Format(msg) => write!(f, "trace format error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+impl Trace {
+    /// Parse a trace from its binary form.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Trace, TraceError> {
+        let mut c = Cursor::new(bytes);
+        let magic = c.take(MAGIC.len(), "file magic")?;
+        if magic != MAGIC {
+            return Err(TraceError::Format(
+                "not an adasgd event trace (bad magic); expected a file \
+                 written by Trace::save / the --trace flag"
+                    .into(),
+            ));
+        }
+        let major = c.u16("format major version")?;
+        let minor = c.u16("format minor version")?;
+        if major > FORMAT_MAJOR {
+            return Err(TraceError::Format(format!(
+                "trace format v{major}.{minor} is newer than the v\
+                 {FORMAT_MAJOR} this build supports; re-record the trace \
+                 with this build, or upgrade the reader"
+            )));
+        }
+        let tag = c.u8("discipline tag")?;
+        let discipline = Discipline::from_tag(tag).ok_or_else(|| {
+            TraceError::Format(format!(
+                "unknown discipline tag {tag} (trace v{major}.{minor})"
+            ))
+        })?;
+        let n_workers = c.u32("worker count")?;
+        let label_len = c.u16("label length")? as usize;
+        let label = std::str::from_utf8(c.take(label_len, "label")?)
+            .map_err(|e| TraceError::Format(format!("label not UTF-8: {e}")))?
+            .to_string();
+        let mut events = Vec::new();
+        while !c.is_eof() {
+            let kind = c.u8("frame kind")?;
+            let payload_len = c.u8("frame payload length")? as usize;
+            let payload = c.take(payload_len, "frame payload")?;
+            // Unknown kinds within a supported major come from newer
+            // minor versions: skip them (the length prefix exists for
+            // exactly this) and keep parsing.
+            if let Some(ev) = Event::decode(kind, payload)? {
+                events.push(ev);
+            }
+        }
+        Ok(Trace { discipline, n_workers, label, events })
+    }
+
+    /// Read a trace file from disk.
+    pub fn load(path: &Path) -> Result<Trace, TraceError> {
+        let bytes = std::fs::read(path).map_err(TraceError::Io)?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new(Discipline::Async, 3, "round/trip");
+        t.push(Event::Broadcast { step: 0, time: 0.0, bytes: 24 });
+        t.push(Event::Compute {
+            iteration: 0,
+            worker: 2,
+            raw: 0.75,
+            compute: 0.75,
+            upload: 0.0,
+            download: 0.25,
+        });
+        t.push(Event::Apply { step: 1, time: 1.0, k: 1, staleness: 3 });
+        t
+    }
+
+    #[test]
+    fn bytes_round_trip_exactly() {
+        let t = sample_trace();
+        let back = Trace::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("adasgd_trace_reader_unit");
+        let path = dir.join("nested/dir/a.trace");
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_an_error_not_a_panic() {
+        let err = Trace::from_bytes(b"CSV,not,a,trace\n").unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn newer_major_is_rejected_with_guidance() {
+        let mut bytes = sample_trace().to_bytes();
+        bytes[8..10].copy_from_slice(&2u16.to_le_bytes());
+        let err = Trace::from_bytes(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("v2.0"), "{msg}");
+        assert!(msg.contains("re-record"), "actionable: {msg}");
+    }
+
+    #[test]
+    fn newer_minor_with_unknown_kind_is_skipped() {
+        let t = sample_trace();
+        let mut bytes = t.to_bytes();
+        bytes[10..12].copy_from_slice(&9u16.to_le_bytes()); // minor = 9
+        // Append an unknown frame kind with a 4-byte payload, then a
+        // known frame; both must survive a v1 reader.
+        bytes.extend_from_slice(&[200, 4, 1, 2, 3, 4]);
+        let mut tail = Vec::new();
+        let ev = Event::KChange { step: 9, time: 9.0, k: 9 };
+        ev.encode_payload(&mut tail);
+        bytes.push(6);
+        bytes.push(tail.len() as u8);
+        bytes.extend_from_slice(&tail);
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(back.events.len(), t.events.len() + 1);
+        assert_eq!(*back.events.last().unwrap(), ev);
+    }
+
+    #[test]
+    fn truncated_frame_is_reported() {
+        let mut bytes = sample_trace().to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        let err = Trace::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Replay a recorded trace in place of live delay sampling.
+//!
+//! The engine draws every worker delay through
+//! `DelayModel::sample(iteration, worker, rng)` on a *dedicated* RNG
+//! stream, and the trace records each draw's raw (pre-pricing) value
+//! keyed by exactly that `(iteration, worker)` pair. [`ReplayDelays`]
+//! is therefore a drop-in [`DelayModel`] that returns the recorded
+//! value for each key and ignores the RNG — the broadcast and comm
+//! streams never see a different draw order, so re-running the same
+//! config against a `ReplayDelays` reproduces the original model
+//! trajectory, virtual clock, and recorder samples bit for bit
+//! (asserted in `rust/tests/test_trace_replay.rs` across all four
+//! gather disciplines).
+
+use super::{Event, Trace};
+use crate::straggler::{DelayModel, RngDyn};
+use std::collections::BTreeMap;
+
+/// Exact delay replay of one recorded run.
+#[derive(Debug, Clone)]
+pub struct ReplayDelays {
+    map: BTreeMap<(u64, u32), f64>,
+    label: String,
+}
+
+impl ReplayDelays {
+    /// Index a trace's `Compute` events by `(iteration, worker)`.
+    ///
+    /// Errors when the trace has no compute samples, or when one key
+    /// was recorded twice with different values (a corrupt or
+    /// concatenated trace — replay would be ambiguous).
+    pub fn from_trace(trace: &Trace) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        for ev in &trace.events {
+            if let Event::Compute { iteration, worker, raw, .. } = *ev {
+                if let Some(prev) = map.insert((iteration, worker), raw) {
+                    if prev.to_bits() != raw.to_bits() {
+                        return Err(format!(
+                            "trace records two different delays for \
+                             (iteration {iteration}, worker {worker}); \
+                             cannot replay an ambiguous trace"
+                        ));
+                    }
+                }
+            }
+        }
+        if map.is_empty() {
+            return Err(
+                "trace has no compute events; nothing to replay".into()
+            );
+        }
+        Ok(Self { map, label: trace.label.clone() })
+    }
+
+    /// Number of recorded `(iteration, worker)` delay keys.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Never true — construction rejects empty traces.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl DelayModel for ReplayDelays {
+    /// Panics when the run requests a key the trace never recorded:
+    /// that means the replay config does not match the recorded run
+    /// (different n, policy, iteration budget, …), and silently
+    /// inventing a delay would defeat the bitwise-equivalence contract.
+    fn sample(
+        &self,
+        iteration: u64,
+        worker: usize,
+        _rng: &mut dyn RngDyn,
+    ) -> f64 {
+        *self.map.get(&(iteration, worker as u32)).unwrap_or_else(|| {
+            panic!(
+                "replay of {:?}: trace has no delay for (iteration \
+                 {iteration}, worker {worker}) — the replay config must \
+                 match the recorded run",
+                self.label
+            )
+        })
+    }
+
+    fn name(&self) -> String {
+        format!("replay({})", self.label)
+    }
+
+    fn is_iid(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Discipline;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn compute(it: u64, w: u32, raw: f64) -> Event {
+        Event::Compute {
+            iteration: it,
+            worker: w,
+            raw,
+            compute: raw,
+            upload: 0.0,
+            download: 0.0,
+        }
+    }
+
+    #[test]
+    fn replays_recorded_draws_exactly() {
+        let mut t = Trace::new(Discipline::Sync, 2, "r");
+        t.push(compute(0, 0, 0.125));
+        t.push(compute(0, 1, 7.5));
+        t.push(compute(1, 0, 2.25));
+        let r = ReplayDelays::from_trace(&t).unwrap();
+        let mut rng = Pcg64::seed(0);
+        assert_eq!(r.sample(0, 1, &mut rng), 7.5);
+        assert_eq!(r.sample(1, 0, &mut rng), 2.25);
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_iid());
+        assert!(r.name().contains('r'));
+    }
+
+    #[test]
+    fn empty_and_ambiguous_traces_are_rejected() {
+        let t = Trace::new(Discipline::Sync, 2, "e");
+        assert!(ReplayDelays::from_trace(&t)
+            .unwrap_err()
+            .contains("no compute events"));
+        let mut t2 = Trace::new(Discipline::Sync, 2, "dup");
+        t2.push(compute(0, 0, 1.0));
+        t2.push(compute(0, 0, 2.0));
+        assert!(ReplayDelays::from_trace(&t2)
+            .unwrap_err()
+            .contains("ambiguous"));
+    }
+
+    #[test]
+    #[should_panic(expected = "must match the recorded run")]
+    fn missing_key_panics_with_guidance() {
+        let mut t = Trace::new(Discipline::Sync, 1, "m");
+        t.push(compute(0, 0, 1.0));
+        let r = ReplayDelays::from_trace(&t).unwrap();
+        let mut rng = Pcg64::seed(0);
+        r.sample(5, 0, &mut rng);
+    }
+}

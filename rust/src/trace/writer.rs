@@ -1,0 +1,80 @@
+//! Binary serialisation of a [`Trace`] (see `format.rs` for layout).
+
+use super::format::{FORMAT_MAJOR, FORMAT_MINOR, MAGIC};
+use super::reader::TraceError;
+use super::Trace;
+use std::path::Path;
+
+impl Trace {
+    /// Serialise to the versioned binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        // Header + a conservative 32 bytes per frame avoids most regrows.
+        let mut out = Vec::with_capacity(32 + self.label.len() + 32 * self.events.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_MAJOR.to_le_bytes());
+        out.extend_from_slice(&FORMAT_MINOR.to_le_bytes());
+        out.push(self.discipline.tag());
+        out.extend_from_slice(&self.n_workers.to_le_bytes());
+        let label = self.label.as_bytes();
+        let label_len =
+            u16::try_from(label.len()).unwrap_or(u16::MAX) as usize;
+        out.extend_from_slice(&(label_len as u16).to_le_bytes());
+        out.extend_from_slice(&label[..label_len]);
+        let mut payload = Vec::with_capacity(64);
+        for ev in &self.events {
+            payload.clear();
+            ev.encode_payload(&mut payload);
+            debug_assert!(
+                payload.len() <= u8::MAX as usize,
+                "event payloads are fixed-size and < 256 bytes"
+            );
+            out.push(ev.kind());
+            out.push(payload.len() as u8);
+            out.extend_from_slice(&payload);
+        }
+        out
+    }
+
+    /// Write the trace to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<(), TraceError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(TraceError::Io)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes()).map_err(TraceError::Io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Discipline, Event};
+    use super::*;
+
+    #[test]
+    fn header_bytes_are_the_documented_layout() {
+        let t = Trace::new(Discipline::Coded, 7, "ab");
+        let bytes = t.to_bytes();
+        assert_eq!(&bytes[..8], b"ADSGTRC\0");
+        assert_eq!(u16::from_le_bytes([bytes[8], bytes[9]]), FORMAT_MAJOR);
+        assert_eq!(u16::from_le_bytes([bytes[10], bytes[11]]), FORMAT_MINOR);
+        assert_eq!(bytes[12], Discipline::Coded.tag());
+        assert_eq!(
+            u32::from_le_bytes([bytes[13], bytes[14], bytes[15], bytes[16]]),
+            7
+        );
+        assert_eq!(u16::from_le_bytes([bytes[17], bytes[18]]), 2);
+        assert_eq!(&bytes[19..21], b"ab");
+        assert_eq!(bytes.len(), 21, "no frames after an empty event list");
+    }
+
+    #[test]
+    fn frames_are_length_prefixed() {
+        let mut t = Trace::new(Discipline::Sync, 1, "");
+        t.push(Event::KChange { step: 1, time: 2.0, k: 3 });
+        let bytes = t.to_bytes();
+        let frame = &bytes[19..];
+        assert_eq!(frame[0], 6, "KChange kind tag");
+        assert_eq!(frame[1] as usize, frame.len() - 2, "payload length");
+    }
+}

@@ -21,7 +21,8 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_commands() {
     let text = run_ok(&["help"]);
-    for cmd in ["fig1", "fig2", "fig3", "train", "train-transformer"] {
+    for cmd in ["fig1", "fig2", "fig3", "train", "train-transformer", "trace"]
+    {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
 }
@@ -59,7 +60,8 @@ fn fig1_writes_csv() {
     assert!(lines.next().unwrap().starts_with("# adasgd run series"));
     assert_eq!(
         lines.next().unwrap(),
-        "label,iteration,time,k,error,bytes,comm_time,bytes_down,down_time"
+        "label,iteration,time,k,error,bytes,comm_time,bytes_down,\
+         down_time,late_responses,mean_staleness"
     );
     // Comment + header, then 5 fixed curves + adaptive, 50 points each.
     assert_eq!(body.lines().count(), 2 + 6 * 50);
@@ -354,6 +356,56 @@ fn train_with_coding_runs_and_records_scheme_in_the_csv_header() {
     let body = std::fs::read_to_string(&csv).unwrap();
     // The run-header comment records the coding scheme and r.
     assert!(body.contains("# coding: scheme=frc r=2"), "{body}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_record_analyze_dump_replay_round_trip() {
+    // The full observability loop through the binary: record a traced
+    // run from the committed smoke config (--trace overrides its
+    // `[trace] dir` so nothing lands in the repo), analyze and dump the
+    // file, then replay it — `trace replay` exits non-zero unless every
+    // replayed sample is bitwise-identical to the recording.
+    let dir = std::env::temp_dir().join(format!(
+        "adasgd_cli_trace_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir_s = dir.to_str().unwrap().to_string();
+    let csv = dir.join("out.csv");
+    let cfg = "examples/trace_smoke.toml";
+    let text = run_ok(&[
+        "train",
+        "--config",
+        cfg,
+        "--trace",
+        &dir_s,
+        "--quiet",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(text.contains("event trace written"), "{text}");
+    let trace_file = dir.join("trace-smoke.trace");
+    assert!(trace_file.exists(), "missing {}", trace_file.display());
+    let tf = trace_file.to_str().unwrap();
+
+    let report = run_ok(&["trace", "analyze", tf]);
+    assert!(report.contains("trace analysis: trace-smoke"), "{report}");
+    assert!(report.contains("worker utilization"), "{report}");
+    assert!(report.contains("wait decomposition"), "{report}");
+
+    let dump = run_ok(&["trace", "dump", tf, "--limit", "5"]);
+    assert!(dump.contains("trace-smoke"), "{dump}");
+
+    let replay = run_ok(&["trace", "replay", tf, "--config", cfg]);
+    assert!(replay.contains("replay OK"), "{replay}");
+
+    // A mismatched config must be rejected, not silently diverge.
+    let out = adasgd()
+        .args(["trace", "replay", tf, "--config", "examples/missing.toml"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
     std::fs::remove_dir_all(&dir).ok();
 }
 

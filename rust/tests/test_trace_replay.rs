@@ -1,0 +1,540 @@
+//! Record→replay contract of the binary event-trace subsystem.
+//!
+//! A traced run must change nothing (tracing is purely observational:
+//! same model, same clock, same recorder samples as the untraced run),
+//! and a recorded trace must be able to re-drive the engine with
+//! [`ReplayDelays`] standing in for live delay sampling — *bitwise*
+//! equal trajectories across all four gather disciplines (sync
+//! fastest-k, async staleness, coded, threaded cluster), on both the
+//! dense-free channel and priced/compressed channels. The trace also
+//! round-trips through the binary codec and mines into a
+//! [`TraceDelays`] straggler scenario that reproduces the recording.
+
+use adasgd::async_sgd::{run_async_comm_traced, AsyncConfig};
+use adasgd::coding::{run_coded_comm_traced, CyclicRepetition};
+use adasgd::comm::{
+    Broadcast, CommChannel, DownlinkMode, IngressModel, LinkModel,
+    QuantizeQsgd, TopK,
+};
+use adasgd::config::{
+    DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
+};
+use adasgd::coordinator::{replay_experiment, run_experiment};
+use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+use adasgd::grad::NativeBackend;
+use adasgd::master::{run_fastest_k_comm_traced, MasterConfig};
+use adasgd::metrics::Sample;
+use adasgd::model::LinRegProblem;
+use adasgd::policy::FixedK;
+use adasgd::straggler::{ExponentialDelays, TraceDelays};
+use adasgd::trace::{Discipline, ReplayDelays, Trace};
+
+const N: usize = 10;
+
+fn setup(seed: u64) -> (NativeBackend, LinRegProblem) {
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 200, d: 10, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    (NativeBackend::new(Shards::partition(&ds, N)), problem)
+}
+
+fn delays() -> ExponentialDelays {
+    ExponentialDelays::new(1.0)
+}
+
+type ChannelFactory = Box<dyn Fn() -> CommChannel>;
+
+/// Dense-free plus a priced/compressed configuration — channels are
+/// stateful, so every run builds a fresh one from its factory.
+fn channels() -> Vec<(&'static str, ChannelFactory)> {
+    vec![
+        ("dense-free", Box::new(|| CommChannel::dense(N))),
+        (
+            "qsgd-delta-ingress",
+            Box::new(|| {
+                CommChannel::new(
+                    Box::new(QuantizeQsgd::new(4)),
+                    LinkModel::uniform(N, 800.0, 0.01),
+                    true,
+                )
+                .with_broadcast(Broadcast::new(
+                    Box::new(TopK::new(0.5)),
+                    LinkModel::uniform(N, 400.0, 0.0),
+                    DownlinkMode::Delta,
+                ))
+                .with_ingress(IngressModel::new(500.0))
+            }),
+        ),
+    ]
+}
+
+/// The strict form of "the same trajectory": every f64 compared on its
+/// bit pattern, not through float `==`.
+fn assert_samples_bitwise(tag: &str, a: &[Sample], b: &[Sample]) {
+    assert_eq!(a.len(), b.len(), "{tag}: sample count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let same = x.iteration == y.iteration
+            && x.time.to_bits() == y.time.to_bits()
+            && x.k == y.k
+            && x.error.to_bits() == y.error.to_bits()
+            && x.bytes == y.bytes
+            && x.comm_time.to_bits() == y.comm_time.to_bits()
+            && x.bytes_down == y.bytes_down
+            && x.down_time.to_bits() == y.down_time.to_bits();
+        assert!(same, "{tag}: sample {i} differs: {x:?} vs {y:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sync fastest-k.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sync_record_replay_is_bitwise_on_dense_and_priced_channels() {
+    for (name, make_channel) in channels() {
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 120,
+            seed: 5,
+            record_stride: 20,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run = |model: &dyn adasgd::straggler::DelayModel,
+                   trace: bool| {
+            let (mut backend, problem) = setup(5);
+            let mut policy = FixedK::new(4);
+            let mut channel = make_channel();
+            run_fastest_k_comm_traced(
+                &mut backend,
+                model,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+                trace,
+            )
+        };
+        let recorded = run(&delays(), true);
+        let trace =
+            recorded.trace.as_ref().expect("traced run carries a trace");
+        assert_eq!(trace.discipline, Discipline::Sync);
+        assert_eq!(trace.n_workers as usize, N);
+        assert!(!trace.is_empty(), "{name}: trace recorded no events");
+
+        // Tracing off preserves the run byte for byte.
+        let untraced = run(&delays(), false);
+        assert!(untraced.trace.is_none());
+        assert_eq!(untraced.w, recorded.w, "{name}: tracing changed w");
+        assert_eq!(
+            untraced.total_time.to_bits(),
+            recorded.total_time.to_bits(),
+            "{name}: tracing changed the clock"
+        );
+        assert_samples_bitwise(
+            &format!("sync/{name}/traced-vs-untraced"),
+            untraced.recorder.samples(),
+            recorded.recorder.samples(),
+        );
+
+        // Replay from the recorded raw draws alone.
+        let replay = ReplayDelays::from_trace(trace).expect("replayable");
+        let replayed = run(&replay, false);
+        assert_eq!(replayed.w, recorded.w, "{name}: replayed model");
+        assert_eq!(
+            replayed.total_time.to_bits(),
+            recorded.total_time.to_bits(),
+            "{name}: replayed clock"
+        );
+        assert_eq!(
+            replayed.k_changes, recorded.k_changes,
+            "{name}: replayed k switches"
+        );
+        assert_samples_bitwise(
+            &format!("sync/{name}/replay"),
+            recorded.recorder.samples(),
+            replayed.recorder.samples(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Async staleness.
+// ---------------------------------------------------------------------
+
+#[test]
+fn async_record_replay_is_bitwise_on_dense_and_priced_channels() {
+    for (name, make_channel) in channels() {
+        let cfg = AsyncConfig {
+            eta: 0.0005,
+            max_updates: 400,
+            seed: 11,
+            record_stride: 100,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run = |model: &dyn adasgd::straggler::DelayModel,
+                   trace: bool| {
+            let (mut backend, problem) = setup(11);
+            let mut channel = make_channel();
+            run_async_comm_traced(
+                &mut backend,
+                model,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+                trace,
+            )
+        };
+        let recorded = run(&delays(), true);
+        let trace =
+            recorded.trace.as_ref().expect("traced run carries a trace");
+        assert_eq!(trace.discipline, Discipline::Async);
+
+        let untraced = run(&delays(), false);
+        assert_eq!(untraced.w, recorded.w, "{name}: tracing changed w");
+        assert_eq!(
+            untraced.total_time.to_bits(),
+            recorded.total_time.to_bits()
+        );
+
+        let replay = ReplayDelays::from_trace(trace).expect("replayable");
+        let replayed = run(&replay, false);
+        assert_eq!(replayed.w, recorded.w, "{name}: replayed model");
+        assert_eq!(
+            replayed.total_time.to_bits(),
+            recorded.total_time.to_bits(),
+            "{name}: replayed clock"
+        );
+        assert_eq!(
+            replayed.mean_staleness.to_bits(),
+            recorded.mean_staleness.to_bits(),
+            "{name}: replayed staleness"
+        );
+        assert_samples_bitwise(
+            &format!("async/{name}/replay"),
+            recorded.recorder.samples(),
+            replayed.recorder.samples(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coded gather.
+// ---------------------------------------------------------------------
+
+#[test]
+fn coded_record_replay_is_bitwise_on_dense_and_priced_channels() {
+    for (name, make_channel) in channels() {
+        let cfg = MasterConfig {
+            eta: 0.002,
+            max_iterations: 80,
+            seed: 2,
+            record_stride: 20,
+            ..Default::default()
+        };
+        let w0 = vec![0.0f32; 10];
+        let run = |model: &dyn adasgd::straggler::DelayModel,
+                   trace: bool| {
+            let (mut backend, problem) = setup(2);
+            let scheme = CyclicRepetition::new(N, 3).expect("cyclic(10,3)");
+            let mut policy = FixedK::new(8);
+            let mut channel = make_channel();
+            run_coded_comm_traced(
+                &mut backend,
+                model,
+                &scheme,
+                &mut policy,
+                &mut channel,
+                &w0,
+                &cfg,
+                &mut |w| problem.error(w),
+                trace,
+            )
+        };
+        let recorded = run(&delays(), true);
+        let trace =
+            recorded.trace.as_ref().expect("traced run carries a trace");
+        assert_eq!(trace.discipline, Discipline::Coded);
+
+        let untraced = run(&delays(), false);
+        assert_eq!(untraced.w, recorded.w, "{name}: tracing changed w");
+        assert_eq!(
+            untraced.total_time.to_bits(),
+            recorded.total_time.to_bits()
+        );
+
+        let replay = ReplayDelays::from_trace(trace).expect("replayable");
+        let replayed = run(&replay, false);
+        assert_eq!(replayed.w, recorded.w, "{name}: replayed model");
+        assert_eq!(
+            replayed.total_time.to_bits(),
+            recorded.total_time.to_bits(),
+            "{name}: replayed clock"
+        );
+        assert_samples_bitwise(
+            &format!("coded/{name}/replay"),
+            recorded.recorder.samples(),
+            replayed.recorder.samples(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threaded cluster (round-based and async modes).
+// ---------------------------------------------------------------------
+
+#[test]
+fn threaded_record_replay_is_bitwise() {
+    use adasgd::exec::{ThreadedCluster, ThreadedConfig};
+    let seed = 3u64;
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 200, d: 10, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    let cfg = ThreadedConfig {
+        eta: 0.002,
+        max_iterations: 100,
+        time_scale: 1e-6,
+        seed,
+        record_stride: 20,
+    };
+    let run = |model: &dyn adasgd::straggler::DelayModel, trace: bool| {
+        let shards = Shards::partition(&ds, N);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+        let mut policy = FixedK::new(4);
+        let mut channel = CommChannel::dense(N);
+        cluster.run_with_comm_traced(
+            model,
+            &mut channel,
+            &mut policy,
+            &vec![0.0f32; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+            trace,
+        )
+    };
+    let recorded = run(&delays(), true);
+    let trace = recorded.trace.as_ref().expect("traced run carries a trace");
+    assert_eq!(trace.discipline, Discipline::Threaded);
+
+    let untraced = run(&delays(), false);
+    assert_eq!(untraced.w, recorded.w, "tracing changed w");
+    assert_eq!(
+        untraced.virtual_time.to_bits(),
+        recorded.virtual_time.to_bits()
+    );
+
+    let replay = ReplayDelays::from_trace(trace).expect("replayable");
+    let replayed = run(&replay, false);
+    assert_eq!(replayed.w, recorded.w, "replayed model");
+    assert_eq!(
+        replayed.virtual_time.to_bits(),
+        recorded.virtual_time.to_bits(),
+        "replayed clock"
+    );
+    assert_samples_bitwise(
+        "threaded/replay",
+        recorded.recorder.samples(),
+        replayed.recorder.samples(),
+    );
+}
+
+#[test]
+fn threaded_async_record_replay_is_bitwise() {
+    use adasgd::exec::ThreadedCluster;
+    let seed = 13u64;
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 200, d: 10, ..Default::default() },
+        seed,
+    );
+    let problem = LinRegProblem::new(&ds);
+    let cfg = AsyncConfig {
+        eta: 0.0005,
+        max_updates: 300,
+        seed,
+        record_stride: 100,
+        ..Default::default()
+    };
+    let run = |model: &dyn adasgd::straggler::DelayModel, trace: bool| {
+        let shards = Shards::partition(&ds, N);
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+        let mut channel = CommChannel::dense(N);
+        cluster.run_async_comm_traced(
+            model,
+            &mut channel,
+            &vec![0.0f32; 10],
+            &cfg,
+            &mut |w| problem.error(w),
+            trace,
+        )
+    };
+    let recorded = run(&delays(), true);
+    let trace = recorded.trace.as_ref().expect("traced run carries a trace");
+    assert_eq!(trace.discipline, Discipline::ThreadedAsync);
+
+    let replay = ReplayDelays::from_trace(trace).expect("replayable");
+    let replayed = run(&replay, false);
+    assert_eq!(replayed.w, recorded.w, "replayed model");
+    assert_eq!(
+        replayed.virtual_time.to_bits(),
+        recorded.virtual_time.to_bits(),
+        "replayed clock"
+    );
+    assert_samples_bitwise(
+        "threaded-async/replay",
+        recorded.recorder.samples(),
+        replayed.recorder.samples(),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Codec round trip + trace mining.
+// ---------------------------------------------------------------------
+
+/// A short recorded sync trace fixture on the dense channel.
+fn recorded_sync() -> (adasgd::master::FastestKRun, Trace) {
+    let cfg = MasterConfig {
+        eta: 0.002,
+        max_iterations: 60,
+        seed: 7,
+        record_stride: 20,
+        ..Default::default()
+    };
+    let (mut backend, problem) = setup(7);
+    let mut policy = FixedK::new(4);
+    let mut channel = CommChannel::dense(N);
+    let run = run_fastest_k_comm_traced(
+        &mut backend,
+        &delays(),
+        &mut policy,
+        &mut channel,
+        &vec![0.0f32; 10],
+        &cfg,
+        &mut |w| problem.error(w),
+        true,
+    );
+    let trace = run.trace.clone().expect("traced run carries a trace");
+    (run, trace)
+}
+
+#[test]
+fn trace_survives_the_binary_codec_and_the_filesystem() {
+    let (_, trace) = recorded_sync();
+    let decoded =
+        Trace::from_bytes(&trace.to_bytes()).expect("codec round trip");
+    assert_eq!(decoded, trace, "in-memory codec round trip");
+
+    let dir = std::env::temp_dir()
+        .join(format!("adasgd-trace-test-{}", std::process::id()));
+    let path = dir.join("roundtrip.trace");
+    trace.save(&path).expect("save");
+    let loaded = Trace::load(&path).expect("load");
+    assert_eq!(loaded, trace, "filesystem round trip");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mined_event_trace_reproduces_the_recorded_run() {
+    // Every sync round draws all n workers, so the mined table covers
+    // the full run and replaying it through the *straggler* layer (not
+    // ReplayDelays) reproduces the same trajectory bitwise.
+    let (recorded, trace) = recorded_sync();
+    let mined = TraceDelays::from_event_trace(&trace).expect("minable");
+    assert_eq!(mined.len() as u64, recorded.iterations);
+    assert_eq!(mined.workers(), N);
+
+    let cfg = MasterConfig {
+        eta: 0.002,
+        max_iterations: 60,
+        seed: 7,
+        record_stride: 20,
+        ..Default::default()
+    };
+    let (mut backend, problem) = setup(7);
+    let mut policy = FixedK::new(4);
+    let mut channel = CommChannel::dense(N);
+    let replayed = run_fastest_k_comm_traced(
+        &mut backend,
+        &mined,
+        &mut policy,
+        &mut channel,
+        &vec![0.0f32; 10],
+        &cfg,
+        &mut |w| problem.error(w),
+        false,
+    );
+    assert_eq!(replayed.w, recorded.w, "mined-replay model");
+    assert_eq!(
+        replayed.total_time.to_bits(),
+        recorded.total_time.to_bits(),
+        "mined-replay clock"
+    );
+    assert_samples_bitwise(
+        "mined-replay",
+        recorded.recorder.samples(),
+        replayed.recorder.samples(),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Coordinator end-to-end: per-spec trace file + replay_experiment.
+// ---------------------------------------------------------------------
+
+#[test]
+fn run_experiment_writes_a_trace_file_that_replay_experiment_reproduces() {
+    let dir = std::env::temp_dir()
+        .join(format!("adasgd-trace-e2e-{}", std::process::id()));
+    let cfg = ExperimentConfig {
+        label: "trace e2e/cell#1".into(),
+        n: N,
+        eta: 0.002,
+        max_iterations: 80,
+        max_time: 0.0,
+        seed: 4,
+        record_stride: 20,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 4 },
+        workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        comm: Default::default(),
+        coding: None,
+        jobs: 0,
+        trace: Some(dir.display().to_string()),
+    };
+    let recorded = run_experiment(&cfg).expect("traced run");
+    let in_memory =
+        recorded.trace.as_ref().expect("output keeps the trace");
+
+    // The file is named from the sanitized label.
+    let path = dir.join(format!(
+        "{}.trace",
+        adasgd::trace::sanitize_label(&cfg.label)
+    ));
+    assert!(path.exists(), "expected trace file at {}", path.display());
+    let loaded = Trace::load(&path).expect("load recorded trace");
+    assert_eq!(&loaded, in_memory, "saved trace round-trips");
+
+    // Replay re-drives the coordinator path from the file alone; the
+    // replayed run must match the recording bitwise (and record no
+    // trace of its own).
+    let replayed = replay_experiment(&cfg, &loaded).expect("replay");
+    assert!(replayed.trace.is_none());
+    assert_eq!(
+        replayed.total_time.to_bits(),
+        recorded.total_time.to_bits(),
+        "replayed clock"
+    );
+    assert_eq!(replayed.steps, recorded.steps);
+    assert_eq!(replayed.late_responses, recorded.late_responses);
+    assert_samples_bitwise(
+        "coordinator-replay",
+        recorded.recorder.samples(),
+        replayed.recorder.samples(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
