@@ -1,0 +1,269 @@
+//! L001 — the architecture layering rule.
+//!
+//! The crate's dependency direction is enforced here as an explicit
+//! allowlist over **live** `use crate::<module>` declarations (test
+//! regions are exempt: tests may reach across layers to set up
+//! scenarios). The table is the architecture document — changing a
+//! layer boundary means editing [`ALLOWED_IMPORTS`] deliberately, in
+//! the same commit as the import it legalises.
+//!
+//! Two global guards apply on top of the table: no library module may
+//! import `crate::cli` (the CLI sits above everything) or
+//! `crate::analysis` (the linter must not leak into the product).
+
+use super::report::Finding;
+use super::source::SourceFile;
+use crate::analysis::lexer::TokenKind;
+
+/// Allowed `use crate::X` targets per top-level module. Modules not
+/// listed (`lib`, `main`, `config`, `coordinator`, `sweep`,
+/// `bench_harness`, `analysis`) are orchestration layers and may
+/// import anything except the global-guard targets.
+///
+/// Leaf modules (`rng`, `linalg`, `sim`, `metrics`, `cli`) import
+/// nothing from the crate, which is what keeps the engine embeddable.
+pub const ALLOWED_IMPORTS: &[(&str, &[&str])] = &[
+    ("rng", &[]),
+    ("linalg", &[]),
+    ("sim", &[]),
+    ("metrics", &[]),
+    ("cli", &[]),
+    ("proptest_lite", &["rng"]),
+    ("stats", &["rng", "straggler"]),
+    ("straggler", &["rng"]),
+    ("data", &["linalg", "rng"]),
+    ("model", &["data", "linalg"]),
+    ("grad", &["data", "linalg", "model", "runtime"]),
+    ("theory", &["stats"]),
+    ("policy", &["stats", "theory"]),
+    ("comm", &["rng", "straggler"]),
+    ("trace", &["metrics", "rng", "straggler"]),
+    (
+        "coding",
+        &[
+            "comm", "data", "engine", "grad", "linalg", "master",
+            "metrics", "model", "policy", "rng", "straggler", "trace",
+        ],
+    ),
+    (
+        "engine",
+        &[
+            "coding", "comm", "data", "grad", "linalg", "master",
+            "metrics", "model", "policy", "rng", "sim", "straggler",
+            "trace",
+        ],
+    ),
+    (
+        "master",
+        &[
+            "comm", "data", "engine", "grad", "metrics", "model",
+            "policy", "straggler", "trace",
+        ],
+    ),
+    (
+        "async_sgd",
+        &[
+            "comm", "data", "engine", "grad", "metrics", "model",
+            "sim", "straggler", "trace",
+        ],
+    ),
+    (
+        "exec",
+        &[
+            "async_sgd", "comm", "data", "engine", "grad", "linalg",
+            "master", "metrics", "model", "policy", "sim",
+            "straggler", "trace",
+        ],
+    ),
+    ("transformer", &["data", "grad", "linalg", "rng", "runtime"]),
+    ("runtime", &["config", "data", "grad", "linalg"]),
+];
+
+/// Crate modules no library module may import, table or not.
+const GLOBAL_FORBIDDEN: &[&str] = &["cli", "analysis"];
+
+/// Check live `use crate::X` declarations in `sf` (top-level module
+/// `top`) against [`ALLOWED_IMPORTS`] and the global guards.
+pub(super) fn l001(sf: &SourceFile, top: &str, out: &mut Vec<Finding>) {
+    let allowed = ALLOWED_IMPORTS
+        .iter()
+        .find(|(m, _)| *m == top)
+        .map(|(_, list)| *list);
+    for (line, target) in live_crate_imports(sf) {
+        if target == top {
+            continue;
+        }
+        let globally_forbidden = top != "main"
+            && top != "analysis"
+            && GLOBAL_FORBIDDEN.contains(&target.as_str());
+        let table_violation = match allowed {
+            Some(list) => !list.contains(&target.as_str()),
+            None => false,
+        };
+        if !(globally_forbidden || table_violation) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "L001",
+            file: sf.rel.clone(),
+            line,
+            message: format!(
+                "layering: `{top}` must not import `crate::{target}`"
+            ),
+            hint: "the dependency table is \
+                   analysis/layering.rs::ALLOWED_IMPORTS; move shared \
+                   code down a layer or change the table in the same \
+                   commit, deliberately"
+                .to_string(),
+            suppressed: false,
+        });
+    }
+}
+
+/// Extract `(line, first_path_segment)` for every live (non-test)
+/// `use crate::X...` declaration, including grouped forms like
+/// `use crate::{a::B, c::D};` (which yields `a` and `c`).
+fn live_crate_imports(sf: &SourceFile) -> Vec<(u32, String)> {
+    let toks = &sf.tokens;
+    let mut out = Vec::new();
+    let ident = |i: usize, s: &str| {
+        toks.get(i)
+            .map(|t| t.kind == TokenKind::Ident && t.text == s)
+            .unwrap_or(false)
+    };
+    let punct = |i: usize, s: &str| {
+        toks.get(i)
+            .map(|t| t.kind == TokenKind::Punct && t.text == s)
+            .unwrap_or(false)
+    };
+    for i in 0..toks.len() {
+        if !(ident(i, "use")
+            && ident(i + 1, "crate")
+            && punct(i + 2, ":")
+            && punct(i + 3, ":"))
+        {
+            continue;
+        }
+        let line = toks[i].line;
+        if sf.is_test_line(line) {
+            continue;
+        }
+        let first = i + 4;
+        if let Some(t) = toks.get(first) {
+            if t.kind == TokenKind::Ident {
+                out.push((line, t.text.clone()));
+                continue;
+            }
+        }
+        if punct(first, "{") {
+            // Grouped import: take the leading ident of each
+            // depth-1 comma-separated path.
+            let mut depth = 1usize;
+            let mut j = first + 1;
+            let mut at_path_start = true;
+            while j < toks.len() && depth > 0 {
+                let t = &toks[j];
+                if t.kind == TokenKind::Punct {
+                    match t.text.as_str() {
+                        "{" => depth += 1,
+                        "}" => depth -= 1,
+                        "," if depth == 1 => at_path_start = true,
+                        _ => {}
+                    }
+                } else if t.kind == TokenKind::Ident && at_path_start {
+                    out.push((t.line, t.text.clone()));
+                    at_path_start = false;
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn imports(src: &str) -> Vec<String> {
+        let sf = SourceFile::parse("rust/src/x/mod.rs", src).unwrap();
+        live_crate_imports(&sf).into_iter().map(|(_, m)| m).collect()
+    }
+
+    fn check(rel: &str, top: &str, src: &str) -> Vec<Finding> {
+        let sf = SourceFile::parse(rel, src).unwrap();
+        let mut out = Vec::new();
+        l001(&sf, top, &mut out);
+        out
+    }
+
+    #[test]
+    fn extracts_plain_and_grouped_imports() {
+        let src = "\
+use crate::rng::Pcg64;
+use crate::{data::DataSet, model::Model};
+use std::collections::BTreeMap;
+";
+        assert_eq!(imports(src), ["rng", "data", "model"]);
+    }
+
+    #[test]
+    fn test_region_imports_are_exempt() {
+        let src = "\
+use crate::rng::Pcg64;
+
+#[cfg(test)]
+mod tests {
+    use crate::sweep::derive_seed;
+}
+";
+        assert_eq!(imports(src), ["rng"]);
+    }
+
+    #[test]
+    fn table_violation_fires() {
+        let src = "use crate::sweep::derive_seed;\n";
+        let fs = check("rust/src/engine/mod.rs", "engine", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "L001");
+        assert!(fs[0].message.contains("crate::sweep"));
+    }
+
+    #[test]
+    fn allowed_import_is_clean() {
+        let src = "use crate::comm::CommStream;\n";
+        assert!(check("rust/src/engine/mod.rs", "engine", src)
+            .is_empty());
+    }
+
+    #[test]
+    fn unlisted_module_is_unconstrained_except_globals() {
+        let src = "use crate::engine::EngineCore;\n";
+        assert!(check("rust/src/sweep/mod.rs", "sweep", src)
+            .is_empty());
+        let bad = "use crate::analysis::LintReport;\n";
+        assert_eq!(check("rust/src/sweep/mod.rs", "sweep", bad).len(), 1);
+        let cli = "use crate::cli::Args;\n";
+        assert_eq!(
+            check("rust/src/engine/mod.rs", "engine", cli).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn leaf_modules_import_nothing() {
+        let src = "use crate::stats::RunningStats;\n";
+        assert_eq!(check("rust/src/rng/mod.rs", "rng", src).len(), 1);
+    }
+
+    #[test]
+    fn table_has_no_duplicate_modules_and_is_sorted_within() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (m, list) in ALLOWED_IMPORTS {
+            assert!(seen.insert(*m), "duplicate table entry {m}");
+            let mut sorted = list.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(&sorted, list, "unsorted allowlist for {m}");
+        }
+    }
+}

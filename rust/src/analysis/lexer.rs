@@ -1,0 +1,716 @@
+//! A lightweight Rust lexer for the in-repo lint pass.
+//!
+//! Not a full parser: `detlint` rules are token-sequence patterns, so
+//! all the lexer must get *exactly* right is what is and is not a
+//! token — comments (line, block, nested block), string literals
+//! (plain, raw `r#"..."#` with any hash count, byte), char literals vs
+//! lifetimes, and numeric literals — each carrying the 1-based source
+//! line so findings are clickable `file:line` spans. `//` comments are
+//! kept (not tokenized) because suppression pragmas live in them.
+
+/// Kind of a lexical token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (the rules match on the text).
+    Ident,
+    /// Integer literal, including hex/octal/binary and suffixed forms.
+    IntLit,
+    /// Float literal (`1.0`, `5e-4`, `2.5f64`).
+    FloatLit,
+    /// String literal; `text` holds the *cooked* value (escapes
+    /// processed, `\`-newline continuations joined) so schema checks
+    /// compare real values, not source spelling.
+    StrLit,
+    /// Character or byte literal.
+    CharLit,
+    /// Lifetime (`'a`, `'static`), without the leading quote.
+    Lifetime,
+    /// Any other single character (`(`, `:`, `!`, ...).
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    /// What kind of token this is.
+    pub kind: TokenKind,
+    /// Token text (cooked value for [`TokenKind::StrLit`]).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+/// One `//` comment (suppression pragmas are only recognized here).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LineComment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// Text after the `//` (includes any further `/` of `///`).
+    pub text: String,
+    /// True when code tokens precede the comment on its line (a
+    /// trailing comment).
+    pub trailing: bool,
+}
+
+/// Lexer failure: an unterminated string, char, or block comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexError {
+    /// 1-based line where the offending construct started.
+    pub line: u32,
+    /// What went wrong.
+    pub message: String,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+/// Lexer output: the token stream plus every `//` comment.
+#[derive(Debug, Clone, Default)]
+pub struct Lexed {
+    /// Tokens in source order.
+    pub tokens: Vec<Token>,
+    /// `//` comments in source order.
+    pub comments: Vec<LineComment>,
+}
+
+/// Lex one source file.
+pub fn lex(src: &str) -> Result<Lexed, LexError> {
+    let mut lx = Lexer {
+        chars: src.chars().collect(),
+        pos: 0,
+        line: 1,
+        line_had_token: false,
+        out: Lexed::default(),
+    };
+    lx.run()?;
+    Ok(lx.out)
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    line_had_token: bool,
+    out: Lexed,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+impl Lexer {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<char> {
+        self.chars.get(self.pos + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.line_had_token = false;
+        }
+        Some(c)
+    }
+
+    fn push(&mut self, kind: TokenKind, text: String, line: u32) {
+        self.line_had_token = true;
+        self.out.tokens.push(Token { kind, text, line });
+    }
+
+    fn err(&self, line: u32, message: &str) -> LexError {
+        LexError { line, message: message.to_string() }
+    }
+
+    fn run(&mut self) -> Result<(), LexError> {
+        while let Some(c) = self.peek() {
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek_at(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek_at(1) == Some('*') {
+                self.block_comment()?;
+            } else if c == '"' {
+                self.cooked_string()?;
+            } else if (c == 'r' || c == 'b') && self.string_prefix()? {
+                // raw string / byte string / raw identifier consumed
+            } else if c == '\'' {
+                self.char_or_lifetime()?;
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if is_ident_start(c) {
+                self.ident();
+            } else {
+                let line = self.line;
+                self.bump();
+                self.push(TokenKind::Punct, c.to_string(), line);
+            }
+        }
+        Ok(())
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let trailing = self.line_had_token;
+        self.bump();
+        self.bump(); // the two slashes
+        let mut text = String::new();
+        while let Some(c) = self.peek() {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(LineComment { line, text, trailing });
+    }
+
+    fn block_comment(&mut self) -> Result<(), LexError> {
+        let start = self.line;
+        self.bump();
+        self.bump(); // "/*"
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(), self.peek_at(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => {
+                    return Err(self
+                        .err(start, "unterminated block comment"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A plain `"..."` string with escape cooking (handles `\"`, the
+    /// standard named escapes, `\xNN`, `\u{...}`, and `\`-newline
+    /// continuation, which joins lines and strips leading whitespace).
+    fn cooked_string(&mut self) -> Result<(), LexError> {
+        let start = self.line;
+        self.bump(); // opening quote
+        let mut text = String::new();
+        loop {
+            match self.bump() {
+                None => {
+                    return Err(
+                        self.err(start, "unterminated string literal")
+                    )
+                }
+                Some('"') => break,
+                Some('\\') => match self.bump() {
+                    None => {
+                        return Err(self
+                            .err(start, "unterminated string escape"))
+                    }
+                    Some('n') => text.push('\n'),
+                    Some('r') => text.push('\r'),
+                    Some('t') => text.push('\t'),
+                    Some('0') => text.push('\0'),
+                    Some('x') => {
+                        let mut v = 0u32;
+                        for _ in 0..2 {
+                            if let Some(d) =
+                                self.peek().and_then(|c| c.to_digit(16))
+                            {
+                                v = v * 16 + d;
+                                self.bump();
+                            }
+                        }
+                        if let Some(c) = char::from_u32(v) {
+                            text.push(c);
+                        }
+                    }
+                    Some('u') => {
+                        // \u{XXXX}
+                        if self.peek() == Some('{') {
+                            self.bump();
+                            let mut v = 0u32;
+                            while let Some(d) =
+                                self.peek().and_then(|c| c.to_digit(16))
+                            {
+                                v = v * 16 + d;
+                                self.bump();
+                            }
+                            if self.peek() == Some('}') {
+                                self.bump();
+                            }
+                            if let Some(c) = char::from_u32(v) {
+                                text.push(c);
+                            }
+                        }
+                    }
+                    Some('\n') => {
+                        // Line continuation: skip the indentation of
+                        // the next line (Rust's behaviour).
+                        while matches!(
+                            self.peek(),
+                            Some(' ') | Some('\t') | Some('\r')
+                                | Some('\n')
+                        ) {
+                            self.bump();
+                        }
+                    }
+                    Some(other) => text.push(other),
+                },
+                Some(c) => text.push(c),
+            }
+        }
+        self.push(TokenKind::StrLit, text, start);
+        Ok(())
+    }
+
+    /// Handle `r"..."` / `r#"..."#` raw strings, `b"..."` byte
+    /// strings, `b'x'` byte chars, `br#"..."#`, and `r#ident` raw
+    /// identifiers. Returns false when the `r`/`b` is just the start
+    /// of a plain identifier.
+    fn string_prefix(&mut self) -> Result<bool, LexError> {
+        let c = self.peek().unwrap();
+        if c == 'r' {
+            match self.peek_at(1) {
+                Some('"') => {
+                    self.bump(); // r
+                    self.raw_string()?;
+                    return Ok(true);
+                }
+                Some('#') => {
+                    // Count hashes; a quote after them means a raw
+                    // string, an identifier char means `r#ident`.
+                    let mut n = 1;
+                    while self.peek_at(1 + n) == Some('#') {
+                        n += 1;
+                    }
+                    if self.peek_at(1 + n) == Some('"') {
+                        self.bump(); // r
+                        self.raw_string()?;
+                        return Ok(true);
+                    }
+                    if n == 1
+                        && self
+                            .peek_at(2)
+                            .map(is_ident_start)
+                            .unwrap_or(false)
+                    {
+                        self.bump();
+                        self.bump(); // r#
+                        self.ident();
+                        return Ok(true);
+                    }
+                    return Ok(false);
+                }
+                _ => return Ok(false),
+            }
+        }
+        // c == 'b'
+        match self.peek_at(1) {
+            Some('"') => {
+                self.bump(); // b
+                self.cooked_string()?;
+                Ok(true)
+            }
+            Some('\'') => {
+                self.bump(); // b
+                self.char_or_lifetime()?;
+                Ok(true)
+            }
+            Some('r')
+                if matches!(
+                    self.peek_at(2),
+                    Some('"') | Some('#')
+                ) =>
+            {
+                self.bump();
+                self.bump(); // br
+                self.raw_string()?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// At the `#`s or `"` of a raw string (the `r`/`br` prefix is
+    /// already consumed).
+    fn raw_string(&mut self) -> Result<(), LexError> {
+        let start = self.line;
+        let mut hashes = 0usize;
+        while self.peek() == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek() != Some('"') {
+            return Err(self.err(start, "malformed raw string start"));
+        }
+        self.bump();
+        let mut text = String::new();
+        'scan: loop {
+            match self.bump() {
+                None => {
+                    return Err(self
+                        .err(start, "unterminated raw string literal"))
+                }
+                Some('"') => {
+                    let mut ok = true;
+                    for i in 0..hashes {
+                        if self.peek_at(i) != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        for _ in 0..hashes {
+                            self.bump();
+                        }
+                        break 'scan;
+                    }
+                    text.push('"');
+                }
+                Some(c) => text.push(c),
+            }
+        }
+        self.push(TokenKind::StrLit, text, start);
+        Ok(())
+    }
+
+    /// Disambiguate `'a'` (char literal) from `'a` (lifetime).
+    fn char_or_lifetime(&mut self) -> Result<(), LexError> {
+        let start = self.line;
+        self.bump(); // opening quote
+        match self.peek() {
+            None => Err(self.err(start, "unterminated char literal")),
+            Some('\\') => {
+                // Escaped char literal: consume the escape then the
+                // closing quote.
+                self.bump();
+                let esc = self
+                    .bump()
+                    .ok_or_else(|| {
+                        self.err(start, "unterminated char escape")
+                    })?;
+                let mut text = String::from(esc);
+                if esc == 'x' || esc == 'u' {
+                    while let Some(c) = self.peek() {
+                        if c == '\'' {
+                            break;
+                        }
+                        text.push(c);
+                        self.bump();
+                    }
+                }
+                if self.peek() == Some('\'') {
+                    self.bump();
+                    self.push(TokenKind::CharLit, text, start);
+                    Ok(())
+                } else {
+                    Err(self.err(start, "unterminated char literal"))
+                }
+            }
+            Some(c) if is_ident_start(c) => {
+                // Could be 'x' (char) or 'lifetime. Scan the ident
+                // run; a closing quote right after it means char.
+                let mut n = 0;
+                while self
+                    .peek_at(n)
+                    .map(is_ident_continue)
+                    .unwrap_or(false)
+                {
+                    n += 1;
+                }
+                if self.peek_at(n) == Some('\'') {
+                    let mut text = String::new();
+                    for _ in 0..n {
+                        text.push(self.bump().unwrap());
+                    }
+                    self.bump(); // closing quote
+                    self.push(TokenKind::CharLit, text, start);
+                } else {
+                    let mut text = String::new();
+                    for _ in 0..n {
+                        text.push(self.bump().unwrap());
+                    }
+                    self.push(TokenKind::Lifetime, text, start);
+                }
+                Ok(())
+            }
+            Some(c) => {
+                // Punctuation char literal like '(' or ' '.
+                self.bump();
+                if self.peek() == Some('\'') {
+                    self.bump();
+                    self.push(
+                        TokenKind::CharLit,
+                        c.to_string(),
+                        start,
+                    );
+                    Ok(())
+                } else {
+                    Err(self.err(start, "unterminated char literal"))
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) {
+        let start = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek() {
+            if is_ident_continue(c) {
+                text.push(c);
+                self.bump();
+            } else if (c == '+' || c == '-')
+                && matches!(
+                    text.chars().last(),
+                    Some('e') | Some('E')
+                )
+                && !text.starts_with("0x")
+                && !text.starts_with("0X")
+                && self
+                    .peek_at(1)
+                    .map(|d| d.is_ascii_digit())
+                    .unwrap_or(false)
+            {
+                text.push(c);
+                self.bump();
+            } else if c == '.'
+                && !text.contains('.')
+                && self
+                    .peek_at(1)
+                    .map(|d| d.is_ascii_digit())
+                    .unwrap_or(false)
+            {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let radix_prefixed = text.starts_with("0x")
+            || text.starts_with("0X")
+            || text.starts_with("0b")
+            || text.starts_with("0o");
+        let is_float = !radix_prefixed
+            && (text.contains('.')
+                || text.contains('e')
+                || text.contains('E')
+                || text.ends_with("f32")
+                || text.ends_with("f64"));
+        let kind =
+            if is_float { TokenKind::FloatLit } else { TokenKind::IntLit };
+        self.push(kind, text, start);
+    }
+
+    fn ident(&mut self) {
+        let start = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek() {
+            if is_ident_continue(c) {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokenKind::Ident, text, start);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src)
+            .unwrap()
+            .tokens
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let toks = kinds("let x = a.partial_cmp(b);");
+        assert_eq!(toks[0], (TokenKind::Ident, "let".into()));
+        assert_eq!(toks[1], (TokenKind::Ident, "x".into()));
+        assert_eq!(toks[2], (TokenKind::Punct, "=".into()));
+        assert!(toks
+            .iter()
+            .any(|t| t == &(TokenKind::Ident, "partial_cmp".into())));
+    }
+
+    #[test]
+    fn numeric_literal_kinds() {
+        // 0xC0DE contains an `E` but is an integer; f-suffixes float.
+        let toks = kinds("0xC0DE 42 1_000u64 1.5 5e-4 2f64 0b1010");
+        let want = [
+            TokenKind::IntLit,
+            TokenKind::IntLit,
+            TokenKind::IntLit,
+            TokenKind::FloatLit,
+            TokenKind::FloatLit,
+            TokenKind::FloatLit,
+            TokenKind::IntLit,
+        ];
+        let got: Vec<TokenKind> =
+            toks.iter().map(|(k, _)| *k).collect();
+        assert_eq!(got, want, "{toks:?}");
+    }
+
+    #[test]
+    fn range_dots_are_not_float_parts() {
+        let toks = kinds("for i in 0..n {}");
+        assert!(toks.contains(&(TokenKind::IntLit, "0".into())));
+        assert!(toks.contains(&(TokenKind::Punct, ".".into())));
+        assert!(toks.contains(&(TokenKind::Ident, "n".into())));
+    }
+
+    #[test]
+    fn slashes_inside_string_literals_are_not_comments() {
+        let out = lex("let url = \"http://example.com // not a comment\"; x")
+            .unwrap();
+        assert!(out.comments.is_empty());
+        assert!(out
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::StrLit
+                && t.text.contains("// not a comment")));
+        assert!(out
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Ident && t.text == "x"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let out =
+            lex("a /* outer /* inner */ still comment */ b").unwrap();
+        let idents: Vec<&str> = out
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["a", "b"]);
+        assert!(lex("/* unterminated /* nested */").is_err());
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let out = lex(r###"let s = r#"quote " and // slash"# ; y"###)
+            .unwrap();
+        assert!(out.comments.is_empty());
+        let s = out
+            .tokens
+            .iter()
+            .find(|t| t.kind == TokenKind::StrLit)
+            .unwrap();
+        assert_eq!(s.text, "quote \" and // slash");
+        assert!(out
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Ident && t.text == "y"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let toks = kinds("'a' 'x 'static '\\n' ' ' b'z' '_'");
+        assert_eq!(
+            toks,
+            vec![
+                (TokenKind::CharLit, "a".into()),
+                (TokenKind::Lifetime, "x".into()),
+                (TokenKind::Lifetime, "static".into()),
+                (TokenKind::CharLit, "n".into()),
+                (TokenKind::CharLit, " ".into()),
+                (TokenKind::CharLit, "z".into()),
+                (TokenKind::CharLit, "_".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn string_escape_cooking_and_continuation() {
+        let src = "let s = \"ab\\\n      cd,\\\"q\\\"\";";
+        let out = lex(src).unwrap();
+        let s = out
+            .tokens
+            .iter()
+            .find(|t| t.kind == TokenKind::StrLit)
+            .unwrap();
+        // The backslash-newline joins the halves and strips the
+        // second line's indentation, exactly like rustc.
+        assert_eq!(s.text, "abcd,\"q\"");
+    }
+
+    #[test]
+    fn comments_record_line_and_trailing() {
+        let src = "let a = 1; // trailing note\n// own line\nlet b = 2;";
+        let out = lex(src).unwrap();
+        assert_eq!(out.comments.len(), 2);
+        assert_eq!(out.comments[0].line, 1);
+        assert!(out.comments[0].trailing);
+        assert_eq!(out.comments[1].line, 2);
+        assert!(!out.comments[1].trailing);
+        assert_eq!(out.comments[1].text.trim(), "own line");
+    }
+
+    #[test]
+    fn lines_are_tracked_across_multiline_tokens() {
+        let src = "a\n/* two\nlines */\nb \"x\ny\" c";
+        let out = lex(src).unwrap();
+        let b = out
+            .tokens
+            .iter()
+            .find(|t| t.text == "b")
+            .unwrap();
+        assert_eq!(b.line, 4);
+        let c = out
+            .tokens
+            .iter()
+            .find(|t| t.text == "c")
+            .unwrap();
+        assert_eq!(c.line, 5);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let toks = kinds("r#fn r#type normal");
+        assert_eq!(
+            toks,
+            vec![
+                (TokenKind::Ident, "fn".into()),
+                (TokenKind::Ident, "type".into()),
+                (TokenKind::Ident, "normal".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn unterminated_string_is_an_error() {
+        let err = lex("let s = \"no end").unwrap_err();
+        assert!(err.message.contains("unterminated"), "{err}");
+    }
+}

@@ -1,0 +1,214 @@
+//! `detlint` — the in-repo determinism & layering static-analysis
+//! pass (`adasgd lint`).
+//!
+//! The repo's core promise is bitwise determinism: `--jobs 1` ≡
+//! `--jobs N`, simulator ≡ threaded executor, record ≡ replay. Those
+//! guarantees are protected by equivalence tests, but the failure
+//! modes that break them (a hash-ordered traversal, a wall-clock
+//! read, a hard-coded seed) are easy to introduce far from any test.
+//! This module scans the source itself, so the hazard is caught at
+//! the line that introduces it, in CI, with a fix hint.
+//!
+//! # Rules
+//!
+//! | id | forbids |
+//! |------|---------|
+//! | D001 | `partial_cmp(..).unwrap()`/`.expect()` float ordering |
+//! | D002 | `HashMap`/`HashSet` in deterministic modules |
+//! | D003 | wall-clock reads outside `bench_harness` |
+//! | D004 | literal-seeded RNG construction |
+//! | D005 | `println!`/`eprintln!` in library modules |
+//! | L001 | `use crate::X` edges outside the layering table |
+//! | S001 | CSV / trace schema drift between writer and reader |
+//!
+//! `E001` is reserved for files the [`lexer`] cannot process.
+//!
+//! # Suppression
+//!
+//! A finding is silenced only by an explicit inline pragma on the
+//! same line or the line above:
+//!
+//! ```text
+//! // wall clock feeds the reported stat only. detlint: allow(D003)
+//! let start = Instant::now();
+//! ```
+//!
+//! Suppressed findings are still reported and counted — the pragma
+//! makes the exception visible; it cannot hide the site.
+//!
+//! # Scan scope
+//!
+//! [`lint_root`] walks `rust/src`, `rust/tests`, `benches`, and
+//! `examples` under the repo root, in sorted order, skipping
+//! `lint_fixtures` (intentionally-bad test inputs), `vendor`,
+//! `target`, and `.git`. The analyzer is std-only and never imported
+//! by library modules (L001 enforces that direction).
+
+pub mod lexer;
+mod layering;
+mod report;
+mod rules;
+mod schema;
+mod source;
+
+pub use layering::ALLOWED_IMPORTS;
+pub use report::{Finding, LintReport, RuleInfo, RULES};
+pub use rules::{check_file, top_module, DET_MODULES};
+pub use schema::CSV_SCHEMA_VERSIONS;
+pub use source::SourceFile;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Directories the walker never descends into.
+const SKIP_DIRS: &[&str] = &["lint_fixtures", "vendor", "target", ".git"];
+
+/// Directories scanned, relative to the repo root.
+const SCAN_ROOTS: &[&str] =
+    &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Lint every `.rs` file under `root`'s scan roots.
+pub fn lint_root(root: &Path) -> std::io::Result<LintReport> {
+    let mut files = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut sources = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path)?;
+        sources.push((rel, text));
+    }
+    Ok(lint_sources(&sources))
+}
+
+/// Lint an in-memory workspace of `(repo-relative path, text)` pairs.
+/// This is the whole pipeline behind [`lint_root`]; tests feed it
+/// fixture files directly.
+pub fn lint_sources(sources: &[(String, String)]) -> LintReport {
+    let mut findings = Vec::new();
+    let mut workspace: BTreeMap<String, SourceFile> = BTreeMap::new();
+    for (rel, text) in sources {
+        match SourceFile::parse(rel, text) {
+            Ok(sf) => {
+                findings.extend(rules::check_file(&sf));
+                workspace.insert(sf.rel.clone(), sf);
+            }
+            Err(e) => findings.push(Finding {
+                rule: "E001",
+                file: rel.replace('\\', "/"),
+                line: e.line,
+                message: format!("lexer error: {e}"),
+                hint: "fix the source (or the lexer, if the syntax \
+                       is legal Rust it mishandles)"
+                    .to_string(),
+                suppressed: false,
+            }),
+        }
+    }
+    let mut cross = Vec::new();
+    schema::s001(&workspace, &mut cross);
+    for f in &mut cross {
+        if let Some(sf) = workspace.get(&f.file) {
+            if sf.allowed(f.rule, f.line) {
+                f.suppressed = true;
+            }
+        }
+    }
+    findings.extend(cross);
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    LintReport { findings, files_scanned: sources.len() }
+}
+
+fn collect_rs_files(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_ref()) {
+                collect_rs_files(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(rel: &str, text: &str) -> (String, String) {
+        (rel.to_string(), text.to_string())
+    }
+
+    #[test]
+    fn lint_sources_runs_per_file_and_cross_file_rules() {
+        let report = lint_sources(&[
+            src(
+                "rust/src/engine/x.rs",
+                "use std::collections::HashMap;\n",
+            ),
+            src(
+                "rust/src/metrics/csv.rs",
+                "pub const CSV_COLUMNS: &str = \"label\";\n\
+                 fn w() { let _ = \"# adasgd run series v4\"; }\n",
+            ),
+        ]);
+        assert_eq!(report.files_scanned, 2);
+        let rules: Vec<&str> =
+            report.findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"D002"));
+        assert!(rules.contains(&"S001"));
+    }
+
+    #[test]
+    fn unlexable_file_reports_e001() {
+        let report = lint_sources(&[src(
+            "rust/src/stats/x.rs",
+            "fn f() { let s = \"unterminated; }\n",
+        )]);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "E001");
+        assert_eq!(report.active_count(), 1);
+    }
+
+    #[test]
+    fn findings_are_sorted_by_file_then_line() {
+        let report = lint_sources(&[
+            src(
+                "rust/src/trace/z.rs",
+                "use std::collections::HashSet;\n",
+            ),
+            src(
+                "rust/src/engine/a.rs",
+                "fn f() { println!(\"x\"); }\n\
+                 use std::collections::HashMap;\n",
+            ),
+        ]);
+        let keys: Vec<(&str, u32)> = report
+            .findings
+            .iter()
+            .map(|f| (f.file.as_str(), f.line))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,274 @@
+//! Findings, rule metadata, and report rendering for `adasgd lint`.
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id (`D001` ... `D005`, `L001`, `S001`, or `E001` for a
+    /// file the lexer could not process).
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line of the finding.
+    pub line: u32,
+    /// What is wrong.
+    pub message: String,
+    /// How to fix it.
+    pub hint: String,
+    /// True when an inline `// detlint: allow(<rule>)` pragma covers
+    /// the finding. Suppressed findings are still reported and
+    /// counted — the pragma makes the exception visible, it does not
+    /// hide the site.
+    pub suppressed: bool,
+}
+
+/// Static description of one rule, for `--help`-style docs.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Rule id.
+    pub id: &'static str,
+    /// One-line statement of what the rule forbids.
+    pub summary: &'static str,
+    /// The repo guarantee the rule protects.
+    pub protects: &'static str,
+}
+
+/// The registered rule set, in id order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D001",
+        summary: "no partial_cmp(..).unwrap() float ordering; \
+                  use total_cmp",
+        protects: "NaN inputs must reorder deterministically instead \
+                   of panicking mid-run",
+    },
+    RuleInfo {
+        id: "D002",
+        summary: "no HashMap/HashSet in deterministic modules \
+                  (engine, sweep, trace, sim, comm, coding)",
+        protects: "iteration order must not leak into trajectories, \
+                   CSVs, or traces",
+    },
+    RuleInfo {
+        id: "D003",
+        summary: "no wall-clock reads (Instant::now, SystemTime) in \
+                  library code",
+        protects: "the virtual clock alone drives results; wall time \
+                   is bench/cluster-stat territory",
+    },
+    RuleInfo {
+        id: "D004",
+        summary: "no literal-seeded RNG construction in library code",
+        protects: "all streams derive from the run seed via \
+                   RngStreams/derive_seed, so --jobs 1 == --jobs N",
+    },
+    RuleInfo {
+        id: "D005",
+        summary: "no println!/eprintln! in library modules",
+        protects: "library output goes through metrics/recorders; \
+                   stdout belongs to the CLI and benches",
+    },
+    RuleInfo {
+        id: "L001",
+        summary: "layering: core modules must not import \
+                  cli/coordinator/sweep/bench_harness; rng and linalg \
+                  stay leaf",
+        protects: "the engine stays embeddable and the dependency \
+                   graph acyclic",
+    },
+    RuleInfo {
+        id: "S001",
+        summary: "schema drift: CSV_COLUMNS vs registered schema \
+                  version; trace kind tags vs the reader skip table",
+        protects: "recorded CSVs and traces stay readable by the \
+                   committed readers",
+    },
+];
+
+/// Result of a lint run.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Every finding, suppressed ones included (flagged).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Findings not covered by a pragma; these fail the CI gate.
+    pub fn active(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    /// Number of active (gate-failing) findings.
+    pub fn active_count(&self) -> usize {
+        self.active().count()
+    }
+
+    /// Number of pragma-suppressed findings.
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.len() - self.active_count()
+    }
+
+    /// Human-readable report.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.suppressed {
+                continue;
+            }
+            out.push_str(&format!(
+                "{}:{}: {} {}\n    hint: {}\n",
+                f.file, f.line, f.rule, f.message, f.hint
+            ));
+        }
+        for f in &self.findings {
+            if f.suppressed {
+                out.push_str(&format!(
+                    "{}:{}: {} suppressed by pragma: {}\n",
+                    f.file, f.line, f.rule, f.message
+                ));
+            }
+        }
+        let active = self.active_count();
+        let verdict = if active == 0 { "clean" } else { "FAIL" };
+        out.push_str(&format!(
+            "detlint: {} — {} finding(s), {} suppressed by pragma, \
+             {} file(s) scanned\n",
+            verdict,
+            active,
+            self.suppressed_count(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Machine-readable report (the CI artifact).
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            let sep = if i + 1 < self.findings.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \
+                 \"line\": {}, \"message\": \"{}\", \
+                 \"hint\": \"{}\", \"suppressed\": {}}}{}\n",
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message),
+                json_escape(&f.hint),
+                f.suppressed,
+                sep
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"active\": {},\n  \"suppressed\": {},\n  \
+             \"files_scanned\": {}\n}}\n",
+            self.active_count(),
+            self.suppressed_count(),
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            findings: vec![
+                Finding {
+                    rule: "D001",
+                    file: "rust/src/x.rs".to_string(),
+                    line: 7,
+                    message: "NaN-unsafe float sort".to_string(),
+                    hint: "use total_cmp".to_string(),
+                    suppressed: false,
+                },
+                Finding {
+                    rule: "D003",
+                    file: "rust/src/y.rs".to_string(),
+                    line: 12,
+                    message: "wall-clock read".to_string(),
+                    hint: "use the virtual clock".to_string(),
+                    suppressed: true,
+                },
+            ],
+            files_scanned: 2,
+        }
+    }
+
+    #[test]
+    fn counts_split_active_and_suppressed() {
+        let r = sample();
+        assert_eq!(r.active_count(), 1);
+        assert_eq!(r.suppressed_count(), 1);
+    }
+
+    #[test]
+    fn text_report_mentions_both_classes() {
+        let text = sample().render_text();
+        assert!(text.contains("rust/src/x.rs:7: D001"));
+        assert!(text.contains("hint: use total_cmp"));
+        assert!(text.contains("suppressed by pragma"));
+        assert!(text.contains("FAIL"));
+        let clean = LintReport { findings: vec![], files_scanned: 3 }
+            .render_text();
+        assert!(clean.contains("clean"));
+    }
+
+    #[test]
+    fn json_report_parses_with_repo_json_reader() {
+        let json = sample().render_json();
+        let v = crate::config::json::Json::parse(&json).unwrap();
+        let findings = v.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(findings.len(), 2);
+        assert_eq!(
+            findings[0].get("rule").unwrap().as_str().unwrap(),
+            "D001"
+        );
+        assert_eq!(
+            v.get("active").unwrap().as_usize().unwrap(),
+            1
+        );
+        assert_eq!(
+            v.get("suppressed").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn rules_table_is_complete_and_ordered() {
+        let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        assert_eq!(
+            ids,
+            ["D001", "D002", "D003", "D004", "D005", "L001", "S001"]
+        );
+    }
+}

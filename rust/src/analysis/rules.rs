@@ -1,0 +1,403 @@
+//! The determinism rules (D001–D005) and per-file rule dispatch.
+//!
+//! Each rule is a token-sequence matcher over a [`SourceFile`]; rule
+//! scoping (which directories, whether test regions count) lives here
+//! so the matchers themselves stay simple. Layering (L001) is in
+//! [`super::layering`]; schema drift (S001) is cross-file and lives
+//! in [`super::schema`].
+
+use super::layering;
+use super::report::Finding;
+use super::source::SourceFile;
+use crate::analysis::lexer::{Token, TokenKind};
+
+/// Modules whose iteration order can leak into trajectories, CSVs,
+/// or traces — D002 forbids hash collections anywhere inside them.
+pub const DET_MODULES: &[&str] =
+    &["engine", "sweep", "trace", "sim", "comm", "coding"];
+
+/// Run every per-file rule on `sf` and mark pragma suppressions.
+pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let top = top_module(&sf.rel);
+
+    d001(sf, &mut out);
+    if let Some(top) = top {
+        if DET_MODULES.contains(&top) {
+            d002(sf, &mut out);
+        }
+        if !matches!(top, "bench_harness") {
+            d003(sf, &mut out);
+        }
+        d004(sf, &mut out);
+        if !matches!(top, "cli" | "bench_harness" | "main") {
+            d005(sf, &mut out);
+        }
+        layering::l001(sf, top, &mut out);
+    }
+
+    for f in &mut out {
+        if sf.allowed(f.rule, f.line) {
+            f.suppressed = true;
+        }
+    }
+    out
+}
+
+/// The top-level module a `rust/src/` path belongs to:
+/// `rust/src/stats/running.rs` -> `stats`, `rust/src/lib.rs` -> `lib`.
+/// Paths outside `rust/src/` (tests, benches, examples) return `None`
+/// — only D001 applies there.
+pub fn top_module(rel: &str) -> Option<&str> {
+    let rest = rel.strip_prefix("rust/src/")?;
+    let first = rest.split('/').next().unwrap_or(rest);
+    Some(first.strip_suffix(".rs").unwrap_or(first))
+}
+
+fn ident_at(toks: &[Token], i: usize, text: &str) -> bool {
+    toks.get(i)
+        .map(|t| t.kind == TokenKind::Ident && t.text == text)
+        .unwrap_or(false)
+}
+
+fn punct_at(toks: &[Token], i: usize, text: &str) -> bool {
+    toks.get(i)
+        .map(|t| t.kind == TokenKind::Punct && t.text == text)
+        .unwrap_or(false)
+}
+
+/// Index of the `)` matching the `(` at `open`, if balanced.
+fn matching_paren(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokenKind::Punct {
+            if t.text == "(" {
+                depth += 1;
+            } else if t.text == ")" {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// D001: `partial_cmp(..).unwrap()` / `.expect(..)` — panics on NaN
+/// and makes float sorts input-order dependent. Applies everywhere,
+/// test code included: an equivalence test that panics on NaN hides
+/// the very regression it pins.
+fn d001(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.tokens;
+    for i in 0..toks.len() {
+        if !ident_at(toks, i, "partial_cmp") {
+            continue;
+        }
+        // `fn partial_cmp(...)` is a trait impl, not a call site.
+        if i > 0 && ident_at(toks, i - 1, "fn") {
+            continue;
+        }
+        if !punct_at(toks, i + 1, "(") {
+            continue;
+        }
+        let Some(close) = matching_paren(toks, i + 1) else {
+            continue;
+        };
+        if punct_at(toks, close + 1, ".")
+            && (ident_at(toks, close + 2, "unwrap")
+                || ident_at(toks, close + 2, "expect"))
+        {
+            out.push(Finding {
+                rule: "D001",
+                file: sf.rel.clone(),
+                line: toks[i].line,
+                message: "NaN-unsafe float ordering: \
+                          partial_cmp(..).unwrap() panics on NaN"
+                    .to_string(),
+                hint: "use total_cmp (see master::sync::\
+                       fastest_k_select for the pattern)"
+                    .to_string(),
+                suppressed: false,
+            });
+        }
+    }
+}
+
+/// D002: hash collections in deterministic modules. Iteration order
+/// of `HashMap`/`HashSet` is seeded per-process, so any traversal
+/// that feeds results breaks `--jobs 1` ≡ `--jobs N` and replay.
+/// Test regions are *not* exempt: in-module tests often assert on
+/// trajectories, and a hash-ordered helper makes them flaky.
+fn d002(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for t in &sf.tokens {
+        if t.kind == TokenKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+        {
+            out.push(Finding {
+                rule: "D002",
+                file: sf.rel.clone(),
+                line: t.line,
+                message: format!(
+                    "{} in a deterministic module: iteration order \
+                     is process-seeded",
+                    t.text
+                ),
+                hint: "use BTreeMap/BTreeSet or a sorted Vec"
+                    .to_string(),
+                suppressed: false,
+            });
+        }
+    }
+}
+
+/// D003: wall-clock reads outside `bench_harness`. The engine's
+/// virtual clock is the only time source allowed to influence
+/// results; `Instant::now()` in library code is how real time leaks
+/// into trajectories.
+fn d003(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.tokens;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident || sf.is_test_line(t.line) {
+            continue;
+        }
+        let hit = (t.text == "Instant"
+            && punct_at(toks, i + 1, ":")
+            && punct_at(toks, i + 2, ":")
+            && ident_at(toks, i + 3, "now"))
+            || t.text == "SystemTime";
+        if hit {
+            out.push(Finding {
+                rule: "D003",
+                file: sf.rel.clone(),
+                line: t.line,
+                message: "wall-clock read in library code"
+                    .to_string(),
+                hint: "drive logic from the engine's virtual clock; \
+                       if this only feeds a reported stat, annotate \
+                       with // detlint: allow(D003) and a \
+                       justification"
+                    .to_string(),
+                suppressed: false,
+            });
+        }
+    }
+}
+
+/// D004: literal-seeded RNG construction. Every stream must derive
+/// from the run seed (RngStreams / Pcg64::derive / seed_stream with a
+/// derived first argument); a hard-coded integer seed silently
+/// decouples a code path from `--seed`.
+fn d004(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.tokens;
+    for i in 0..toks.len() {
+        if !ident_at(toks, i, "Pcg64") || sf.is_test_line(toks[i].line)
+        {
+            continue;
+        }
+        if !(punct_at(toks, i + 1, ":") && punct_at(toks, i + 2, ":"))
+        {
+            continue;
+        }
+        let is_ctor = ident_at(toks, i + 3, "seed")
+            || ident_at(toks, i + 3, "seed_stream");
+        if !is_ctor || !punct_at(toks, i + 4, "(") {
+            continue;
+        }
+        if toks
+            .get(i + 5)
+            .map(|t| t.kind == TokenKind::IntLit)
+            .unwrap_or(false)
+        {
+            out.push(Finding {
+                rule: "D004",
+                file: sf.rel.clone(),
+                line: toks[i].line,
+                message: "literal-seeded RNG: this stream ignores \
+                          the run seed"
+                    .to_string(),
+                hint: "derive the seed from the run seed via \
+                       RngStreams or sweep::derive_seed"
+                    .to_string(),
+                suppressed: false,
+            });
+        }
+    }
+}
+
+/// D005: `println!`/`eprintln!` in library modules. Library output
+/// must flow through recorders/metrics so sweeps stay quiet and
+/// machine-readable; stdout belongs to `cli`, `main`, and benches.
+fn d005(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.tokens;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident || sf.is_test_line(t.line) {
+            continue;
+        }
+        let is_print = matches!(
+            t.text.as_str(),
+            "println" | "eprintln" | "print" | "eprint"
+        );
+        if is_print && punct_at(toks, i + 1, "!") {
+            out.push(Finding {
+                rule: "D005",
+                file: sf.rel.clone(),
+                line: t.line,
+                message: format!(
+                    "{}! in a library module",
+                    t.text
+                ),
+                hint: "return data or record through metrics; only \
+                       cli/bench_harness own stdout"
+                    .to_string(),
+                suppressed: false,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let sf = SourceFile::parse(rel, src).unwrap();
+        check_file(&sf)
+    }
+
+    #[test]
+    fn top_module_resolution() {
+        assert_eq!(
+            top_module("rust/src/stats/running.rs"),
+            Some("stats")
+        );
+        assert_eq!(top_module("rust/src/lib.rs"), Some("lib"));
+        assert_eq!(top_module("rust/src/main.rs"), Some("main"));
+        assert_eq!(top_module("rust/tests/proptests.rs"), None);
+        assert_eq!(top_module("benches/fig1_bound.rs"), None);
+    }
+
+    #[test]
+    fn d001_fires_on_unwrap_and_expect() {
+        let src = "\
+fn f(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.partial_cmp(b).expect(\"cmp\"));
+}
+";
+        let fs = findings("rust/src/stats/x.rs", src);
+        let d001: Vec<u32> = fs
+            .iter()
+            .filter(|f| f.rule == "D001")
+            .map(|f| f.line)
+            .collect();
+        assert_eq!(d001, [2, 3]);
+    }
+
+    #[test]
+    fn d001_ignores_trait_impl_and_propagated_option() {
+        let src = "\
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+fn g(a: f64, b: f64) -> Option<Ordering> {
+    a.partial_cmp(&b)
+}
+";
+        let fs = findings("rust/src/sim/x.rs", src);
+        assert!(fs.iter().all(|f| f.rule != "D001"), "{fs:?}");
+    }
+
+    #[test]
+    fn d002_scoped_to_det_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert!(findings("rust/src/engine/x.rs", src)
+            .iter()
+            .any(|f| f.rule == "D002"));
+        assert!(findings("rust/src/metrics/x.rs", src)
+            .iter()
+            .all(|f| f.rule != "D002"));
+    }
+
+    #[test]
+    fn d003_exempts_tests_and_bench_harness() {
+        let live = "fn f() { let t = Instant::now(); }\n";
+        assert!(findings("rust/src/exec/x.rs", live)
+            .iter()
+            .any(|f| f.rule == "D003" && !f.suppressed));
+        assert!(findings("rust/src/bench_harness/x.rs", live)
+            .iter()
+            .all(|f| f.rule != "D003"));
+        let test_only = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { let t = Instant::now(); }
+}
+";
+        assert!(findings("rust/src/exec/x.rs", test_only)
+            .iter()
+            .all(|f| f.rule != "D003"));
+    }
+
+    #[test]
+    fn d003_pragma_suppresses_but_is_counted() {
+        let src = "\
+fn f() {
+    // detlint: allow(D003)
+    let t = Instant::now();
+}
+";
+        let fs = findings("rust/src/exec/x.rs", src);
+        let hit =
+            fs.iter().find(|f| f.rule == "D003").expect("finding");
+        assert!(hit.suppressed);
+    }
+
+    #[test]
+    fn d004_literal_seed_fires_derived_seed_clean() {
+        let bad = "fn f() { let r = Pcg64::seed_stream(42, 7); }\n";
+        assert!(findings("rust/src/straggler/x.rs", bad)
+            .iter()
+            .any(|f| f.rule == "D004"));
+        let good = "\
+fn f(seed: u64) {
+    let r = Pcg64::seed_stream(seed, 0xC0DE);
+}
+";
+        assert!(findings("rust/src/straggler/x.rs", good)
+            .iter()
+            .all(|f| f.rule != "D004"));
+    }
+
+    #[test]
+    fn d005_scoped_by_module() {
+        let src = "fn f() { println!(\"x\"); }\n";
+        assert!(findings("rust/src/stats/x.rs", src)
+            .iter()
+            .any(|f| f.rule == "D005"));
+        assert!(findings("rust/src/cli/x.rs", src)
+            .iter()
+            .all(|f| f.rule != "D005"));
+        assert!(findings("rust/src/main.rs", src)
+            .iter()
+            .all(|f| f.rule != "D005"));
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "\
+// a comment mentioning partial_cmp(x).unwrap() and HashMap
+fn f() {
+    let s = \"Instant::now() println! HashMap\";
+    let _ = s;
+}
+";
+        let fs = findings("rust/src/engine/x.rs", src);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

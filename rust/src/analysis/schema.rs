@@ -1,0 +1,397 @@
+//! S001 — schema-drift checks (cross-file).
+//!
+//! Two on-disk formats are written by one module and read by another,
+//! so drift cannot be caught by any single-file rule:
+//!
+//! * the run-series CSV: `metrics::csv::CSV_COLUMNS` and the
+//!   `# adasgd run series vN` header comment vs the version registry
+//!   here ([`CSV_SCHEMA_VERSIONS`]);
+//! * the binary trace: the `KIND_*` tag constants in
+//!   `trace::event` vs the reader's length-prefixed skip protocol —
+//!   every tag must be unique, nonzero (0 is reserved for
+//!   "unknown/skip" testing), and referenced at least three times
+//!   (declaration, `kind()` dispatch, `decode()` dispatch), so a new
+//!   event kind cannot be added without wiring both directions.
+//!
+//! Bumping the CSV schema is legal — add the new column list here as
+//! `vN+1` in the same commit, which is exactly the reviewable moment
+//! the rule exists to create.
+
+use std::collections::BTreeMap;
+
+use super::report::Finding;
+use super::source::SourceFile;
+use crate::analysis::lexer::TokenKind;
+
+/// Every CSV schema version ever written, oldest first. Each version
+/// must extend the previous by appending columns (readers rely on
+/// prefix compatibility to consume old files).
+pub const CSV_SCHEMA_VERSIONS: &[(u32, &str)] = &[
+    (2, "label,iteration,time,k,error,bytes,comm_time"),
+    (
+        3,
+        "label,iteration,time,k,error,bytes,comm_time,\
+         bytes_down,down_time",
+    ),
+    (
+        4,
+        "label,iteration,time,k,error,bytes,comm_time,\
+         bytes_down,down_time,late_responses,mean_staleness",
+    ),
+];
+
+const CSV_FILE: &str = "rust/src/metrics/csv.rs";
+const EVENT_FILE: &str = "rust/src/trace/event.rs";
+
+/// Run the schema checks over the whole workspace (rel path ->
+/// parsed file). Files absent from the workspace are skipped, so the
+/// pass composes with synthetic fixture workspaces in tests.
+pub(super) fn s001(
+    files: &BTreeMap<String, SourceFile>,
+    out: &mut Vec<Finding>,
+) {
+    if let Some(sf) = files.get(CSV_FILE) {
+        check_csv(sf, out);
+    }
+    if let Some(sf) = files.get(EVENT_FILE) {
+        check_trace(sf, out);
+    }
+}
+
+fn finding(sf: &SourceFile, line: u32, message: String, hint: &str) -> Finding {
+    Finding {
+        rule: "S001",
+        file: sf.rel.clone(),
+        line,
+        message,
+        hint: hint.to_string(),
+        suppressed: false,
+    }
+}
+
+const CSV_HINT: &str = "bump the schema: append the new columns, \
+                        bump the vN header, and register the new \
+                        version in analysis/schema.rs::\
+                        CSV_SCHEMA_VERSIONS in the same commit";
+
+/// CSV side: the `CSV_COLUMNS` const must equal the latest registered
+/// column list, and every `adasgd run series vN` string in the file
+/// (writer header and tests alike) must claim the latest version.
+fn check_csv(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let (latest_version, latest_columns) = match CSV_SCHEMA_VERSIONS.last()
+    {
+        Some(&(v, c)) => (v, c),
+        None => return,
+    };
+    // Registry self-check: append-only prefix compatibility.
+    for w in CSV_SCHEMA_VERSIONS.windows(2) {
+        let (pv, pc) = w[0];
+        let (nv, nc) = w[1];
+        if nv <= pv || !nc.starts_with(pc) {
+            out.push(finding(
+                sf,
+                1,
+                format!(
+                    "CSV schema registry broken: v{nv} does not \
+                     extend v{pv} by appended columns"
+                ),
+                CSV_HINT,
+            ));
+        }
+    }
+
+    let toks = &sf.tokens;
+    let mut found_const = false;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident || t.text != "CSV_COLUMNS" {
+            continue;
+        }
+        let after_const = i > 0
+            && toks[i - 1].kind == TokenKind::Ident
+            && toks[i - 1].text == "const";
+        if !after_const {
+            continue;
+        }
+        found_const = true;
+        // `const CSV_COLUMNS: &str = "...";` — the first string
+        // literal after the ident is the value.
+        let value = toks[i..]
+            .iter()
+            .take(8)
+            .find(|t| t.kind == TokenKind::StrLit);
+        match value {
+            Some(v) if v.text == latest_columns => {}
+            Some(v) => out.push(finding(
+                sf,
+                v.line,
+                format!(
+                    "CSV_COLUMNS does not match registered schema \
+                     v{latest_version} ({} vs {} columns)",
+                    v.text.split(',').count(),
+                    latest_columns.split(',').count()
+                ),
+                CSV_HINT,
+            )),
+            None => out.push(finding(
+                sf,
+                t.line,
+                "CSV_COLUMNS const has no string value".to_string(),
+                CSV_HINT,
+            )),
+        }
+        break;
+    }
+    if !found_const {
+        out.push(finding(
+            sf,
+            1,
+            "metrics/csv.rs no longer declares CSV_COLUMNS".to_string(),
+            CSV_HINT,
+        ));
+    }
+
+    let marker = "adasgd run series v";
+    let mut saw_version = false;
+    for t in toks {
+        if t.kind != TokenKind::StrLit {
+            continue;
+        }
+        let Some(idx) = t.text.find(marker) else {
+            continue;
+        };
+        saw_version = true;
+        let digits: String = t.text[idx + marker.len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if digits.parse::<u32>() != Ok(latest_version) {
+            out.push(finding(
+                sf,
+                t.line,
+                format!(
+                    "CSV header claims series v{digits} but the \
+                     registered latest is v{latest_version}"
+                ),
+                CSV_HINT,
+            ));
+        }
+    }
+    if !saw_version {
+        out.push(finding(
+            sf,
+            1,
+            "no `adasgd run series vN` header string found in \
+             metrics/csv.rs"
+                .to_string(),
+            CSV_HINT,
+        ));
+    }
+}
+
+const TRACE_HINT: &str = "wire the new kind through all of: the \
+                          KIND_* const, Event::kind(), and \
+                          Event::decode() (the reader skips unknown \
+                          kinds by length prefix, so a half-wired \
+                          kind silently drops events)";
+
+/// Trace side: collect `const KIND_*: u8 = N;` declarations and check
+/// tag uniqueness, nonzero-ness, and that each ident is referenced at
+/// least three times in the file.
+fn check_trace(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.tokens;
+    let mut decls: Vec<(String, u32, Option<u64>)> = Vec::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident
+            || !t.text.starts_with("KIND_")
+            || i == 0
+            || toks[i - 1].kind != TokenKind::Ident
+            || toks[i - 1].text != "const"
+        {
+            continue;
+        }
+        // `const KIND_X: u8 = 3;` — first int literal after the ident.
+        let tag = toks[i..]
+            .iter()
+            .take(8)
+            .find(|t| t.kind == TokenKind::IntLit)
+            .and_then(|t| t.text.parse::<u64>().ok());
+        decls.push((t.text.clone(), t.line, tag));
+    }
+    if decls.is_empty() {
+        out.push(Finding {
+            rule: "S001",
+            file: sf.rel.clone(),
+            line: 1,
+            message: "trace/event.rs declares no KIND_* tag constants"
+                .to_string(),
+            hint: TRACE_HINT.to_string(),
+            suppressed: false,
+        });
+        return;
+    }
+    let mut seen_tags: BTreeMap<u64, String> = BTreeMap::new();
+    for (name, line, tag) in &decls {
+        match tag {
+            None => out.push(finding(
+                sf,
+                *line,
+                format!("{name} has no integer tag value"),
+                TRACE_HINT,
+            )),
+            Some(0) => out.push(finding(
+                sf,
+                *line,
+                format!("{name} uses tag 0, reserved for unknown-kind \
+                         skip tests"),
+                TRACE_HINT,
+            )),
+            Some(v) => {
+                if let Some(prev) = seen_tags.insert(*v, name.clone()) {
+                    out.push(finding(
+                        sf,
+                        *line,
+                        format!("{name} reuses tag {v} already taken \
+                                 by {prev}"),
+                        TRACE_HINT,
+                    ));
+                }
+            }
+        }
+        let refs = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident && t.text == *name)
+            .count();
+        if refs < 3 {
+            out.push(finding(
+                sf,
+                *line,
+                format!(
+                    "{name} referenced {refs}x; expected >= 3 \
+                     (declaration, kind(), decode())"
+                ),
+                TRACE_HINT,
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workspace(files: &[(&str, &str)]) -> BTreeMap<String, SourceFile> {
+        files
+            .iter()
+            .map(|(rel, src)| {
+                (
+                    rel.to_string(),
+                    SourceFile::parse(rel, src).unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let ws = workspace(files);
+        let mut out = Vec::new();
+        s001(&ws, &mut out);
+        out
+    }
+
+    fn latest_columns() -> &'static str {
+        CSV_SCHEMA_VERSIONS.last().unwrap().1
+    }
+
+    #[test]
+    fn registry_versions_are_append_only() {
+        for w in CSV_SCHEMA_VERSIONS.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].1.starts_with(w[0].1));
+            assert_eq!(&w[1].1[w[0].1.len()..w[0].1.len() + 1], ",");
+        }
+    }
+
+    #[test]
+    fn matching_csv_file_is_clean() {
+        let src = format!(
+            "pub const CSV_COLUMNS: &str = \"{}\";\n\
+             fn write() {{ let _ = \"# adasgd run series v{}; \
+             columns\"; }}\n",
+            latest_columns(),
+            CSV_SCHEMA_VERSIONS.last().unwrap().0
+        );
+        assert!(run(&[(super::CSV_FILE, src.as_str())]).is_empty());
+    }
+
+    #[test]
+    fn column_drift_fires() {
+        let src = "pub const CSV_COLUMNS: &str = \
+                   \"label,iteration,time\";\n\
+                   fn write() { let _ = \"# adasgd run series v4\"; }\n";
+        let fs = run(&[(super::CSV_FILE, src)]);
+        assert!(fs
+            .iter()
+            .any(|f| f.message.contains("does not match")), "{fs:?}");
+    }
+
+    #[test]
+    fn stale_version_header_fires() {
+        let src = format!(
+            "pub const CSV_COLUMNS: &str = \"{}\";\n\
+             fn write() {{ let _ = \"# adasgd run series v3\"; }}\n",
+            latest_columns()
+        );
+        let fs = run(&[(super::CSV_FILE, src.as_str())]);
+        assert!(fs.iter().any(|f| f.message.contains("claims series")));
+    }
+
+    #[test]
+    fn missing_const_or_header_fires() {
+        let fs = run(&[(super::CSV_FILE, "fn nothing() {}\n")]);
+        assert!(fs.iter().any(|f| f.message.contains("CSV_COLUMNS")));
+        assert!(fs
+            .iter()
+            .any(|f| f.message.contains("run series vN")));
+    }
+
+    const GOOD_EVENTS: &str = "\
+const KIND_A: u8 = 1;
+const KIND_B: u8 = 2;
+fn kind(e: u8) -> u8 {
+    match e { 0 => KIND_A, _ => KIND_B }
+}
+fn decode(k: u8) -> bool {
+    k == KIND_A || k == KIND_B
+}
+";
+
+    #[test]
+    fn wired_trace_kinds_are_clean() {
+        assert!(run(&[(super::EVENT_FILE, GOOD_EVENTS)]).is_empty());
+    }
+
+    #[test]
+    fn duplicate_zero_and_unwired_tags_fire() {
+        let src = "\
+const KIND_A: u8 = 1;
+const KIND_B: u8 = 1;
+const KIND_C: u8 = 0;
+const KIND_D: u8 = 4;
+fn kind() -> u8 { KIND_A + KIND_B + KIND_C + KIND_D }
+fn decode() -> u8 { KIND_A + KIND_B + KIND_C }
+";
+        let fs = run(&[(super::EVENT_FILE, src)]);
+        assert!(fs.iter().any(|f| f.message.contains("reuses tag 1")));
+        assert!(fs.iter().any(|f| f.message.contains("tag 0")));
+        assert!(fs
+            .iter()
+            .any(|f| f.message.contains("KIND_D referenced 2x")));
+    }
+
+    #[test]
+    fn absent_files_are_skipped() {
+        assert!(run(&[("rust/src/other.rs", "fn f() {}\n")]).is_empty());
+    }
+}

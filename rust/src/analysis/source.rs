@@ -1,0 +1,245 @@
+//! Per-file source model for the lint pass.
+//!
+//! Wraps the lexed token stream with the two pieces of per-file
+//! context every rule needs: which lines carry a
+//! `// detlint: allow(<rule>)` suppression pragma, and which line
+//! ranges belong to `#[cfg(test)]` / `#[test]` regions (most rules
+//! exempt test code — tests may use wall clocks, ad-hoc seeds, and
+//! stdout freely).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, LexError, Token, TokenKind};
+
+/// A lexed source file plus pragma and test-region metadata.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes
+    /// (e.g. `rust/src/stats/running.rs`).
+    pub rel: String,
+    /// Tokens in source order.
+    pub tokens: Vec<Token>,
+    /// line -> rules allowed by a pragma on that line.
+    allows: BTreeMap<u32, BTreeSet<String>>,
+    /// Inclusive line spans of `#[cfg(test)]` / `#[test]` items.
+    test_spans: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    /// Lex `text` and extract pragmas and test regions.
+    pub fn parse(rel: &str, text: &str) -> Result<SourceFile, LexError> {
+        let lexed = lex(text)?;
+        let mut allows: BTreeMap<u32, BTreeSet<String>> = BTreeMap::new();
+        for comment in &lexed.comments {
+            if let Some(rules) = parse_pragma(&comment.text) {
+                allows.entry(comment.line).or_default().extend(rules);
+            }
+        }
+        let test_spans = test_spans(&lexed.tokens);
+        Ok(SourceFile {
+            rel: rel.replace('\\', "/"),
+            tokens: lexed.tokens,
+            allows,
+            test_spans,
+        })
+    }
+
+    /// True when `line` falls inside a `#[cfg(test)]`/`#[test]` item.
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.test_spans
+            .iter()
+            .any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+
+    /// True when a pragma allows `rule` on `line` — either trailing on
+    /// the line itself or on the line immediately above it.
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        let hit = |l: u32| {
+            self.allows
+                .get(&l)
+                .map(|rules| rules.contains(rule))
+                .unwrap_or(false)
+        };
+        hit(line) || (line > 1 && hit(line - 1))
+    }
+
+    /// Number of suppression pragma lines in the file.
+    pub fn pragma_lines(&self) -> usize {
+        self.allows.len()
+    }
+}
+
+/// Parse `detlint: allow(D001)` / `detlint: allow(D001, D003)` out of
+/// a comment body. Returns `None` when the comment is not a pragma.
+fn parse_pragma(comment: &str) -> Option<Vec<String>> {
+    let idx = comment.find("detlint:")?;
+    let rest = comment[idx + "detlint:".len()..].trim_start();
+    let body = rest.strip_prefix("allow(")?;
+    let close = body.find(')')?;
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        None
+    } else {
+        Some(rules)
+    }
+}
+
+fn punct_at(tokens: &[Token], i: usize, p: &str) -> bool {
+    tokens
+        .get(i)
+        .map(|t| t.kind == TokenKind::Punct && t.text == p)
+        .unwrap_or(false)
+}
+
+/// Find line spans of items marked `#[cfg(test)]` or `#[test]`. The
+/// scan is token-based: on an attribute containing the ident `test`
+/// (and not `not`, so `#[cfg(not(test))]` stays live code), the next
+/// `{ ... }` block's balanced-brace extent becomes a test span.
+fn test_spans(tokens: &[Token]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if !(punct_at(tokens, i, "#") && punct_at(tokens, i + 1, "[")) {
+            i += 1;
+            continue;
+        }
+        // Scan the attribute to its matching `]`.
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut saw_test = false;
+        let mut saw_not = false;
+        while j < tokens.len() && depth > 0 {
+            let t = &tokens[j];
+            if t.kind == TokenKind::Punct && t.text == "[" {
+                depth += 1;
+            } else if t.kind == TokenKind::Punct && t.text == "]" {
+                depth -= 1;
+            } else if t.kind == TokenKind::Ident {
+                if t.text == "test" {
+                    saw_test = true;
+                } else if t.text == "not" {
+                    saw_not = true;
+                }
+            }
+            j += 1;
+        }
+        if !(saw_test && !saw_not) {
+            i = j;
+            continue;
+        }
+        // Attribute marks a test item: find its body block (stop at
+        // `;` for block-less items like `use`).
+        let mut k = j;
+        while k < tokens.len()
+            && !punct_at(tokens, k, "{")
+            && !punct_at(tokens, k, ";")
+        {
+            k += 1;
+        }
+        if k >= tokens.len() || punct_at(tokens, k, ";") {
+            i = k.saturating_add(1);
+            continue;
+        }
+        let start = tokens[i].line;
+        let mut m = k + 1;
+        let mut braces = 1usize;
+        while m < tokens.len() && braces > 0 {
+            if punct_at(tokens, m, "{") {
+                braces += 1;
+            } else if punct_at(tokens, m, "}") {
+                braces -= 1;
+            }
+            m += 1;
+        }
+        let end = tokens[m.saturating_sub(1)].line;
+        spans.push((start, end));
+        i = m;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_parsing_forms() {
+        assert_eq!(
+            parse_pragma(" detlint: allow(D003)"),
+            Some(vec!["D003".to_string()])
+        );
+        assert_eq!(
+            parse_pragma(" detlint: allow(D001, L001)"),
+            Some(vec!["D001".to_string(), "L001".to_string()])
+        );
+        assert_eq!(parse_pragma(" ordinary comment"), None);
+        assert_eq!(parse_pragma(" detlint: allow()"), None);
+        assert_eq!(parse_pragma(" detlint: deny(D001)"), None);
+    }
+
+    #[test]
+    fn pragma_covers_own_and_next_line() {
+        let src = "\
+let a = 1; // detlint: allow(D003)
+let b = 2;
+let c = 3;
+";
+        let sf = SourceFile::parse("x.rs", src).unwrap();
+        assert!(sf.allowed("D003", 1));
+        assert!(sf.allowed("D003", 2));
+        assert!(!sf.allowed("D003", 3));
+        assert!(!sf.allowed("D001", 1));
+    }
+
+    #[test]
+    fn cfg_test_region_is_detected() {
+        let src = "\
+fn live() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let x = 1;
+    }
+}
+
+fn also_live() {}
+";
+        let sf = SourceFile::parse("x.rs", src).unwrap();
+        assert!(!sf.is_test_line(1));
+        assert!(sf.is_test_line(3));
+        assert!(sf.is_test_line(7));
+        assert!(sf.is_test_line(9));
+        assert!(!sf.is_test_line(11));
+    }
+
+    #[test]
+    fn cfg_not_test_is_live_code() {
+        let src = "\
+#[cfg(not(test))]
+fn live() {
+    let x = 1;
+}
+";
+        let sf = SourceFile::parse("x.rs", src).unwrap();
+        assert!(!sf.is_test_line(3));
+    }
+
+    #[test]
+    fn test_attr_in_string_does_not_mark_region() {
+        let src = "\
+fn live() {
+    let s = \"#[cfg(test)]\";
+    let _ = s;
+}
+";
+        let sf = SourceFile::parse("x.rs", src).unwrap();
+        assert!(!sf.is_test_line(2));
+        assert!(!sf.is_test_line(3));
+    }
+}

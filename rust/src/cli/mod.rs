@@ -57,6 +57,7 @@ const VALUED_FLAGS: &[&str] = &[
     "link-latency", "downlink", "down-levels", "down-frac",
     "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
     "ingress", "coding", "replication", "jobs", "trace", "limit",
+    "format", "root",
 ];
 
 impl Args {
@@ -143,6 +144,11 @@ COMMANDS:
               the recorder series is bitwise-identical)
   switching-times
               print the Theorem-1 schedule for Example 1
+  lint        determinism & layering static analysis (detlint):
+                lint [--root DIR] [--format text|json] [--rules]
+              scans rust/src, rust/tests, benches, examples; exits
+              non-zero on any finding not covered by an explicit
+              `// detlint: allow(<rule>)` pragma (CI gate)
   help        this message
 
 COMMON FLAGS:

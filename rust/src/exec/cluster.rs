@@ -244,6 +244,8 @@ impl ThreadedCluster {
             channel.n()
         );
         self.epoch += 1;
+        // wall clock feeds only the reported real_time stat; results
+        // are driven by virtual delays. detlint: allow(D003)
         let start = Instant::now();
         let engine_cfg = EngineConfig {
             eta: cfg.eta,
@@ -351,6 +353,8 @@ impl ThreadedCluster {
              sharing needs the simulated path (async_sgd::run_async_comm)"
         );
         self.epoch += 1;
+        // wall clock feeds only the reported real_time stat; results
+        // are driven by virtual delays. detlint: allow(D003)
         let start = Instant::now();
         let engine_cfg = EngineConfig {
             eta: cfg.eta,

@@ -108,6 +108,40 @@
 //! experiments. Tracing is off by default and observationally free:
 //! enabling it changes no RNG draw, clock value, or output byte.
 //!
+//! ## Determinism rules
+//!
+//! The bitwise guarantees above (`--jobs 1` ≡ `--jobs N`, simulator ≡
+//! threaded cluster, record ≡ replay) are protected at the source
+//! level by an in-repo static-analysis pass, [`analysis`] (`adasgd
+//! lint`, a CI gate). The rules, each a one-line promise:
+//!
+//! * **D001** — float orderings use `f64::total_cmp`, never
+//!   `partial_cmp(..).unwrap()`: a NaN must reorder deterministically,
+//!   not panic mid-run.
+//! * **D002** — no `HashMap`/`HashSet` inside the deterministic
+//!   modules (`engine`, `sweep`, `trace`, `sim`, `comm`, `coding`):
+//!   hash iteration order is process-seeded and would leak into
+//!   trajectories, CSVs, and traces.
+//! * **D003** — no wall-clock reads (`Instant::now`, `SystemTime`)
+//!   outside `bench_harness`: the engine's virtual clock is the only
+//!   time source allowed to influence results.
+//! * **D004** — no literal-seeded RNG construction: every stream
+//!   derives from the run seed ([`engine::RngStreams`],
+//!   [`sweep::derive_seed`]), so `--seed` reaches every draw.
+//! * **D005** — no `println!`/`eprintln!` in library modules: output
+//!   flows through [`metrics`]; stdout belongs to [`cli`] and benches.
+//! * **L001** — `use crate::X` edges must appear in the layering
+//!   table (`analysis::ALLOWED_IMPORTS`): the engine stays embeddable
+//!   and the dependency graph acyclic.
+//! * **S001** — the CSV header constant and the trace `KIND_*` tags
+//!   must match the registered schema versions: committed readers
+//!   keep reading recorded artifacts.
+//!
+//! The escape hatch is an explicit inline pragma with a justification
+//! (`// detlint: allow(D003)` on the offending or preceding line);
+//! suppressed findings stay visible in the report and the CI
+//! artifact. See [`analysis`] for the full scan scope.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -128,6 +162,7 @@
 //! println!("reached error {:.3e}", run.recorder.last().unwrap().error);
 //! ```
 
+pub mod analysis;
 pub mod async_sgd;
 pub mod bench_harness;
 pub mod cli;

@@ -39,6 +39,7 @@ fn main() {
         Some("list-artifacts") => cmd_list_artifacts(&args),
         Some("repeat") => cmd_repeat(&args),
         Some("trace") => cmd_trace(&args),
+        Some("lint") => cmd_lint(&args),
         Some("switching-times") => cmd_switching_times(),
         Some("help") | None => {
             print_help();
@@ -714,6 +715,41 @@ fn cmd_trace_replay(args: &Args, trace: &Trace) -> i32 {
         out.total_time
     );
     0
+}
+
+/// `adasgd lint` — run the detlint determinism & layering pass over
+/// the repo (see [`adasgd::analysis`]). Exit 0 when every finding is
+/// covered by an explicit pragma, 1 otherwise — the CI gate.
+fn cmd_lint(args: &Args) -> i32 {
+    use adasgd::analysis::{lint_root, RULES};
+    if args.has("rules") {
+        for r in RULES {
+            println!("{}  {}", r.id, r.summary);
+            println!("      protects: {}", r.protects);
+        }
+        return 0;
+    }
+    let root = args.get("root").unwrap_or(".");
+    let report = match lint_root(Path::new(root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint error: cannot scan {root}: {e}");
+            return 1;
+        }
+    };
+    match args.get("format").unwrap_or("text") {
+        "text" => print!("{}", report.render_text()),
+        "json" => print!("{}", report.render_json()),
+        other => {
+            eprintln!("unknown --format '{other}' (text | json)");
+            return 2;
+        }
+    }
+    if report.active_count() == 0 {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_switching_times() -> i32 {

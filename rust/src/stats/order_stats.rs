@@ -61,7 +61,7 @@ impl OrderStats {
             for (i, d) in draw.iter_mut().enumerate() {
                 *d = model.sample(round as u64, i, &mut rng);
             }
-            draw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            draw.sort_by(|a, b| a.total_cmp(b));
             for k in 0..n {
                 sum[k] += draw[k];
                 sumsq[k] += draw[k] * draw[k];
@@ -144,6 +144,38 @@ mod tests {
             let relv = (mc.var(k) - exact.var(k)).abs() / exact.var(k);
             assert!(relv < 0.1, "k={k} var: {} vs {}", mc.var(k), exact.var(k));
         }
+    }
+
+    #[test]
+    fn monte_carlo_survives_nan_delays() {
+        // Regression: a model emitting NaN (e.g. a trace with a 0/0
+        // rate) used to panic the partial_cmp sort inside
+        // monte_carlo; under total_cmp NaN draws order slowest and
+        // only pollute the top order statistics.
+        struct SometimesNan;
+        impl DelayModel for SometimesNan {
+            fn sample(
+                &self,
+                _iteration: u64,
+                worker: usize,
+                _rng: &mut dyn crate::straggler::RngDyn,
+            ) -> f64 {
+                if worker == 0 {
+                    f64::NAN
+                } else {
+                    worker as f64
+                }
+            }
+            fn name(&self) -> String {
+                "sometimes-nan".to_string()
+            }
+        }
+        let mc = OrderStats::monte_carlo(&SometimesNan, 4, 100, 7);
+        // Finite draws 1,2,3 occupy the bottom three slots each round.
+        for k in 1..=3 {
+            assert!((mc.mean(k) - k as f64).abs() < 1e-12);
+        }
+        assert!(mc.mean(4).is_nan());
     }
 
     #[test]

@@ -62,11 +62,12 @@ impl RunningStats {
 }
 
 /// q-quantile (0 ≤ q ≤ 1) by sorting a copy; linear interpolation.
+/// NaN inputs sort last under `total_cmp` instead of panicking.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "quantile of empty slice");
     assert!((0.0..=1.0).contains(&q), "q must be in [0,1]");
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -111,5 +112,16 @@ mod tests {
         assert_eq!(quantile(&xs, 1.0), 5.0);
         assert_eq!(quantile(&xs, 0.25), 2.0);
         assert!((quantile(&xs, 0.1) - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_survives_nan_samples() {
+        // Regression: a NaN sample (e.g. a 0/0 rate from an empty
+        // window) used to panic the partial_cmp sort; under total_cmp
+        // it orders last and the finite quantiles are unaffected.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert!((quantile(&xs, 1.0 / 3.0) - 2.0).abs() < 1e-12);
+        assert!(quantile(&xs, 1.0).is_nan());
     }
 }

@@ -92,7 +92,7 @@ mod tests {
         // far fewer than the ~65k possible.
         let c = SyntheticCorpus::new(256, 32, 4, 9);
         let toks = c.batch(64, 257, 0, 0);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for row in toks.chunks(257) {
             for w in row.windows(2) {
                 seen.insert((w[0], w[1]));

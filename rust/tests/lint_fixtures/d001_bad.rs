@@ -1,0 +1,5 @@
+// D001 must fire twice: unwrap and expect forms.
+fn sort_delays(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+}

@@ -1,0 +1,7 @@
+// total_cmp ordering and propagated Options are fine.
+fn sort_delays(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+fn compare(a: f64, b: f64) -> Option<std::cmp::Ordering> {
+    a.partial_cmp(&b)
+}

@@ -1,0 +1,13 @@
+// D002 must fire in a deterministic module: hash iteration order is
+// process-seeded.
+use std::collections::{HashMap, HashSet};
+fn tally(xs: &[u64]) -> HashMap<u64, usize> {
+    let mut m = HashMap::new();
+    let mut seen = HashSet::new();
+    for &x in xs {
+        if seen.insert(x) {
+            m.insert(x, 1);
+        }
+    }
+    m
+}

@@ -1,0 +1,12 @@
+// Ordered collections keep traversals deterministic.
+use std::collections::{BTreeMap, BTreeSet};
+fn tally(xs: &[u64]) -> BTreeMap<u64, usize> {
+    let mut m = BTreeMap::new();
+    let mut seen = BTreeSet::new();
+    for &x in xs {
+        if seen.insert(x) {
+            m.insert(x, 1);
+        }
+    }
+    m
+}

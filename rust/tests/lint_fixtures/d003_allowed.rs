@@ -1,0 +1,7 @@
+// Pragma-suppressed wall clock: still reported, not gate-failing.
+use std::time::Instant;
+fn stamp() -> f64 {
+    // feeds a reported stat only. detlint: allow(D003)
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// D003 must fire twice: Instant::now and a SystemTime read.
+use std::time::Instant;
+fn stamp() -> f64 {
+    let t = Instant::now();
+    let _ = std::time::SystemTime::now();
+    t.elapsed().as_secs_f64()
+}

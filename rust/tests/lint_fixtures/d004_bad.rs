@@ -1,0 +1,4 @@
+// D004 must fire: a hard-coded integer seed ignores --seed.
+fn make_rng() -> Pcg64 {
+    Pcg64::seed_stream(42, 7)
+}

@@ -1,0 +1,5 @@
+// Streams derived from the run seed are fine, as are literal stream
+// ids in the second argument.
+fn make_rng(seed: u64) -> Pcg64 {
+    Pcg64::seed_stream(seed, 0x0515)
+}

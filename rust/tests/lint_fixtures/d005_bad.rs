@@ -1,0 +1,7 @@
+// D005 must fire on all four print macros in library code.
+fn report(x: f64) {
+    println!("x = {x}");
+    eprintln!("warning");
+    print!("partial");
+    eprint!("partial err");
+}

@@ -1,0 +1,11 @@
+// Library code returns data; tests may print.
+fn report(x: f64) -> String {
+    format!("x = {x}")
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn printing_in_tests_is_fine() {
+        println!("debug output");
+    }
+}

@@ -1,0 +1,5 @@
+// L001 must fire: these edges are outside the layering table for
+// `engine` (sweep sits above the engine; cli is globally forbidden).
+use crate::sweep::derive_seed;
+use crate::cli::Args;
+fn f() {}

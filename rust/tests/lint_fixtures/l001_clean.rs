@@ -1,0 +1,8 @@
+// Table-sanctioned engine imports, grouped form included; tests may
+// reach across layers.
+use crate::comm::CommStream;
+use crate::{rng::Pcg64, straggler::DelayModel};
+#[cfg(test)]
+mod tests {
+    use crate::sweep::derive_seed;
+}

@@ -1,0 +1,16 @@
+// Every construct here LOOKS like a violation but is comment/string
+// content; the whole file must lint clean in any module.
+/* block comment: Instant::now() and HashMap
+   /* nested: partial_cmp(x).unwrap() */
+   still the outer comment: println!("x") */
+fn torture<'a>(tag: &'a str) -> String {
+    let s = "Instant::now() // not a comment, HashMap inside string";
+    let r = r#"raw: partial_cmp(b).unwrap() and "quoted" println!"#;
+    let rr = r##"raw with hash: Pcg64::seed_stream(42, 7) "#"##;
+    let c = '"';
+    let nl = '\n';
+    let lifetime_not_char: &'static str = "SystemTime";
+    let cont = "split \
+                across lines: eprintln!";
+    format!("{tag}{s}{r}{rr}{c}{nl}{lifetime_not_char}{cont}")
+}

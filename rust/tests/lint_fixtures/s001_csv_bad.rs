@@ -1,0 +1,6 @@
+// S001 must fire twice: CSV_COLUMNS dropped columns vs the registered
+// schema, and the writer still claims an old series version.
+pub const CSV_COLUMNS: &str = "label,iteration,time,k,error";
+fn write_header() -> String {
+    String::from("# adasgd run series v3; columns")
+}

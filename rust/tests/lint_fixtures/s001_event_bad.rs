@@ -1,0 +1,12 @@
+// S001 must fire three times: duplicate tag, reserved tag 0, and a
+// kind missing from decode().
+const KIND_BROADCAST: u8 = 1;
+const KIND_COMPUTE: u8 = 1;
+const KIND_RESERVED: u8 = 0;
+const KIND_HALFWIRED: u8 = 5;
+fn kind(which: usize) -> u8 {
+    [KIND_BROADCAST, KIND_COMPUTE, KIND_RESERVED, KIND_HALFWIRED][which]
+}
+fn decode(k: u8) -> bool {
+    k == KIND_BROADCAST || k == KIND_COMPUTE || k == KIND_RESERVED
+}

@@ -1,0 +1,9 @@
+// Fully wired tags: unique, nonzero, present in kind() and decode().
+const KIND_BROADCAST: u8 = 1;
+const KIND_COMPUTE: u8 = 2;
+fn kind(which: usize) -> u8 {
+    [KIND_BROADCAST, KIND_COMPUTE][which]
+}
+fn decode(k: u8) -> bool {
+    k == KIND_BROADCAST || k == KIND_COMPUTE
+}

@@ -27,12 +27,12 @@ fn prop_fastest_k_select_matches_sort() {
         let mut idx = Vec::new();
         let (x_k, _) = fastest_k_select(delays, k, &mut idx);
         let mut sorted = delays.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         if (x_k - sorted[k - 1]).abs() > 1e-12 {
             return Err(format!("x_k {} != sorted[k-1] {}", x_k, sorted[k - 1]));
         }
         let mut chosen: Vec<f64> = idx[..k].iter().map(|&i| delays[i]).collect();
-        chosen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        chosen.sort_by(|a, b| a.total_cmp(b));
         for (c, s) in chosen.iter().zip(&sorted[..k]) {
             if (c - s).abs() > 1e-12 {
                 return Err(format!("selected set mismatch: {chosen:?}"));
