@@ -53,6 +53,7 @@ fn base(seed: u64, smoke: bool) -> ExperimentConfig {
         coding: None,
         jobs: 0,
         trace: None,
+        fastpath: false,
     }
 }
 

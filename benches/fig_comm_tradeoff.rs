@@ -69,6 +69,7 @@ fn base(seed: u64, s: &Scale) -> ExperimentConfig {
         coding: None,
         jobs: 0,
         trace: None,
+        fastpath: false,
     }
 }
 

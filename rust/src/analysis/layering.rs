@@ -49,8 +49,8 @@ pub const ALLOWED_IMPORTS: &[(&str, &[&str])] = &[
         "engine",
         &[
             "coding", "comm", "data", "grad", "linalg", "master",
-            "metrics", "model", "policy", "rng", "sim", "straggler",
-            "trace",
+            "metrics", "model", "policy", "rng", "sim", "stats",
+            "straggler", "trace",
         ],
     ),
     (
@@ -246,6 +246,20 @@ mod tests {
         let cli = "use crate::cli::Args;\n";
         assert_eq!(
             check("rust/src/engine/mod.rs", "engine", cli).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn engine_may_import_stats_but_stats_not_engine() {
+        // The fastpath gather's order-statistics sampler made
+        // engine → stats a sanctioned edge; the reverse stays illegal.
+        let src = "use crate::stats::OrderStatSampler;\n";
+        assert!(check("rust/src/engine/fastpath.rs", "engine", src)
+            .is_empty());
+        let rev = "use crate::engine::FastpathGather;\n";
+        assert_eq!(
+            check("rust/src/stats/order_sampler.rs", "stats", rev).len(),
             1
         );
     }

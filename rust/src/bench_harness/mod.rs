@@ -2,9 +2,11 @@
 //! offline). Warmup, timed iterations, robust summary stats, a
 //! throughput-style report, machine-readable JSON emission
 //! ([`write_json_report`] → `BENCH_*.json`, the perf-trajectory record),
+//! baseline diffing ([`print_baseline_deltas`] against a prior report),
 //! and the flags shared by every bench binary ([`BenchArgs`]: `--smoke`
-//! tiny-grid CI mode, `--jobs` sweep parallelism). `benches/*.rs` use
-//! `harness = false` and drive this directly.
+//! tiny-grid CI mode, `--jobs` sweep parallelism, `--baseline` prior
+//! report). `benches/*.rs` use `harness = false` and drive this
+//! directly.
 
 use crate::stats::quantile;
 use std::path::Path;
@@ -182,6 +184,84 @@ pub fn write_json_report(
     f.flush()
 }
 
+/// Parse a prior `BENCH_*.json` report (the [`write_json_report`]
+/// format) into `(name, median seconds)` pairs, in file order.
+pub fn parse_baseline(text: &str) -> Result<Vec<(String, f64)>, String> {
+    let v = crate::config::json::Json::parse(text)
+        .map_err(|e| format!("baseline is not valid JSON: {e}"))?;
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| "baseline report must be a JSON array".to_string())?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        let name = e
+            .get("name")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| "baseline entry missing string 'name'".to_string())?;
+        let median = e
+            .get("median_s")
+            .and_then(|j| j.as_f64())
+            .ok_or_else(|| {
+                format!("baseline entry '{name}' missing numeric 'median_s'")
+            })?;
+        out.push((name.to_string(), median));
+    }
+    Ok(out)
+}
+
+/// Print per-entry median deltas of `results` against a prior
+/// `BENCH_*.json` report at `path` (matched by entry name). Entries
+/// present on only one side are listed explicitly so renamed or dropped
+/// benchmarks are visible rather than silently unmatched. An unreadable
+/// or malformed baseline degrades to a warning, never a panic — perf
+/// runs must still emit their own report.
+pub fn print_baseline_deltas(path: &Path, results: &[BenchResult]) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("\n(baseline {} not readable: {e})", path.display());
+            return;
+        }
+    };
+    let base = match parse_baseline(&text) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("\n(baseline {}: {e})", path.display());
+            return;
+        }
+    };
+    println!("\n=== median deltas vs baseline {} ===", path.display());
+    for r in results {
+        let new = r.median();
+        match base.iter().find(|(n, _)| n == &r.name) {
+            Some((_, old)) if *old > 0.0 => {
+                let pct = (new - old) / old * 100.0;
+                println!(
+                    "{:<44} {:>12} -> {:>12}  ({pct:+.1}%)",
+                    r.name,
+                    fmt_duration(*old),
+                    fmt_duration(new),
+                );
+            }
+            Some(_) => println!(
+                "{:<44} {:>12} (baseline median not positive)",
+                r.name,
+                fmt_duration(new),
+            ),
+            None => println!(
+                "{:<44} {:>12} (new entry — not in baseline)",
+                r.name,
+                fmt_duration(new),
+            ),
+        }
+    }
+    for (name, _) in &base {
+        if !results.iter().any(|r| &r.name == name) {
+            println!("{name:<44} (baseline-only entry — dropped?)");
+        }
+    }
+}
+
 /// Flags shared by every bench binary, parsed from the argv cargo
 /// forwards after `--` (`cargo bench --bench X -- --smoke --jobs 2`).
 ///
@@ -189,15 +269,19 @@ pub fn write_json_report(
 ///   CI smoke step runs one figure bench this way, so the sweep-executor
 ///   path cannot silently rot);
 /// * `--jobs N` — sweep worker threads (`0` = all cores, the default;
-///   results are byte-identical for every value).
+///   results are byte-identical for every value);
+/// * `--baseline PATH` — a prior `BENCH_*.json` report to diff medians
+///   against (see [`print_baseline_deltas`]; used by `perf_hotpath`).
 ///
 /// Unknown tokens (e.g. cargo's own `--bench`) are ignored.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BenchArgs {
     /// Tiny-grid CI mode.
     pub smoke: bool,
     /// Sweep worker threads (0 = all cores).
     pub jobs: usize,
+    /// Prior `BENCH_*.json` report to diff medians against.
+    pub baseline: Option<String>,
 }
 
 impl BenchArgs {
@@ -206,8 +290,8 @@ impl BenchArgs {
         Self::parse(std::env::args().skip(1))
     }
 
-    /// Parse from any token stream (testable). Accepts both `--jobs N`
-    /// and `--jobs=N`.
+    /// Parse from any token stream (testable). Accepts both the
+    /// space-separated (`--jobs N`) and `=` (`--jobs=N`) forms.
     pub fn parse(args: impl Iterator<Item = String>) -> Self {
         let warn = |v: &str| {
             eprintln!(
@@ -215,8 +299,11 @@ impl BenchArgs {
                  (all cores)"
             )
         };
-        let mut out = Self { smoke: false, jobs: 0 };
+        let warn_baseline =
+            || eprintln!("warning: --baseline expects a path; ignored");
+        let mut out = Self { smoke: false, jobs: 0, baseline: None };
         let mut expect_jobs = false;
+        let mut expect_baseline = false;
         for tok in args {
             if expect_jobs {
                 expect_jobs = false;
@@ -231,15 +318,27 @@ impl BenchArgs {
                 }
                 warn("<missing>");
             }
+            if expect_baseline {
+                expect_baseline = false;
+                if !tok.starts_with("--") {
+                    out.baseline = Some(tok);
+                    continue;
+                }
+                warn_baseline();
+            }
             match tok.as_str() {
                 "--smoke" => out.smoke = true,
                 "--jobs" => expect_jobs = true,
+                "--baseline" => expect_baseline = true,
                 _ => {
                     if let Some(v) = tok.strip_prefix("--jobs=") {
                         match v.parse::<usize>() {
                             Ok(j) => out.jobs = j,
                             Err(_) => warn(v),
                         }
+                    } else if let Some(v) = tok.strip_prefix("--baseline=")
+                    {
+                        out.baseline = Some(v.to_string());
                     }
                     // else: cargo's --bench, filters, etc.
                 }
@@ -247,6 +346,9 @@ impl BenchArgs {
         }
         if expect_jobs {
             warn("<missing>");
+        }
+        if expect_baseline {
+            warn_baseline();
         }
         out
     }
@@ -308,37 +410,76 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    fn plain(smoke: bool, jobs: usize) -> BenchArgs {
+        BenchArgs { smoke, jobs, baseline: None }
+    }
+
     #[test]
     fn bench_args_parse_and_ignore_unknown_tokens() {
         let argv = |s: &str| s.split_whitespace().map(str::to_string);
         assert_eq!(
             BenchArgs::parse(argv("--bench --smoke --jobs 2")),
-            BenchArgs { smoke: true, jobs: 2 }
+            plain(true, 2)
         );
         assert_eq!(
             BenchArgs::parse(argv("--bench somefilter")),
-            BenchArgs { smoke: false, jobs: 0 }
+            plain(false, 0)
         );
         // Malformed --jobs degrades to 0 with a warning, not a panic;
         // so does a trailing --jobs with no value.
-        assert_eq!(
-            BenchArgs::parse(argv("--jobs lots")),
-            BenchArgs { smoke: false, jobs: 0 }
-        );
-        assert_eq!(
-            BenchArgs::parse(argv("--smoke --jobs")),
-            BenchArgs { smoke: true, jobs: 0 }
-        );
+        assert_eq!(BenchArgs::parse(argv("--jobs lots")), plain(false, 0));
+        assert_eq!(BenchArgs::parse(argv("--smoke --jobs")), plain(true, 0));
         // The = form works too.
-        assert_eq!(
-            BenchArgs::parse(argv("--jobs=3")),
-            BenchArgs { smoke: false, jobs: 3 }
-        );
+        assert_eq!(BenchArgs::parse(argv("--jobs=3")), plain(false, 3));
         // A transposed `--jobs --smoke` must not eat the smoke flag.
+        assert_eq!(BenchArgs::parse(argv("--jobs --smoke")), plain(true, 0));
+    }
+
+    #[test]
+    fn bench_args_parse_baseline_paths() {
+        let argv = |s: &str| s.split_whitespace().map(str::to_string);
+        let a = BenchArgs::parse(argv(
+            "--smoke --baseline results/BENCH_hotpath.json",
+        ));
+        assert!(a.smoke);
         assert_eq!(
-            BenchArgs::parse(argv("--jobs --smoke")),
-            BenchArgs { smoke: true, jobs: 0 }
+            a.baseline.as_deref(),
+            Some("results/BENCH_hotpath.json")
         );
+        // The = form, and a transposed flag that must not be eaten.
+        let b = BenchArgs::parse(argv("--baseline=prior.json --jobs 2"));
+        assert_eq!(b.baseline.as_deref(), Some("prior.json"));
+        assert_eq!(b.jobs, 2);
+        let c = BenchArgs::parse(argv("--baseline --smoke"));
+        assert_eq!(c.baseline, None);
+        assert!(c.smoke);
+        // Trailing --baseline with no value warns, not panics.
+        assert_eq!(BenchArgs::parse(argv("--baseline")).baseline, None);
+    }
+
+    #[test]
+    fn baseline_report_parses_names_and_medians() {
+        let r = BenchResult {
+            name: "entry a".into(),
+            samples: vec![1.0e-3, 2.0e-3, 3.0e-3],
+        };
+        let dir = std::env::temp_dir().join("adasgd_bench_baseline_test");
+        let path = dir.join("BENCH_base.json");
+        write_json_report(&path, &[r.clone()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let base = parse_baseline(&text).unwrap();
+        assert_eq!(base.len(), 1);
+        assert_eq!(base[0].0, "entry a");
+        assert!((base[0].1 - 2.0e-3).abs() < 1e-12);
+        // The printer tolerates both matched and unmatched entries.
+        let fresh = BenchResult { name: "entry b".into(), samples: vec![1.0] };
+        print_baseline_deltas(&path, &[r, fresh]);
+        // Malformed inputs are errors, not panics.
+        assert!(parse_baseline("{}").is_err());
+        assert!(parse_baseline("[{\"name\":\"x\"}]").is_err());
+        assert!(parse_baseline("not json").is_err());
+        print_baseline_deltas(&dir.join("missing.json"), &[]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

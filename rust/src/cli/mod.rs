@@ -166,6 +166,10 @@ TRAIN FLAGS (no --config):
   --trace DIR         record a binary event trace to
                       DIR/<label>.trace (also `[trace] dir` in TOML;
                       off by default — tracing never changes results)
+  --fastpath          O(k) order-statistics rounds for huge n (also
+                      `[run] fastpath` in TOML; off by default — same
+                      distribution as the exhaustive gather, not the
+                      same bits; needs i.i.d. delays + free comm)
   --async             run the asynchronous baseline instead of fastest-k
   --coding SCHEME     gradient coding: frc | cyclic | bernoulli
                       (redundant shards, exact-gradient rounds; the k

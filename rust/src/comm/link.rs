@@ -16,13 +16,28 @@ pub struct LinkModel {
     bandwidth: Vec<f64>,
     /// Fixed per-message latency in virtual time units.
     latency: Vec<f64>,
+    /// Cached [`LinkModel::is_zero_cost`]: the round drivers check it
+    /// every iteration, and rescanning both vectors is O(n) — ruinous
+    /// once the fastpath makes the rest of the round O(k) at n = 10⁶.
+    /// Derived from the vectors at construction, so the derived
+    /// `PartialEq` stays consistent.
+    zero_cost: bool,
 }
 
 impl LinkModel {
+    /// Assemble from validated parts, deriving the cached zero-cost
+    /// flag. Every constructor funnels through here so the flag can
+    /// never drift from the vectors.
+    fn from_parts(bandwidth: Vec<f64>, latency: Vec<f64>) -> Self {
+        let zero_cost = bandwidth.iter().all(|b| b.is_infinite())
+            && latency.iter().all(|&l| l == 0.0);
+        Self { bandwidth, latency, zero_cost }
+    }
+
     /// A link that costs nothing — the default every driver starts from;
     /// with it, comm-aware runs match the pre-comm trajectories exactly.
     pub fn zero_cost(n: usize) -> Self {
-        Self { bandwidth: vec![f64::INFINITY; n], latency: vec![0.0; n] }
+        Self::from_parts(vec![f64::INFINITY; n], vec![0.0; n])
     }
 
     /// Identical links: `bandwidth` bytes per virtual-time unit
@@ -32,7 +47,7 @@ impl LinkModel {
         assert!(!bandwidth.is_nan(), "bandwidth must not be NaN");
         assert!(latency >= 0.0, "latency must be non-negative");
         let bw = if bandwidth > 0.0 { bandwidth } else { f64::INFINITY };
-        Self { bandwidth: vec![bw; n], latency: vec![latency; n] }
+        Self::from_parts(vec![bw; n], vec![latency; n])
     }
 
     /// Fully heterogeneous links. NaN bandwidth is rejected the same way
@@ -47,7 +62,7 @@ impl LinkModel {
             .into_iter()
             .map(|b| if b > 0.0 { b } else { f64::INFINITY })
             .collect();
-        Self { bandwidth, latency }
+        Self::from_parts(bandwidth, latency)
     }
 
     /// Uniform links with the last `n_slow` workers' bandwidth divided by
@@ -75,7 +90,8 @@ impl LinkModel {
         for b in link.bandwidth[n - n_slow..].iter_mut() {
             *b /= slow_factor;
         }
-        link
+        // Re-derive the cached flag after mutating the bandwidths.
+        Self::from_parts(link.bandwidth, link.latency)
     }
 
     /// Number of workers.
@@ -92,10 +108,10 @@ impl LinkModel {
     }
 
     /// True iff every upload is free (infinite bandwidth, zero latency) —
-    /// the drivers use this to skip per-worker delay adjustments entirely.
+    /// the drivers use this to skip per-worker delay adjustments
+    /// entirely. O(1): cached at construction.
     pub fn is_zero_cost(&self) -> bool {
-        self.bandwidth.iter().all(|b| b.is_infinite())
-            && self.latency.iter().all(|&l| l == 0.0)
+        self.zero_cost
     }
 
     /// Human-readable description for labels.

@@ -406,6 +406,14 @@ pub struct ExperimentConfig {
     /// [`crate::trace`]). Never part of the experiment's identity —
     /// tracing changes no RNG draw, clock value, or output byte.
     pub trace: Option<String>,
+    /// Opt-in O(k) order-statistics fast path for synchronous rounds
+    /// (see [`crate::engine::FastpathGather`]): sample the first-k
+    /// arrival times directly instead of drawing all n delays. TOML:
+    /// `[run] fastpath`; CLI: `--fastpath`. Distributionally — not
+    /// bitwise — equivalent to the exhaustive gather, so unlike `jobs`
+    /// it *is* part of the experiment's identity; off by default keeps
+    /// every existing trajectory bit-identical.
+    pub fastpath: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -426,6 +434,7 @@ impl Default for ExperimentConfig {
             coding: None,
             jobs: 0,
             trace: None,
+            fastpath: false,
         }
     }
 }
@@ -652,6 +661,11 @@ impl ExperimentConfig {
                 }
                 cfg.jobs = jobs as usize;
             }
+            if let Some(v) = sec.get("fastpath") {
+                cfg.fastpath = v
+                    .as_bool()
+                    .ok_or("run.fastpath must be a boolean")?;
+            }
         }
 
         if let Some(sec) = doc.section("trace") {
@@ -739,6 +753,58 @@ impl ExperimentConfig {
             }
             coding.validate(self.n)?;
         }
+        if self.fastpath {
+            // The fast path samples the k-th order statistic of the
+            // response-time distribution directly, which is only the
+            // round time when (a) rounds are synchronous, (b) delays are
+            // i.i.d. with a closed-form sampler, and (c) communication
+            // is free so "delay draw" and "response time" coincide.
+            if self.policy == PolicySpec::Async {
+                return Err(
+                    "run.fastpath samples synchronous fastest-k rounds; \
+                     [policy] kind = \"async\" cannot use it"
+                        .into(),
+                );
+            }
+            if self.coding.is_some() {
+                return Err(
+                    "run.fastpath samples the fastest-k arrivals \
+                     directly; it cannot be combined with [coding]"
+                        .into(),
+                );
+            }
+            match self.delays {
+                DelaySpec::Exponential { .. }
+                | DelaySpec::ShiftedExponential { .. }
+                | DelaySpec::Pareto { .. }
+                | DelaySpec::Weibull { .. } => {}
+                DelaySpec::Bimodal { .. } | DelaySpec::Trace { .. } => {
+                    return Err(
+                        "run.fastpath needs an i.i.d. delay model with \
+                         an order-statistics sampler (exponential, \
+                         shifted_exponential, pareto, weibull); bimodal \
+                         and trace delays are per-worker"
+                            .into(),
+                    );
+                }
+            }
+            if self.comm != CommSpec::default() {
+                return Err(
+                    "run.fastpath assumes free communication (the \
+                     sampled arrival IS the response time); remove the \
+                     [comm] section"
+                        .into(),
+                );
+            }
+            if self.trace.is_some() {
+                return Err(
+                    "run.fastpath never materializes per-worker delay \
+                     draws, so it cannot record an event trace; drop \
+                     [trace] / --trace"
+                        .into(),
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -804,6 +870,52 @@ d = 50
 
         assert!(ExperimentConfig::from_toml("[delays]\nkind = \"nope\"\n")
             .is_err());
+    }
+
+    #[test]
+    fn fastpath_parses_and_gates_incompatible_configs() {
+        let text = "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\n\
+                    d = 10\n[run]\nfastpath = true\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert!(cfg.fastpath);
+        assert!(cfg.validate().is_ok());
+        assert!(!ExperimentConfig::default().fastpath, "opt-in only");
+
+        let mut bad = cfg.clone();
+        bad.policy = PolicySpec::Async;
+        assert!(bad.validate().unwrap_err().contains("async"));
+
+        let mut bad = cfg.clone();
+        bad.coding =
+            Some(CodingSpec { scheme: CodingSchemeSpec::Cyclic, r: 2 });
+        assert!(bad.validate().unwrap_err().contains("coding"));
+
+        let mut bad = cfg.clone();
+        bad.delays = DelaySpec::Bimodal {
+            lambda: 1.0,
+            n_slow: 1,
+            slow_factor: 10.0,
+            p_transient: 0.0,
+        };
+        assert!(bad.validate().unwrap_err().contains("i.i.d."));
+
+        let mut bad = cfg.clone();
+        bad.comm.bandwidth = 100.0;
+        assert!(bad
+            .validate()
+            .unwrap_err()
+            .contains("free communication"));
+
+        let mut bad = cfg.clone();
+        bad.trace = Some("results/traces".into());
+        assert!(bad.validate().unwrap_err().contains("trace"));
+
+        assert!(ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [run]\nfastpath = 1\n"
+        )
+        .unwrap_err()
+        .contains("boolean"));
     }
 
     #[test]

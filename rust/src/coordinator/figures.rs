@@ -133,6 +133,7 @@ fn fig2_base(seed: u64) -> ExperimentConfig {
         coding: None,
         jobs: 0,
         trace: None,
+        fastpath: false,
     }
 }
 

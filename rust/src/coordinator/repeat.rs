@@ -133,6 +133,7 @@ mod tests {
             coding: None,
             jobs: 0,
             trace: None,
+            fastpath: false,
         }
     }
 

@@ -95,6 +95,13 @@ pub fn replay_experiment(
             trace.n_workers, cfg.n
         ));
     }
+    if cfg.fastpath {
+        return Err(
+            "run.fastpath never materializes per-worker delay draws, so \
+             a trace cannot re-drive it; drop fastpath to replay"
+                .into(),
+        );
+    }
     let expected = if cfg.coding.is_some() {
         Discipline::Coded
     } else if matches!(cfg.policy, PolicySpec::Async) {
@@ -191,6 +198,84 @@ fn run_experiment_core(
             late_responses: run.late_responses,
             mean_staleness: run.mean_staleness,
             trace: run.trace,
+        });
+    }
+
+    // Opt-in O(k) fast path: the same synchronous fastest-k discipline
+    // with arrivals sampled directly from the order-statistics law.
+    // validate() pinned this to sync policies over i.i.d. closed-form
+    // delay models with free communication and no tracing, so the
+    // sampled arrival IS the round's completion time. The dispatch
+    // lives here (not in `master`) because only the coordinator may
+    // couple the config surface to `stats` + `engine` at once.
+    if cfg.fastpath {
+        use crate::config::DelaySpec;
+        use crate::engine::{
+            EngineConfig, EngineCore, FastpathGather, RngStreams,
+            RoundEngine,
+        };
+        use crate::stats::OrderStatSampler;
+        let sampler = match cfg.delays {
+            DelaySpec::Exponential { lambda } => {
+                OrderStatSampler::exponential(cfg.n, lambda)
+            }
+            DelaySpec::ShiftedExponential { shift, lambda } => {
+                OrderStatSampler::shifted_exponential(cfg.n, shift, lambda)
+            }
+            DelaySpec::Pareto { xm, alpha } => {
+                OrderStatSampler::pareto(cfg.n, xm, alpha)
+            }
+            DelaySpec::Weibull { lambda, k } => {
+                OrderStatSampler::weibull(cfg.n, lambda, k)
+            }
+            _ => unreachable!("validate() rejects non-i.i.d. fastpath"),
+        };
+        let mut policy: Box<dyn KPolicy> = match &cfg.policy {
+            PolicySpec::Fixed { k } => Box::new(FixedK::new(*k)),
+            PolicySpec::Adaptive(p) => {
+                Box::new(AdaptivePflug::new(cfg.n, *p))
+            }
+            PolicySpec::Async => unreachable!("validate() rejects this"),
+        };
+        let engine_cfg = EngineConfig {
+            eta: cfg.eta as f32,
+            momentum: 0.0,
+            max_steps: cfg.max_iterations,
+            max_time: cfg.max_time,
+            seed: cfg.seed,
+            record_stride: cfg.record_stride,
+        };
+        let mut eval = |w: &[f32]| problem.error(w);
+        let core = EngineCore::new(
+            policy.name(),
+            &mut channel,
+            delays,
+            &mut eval,
+            &w0,
+            engine_cfg,
+            RngStreams::sync(cfg.seed),
+        );
+        let mut gather = FastpathGather::new(
+            &mut backend,
+            policy.as_mut(),
+            &sampler,
+            cfg.seed,
+        );
+        let run = RoundEngine::new(core).run(&mut gather);
+        let mut recorder = run.recorder;
+        recorder.label = cfg.label.clone();
+        return Ok(ExperimentOutput {
+            recorder,
+            steps: run.steps,
+            total_time: run.total_time,
+            k_changes: run.k_changes,
+            bytes_sent: run.bytes_sent,
+            comm_time: run.comm_time,
+            bytes_down: run.bytes_down,
+            down_time: run.down_time,
+            late_responses: run.late_responses,
+            mean_staleness: run.mean_staleness,
+            trace: None,
         });
     }
 
@@ -296,6 +381,7 @@ mod tests {
             coding: None,
             jobs: 0,
             trace: None,
+            fastpath: false,
         }
     }
 

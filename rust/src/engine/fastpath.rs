@@ -1,0 +1,266 @@
+//! The O(k) order-statistics fast path for synchronous fastest-k rounds.
+//!
+//! [`FastestKGather`](super::FastestKGather) prices all n worker
+//! responses every round and quickselects the k fastest — O(n) rng draws
+//! and O(n) comparisons per step, which caps experiments at n in the
+//! thousands. For i.i.d. delay models the round outcome depends on the
+//! delays only through (a) the k-th arrival time `X_(k)` and (b) *which*
+//! k workers respond — and both can be sampled directly:
+//!
+//! * the ascending arrival prefix `X_(1..k)` comes from
+//!   [`OrderStatSampler`] in O(k) (Rényi spacings for the exponential
+//!   family, conditional-uniform inverse CDF otherwise);
+//! * by exchangeability the identities of the k fastest are a uniform
+//!   k-subset of `0..n`, drawn with k partial Fisher–Yates swaps over a
+//!   persistent permutation (the permutation never needs resetting: a
+//!   uniform subset of a permuted range is still uniform).
+//!
+//! The result is an O(k + k·d) round — independent of n except for the
+//! one-time O(n) identity array — making the ROADMAP's n = 10⁶ sync
+//! round a few microseconds of sampling instead of 10⁶ draws.
+//!
+//! **Contract: distributional, not bitwise.** The fast path consumes a
+//! different number of rng draws (2k, on its own dedicated stream) than
+//! the exhaustive gather (n per round on the sync delay stream), so
+//! trajectories differ draw-by-draw while every round-time and
+//! worker-subset *distribution* is exactly the law of the exhaustive
+//! path. That is why it is opt-in (`[run] fastpath` / `--fastpath`,
+//! off by default — all existing trajectories stay bit-identical) and
+//! why `coordinator` only enables it for free-communication,
+//! untraced, i.i.d.-delay configs where "delay model draw" and "full
+//! response time" coincide (see `ExperimentConfig::validate`). The
+//! statistical contract is pinned in
+//! `rust/tests/test_fastpath_stats.rs`: moment/quantile agreement with
+//! the exhaustive path on small n, and exact agreement of the expected
+//! round time with `theory`'s closed-form `E[X_(k)]`.
+
+use super::core::{EngineCore, EngineRun};
+use super::gather::GatherPolicy;
+use crate::grad::GradBackend;
+use crate::policy::KPolicy;
+use crate::rng::{Pcg64, Rng};
+use crate::stats::OrderStatSampler;
+
+/// Dedicated rng stream tag for the fastpath gather (arrivals +
+/// identity swaps), disjoint from every stream in
+/// [`RngStreams`](super::RngStreams).
+const FASTPATH_STREAM: u64 = 0xFA5B;
+
+/// The synchronous fastest-k discipline with O(k) rounds via direct
+/// order-statistics sampling.
+pub struct FastpathGather<'a> {
+    backend: &'a mut dyn GradBackend,
+    policy: &'a mut dyn KPolicy,
+    sampler: &'a OrderStatSampler,
+    k: usize,
+    /// Fastpath draws live on their own stream so the opt-in cannot
+    /// perturb any default-path sequence.
+    rng: Pcg64,
+    /// Ascending first-k arrival scratch, reused across rounds.
+    arrivals: Vec<f64>,
+    /// Persistent worker-identity permutation; the k leading slots are
+    /// re-randomized each round with partial Fisher–Yates swaps.
+    perm: Vec<u32>,
+    partial: Vec<f32>,
+    k_changes: Vec<(u64, f64, usize)>,
+}
+
+impl<'a> FastpathGather<'a> {
+    /// Gather the `policy`-chosen k fastest of `backend`'s shards,
+    /// sampling arrivals from `sampler` on stream `seed`.
+    pub fn new(
+        backend: &'a mut dyn GradBackend,
+        policy: &'a mut dyn KPolicy,
+        sampler: &'a OrderStatSampler,
+        seed: u64,
+    ) -> Self {
+        let n = backend.n_shards();
+        let d = backend.dim();
+        assert_eq!(
+            sampler.n(),
+            n,
+            "sampler sized for {} workers, backend has {n}",
+            sampler.n()
+        );
+        assert!(n <= u32::MAX as usize, "fastpath identity array is u32");
+        Self {
+            backend,
+            policy,
+            sampler,
+            k: 1,
+            rng: Pcg64::seed_stream(seed, FASTPATH_STREAM),
+            arrivals: Vec::new(),
+            perm: (0..n as u32).collect(),
+            partial: vec![0.0f32; d],
+            k_changes: Vec::new(),
+        }
+    }
+}
+
+impl GatherPolicy for FastpathGather<'_> {
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+
+    fn start(&mut self, _core: &mut EngineCore) {
+        let n = self.backend.n_shards();
+        self.k = self.policy.initial_k().min(n).max(1);
+    }
+
+    fn step(&mut self, core: &mut EngineCore) -> bool {
+        let n = self.backend.n_shards();
+        let j = core.steps;
+        if j >= core.cfg.max_steps
+            || (core.cfg.max_time > 0.0 && core.t >= core.cfg.max_time)
+        {
+            return false;
+        }
+        self.backend.on_iteration(j);
+        // (1) broadcast w_j. The fastpath contract (enforced by config
+        // validation) pins the channel to the free default, so this only
+        // meters bytes; the arrival times below ARE the response times.
+        let _down_bytes = core.broadcast_round();
+        // (2) O(k): the k-th order statistic of n i.i.d. delays, sampled
+        // directly instead of drawing and selecting over all n.
+        self.sampler.sample_first_k(self.k, &mut self.arrivals, &mut self.rng);
+        let round_time = self.arrivals[self.k - 1];
+        core.t += round_time;
+        // (2b) responder identities: a uniform k-subset via k partial
+        // Fisher–Yates swaps on the persistent permutation.
+        for i in 0..self.k {
+            let swap =
+                i + self.rng.next_below((n - i) as u64) as usize;
+            self.perm.swap(i, swap);
+        }
+        // (3) aggregate the k sampled responders, shard by shard (the
+        // huge-n regime this gather exists for is exactly where an
+        // O(n·d) batched buffer is unaffordable).
+        core.zero_g();
+        for i in 0..self.k {
+            let worker = self.perm[i] as usize;
+            self.backend.partial_grad(
+                worker,
+                &core.w_view,
+                &mut self.partial,
+            );
+            core.accept_into_g(worker, &self.partial);
+        }
+        // (4, 5) shared round tail: mean-scale + SGD + policy feedback +
+        // recording, identical to the exhaustive gather.
+        self.k = core.finish_fastest_k_round(
+            j,
+            n,
+            self.k,
+            &mut *self.policy,
+            &mut self.k_changes,
+        );
+        true
+    }
+
+    fn finish(&mut self, core: &mut EngineCore) {
+        core.record_final(core.steps, self.k);
+    }
+
+    fn annotate(&mut self, run: &mut EngineRun) {
+        run.k_changes = std::mem::take(&mut self.k_changes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommChannel;
+    use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use crate::engine::{EngineConfig, RngStreams, RoundEngine};
+    use crate::grad::NativeBackend;
+    use crate::model::LinRegProblem;
+    use crate::policy::FixedK;
+
+    #[test]
+    fn fastpath_discipline_trains_the_model() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 200, d: 10, ..Default::default() },
+            3,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 10));
+        let sampler = OrderStatSampler::exponential(10, 1.0);
+        let mut policy = FixedK::new(5);
+        let mut channel = CommChannel::dense(10);
+        let mut eval = |w: &[f32]| problem.error(w);
+        let cfg = EngineConfig {
+            eta: 0.002,
+            momentum: 0.0,
+            max_steps: 400,
+            max_time: 0.0,
+            seed: 1,
+            record_stride: 50,
+        };
+        let delays = sampler_delays();
+        let core = EngineCore::new(
+            "fastpath",
+            &mut channel,
+            &delays,
+            &mut eval,
+            &vec![0.0f32; 10],
+            cfg,
+            RngStreams::sync(1),
+        );
+        let mut gather =
+            FastpathGather::new(&mut backend, &mut policy, &sampler, 1);
+        let run = RoundEngine::new(core).run(&mut gather);
+        assert_eq!(run.steps, 400);
+        assert!(run.total_time > 0.0);
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 1e-2, "{first} -> {last}");
+        assert!(!run.diverged);
+    }
+
+    /// The core still wants a delay model reference (for its unused sync
+    /// stream); the fastpath never samples it.
+    fn sampler_delays() -> crate::straggler::ExponentialDelays {
+        crate::straggler::ExponentialDelays::new(1.0)
+    }
+
+    #[test]
+    fn identity_swaps_cover_all_workers_uniformly() {
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 160, d: 4, ..Default::default() },
+            7,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 8));
+        let sampler = OrderStatSampler::exponential(8, 1.0);
+        let mut policy = FixedK::new(3);
+        let mut channel = CommChannel::dense(8);
+        let mut eval = |w: &[f32]| problem.error(w);
+        let cfg = EngineConfig {
+            eta: 0.001,
+            momentum: 0.0,
+            max_steps: 500,
+            max_time: 0.0,
+            seed: 9,
+            record_stride: 100,
+        };
+        let delays = sampler_delays();
+        let core = EngineCore::new(
+            "fastpath",
+            &mut channel,
+            &delays,
+            &mut eval,
+            &vec![0.0f32; 4],
+            cfg,
+            RngStreams::sync(9),
+        );
+        let mut gather =
+            FastpathGather::new(&mut backend, &mut policy, &sampler, 9);
+        let run = RoundEngine::new(core).run(&mut gather);
+        assert_eq!(run.steps, 500);
+        // Over 500 rounds of k = 3 every worker must respond sometimes;
+        // the permutation keeps all 8 identities alive.
+        let mut seen: Vec<u32> = gather.perm.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<u32>>());
+    }
+}

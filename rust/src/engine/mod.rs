@@ -11,7 +11,10 @@
 //!   compression + link pricing, shared-ingress clocks, the gradient
 //!   apply, and metric recording — each in exactly one place.
 //! * [`GatherPolicy`] is the pluggable discipline: [`FastestKGather`]
-//!   (the paper's sync round), [`StalenessGather`] (fully async,
+//!   (the paper's sync round), [`FastpathGather`] (the same round with
+//!   O(k) direct order-statistics sampling for i.i.d. delays — opt-in,
+//!   distributionally but not bitwise equivalent; see
+//!   `engine/fastpath.rs`), [`StalenessGather`] (fully async,
 //!   staleness-aware, with exact processor-sharing ingress via
 //!   completion events on the [`sim::EventQueue`](crate::sim)),
 //!   [`CodedGather`] (redundant shard placement via a
@@ -43,12 +46,14 @@
 
 mod coded;
 mod core;
+mod fastpath;
 mod gather;
 
 pub use self::coded::CodedGather;
 pub use self::core::{
     CommStream, EngineConfig, EngineCore, EngineRun, RngStreams,
 };
+pub use self::fastpath::FastpathGather;
 pub use self::gather::{FastestKGather, GatherPolicy, StalenessGather};
 
 /// Drives an [`EngineCore`] through a [`GatherPolicy`] to completion.

@@ -175,7 +175,15 @@ impl ThreadedCluster {
         assert_eq!(w0.len(), self.d);
         let delay_model = crate::straggler::ExponentialDelays::new(1.0);
         let mut channel = CommChannel::dense(self.n);
-        self.run_inner(policy, w0, cfg, eval_error, &delay_model, &mut channel)
+        self.run_inner(
+            policy,
+            w0,
+            cfg,
+            eval_error,
+            &delay_model,
+            &mut channel,
+            false,
+        )
     }
 
     /// Run with an explicit delay model (free link).
@@ -188,7 +196,15 @@ impl ThreadedCluster {
         eval_error: &mut dyn FnMut(&[f32]) -> f64,
     ) -> ThreadedRunStats {
         let mut channel = CommChannel::dense(self.n);
-        self.run_inner(policy, w0, cfg, eval_error, delays, &mut channel)
+        self.run_inner(
+            policy,
+            w0,
+            cfg,
+            eval_error,
+            delays,
+            &mut channel,
+            false,
+        )
     }
 
     /// Run with an explicit delay model *and* comm channel: worker sleeps
@@ -278,6 +294,7 @@ impl ThreadedCluster {
             idx_buf: Vec::with_capacity(n),
             grad_buf: vec![None; n],
             accepted_delays: Vec::with_capacity(n),
+            w_cache: None,
             late: 0,
             k_changes: Vec::new(),
         };
@@ -384,6 +401,7 @@ impl ThreadedCluster {
             queue: EventQueue::new(),
             grad_buf: vec![None; n],
             view_buf: vec![0.0f32; self.d],
+            w_cache: vec![None; n],
             read_version: vec![0u64; n],
             version: 0,
             staleness_sum: 0.0,
@@ -437,8 +455,31 @@ struct ThreadedGather<'a> {
     grad_buf: Vec<Option<Vec<f32>>>,
     /// Accepted responses' virtual delays, for the congested clock.
     accepted_delays: Vec<f64>,
+    /// Last round's broadcast buffer, reused (no fresh allocation) when
+    /// every worker has dropped its handle — memory-only, bitwise inert.
+    w_cache: Option<Arc<Vec<f32>>>,
     late: u64,
     k_changes: Vec<(u64, f64, usize)>,
+}
+
+/// Reuse `cache`'s buffer for a broadcast of `w` when nobody else still
+/// holds it (strong count 1), else allocate a fresh shared copy. The
+/// bytes shipped are identical either way — this only recycles memory.
+fn shared_model(
+    cache: Option<Arc<Vec<f32>>>,
+    w: &[f32],
+) -> Arc<Vec<f32>> {
+    if let Some(mut arc) = cache {
+        if let Some(buf) = Arc::get_mut(&mut arc) {
+            if buf.len() == w.len() {
+                buf.copy_from_slice(w);
+            } else {
+                *buf = w.to_vec();
+            }
+            return arc;
+        }
+    }
+    Arc::new(w.to_vec())
 }
 
 impl GatherPolicy for ThreadedGather<'_> {
@@ -459,7 +500,8 @@ impl GatherPolicy for ThreadedGather<'_> {
         // the decoded view, and each injected delay covers the download,
         // the compute, and the priced upload of the coming response.
         let down_bytes = core.broadcast_round();
-        let w_shared = Arc::new(core.w_view.clone());
+        let w_shared = shared_model(self.w_cache.take(), &core.w_view);
+        self.w_cache = Some(Arc::clone(&w_shared));
         for (i, tx) in self.job_txs.iter().enumerate() {
             let delay = core.response_delay(j, i, down_bytes);
             self.delay_buf[i] = delay;
@@ -555,6 +597,9 @@ struct ThreadedAsyncGather<'a> {
     grad_buf: Vec<Option<Vec<f32>>>,
     /// Decode target for the per-worker model push.
     view_buf: Vec<f32>,
+    /// Per-worker dispatch buffers, reused once the worker drops its
+    /// previous job (memory-only, bitwise inert).
+    w_cache: Vec<Option<Arc<Vec<f32>>>>,
     read_version: Vec<u64>,
     version: u64,
     staleness_sum: f64,
@@ -647,11 +692,13 @@ impl GatherPolicy for ThreadedAsyncGather<'_> {
         self.read_version[i] = self.version;
         let dt = core.cycle_delay(core.steps, i, down_delay);
         self.queue.schedule_at(t_apply + dt, i);
+        let w = shared_model(self.w_cache[i].take(), &self.view_buf);
+        self.w_cache[i] = Some(Arc::clone(&w));
         self.job_txs[i]
             .send(Job {
                 epoch: self.epoch,
                 generation: core.steps,
-                w: Arc::new(self.view_buf.clone()),
+                w,
                 delay: dt,
             })
             .expect("worker died");

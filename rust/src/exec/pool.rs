@@ -1,12 +1,25 @@
-//! Minimal fixed-size thread pool (no rayon/tokio offline).
+//! Minimal fixed-size work-stealing thread pool (no rayon/tokio
+//! offline).
 //!
 //! Used by the sweep executor ([`crate::sweep::SweepExecutor`]) and
 //! benches for embarrassingly-parallel jobs; the training cluster uses
 //! dedicated per-worker threads (`cluster.rs`) instead, because workers
 //! own state.
 //!
+//! Scheduling: jobs are dealt round-robin onto per-worker deques at
+//! submit time (chunked dispatch — a `map` over 0..jobs pre-spreads the
+//! grid across workers with no contention on one shared queue), and an
+//! idle worker that drains its own deque *steals* from the back of its
+//! siblings' deques before parking. Skewed grids — one sweep cell 10×
+//! the cost of the rest — therefore stop tail-blocking: the workers
+//! that finish early take over the queue behind the slow cell. Where a
+//! job *runs* is invisible to results by construction (the sweep layer
+//! reassembles in spec order and derives per-spec rng seeds), so
+//! `--jobs 1` ≡ `--jobs N` byte-for-byte survives stealing; the
+//! skewed-grid pin lives in `rust/tests/test_sched_determinism.rs`.
+//!
 //! Panic policy: a panicking job must never wedge the pool. Worker
-//! threads catch job panics and keep serving the queue, and [`map`]
+//! threads catch job panics and keep serving their deques, and [`map`]
 //! forwards the first panic (in job-index order) to the submitting
 //! thread via `resume_unwind` — the alternative is a forever-blocked
 //! result channel. Fire-and-forget [`execute`] jobs that panic are
@@ -15,16 +28,75 @@
 //! [`map`]: ThreadPool::map
 //! [`execute`]: ThreadPool::execute
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed pool of worker threads executing boxed jobs.
+/// Park-state guarded by [`Shared::lock`]: the queued-job counter and
+/// the shutdown flag. The counter may transiently over/under-count
+/// while a push or pop is between "touch deque" and "update counter";
+/// parked workers treat it as a rescan hint, never as ground truth, so
+/// the transient is harmless (a spurious rescan or a slightly-late
+/// park, never a lost job).
+struct Control {
+    queued: usize,
+    shutdown: bool,
+}
+
+/// State shared by the pool handle and every worker thread.
+struct Shared {
+    /// One deque per worker. Owners pop the front; thieves pop the
+    /// back, so a stolen job is the one queued longest — the fairness
+    /// order that un-blocks a skewed tail fastest.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    lock: Mutex<Control>,
+    cv: Condvar,
+}
+
+impl Shared {
+    /// Take one job: own deque front first, then steal from siblings'
+    /// backs (scan order rotated so thieves spread instead of mobbing
+    /// worker 0).
+    fn grab(&self, me: usize) -> Option<Job> {
+        let size = self.queues.len();
+        for off in 0..size {
+            let q = (me + off) % size;
+            let job = {
+                let mut deque =
+                    self.queues[q].lock().expect("pool queue poisoned");
+                if off == 0 { deque.pop_front() } else { deque.pop_back() }
+            };
+            if let Some(job) = job {
+                let mut ctl = self.lock.lock().expect("pool lock poisoned");
+                ctl.queued = ctl.queued.saturating_sub(1);
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Queue `job` on deque `q` and wake a parked worker.
+    fn push(&self, q: usize, job: Job) {
+        self.queues[q]
+            .lock()
+            .expect("pool queue poisoned")
+            .push_back(job);
+        let mut ctl = self.lock.lock().expect("pool lock poisoned");
+        ctl.queued += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// Fixed pool of worker threads executing boxed jobs off per-worker
+/// work-stealing deques.
 pub struct ThreadPool {
-    sender: Option<mpsc::Sender<Job>>,
+    shared: Arc<Shared>,
+    /// Round-robin dispatch cursor.
+    next: AtomicUsize,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -40,38 +112,50 @@ impl ThreadPool {
                     .into(),
             );
         }
-        let (sender, receiver) = mpsc::channel::<Job>();
-        let receiver = Arc::new(Mutex::new(receiver));
+        let shared = Arc::new(Shared {
+            queues: (0..size).map(|_| Mutex::new(VecDeque::new())).collect(),
+            lock: Mutex::new(Control { queued: 0, shutdown: false }),
+            cv: Condvar::new(),
+        });
         let handles = (0..size)
-            .map(|_| {
-                let rx = Arc::clone(&receiver);
+            .map(|me| {
+                let shared = Arc::clone(&shared);
                 std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().expect("pool lock poisoned");
-                        guard.recv()
-                    };
-                    match job {
+                    // Drain: own deque, then steal.
+                    while let Some(job) = shared.grab(me) {
                         // Catch panics so one bad job cannot kill the
                         // worker and strand everything queued behind it.
-                        Ok(job) => {
-                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        let _ = catch_unwind(AssertUnwindSafe(job));
+                    }
+                    // Park until new work arrives or shutdown drains dry
+                    // (pending jobs are always run before exit).
+                    let mut ctl =
+                        shared.lock.lock().expect("pool lock poisoned");
+                    loop {
+                        if ctl.queued > 0 {
+                            break; // rescan the deques
                         }
-                        Err(_) => break, // all senders dropped
+                        if ctl.shutdown {
+                            return;
+                        }
+                        ctl = shared
+                            .cv
+                            .wait(ctl)
+                            .expect("pool lock poisoned");
                     }
                 })
             })
             .collect();
-        Ok(Self { sender: Some(sender), handles })
+        Ok(Self { shared, next: AtomicUsize::new(0), handles })
     }
 
     /// Submit a fire-and-forget job (its panic, if any, is swallowed —
     /// use [`ThreadPool::map`] when the caller must observe failures).
+    /// Jobs are dealt round-robin across the worker deques.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender
-            .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(f))
-            .expect("pool workers gone");
+        let q = self.next.fetch_add(1, Ordering::Relaxed)
+            % self.shared.queues.len();
+        self.shared.push(q, Box::new(f));
     }
 
     /// Map `f` over `0..jobs` in parallel, collecting results in job
@@ -113,7 +197,12 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.sender.take(); // close the channel
+        {
+            let mut ctl =
+                self.shared.lock.lock().expect("pool lock poisoned");
+            ctl.shutdown = true;
+            self.shared.cv.notify_all();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -176,5 +265,36 @@ mod tests {
         // The workers must still be alive to serve useful jobs.
         let out = pool.map(10, |i| i + 1);
         assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn skewed_jobs_get_stolen_instead_of_tail_blocking() {
+        use std::sync::Barrier;
+        use std::time::Duration;
+        // Two workers; job 0 blocks its worker on a barrier that only
+        // opens once every *other* job has run. Round-robin without
+        // stealing would strand jobs 2 and 4 behind job 0 on worker 0's
+        // deque forever; with stealing, worker 1 takes them and the
+        // barrier opens.
+        let pool = ThreadPool::new(2).unwrap();
+        let barrier = Arc::new(Barrier::new(2));
+        let done = Arc::new(AtomicUsize::new(0));
+        let out = {
+            let barrier = Arc::clone(&barrier);
+            let done = Arc::clone(&done);
+            pool.map(5, move |i| {
+                if i == 0 {
+                    barrier.wait();
+                } else {
+                    if done.fetch_add(1, Ordering::SeqCst) == 3 {
+                        barrier.wait();
+                    }
+                    // Give the straggler room to demonstrate overlap.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                i * 10
+            })
+        };
+        assert_eq!(out, vec![0, 10, 20, 30, 40]);
     }
 }

@@ -108,6 +108,39 @@
 //! experiments. Tracing is off by default and observationally free:
 //! enabling it changes no RNG draw, clock value, or output byte.
 //!
+//! ## Perf
+//!
+//! Performance work is measured, recorded, and diffable: `cargo bench
+//! --bench perf_hotpath` times the hot paths and writes
+//! `results/BENCH_hotpath.json`, and `-- --baseline <prior.json>`
+//! prints per-entry median deltas against an earlier report (CI smoke
+//! runs both). Three structural optimizations carry the scale story:
+//!
+//! * **Order-statistics fastpath** ([`engine::FastpathGather`] over
+//!   [`stats::OrderStatSampler`], opt-in via `[run] fastpath` /
+//!   `--fastpath`). A synchronous fastest-k round normally draws all n
+//!   delays and selects the k fastest; for i.i.d. closed-form delay
+//!   models the round time and the k finisher identities can be
+//!   sampled *directly* from the order-statistics law (Rényi spacings
+//!   for exponential, conditional inverse-CDF recursion otherwise) in
+//!   O(k), making n = 10⁶ rounds practical. The contract is
+//!   **distributional, not bitwise**: a fastpath run is a different —
+//!   equally valid — draw of the same stochastic process
+//!   (`rust/tests/test_fastpath_stats.rs`), so it is OFF by default
+//!   and every default trajectory stays bit-identical.
+//! * **Allocation-free rounds** — per-round buffers (engine gather
+//!   state, the fastpath's arrival/partial buffers, the threaded
+//!   cluster's shared-model `Arc`) are allocated once and reused, so
+//!   steady-state rounds do no heap allocation; the free-downlink
+//!   broadcast scan is skipped outright (bitwise neutral, since it
+//!   only ever adds exact zeros).
+//! * **Work-stealing sweeps** — [`exec::ThreadPool`] deals jobs onto
+//!   per-worker deques and lets idle workers steal from siblings'
+//!   backs, so a skewed grid no longer tail-blocks behind its most
+//!   expensive cell. Where a job runs never reaches results (pinned
+//!   per-spec seeds + spec-order reassembly): `--jobs 1` ≡ `--jobs N`
+//!   byte-for-byte (`rust/tests/test_sched_determinism.rs`).
+//!
 //! ## Determinism rules
 //!
 //! The bitwise guarantees above (`--jobs 1` ≡ `--jobs N`, simulator ≡
@@ -205,7 +238,8 @@ pub mod prelude {
     pub use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
     pub use crate::engine::{
         CodedGather, EngineConfig, EngineCore, EngineRun, FastestKGather,
-        GatherPolicy, RngStreams, RoundEngine, StalenessGather,
+        FastpathGather, GatherPolicy, RngStreams, RoundEngine,
+        StalenessGather,
     };
     pub use crate::grad::{GradBackend, NativeBackend};
     pub use crate::master::{
@@ -219,7 +253,7 @@ pub mod prelude {
         TimeSchedule, VarianceTest, VarianceTestParams,
     };
     pub use crate::rng::{Pcg64, Rng};
-    pub use crate::stats::OrderStats;
+    pub use crate::stats::{OrderStatSampler, OrderStats};
     pub use crate::coding::{
         run_coded_comm, run_coded_comm_traced, run_coded_gd, BernoulliScheme,
         CodedConfig, CodingScheme, CoverPart, CyclicRepetition, FrcScheme,

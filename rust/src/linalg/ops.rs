@@ -39,17 +39,20 @@ pub fn scal(alpha: f32, x: &mut [f32]) {
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
     let mut acc = 0.0f64;
-    // 4-way unroll; LLVM vectorizes this cleanly.
-    let chunks = x.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc += x[i] as f64 * y[i] as f64
-            + x[i + 1] as f64 * y[i + 1] as f64
-            + x[i + 2] as f64 * y[i + 2] as f64
-            + x[i + 3] as f64 * y[i + 3] as f64;
+    // chunks_exact gives the optimizer fixed-size slices (no bounds
+    // checks), like dot_f32; the 4-term sum keeps dot's historical
+    // float association, so results are bitwise unchanged.
+    let xc = x.chunks_exact(4);
+    let yc = y.chunks_exact(4);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    for (a, b) in xc.zip(yc) {
+        acc += a[0] as f64 * b[0] as f64
+            + a[1] as f64 * b[1] as f64
+            + a[2] as f64 * b[2] as f64
+            + a[3] as f64 * b[3] as f64;
     }
-    for i in chunks * 4..x.len() {
-        acc += x[i] as f64 * y[i] as f64;
+    for (a, b) in xr.iter().zip(yr) {
+        acc += *a as f64 * *b as f64;
     }
     acc
 }

@@ -275,6 +275,12 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(dir) = args.get("trace") {
         cfg.trace = Some(dir.to_string());
     }
+    // --fastpath opts into O(k) order-statistics rounds (also `[run]
+    // fastpath`); validate() inside run_experiment rejects configs the
+    // fast path cannot represent.
+    if args.has("fastpath") {
+        cfg.fastpath = true;
+    }
 
     match run_experiment(&cfg) {
         Ok(out) => {

@@ -59,6 +59,22 @@ impl Exponential {
         assert!(lambda > 0.0, "Exponential requires lambda > 0");
         Self { lambda }
     }
+
+    /// Inverse CDF `F⁻¹(p)` for `p ∈ [0, 1)`.
+    #[inline]
+    pub fn quantile(&self, p: f64) -> f64 {
+        self.quantile_tail(1.0 - p)
+    }
+
+    /// Upper-tail inverse `S⁻¹(s) = F⁻¹(1 − s)` for `s ∈ (0, 1]` — the
+    /// numerically stable form for order-statistics sampling, where the
+    /// survival mass `s` is tracked directly (no `1 − p` cancellation).
+    /// `quantile_tail(u)` over `u ~ Uniform(0, 1]` is exactly the
+    /// [`Distribution::sample`] draw.
+    #[inline]
+    pub fn quantile_tail(&self, s: f64) -> f64 {
+        -s.ln() / self.lambda
+    }
 }
 
 impl Distribution for Exponential {
@@ -124,6 +140,20 @@ impl Pareto {
         assert!(xm > 0.0 && alpha > 0.0, "Pareto requires xm, alpha > 0");
         Self { xm, alpha }
     }
+
+    /// Inverse CDF `F⁻¹(p)` for `p ∈ [0, 1)`.
+    #[inline]
+    pub fn quantile(&self, p: f64) -> f64 {
+        self.quantile_tail(1.0 - p)
+    }
+
+    /// Upper-tail inverse `S⁻¹(s)` for `s ∈ (0, 1]` (see
+    /// [`Exponential::quantile_tail`]); matches
+    /// [`Distribution::sample`] over `s ~ Uniform(0, 1]`.
+    #[inline]
+    pub fn quantile_tail(&self, s: f64) -> f64 {
+        self.xm / s.powf(1.0 / self.alpha)
+    }
 }
 
 impl Distribution for Pareto {
@@ -159,6 +189,20 @@ impl Weibull {
     pub fn new(lambda: f64, k: f64) -> Self {
         assert!(lambda > 0.0 && k > 0.0, "Weibull requires lambda, k > 0");
         Self { lambda, k }
+    }
+
+    /// Inverse CDF `F⁻¹(p)` for `p ∈ [0, 1)`.
+    #[inline]
+    pub fn quantile(&self, p: f64) -> f64 {
+        self.quantile_tail(1.0 - p)
+    }
+
+    /// Upper-tail inverse `S⁻¹(s)` for `s ∈ (0, 1]` (see
+    /// [`Exponential::quantile_tail`]); matches
+    /// [`Distribution::sample`] over `s ~ Uniform(0, 1]`.
+    #[inline]
+    pub fn quantile_tail(&self, s: f64) -> f64 {
+        self.lambda * (-s.ln()).powf(1.0 / self.k)
     }
 }
 
@@ -328,6 +372,47 @@ mod tests {
         assert!(
             (ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10
         );
+    }
+
+    #[test]
+    fn quantile_inverts_the_cdf() {
+        // F(F⁻¹(p)) = p analytically for all three delay families.
+        let e = Exponential::new(2.0);
+        let pa = Pareto::new(1.5, 2.5);
+        let w = Weibull::new(2.0, 1.5);
+        for &p in &[0.0, 0.1, 0.5, 0.9, 0.999] {
+            let x = e.quantile(p);
+            assert!((1.0 - (-e.lambda * x).exp() - p).abs() < 1e-12, "exp p={p}");
+            let x = pa.quantile(p);
+            assert!(
+                (1.0 - (pa.xm / x).powf(pa.alpha) - p).abs() < 1e-12,
+                "pareto p={p}"
+            );
+            let x = w.quantile(p);
+            assert!(
+                (1.0 - (-(x / w.lambda).powf(w.k)).exp() - p).abs() < 1e-12,
+                "weibull p={p}"
+            );
+        }
+        // Median sanity: exponential median = ln 2 / λ.
+        assert!(
+            (e.quantile(0.5) - std::f64::consts::LN_2 / 2.0).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn quantile_tail_is_bitwise_the_sampler() {
+        // Each sampler draws U ~ (0,1] and returns S⁻¹(U); quantile_tail
+        // over the same U must reproduce the draw bit for bit.
+        let e = Exponential::new(0.7);
+        let pa = Pareto::new(0.5, 2.2);
+        let w = Weibull::new(1.3, 0.8);
+        for seed in 0..20u64 {
+            let u = Pcg64::seed(seed).next_f64_open();
+            assert_eq!(e.sample(&mut Pcg64::seed(seed)), e.quantile_tail(u));
+            assert_eq!(pa.sample(&mut Pcg64::seed(seed)), pa.quantile_tail(u));
+            assert_eq!(w.sample(&mut Pcg64::seed(seed)), w.quantile_tail(u));
+        }
     }
 
     #[test]

@@ -6,13 +6,17 @@
 //! [`order_stats`] provides `μ_k = E[X_(k)]` and `σ_k² = Var[X_(k)]`
 //! analytically for the exponential model (via harmonic sums — the form
 //! used in the paper's Example 1) and by Monte-Carlo for arbitrary
-//! [`DelayModel`](crate::straggler::DelayModel)s.
+//! [`DelayModel`](crate::straggler::DelayModel)s. [`OrderStatSampler`]
+//! *draws* the ascending first-k arrivals of n i.i.d. delays in O(k) —
+//! the engine fastpath's statistical core.
 
 mod harmonic;
+mod order_sampler;
 mod order_stats;
 mod running;
 
 pub use harmonic::{harmonic, harmonic_sq};
+pub use order_sampler::OrderStatSampler;
 pub use order_stats::{
     exponential_order_mean, exponential_order_var, OrderStats,
 };

@@ -1,0 +1,325 @@
+//! O(k) sampling of the first k order statistics of n i.i.d. delays.
+//!
+//! The engine's exhaustive sync round draws all n worker delays and
+//! quickselects the k fastest — O(n) work and O(n) rng draws per round,
+//! capping experiments at n in the thousands. For i.i.d. delay models the
+//! paper's round time depends on the delays only through the k-th order
+//! statistic `X_(k)`, and that statistic (with the whole ascending prefix
+//! `X_(1..k)`) can be sampled *directly* in O(k):
+//!
+//! * **Exponential / shifted exponential** — the Rényi representation:
+//!   the normalized spacings of exponential order statistics are i.i.d.
+//!   exponentials, `X_(i+1) − X_(i) ~ Exp((n−i)·λ)`, so a cumulative sum
+//!   of k spacing draws yields `X_(1..k)` exactly.
+//! * **Any i.i.d. model with an inverse CDF** (Pareto, Weibull here) —
+//!   conditional uniform order statistics: the survival value
+//!   `S_(i) = 1 − U_(i)` of the i-th smallest of n uniforms satisfies
+//!   `S_(1) = V₁^{1/n}`, `S_(i+1) = S_(i) · V_{i+1}^{1/(n−i)}` with
+//!   `V_j` i.i.d. uniform, and `X_(i) = S⁻¹(S_(i))` via the model's
+//!   [`quantile_tail`](crate::rng::Exponential::quantile_tail). Working
+//!   in the log-tail domain avoids the `1 − p` cancellation entirely.
+//!
+//! Both forms are *distributionally* exact — same law as sorting n
+//! draws — but not bitwise equal to the exhaustive path (different draw
+//! count and order), which is why the engine's fastpath gather is opt-in
+//! (see `engine/fastpath.rs` and the §Perf notes in `lib.rs`).
+
+use super::order_stats::exponential_order_mean;
+use crate::rng::{Pareto, Rng, Weibull};
+
+/// Which analytic family the sampler draws from.
+enum Kind {
+    /// `shift + Exp(lambda)` via Rényi spacings (`shift = 0` is the
+    /// paper's §V exponential).
+    ShiftedExp {
+        /// Deterministic offset added to every arrival.
+        shift: f64,
+        /// Exponential rate.
+        lambda: f64,
+    },
+    /// Pareto(xm, alpha) via conditional uniforms + inverse CDF.
+    Pareto(Pareto),
+    /// Weibull(lambda, k) via conditional uniforms + inverse CDF.
+    Weibull(Weibull),
+}
+
+/// O(k) sampler of the ascending first-k arrival times among n i.i.d.
+/// worker delays.
+pub struct OrderStatSampler {
+    n: usize,
+    kind: Kind,
+}
+
+impl OrderStatSampler {
+    /// Exponential delays with rate `lambda` (the paper's §V model).
+    pub fn exponential(n: usize, lambda: f64) -> Self {
+        Self::shifted_exponential(n, 0.0, lambda)
+    }
+
+    /// Shifted-exponential delays: `shift + Exp(lambda)`.
+    pub fn shifted_exponential(n: usize, shift: f64, lambda: f64) -> Self {
+        assert!(n >= 1, "need at least one worker");
+        assert!(lambda > 0.0, "lambda must be > 0");
+        assert!(shift >= 0.0, "shift must be >= 0");
+        Self { n, kind: Kind::ShiftedExp { shift, lambda } }
+    }
+
+    /// Pareto(xm, alpha) delays.
+    pub fn pareto(n: usize, xm: f64, alpha: f64) -> Self {
+        assert!(n >= 1, "need at least one worker");
+        Self { n, kind: Kind::Pareto(Pareto::new(xm, alpha)) }
+    }
+
+    /// Weibull(lambda, k) delays.
+    pub fn weibull(n: usize, lambda: f64, k: f64) -> Self {
+        assert!(n >= 1, "need at least one worker");
+        Self { n, kind: Kind::Weibull(Weibull::new(lambda, k)) }
+    }
+
+    /// Workers the sampler is sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Human-readable family label for reports.
+    pub fn name(&self) -> String {
+        match &self.kind {
+            Kind::ShiftedExp { shift, lambda } if *shift == 0.0 => {
+                format!("exp(lambda={lambda})")
+            }
+            Kind::ShiftedExp { shift, lambda } => {
+                format!("shifted-exp(shift={shift}, lambda={lambda})")
+            }
+            Kind::Pareto(p) => {
+                format!("pareto(xm={}, alpha={})", p.xm, p.alpha)
+            }
+            Kind::Weibull(w) => {
+                format!("weibull(lambda={}, k={})", w.lambda, w.k)
+            }
+        }
+    }
+
+    /// Draw the ascending arrival times `X_(1) <= … <= X_(k)` of the k
+    /// fastest of n i.i.d. delays into `out` (cleared first), using
+    /// exactly k rng draws. Panics unless `1 <= k <= n`.
+    pub fn sample_first_k<R: Rng + ?Sized>(
+        &self,
+        k: usize,
+        out: &mut Vec<f64>,
+        rng: &mut R,
+    ) {
+        assert!(k >= 1 && k <= self.n, "k must be in 1..=n");
+        out.clear();
+        let n = self.n;
+        match &self.kind {
+            Kind::ShiftedExp { shift, lambda } => {
+                // Rényi spacings: each gap is Exp((n−i)·λ), drawn with
+                // the same `-ln U / rate` form as the exhaustive model.
+                let mut cum = 0.0f64;
+                for i in 0..k {
+                    cum += -rng.next_f64_open().ln()
+                        / ((n - i) as f64 * lambda);
+                    out.push(shift + cum);
+                }
+            }
+            Kind::Pareto(p) => {
+                sample_inverse_cdf(n, k, out, rng, |s| p.quantile_tail(s))
+            }
+            Kind::Weibull(w) => {
+                sample_inverse_cdf(n, k, out, rng, |s| w.quantile_tail(s))
+            }
+        }
+    }
+
+    /// Closed-form `E[X_(k)]` where one exists: the (shifted-)exponential
+    /// family's `shift + (H_n − H_{n−k})/λ` (the quantity `theory`'s
+    /// error bound is built on). `None` for Pareto/Weibull.
+    pub fn expected_kth(&self, k: usize) -> Option<f64> {
+        match &self.kind {
+            Kind::ShiftedExp { shift, lambda } => {
+                Some(shift + exponential_order_mean(self.n, k, *lambda))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Shared conditional-uniform backend: walk the uniform order statistics
+/// downward in log-survival space and map each through the model's
+/// upper-tail inverse CDF `q(s) = S⁻¹(s)`.
+fn sample_inverse_cdf<R: Rng + ?Sized>(
+    n: usize,
+    k: usize,
+    out: &mut Vec<f64>,
+    rng: &mut R,
+    q: impl Fn(f64) -> f64,
+) {
+    // ln S_(i) = Σ_{j<=i} ln(V_j)/(n−j+1); V ∈ (0,1] keeps ln finite.
+    let mut ln_tail = 0.0f64;
+    for i in 0..k {
+        ln_tail += rng.next_f64_open().ln() / ((n - i) as f64);
+        out.push(q(ln_tail.exp()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Pcg64};
+    use crate::stats::exponential_order_var;
+
+    fn mean_var(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn arrivals_are_ascending_and_use_k_draws() {
+        let s = OrderStatSampler::exponential(100, 1.3);
+        let mut rng = Pcg64::seed(1);
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            s.sample_first_k(7, &mut out, &mut rng);
+            assert_eq!(out.len(), 7);
+            for w in out.windows(2) {
+                assert!(w[0] <= w[1], "arrivals must ascend: {out:?}");
+            }
+            assert!(out[0] > 0.0);
+        }
+        // Draw-count contract: k draws exactly, so two samplers sharing
+        // a stream stay aligned.
+        let mut a = Pcg64::seed(9);
+        let mut b = Pcg64::seed(9);
+        s.sample_first_k(5, &mut out, &mut a);
+        for _ in 0..5 {
+            b.next_f64_open();
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn renyi_kth_matches_closed_form_moments() {
+        let (n, k, lambda) = (40, 10, 2.0);
+        let s = OrderStatSampler::exponential(n, lambda);
+        let mut rng = Pcg64::seed(2);
+        let mut out = Vec::new();
+        let rounds = 200_000;
+        let kth: Vec<f64> = (0..rounds)
+            .map(|_| {
+                s.sample_first_k(k, &mut out, &mut rng);
+                out[k - 1]
+            })
+            .collect();
+        let (m, v) = mean_var(&kth);
+        let want_m = exponential_order_mean(n, k, lambda);
+        let want_v = exponential_order_var(n, k, lambda);
+        assert!((m - want_m).abs() < 0.003, "mean {m} want {want_m}");
+        assert!((v - want_v).abs() < 0.003, "var {v} want {want_v}");
+    }
+
+    #[test]
+    fn shift_offsets_every_arrival() {
+        let plain = OrderStatSampler::exponential(20, 1.0);
+        let shifted = OrderStatSampler::shifted_exponential(20, 1.5, 1.0);
+        let (mut a, mut b) = (Pcg64::seed(3), Pcg64::seed(3));
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        plain.sample_first_k(6, &mut oa, &mut a);
+        shifted.sample_first_k(6, &mut ob, &mut b);
+        for (x, y) in oa.iter().zip(&ob) {
+            assert!((y - x - 1.5).abs() < 1e-12);
+        }
+        assert_eq!(
+            shifted.expected_kth(6).unwrap(),
+            1.5 + plain.expected_kth(6).unwrap()
+        );
+    }
+
+    #[test]
+    fn pareto_minimum_is_pareto_with_rate_n_alpha() {
+        // min of n Pareto(xm, α) ~ Pareto(xm, nα): pin the sampled
+        // X_(1) mean against that closed form.
+        let (n, xm, alpha) = (25, 1.0, 2.0);
+        let s = OrderStatSampler::pareto(n, xm, alpha);
+        let mut rng = Pcg64::seed(4);
+        let mut out = Vec::new();
+        let mins: Vec<f64> = (0..200_000)
+            .map(|_| {
+                s.sample_first_k(1, &mut out, &mut rng);
+                out[0]
+            })
+            .collect();
+        let (m, _) = mean_var(&mins);
+        let na = n as f64 * alpha;
+        let want = na * xm / (na - 1.0);
+        assert!((m - want).abs() < 0.002, "min mean {m} want {want}");
+        assert!(mins.iter().all(|&x| x >= xm));
+    }
+
+    #[test]
+    fn weibull_minimum_is_rescaled_weibull() {
+        // min of n Weibull(λ, k) ~ Weibull(λ·n^{−1/k}, k).
+        let (n, lambda, k) = (16, 2.0, 1.5);
+        let s = OrderStatSampler::weibull(n, lambda, k);
+        let mut rng = Pcg64::seed(5);
+        let mut out = Vec::new();
+        let mins: Vec<f64> = (0..200_000)
+            .map(|_| {
+                s.sample_first_k(1, &mut out, &mut rng);
+                out[0]
+            })
+            .collect();
+        let (m, _) = mean_var(&mins);
+        let want =
+            Weibull::new(lambda * (n as f64).powf(-1.0 / k), k).mean();
+        assert!((m - want).abs() < 0.005, "min mean {m} want {want}");
+    }
+
+    #[test]
+    fn full_prefix_k_equals_n_matches_sorted_exhaustive_moments() {
+        // k = n: the sampler emits the full order sequence; its per-rank
+        // means must agree with sorting n exhaustive draws.
+        let (n, lambda) = (8, 1.0);
+        let s = OrderStatSampler::exponential(n, lambda);
+        let d = crate::rng::Exponential::new(lambda);
+        let rounds = 100_000;
+        let mut fast = vec![0.0f64; n];
+        let mut slow = vec![0.0f64; n];
+        let mut rng_f = Pcg64::seed(6);
+        let mut rng_s = Pcg64::seed(7);
+        let mut out = Vec::new();
+        let mut buf = vec![0.0f64; n];
+        for _ in 0..rounds {
+            s.sample_first_k(n, &mut out, &mut rng_f);
+            for (acc, x) in fast.iter_mut().zip(&out) {
+                *acc += x;
+            }
+            for slot in buf.iter_mut() {
+                *slot = d.sample(&mut rng_s);
+            }
+            buf.sort_unstable_by(|a, b| a.total_cmp(b));
+            for (acc, x) in slow.iter_mut().zip(&buf) {
+                *acc += x;
+            }
+        }
+        for (rank, (f, sl)) in fast.iter().zip(&slow).enumerate() {
+            let (f, sl) = (f / rounds as f64, sl / rounds as f64);
+            assert!(
+                (f - sl).abs() < 0.02,
+                "rank {rank}: fastpath mean {f} vs exhaustive {sl}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be in 1..=n")]
+    fn rejects_k_out_of_range() {
+        let s = OrderStatSampler::exponential(4, 1.0);
+        s.sample_first_k(5, &mut Vec::new(), &mut Pcg64::seed(0));
+    }
+}

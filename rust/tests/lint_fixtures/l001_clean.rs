@@ -6,3 +6,5 @@ use crate::{rng::Pcg64, straggler::DelayModel};
 mod tests {
     use crate::sweep::derive_seed;
 }
+// The fastpath's order-statistics edge is table-sanctioned.
+use crate::stats::OrderStatSampler;

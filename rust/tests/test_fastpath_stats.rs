@@ -1,0 +1,189 @@
+//! Statistical contract of the order-statistics fastpath.
+//!
+//! The fastpath (`[run] fastpath` / `--fastpath`) never draws the n
+//! per-worker delays; it samples the first-k arrival times directly from
+//! the order-statistics law in O(k). Its promise is **distributional**
+//! equivalence with the exhaustive gather, not bitwise equality — so the
+//! tests here are (a) fixed-seed Monte-Carlo agreement of moments and
+//! quantiles between the two samplers on a small n where exhaustive is
+//! cheap, (b) an exact pin of the sampler's closed-form `E[X_(k)]`
+//! against the theory layer and the textbook harmonic-difference
+//! formula, and (c) an end-to-end `run_experiment` pass showing the
+//! fastpath trains, is seed-deterministic, and genuinely takes a
+//! different (equally valid) trajectory than the exhaustive engine.
+
+use adasgd::config::{
+    DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
+};
+use adasgd::coordinator::run_experiment;
+use adasgd::rng::{Pcg64, Rng};
+use adasgd::stats::{quantile, OrderStatSampler, OrderStats};
+
+const N: usize = 12;
+const K: usize = 4;
+const LAMBDA: f64 = 1.5;
+/// Monte-Carlo rounds. At 60k the standard error of the k-th-arrival
+/// mean is ~5e-4, so the 0.01 tolerances below sit at ~20 sigma: tight
+/// enough to catch an off-by-one in the spacing rates (which shifts the
+/// mean by ~0.02), loose enough to never flake on a fixed seed.
+const ROUNDS: usize = 60_000;
+
+fn mean_var(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var =
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var)
+}
+
+/// The exhaustive reference: draw all n delays, sort, take the k-th.
+fn exhaustive_kth(rng: &mut Pcg64) -> f64 {
+    let mut draws: Vec<f64> =
+        (0..N).map(|_| -rng.next_f64_open().ln() / LAMBDA).collect();
+    draws.sort_unstable_by(|a, b| a.total_cmp(b));
+    draws[K - 1]
+}
+
+#[test]
+fn fastpath_kth_arrival_matches_exhaustive_moments_and_quantiles() {
+    let sampler = OrderStatSampler::exponential(N, LAMBDA);
+    // Independent streams: the comparison is between two estimates of
+    // the same distribution, not between coupled draws.
+    let mut fast_rng = Pcg64::seed_stream(41, 1);
+    let mut ex_rng = Pcg64::seed_stream(41, 2);
+    let mut buf = Vec::new();
+    let mut fast = Vec::with_capacity(ROUNDS);
+    let mut exhaustive = Vec::with_capacity(ROUNDS);
+    for _ in 0..ROUNDS {
+        sampler.sample_first_k(K, &mut buf, &mut fast_rng);
+        // Arrivals are nondecreasing by construction; the k-th is last.
+        assert_eq!(buf.len(), K);
+        assert!(buf.windows(2).all(|w| w[0] <= w[1]));
+        fast.push(buf[K - 1]);
+        exhaustive.push(exhaustive_kth(&mut ex_rng));
+    }
+
+    let (fm, fv) = mean_var(&fast);
+    let (em, ev) = mean_var(&exhaustive);
+    let theory = OrderStats::exponential(N, LAMBDA);
+    assert!(
+        (fm - theory.mean(K)).abs() < 0.01,
+        "fastpath mean {fm} vs theory {}",
+        theory.mean(K)
+    );
+    assert!(
+        (em - theory.mean(K)).abs() < 0.01,
+        "exhaustive mean {em} vs theory {}",
+        theory.mean(K)
+    );
+    assert!((fm - em).abs() < 0.01, "means diverge: {fm} vs {em}");
+    assert!(
+        (fv - theory.var(K)).abs() < 0.004,
+        "fastpath var {fv} vs theory {}",
+        theory.var(K)
+    );
+    assert!((fv - ev).abs() < 0.004, "variances diverge: {fv} vs {ev}");
+    for q in [0.1, 0.25, 0.5, 0.75, 0.9] {
+        let qf = quantile(&fast, q);
+        let qe = quantile(&exhaustive, q);
+        assert!(
+            (qf - qe).abs() < 0.02,
+            "q={q}: fastpath {qf} vs exhaustive {qe}"
+        );
+    }
+}
+
+#[test]
+fn expected_kth_pins_to_theory_and_the_harmonic_closed_form() {
+    for (n, k, lambda) in [(10, 3, 1.0), (50, 49, 2.0), (1000, 1, 0.5)] {
+        let got = OrderStatSampler::exponential(n, lambda)
+            .expected_kth(k)
+            .expect("exponential has a closed-form order mean");
+        let theory = OrderStats::exponential(n, lambda).mean(k);
+        assert!(
+            (got - theory).abs() <= 1e-12 * theory.abs().max(1.0),
+            "n={n} k={k}: sampler {got} vs theory {theory}"
+        );
+        // E[X_(k)] = (H_n - H_{n-k}) / lambda, summed independently.
+        let hn: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+        let hnk: f64 = (1..=(n - k)).map(|i| 1.0 / i as f64).sum();
+        let closed = (hn - hnk) / lambda;
+        assert!(
+            (got - closed).abs() < 1e-9,
+            "n={n} k={k}: sampler {got} vs closed form {closed}"
+        );
+    }
+    // Heavy-tailed models have no harmonic closed form wired in; the
+    // sampler must say so rather than guess.
+    assert!(OrderStatSampler::pareto(10, 0.5, 2.5).expected_kth(3).is_none());
+    assert!(OrderStatSampler::weibull(10, 1.0, 1.5).expected_kth(3).is_none());
+}
+
+fn fast_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        label: "fastpath-e2e".into(),
+        n: 10,
+        eta: 2e-3,
+        max_iterations: 400,
+        max_time: 0.0,
+        seed: 11,
+        record_stride: 50,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 5 },
+        workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        comm: Default::default(),
+        coding: None,
+        jobs: 0,
+        trace: None,
+        fastpath: true,
+    }
+}
+
+#[test]
+fn fastpath_experiment_trains_and_is_seed_deterministic() {
+    let out1 = run_experiment(&fast_cfg()).expect("fastpath run");
+    assert_eq!(out1.steps, 400);
+    assert!(out1.total_time > 0.0);
+    let first = out1.recorder.samples()[0].error;
+    let last = out1.recorder.last().unwrap().error;
+    assert!(last < first * 1e-2, "no training progress: {first} -> {last}");
+
+    // Same seed, same trajectory: the fastpath is fully deterministic
+    // even though it is only distributionally tied to the exhaustive
+    // gather.
+    let out2 = run_experiment(&fast_cfg()).expect("fastpath rerun");
+    assert_eq!(out1.recorder.samples(), out2.recorder.samples());
+    assert_eq!(out1.total_time.to_bits(), out2.total_time.to_bits());
+    assert_eq!(out1.k_changes, out2.k_changes);
+
+    // And it is a *different* draw than the exhaustive engine on the
+    // same config — the contract is the law, not the bits.
+    let mut ex_cfg = fast_cfg();
+    ex_cfg.fastpath = false;
+    let ex = run_experiment(&ex_cfg).expect("exhaustive run");
+    assert_eq!(ex.steps, 400);
+    assert_ne!(out1.total_time.to_bits(), ex.total_time.to_bits());
+    // Both drivers reach the same error regime on this workload.
+    let ex_last = ex.recorder.last().unwrap().error;
+    assert!(
+        last < ex_last * 50.0 && ex_last < last * 50.0,
+        "trajectories should land in the same regime: {last} vs {ex_last}"
+    );
+}
+
+#[test]
+fn fastpath_round_times_average_the_order_statistic() {
+    // The engine's clock advances by the sampled k-th arrival each
+    // round, so total_time / steps is a Monte-Carlo estimate of
+    // E[X_(k)] — tie the end-to-end run back to the theory layer.
+    let mut cfg = fast_cfg();
+    cfg.max_iterations = 2_000;
+    let out = run_experiment(&cfg).expect("fastpath run");
+    let per_round = out.total_time / out.steps as f64;
+    let want = OrderStats::exponential(10, 1.0).mean(5);
+    // sigma(X_(5)) ~ 0.3 for n=10 => SE over 2000 rounds ~ 0.007.
+    assert!(
+        (per_round - want).abs() < 0.05,
+        "per-round time {per_round} vs E[X_(5)] = {want}"
+    );
+}

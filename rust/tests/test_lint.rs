@@ -108,6 +108,14 @@ fn l001_fires_on_layering_violations() {
     assert!(bad.findings[1].message.contains("crate::cli"));
     let clean = lint_at("rust/src/engine/fx.rs", "l001_clean.rs");
     assert_eq!(clean.active_count(), 0, "{:?}", clean.findings);
+    // The fastpath legalised engine → stats (the clean fixture covers
+    // it); the reverse direction must still fire.
+    let rev = lint_sources(&[(
+        "rust/src/stats/order_sampler.rs".to_string(),
+        "use crate::engine::FastpathGather;\nfn f() {}\n".to_string(),
+    )]);
+    assert_eq!(rules_fired(&rev), ["L001"]);
+    assert!(rev.findings[0].message.contains("crate::engine"));
 }
 
 #[test]

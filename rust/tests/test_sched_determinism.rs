@@ -1,0 +1,145 @@
+//! Scheduling invisibility of the work-stealing executor.
+//!
+//! The `exec::ThreadPool` deals jobs round-robin onto per-worker deques
+//! and lets idle workers steal from their siblings' backs. That changes
+//! *where* a job runs — never *what* it computes: every spec's RNG
+//! streams derive from its own pinned seed and the executor reassembles
+//! completions into spec order. These tests drive the pool with the
+//! grid shape stealing exists for — one cell ~20x the cost of its
+//! siblings — and assert `--jobs 1` and `--jobs N` stay byte-identical,
+//! plus a regression test that a panic inside a *stolen* job still
+//! propagates out of `map`.
+
+use std::sync::{Arc, Barrier};
+
+use adasgd::config::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
+use adasgd::coordinator::ExperimentOutput;
+use adasgd::exec::ThreadPool;
+use adasgd::sweep::{write_sweep_csv, RunSpec, SweepExecutor};
+
+fn skew_base() -> ExperimentConfig {
+    ExperimentConfig {
+        label: String::new(),
+        n: 10,
+        eta: 1e-3,
+        max_iterations: 100,
+        max_time: 0.0,
+        seed: 7,
+        record_stride: 20,
+        delays: DelaySpec::Exponential { lambda: 1.0 },
+        policy: PolicySpec::Fixed { k: 5 },
+        workload: WorkloadSpec::LinReg { m: 200, d: 10 },
+        comm: Default::default(),
+        coding: None,
+        jobs: 0,
+        trace: None,
+        fastpath: false,
+    }
+}
+
+/// A deliberately skewed grid: cell 0 runs 20x the iterations of its
+/// nine siblings, so under round-robin dealing without stealing the
+/// workers sharing its deque would tail-block behind it. Each cell gets
+/// its own seed so outputs are distinguishable.
+fn skewed_specs() -> Vec<RunSpec> {
+    (0..10usize)
+        .map(|i| {
+            let mut cfg = skew_base();
+            cfg.max_iterations = if i == 0 { 2_000 } else { 100 };
+            cfg.seed = 100 + i as u64;
+            cfg.label = format!(
+                "skew/cell{i}/{}",
+                if i == 0 { "heavy" } else { "light" }
+            );
+            RunSpec::from_config(i, cfg)
+        })
+        .collect()
+}
+
+fn assert_outputs_identical(a: &ExperimentOutput, b: &ExperimentOutput) {
+    assert_eq!(a.recorder.label, b.recorder.label);
+    assert_eq!(
+        a.recorder.samples(),
+        b.recorder.samples(),
+        "{}: recorded series must be bitwise equal",
+        a.recorder.label
+    );
+    assert_eq!(a.steps, b.steps, "{}", a.recorder.label);
+    assert_eq!(
+        a.total_time.to_bits(),
+        b.total_time.to_bits(),
+        "{}: clock must be bitwise equal",
+        a.recorder.label
+    );
+    assert_eq!(a.k_changes, b.k_changes, "{}", a.recorder.label);
+    assert_eq!(a.bytes_sent, b.bytes_sent, "{}", a.recorder.label);
+    assert_eq!(a.bytes_down, b.bytes_down, "{}", a.recorder.label);
+    assert_eq!(a.comm_time.to_bits(), b.comm_time.to_bits(), "{}", a.recorder.label);
+    assert_eq!(a.down_time.to_bits(), b.down_time.to_bits(), "{}", a.recorder.label);
+}
+
+#[test]
+fn skewed_grid_outputs_are_jobs_invariant() {
+    let specs = skewed_specs();
+    let seq = SweepExecutor::new(1).run(&specs).expect("sequential sweep");
+    // jobs=4 forces steals (the heavy cell pins one worker); jobs=16
+    // oversubscribes (more workers than cells) so most workers only
+    // ever run stolen or dealt-singleton jobs.
+    for jobs in [4usize, 16] {
+        let par = SweepExecutor::new(jobs).run(&specs).expect("parallel sweep");
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_outputs_identical(a, b);
+        }
+    }
+    // The skew is real: the heavy cell did ~20x the steps.
+    assert_eq!(seq[0].steps, 2_000);
+    assert!(seq[1..].iter().all(|o| o.steps == 100));
+}
+
+#[test]
+fn skewed_grid_csvs_are_byte_identical() {
+    let specs = skewed_specs();
+    let dir = std::env::temp_dir().join("adasgd_sched_determinism_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1 = dir.join("jobs1.csv");
+    let p3 = dir.join("jobs3.csv");
+    let seq = SweepExecutor::new(1).run(&specs).expect("sequential sweep");
+    let par = SweepExecutor::new(3).run(&specs).expect("parallel sweep");
+    write_sweep_csv(&p1, &specs, &seq).unwrap();
+    write_sweep_csv(&p3, &specs, &par).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b3 = std::fs::read(&p3).unwrap();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b3, "worker count must never reach the CSV bytes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Panic propagation through the *stealing* path, deterministically.
+///
+/// Pool of 2, 4 jobs: round-robin dealing puts {0, 2} on worker 0's
+/// deque and {1, 3} on worker 1's. Job 0 blocks on a barrier, so job 2
+/// (behind it on the same deque) can only ever run by being stolen —
+/// steals pop the back, so no interleaving lets one thread run both 0
+/// and 2. The thief runs job 2, meets job 0 at the barrier (releasing
+/// both), then job 2 panics; `map` must resurface that panic.
+#[test]
+#[should_panic(expected = "stolen job 2 exploded")]
+fn panic_in_a_stolen_job_propagates_out_of_map() {
+    let pool = ThreadPool::new(2).expect("two-worker pool");
+    let barrier = Arc::new(Barrier::new(2));
+    let b = Arc::clone(&barrier);
+    let _ = pool.map(4, move |i| {
+        match i {
+            0 => {
+                b.wait();
+            }
+            2 => {
+                b.wait();
+                panic!("stolen job 2 exploded");
+            }
+            _ => {}
+        }
+        i
+    });
+}

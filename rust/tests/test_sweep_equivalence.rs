@@ -38,6 +38,7 @@ fn tiny_base() -> ExperimentConfig {
         coding: None,
         jobs: 0,
         trace: None,
+        fastpath: false,
     }
 }
 

@@ -505,6 +505,7 @@ fn run_experiment_writes_a_trace_file_that_replay_experiment_reproduces() {
         coding: None,
         jobs: 0,
         trace: Some(dir.display().to_string()),
+        fastpath: false,
     };
     let recorded = run_experiment(&cfg).expect("traced run");
     let in_memory =
