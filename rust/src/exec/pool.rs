@@ -37,13 +37,17 @@ use std::thread::JoinHandle;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Park-state guarded by [`Shared::lock`]: the queued-job counter and
-/// the shutdown flag. The counter may transiently over/under-count
-/// while a push or pop is between "touch deque" and "update counter";
-/// parked workers treat it as a rescan hint, never as ground truth, so
-/// the transient is harmless (a spurious rescan or a slightly-late
-/// park, never a lost job).
+/// the shutdown flag. Deque mutation and counter update happen under
+/// separate locks, so a worker can pop a just-pushed job and decrement
+/// *before* the pusher's increment — the counter must therefore be
+/// signed and unsaturated: the transient -1 is cancelled exactly by the
+/// late +1. (A saturating unsigned counter would swallow the decrement
+/// and drift permanently positive, leaving workers busy-spinning over
+/// empty deques and `Drop::join` hung on the `queued > 0` rescan loop.)
+/// Parked workers still treat the counter as a rescan hint, never as
+/// ground truth about *which* deque holds work.
 struct Control {
-    queued: usize,
+    queued: isize,
     shutdown: bool,
 }
 
@@ -72,7 +76,9 @@ impl Shared {
             };
             if let Some(job) = job {
                 let mut ctl = self.lock.lock().expect("pool lock poisoned");
-                ctl.queued = ctl.queued.saturating_sub(1);
+                // May transiently reach -1 when this pop beat the
+                // pusher's increment; never saturate (see `Control`).
+                ctl.queued -= 1;
                 return Some(job);
             }
         }
@@ -265,6 +271,36 @@ mod tests {
         // The workers must still be alive to serve useful jobs.
         let out = pool.map(10, |i| i + 1);
         assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn racing_push_and_grab_never_wedges_the_counter() {
+        use std::time::Duration;
+        // Regression: `grab` used to decrement `queued` with
+        // `saturating_sub`. A worker popping a just-pushed job before
+        // the pusher's increment saturated the decrement away, leaving
+        // `queued` over-counted forever — workers busy-spun over empty
+        // deques and `Drop::join` hung. Hammer many tiny jobs (maximum
+        // pop-vs-increment overlap) across repeated pool lifetimes and
+        // require the drop/join to finish under a watchdog.
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            for _ in 0..50 {
+                let pool = ThreadPool::new(4).unwrap();
+                let hits = Arc::new(AtomicUsize::new(0));
+                for _ in 0..200 {
+                    let hits = Arc::clone(&hits);
+                    pool.execute(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                drop(pool); // join — hangs if the counter drifted
+                assert_eq!(hits.load(Ordering::SeqCst), 200);
+            }
+            tx.send(()).unwrap();
+        });
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("pool drop hung: queued counter drifted");
     }
 
     #[test]
