@@ -44,6 +44,7 @@ fn run(
         max_time,
         seed,
         record_stride: 50,
+        intra_jobs: 1,
     };
     let r = run_fastest_k(
         &mut backend,

@@ -71,6 +71,7 @@ fn main() {
             seed: 0,
             record_stride: 200,
             staleness_damping: damping,
+            intra_jobs: 1,
         };
         let run = run_async(
             &mut backend,
@@ -106,6 +107,7 @@ fn main() {
                 seed: 1,
                 record_stride: 100_000,
                 staleness_damping: true,
+                intra_jobs: 1,
             };
             let run = run_async(
                 &mut backend,

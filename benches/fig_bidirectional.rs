@@ -52,6 +52,7 @@ fn base(seed: u64, smoke: bool) -> ExperimentConfig {
         },
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     }

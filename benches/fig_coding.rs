@@ -54,6 +54,7 @@ fn base(seed: u64, smoke: bool) -> ExperimentConfig {
         comm: CommSpec { bandwidth: UP_BANDWIDTH, ..Default::default() },
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     }

@@ -68,6 +68,7 @@ fn base(seed: u64, s: &Scale) -> ExperimentConfig {
         },
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     }

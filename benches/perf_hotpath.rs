@@ -1,10 +1,13 @@
 //! Whole-stack hot-path microbenchmarks — the §Perf measurement harness.
 //!
 //! L3: fastest-k selection, master-iteration throughput, event queue,
-//! sweep-executor fan-out. L3↔RT (with `--features pjrt`): PJRT execute
-//! latency (persistent-buffer vs literal upload). L1-analog: native
-//! fused partial gradient (the Rust mirror of the Pallas kernel's
-//! single-pass structure).
+//! sweep-executor fan-out, and large-d rounds at
+//! `intra_jobs ∈ {1, 4, all}` (the intra-round fork–join speedup with
+//! its byte-identical trajectory). L3↔RT (with `--features pjrt`):
+//! PJRT execute latency (persistent-buffer vs literal upload).
+//! L1-analog: native fused partial gradient (the Rust mirror of the
+//! Pallas kernel's single-pass structure) and the column-panel
+//! blocked `gemv_t` against its row-walk reference.
 //!
 //! Besides the text report, every timed entry lands in
 //! `results/BENCH_hotpath.json` (name, median, p10/p90, mean, samples) —
@@ -27,7 +30,9 @@ use adasgd::engine::{
     EngineConfig, EngineCore, FastpathGather, RngStreams, RoundEngine,
 };
 use adasgd::grad::{GradBackend, NativeBackend};
-use adasgd::linalg::{gemm, gemv, Matrix};
+use adasgd::linalg::{
+    gemm, gemv, gemv_t_blocked, gemv_t_rowwalk, Matrix,
+};
 use adasgd::comm::CommChannel;
 use adasgd::master::{
     fastest_k_select, run_fastest_k, run_fastest_k_comm_traced, MasterConfig,
@@ -62,6 +67,7 @@ fn sweep_spec(i: usize, iters: u64) -> RunSpec {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     })
@@ -162,9 +168,97 @@ fn main() {
     );
     report.push(r);
 
+    section("gemv_t — column-panel blocking vs row-walk");
+    // The acceptance pair: at the fig-2 shard shape (40x100 — one
+    // panel) blocking must cost nothing, and at a panel-spanning d the
+    // blocked walk keeps the y panel cache-resident across rows. Both
+    // paths are bitwise-identical; this only prices the loop order.
+    let mut krng = Pcg64::seed(17);
+    let mut fill = |m: &mut Matrix| {
+        for v in m.as_mut_slice() {
+            *v = krng.next_f64() as f32 - 0.5;
+        }
+    };
+    let mut x_fig2 = Matrix::zeros(40, 100);
+    fill(&mut x_fig2);
+    let mut x_wide = Matrix::zeros(40, 8192);
+    fill(&mut x_wide);
+    let r40: Vec<f32> = (0..40).map(|i| (i as f32) * 0.07 - 1.0).collect();
+    let mut yt = vec![0.0f32; 8192];
+    for (shape, x_t, dlen) in
+        [("40x100 (fig-2 shard)", &x_fig2, 100usize), ("40x8192", &x_wide, 8192)]
+    {
+        let r = micro.run(&format!("gemv_t {shape} row-walk"), || {
+            gemv_t_rowwalk(0.025, x_t, &r40, 0.0, &mut yt[..dlen]);
+            std::hint::black_box(&yt);
+        });
+        emit(&mut report, r);
+        let r = micro.run(&format!("gemv_t {shape} blocked"), || {
+            gemv_t_blocked(0.025, x_t, &r40, 0.0, &mut yt[..dlen]);
+            std::hint::black_box(&yt);
+        });
+        emit(&mut report, r);
+    }
+
+    section("intra-round parallelism — large-d fastest-k rounds");
+    // The tentpole pair: identical rounds (same seed, byte-identical
+    // trajectory) at intra_jobs = 1 / 4 / all-cores. The k responders'
+    // partial gradients land in per-responder arena slices in parallel
+    // and reduce in fixed responder order; merge/apply loops split into
+    // fixed column blocks. d is large enough that one round is kernel-
+    // dominated, which is the regime intra_jobs exists for.
+    let em = ExponentialDelays::new(1.0);
+    let big_d = 32_768usize;
+    let big = SyntheticDataset::generate(
+        SyntheticConfig { m: 128, d: big_d, ..Default::default() },
+        11,
+    );
+    let big_shards = Shards::partition(&big, 8);
+    let big_rounds: u64 = if args.smoke { 5 } else { 30 };
+    let w0_big = vec![0.0f32; big_d];
+    let bi = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    for (tag, ij) in [
+        ("intra_jobs=1", 1usize),
+        ("intra_jobs=4", 4),
+        ("intra_jobs=0 (all cores)", 0),
+    ] {
+        let cfg = MasterConfig {
+            eta: 1e-4,
+            momentum: 0.0,
+            max_iterations: big_rounds,
+            max_time: 0.0,
+            seed: 5,
+            record_stride: 1_000_000, // no eval in the timed loop
+            intra_jobs: ij,
+        };
+        // Construct outside the timed closure: cloning the 16 MiB
+        // dataset would otherwise dilute the kernel speedup.
+        let mut backend = NativeBackend::new(big_shards.clone());
+        let r = bi.run(
+            &format!("{big_rounds} rounds @ n=8 k=4 d=32768, {tag}"),
+            || {
+                let mut policy = FixedK::new(4);
+                let run = run_fastest_k(
+                    &mut backend,
+                    &em,
+                    &mut policy,
+                    &w0_big,
+                    &cfg,
+                    &mut |_w| 0.0,
+                );
+                std::hint::black_box(run.iterations);
+            },
+        );
+        println!(
+            "{}   ({} per round)",
+            r.summary(),
+            fmt_duration(r.median() / big_rounds as f64)
+        );
+        report.push(r);
+    }
+
     section("master loop end-to-end (native, n=50, fig-2 shapes)");
     let problem = LinRegProblem::new(&ds);
-    let em = ExponentialDelays::new(1.0);
     let loop_iters: u64 = if args.smoke { 200 } else { 2000 };
     for k in [10usize, 40] {
         let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
@@ -178,6 +272,7 @@ fn main() {
                 max_time: 0.0,
                 seed: 3,
                 record_stride: 1_000_000, // no eval in the timed loop
+                intra_jobs: 1,
             };
             let run = run_fastest_k(
                 &mut backend,
@@ -229,6 +324,7 @@ fn main() {
         max_time: 0.0,
         seed: 3,
         record_stride: 1_000_000, // no eval in the timed loop
+        intra_jobs: 1,
     };
     let bt = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
     for (tag, on) in [("off", false), ("on", true)] {
@@ -323,6 +419,7 @@ fn main() {
                 max_time: 0.0,
                 seed: 7,
                 record_stride: 1_000_000, // no eval in the timed loop
+                intra_jobs: 1,
             };
             let core = EngineCore::new(
                 "hotpath-fastpath",

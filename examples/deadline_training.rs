@@ -25,6 +25,7 @@ fn run_policy(
         max_time,
         seed: 1,
         record_stride: 20,
+        intra_jobs: 1,
     };
     run_fastest_k(
         &mut backend,

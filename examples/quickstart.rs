@@ -28,6 +28,7 @@ fn main() {
         max_time: 3000.0,
         seed: 0,
         record_stride: 25,
+        intra_jobs: 1,
     };
     let w0 = vec![0.0f32; problem.d()];
 

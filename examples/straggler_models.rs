@@ -22,6 +22,7 @@ fn min_error_under(
         max_time,
         seed: 2,
         record_stride: 25,
+        intra_jobs: 1,
     };
     let run = run_fastest_k(
         &mut backend,

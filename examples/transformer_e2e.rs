@@ -49,6 +49,7 @@ fn main() {
         max_time: 0.0,
         seed: 0,
         record_stride: (steps / 30).max(1),
+        intra_jobs: 1,
     };
 
     // Baseline: wait for every worker (k = n) — the straggler-bound run.

@@ -18,6 +18,7 @@
 //! | D003 | wall-clock reads outside `bench_harness` |
 //! | D004 | literal-seeded RNG construction |
 //! | D005 | `println!`/`eprintln!` in library modules |
+//! | D006 | `thread::spawn` outside `exec` |
 //! | L001 | `use crate::X` edges outside the layering table |
 //! | S001 | CSV / trace schema drift between writer and reader |
 //!

@@ -3,7 +3,7 @@
 /// One lint finding.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Finding {
-    /// Rule id (`D001` ... `D005`, `L001`, `S001`, or `E001` for a
+    /// Rule id (`D001` ... `D006`, `L001`, `S001`, or `E001` for a
     /// file the lexer could not process).
     pub rule: &'static str,
     /// Repo-relative path with forward slashes.
@@ -66,6 +66,13 @@ pub const RULES: &[RuleInfo] = &[
         summary: "no println!/eprintln! in library modules",
         protects: "library output goes through metrics/recorders; \
                    stdout belongs to the CLI and benches",
+    },
+    RuleInfo {
+        id: "D006",
+        summary: "no thread::spawn outside exec",
+        protects: "one shared pool: sweep- and intra-round \
+                   parallelism compose without oversubscription, and \
+                   every reduction stays fixed-order",
     },
     RuleInfo {
         id: "L001",
@@ -268,7 +275,10 @@ mod tests {
         let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
         assert_eq!(
             ids,
-            ["D001", "D002", "D003", "D004", "D005", "L001", "S001"]
+            [
+                "D001", "D002", "D003", "D004", "D005", "D006",
+                "L001", "S001"
+            ]
         );
     }
 }

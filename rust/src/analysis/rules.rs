@@ -1,4 +1,4 @@
-//! The determinism rules (D001–D005) and per-file rule dispatch.
+//! The determinism rules (D001–D006) and per-file rule dispatch.
 //!
 //! Each rule is a token-sequence matcher over a [`SourceFile`]; rule
 //! scoping (which directories, whether test regions count) lives here
@@ -32,6 +32,9 @@ pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
         d004(sf, &mut out);
         if !matches!(top, "cli" | "bench_harness" | "main") {
             d005(sf, &mut out);
+        }
+        if !matches!(top, "exec") {
+            d006(sf, &mut out);
         }
         layering::l001(sf, top, &mut out);
     }
@@ -258,6 +261,41 @@ fn d005(sf: &SourceFile, out: &mut Vec<Finding>) {
     }
 }
 
+/// D006: `thread::spawn` outside `exec`. Ad-hoc OS threads bypass the
+/// single shared pool, so they oversubscribe the machine under
+/// sweep-level fan-out and their nondeterministic interleaving has no
+/// fixed-order reduction to hide behind. All live parallelism routes
+/// through `exec` (`ThreadPool::scope` / `parallel_for` /
+/// `Parallelism`); test regions may spawn freely to build scenarios.
+fn d006(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.tokens;
+    for i in 0..toks.len() {
+        if !ident_at(toks, i, "thread") || sf.is_test_line(toks[i].line)
+        {
+            continue;
+        }
+        if punct_at(toks, i + 1, ":")
+            && punct_at(toks, i + 2, ":")
+            && ident_at(toks, i + 3, "spawn")
+        {
+            out.push(Finding {
+                rule: "D006",
+                file: sf.rel.clone(),
+                line: toks[i].line,
+                message: "thread::spawn outside exec: ad-hoc threads \
+                          bypass the shared pool"
+                    .to_string(),
+                hint: "route parallelism through exec (ThreadPool::\
+                       scope / parallel_for, or a Parallelism token); \
+                       one pool keeps sweeps from oversubscribing and \
+                       keeps reductions in fixed order"
+                    .to_string(),
+                suppressed: false,
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +424,40 @@ fn f(seed: u64) {
         assert!(findings("rust/src/main.rs", src)
             .iter()
             .all(|f| f.rule != "D005"));
+    }
+
+    #[test]
+    fn d006_scoped_to_non_exec_live_code() {
+        let live = "fn f() { std::thread::spawn(|| {}); }\n";
+        // Live spawn in a library module fires; both the
+        // `std::thread::spawn` and bare `thread::spawn` spellings hit
+        // the same `thread :: spawn` token core.
+        assert!(findings("rust/src/engine/x.rs", live)
+            .iter()
+            .any(|f| f.rule == "D006" && !f.suppressed));
+        let bare = "fn f() { thread::spawn(|| {}); }\n";
+        assert!(findings("rust/src/metrics/x.rs", bare)
+            .iter()
+            .any(|f| f.rule == "D006"));
+        // exec owns the pool: exempt.
+        assert!(findings("rust/src/exec/pool.rs", live)
+            .iter()
+            .all(|f| f.rule != "D006"));
+        // Test regions may spawn scenario threads.
+        let test_only = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { std::thread::spawn(|| {}).join().unwrap(); }
+}
+";
+        assert!(findings("rust/src/engine/x.rs", test_only)
+            .iter()
+            .all(|f| f.rule != "D006"));
+        // Integration tests / benches (no top module) are exempt.
+        assert!(findings("rust/tests/t.rs", live)
+            .iter()
+            .all(|f| f.rule != "D006"));
     }
 
     #[test]

@@ -50,6 +50,9 @@ pub struct AsyncConfig {
     /// async stabilisation; this damping is the standard staleness-aware
     /// rule (cf. Zhang et al. 2016) and is the documented substitution.
     pub staleness_damping: bool,
+    /// Intra-round worker budget (1 = serial, 0 = the machine). Pure
+    /// wall-clock — trajectories are bitwise identical for every value.
+    pub intra_jobs: usize,
 }
 
 impl Default for AsyncConfig {
@@ -61,6 +64,7 @@ impl Default for AsyncConfig {
             seed: 0,
             record_stride: 50,
             staleness_damping: true,
+            intra_jobs: 1,
         }
     }
 }
@@ -171,6 +175,7 @@ pub fn run_async_comm_traced(
         max_time: cfg.max_time,
         seed: cfg.seed,
         record_stride: cfg.record_stride,
+        intra_jobs: cfg.intra_jobs,
     };
     let mut core = EngineCore::new(
         "async",

@@ -56,8 +56,8 @@ const VALUED_FLAGS: &[&str] = &[
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
     "link-latency", "downlink", "down-levels", "down-frac",
     "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
-    "ingress", "coding", "replication", "jobs", "trace", "limit",
-    "format", "root",
+    "ingress", "coding", "replication", "jobs", "intra-jobs", "trace",
+    "limit", "format", "root",
 ];
 
 impl Args {
@@ -158,6 +158,12 @@ COMMON FLAGS:
   --jobs N            sweep worker threads for fig1/fig2/fig3/repeat
                       (0 = all cores, the default; also `[run] jobs` in
                       TOML — results are byte-identical for every N)
+  --intra-jobs I      fork–join threads *inside* one round: partial
+                      gradients and the merge/apply loops split across
+                      I threads with a fixed-order reduction (1 = serial,
+                      the default; 0 = all cores; also `[run] intra_jobs`
+                      in TOML — results are byte-identical for every I,
+                      and compose with --jobs on one shared pool)
   --quiet             suppress ASCII plots
 
 TRAIN FLAGS (no --config):

@@ -72,6 +72,7 @@ pub fn run_coded_comm_traced(
         max_time: cfg.max_time,
         seed: cfg.seed,
         record_stride: cfg.record_stride,
+        intra_jobs: cfg.intra_jobs,
     };
     let mut core = EngineCore::new(
         format!("coded-{}", scheme.name()),

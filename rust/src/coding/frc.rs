@@ -138,6 +138,7 @@ pub fn run_coded_gd(
         max_time: cfg.max_time,
         seed: cfg.seed,
         record_stride: cfg.record_stride,
+        intra_jobs: 1,
     };
     let run = run_coded_comm(
         backend,

@@ -400,6 +400,14 @@ pub struct ExperimentConfig {
     /// experiment's identity — `jobs = 1` and `jobs = N` produce
     /// byte-identical results (see [`crate::sweep`]).
     pub jobs: usize,
+    /// Intra-round parallelism: worker threads fanned out *inside* one
+    /// round (responder gradients, d-dimensional merge/apply blocks),
+    /// `1` = strictly serial, `0` = all available cores. TOML:
+    /// `[run] intra_jobs`; CLI: `--intra-jobs`. Like `jobs`, never part
+    /// of the experiment's identity — every value produces byte-identical
+    /// results (see [`crate::exec::par`]), and the two compose on one
+    /// shared pool without oversubscription.
+    pub intra_jobs: usize,
     /// Event-trace output directory (`None` = tracing off). TOML:
     /// `[trace] dir`; CLI: `--trace <dir>`. When set, every run records
     /// a binary event trace to `<dir>/<sanitized-label>.trace` (see
@@ -433,6 +441,7 @@ impl Default for ExperimentConfig {
             comm: CommSpec::default(),
             coding: None,
             jobs: 0,
+            intra_jobs: 1,
             trace: None,
             fastpath: false,
         }
@@ -660,6 +669,17 @@ impl ExperimentConfig {
                     ));
                 }
                 cfg.jobs = jobs as usize;
+            }
+            if let Some(v) = sec.get("intra_jobs") {
+                let intra =
+                    v.as_int().ok_or("run.intra_jobs must be an integer")?;
+                if intra < 0 {
+                    return Err(format!(
+                        "run.intra_jobs={intra} must be >= 0 (0 = available \
+                         parallelism)"
+                    ));
+                }
+                cfg.intra_jobs = intra as usize;
             }
             if let Some(v) = sec.get("fastpath") {
                 cfg.fastpath = v
@@ -1244,6 +1264,37 @@ r = 3
         assert!(
             ExperimentConfig::from_toml("[run]\njobs = \"all\"\n").is_err()
         );
+    }
+
+    #[test]
+    fn run_intra_jobs_parses_defaults_and_rejects_negatives() {
+        // Default 1 = strictly serial, exactly the pre-intra behavior.
+        let dflt = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n",
+        )
+        .unwrap();
+        assert_eq!(dflt.intra_jobs, 1);
+        let cfg = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [run]\njobs = 2\nintra_jobs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.intra_jobs, 4);
+        assert_eq!(cfg.jobs, 2);
+        // 0 = available parallelism, mirroring the jobs convention.
+        let all = ExperimentConfig::from_toml(
+            "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\nd = 10\n\
+             [run]\nintra_jobs = 0\n",
+        )
+        .unwrap();
+        assert_eq!(all.intra_jobs, 0);
+        let err = ExperimentConfig::from_toml("[run]\nintra_jobs = -2\n")
+            .unwrap_err();
+        assert!(err.contains(">= 0"), "{err}");
+        assert!(ExperimentConfig::from_toml(
+            "[run]\nintra_jobs = \"all\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -132,6 +132,7 @@ fn fig2_base(seed: u64) -> ExperimentConfig {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     }

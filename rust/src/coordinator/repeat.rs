@@ -132,6 +132,7 @@ mod tests {
             comm: Default::default(),
             coding: None,
             jobs: 0,
+            intra_jobs: 1,
             trace: None,
             fastpath: false,
         }

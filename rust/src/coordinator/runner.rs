@@ -172,6 +172,7 @@ fn run_experiment_core(
             max_time: cfg.max_time,
             seed: cfg.seed,
             record_stride: cfg.record_stride,
+            intra_jobs: cfg.intra_jobs,
         };
         let run = run_coded_comm_traced(
             &mut backend,
@@ -244,6 +245,7 @@ fn run_experiment_core(
             max_time: cfg.max_time,
             seed: cfg.seed,
             record_stride: cfg.record_stride,
+            intra_jobs: cfg.intra_jobs,
         };
         let mut eval = |w: &[f32]| problem.error(w);
         let core = EngineCore::new(
@@ -287,6 +289,7 @@ fn run_experiment_core(
                 max_time: cfg.max_time,
                 seed: cfg.seed,
                 record_stride: cfg.record_stride,
+                intra_jobs: cfg.intra_jobs,
                 ..Default::default()
             };
             let run = run_async_comm_traced(
@@ -329,6 +332,7 @@ fn run_experiment_core(
                 max_time: cfg.max_time,
                 seed: cfg.seed,
                 record_stride: cfg.record_stride,
+                intra_jobs: cfg.intra_jobs,
             };
             let run = run_fastest_k_comm_traced(
                 &mut backend,
@@ -380,6 +384,7 @@ mod tests {
             comm: Default::default(),
             coding: None,
             jobs: 0,
+            intra_jobs: 1,
             trace: None,
             fastpath: false,
         }

@@ -26,6 +26,7 @@
 use super::core::EngineCore;
 use super::gather::GatherPolicy;
 use crate::coding::CodingScheme;
+use crate::exec::scratch;
 use crate::engine::EngineRun;
 use crate::grad::GradBackend;
 use crate::master::fastest_k_select;
@@ -53,6 +54,12 @@ pub struct CodedGather<'a> {
     /// A contributing worker's wire message: the sum of its covered
     /// shards' gradients.
     message: Vec<f32>,
+    /// The cover flattened to shard order (the fixed work list the
+    /// intra-parallel path fans out over).
+    flat: Vec<usize>,
+    /// Per-shard gradient arena for the intra-parallel path (grown on
+    /// demand through [`scratch`]; empty on the serial path).
+    arena: Vec<f32>,
     k_changes: Vec<(u64, f64, usize)>,
 }
 
@@ -83,8 +90,16 @@ impl<'a> CodedGather<'a> {
             arrival_buf: Vec::with_capacity(n),
             partial: vec![0.0f32; d],
             message: vec![0.0f32; d],
+            flat: Vec::with_capacity(n),
+            arena: Vec::new(),
             k_changes: Vec::new(),
         }
+    }
+}
+
+impl Drop for CodedGather<'_> {
+    fn drop(&mut self) {
+        scratch::give_f32(std::mem::take(&mut self.arena));
     }
 }
 
@@ -194,28 +209,70 @@ impl GatherPolicy for CodedGather<'_> {
         // sum of its covered shards' gradients — through the channel
         // (compression + error feedback + byte accounting).
         core.zero_g();
-        for part in &cover {
-            let (&first, rest) = part
-                .shards
-                .split_first()
-                .expect("decode never emits an empty part");
-            self.backend.partial_grad(
-                first,
-                &core.w_view,
-                &mut self.message,
-            );
-            for &shard in rest {
+        let d = self.message.len();
+        if core.par.is_serial() || d == 0 {
+            for part in &cover {
+                let (&first, rest) = part
+                    .shards
+                    .split_first()
+                    .expect("decode never emits an empty part");
                 self.backend.partial_grad(
-                    shard,
+                    first,
                     &core.w_view,
-                    &mut self.partial,
+                    &mut self.message,
                 );
-                for (mv, pv) in self.message.iter_mut().zip(&self.partial)
-                {
-                    *mv += *pv;
+                for &shard in rest {
+                    self.backend.partial_grad(
+                        shard,
+                        &core.w_view,
+                        &mut self.partial,
+                    );
+                    for (mv, pv) in
+                        self.message.iter_mut().zip(&self.partial)
+                    {
+                        *mv += *pv;
+                    }
                 }
+                core.accept_into_g(part.worker, &self.message);
             }
-            core.accept_into_g(part.worker, &self.message);
+        } else {
+            // Intra-parallel path: flatten the cover into its fixed
+            // shard order, compute every covered shard's gradient into
+            // the arena concurrently, then rebuild each part's message
+            // serially in the same first-then-rest addition order and
+            // accept in the same part order — bitwise the serial loop
+            // (partial_grad draws no RNG; transmit stays serial).
+            self.flat.clear();
+            for part in &cover {
+                self.flat.extend_from_slice(&part.shards);
+            }
+            let total = self.flat.len() * d;
+            if self.arena.len() < total {
+                scratch::give_f32(std::mem::replace(
+                    &mut self.arena,
+                    scratch::take_f32(total),
+                ));
+            }
+            let arena = &mut self.arena[..total];
+            self.backend.partial_grads(
+                &self.flat,
+                &core.w_view,
+                arena,
+                core.par,
+            );
+            let mut off = 0;
+            for part in &cover {
+                let slots = &arena[off..off + part.shards.len() * d];
+                off += slots.len();
+                let (first, rest) = slots.split_at(d);
+                self.message.copy_from_slice(first);
+                for slot in rest.chunks_exact(d) {
+                    for (mv, pv) in self.message.iter_mut().zip(slot) {
+                        *mv += *pv;
+                    }
+                }
+                core.accept_into_g(part.worker, &self.message);
+            }
         }
         // (5) the shared round tail. Every shard is covered exactly once,
         // so the mean divides by n (the exact full gradient) while the
@@ -277,6 +334,7 @@ mod tests {
             max_time: 0.0,
             seed,
             record_stride: 50,
+            intra_jobs: 1,
         };
         let core = EngineCore::new(
             scheme.name(),
@@ -313,6 +371,7 @@ mod tests {
             max_time: 0.0,
             seed: 1,
             record_stride: 1,
+            intra_jobs: 1,
         };
         let core = EngineCore::new(
             "coded",
@@ -398,6 +457,7 @@ mod tests {
             max_time: 0.0,
             seed: 4,
             record_stride: 50,
+            intra_jobs: 1,
         };
         let core = EngineCore::new(
             "coded-adaptive",

@@ -24,6 +24,7 @@
 //! `rust/tests/test_engine_equivalence.rs`).
 
 use crate::comm::{CommChannel, DownlinkMode, IngressDiscipline, IngressModel};
+use crate::exec::{for_each_block_mut, zip_block_mut, Parallelism};
 use crate::linalg::dot;
 use crate::metrics::{Recorder, Sample};
 use crate::policy::{IterationObs, KPolicy};
@@ -49,6 +50,11 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Evaluate + record the error every this many steps.
     pub record_stride: u64,
+    /// Intra-round worker budget (1 = strictly serial, 0 = the machine;
+    /// see [`Parallelism::new`]). Wall-clock only — results are bitwise
+    /// identical for every value, so like `jobs` it is never part of an
+    /// experiment's identity.
+    pub intra_jobs: usize,
 }
 
 /// The uplink-compression rng: one shared stream for the single-threaded
@@ -169,6 +175,12 @@ pub struct EngineRun {
 pub struct EngineCore<'a> {
     /// Loop bounds and step parameters.
     pub cfg: EngineConfig,
+    /// Resolved intra-round worker budget (from `cfg.intra_jobs`).
+    /// Gathers thread it into [`GradBackend::partial_grads`]
+    /// (crate::grad::GradBackend::partial_grads) and the core's own
+    /// d-dimensional merge/apply loops split on it. Never observable in
+    /// results — see [`crate::exec::par`] for the determinism argument.
+    pub par: Parallelism,
     channel: &'a mut CommChannel,
     delays: &'a dyn DelayModel,
     eval: &'a mut dyn FnMut(&[f32]) -> f64,
@@ -221,7 +233,9 @@ impl<'a> EngineCore<'a> {
         let msg_bytes = channel.message_bytes(d);
         let ingress = *channel.ingress();
         let recorder = Recorder::with_stride(label, cfg.record_stride);
+        let par = Parallelism::new(cfg.intra_jobs);
         Self {
+            par,
             bytes0: channel.stats.bytes_sent,
             comm_t0: channel.stats.comm_time,
             down0: channel.stats.bytes_down,
@@ -492,9 +506,14 @@ impl<'a> EngineCore<'a> {
     /// reconstruction into `g`.
     pub fn accept_into_g(&mut self, worker: usize, raw: &[f32]) {
         self.transmit(worker, raw);
-        for (gv, pv) in self.g.iter_mut().zip(&self.decoded) {
-            *gv += *pv;
-        }
+        // Elementwise merge, split into fixed column blocks: bitwise
+        // equal to the serial loop for any intra budget. `transmit`
+        // itself stays strictly serial — it draws from the comm rng.
+        zip_block_mut(self.par, &mut self.g, &self.decoded, |_, gc, pc| {
+            for (gv, pv) in gc.iter_mut().zip(pc) {
+                *gv += *pv;
+            }
+        });
     }
 
     /// Ship worker `i`'s raw gradient through the channel, leaving the
@@ -521,9 +540,11 @@ impl<'a> EngineCore<'a> {
     /// Scale the aggregate by `1/k` (the fastest-k mean).
     pub fn scale_g(&mut self, k: usize) {
         let inv_k = 1.0 / k as f32;
-        for gv in self.g.iter_mut() {
-            *gv *= inv_k;
-        }
+        for_each_block_mut(self.par, &mut self.g, |_, gc| {
+            for gv in gc.iter_mut() {
+                *gv *= inv_k;
+            }
+        });
     }
 
     // ------------------------------------------------------------------
@@ -534,6 +555,9 @@ impl<'a> EngineCore<'a> {
     /// (velocity allocated lazily), plain descent otherwise.
     pub fn apply_g_sgd(&mut self) {
         if self.cfg.momentum > 0.0 {
+            // Heavy-ball stays serial: it mutates two vectors in
+            // lockstep, and only the sync gather (small d in practice)
+            // uses it — not worth a second SendPtr protocol.
             let v = self
                 .velocity
                 .get_or_insert_with(|| vec![0.0f32; self.w.len()]);
@@ -544,18 +568,23 @@ impl<'a> EngineCore<'a> {
                 *wv -= self.cfg.eta * *vv;
             }
         } else {
-            for (wv, gv) in self.w.iter_mut().zip(&self.g) {
-                *wv -= self.cfg.eta * *gv;
-            }
+            let eta = self.cfg.eta;
+            zip_block_mut(self.par, &mut self.w, &self.g, |_, wc, gc| {
+                for (wv, gv) in wc.iter_mut().zip(gc) {
+                    *wv -= eta * *gv;
+                }
+            });
         }
     }
 
     /// Apply the decoded single-worker gradient with an explicit step
     /// size (the async discipline's staleness-damped update).
     pub fn apply_decoded(&mut self, step: f32) {
-        for (wv, gv) in self.w.iter_mut().zip(&self.decoded) {
-            *wv -= step * *gv;
-        }
+        zip_block_mut(self.par, &mut self.w, &self.decoded, |_, wc, gc| {
+            for (wv, gv) in wc.iter_mut().zip(gc) {
+                *wv -= step * *gv;
+            }
+        });
     }
 
     /// The shared tail of every fastest-k round, after the clock has

@@ -195,6 +195,7 @@ mod tests {
             max_time: 0.0,
             seed: 1,
             record_stride: 50,
+            intra_jobs: 1,
         };
         let delays = sampler_delays();
         let core = EngineCore::new(
@@ -242,6 +243,7 @@ mod tests {
             max_time: 0.0,
             seed: 9,
             record_stride: 100,
+            intra_jobs: 1,
         };
         let delays = sampler_delays();
         let core = EngineCore::new(

@@ -22,6 +22,7 @@
 
 use super::core::{EngineCore, EngineRun};
 use crate::comm::{DownlinkMode, IngressDiscipline, PsServer};
+use crate::exec::scratch;
 use crate::grad::GradBackend;
 use crate::master::fastest_k_select;
 use crate::policy::KPolicy;
@@ -63,6 +64,11 @@ pub struct FastestKGather<'a> {
     /// aggregation path — shard-by-shard runs never pay the O(n·d)
     /// memory).
     all_buf: Option<Vec<f32>>,
+    /// Per-responder gradient arena for the intra-parallel path (k·d,
+    /// grown on demand through [`scratch`] so capacity persists across
+    /// sweep specs; empty on the serial path, which streams through
+    /// `partial` instead).
+    arena: Vec<f32>,
     k_changes: Vec<(u64, f64, usize)>,
 }
 
@@ -83,8 +89,17 @@ impl<'a> FastestKGather<'a> {
             arrival_buf: Vec::with_capacity(n),
             partial: vec![0.0f32; d],
             all_buf: None,
+            arena: Vec::new(),
             k_changes: Vec::new(),
         }
+    }
+}
+
+impl Drop for FastestKGather<'_> {
+    fn drop(&mut self) {
+        // Hand the arena back to the thread's scratch pool so the next
+        // spec on this sweep worker reuses it (no-op when empty).
+        scratch::give_f32(std::mem::take(&mut self.arena));
     }
 }
 
@@ -154,7 +169,7 @@ impl GatherPolicy for FastestKGather<'_> {
             for &worker in &self.idx_buf[..self.k] {
                 core.accept_into_g(worker, &buf[worker * d..(worker + 1) * d]);
             }
-        } else {
+        } else if core.par.is_serial() || d == 0 {
             for &worker in &self.idx_buf[..self.k] {
                 self.backend.partial_grad(
                     worker,
@@ -162,6 +177,32 @@ impl GatherPolicy for FastestKGather<'_> {
                     &mut self.partial,
                 );
                 core.accept_into_g(worker, &self.partial);
+            }
+        } else {
+            // Intra-parallel two-phase round: every responder's partial
+            // gradient lands in its own arena slice concurrently, then
+            // the reduction walks the slices serially in the fixed
+            // fastest-k responder order — the exact per-element sums and
+            // comm-rng draw order of the serial loop above, so the two
+            // paths are bitwise interchangeable.
+            let kd = self.k * d;
+            if self.arena.len() < kd {
+                scratch::give_f32(std::mem::replace(
+                    &mut self.arena,
+                    scratch::take_f32(kd),
+                ));
+            }
+            let arena = &mut self.arena[..kd];
+            self.backend.partial_grads(
+                &self.idx_buf[..self.k],
+                &core.w_view,
+                arena,
+                core.par,
+            );
+            for (slot, &worker) in
+                arena.chunks_exact(d).zip(&self.idx_buf[..self.k])
+            {
+                core.accept_into_g(worker, slot);
             }
         }
         // (4, 5) the shared round tail: mean-scale + SGD update + policy
@@ -273,8 +314,16 @@ impl<'a> StalenessGather<'a> {
             return false;
         }
         // Gradient at the worker's stale snapshot, shipped through the
-        // channel (compression + error feedback + byte accounting).
-        self.backend.partial_grad(i, &self.snapshots[i], &mut self.g_raw);
+        // channel (compression + error feedback + byte accounting). The
+        // single-responder `partial_grads` lets a backend split the
+        // back-projection by column panel under `--intra-jobs`; serial
+        // it is exactly `partial_grad`.
+        self.backend.partial_grads(
+            &[i],
+            &self.snapshots[i],
+            &mut self.g_raw,
+            core.par,
+        );
         core.transmit(i, &self.g_raw);
         let staleness = self.version - self.read_version[i];
         let step = if self.damping {

@@ -113,6 +113,7 @@ mod tests {
             max_time: 0.0,
             seed: 1,
             record_stride: 50,
+            intra_jobs: 1,
         };
         let core = EngineCore::new(
             policy.name(),
@@ -147,6 +148,7 @@ mod tests {
             max_time: 0.0,
             seed: 2,
             record_stride: 200,
+            intra_jobs: 1,
         };
         let core = EngineCore::new(
             "async",
@@ -187,6 +189,7 @@ mod tests {
                 max_time: 0.0,
                 seed: 5,
                 record_stride: 500,
+                intra_jobs: 1,
             };
             let core = EngineCore::new(
                 "async",

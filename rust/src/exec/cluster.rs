@@ -58,6 +58,10 @@ pub struct ThreadedConfig {
     pub seed: u64,
     /// Record stride.
     pub record_stride: u64,
+    /// Intra-round worker budget for the master's merge/apply loops
+    /// (1 = serial, 0 = the machine). Pure wall-clock — trajectories
+    /// are bitwise identical for every value.
+    pub intra_jobs: usize,
 }
 
 impl Default for ThreadedConfig {
@@ -68,6 +72,7 @@ impl Default for ThreadedConfig {
             time_scale: 1e-3,
             seed: 0,
             record_stride: 10,
+            intra_jobs: 1,
         }
     }
 }
@@ -270,6 +275,7 @@ impl ThreadedCluster {
             max_time: 0.0,
             seed: cfg.seed,
             record_stride: cfg.record_stride,
+            intra_jobs: cfg.intra_jobs,
         };
         let mut core = EngineCore::new(
             format!("threaded/{}", policy.name()),
@@ -380,6 +386,7 @@ impl ThreadedCluster {
             max_time: cfg.max_time,
             seed: cfg.seed,
             record_stride: cfg.record_stride,
+            intra_jobs: cfg.intra_jobs,
         };
         let mut core = EngineCore::new(
             "threaded-async",
@@ -793,6 +800,7 @@ mod tests {
             time_scale: 1e-5,
             seed: 5,
             record_stride: 25,
+            intra_jobs: 1,
         };
         let run = cluster.run_fastest_k(
             &mut policy,
@@ -825,6 +833,7 @@ mod tests {
             seed: 9,
             record_stride: 150,
             staleness_damping: true,
+            intra_jobs: 1,
         };
         let run = cluster.run_async(
             &delays,
@@ -891,6 +900,7 @@ mod tests {
             time_scale: 1e-5,
             seed: 6,
             record_stride: 10,
+            intra_jobs: 1,
         };
         let run = cluster.run_fastest_k(
             &mut policy,
@@ -924,6 +934,7 @@ mod tests {
             time_scale: 1e-5,
             seed: 8,
             record_stride: 10,
+            intra_jobs: 1,
         };
         let mut cluster = ThreadedCluster::spawn(&shards, 1e-5);
         let mut policy = FixedK::new(2);
@@ -976,6 +987,7 @@ mod tests {
             time_scale: 1e-5,
             seed: 7,
             record_stride: 50,
+            intra_jobs: 1,
         };
         let delays = ExponentialDelays::new(1.0);
         let mut channel = CommChannel::new(

@@ -14,10 +14,21 @@
 //!   fastest-k scheme accepts to avoid the straggler tail).
 
 //! The module also hosts [`ThreadPool`], the generic job pool the sweep
-//! layer ([`crate::sweep`]) fans independent experiments out on.
+//! layer ([`crate::sweep`]) fans independent experiments out on, plus
+//! the deterministic intra-round parallelism layer: scoped fork–join on
+//! the pool ([`ThreadPool::scope`] / [`ThreadPool::parallel_for`]), the
+//! [`Parallelism`] budget token + fixed-partition slice helpers
+//! ([`par`]), and the thread-keyed [`scratch`] arena that reuses hot
+//! buffers across sweep specs.
 
 mod cluster;
+pub mod par;
 mod pool;
+pub mod scratch;
 
 pub use cluster::{ThreadedCluster, ThreadedConfig, ThreadedRunStats};
-pub use pool::ThreadPool;
+pub use par::{
+    for_each_block_mut, for_each_slot_mut, zip_block_mut, Parallelism,
+    INTRA_BLOCK,
+};
+pub use pool::{Scope, ThreadPool};

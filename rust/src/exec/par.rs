@@ -1,0 +1,316 @@
+//! Deterministic intra-round parallelism: [`Parallelism`] + the shared
+//! intra-op thread pool + fixed-partition slice helpers.
+//!
+//! The sweep layer fans *specs* out (`--jobs`); this module fans the
+//! work *inside one round* out (`--intra-jobs`): the k responders'
+//! partial gradients, and the d-dimensional merge/apply loops, split
+//! into fixed blocks. The determinism argument is structural and does
+//! not depend on the schedule:
+//!
+//! * the **partition is fixed** — block count and block boundaries are
+//!   pure functions of the problem shape (`d`, [`INTRA_BLOCK`]) or the
+//!   responder list, never of the thread count or claim order;
+//! * every block writes a **disjoint slice** and reads only shared
+//!   immutable inputs, so elementwise results are bitwise identical to
+//!   the serial loop by float-association-free construction;
+//! * any **reduction runs serially in fixed block order** on the
+//!   calling thread after the join.
+//!
+//! Hence `--intra-jobs 1` ≡ `--intra-jobs N` byte-for-byte, and it
+//! composes with sweep fan-out: all `parallel_for` helpers share ONE
+//! process-global pool ([`intra_pool`]) sized to the machine, so
+//! `--jobs J --intra-jobs I` never spawns `J × I` threads.
+//!
+//! `Parallelism::new(1)` (the default) short-circuits every entry point
+//! to the exact serial loop — no pool is created, no new code runs.
+
+use super::pool::ThreadPool;
+use std::sync::OnceLock;
+
+/// Fixed block width (f32 elements) for splitting d-dimensional
+/// elementwise loops. A pure constant: the block partition of a vector
+/// depends on its length alone, never on the worker count, so changing
+/// `--intra-jobs` can never move an element across a block boundary.
+/// 4096 f32 = 16 KiB per block — large enough that claim overhead
+/// vanishes, small enough to load-balance the fig-2 shapes.
+pub const INTRA_BLOCK: usize = 4096;
+
+/// The process-global intra-op pool, shared by every engine and every
+/// sweep worker (lazily created on first parallel use). One pool for
+/// the whole process is what lets sweep-level fan-out compose with
+/// intra-round fan-out without `jobs × intra_jobs` oversubscription.
+fn intra_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        ThreadPool::new(n).expect("intra pool: available_parallelism >= 1")
+    })
+}
+
+/// Resolved intra-round worker budget (a `Copy` token threaded through
+/// the gradient hot path). `jobs == 1` means strictly serial — every
+/// helper in this module degenerates to the plain loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    jobs: usize,
+}
+
+impl Parallelism {
+    /// Strictly serial execution (the default, and today's behavior).
+    pub const SERIAL: Parallelism = Parallelism { jobs: 1 };
+
+    /// Resolve an `intra_jobs` config value: `0` = the machine's
+    /// available parallelism (the `--jobs` convention), otherwise the
+    /// given thread budget. The value never affects results, only
+    /// wall-clock.
+    pub fn new(intra_jobs: usize) -> Self {
+        let jobs = if intra_jobs == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            intra_jobs
+        };
+        Self { jobs }
+    }
+
+    /// Resolved thread budget (≥ 1).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// True when every loop runs inline on the calling thread.
+    pub fn is_serial(&self) -> bool {
+        self.jobs <= 1
+    }
+
+    /// Run `body(block)` for every block in `0..blocks`. Serial (in
+    /// ascending block order) when the budget or the block count is 1;
+    /// otherwise fork–join on the shared intra pool. `body` must write
+    /// only block-disjoint state — the determinism contract above.
+    pub fn run<F>(&self, blocks: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.jobs <= 1 || blocks <= 1 {
+            for b in 0..blocks {
+                body(b);
+            }
+        } else {
+            intra_pool().parallel_for(self.jobs, blocks, body);
+        }
+    }
+}
+
+/// `*mut f32` that crosses the fork–join: the block protocol guarantees
+/// disjoint access, which the type system cannot see through a raw
+/// pointer.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: each block dereferences a disjoint element range (enforced by
+// the fixed partition in the helpers below), so concurrent use is safe.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Number of [`INTRA_BLOCK`]-wide blocks covering `len` elements.
+fn block_count(len: usize) -> usize {
+    (len + INTRA_BLOCK - 1) / INTRA_BLOCK
+}
+
+/// Split `y` into fixed [`INTRA_BLOCK`] chunks and run
+/// `f(offset, chunk)` on each, in parallel per `par`. The partition
+/// depends on `y.len()` alone; `f` must be elementwise (no cross-chunk
+/// state), which makes the result bitwise independent of `par`.
+pub fn for_each_block_mut<F>(par: Parallelism, y: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let d = y.len();
+    if par.is_serial() || d <= INTRA_BLOCK {
+        if d > 0 {
+            f(0, y);
+        }
+        return;
+    }
+    let ptr = SendPtr(y.as_mut_ptr());
+    par.run(block_count(d), |b| {
+        let lo = b * INTRA_BLOCK;
+        let hi = (lo + INTRA_BLOCK).min(d);
+        // SAFETY: blocks cover disjoint `[lo, hi)` ranges of `y`, and
+        // the fork–join ends before `y`'s borrow does.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+        f(lo, chunk);
+    });
+}
+
+/// Like [`for_each_block_mut`] but pairing each mutable chunk of `y`
+/// with the matching shared chunk of `x` (`f(offset, y_chunk,
+/// x_chunk)`). Panics if the lengths differ.
+pub fn zip_block_mut<F>(par: Parallelism, y: &mut [f32], x: &[f32], f: F)
+where
+    F: Fn(usize, &mut [f32], &[f32]) + Sync,
+{
+    assert_eq!(y.len(), x.len(), "zip_block_mut: length mismatch");
+    let d = y.len();
+    if par.is_serial() || d <= INTRA_BLOCK {
+        if d > 0 {
+            f(0, y, x);
+        }
+        return;
+    }
+    let ptr = SendPtr(y.as_mut_ptr());
+    par.run(block_count(d), |b| {
+        let lo = b * INTRA_BLOCK;
+        let hi = (lo + INTRA_BLOCK).min(d);
+        // SAFETY: as in `for_each_block_mut` — disjoint ranges, borrow
+        // outlives the join.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+        f(lo, chunk, &x[lo..hi]);
+    });
+}
+
+/// Split `out` into `count` fixed-width `width` slices and run
+/// `f(i, slice_i)` on each — the per-responder gradient arena pattern:
+/// slice `i` belongs to responder `i` alone, and the caller reduces the
+/// slices serially in responder order afterwards. Panics unless
+/// `out.len() == count * width`.
+pub fn for_each_slot_mut<F>(
+    par: Parallelism,
+    out: &mut [f32],
+    count: usize,
+    width: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(
+        out.len(),
+        count * width,
+        "for_each_slot_mut: arena shape mismatch"
+    );
+    if par.is_serial() || count <= 1 || width == 0 {
+        for (i, slot) in out.chunks_exact_mut(width.max(1)).enumerate() {
+            f(i, slot);
+        }
+        return;
+    }
+    let ptr = SendPtr(out.as_mut_ptr());
+    par.run(count, |i| {
+        // SAFETY: slot `i` is the disjoint range
+        // `[i * width, (i+1) * width)`; the borrow outlives the join.
+        let slot = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(i * width), width)
+        };
+        f(i, slot);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_token_is_serial() {
+        assert!(Parallelism::SERIAL.is_serial());
+        assert_eq!(Parallelism::new(1), Parallelism::SERIAL);
+        assert!(!Parallelism::new(4).is_serial());
+        assert_eq!(Parallelism::new(4).jobs(), 4);
+        assert!(Parallelism::new(0).jobs() >= 1);
+    }
+
+    #[test]
+    fn run_visits_every_block_once_in_any_mode() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for jobs in [1usize, 3, 16] {
+            let par = Parallelism::new(jobs);
+            let hits: Vec<AtomicUsize> =
+                (0..9).map(|_| AtomicUsize::new(0)).collect();
+            par.run(9, |b| {
+                hits[b].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits
+                .iter()
+                .all(|h| h.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    /// The determinism contract, concretely: the block split of an
+    /// elementwise op is bitwise-identical to the serial loop for every
+    /// worker budget, including catastrophic-cancellation values.
+    #[test]
+    fn block_helpers_are_bitwise_equal_to_the_serial_loop() {
+        let prime = 10_007usize;
+        for d in [0usize, 1, INTRA_BLOCK - 1, INTRA_BLOCK, INTRA_BLOCK + 1, prime]
+        {
+            let x: Vec<f32> = (0..d)
+                .map(|i| {
+                    let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+                    sign * (1.0e8 + i as f32) + 1.0e-6 * i as f32
+                })
+                .collect();
+            let mut y_ref: Vec<f32> =
+                (0..d).map(|i| 3.0e7 - i as f32 * 0.5).collect();
+            let y0 = y_ref.clone();
+            for (yv, xv) in y_ref.iter_mut().zip(&x) {
+                *yv = *yv * 0.3 + *xv;
+            }
+            for jobs in [1usize, 3, 4, 16] {
+                let par = Parallelism::new(jobs);
+                let mut y = y0.clone();
+                zip_block_mut(par, &mut y, &x, |_, yc, xc| {
+                    for (yv, xv) in yc.iter_mut().zip(xc) {
+                        *yv = *yv * 0.3 + *xv;
+                    }
+                });
+                assert_eq!(bits(&y), bits(&y_ref), "d={d} jobs={jobs}");
+
+                let mut z = y0.clone();
+                for_each_block_mut(par, &mut z, |off, zc| {
+                    for (i, zv) in zc.iter_mut().enumerate() {
+                        *zv *= (off + i) as f32 + 0.25;
+                    }
+                });
+                let mut z_ref = y0.clone();
+                for (i, zv) in z_ref.iter_mut().enumerate() {
+                    *zv *= i as f32 + 0.25;
+                }
+                assert_eq!(bits(&z), bits(&z_ref), "d={d} jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn slot_split_writes_each_responder_slice() {
+        let (count, width) = (7usize, 33usize);
+        for jobs in [1usize, 4] {
+            let mut arena = vec![0.0f32; count * width];
+            for_each_slot_mut(
+                Parallelism::new(jobs),
+                &mut arena,
+                count,
+                width,
+                |i, slot| {
+                    for (j, s) in slot.iter_mut().enumerate() {
+                        *s = (i * 1000 + j) as f32;
+                    }
+                },
+            );
+            for i in 0..count {
+                for j in 0..width {
+                    assert_eq!(
+                        arena[i * width + j],
+                        (i * 1000 + j) as f32
+                    );
+                }
+            }
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

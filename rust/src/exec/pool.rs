@@ -29,8 +29,9 @@
 //! [`execute`]: ThreadPool::execute
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -94,6 +95,19 @@ impl Shared {
         let mut ctl = self.lock.lock().expect("pool lock poisoned");
         ctl.queued += 1;
         self.cv.notify_one();
+    }
+
+    /// Pop-and-run one queued job, if any — lets a thread *waiting* on
+    /// a [`Scope`] drain the pool instead of parking, so a saturated
+    /// pool cannot deadlock a scope against its own queued jobs.
+    fn try_run_one(&self) -> bool {
+        match self.grab(0) {
+            Some(job) => {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -199,6 +213,274 @@ impl ThreadPool {
         }
         vals
     }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Fork–join loop over `0..blocks` with at most `threads`
+    /// participating threads: the calling thread plus up to
+    /// `min(threads - 1, blocks - 1, pool size)` helper jobs dealt onto
+    /// the work-stealing deques. Blocks are claimed dynamically (an
+    /// atomic cursor), but *which indices exist* is fixed by `blocks`
+    /// alone — determinism comes from the caller giving every block a
+    /// fixed slice of work and reducing in fixed block order, never
+    /// from the claim schedule.
+    ///
+    /// The call returns only after every block's `body` has returned;
+    /// it never depends on a helper actually being scheduled (the
+    /// caller claims blocks too), so a saturated pool degrades to the
+    /// serial loop instead of deadlocking. If any `body` panics, the
+    /// first-recorded panic is re-raised here after all claimed blocks
+    /// settle; remaining unclaimed blocks are skipped.
+    pub fn parallel_for<F>(&self, threads: usize, blocks: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let helpers = threads
+            .saturating_sub(1)
+            .min(blocks.saturating_sub(1))
+            .min(self.size());
+        if blocks == 0 {
+            return;
+        }
+        if helpers == 0 {
+            for b in 0..blocks {
+                body(b);
+            }
+            return;
+        }
+        let fj = Arc::new(ForkJoin {
+            // SAFETY (lifetime erasure): helper jobs need 'static, but
+            // `body` borrows this frame. The pointer is only ever
+            // dereferenced by a participant that claimed a block index
+            // `< blocks` (see `ForkJoin::work`), and every claimed
+            // block increments `done` exactly once after its body call
+            // returns — so this frame's wait below (`done == blocks`)
+            // cannot finish while any dereference is outstanding.
+            // Helpers arriving later find the cursor exhausted and
+            // touch only the Arc'd counters.
+            body: unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(&body)
+            } as *const (dyn Fn(usize) + Sync),
+            cursor: AtomicUsize::new(0),
+            blocks,
+            lock: Mutex::new(ForkJoinState { done: 0, panic: None }),
+            cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        });
+        for _ in 0..helpers {
+            let fj = Arc::clone(&fj);
+            self.execute(move || fj.work());
+        }
+        // The caller participates: progress never waits on a helper
+        // getting scheduled.
+        fj.work();
+        let mut st = fj.lock.lock().expect("pool fork-join poisoned");
+        while st.done < blocks {
+            st = fj.cv.wait(st).expect("pool fork-join poisoned");
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Scoped fork–join: jobs spawned through the [`Scope`] may borrow
+    /// from the enclosing stack frame, and `scope` does not return (or
+    /// unwind) until every spawned job has finished. While waiting, the
+    /// calling thread helps drain the pool's deques, so a saturated
+    /// pool cannot deadlock a scope against its own queued jobs.
+    ///
+    /// Panic policy matches [`ThreadPool::map`]: a panicking spawned
+    /// job never wedges the pool — workers keep serving their deques —
+    /// and the first-recorded job panic (or the closure's own panic,
+    /// which takes precedence) is re-raised here after all jobs settle.
+    pub fn scope<'scope, F, R>(&'scope self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'scope>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeShared {
+                lock: Mutex::new(ScopeState { outstanding: 0, panic: None }),
+                cv: Condvar::new(),
+            }),
+            _marker: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Settle every spawned job before returning OR unwinding: the
+        // jobs borrow this frame. Help run queued work rather than
+        // blocking while the deques still hold jobs.
+        loop {
+            {
+                let st =
+                    scope.state.lock.lock().expect("pool scope poisoned");
+                if st.outstanding == 0 {
+                    break;
+                }
+            }
+            if !self.shared.try_run_one() {
+                let mut st =
+                    scope.state.lock.lock().expect("pool scope poisoned");
+                // Re-check under the lock, then park: completions
+                // notify `cv`, so no wakeup can be missed.
+                if st.outstanding > 0 {
+                    let _ = scope
+                        .state
+                        .cv
+                        .wait(st)
+                        .expect("pool scope poisoned");
+                }
+            }
+        }
+        let job_panic = scope
+            .state
+            .lock
+            .lock()
+            .expect("pool scope poisoned")
+            .panic
+            .take();
+        match result {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(r) => {
+                if let Some(payload) = job_panic {
+                    std::panic::resume_unwind(payload);
+                }
+                r
+            }
+        }
+    }
+}
+
+/// Shared state of one [`ThreadPool::parallel_for`] call. `body` is the
+/// caller's closure with its lifetime erased; see the SAFETY note at
+/// the construction site for why every dereference is sound.
+struct ForkJoin {
+    body: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed block index (may run past `blocks`; claimants
+    /// seeing `>= blocks` stop without touching `body`).
+    cursor: AtomicUsize,
+    blocks: usize,
+    lock: Mutex<ForkJoinState>,
+    cv: Condvar,
+    /// Set on the first body panic: later claimants account their
+    /// blocks without executing them, so the join finishes fast.
+    poisoned: AtomicBool,
+}
+
+// SAFETY: `body` is `Sync` (shared calls are safe) and the protocol
+// above guarantees it outlives every dereference.
+unsafe impl Send for ForkJoin {}
+unsafe impl Sync for ForkJoin {}
+
+struct ForkJoinState {
+    /// Blocks accounted for (executed, skipped-poisoned, or panicked).
+    done: usize,
+    /// First recorded body panic, re-raised by the submitting thread.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl ForkJoin {
+    /// Claim and run blocks until the cursor is exhausted.
+    fn work(&self) {
+        loop {
+            let b = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if b >= self.blocks {
+                return;
+            }
+            if !self.poisoned.load(Ordering::Relaxed) {
+                // SAFETY: `b < blocks` was claimed and not yet counted,
+                // so the submitting frame is still alive (see the
+                // construction-site SAFETY note).
+                let body = unsafe { &*self.body };
+                if let Err(payload) =
+                    catch_unwind(AssertUnwindSafe(|| body(b)))
+                {
+                    self.poisoned.store(true, Ordering::Relaxed);
+                    let mut st =
+                        self.lock.lock().expect("pool fork-join poisoned");
+                    if st.panic.is_none() {
+                        st.panic = Some(payload);
+                    }
+                }
+            }
+            let mut st =
+                self.lock.lock().expect("pool fork-join poisoned");
+            st.done += 1;
+            if st.done == self.blocks {
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`ThreadPool::scope`]. Jobs
+/// spawned here may borrow anything that outlives the `scope` call.
+pub struct Scope<'scope> {
+    pool: &'scope ThreadPool,
+    state: Arc<ScopeShared>,
+    /// Invariant over `'scope` so the borrow checker cannot shrink the
+    /// spawned jobs' lifetime below the scope's wait.
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+struct ScopeShared {
+    lock: Mutex<ScopeState>,
+    cv: Condvar,
+}
+
+struct ScopeState {
+    /// Spawned jobs not yet finished.
+    outstanding: usize,
+    /// First recorded job panic.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl<'scope> Scope<'scope> {
+    /// Queue `job` on the pool. It runs at most once; the enclosing
+    /// [`ThreadPool::scope`] call waits for it before returning. A
+    /// panic inside `job` is caught (the pool survives) and re-raised
+    /// from the `scope` call.
+    pub fn spawn<F>(&self, job: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state
+            .lock
+            .lock()
+            .expect("pool scope poisoned")
+            .outstanding += 1;
+        let state = Arc::clone(&self.state);
+        let boxed: Box<dyn FnOnce() + Send + 'scope> = Box::new(job);
+        // SAFETY (lifetime erasure): the pool's Job type is 'static,
+        // but `scope` waits for `outstanding == 0` before its frame
+        // (and anything `job` borrows) can go away — on the normal and
+        // the unwinding path both.
+        let boxed: Job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'scope>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(boxed)
+        };
+        self.pool.execute(move || {
+            let result = catch_unwind(AssertUnwindSafe(boxed));
+            let mut st = state.lock.lock().expect("pool scope poisoned");
+            if let Err(payload) = result {
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+            st.outstanding -= 1;
+            if st.outstanding == 0 {
+                state.cv.notify_all();
+            }
+        });
+    }
 }
 
 impl Drop for ThreadPool {
@@ -219,6 +501,7 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
 
     #[test]
     fn executes_all_jobs() {
@@ -301,6 +584,103 @@ mod tests {
         });
         rx.recv_timeout(Duration::from_secs(60))
             .expect("pool drop hung: queued counter drifted");
+    }
+
+    #[test]
+    fn parallel_for_runs_every_block_exactly_once() {
+        let pool = ThreadPool::new(4).unwrap();
+        for (threads, blocks) in
+            [(1usize, 7usize), (4, 1), (4, 64), (16, 5), (3, 0)]
+        {
+            let hits: Vec<AtomicUsize> =
+                (0..blocks).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(threads, blocks, |b| {
+                hits[b].fetch_add(1, Ordering::SeqCst);
+            });
+            for (b, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "block {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_borrows_and_writes_disjoint_stack_data() {
+        let pool = ThreadPool::new(4).unwrap();
+        let mut out = vec![0usize; 33];
+        {
+            let cells: Vec<Mutex<&mut usize>> =
+                out.iter_mut().map(Mutex::new).collect();
+            pool.parallel_for(4, cells.len(), |b| {
+                **cells[b].lock().unwrap() = b * b;
+            });
+        }
+        let want: Vec<usize> = (0..33).map(|b| b * b).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "block 3 exploded")]
+    fn parallel_for_propagates_a_body_panic() {
+        let pool = ThreadPool::new(2).unwrap();
+        pool.parallel_for(2, 8, |b| {
+            if b == 3 {
+                panic!("block 3 exploded");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_parallel_for() {
+        let pool = ThreadPool::new(2).unwrap();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(2, 8, |b| {
+                if b == 0 {
+                    panic!("first block dies");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Workers must still be alive and the deques drained.
+        let out = pool.map(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_waits_for_borrowing_jobs() {
+        let pool = ThreadPool::new(3).unwrap();
+        let mut a = 0u64;
+        let mut b = 0u64;
+        pool.scope(|s| {
+            s.spawn(|| a = 11);
+            s.spawn(|| b = 22);
+        });
+        assert_eq!((a, b), (11, 22));
+    }
+
+    #[test]
+    fn scope_on_a_saturated_pool_makes_progress() {
+        // One worker, blocked on a barrier the *scope waiter* must
+        // release by draining the deque itself (try_run_one).
+        let pool = ThreadPool::new(1).unwrap();
+        let barrier = Arc::new(Barrier::new(2));
+        let b = Arc::clone(&barrier);
+        pool.execute(move || {
+            b.wait();
+        });
+        let hits = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Open the barrier from the submitting thread's helper
+            // loop or the worker, whichever gets there first.
+            s.spawn(move || {
+                barrier.wait();
+            });
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! `ScratchArena` — thread-keyed, shape-bucketed f32 buffer reuse.
+//!
+//! The gradient hot path wants short-lived d- and k·d-sized buffers
+//! (per-shard residuals, per-responder gradient arenas). Allocating
+//! them per [`RunSpec`](crate::sweep::RunSpec) — or worse, per round —
+//! puts the allocator on the hot path; a sweep over hundreds of specs
+//! re-pays the same allocations hundreds of times. This arena keeps
+//! returned buffers in a **thread-local** free list bucketed by
+//! capacity: sweep-pool worker threads persist across specs, so a
+//! buffer released when one spec's backend drops is picked up by the
+//! next spec that runs on the same worker.
+//!
+//! Thread-local (not global) keying is what keeps this invisible to
+//! results: no cross-thread state, no locks, no ordering — a take is a
+//! `BTreeMap` lookup and the returned buffer is **zero-filled to the
+//! requested length**, so its history (which thread, which spec, which
+//! capacity bucket) can never reach a computed byte. The fill is a
+//! `memset` — the same cost a fresh `vec![0.0; len]` pays — so reuse
+//! strictly saves the allocator round-trip.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+thread_local! {
+    /// Free buffers keyed by capacity; each bucket is a LIFO stack so
+    /// the most recently used (cache-warm) buffer is taken first.
+    static FREE_F32: RefCell<BTreeMap<usize, Vec<Vec<f32>>>> =
+        const { RefCell::new(BTreeMap::new()) };
+}
+
+/// Take a zero-filled `Vec<f32>` of length `len`, reusing the smallest
+/// pooled buffer whose capacity fits (best-fit), else allocating fresh.
+pub fn take_f32(len: usize) -> Vec<f32> {
+    let reused = FREE_F32.with(|free| {
+        let mut free = free.borrow_mut();
+        let key = free.range(len..).next().map(|(k, _)| *k);
+        let key = key?;
+        let bucket = free.get_mut(&key)?;
+        let buf = bucket.pop();
+        if bucket.is_empty() {
+            free.remove(&key);
+        }
+        buf
+    });
+    match reused {
+        Some(mut buf) => {
+            buf.clear();
+            buf.resize(len, 0.0);
+            buf
+        }
+        None => vec![0.0; len],
+    }
+}
+
+/// Return a buffer to the calling thread's pool for later reuse.
+/// Zero-capacity buffers are dropped (nothing to reuse).
+pub fn give_f32(buf: Vec<f32>) {
+    let cap = buf.capacity();
+    if cap == 0 {
+        return;
+    }
+    FREE_F32.with(|free| {
+        free.borrow_mut().entry(cap).or_default().push(buf);
+    });
+}
+
+/// Number of buffers pooled on the calling thread (test support).
+pub fn pooled_f32_buffers() -> usize {
+    FREE_F32.with(|free| free.borrow().values().map(Vec::len).sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuse_is_best_fit() {
+        // Isolate from other tests sharing this thread's pool.
+        FREE_F32.with(|f| f.borrow_mut().clear());
+        let mut a = take_f32(100);
+        a.iter_mut().for_each(|v| *v = f32::NAN);
+        let cap_a = a.capacity();
+        give_f32(a);
+        let mut b = take_f32(400);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        let cap_b = b.capacity();
+        give_f32(b);
+        assert_eq!(pooled_f32_buffers(), 2);
+
+        // len=50 best-fits the 100-cap buffer, not the 400-cap one,
+        // and arrives zeroed despite the NaN history.
+        let c = take_f32(50);
+        assert_eq!(c.capacity(), cap_a);
+        assert!(c.iter().all(|v| v.to_bits() == 0));
+        assert_eq!(pooled_f32_buffers(), 1);
+
+        // len=200 fits only the 400-cap buffer.
+        let d = take_f32(200);
+        assert_eq!(d.capacity(), cap_b);
+        assert!(d.iter().all(|v| v.to_bits() == 0));
+        assert_eq!(pooled_f32_buffers(), 0);
+
+        // Nothing pooled: a fresh allocation, still zeroed.
+        let e = take_f32(1000);
+        assert_eq!(e.len(), 1000);
+        assert!(e.iter().all(|v| v.to_bits() == 0));
+        give_f32(c);
+        give_f32(d);
+        give_f32(e);
+        assert_eq!(pooled_f32_buffers(), 3);
+        FREE_F32.with(|f| f.borrow_mut().clear());
+    }
+
+    #[test]
+    fn zero_len_and_zero_cap_are_harmless() {
+        let z = take_f32(0);
+        assert!(z.is_empty());
+        give_f32(Vec::new()); // dropped, not pooled
+    }
+}

@@ -16,6 +16,8 @@ mod native;
 
 pub use native::NativeBackend;
 
+use crate::exec::Parallelism;
+
 /// A source of per-shard partial gradients.
 ///
 /// Not `Send`: the PJRT-backed implementation holds thread-affine client
@@ -25,6 +27,35 @@ pub use native::NativeBackend;
 pub trait GradBackend {
     /// Compute worker `shard`'s partial gradient at `w` into `out` (len d).
     fn partial_grad(&mut self, shard: usize, w: &[f32], out: &mut [f32]);
+
+    /// Compute the partial gradients of every shard in `shards` into the
+    /// row-major `(shards.len(), d)` arena `out` — slot `i` receives
+    /// shard `shards[i]`'s gradient. `par` is a **wall-clock hint
+    /// only**: implementations must produce bitwise-identical bytes for
+    /// every budget (the intra-round determinism contract, asserted by
+    /// `test_sched_determinism`). Default: the serial [`partial_grad`]
+    /// loop in slot order, ignoring `par` — correct for any backend,
+    /// including thread-affine (non-`Send`) ones.
+    ///
+    /// [`partial_grad`]: GradBackend::partial_grad
+    fn partial_grads(
+        &mut self,
+        shards: &[usize],
+        w: &[f32],
+        out: &mut [f32],
+        par: Parallelism,
+    ) {
+        let _ = par;
+        let d = self.dim();
+        assert_eq!(
+            out.len(),
+            shards.len() * d,
+            "partial_grads: arena shape mismatch"
+        );
+        for (slot, &i) in out.chunks_exact_mut(d.max(1)).zip(shards.iter()) {
+            self.partial_grad(i, w, slot);
+        }
+    }
 
     /// Hook called by the master at the start of iteration `j` — backends
     /// whose per-worker data rotates across iterations (e.g. transformer

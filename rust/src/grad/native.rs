@@ -6,7 +6,31 @@
 
 use super::GradBackend;
 use crate::data::Shards;
-use crate::linalg::{gemv, gemv_t};
+use crate::exec::{for_each_block_mut, for_each_slot_mut, scratch, Parallelism};
+use crate::linalg::{gemv, gemv_t, gemv_t_cols, Matrix};
+
+/// One shard's partial gradient with caller-provided residual scratch:
+/// `out ← X_iᵀ (X_i w − y_i) / s`. The same kernel sequence as
+/// [`NativeBackend::partial_grad`], factored free of `&mut self` so
+/// intra-round workers can run it concurrently, each with per-thread
+/// scratch.
+fn grad_into(
+    x: &Matrix,
+    y: &[f32],
+    w: &[f32],
+    resid: &mut [f32],
+    out: &mut [f32],
+) {
+    let s = x.rows();
+    let r = &mut resid[..s];
+    // r = X_i w − y_i
+    gemv(1.0, x, w, 0.0, r);
+    for (ri, yi) in r.iter_mut().zip(y.iter()) {
+        *ri -= *yi;
+    }
+    // out = X_iᵀ r / s
+    gemv_t(1.0 / s as f32, x, r, 0.0, out);
+}
 
 /// Native (linalg) partial-gradient backend.
 pub struct NativeBackend {
@@ -32,17 +56,65 @@ impl NativeBackend {
 
 impl GradBackend for NativeBackend {
     fn partial_grad(&mut self, shard: usize, w: &[f32], out: &mut [f32]) {
-        let x = &self.shards.x[shard];
-        let y = &self.shards.y[shard];
-        let s = x.rows();
-        let r = &mut self.resid[..s];
-        // r = X_i w − y_i
-        gemv(1.0, x, w, 0.0, r);
-        for (ri, yi) in r.iter_mut().zip(y.iter()) {
-            *ri -= *yi;
+        grad_into(
+            &self.shards.x[shard],
+            &self.shards.y[shard],
+            w,
+            &mut self.resid,
+            out,
+        );
+    }
+
+    /// Intra-round parallel override. Multiple responders split by
+    /// responder (each slot a disjoint arena slice, per-thread residual
+    /// scratch from [`scratch`]); a single responder splits the
+    /// back-projection `X_iᵀ r` by column block instead
+    /// ([`gemv_t_cols`]). Both are bitwise-identical to the serial loop:
+    /// every output element is accumulated in the same ascending-row
+    /// order regardless of how columns or responders are partitioned.
+    fn partial_grads(
+        &mut self,
+        shards: &[usize],
+        w: &[f32],
+        out: &mut [f32],
+        par: Parallelism,
+    ) {
+        let d = self.d;
+        assert_eq!(
+            out.len(),
+            shards.len() * d,
+            "partial_grads: arena shape mismatch"
+        );
+        if par.is_serial() || shards.is_empty() {
+            for (slot, &i) in
+                out.chunks_exact_mut(d.max(1)).zip(shards.iter())
+            {
+                self.partial_grad(i, w, slot);
+            }
+        } else if shards.len() == 1 {
+            let x = &self.shards.x[shards[0]];
+            let y = &self.shards.y[shards[0]];
+            let s = x.rows();
+            let r = &mut self.resid[..s];
+            gemv(1.0, x, w, 0.0, r);
+            for (ri, yi) in r.iter_mut().zip(y.iter()) {
+                *ri -= *yi;
+            }
+            let r = &self.resid[..s];
+            let alpha = 1.0 / s as f32;
+            for_each_block_mut(par, out, |col0, panel| {
+                gemv_t_cols(alpha, x, r, 0.0, panel, col0);
+            });
+        } else {
+            let data = &self.shards;
+            for_each_slot_mut(par, out, shards.len(), d, |slot_i, slot| {
+                let i = shards[slot_i];
+                let x = &data.x[i];
+                let mut resid = scratch::take_f32(x.rows());
+                grad_into(x, &data.y[i], w, &mut resid, slot);
+                scratch::give_f32(resid);
+            });
         }
-        // out = X_iᵀ r / s
-        gemv_t(1.0 / s as f32, x, r, 0.0, out);
     }
 
     fn dim(&self) -> usize {
@@ -105,5 +177,48 @@ mod tests {
             backend.partial_grad(i, &w, &mut g);
             assert!(g.iter().all(|v| v.is_finite()));
         }
+    }
+
+    /// The responder-parallel and panel-parallel paths must be bitwise
+    /// equal to the serial loop — the intra-round determinism contract
+    /// at the backend level. NaN-poisoned output arenas double as a
+    /// regression check that beta=0 kernels overwrite.
+    #[test]
+    fn partial_grads_is_bitwise_jobs_invariant() {
+        use crate::exec::Parallelism;
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 64, d: 33, ..Default::default() },
+            21,
+        );
+        let shards = Shards::partition_uneven(&ds, 5);
+        let mut backend = NativeBackend::new(shards);
+        let w: Vec<f32> =
+            (0..33).map(|i| (i as f32 - 16.0) * 0.37).collect();
+
+        let resp = [4usize, 0, 2];
+        let mut serial = vec![f32::NAN; 3 * 33];
+        backend.partial_grads(&resp, &w, &mut serial, Parallelism::SERIAL);
+        for jobs in [2usize, 4, 16] {
+            let mut parallel = vec![f32::NAN; 3 * 33];
+            backend.partial_grads(
+                &resp,
+                &w,
+                &mut parallel,
+                Parallelism::new(jobs),
+            );
+            assert_eq!(bits(&parallel), bits(&serial), "jobs={jobs}");
+        }
+
+        // A single responder takes the column-panel path instead.
+        let mut one_serial = vec![f32::NAN; 33];
+        backend.partial_grads(&[3], &w, &mut one_serial, Parallelism::SERIAL);
+        let mut one_par = vec![f32::NAN; 33];
+        backend.partial_grads(&[3], &w, &mut one_par, Parallelism::new(4));
+        assert_eq!(bits(&one_par), bits(&one_serial));
+        assert!(one_par.iter().all(|v| v.is_finite()));
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
     }
 }

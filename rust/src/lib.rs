@@ -114,7 +114,9 @@
 //! --bench perf_hotpath` times the hot paths and writes
 //! `results/BENCH_hotpath.json`, and `-- --baseline <prior.json>`
 //! prints per-entry median deltas against an earlier report (CI smoke
-//! runs both). Three structural optimizations carry the scale story:
+//! diffs against the committed repo-root `BENCH_hotpath.json` snapshot
+//! and then against its own first run). Four structural optimizations
+//! carry the scale story:
 //!
 //! * **Order-statistics fastpath** ([`engine::FastpathGather`] over
 //!   [`stats::OrderStatSampler`], opt-in via `[run] fastpath` /
@@ -140,6 +142,26 @@
 //!   expensive cell. Where a job runs never reaches results (pinned
 //!   per-spec seeds + spec-order reassembly): `--jobs 1` ≡ `--jobs N`
 //!   byte-for-byte (`rust/tests/test_sched_determinism.rs`).
+//! * **Deterministic intra-round parallelism** (`[run] intra_jobs` /
+//!   `--intra-jobs`, default 1 = exactly the serial path). One round
+//!   forks on the *same* shared [`exec::ThreadPool`] via scoped
+//!   fork–join ([`exec::ThreadPool::parallel_for`]): the k responders'
+//!   partial gradients land in per-responder slices of a persistent
+//!   scratch arena ([`exec::scratch`]) and reduce in fixed responder
+//!   order, and the d-dimensional merge/apply loops split into fixed
+//!   [`exec::INTRA_BLOCK`] column blocks. The determinism argument is
+//!   structural, not scheduling-dependent: block boundaries are pure
+//!   functions of the shape (never of thread count or claim order),
+//!   every block writes a disjoint slice, and all reductions run
+//!   serially in fixed order after the join — so no float operation is
+//!   ever re-associated and `--intra-jobs 1` ≡ `--intra-jobs N`
+//!   byte-for-byte, composing with `--jobs` on one pool (no `J × I`
+//!   oversubscription). `transmit` stays strictly serial (it draws
+//!   comm RNG in worker order). The kernels underneath got the same
+//!   treatment: `gemv_t` walks fixed column panels
+//!   ([`linalg::GEMV_T_PANEL`]) so the output stays cache-resident
+//!   across rows — bitwise-identical to the row-walk because each
+//!   output element still accumulates in ascending row order.
 //!
 //! ## Determinism rules
 //!
@@ -163,6 +185,9 @@
 //!   [`sweep::derive_seed`]), so `--seed` reaches every draw.
 //! * **D005** — no `println!`/`eprintln!` in library modules: output
 //!   flows through [`metrics`]; stdout belongs to [`cli`] and benches.
+//! * **D006** — no `thread::spawn` outside [`exec`]: all parallelism
+//!   shares one pool, so sweep- and intra-round fan-out compose
+//!   without oversubscription and every reduction stays fixed-order.
 //! * **L001** — `use crate::X` edges must appear in the layering
 //!   table (`analysis::ALLOWED_IMPORTS`): the engine stays embeddable
 //!   and the dependency graph acyclic.

@@ -15,7 +15,10 @@ mod ops;
 mod solve;
 
 pub use matrix::Matrix;
-pub use ops::{axpy, dot, dot_f32, gemm, gemv, gemv_t, nrm2, scal};
+pub use ops::{
+    axpy, dot, dot_f32, gemm, gemv, gemv_t, gemv_t_blocked, gemv_t_cols,
+    gemv_t_rowwalk, nrm2, scal, GEMV_T_PANEL,
+};
 pub use solve::{
     cholesky_solve, cholesky_solve_dense_f64, cholesky_solve_f64,
     CholeskyError,

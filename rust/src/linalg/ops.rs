@@ -26,9 +26,21 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 }
 
 /// `x ← alpha * x`.
+///
+/// 8-lane chunked like [`axpy`]/[`dot_f32`] (it was the last hot kernel
+/// still a plain scalar loop). Each element's update is independent —
+/// one multiply, no accumulation — so chunking cannot change float
+/// association and results are bitwise identical to the scalar loop
+/// (test-asserted below).
 #[inline]
 pub fn scal(alpha: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
+    let mut xc = x.chunks_exact_mut(8);
+    for xb in &mut xc {
+        for l in 0..8 {
+            xb[l] *= alpha;
+        }
+    }
+    for xi in xc.into_remainder().iter_mut() {
         *xi *= alpha;
     }
 }
@@ -94,6 +106,11 @@ pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
 
 /// `y ← alpha * A x + beta * y` (A row-major, row walk).
 ///
+/// `beta == 0.0` **overwrites** `y` (BLAS semantics) rather than
+/// scaling it: `0.0 * NaN = NaN`, so the scale form would leak stale
+/// NaN/∞ from an uninitialized or poisoned `y` into results — exactly
+/// what breaks reusing dirty scratch buffers.
+///
 /// §Perf note: a 4-row-blocked variant (sharing `x` loads across four
 /// accumulator lanes) was tried and measured ~35% *slower* at the fig-2
 /// shard shape — the 4×8 accumulator tile spills; reverted to the simple
@@ -101,34 +118,114 @@ pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
 pub fn gemv(alpha: f32, a: &Matrix, x: &[f32], beta: f32, y: &mut [f32]) {
     assert_eq!(a.cols(), x.len(), "gemv: A.cols != x.len");
     assert_eq!(a.rows(), y.len(), "gemv: A.rows != y.len");
-    for i in 0..a.rows() {
-        y[i] = alpha * dot_f32(a.row(i), x) + beta * y[i];
+    if beta == 0.0 {
+        for i in 0..a.rows() {
+            y[i] = alpha * dot_f32(a.row(i), x);
+        }
+    } else {
+        for i in 0..a.rows() {
+            y[i] = alpha * dot_f32(a.row(i), x) + beta * y[i];
+        }
     }
 }
 
-/// `y ← alpha * Aᵀ x + beta * y` without materializing Aᵀ: accumulate
-/// row-by-row (`y += alpha * x[i] * A[i, :]`), keeping the row-major walk.
+/// Column width of one [`gemv_t_blocked`] panel: 1024 f32 = 4 KiB of
+/// resident accumulator, small enough to stay in L1 alongside the
+/// streaming row segments.
+pub const GEMV_T_PANEL: usize = 1024;
+
+/// `y ← alpha * Aᵀ x + beta * y` without materializing Aᵀ.
+///
+/// Dispatches on shape: up to [`GEMV_T_PANEL`] columns the accumulator
+/// already fits in cache and the plain [`gemv_t_rowwalk`] wins; wider
+/// outputs go through [`gemv_t_blocked`] so `y` stops streaming through
+/// cache once per row. Both paths accumulate each element in the same
+/// ascending-row order, so the dispatch is bitwise invisible
+/// (test-asserted below). `beta == 0.0` overwrites `y` — see [`gemv`].
 pub fn gemv_t(alpha: f32, a: &Matrix, x: &[f32], beta: f32, y: &mut [f32]) {
+    if y.len() > GEMV_T_PANEL {
+        gemv_t_blocked(alpha, a, x, beta, y);
+    } else {
+        gemv_t_rowwalk(alpha, a, x, beta, y);
+    }
+}
+
+/// The historical [`gemv_t`] loop: accumulate row-by-row
+/// (`y += alpha * x[i] * A[i, :]`), keeping the row-major walk. Public
+/// so `perf_hotpath` can race it against [`gemv_t_blocked`].
+pub fn gemv_t_rowwalk(
+    alpha: f32,
+    a: &Matrix,
+    x: &[f32],
+    beta: f32,
+    y: &mut [f32],
+) {
     assert_eq!(a.rows(), x.len(), "gemv_t: A.rows != x.len");
     assert_eq!(a.cols(), y.len(), "gemv_t: A.cols != y.len");
-    if beta != 1.0 {
-        scal(beta, y);
+    gemv_t_cols(alpha, a, x, beta, y, 0);
+}
+
+/// Cache-blocked [`gemv_t`]: walk `y` in [`GEMV_T_PANEL`]-column panels
+/// and run the full row accumulation per panel, so the accumulator
+/// stays resident instead of streaming all of `y` through cache once
+/// per row. Per element the accumulation order is identical to the row
+/// walk — rows ascending — so results are bitwise equal.
+pub fn gemv_t_blocked(
+    alpha: f32,
+    a: &Matrix,
+    x: &[f32],
+    beta: f32,
+    y: &mut [f32],
+) {
+    assert_eq!(a.rows(), x.len(), "gemv_t: A.rows != x.len");
+    assert_eq!(a.cols(), y.len(), "gemv_t: A.cols != y.len");
+    for (p, panel) in y.chunks_mut(GEMV_T_PANEL).enumerate() {
+        gemv_t_cols(alpha, a, x, beta, panel, p * GEMV_T_PANEL);
+    }
+}
+
+/// [`gemv_t`] restricted to the column range
+/// `[col0, col0 + y_cols.len())`: `y_cols ← alpha * Aᵀ x + beta *
+/// y_cols` over those columns of `A` only. The panel primitive behind
+/// [`gemv_t_blocked`] and the engine's column-parallel back-projection
+/// (each intra-round worker owns a disjoint panel). The per-row
+/// `coeff != 0.0` skip matches the row walk exactly — it is observable
+/// through Inf/NaN propagation (`0.0 * inf = NaN`), so both paths must
+/// share it.
+pub fn gemv_t_cols(
+    alpha: f32,
+    a: &Matrix,
+    x: &[f32],
+    beta: f32,
+    y_cols: &mut [f32],
+    col0: usize,
+) {
+    assert_eq!(a.rows(), x.len(), "gemv_t: A.rows != x.len");
+    let hi = col0 + y_cols.len();
+    assert!(hi <= a.cols(), "gemv_t_cols: panel exceeds A.cols");
+    if beta == 0.0 {
+        y_cols.fill(0.0);
+    } else if beta != 1.0 {
+        scal(beta, y_cols);
     }
     for i in 0..a.rows() {
         let coeff = alpha * x[i];
         if coeff != 0.0 {
-            axpy(coeff, a.row(i), y);
+            axpy(coeff, &a.row(i)[col0..hi], y_cols);
         }
     }
 }
 
 /// `C ← alpha * A B + beta * C`, blocked for cache reuse.
+/// `beta == 0.0` overwrites `C` — see [`gemv`].
 pub fn gemm(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
     assert_eq!(a.cols(), b.rows(), "gemm: inner dims");
     assert_eq!(c.rows(), a.rows(), "gemm: C rows");
     assert_eq!(c.cols(), b.cols(), "gemm: C cols");
     const BLK: usize = 64;
-    if beta != 1.0 {
+    if beta == 0.0 {
+        c.as_mut_slice().fill(0.0);
+    } else if beta != 1.0 {
         scal(beta, c.as_mut_slice());
     }
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
@@ -279,5 +376,131 @@ mod tests {
     #[test]
     fn nrm2_pythagoras() {
         assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+    }
+
+    /// beta == 0 must *overwrite* y: a stale NaN (or ∞) in the output
+    /// buffer must not survive, since `0.0 * NaN = NaN` would leak it.
+    #[test]
+    fn gemv_beta_zero_overwrites_stale_nan() {
+        let mut rng = Pcg64::seed(11);
+        let a = rand_matrix(&mut rng, 6, 4);
+        let x: Vec<f32> = (0..4).map(|_| rng.next_f64() as f32).collect();
+        let mut clean = vec![0.0f32; 6];
+        gemv(1.5, &a, &x, 0.0, &mut clean);
+        let mut dirty = vec![f32::NAN; 6];
+        dirty[2] = f32::INFINITY;
+        gemv(1.5, &a, &x, 0.0, &mut dirty);
+        assert_eq!(bits(&dirty), bits(&clean));
+        assert!(dirty.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gemv_t_beta_zero_overwrites_stale_nan() {
+        let mut rng = Pcg64::seed(12);
+        let a = rand_matrix(&mut rng, 5, 9);
+        let x: Vec<f32> = (0..5).map(|_| rng.next_f64() as f32).collect();
+        let mut clean = vec![0.0f32; 9];
+        gemv_t(0.5, &a, &x, 0.0, &mut clean);
+        let mut dirty = vec![f32::NEG_INFINITY; 9];
+        dirty[0] = f32::NAN;
+        gemv_t(0.5, &a, &x, 0.0, &mut dirty);
+        assert_eq!(bits(&dirty), bits(&clean));
+        assert!(dirty.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gemm_beta_zero_overwrites_stale_nan() {
+        let mut rng = Pcg64::seed(13);
+        let a = rand_matrix(&mut rng, 4, 3);
+        let b = rand_matrix(&mut rng, 3, 5);
+        let mut clean = Matrix::zeros(4, 5);
+        gemm(1.0, &a, &b, 0.0, &mut clean);
+        let mut dirty =
+            Matrix::from_vec(4, 5, vec![f32::NAN; 20]);
+        gemm(1.0, &a, &b, 0.0, &mut dirty);
+        assert_eq!(
+            bits(dirty.as_slice()),
+            bits(clean.as_slice())
+        );
+        assert!(dirty.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    /// The 8-lane chunked `scal` must be bitwise identical to the plain
+    /// scalar loop: each element is an independent `x *= alpha`, so
+    /// lane layout cannot change any result.
+    #[test]
+    fn scal_chunked_is_bitwise_equal_to_scalar_loop() {
+        for n in [0usize, 1, 7, 8, 9, 16, 17, 100, 1001] {
+            let base: Vec<f32> = (0..n)
+                .map(|i| {
+                    let sign = if i % 3 == 0 { -1.0f32 } else { 1.0 };
+                    sign * (1.0e7 + i as f32) * 1.000_001f32.powi(i as i32)
+                })
+                .collect();
+            for alpha in [0.0f32, 1.0, -2.5, 0.3333333, f32::MIN_POSITIVE] {
+                let mut fast = base.clone();
+                scal(alpha, &mut fast);
+                let mut slow = base.clone();
+                for v in slow.iter_mut() {
+                    *v *= alpha;
+                }
+                assert_eq!(bits(&fast), bits(&slow), "n={n} alpha={alpha}");
+            }
+        }
+    }
+
+    /// Column-panel blocking must be bitwise invisible: the blocked and
+    /// row-walk paths accumulate each element in the same ascending-row
+    /// order, including across the dispatch threshold and with
+    /// catastrophic-cancellation values.
+    #[test]
+    fn gemv_t_blocked_is_bitwise_equal_to_rowwalk() {
+        let mut rng = Pcg64::seed(14);
+        for d in [
+            1usize,
+            GEMV_T_PANEL - 1,
+            GEMV_T_PANEL,
+            GEMV_T_PANEL + 1,
+            2 * GEMV_T_PANEL + 37,
+        ] {
+            let rows = 11usize;
+            let data: Vec<f32> = (0..rows * d)
+                .map(|i| {
+                    let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+                    sign * (1.0e8 + (i % 97) as f32)
+                        + (rng.next_f64() as f32 - 0.5)
+                })
+                .collect();
+            let a = Matrix::from_vec(rows, d, data);
+            let x: Vec<f32> = (0..rows)
+                .map(|i| {
+                    if i == 3 {
+                        0.0 // exercise the coeff == 0 row skip
+                    } else {
+                        rng.next_f64() as f32 - 0.5
+                    }
+                })
+                .collect();
+            for beta in [0.0f32, 1.0, -0.75] {
+                let y0: Vec<f32> =
+                    (0..d).map(|i| 2.0e7 - i as f32 * 0.25).collect();
+                let mut y_walk = y0.clone();
+                gemv_t_rowwalk(1.0, &a, &x, beta, &mut y_walk);
+                let mut y_blk = y0.clone();
+                gemv_t_blocked(1.0, &a, &x, beta, &mut y_blk);
+                assert_eq!(bits(&y_blk), bits(&y_walk), "d={d} beta={beta}");
+                let mut y_dispatch = y0;
+                gemv_t(1.0, &a, &x, beta, &mut y_dispatch);
+                assert_eq!(
+                    bits(&y_dispatch),
+                    bits(&y_walk),
+                    "d={d} beta={beta}"
+                );
+            }
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
     }
 }

@@ -281,6 +281,12 @@ fn cmd_train(args: &Args) -> i32 {
     if args.has("fastpath") {
         cfg.fastpath = true;
     }
+    // --intra-jobs overrides the config's `[run] intra_jobs` (intra-round
+    // fork–join width; pure wall-clock — the trajectory is byte-identical
+    // for every value; 0 = all cores).
+    cfg.intra_jobs = args
+        .get_parse("intra-jobs", cfg.intra_jobs)
+        .unwrap_or(cfg.intra_jobs);
 
     match run_experiment(&cfg) {
         Ok(out) => {
@@ -428,6 +434,7 @@ fn cmd_train_transformer(args: &Args) -> i32 {
         max_time: 0.0,
         seed,
         record_stride: (steps / 20).max(1),
+        intra_jobs: 1,
     };
     let eval_backend =
         TransformerBackend::new(&runtime, &tag, workers, seed).unwrap();
@@ -483,6 +490,7 @@ fn cmd_threaded(args: &Args) -> i32 {
         time_scale,
         seed,
         record_stride: 20,
+        intra_jobs: args.get_parse("intra-jobs", 1).unwrap_or(1),
     };
     let run = cluster.run_fastest_k(
         &mut policy,
@@ -534,7 +542,7 @@ fn cmd_repeat(args: &Args) -> i32 {
         eprintln!("repeat requires --config exp.toml");
         return 2;
     };
-    let cfg = match std::fs::read_to_string(path)
+    let mut cfg = match std::fs::read_to_string(path)
         .map_err(|e| e.to_string())
         .and_then(|t| ExperimentConfig::from_toml(&t))
     {
@@ -544,6 +552,11 @@ fn cmd_repeat(args: &Args) -> i32 {
             return 2;
         }
     };
+    // --intra-jobs overrides `[run] intra_jobs` inside every repetition
+    // (pure wall-clock, byte-identical for every value).
+    cfg.intra_jobs = args
+        .get_parse("intra-jobs", cfg.intra_jobs)
+        .unwrap_or(cfg.intra_jobs);
     let reps = args.get_parse::<usize>("steps", 5).unwrap_or(5); // repetitions
     let seed0 = args.get_parse::<u64>("seed", 100).unwrap_or(100);
     let points = args.get_parse::<usize>("points", 24).unwrap_or(24);

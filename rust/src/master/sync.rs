@@ -45,6 +45,9 @@ pub struct MasterConfig {
     pub seed: u64,
     /// Evaluate + record the error every this many iterations.
     pub record_stride: u64,
+    /// Intra-round worker budget (1 = serial, 0 = the machine). Pure
+    /// wall-clock — trajectories are bitwise identical for every value.
+    pub intra_jobs: usize,
 }
 
 impl Default for MasterConfig {
@@ -56,6 +59,7 @@ impl Default for MasterConfig {
             max_time: 0.0,
             seed: 0,
             record_stride: 10,
+            intra_jobs: 1,
         }
     }
 }
@@ -192,6 +196,7 @@ pub fn run_fastest_k_comm_traced(
         max_time: cfg.max_time,
         seed: cfg.seed,
         record_stride: cfg.record_stride,
+        intra_jobs: cfg.intra_jobs,
     };
     let mut core = EngineCore::new(
         policy.name(),

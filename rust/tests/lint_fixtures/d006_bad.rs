@@ -1,0 +1,7 @@
+// D006 must fire on both spellings of a live spawn outside exec.
+fn fan_out(shards: Vec<Vec<f32>>) {
+    let h = std::thread::spawn(move || shards.len());
+    let _ = h.join();
+    let h2 = thread::spawn(|| 0usize);
+    let _ = h2.join();
+}

@@ -1,0 +1,18 @@
+// Parallelism routed through exec is the sanctioned shape; tests may
+// spawn scenario threads freely.
+use crate::exec::Parallelism;
+fn fan_out(par: Parallelism, y: &mut [f32]) {
+    crate::exec::for_each_block_mut(par, y, |_, chunk| {
+        for v in chunk {
+            *v += 1.0;
+        }
+    });
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scenario_threads_are_fine() {
+        let h = std::thread::spawn(|| 1 + 1);
+        assert_eq!(h.join().unwrap(), 2);
+    }
+}

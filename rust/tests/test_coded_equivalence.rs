@@ -368,6 +368,7 @@ fn engine_reproduces_the_coded_spec_on_priced_channels() {
                 max_time: cfg.max_time,
                 seed: cfg.seed,
                 record_stride: cfg.record_stride,
+                intra_jobs: 1,
             };
             let w0 = vec![0.0f32; 10];
             let reference = {
@@ -511,6 +512,7 @@ fn coded_r1_is_fastest_k_at_n_bitwise_including_priced_channels() {
                     max_time: cfg.max_time,
                     seed: cfg.seed,
                     record_stride: cfg.record_stride,
+                    intra_jobs: 1,
                 };
                 let core = EngineCore::new(
                     "coded-r1",

@@ -99,6 +99,7 @@ fn fastest_k_transformer_training_descends() {
         max_time: 0.0,
         seed: 4,
         record_stride: 5,
+        intra_jobs: 1,
     };
     let run = run_fastest_k(
         &mut backend,

@@ -743,6 +743,7 @@ fn threaded_fastest_k_with_an_adaptive_policy_reproduces_the_simulator() {
             time_scale: 1e-6,
             seed,
             record_stride: 50,
+            intra_jobs: 1,
         };
         cluster.run_with_comm(
             &delays(),

@@ -134,6 +134,7 @@ fn fast_cfg() -> ExperimentConfig {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: true,
     }

@@ -101,6 +101,23 @@ fn d005_fires_in_library_not_cli() {
 }
 
 #[test]
+fn d006_fires_outside_exec_only() {
+    let bad = lint_at("rust/src/engine/fx.rs", "d006_bad.rs");
+    assert_eq!(rules_fired(&bad), ["D006", "D006"]);
+    // exec owns the pool; integration tests/benches have no top module
+    // and may spawn scenario threads.
+    for exempt in ["rust/src/exec/fx.rs", "rust/tests/fx.rs"] {
+        let r = lint_sources(&[(
+            exempt.to_string(),
+            fixture("d006_bad.rs"),
+        )]);
+        assert_eq!(r.active_count(), 0, "{exempt}: {:?}", r.findings);
+    }
+    let clean = lint_at("rust/src/engine/fx.rs", "d006_clean.rs");
+    assert_eq!(clean.active_count(), 0, "{:?}", clean.findings);
+}
+
+#[test]
 fn l001_fires_on_layering_violations() {
     let bad = lint_at("rust/src/engine/fx.rs", "l001_bad.rs");
     assert_eq!(rules_fired(&bad), ["L001", "L001"]);
@@ -116,6 +133,26 @@ fn l001_fires_on_layering_violations() {
     )]);
     assert_eq!(rules_fired(&rev), ["L001"]);
     assert!(rev.findings[0].message.contains("crate::engine"));
+    // Intra-round parallelism legalised engine → exec and grad → exec
+    // (Parallelism tokens, block helpers, scratch arena); the reverse
+    // edges from true leaves stay illegal.
+    for clean_rel in
+        ["rust/src/engine/core.rs", "rust/src/grad/native.rs"]
+    {
+        let r = lint_sources(&[(
+            clean_rel.to_string(),
+            "use crate::exec::Parallelism;\nfn f() {}\n".to_string(),
+        )]);
+        assert_eq!(r.active_count(), 0, "{clean_rel}: {:?}", r.findings);
+    }
+    for leaf_rel in ["rust/src/linalg/ops.rs", "rust/src/rng/mod.rs"] {
+        let r = lint_sources(&[(
+            leaf_rel.to_string(),
+            "use crate::exec::Parallelism;\nfn f() {}\n".to_string(),
+        )]);
+        assert_eq!(rules_fired(&r), ["L001"], "{leaf_rel}");
+        assert!(r.findings[0].message.contains("crate::exec"));
+    }
 }
 
 #[test]
@@ -203,8 +240,9 @@ fn whole_repo_lints_clean_with_visible_suppressions() {
 fn rule_table_matches_fixture_coverage() {
     // Every registered rule id appears in this suite's coverage; a new
     // rule without fixtures fails here first.
-    let covered =
-        ["D001", "D002", "D003", "D004", "D005", "L001", "S001"];
+    let covered = [
+        "D001", "D002", "D003", "D004", "D005", "D006", "L001", "S001",
+    ];
     let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
     assert_eq!(ids, covered);
 }

@@ -116,6 +116,7 @@ fn full_training_loop_through_pjrt() {
         max_time: 0.0,
         seed: 9,
         record_stride: 50,
+        intra_jobs: 1,
     };
     let run = run_fastest_k(
         &mut backend,
@@ -145,6 +146,7 @@ fn xla_and_native_runs_agree_bitwise_on_delays() {
         max_time: 0.0,
         seed: 12,
         record_stride: 20,
+        intra_jobs: 1,
     };
     let mut native = NativeBackend::new(shards.clone());
     let mut p1 = FixedK::new(5);

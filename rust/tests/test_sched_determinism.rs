@@ -9,10 +9,22 @@
 //! siblings — and assert `--jobs 1` and `--jobs N` stay byte-identical,
 //! plus a regression test that a panic inside a *stolen* job still
 //! propagates out of `map`.
+//!
+//! The same invisibility claim holds one level down: `--intra-jobs`
+//! forks the work *inside* one round (responder partial gradients into
+//! arena slots, column-blocked merge/apply) on the same shared pool.
+//! The cross-product tests here drive a mixed-discipline grid
+//! (sync, priced-comm, async, coded) through `--jobs J --intra-jobs I`
+//! and assert every (J, I) yields byte-identical outputs and CSVs,
+//! and that a panic inside `parallel_for` propagates without wedging
+//! the pool for subsequent fork–joins.
 
 use std::sync::{Arc, Barrier};
 
-use adasgd::config::{DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec};
+use adasgd::config::{
+    CodingSchemeSpec, CodingSpec, CommSpec, CompressorSpec, DelaySpec,
+    ExperimentConfig, PolicySpec, WorkloadSpec,
+};
 use adasgd::coordinator::ExperimentOutput;
 use adasgd::exec::ThreadPool;
 use adasgd::sweep::{write_sweep_csv, RunSpec, SweepExecutor};
@@ -32,6 +44,7 @@ fn skew_base() -> ExperimentConfig {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     }
@@ -113,6 +126,256 @@ fn skewed_grid_csvs_are_byte_identical() {
     assert!(!b1.is_empty());
     assert_eq!(b1, b3, "worker count must never reach the CSV bytes");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A priced, compressed channel: uplink qsgd + downlink top-k over
+/// finite links with shared ingress, so comm RNG draws and byte
+/// accounting are live in the rounds under test.
+fn priced_comm() -> CommSpec {
+    CommSpec {
+        scheme: CompressorSpec::Qsgd { levels: 4 },
+        downlink: CompressorSpec::TopK { frac: 0.25 },
+        bandwidth: 2_000.0,
+        latency: 0.05,
+        down_bandwidth: 4_000.0,
+        ingress_bw: 8_000.0,
+        ..Default::default()
+    }
+}
+
+/// One cell per gather discipline that routes through `EngineCore`:
+/// plain sync fastest-k, sync over a priced channel at a d that spans
+/// several intra blocks (so the column split is real), async over the
+/// same priced channel, and coded (FRC) both free and priced. Only
+/// `intra_jobs` varies between calls — it must never reach the bytes.
+fn discipline_specs(intra_jobs: usize) -> Vec<RunSpec> {
+    let cells: Vec<(&str, PolicySpec, Option<CodingSpec>, CommSpec, usize)> = vec![
+        (
+            "sync-dense",
+            PolicySpec::Fixed { k: 5 },
+            None,
+            Default::default(),
+            10,
+        ),
+        (
+            "sync-priced-wide",
+            PolicySpec::Fixed { k: 5 },
+            None,
+            priced_comm(),
+            9_000,
+        ),
+        ("async-priced", PolicySpec::Async, None, priced_comm(), 10),
+        (
+            "coded-frc",
+            PolicySpec::Fixed { k: 5 },
+            Some(CodingSpec { scheme: CodingSchemeSpec::Frc, r: 2 }),
+            Default::default(),
+            10,
+        ),
+        (
+            "coded-priced",
+            PolicySpec::Fixed { k: 5 },
+            Some(CodingSpec { scheme: CodingSchemeSpec::Frc, r: 2 }),
+            priced_comm(),
+            10,
+        ),
+    ];
+    cells
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, policy, coding, comm, d))| {
+            let mut cfg = skew_base();
+            cfg.label = format!("disc/{name}");
+            cfg.max_iterations = 40;
+            cfg.seed = 40 + i as u64;
+            cfg.record_stride = 10;
+            cfg.policy = policy;
+            cfg.coding = coding;
+            cfg.comm = comm;
+            cfg.workload = WorkloadSpec::LinReg { m: 80, d };
+            cfg.intra_jobs = intra_jobs;
+            RunSpec::from_config(i, cfg)
+        })
+        .collect()
+}
+
+/// The tentpole acceptance test: `--jobs J --intra-jobs I` is
+/// byte-identical across all (J, I) for every discipline. I = 3 and 4
+/// exercise partial arenas (k = 5 slots over fewer workers), I = 16
+/// oversubscribes the block count at d = 10 (blocks < threads).
+#[test]
+fn discipline_grid_is_jobs_and_intra_jobs_invariant() {
+    let reference =
+        SweepExecutor::new(1).run(&discipline_specs(1)).expect("reference");
+    assert_eq!(reference.len(), 5);
+    for jobs in [1usize, 3] {
+        for intra in [1usize, 3, 4, 16] {
+            if (jobs, intra) == (1, 1) {
+                continue;
+            }
+            let out = SweepExecutor::new(jobs)
+                .run(&discipline_specs(intra))
+                .expect("parallel sweep");
+            assert_eq!(reference.len(), out.len());
+            for (a, b) in reference.iter().zip(&out) {
+                assert_outputs_identical(a, b);
+            }
+        }
+    }
+}
+
+/// ... and the CSVs those runs write are byte-for-byte the same file:
+/// `intra_jobs` differs inside the specs, but it is pure wall-clock
+/// configuration and must never appear in headers, meta, or samples.
+#[test]
+fn discipline_grid_csvs_are_intra_jobs_invariant() {
+    let dir = std::env::temp_dir().join("adasgd_intra_determinism_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p_serial = dir.join("j1i1.csv");
+    let p_forked = dir.join("j3i16.csv");
+    let serial_specs = discipline_specs(1);
+    let forked_specs = discipline_specs(16);
+    let serial =
+        SweepExecutor::new(1).run(&serial_specs).expect("serial sweep");
+    let forked =
+        SweepExecutor::new(3).run(&forked_specs).expect("forked sweep");
+    write_sweep_csv(&p_serial, &serial_specs, &serial).unwrap();
+    write_sweep_csv(&p_forked, &forked_specs, &forked).unwrap();
+    let a = std::fs::read(&p_serial).unwrap();
+    let b = std::fs::read(&p_forked).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "(jobs, intra_jobs) must never reach the CSV bytes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The threaded (real-OS-thread) cluster honours the same contract:
+/// the master's merge/apply loops fork by `intra_jobs`, the result
+/// does not move by a bit.
+#[test]
+fn threaded_cluster_is_intra_jobs_invariant() {
+    use adasgd::data::{Shards, SyntheticConfig, SyntheticDataset};
+    use adasgd::exec::{ThreadedCluster, ThreadedConfig};
+    use adasgd::model::LinRegProblem;
+    use adasgd::policy::FixedK;
+
+    let ds = SyntheticDataset::generate(
+        SyntheticConfig { m: 160, d: 40, ..Default::default() },
+        3,
+    );
+    let problem = LinRegProblem::new(&ds);
+    let shards = Shards::partition(&ds, 8);
+    let mut runs = Vec::new();
+    for intra in [1usize, 4] {
+        let mut cluster = ThreadedCluster::spawn(&shards, 1e-6);
+        let cfg = ThreadedConfig {
+            eta: 1e-3,
+            max_iterations: 60,
+            time_scale: 1e-6,
+            seed: 5,
+            record_stride: 10,
+            intra_jobs: intra,
+        };
+        let mut policy = FixedK::new(4);
+        let run = cluster.run_fastest_k(
+            &mut policy,
+            &vec![0.0f32; 40],
+            &cfg,
+            &mut |w| problem.error(w),
+        );
+        runs.push(run);
+    }
+    let (a, b) = (&runs[0], &runs[1]);
+    assert_eq!(a.recorder.samples(), b.recorder.samples());
+    let wa: Vec<u32> = a.w.iter().map(|v| v.to_bits()).collect();
+    let wb: Vec<u32> = b.w.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(wa, wb, "threaded model must be bitwise intra-invariant");
+    assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits());
+}
+
+/// Adversarial-shape property sweep over the fork–join block helpers,
+/// at the integration level: random lengths hugging the block
+/// boundaries, random data including signed zeros and subnormal-scale
+/// values, every worker budget — bitwise equal to the serial loop.
+#[test]
+fn block_reduction_is_bitwise_serial_for_adversarial_shapes() {
+    use adasgd::exec::{zip_block_mut, Parallelism, INTRA_BLOCK};
+    use adasgd::rng::{Pcg64, Rng};
+
+    let mut rng = Pcg64::seed(41);
+    let mut lens: Vec<usize> = vec![0, 1, 2];
+    for b in 1..=3usize {
+        let edge = b * INTRA_BLOCK;
+        lens.extend([edge - 1, edge, edge + 1]);
+    }
+    for _ in 0..4 {
+        lens.push((rng.next_u64() % (3 * INTRA_BLOCK as u64)) as usize);
+    }
+    for len in lens {
+        let x: Vec<f32> = (0..len)
+            .map(|i| {
+                let r = rng.next_f64() as f32 - 0.5;
+                match i % 5 {
+                    0 => r * 1.0e8,
+                    1 => -0.0,
+                    2 => r * f32::MIN_POSITIVE,
+                    _ => r,
+                }
+            })
+            .collect();
+        let y0: Vec<f32> =
+            (0..len).map(|i| 1.0e7 - i as f32 * 0.625).collect();
+        let mut y_ref = y0.clone();
+        for (yv, xv) in y_ref.iter_mut().zip(&x) {
+            *yv = *yv * 0.75 + *xv;
+        }
+        for jobs in [2usize, 4, 16] {
+            let mut y = y0.clone();
+            zip_block_mut(Parallelism::new(jobs), &mut y, &x, |_, yc, xc| {
+                for (yv, xv) in yc.iter_mut().zip(xc) {
+                    *yv = *yv * 0.75 + *xv;
+                }
+            });
+            let rb: Vec<u32> = y_ref.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(rb, yb, "len={len} jobs={jobs}");
+        }
+    }
+}
+
+/// A panic inside a `parallel_for` body unwinds to the caller and the
+/// pool keeps serving fork–joins afterwards — the poisoned round dies,
+/// the process (and the rest of the sweep) does not wedge.
+#[test]
+fn panic_in_parallel_for_propagates_without_wedging_the_pool() {
+    let pool = ThreadPool::new(3).expect("pool");
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || {
+            pool.parallel_for(3, 64, |b| {
+                if b == 17 {
+                    panic!("block 17 exploded");
+                }
+            });
+        },
+    ));
+    let msg = caught.expect_err("the body panic must unwind to the caller");
+    let text = msg
+        .downcast_ref::<&str>()
+        .copied()
+        .map(str::to_string)
+        .or_else(|| msg.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(text.contains("block 17 exploded"), "{text}");
+    // The pool is not wedged: a fresh fork–join and a map both complete.
+    let mut hits = vec![0u8; 32];
+    {
+        let slots = std::sync::Mutex::new(&mut hits);
+        pool.parallel_for(3, 32, |b| {
+            slots.lock().unwrap()[b] += 1;
+        });
+    }
+    assert!(hits.iter().all(|&h| h == 1));
+    let doubled = pool.map(8, |i| i * 2);
+    assert_eq!(doubled, vec![0, 2, 4, 6, 8, 10, 12, 14]);
 }
 
 /// Panic propagation through the *stealing* path, deterministically.

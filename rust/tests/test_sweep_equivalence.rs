@@ -37,6 +37,7 @@ fn tiny_base() -> ExperimentConfig {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: None,
         fastpath: false,
     }

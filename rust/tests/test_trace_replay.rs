@@ -303,6 +303,7 @@ fn threaded_record_replay_is_bitwise() {
         time_scale: 1e-6,
         seed,
         record_stride: 20,
+        intra_jobs: 1,
     };
     let run = |model: &dyn adasgd::straggler::DelayModel, trace: bool| {
         let shards = Shards::partition(&ds, N);
@@ -504,6 +505,7 @@ fn run_experiment_writes_a_trace_file_that_replay_experiment_reproduces() {
         comm: Default::default(),
         coding: None,
         jobs: 0,
+        intra_jobs: 1,
         trace: Some(dir.display().to_string()),
         fastpath: false,
     };
