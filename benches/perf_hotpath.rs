@@ -16,7 +16,8 @@
 //! fan-out section times the fixed pair jobs=1 vs jobs=0 so its two
 //! entries stay comparable across runs.
 //!
-//! Run: `cargo bench --bench perf_hotpath [-- --smoke]`
+//! Run: `cargo bench --bench perf_hotpath [-- --smoke]
+//! [--baseline BENCH_hotpath.json] [--update-snapshot]`
 
 use adasgd::bench_harness::{
     fmt_duration, print_baseline_deltas, section, BenchArgs, BenchResult,
@@ -33,7 +34,7 @@ use adasgd::grad::{GradBackend, NativeBackend};
 use adasgd::linalg::{
     gemm, gemv, gemv_t_blocked, gemv_t_rowwalk, Matrix,
 };
-use adasgd::comm::CommChannel;
+use adasgd::comm::{CommChannel, IngressModel, LinkModel, TopK};
 use adasgd::master::{
     fastest_k_select, run_fastest_k, run_fastest_k_comm_traced, MasterConfig,
 };
@@ -41,7 +42,7 @@ use adasgd::model::LinRegProblem;
 use adasgd::policy::FixedK;
 use adasgd::rng::{Pcg64, Rng};
 use adasgd::sim::EventQueue;
-use adasgd::stats::OrderStatSampler;
+use adasgd::stats::{ClassOrderSampler, OrderStatSampler};
 use adasgd::straggler::ExponentialDelays;
 use adasgd::sweep::{RunSpec, SweepExecutor};
 
@@ -430,14 +431,90 @@ fn main() {
                 cfg,
                 RngStreams::sync(7),
             );
-            let mut gather = FastpathGather::new(
+            let mut gather = FastpathGather::iid(
                 &mut backend,
                 &mut policy,
-                &sampler,
+                sampler,
                 7,
             );
             let run = RoundEngine::new(core).run(&mut gather);
             std::hint::black_box(run.steps);
+        },
+    );
+    println!(
+        "{}   ({} per round incl. setup)",
+        r.summary(),
+        fmt_duration(r.median() / fp_rounds as f64)
+    );
+    report.push(r);
+    // The priced heterogeneous round at the same scale: a 10^5-worker
+    // slow class (10x slower delays AND a 10x slower uplink), a TopK
+    // uplink priced per byte, and a finite FIFO ingress chain. The
+    // downlink stays free — broadcast metering is the one O(n)-per-round
+    // piece of the priced stack, so pricing it would measure the meter,
+    // not the merge. Per round this is O(k · classes): two-way merge of
+    // the per-class order-statistic streams (+ per-class uplink
+    // constants), then the O(k) FIFO completion chain.
+    const HUGE_SLOW: usize = 100_000;
+    let r = bf.run(
+        &format!(
+            "fastpath {fp_rounds} rounds @ n=10^6 k=10^3, slow class + \
+             priced TopK uplink + FIFO ingress (+setup)"
+        ),
+        || {
+            let mut backend =
+                SyntheticRoundBackend { n: HUGE_N, d: d_huge };
+            let mut policy = FixedK::new(HUGE_K);
+            // uniform_with_slow slows the LAST ids' uplink; keep the
+            // same ids persistently delay-slow so the classes coincide.
+            let link = LinkModel::uniform_with_slow(
+                HUGE_N, 4096.0, 1e-4, HUGE_SLOW, 10.0,
+            );
+            let mut channel =
+                CommChannel::new(Box::new(TopK::new(0.5)), link, false)
+                    .with_ingress(IngressModel::new(2.0e7));
+            let msg = channel.message_bytes(d_huge);
+            let up_fast = channel.link_upload_delay(0, msg);
+            let up_slow = channel.link_upload_delay(HUGE_N - 1, msg);
+            let sampler = ClassOrderSampler::new(vec![
+                (
+                    OrderStatSampler::exponential(HUGE_N - HUGE_SLOW, 1.0),
+                    up_fast,
+                ),
+                (OrderStatSampler::exponential(HUGE_SLOW, 0.1), up_slow),
+            ]);
+            let members: Vec<Vec<u32>> = vec![
+                (0..(HUGE_N - HUGE_SLOW) as u32).collect(),
+                ((HUGE_N - HUGE_SLOW) as u32..HUGE_N as u32).collect(),
+            ];
+            let mut eval = |_w: &[f32]| 0.0;
+            let cfg = EngineConfig {
+                eta: 1e-3,
+                momentum: 0.0,
+                max_steps: fp_rounds,
+                max_time: 0.0,
+                seed: 7,
+                record_stride: 1_000_000, // no eval in the timed loop
+                intra_jobs: 1,
+            };
+            let core = EngineCore::new(
+                "hotpath-fastpath-het",
+                &mut channel,
+                &em,
+                &mut eval,
+                &w0_huge,
+                cfg,
+                RngStreams::sync(7),
+            );
+            let mut gather = FastpathGather::new(
+                &mut backend,
+                &mut policy,
+                sampler,
+                members,
+                7,
+            );
+            let run = RoundEngine::new(core).run(&mut gather);
+            std::hint::black_box((run.steps, run.bytes_sent));
         },
     );
     println!(
@@ -474,6 +551,20 @@ fn main() {
             json.display()
         ),
         Err(e) => println!("\n(json report not written: {e})"),
+    }
+    if args.update_snapshot {
+        // The committed perf-trajectory snapshot at the repo root —
+        // rewritten in place so `--baseline BENCH_hotpath.json` diffs
+        // future runs against this one.
+        let snap = std::path::Path::new("BENCH_hotpath.json");
+        match adasgd::bench_harness::write_json_report(snap, &report) {
+            Ok(()) => println!(
+                "snapshot {} rewritten with {} entries",
+                snap.display(),
+                report.len()
+            ),
+            Err(e) => println!("(snapshot not updated: {e})"),
+        }
     }
     if let Some(base) = &args.baseline {
         print_baseline_deltas(std::path::Path::new(base), &report);

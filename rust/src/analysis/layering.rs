@@ -273,6 +273,36 @@ mod tests {
     }
 
     #[test]
+    fn stats_may_import_straggler_but_not_the_reverse() {
+        // The class-merge sampler keys classes off delay-model
+        // attributes, so stats → straggler is a sanctioned edge; the
+        // delay models must never reach up into the statistics layer.
+        let fwd = "use crate::straggler::DelayModel;\n";
+        assert!(check("rust/src/stats/class_sampler.rs", "stats", fwd)
+            .is_empty());
+        let rev = "use crate::stats::ClassOrderSampler;\n";
+        assert_eq!(
+            check("rust/src/straggler/models.rs", "straggler", rev).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn engine_may_import_comm_but_not_the_reverse() {
+        // The priced fastpath composes uplink constants and the FIFO
+        // ingress chain, so engine → comm is a sanctioned edge; the
+        // comm substrate must stay engine-agnostic.
+        let fwd = "use crate::comm::IngressModel;\n";
+        assert!(check("rust/src/engine/fastpath.rs", "engine", fwd)
+            .is_empty());
+        let rev = "use crate::engine::EngineCore;\n";
+        assert_eq!(
+            check("rust/src/comm/link.rs", "comm", rev).len(),
+            1
+        );
+    }
+
+    #[test]
     fn hot_path_may_import_exec_but_leaves_may_not() {
         // Intra-round parallelism made engine → exec and grad → exec
         // sanctioned edges (Parallelism tokens, block helpers, the

@@ -54,7 +54,8 @@ const VALUED_FLAGS: &[&str] = &[
     "eta", "max-time", "max-iterations", "out", "artifacts", "steps",
     "workers", "tag", "points", "time-scale", "m", "d", "lambda",
     "record-stride", "comm", "comm-levels", "comm-frac", "bandwidth",
-    "link-latency", "downlink", "down-levels", "down-frac",
+    "link-latency", "slow-workers", "slow-factor", "downlink",
+    "down-levels", "down-frac",
     "down-bandwidth", "down-bandwidths", "down-latency", "ingress-bw",
     "ingress", "coding", "replication", "jobs", "intra-jobs", "trace",
     "limit", "format", "root",
@@ -172,10 +173,12 @@ TRAIN FLAGS (no --config):
   --trace DIR         record a binary event trace to
                       DIR/<label>.trace (also `[trace] dir` in TOML;
                       off by default — tracing never changes results)
-  --fastpath          O(k) order-statistics rounds for huge n (also
-                      `[run] fastpath` in TOML; off by default — same
-                      distribution as the exhaustive gather, not the
-                      same bits; needs i.i.d. delays + free comm)
+  --fastpath          O(k · classes) order-statistics rounds for huge n
+                      (also `[run] fastpath` in TOML; off by default —
+                      same distribution as the exhaustive gather, not
+                      the same bits; supports class-heterogeneous
+                      closed-form delays, priced uplinks, a uniform
+                      downlink, and finite FIFO ingress)
   --async             run the asynchronous baseline instead of fastest-k
   --coding SCHEME     gradient coding: frc | cyclic | bernoulli
                       (redundant shards, exact-gradient rounds; the k
@@ -190,6 +193,9 @@ COMM FLAGS (train; also in [comm] of a TOML config):
   --comm-frac F       topk/randk kept fraction        (default 0.1)
   --bandwidth B       uplink bytes per time unit, 0 = infinite
   --link-latency L    fixed per-message upload latency
+  --slow-workers W    last W worker ids get a slowed uplink (default 0;
+                      needs a finite positive --bandwidth)
+  --slow-factor F     uplink slowdown of the slow tail (default 1)
   --no-error-feedback disable the compression residual accumulator
   --downlink SCHEME   model broadcast: dense = full model (default);
                       qsgd | topk | randk = compressed model deltas

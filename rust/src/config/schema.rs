@@ -118,6 +118,17 @@ pub struct CommSpec {
     pub bandwidth: f64,
     /// Fixed per-message upload latency in virtual-time units.
     pub latency: f64,
+    /// Number of workers (the *last* `slow_workers` ids) whose uplink
+    /// bandwidth is divided by `slow_factor` — the bimodal-cluster link
+    /// idiom ([`LinkModel::uniform_with_slow`]). 0 = uniform uplink.
+    /// Requires a finite positive `bandwidth` when non-zero.
+    ///
+    /// [`LinkModel::uniform_with_slow`]:
+    ///     crate::comm::LinkModel::uniform_with_slow
+    pub slow_workers: usize,
+    /// Uplink slowdown factor of the slow tail (>= 1; only observable
+    /// with `slow_workers > 0`).
+    pub slow_factor: f64,
     /// Downlink (model broadcast) scheme. `Dense` broadcasts the full
     /// model; any compressed scheme broadcasts *model deltas* with a
     /// master-side error-feedback residual.
@@ -148,6 +159,8 @@ impl Default for CommSpec {
             error_feedback: true,
             bandwidth: 0.0,
             latency: 0.0,
+            slow_workers: 0,
+            slow_factor: 1.0,
             downlink: CompressorSpec::Dense,
             down_bandwidth: 0.0,
             down_bandwidths: Vec::new(),
@@ -203,7 +216,15 @@ impl CommSpec {
             Broadcast, CommChannel, DownlinkMode, IngressModel, LinkModel,
         };
         let compressor = build_compressor(&self.scheme);
-        let link = if self.bandwidth <= 0.0 && self.latency <= 0.0 {
+        let link = if self.slow_workers > 0 {
+            LinkModel::uniform_with_slow(
+                n,
+                self.bandwidth,
+                self.latency,
+                self.slow_workers,
+                self.slow_factor,
+            )
+        } else if self.bandwidth <= 0.0 && self.latency <= 0.0 {
             LinkModel::zero_cost(n)
         } else {
             LinkModel::uniform(n, self.bandwidth, self.latency)
@@ -252,6 +273,27 @@ impl CommSpec {
         validate_scheme(&self.downlink, "downlink")?;
         validate_rate(self.bandwidth, "bandwidth")?;
         validate_rate(self.latency, "latency")?;
+        if !self.slow_factor.is_finite() || self.slow_factor < 1.0 {
+            return Err(format!(
+                "comm.slow_factor={} must be finite and >= 1",
+                self.slow_factor
+            ));
+        }
+        if self.slow_workers > 0 {
+            if n > 0 && self.slow_workers > n {
+                return Err(format!(
+                    "comm.slow_workers={} exceeds n={n}",
+                    self.slow_workers
+                ));
+            }
+            if self.bandwidth <= 0.0 {
+                return Err(format!(
+                    "comm.slow_workers={} needs a finite positive \
+                     comm.bandwidth (0 = infinite, which cannot be slowed)",
+                    self.slow_workers
+                ));
+            }
+        }
         validate_rate(self.down_bandwidth, "down_bandwidth")?;
         validate_rate(self.down_latency, "down_latency")?;
         validate_rate(self.ingress_bw, "ingress_bw")?;
@@ -592,6 +634,18 @@ impl ExperimentConfig {
                 .unwrap_or(true);
             cfg.comm.bandwidth = f("bandwidth", 0.0);
             cfg.comm.latency = f("latency", 0.0);
+            if let Some(v) = sec.get("slow_workers") {
+                let sw = v
+                    .as_int()
+                    .ok_or("comm.slow_workers must be an integer")?;
+                if sw < 0 {
+                    return Err(format!(
+                        "comm.slow_workers={sw} must be >= 0"
+                    ));
+                }
+                cfg.comm.slow_workers = sw as usize;
+            }
+            cfg.comm.slow_factor = f("slow_factor", 1.0);
             cfg.comm.down_bandwidth = f("down_bandwidth", 0.0);
             cfg.comm.down_latency = f("down_latency", 0.0);
             cfg.comm.ingress_bw = f("ingress_bw", 0.0);
@@ -774,11 +828,14 @@ impl ExperimentConfig {
             coding.validate(self.n)?;
         }
         if self.fastpath {
-            // The fast path samples the k-th order statistic of the
-            // response-time distribution directly, which is only the
-            // round time when (a) rounds are synchronous, (b) delays are
-            // i.i.d. with a closed-form sampler, and (c) communication
-            // is free so "delay draw" and "response time" coincide.
+            // The fast path samples the merged first-k order statistics
+            // of the per-class response-time distributions directly,
+            // which is only the round time when (a) rounds are
+            // synchronous, (b) each delay/link class is i.i.d. with a
+            // closed-form sampler, and (c) every comm cost decomposes
+            // into per-class constants plus the shared O(k) FIFO ingress
+            // chain. Each remaining incompatibility gets its own error
+            // naming the knob to change.
             if self.policy == PolicySpec::Async {
                 return Err(
                     "run.fastpath samples synchronous fastest-k rounds; \
@@ -798,21 +855,62 @@ impl ExperimentConfig {
                 | DelaySpec::ShiftedExponential { .. }
                 | DelaySpec::Pareto { .. }
                 | DelaySpec::Weibull { .. } => {}
-                DelaySpec::Bimodal { .. } | DelaySpec::Trace { .. } => {
+                DelaySpec::Bimodal { p_transient, .. } => {
+                    // A fixed slow group is two homogeneous classes; a
+                    // *transient* straggler is a per-draw mixture no
+                    // class partition captures.
+                    if p_transient > 0.0 {
+                        return Err(format!(
+                            "run.fastpath supports bimodal delays only \
+                             with a fixed slow group; \
+                             delays.p_transient={p_transient} makes \
+                             straggling a per-draw mixture — set \
+                             p_transient = 0"
+                        ));
+                    }
+                }
+                DelaySpec::Trace { .. } => {
                     return Err(
-                        "run.fastpath needs an i.i.d. delay model with \
-                         an order-statistics sampler (exponential, \
-                         shifted_exponential, pareto, weibull); bimodal \
-                         and trace delays are per-worker"
+                        "run.fastpath needs a closed-form per-class \
+                         delay model (exponential, shifted_exponential, \
+                         pareto, weibull, bimodal with p_transient = 0); \
+                         trace delays are per-worker sequences"
                             .into(),
                     );
                 }
             }
-            if self.comm != CommSpec::default() {
+            // Comm gates, one per unsupported feature. Uniform(-with-
+            // slow-class) uplinks, any compression scheme without error
+            // feedback, priced uniform downlinks, and finite FIFO
+            // ingress are all supported.
+            if self.comm.error_feedback
+                && !matches!(self.comm.scheme, CompressorSpec::Dense)
+            {
+                return Err(format!(
+                    "run.fastpath cannot carry error feedback: residuals \
+                     are per-worker O(n) state, but only k of n workers \
+                     materialize per round; set comm.error_feedback = \
+                     false (comm.scheme = {:?} stays lossy-compressed)",
+                    self.comm.scheme
+                ));
+            }
+            if self.comm.ingress == IngressDiscipline::Ps
+                && self.comm.ingress_bw > 0.0
+            {
                 return Err(
-                    "run.fastpath assumes free communication (the \
-                     sampled arrival IS the response time); remove the \
-                     [comm] section"
+                    "run.fastpath prices ingress with the O(k) FIFO \
+                     completion chain; processor sharing has no \
+                     closed-form prefix completion — set comm.ingress = \
+                     \"fifo\""
+                        .into(),
+                );
+            }
+            if !self.comm.down_bandwidths.is_empty() {
+                return Err(
+                    "run.fastpath needs a uniform downlink (one download \
+                     constant shifts every merged arrival); per-worker \
+                     comm.down_bandwidths break the constant-shift \
+                     composition — use comm.down_bandwidth"
                         .into(),
                 );
             }
@@ -910,21 +1008,39 @@ d = 50
             Some(CodingSpec { scheme: CodingSchemeSpec::Cyclic, r: 2 });
         assert!(bad.validate().unwrap_err().contains("coding"));
 
-        let mut bad = cfg.clone();
-        bad.delays = DelaySpec::Bimodal {
+        // A fixed bimodal slow group is two homogeneous classes — now
+        // supported; a transient mixture is not, and the error says
+        // which knob to change.
+        let mut ok = cfg.clone();
+        ok.delays = DelaySpec::Bimodal {
             lambda: 1.0,
             n_slow: 1,
             slow_factor: 10.0,
             p_transient: 0.0,
         };
-        assert!(bad.validate().unwrap_err().contains("i.i.d."));
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.delays = DelaySpec::Bimodal {
+            lambda: 1.0,
+            n_slow: 1,
+            slow_factor: 10.0,
+            p_transient: 0.1,
+        };
+        assert!(bad.validate().unwrap_err().contains("p_transient"));
 
-        let mut bad = cfg.clone();
-        bad.comm.bandwidth = 100.0;
-        assert!(bad
-            .validate()
-            .unwrap_err()
-            .contains("free communication"));
+        // Priced uniform uplinks (with or without a slow link class),
+        // compression without error feedback, priced uniform downlinks,
+        // and finite FIFO ingress are all supported now.
+        let mut ok = cfg.clone();
+        ok.comm.bandwidth = 100.0;
+        ok.comm.latency = 0.1;
+        ok.comm.slow_workers = 3;
+        ok.comm.slow_factor = 8.0;
+        ok.comm.scheme = CompressorSpec::TopK { frac: 0.3 };
+        ok.comm.error_feedback = false;
+        ok.comm.down_bandwidth = 200.0;
+        ok.comm.ingress_bw = 400.0;
+        assert!(ok.validate().is_ok());
 
         let mut bad = cfg.clone();
         bad.trace = Some("results/traces".into());
@@ -936,6 +1052,137 @@ d = 50
         )
         .unwrap_err()
         .contains("boolean"));
+    }
+
+    /// Base fastpath config the per-feature gate tests mutate.
+    fn fastpath_cfg() -> ExperimentConfig {
+        let text = "n = 10\n[workload]\nkind = \"linreg\"\nm = 200\n\
+                    d = 10\n[run]\nfastpath = true\n";
+        ExperimentConfig::from_toml(text).unwrap()
+    }
+
+    #[test]
+    fn fastpath_gate_error_feedback_names_the_knob() {
+        let mut bad = fastpath_cfg();
+        bad.comm.scheme = CompressorSpec::TopK { frac: 0.5 };
+        bad.comm.error_feedback = true;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("error feedback"), "{err}");
+        assert!(err.contains("error_feedback = false"), "{err}");
+        // Dense + error_feedback=true is the (inert) default: no
+        // residuals are ever built, so the gate must not fire.
+        let mut ok = fastpath_cfg();
+        ok.comm.error_feedback = true;
+        assert!(ok.validate().is_ok());
+        // And dropping EF makes the lossy scheme legal.
+        let mut ok = fastpath_cfg();
+        ok.comm.scheme = CompressorSpec::TopK { frac: 0.5 };
+        ok.comm.error_feedback = false;
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn fastpath_gate_ps_ingress_names_the_knob() {
+        let mut bad = fastpath_cfg();
+        bad.comm.ingress_bw = 100.0;
+        bad.comm.ingress = IngressDiscipline::Ps;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("fifo"), "{err}");
+        // An unlimited PS ingress is the independent-upload model, so
+        // it stays legal; finite FIFO is the supported contention case.
+        let mut ok = fastpath_cfg();
+        ok.comm.ingress = IngressDiscipline::Ps;
+        assert!(ok.validate().is_ok());
+        let mut ok = fastpath_cfg();
+        ok.comm.ingress_bw = 100.0;
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn fastpath_gate_heterogeneous_downlinks_names_the_knob() {
+        let mut bad = fastpath_cfg();
+        bad.comm.down_bandwidths = vec![100.0; 10];
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("down_bandwidths"), "{err}");
+        assert!(err.contains("down_bandwidth"), "{err}");
+        // The uniform downlink (even compressed) is supported.
+        let mut ok = fastpath_cfg();
+        ok.comm.down_bandwidth = 100.0;
+        ok.comm.downlink = CompressorSpec::Qsgd { levels: 8 };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn fastpath_gate_transient_bimodal_names_the_knob() {
+        let mut bad = fastpath_cfg();
+        bad.delays = DelaySpec::Bimodal {
+            lambda: 1.0,
+            n_slow: 2,
+            slow_factor: 5.0,
+            p_transient: 0.05,
+        };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("p_transient = 0"), "{err}");
+    }
+
+    #[test]
+    fn fastpath_gate_trace_delays_names_the_model() {
+        let mut bad = fastpath_cfg();
+        bad.delays = DelaySpec::Trace { path: "delays.csv".into() };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("trace delays"), "{err}");
+    }
+
+    #[test]
+    fn slow_link_class_parses_builds_and_validates() {
+        let text = r#"
+n = 10
+
+[workload]
+kind = "linreg"
+m = 200
+d = 10
+
+[comm]
+bandwidth = 100.0
+slow_workers = 3
+slow_factor = 10.0
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.comm.slow_workers, 3);
+        assert_eq!(cfg.comm.slow_factor, 10.0);
+        let channel = cfg.comm.build(cfg.n);
+        let msg = channel.message_bytes(10);
+        // The last slow_workers ids pay slow_factor x the transfer time.
+        let fast = channel.link_upload_delay(0, msg);
+        let slow = channel.link_upload_delay(9, msg);
+        assert!((slow - 10.0 * fast).abs() < 1e-12, "{fast} vs {slow}");
+        assert_eq!(
+            channel.link_upload_delay(6, msg).to_bits(),
+            fast.to_bits()
+        );
+
+        // slow_workers needs a finite positive bandwidth...
+        let mut bad = cfg.clone();
+        bad.comm.bandwidth = 0.0;
+        assert!(bad.validate().unwrap_err().contains("slow_workers"));
+        // ...must not exceed n...
+        let mut bad = cfg.clone();
+        bad.comm.slow_workers = 11;
+        assert!(bad.validate().unwrap_err().contains("exceeds"));
+        // ...and the factor must be a finite >= 1.
+        let mut bad = cfg.clone();
+        bad.comm.slow_factor = 0.5;
+        assert!(bad.validate().unwrap_err().contains("slow_factor"));
+        let mut bad = cfg.clone();
+        bad.comm.slow_factor = f64::NAN;
+        assert!(bad.validate().unwrap_err().contains("slow_factor"));
+        // Negative counts are a parse error, not a wrap-around.
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\nslow_workers = -1\n"
+        )
+        .unwrap_err()
+        .contains("slow_workers"));
     }
 
     #[test]

@@ -204,33 +204,85 @@ fn run_experiment_core(
 
     // Opt-in O(k) fast path: the same synchronous fastest-k discipline
     // with arrivals sampled directly from the order-statistics law.
-    // validate() pinned this to sync policies over i.i.d. closed-form
-    // delay models with free communication and no tracing, so the
-    // sampled arrival IS the round's completion time. The dispatch
-    // lives here (not in `master`) because only the coordinator may
-    // couple the config surface to `stats` + `engine` at once.
+    // validate() pinned this to sync policies over closed-form delay
+    // models whose per-worker response time decomposes into a class
+    // delay law plus a per-worker-constant uplink (plus the shared
+    // FIFO ingress chain and a uniform download constant). Workers are
+    // partitioned into homogeneous (delay class × uplink constant)
+    // classes and the merged first-k arrivals are drawn in
+    // O(k · classes) per round. The dispatch lives here (not in
+    // `master`) because only the coordinator may couple the config
+    // surface to `stats` + `engine` at once.
     if cfg.fastpath {
         use crate::config::DelaySpec;
         use crate::engine::{
             EngineConfig, EngineCore, FastpathGather, RngStreams,
             RoundEngine,
         };
-        use crate::stats::OrderStatSampler;
-        let sampler = match cfg.delays {
-            DelaySpec::Exponential { lambda } => {
-                OrderStatSampler::exponential(cfg.n, lambda)
+        use crate::stats::{ClassOrderSampler, OrderStatSampler};
+        // The delay law has at most two classes: the bimodal family's
+        // persistently slow group (validate() pinned p_transient = 0,
+        // so slow draws are exactly Exp(λ / slow_factor)); every other
+        // closed-form family is i.i.d.
+        let delay_class = |w: usize| -> u32 {
+            match cfg.delays {
+                DelaySpec::Bimodal { n_slow, .. } if w < n_slow => 1,
+                _ => 0,
             }
-            DelaySpec::ShiftedExponential { shift, lambda } => {
-                OrderStatSampler::shifted_exponential(cfg.n, shift, lambda)
-            }
-            DelaySpec::Pareto { xm, alpha } => {
-                OrderStatSampler::pareto(cfg.n, xm, alpha)
-            }
-            DelaySpec::Weibull { lambda, k } => {
-                OrderStatSampler::weibull(cfg.n, lambda, k)
-            }
-            _ => unreachable!("validate() rejects non-i.i.d. fastpath"),
         };
+        let sampler_for = |class: u32, len: usize| -> OrderStatSampler {
+            match cfg.delays {
+                DelaySpec::Exponential { lambda } => {
+                    OrderStatSampler::exponential(len, lambda)
+                }
+                DelaySpec::ShiftedExponential { shift, lambda } => {
+                    OrderStatSampler::shifted_exponential(len, shift, lambda)
+                }
+                DelaySpec::Pareto { xm, alpha } => {
+                    OrderStatSampler::pareto(len, xm, alpha)
+                }
+                DelaySpec::Weibull { lambda, k } => {
+                    OrderStatSampler::weibull(len, lambda, k)
+                }
+                DelaySpec::Bimodal { lambda, slow_factor, .. } => {
+                    let rate = if class == 1 {
+                        lambda / slow_factor
+                    } else {
+                        lambda
+                    };
+                    OrderStatSampler::exponential(len, rate)
+                }
+                DelaySpec::Trace { .. } => {
+                    unreachable!("validate() rejects trace fastpath")
+                }
+            }
+        };
+        // Partition workers by (delay class, uplink constant), keeping
+        // classes in first-appearance worker order so the grouping is
+        // deterministic. The uplink constant keys on exact bits: any
+        // numeric difference is a different class.
+        let msg = channel.message_bytes(d);
+        let mut keys: Vec<(u32, u64)> = Vec::new();
+        let mut members: Vec<Vec<u32>> = Vec::new();
+        for w in 0..cfg.n {
+            let key =
+                (delay_class(w), channel.link_upload_delay(w, msg).to_bits());
+            match keys.iter().position(|k| *k == key) {
+                Some(c) => members[c].push(w as u32),
+                None => {
+                    keys.push(key);
+                    members.push(vec![w as u32]);
+                }
+            }
+        }
+        let classes: Vec<(OrderStatSampler, f64)> = keys
+            .iter()
+            .zip(&members)
+            .map(|(&(dc, up), m)| {
+                (sampler_for(dc, m.len()), f64::from_bits(up))
+            })
+            .collect();
+        let sampler = ClassOrderSampler::new(classes);
         let mut policy: Box<dyn KPolicy> = match &cfg.policy {
             PolicySpec::Fixed { k } => Box::new(FixedK::new(*k)),
             PolicySpec::Adaptive(p) => {
@@ -260,7 +312,8 @@ fn run_experiment_core(
         let mut gather = FastpathGather::new(
             &mut backend,
             policy.as_mut(),
-            &sampler,
+            sampler,
+            members,
             cfg.seed,
         );
         let run = RoundEngine::new(core).run(&mut gather);

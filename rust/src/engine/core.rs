@@ -326,6 +326,20 @@ impl<'a> EngineCore<'a> {
         self.msg_bytes
     }
 
+    /// `worker`'s constant uplink delay for this round's message size
+    /// (latency + bytes/bandwidth — data-independent, so the fastpath
+    /// can fold it into per-class arrival shifts).
+    pub fn upload_const(&self, worker: usize) -> f64 {
+        self.channel.link_upload_delay(worker, self.msg_bytes)
+    }
+
+    /// `worker`'s constant download delay for a `bytes`-sized model
+    /// message. Uniform downlinks make this one number per round — the
+    /// fastpath shifts every merged arrival by it.
+    pub fn download_const(&self, worker: usize, bytes: u64) -> f64 {
+        self.channel.download_delay(worker, bytes)
+    }
+
     // ------------------------------------------------------------------
     // Downlink: model broadcast pricing (the one place it happens).
     // ------------------------------------------------------------------

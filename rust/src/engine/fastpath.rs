@@ -3,75 +3,102 @@
 //! [`FastestKGather`](super::FastestKGather) prices all n worker
 //! responses every round and quickselects the k fastest — O(n) rng draws
 //! and O(n) comparisons per step, which caps experiments at n in the
-//! thousands. For i.i.d. delay models the round outcome depends on the
-//! delays only through (a) the k-th arrival time `X_(k)` and (b) *which*
-//! k workers respond — and both can be sampled directly:
+//! thousands. For class-heterogeneous delay models (i.i.d. *within* each
+//! class) the round outcome depends on the delays only through (a) the
+//! ascending first-k response times and (b) *which* k workers respond —
+//! and both can be sampled directly:
 //!
-//! * the ascending arrival prefix `X_(1..k)` comes from
-//!   [`OrderStatSampler`] in O(k) (Rényi spacings for the exponential
-//!   family, conditional-uniform inverse CDF otherwise);
-//! * by exchangeability the identities of the k fastest are a uniform
-//!   k-subset of `0..n`, drawn with k partial Fisher–Yates swaps over a
-//!   persistent permutation (the permutation never needs resetting: a
-//!   uniform subset of a permuted range is still uniform).
+//! * the merged ascending arrival prefix comes from
+//!   [`ClassOrderSampler`] in O(k · classes): each class's own order
+//!   statistics are drawn lazily (Rényi spacings for the exponential
+//!   family, conditional-uniform inverse CDF otherwise), shifted by the
+//!   class's **constant uplink delay** (latency + bytes/bandwidth of the
+//!   round's fixed-size message — constant within a uniform-per-class
+//!   link, so it shifts the class's order statistics exactly), and
+//!   k-way-merged;
+//! * within the winning class the responder identities are exchangeable,
+//!   so each merged arrival draws its worker with one partial
+//!   Fisher–Yates swap over the class's persistent member permutation (a
+//!   uniform subset of a permuted range is still uniform);
+//! * a uniform broadcast download constant shifts all arrivals equally,
+//!   and the shared O(k) [`IngressModel::round_completion`] FIFO chain
+//!   over the merged prefix prices master-ingress contention identically
+//!   to the exhaustive path.
 //!
-//! The result is an O(k + k·d) round — independent of n except for the
-//! one-time O(n) identity array — making the ROADMAP's n = 10⁶ sync
-//! round a few microseconds of sampling instead of 10⁶ draws.
+//! The result is an O(k · classes + k·d) round — independent of n except
+//! for the one-time O(n) identity arrays — making the ROADMAP's n = 10⁶
+//! sync round a few microseconds of sampling instead of 10⁶ draws, now
+//! including priced uplinks, slow worker classes, and finite FIFO
+//! ingress.
 //!
 //! **Contract: distributional, not bitwise.** The fast path consumes a
-//! different number of rng draws (2k, on its own dedicated stream) than
+//! different number of rng draws (≈2k, on its own dedicated stream) than
 //! the exhaustive gather (n per round on the sync delay stream), so
 //! trajectories differ draw-by-draw while every round-time and
 //! worker-subset *distribution* is exactly the law of the exhaustive
 //! path. That is why it is opt-in (`[run] fastpath` / `--fastpath`,
 //! off by default — all existing trajectories stay bit-identical) and
-//! why `coordinator` only enables it for free-communication,
-//! untraced, i.i.d.-delay configs where "delay model draw" and "full
-//! response time" coincide (see `ExperimentConfig::validate`). The
-//! statistical contract is pinned in
-//! `rust/tests/test_fastpath_stats.rs`: moment/quantile agreement with
-//! the exhaustive path on small n, and exact agreement of the expected
-//! round time with `theory`'s closed-form `E[X_(k)]`.
+//! why `coordinator` only enables it for configs whose response times
+//! decompose into class order statistics plus per-class constants (see
+//! `ExperimentConfig::validate` for the per-feature gates: PS ingress,
+//! per-worker heterogeneous downlinks, error feedback, transient
+//! bimodal straggling, traces remain exhaustive-only). The statistical
+//! contract is pinned in `rust/tests/test_fastpath_stats.rs`:
+//! moment/quantile agreement with the exhaustive priced-comm path on
+//! small n, and exact agreement of the expected round time with
+//! `theory`'s closed-form `E[X_(k)]`.
+//!
+//! [`IngressModel::round_completion`]: crate::comm::IngressModel::round_completion
 
 use super::core::{EngineCore, EngineRun};
 use super::gather::GatherPolicy;
 use crate::grad::GradBackend;
 use crate::policy::KPolicy;
 use crate::rng::{Pcg64, Rng};
-use crate::stats::OrderStatSampler;
+use crate::stats::{ClassOrderSampler, OrderStatSampler};
 
 /// Dedicated rng stream tag for the fastpath gather (arrivals +
 /// identity swaps), disjoint from every stream in
 /// [`RngStreams`](super::RngStreams).
 const FASTPATH_STREAM: u64 = 0xFA5B;
 
-/// The synchronous fastest-k discipline with O(k) rounds via direct
-/// order-statistics sampling.
+/// The synchronous fastest-k discipline with O(k · classes) rounds via
+/// direct order-statistics sampling over homogeneous worker classes.
 pub struct FastpathGather<'a> {
     backend: &'a mut dyn GradBackend,
     policy: &'a mut dyn KPolicy,
-    sampler: &'a OrderStatSampler,
+    /// Merged per-class arrival sampler (owns per-class stream scratch).
+    sampler: ClassOrderSampler,
+    /// Per-class persistent worker-identity permutations; each round the
+    /// leading slots of the winning classes are re-randomized with
+    /// partial Fisher–Yates swaps. The class → worker-id mapping lives
+    /// here, so the sampler stays pure statistics.
+    members: Vec<Vec<u32>>,
+    /// Per-class count of identities drawn this round.
+    taken: Vec<usize>,
     k: usize,
     /// Fastpath draws live on their own stream so the opt-in cannot
     /// perturb any default-path sequence.
     rng: Pcg64,
-    /// Ascending first-k arrival scratch, reused across rounds.
+    /// Merged ascending first-k arrival scratch, reused across rounds.
     arrivals: Vec<f64>,
-    /// Persistent worker-identity permutation; the k leading slots are
-    /// re-randomized each round with partial Fisher–Yates swaps.
-    perm: Vec<u32>,
+    /// Per-arrival winning class, aligned with `arrivals`.
+    class_ids: Vec<u32>,
     partial: Vec<f32>,
     k_changes: Vec<(u64, f64, usize)>,
 }
 
 impl<'a> FastpathGather<'a> {
-    /// Gather the `policy`-chosen k fastest of `backend`'s shards,
-    /// sampling arrivals from `sampler` on stream `seed`.
+    /// Gather the `policy`-chosen k fastest of `backend`'s shards:
+    /// arrivals merged from `sampler`'s classes, identities drawn from
+    /// `members` (one worker-id list per class, same order and sizes as
+    /// the sampler's classes, disjoint and covering `0..n`), rng on
+    /// stream `seed`.
     pub fn new(
         backend: &'a mut dyn GradBackend,
         policy: &'a mut dyn KPolicy,
-        sampler: &'a OrderStatSampler,
+        sampler: ClassOrderSampler,
+        members: Vec<Vec<u32>>,
         seed: u64,
     ) -> Self {
         let n = backend.n_shards();
@@ -83,17 +110,55 @@ impl<'a> FastpathGather<'a> {
             sampler.n()
         );
         assert!(n <= u32::MAX as usize, "fastpath identity array is u32");
+        assert_eq!(
+            members.len(),
+            sampler.classes(),
+            "need one member list per class"
+        );
+        for (c, m) in members.iter().enumerate() {
+            assert_eq!(
+                m.len(),
+                sampler.class_size(c),
+                "class {c} has {} members but the sampler says {}",
+                m.len(),
+                sampler.class_size(c)
+            );
+        }
+        let taken = vec![0usize; members.len()];
         Self {
             backend,
             policy,
             sampler,
+            members,
+            taken,
             k: 1,
             rng: Pcg64::seed_stream(seed, FASTPATH_STREAM),
             arrivals: Vec::new(),
-            perm: (0..n as u32).collect(),
+            class_ids: Vec::new(),
             partial: vec![0.0f32; d],
             k_changes: Vec::new(),
         }
+    }
+
+    /// The homogeneous case: one free-link class covering all shards —
+    /// PR 8's i.i.d. fastpath, which this constructor reproduces
+    /// draw-for-draw (k arrival draws then k swap draws per round).
+    pub fn iid(
+        backend: &'a mut dyn GradBackend,
+        policy: &'a mut dyn KPolicy,
+        sampler: OrderStatSampler,
+        seed: u64,
+    ) -> Self {
+        let n = sampler.n();
+        assert!(n <= u32::MAX as usize, "fastpath identity array is u32");
+        let members = vec![(0..n as u32).collect()];
+        Self::new(
+            backend,
+            policy,
+            ClassOrderSampler::single(sampler),
+            members,
+            seed,
+        )
     }
 }
 
@@ -116,28 +181,56 @@ impl GatherPolicy for FastpathGather<'_> {
             return false;
         }
         self.backend.on_iteration(j);
-        // (1) broadcast w_j. The fastpath contract (enforced by config
-        // validation) pins the channel to the free default, so this only
-        // meters bytes; the arrival times below ARE the response times.
-        let _down_bytes = core.broadcast_round();
-        // (2) O(k): the k-th order statistic of n i.i.d. delays, sampled
-        // directly instead of drawing and selecting over all n.
-        self.sampler.sample_first_k(self.k, &mut self.arrivals, &mut self.rng);
-        let round_time = self.arrivals[self.k - 1];
-        core.t += round_time;
-        // (2b) responder identities: a uniform k-subset via k partial
-        // Fisher–Yates swaps on the persistent permutation.
-        for i in 0..self.k {
-            let swap =
-                i + self.rng.next_below((n - i) as u64) as usize;
-            self.perm.swap(i, swap);
+        // (1) broadcast w_j: meters downlink bytes. Config validation
+        // pins the downlink to a uniform link, so the per-worker download
+        // constant is one number that shifts every arrival equally
+        // (order-preserving — the merge stays ascending).
+        let down_bytes = core.broadcast_round();
+        let down = core.download_const(0, down_bytes);
+        // (2) O(k · classes): the merged ascending first-k response
+        // times, each class's order statistics pre-shifted by its
+        // constant uplink delay inside the sampler.
+        self.sampler.sample_first_k(
+            self.k,
+            &mut self.arrivals,
+            &mut self.class_ids,
+            &mut self.rng,
+        );
+        if down != 0.0 {
+            for a in self.arrivals.iter_mut() {
+                *a += down;
+            }
         }
-        // (3) aggregate the k sampled responders, shard by shard (the
-        // huge-n regime this gather exists for is exactly where an
-        // O(n·d) batched buffer is unaffordable).
+        // (2b) master-ingress contention over the merged prefix — the
+        // exact O(k) FIFO chain the exhaustive path runs (PS ingress is
+        // gated off by config validation).
+        let round_time = if core.ingress_unlimited() {
+            self.arrivals[self.k - 1]
+        } else {
+            core.round_completion(&mut self.arrivals)
+        };
+        core.t += round_time;
+        // (3) responder identities + aggregation, in merged arrival
+        // order so per-worker comm accounting matches the exhaustive
+        // acceptance order. Each arrival draws a uniform not-yet-taken
+        // member of its winning class via one partial Fisher–Yates swap
+        // on the class's persistent permutation (never reset: a uniform
+        // subset of a permuted range is still uniform). Shard-by-shard —
+        // the huge-n regime this gather exists for is exactly where an
+        // O(n·d) batched buffer is unaffordable.
+        for t in self.taken.iter_mut() {
+            *t = 0;
+        }
         core.zero_g();
         for i in 0..self.k {
-            let worker = self.perm[i] as usize;
+            let c = self.class_ids[i] as usize;
+            let m = &mut self.members[c];
+            let t = self.taken[c];
+            let swap =
+                t + self.rng.next_below((m.len() - t) as u64) as usize;
+            m.swap(t, swap);
+            let worker = m[t] as usize;
+            self.taken[c] = t + 1;
             self.backend.partial_grad(
                 worker,
                 &core.w_view,
@@ -169,7 +262,10 @@ impl GatherPolicy for FastpathGather<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::CommChannel;
+    use crate::comm::{
+        Broadcast, CommChannel, Dense, DownlinkMode, IngressModel,
+        LinkModel, TopK,
+    };
     use crate::data::{Shards, SyntheticConfig, SyntheticDataset};
     use crate::engine::{EngineConfig, RngStreams, RoundEngine};
     use crate::grad::NativeBackend;
@@ -208,7 +304,7 @@ mod tests {
             RngStreams::sync(1),
         );
         let mut gather =
-            FastpathGather::new(&mut backend, &mut policy, &sampler, 1);
+            FastpathGather::iid(&mut backend, &mut policy, sampler, 1);
         let run = RoundEngine::new(core).run(&mut gather);
         assert_eq!(run.steps, 400);
         assert!(run.total_time > 0.0);
@@ -256,13 +352,91 @@ mod tests {
             RngStreams::sync(9),
         );
         let mut gather =
-            FastpathGather::new(&mut backend, &mut policy, &sampler, 9);
+            FastpathGather::iid(&mut backend, &mut policy, sampler, 9);
         let run = RoundEngine::new(core).run(&mut gather);
         assert_eq!(run.steps, 500);
         // Over 500 rounds of k = 3 every worker must respond sometimes;
-        // the permutation keeps all 8 identities alive.
-        let mut seen: Vec<u32> = gather.perm.clone();
+        // the member permutations keep all 8 identities alive.
+        let mut seen: Vec<u32> =
+            gather.members.iter().flatten().copied().collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn heterogeneous_priced_round_trains_and_prices_comm() {
+        // Two classes (6 fast + 2 slow-uplink workers), TopK uplink
+        // without error feedback, priced uniform downlink, finite FIFO
+        // ingress: the full generalized-fastpath surface in one round
+        // loop. The clock must strictly exceed the free-comm arrival
+        // time every round, and the byte meters must price exactly k
+        // uploads + n downloads per round.
+        let ds = SyntheticDataset::generate(
+            SyntheticConfig { m: 160, d: 6, ..Default::default() },
+            5,
+        );
+        let problem = LinRegProblem::new(&ds);
+        let mut backend = NativeBackend::new(Shards::partition(&ds, 8));
+        let mut policy = FixedK::new(4);
+        let link = LinkModel::uniform_with_slow(8, 64.0, 0.05, 2, 8.0);
+        let mut channel =
+            CommChannel::new(Box::new(TopK::new(0.5)), link, false)
+                .with_broadcast(Broadcast::new(
+                    Box::new(Dense::new()),
+                    LinkModel::uniform(8, 256.0, 0.0),
+                    DownlinkMode::Full,
+                ))
+                .with_ingress(IngressModel::new(512.0));
+        let msg = channel.message_bytes(6);
+        let up_fast = channel.link_upload_delay(0, msg);
+        let up_slow = channel.link_upload_delay(7, msg);
+        assert!(up_slow > up_fast);
+        let sampler = ClassOrderSampler::new(vec![
+            (OrderStatSampler::exponential(6, 1.0), up_fast),
+            (OrderStatSampler::exponential(2, 1.0), up_slow),
+        ]);
+        let members = vec![vec![0, 1, 2, 3, 4, 5], vec![6, 7]];
+        let mut eval = |w: &[f32]| problem.error(w);
+        let steps = 300u64;
+        let cfg = EngineConfig {
+            eta: 0.002,
+            momentum: 0.0,
+            max_steps: steps,
+            max_time: 0.0,
+            seed: 13,
+            record_stride: 50,
+            intra_jobs: 1,
+        };
+        let delays = sampler_delays();
+        let core = EngineCore::new(
+            "fastpath-hetero",
+            &mut channel,
+            &delays,
+            &mut eval,
+            &vec![0.0f32; 6],
+            cfg,
+            RngStreams::sync(13),
+        );
+        let mut gather = FastpathGather::new(
+            &mut backend,
+            &mut policy,
+            sampler,
+            members,
+            13,
+        );
+        let run = RoundEngine::new(core).run(&mut gather);
+        assert_eq!(run.steps, steps);
+        // Every arrival carries at least the fast uplink constant plus
+        // the downlink constant, and the finite ingress adds k service
+        // times on top — per-round time is bounded below accordingly.
+        let down = channel.download_delay(0, msg);
+        assert!(run.total_time > steps as f64 * (up_fast + down));
+        // Uplink meter: exactly k messages per round.
+        assert_eq!(channel.stats.messages, steps * 4);
+        assert_eq!(channel.stats.bytes_sent, steps * 4 * msg);
+        // Training still converges under the priced stack.
+        let first = run.recorder.samples()[0].error;
+        let last = run.recorder.last().unwrap().error;
+        assert!(last < first * 0.1, "{first} -> {last}");
     }
 }

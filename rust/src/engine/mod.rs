@@ -12,7 +12,9 @@
 //!   apply, and metric recording — each in exactly one place.
 //! * [`GatherPolicy`] is the pluggable discipline: [`FastestKGather`]
 //!   (the paper's sync round), [`FastpathGather`] (the same round with
-//!   O(k) direct order-statistics sampling for i.i.d. delays — opt-in,
+//!   O(k · classes) direct order-statistics sampling — per-class
+//!   ascending streams shifted by priced uplink constants, k-way
+//!   merged, then priced through the O(k) FIFO ingress chain — opt-in,
 //!   distributionally but not bitwise equivalent; see
 //!   `engine/fastpath.rs`), [`StalenessGather`] (fully async,
 //!   staleness-aware, with exact processor-sharing ingress via

@@ -119,17 +119,27 @@
 //! carry the scale story:
 //!
 //! * **Order-statistics fastpath** ([`engine::FastpathGather`] over
-//!   [`stats::OrderStatSampler`], opt-in via `[run] fastpath` /
+//!   [`stats::ClassOrderSampler`], opt-in via `[run] fastpath` /
 //!   `--fastpath`). A synchronous fastest-k round normally draws all n
-//!   delays and selects the k fastest; for i.i.d. closed-form delay
-//!   models the round time and the k finisher identities can be
-//!   sampled *directly* from the order-statistics law (Rényi spacings
-//!   for exponential, conditional inverse-CDF recursion otherwise) in
-//!   O(k), making n = 10⁶ rounds practical. The contract is
-//!   **distributional, not bitwise**: a fastpath run is a different —
-//!   equally valid — draw of the same stochastic process
-//!   (`rust/tests/test_fastpath_stats.rs`), so it is OFF by default
-//!   and every default trajectory stays bit-identical.
+//!   response times and selects the k fastest; for closed-form delay
+//!   models the first-k arrivals can be sampled *directly* from the
+//!   order-statistics law (Rényi spacings for exponential, conditional
+//!   inverse-CDF recursion otherwise), making n = 10⁶ rounds
+//!   practical. The class-merge argument extends this to
+//!   class-heterogeneous priced fleets: partition workers into
+//!   homogeneous (delay law × uplink constant) classes; each class's
+//!   ascending arrival stream shifted by its per-worker-constant
+//!   upload delay keeps ascending order, so each class head is its
+//!   minimum remaining response time and the argmin over heads is the
+//!   next global order statistic — a k-way merge in O(k · classes),
+//!   independent of n. The merged prefix then flows through the same
+//!   O(k) FIFO ingress chain and uniform download constant the
+//!   exhaustive engine prices, so byte meters and `CommStats` agree
+//!   exactly. The contract is **distributional, not bitwise**: a
+//!   fastpath run is a different — equally valid — draw of the same
+//!   stochastic process (`rust/tests/test_fastpath_stats.rs`), so it
+//!   is OFF by default and every default trajectory stays
+//!   bit-identical.
 //! * **Allocation-free rounds** — per-round buffers (engine gather
 //!   state, the fastpath's arrival/partial buffers, the threaded
 //!   cluster's shared-model `Arc`) are allocated once and reused, so
@@ -278,7 +288,7 @@ pub mod prelude {
         TimeSchedule, VarianceTest, VarianceTestParams,
     };
     pub use crate::rng::{Pcg64, Rng};
-    pub use crate::stats::{OrderStatSampler, OrderStats};
+    pub use crate::stats::{ClassOrderSampler, OrderStatSampler, OrderStats};
     pub use crate::coding::{
         run_coded_comm, run_coded_comm_traced, run_coded_gd, BernoulliScheme,
         CodedConfig, CodingScheme, CoverPart, CyclicRepetition, FrcScheme,

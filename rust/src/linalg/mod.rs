@@ -6,9 +6,12 @@
 //! optimum `w* = (XᵀX)⁻¹ Xᵀy` so experiments can report `F(w) − F*`).
 //!
 //! Perf notes (see EXPERIMENTS.md §Perf): `gemv`/`gemv_t` dominate the
-//! native hot path; they are written as cache-friendly row walks with 4-way
-//! unrolled inner loops that LLVM auto-vectorizes. The blocked `gemm` is
-//! only used in setup (normal equations), not per-iteration.
+//! native hot path; they are written as cache-friendly row walks with
+//! 8-lane `chunks_exact` inner loops that LLVM auto-vectorizes, and both
+//! switch to column-panel blocking past [`GEMV_PANEL`]/[`GEMV_T_PANEL`]
+//! columns — bitwise identical to the row walks by construction. The
+//! blocked `gemm` is only used in setup (normal equations), not
+//! per-iteration.
 
 mod matrix;
 mod ops;
@@ -16,8 +19,9 @@ mod solve;
 
 pub use matrix::Matrix;
 pub use ops::{
-    axpy, dot, dot_f32, gemm, gemv, gemv_t, gemv_t_blocked, gemv_t_cols,
-    gemv_t_rowwalk, nrm2, scal, GEMV_T_PANEL,
+    axpy, dot, dot_f32, gemm, gemv, gemv_blocked, gemv_rowwalk, gemv_t,
+    gemv_t_blocked, gemv_t_cols, gemv_t_rowwalk, nrm2, scal, GEMV_PANEL,
+    GEMV_T_PANEL,
 };
 pub use solve::{
     cholesky_solve, cholesky_solve_dense_f64, cholesky_solve_f64,

@@ -104,18 +104,52 @@ pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
     s
 }
 
-/// `y ← alpha * A x + beta * y` (A row-major, row walk).
+/// Column width of one [`gemv_blocked`] panel (a multiple of 8, so
+/// panel edges never split an 8-lane chunk): 1024 f32 = 4 KiB of `x`
+/// resident in L1 while a row tile streams past it.
+pub const GEMV_PANEL: usize = 1024;
+
+/// Rows per [`gemv_blocked`] tile: 64 × 8 lanes = 2 KiB of stack
+/// accumulator, so each `x` panel is reloaded once per 64 rows instead
+/// of once per row — and the round stays allocation-free.
+const GEMV_ROW_TILE: usize = 64;
+
+/// `y ← alpha * A x + beta * y` (A row-major).
+///
+/// Dispatches on shape: up to [`GEMV_PANEL`] columns, `x` already fits
+/// in L1 and the plain [`gemv_rowwalk`] wins; wider inputs go through
+/// [`gemv_blocked`] so `x` stops streaming through cache once per row.
+/// Both paths accumulate every row with [`dot_f32`]'s exact 8-lane
+/// association, so the dispatch is bitwise invisible (test-asserted
+/// below).
 ///
 /// `beta == 0.0` **overwrites** `y` (BLAS semantics) rather than
 /// scaling it: `0.0 * NaN = NaN`, so the scale form would leak stale
 /// NaN/∞ from an uninitialized or poisoned `y` into results — exactly
 /// what breaks reusing dirty scratch buffers.
+pub fn gemv(alpha: f32, a: &Matrix, x: &[f32], beta: f32, y: &mut [f32]) {
+    if a.cols() > GEMV_PANEL {
+        gemv_blocked(alpha, a, x, beta, y);
+    } else {
+        gemv_rowwalk(alpha, a, x, beta, y);
+    }
+}
+
+/// The historical [`gemv`] loop: one [`dot_f32`] per row. Public so
+/// `perf_hotpath` can race it against [`gemv_blocked`].
 ///
 /// §Perf note: a 4-row-blocked variant (sharing `x` loads across four
 /// accumulator lanes) was tried and measured ~35% *slower* at the fig-2
-/// shard shape — the 4×8 accumulator tile spills; reverted to the simple
-/// row walk over [`dot_f32`].
-pub fn gemv(alpha: f32, a: &Matrix, x: &[f32], beta: f32, y: &mut [f32]) {
+/// shard shape — the 4×8 accumulator tile spills; [`gemv_blocked`]
+/// therefore keeps a single row's 8 lanes in the inner loop and shares
+/// `x` across rows at the panel level instead.
+pub fn gemv_rowwalk(
+    alpha: f32,
+    a: &Matrix,
+    x: &[f32],
+    beta: f32,
+    y: &mut [f32],
+) {
     assert_eq!(a.cols(), x.len(), "gemv: A.cols != x.len");
     assert_eq!(a.rows(), y.len(), "gemv: A.rows != y.len");
     if beta == 0.0 {
@@ -126,6 +160,62 @@ pub fn gemv(alpha: f32, a: &Matrix, x: &[f32], beta: f32, y: &mut [f32]) {
         for i in 0..a.rows() {
             y[i] = alpha * dot_f32(a.row(i), x) + beta * y[i];
         }
+    }
+}
+
+/// Cache-blocked [`gemv`]: walk `x` in [`GEMV_PANEL`]-column panels and
+/// run a [`GEMV_ROW_TILE`]-row tile of 8-lane accumulators over each
+/// panel, so the `x` panel stays L1-resident across the tile instead of
+/// all of `x` streaming through cache once per row. Because the panel
+/// width is a multiple of 8, every element hits the same lane in the
+/// same order as [`dot_f32`] over the full row, and the tree reduction
+/// plus serial tail are copied from it verbatim — results are bitwise
+/// equal to [`gemv_rowwalk`].
+pub fn gemv_blocked(
+    alpha: f32,
+    a: &Matrix,
+    x: &[f32],
+    beta: f32,
+    y: &mut [f32],
+) {
+    assert_eq!(a.cols(), x.len(), "gemv: A.cols != x.len");
+    assert_eq!(a.rows(), y.len(), "gemv: A.rows != y.len");
+    let d = a.cols();
+    let main = d - d % 8;
+    let m = a.rows();
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + GEMV_ROW_TILE).min(m);
+        let mut acc = [[0.0f32; 8]; GEMV_ROW_TILE];
+        for p0 in (0..main).step_by(GEMV_PANEL) {
+            let p1 = (p0 + GEMV_PANEL).min(main);
+            let xp = &x[p0..p1];
+            for i in i0..i1 {
+                let lanes = &mut acc[i - i0];
+                let ac = a.row(i)[p0..p1].chunks_exact(8);
+                let xc = xp.chunks_exact(8);
+                for (ab, xb) in ac.zip(xc) {
+                    for l in 0..8 {
+                        lanes[l] += ab[l] * xb[l];
+                    }
+                }
+            }
+        }
+        for i in i0..i1 {
+            let lanes = &acc[i - i0];
+            let mut s = (lanes[0] + lanes[4]) + (lanes[1] + lanes[5])
+                + (lanes[2] + lanes[6])
+                + (lanes[3] + lanes[7]);
+            for (av, xv) in a.row(i)[main..].iter().zip(&x[main..]) {
+                s += av * xv;
+            }
+            y[i] = if beta == 0.0 {
+                alpha * s
+            } else {
+                alpha * s + beta * y[i]
+            };
+        }
+        i0 = i1;
     }
 }
 
@@ -491,6 +581,54 @@ mod tests {
                 assert_eq!(bits(&y_blk), bits(&y_walk), "d={d} beta={beta}");
                 let mut y_dispatch = y0;
                 gemv_t(1.0, &a, &x, beta, &mut y_dispatch);
+                assert_eq!(
+                    bits(&y_dispatch),
+                    bits(&y_walk),
+                    "d={d} beta={beta}"
+                );
+            }
+        }
+    }
+
+    /// Column-panel blocking of `gemv` must be bitwise invisible: the
+    /// blocked path carries each row's 8 lane accumulators across
+    /// panels (panel width is a multiple of 8), so every element lands
+    /// on the same lane in the same order as the full-row [`dot_f32`],
+    /// including across the dispatch threshold, row-tile edges, and
+    /// with catastrophic-cancellation values.
+    #[test]
+    fn gemv_blocked_is_bitwise_equal_to_rowwalk() {
+        let mut rng = Pcg64::seed(15);
+        for d in [
+            1usize,
+            7,
+            GEMV_PANEL - 1,
+            GEMV_PANEL,
+            GEMV_PANEL + 1,
+            2 * GEMV_PANEL + 37,
+        ] {
+            // Rows straddle one GEMV_ROW_TILE boundary.
+            let rows = 67usize;
+            let data: Vec<f32> = (0..rows * d)
+                .map(|i| {
+                    let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+                    sign * (1.0e8 + (i % 97) as f32)
+                        + (rng.next_f64() as f32 - 0.5)
+                })
+                .collect();
+            let a = Matrix::from_vec(rows, d, data);
+            let x: Vec<f32> =
+                (0..d).map(|_| rng.next_f64() as f32 - 0.5).collect();
+            for beta in [0.0f32, 1.0, -0.75] {
+                let y0: Vec<f32> =
+                    (0..rows).map(|i| 2.0e7 - i as f32 * 0.25).collect();
+                let mut y_walk = y0.clone();
+                gemv_rowwalk(1.5, &a, &x, beta, &mut y_walk);
+                let mut y_blk = y0.clone();
+                gemv_blocked(1.5, &a, &x, beta, &mut y_blk);
+                assert_eq!(bits(&y_blk), bits(&y_walk), "d={d} beta={beta}");
+                let mut y_dispatch = y0;
+                gemv(1.5, &a, &x, beta, &mut y_dispatch);
                 assert_eq!(
                     bits(&y_dispatch),
                     bits(&y_walk),

@@ -197,6 +197,10 @@ fn cmd_train(args: &Args) -> i32 {
             args.get_parse("bandwidth", 0.0f64).unwrap_or(0.0);
         cfg.comm.latency =
             args.get_parse("link-latency", 0.0f64).unwrap_or(0.0);
+        cfg.comm.slow_workers =
+            args.get_parse("slow-workers", 0usize).unwrap_or(0);
+        cfg.comm.slow_factor =
+            args.get_parse("slow-factor", 1.0f64).unwrap_or(1.0);
         cfg.comm.down_bandwidth =
             args.get_parse("down-bandwidth", 0.0f64).unwrap_or(0.0);
         if let Some(list) = args.get("down-bandwidths") {

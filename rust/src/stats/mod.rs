@@ -8,13 +8,17 @@
 //! used in the paper's Example 1) and by Monte-Carlo for arbitrary
 //! [`DelayModel`](crate::straggler::DelayModel)s. [`OrderStatSampler`]
 //! *draws* the ascending first-k arrivals of n i.i.d. delays in O(k) —
-//! the engine fastpath's statistical core.
+//! the engine fastpath's statistical core — and [`ClassOrderSampler`]
+//! k-way-merges per-class streams to cover class-heterogeneous fleets
+//! (slow worker groups, per-class uplink constants) in O(k · classes).
 
+mod class_sampler;
 mod harmonic;
 mod order_sampler;
 mod order_stats;
 mod running;
 
+pub use class_sampler::ClassOrderSampler;
 pub use harmonic::{harmonic, harmonic_sq};
 pub use order_sampler::OrderStatSampler;
 pub use order_stats::{

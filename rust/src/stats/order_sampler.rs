@@ -28,6 +28,7 @@ use super::order_stats::exponential_order_mean;
 use crate::rng::{Pareto, Rng, Weibull};
 
 /// Which analytic family the sampler draws from.
+#[derive(Debug, Clone)]
 enum Kind {
     /// `shift + Exp(lambda)` via Rényi spacings (`shift = 0` is the
     /// paper's §V exponential).
@@ -45,6 +46,7 @@ enum Kind {
 
 /// O(k) sampler of the ascending first-k arrival times among n i.i.d.
 /// worker delays.
+#[derive(Debug, Clone)]
 pub struct OrderStatSampler {
     n: usize,
     kind: Kind,
@@ -110,23 +112,50 @@ impl OrderStatSampler {
     ) {
         assert!(k >= 1 && k <= self.n, "k must be in 1..=n");
         out.clear();
-        let n = self.n;
+        let mut st = self.stream_start();
+        for _ in 0..k {
+            out.push(self.stream_next(&mut st, rng));
+        }
+    }
+
+    /// Begin a fresh ascending arrival stream for one round (the
+    /// resumable form of [`Self::sample_first_k`]; the class-merge
+    /// sampler interleaves several of these).
+    pub(crate) fn stream_start(&self) -> StreamState {
+        StreamState::default()
+    }
+
+    /// Draw the next ascending arrival of the stream `st` — exactly one
+    /// rng draw per call, and calling it k times from a fresh state
+    /// reproduces `sample_first_k(k, ..)` draw for draw, bit for bit.
+    /// Panics once all n arrivals have been drawn.
+    pub(crate) fn stream_next<R: Rng + ?Sized>(
+        &self,
+        st: &mut StreamState,
+        rng: &mut R,
+    ) -> f64 {
+        assert!(st.taken < self.n, "order-stat stream exhausted");
+        let i = st.taken;
+        st.taken += 1;
         match &self.kind {
             Kind::ShiftedExp { shift, lambda } => {
                 // Rényi spacings: each gap is Exp((n−i)·λ), drawn with
                 // the same `-ln U / rate` form as the exhaustive model.
-                let mut cum = 0.0f64;
-                for i in 0..k {
-                    cum += -rng.next_f64_open().ln()
-                        / ((n - i) as f64 * lambda);
-                    out.push(shift + cum);
-                }
+                st.cum += -rng.next_f64_open().ln()
+                    / ((self.n - i) as f64 * lambda);
+                shift + st.cum
             }
+            // Conditional uniforms in log-survival space; see the
+            // module docs. ln S_(i) = Σ_{j<=i} ln(V_j)/(n−j+1).
             Kind::Pareto(p) => {
-                sample_inverse_cdf(n, k, out, rng, |s| p.quantile_tail(s))
+                st.ln_tail +=
+                    rng.next_f64_open().ln() / ((self.n - i) as f64);
+                p.quantile_tail(st.ln_tail.exp())
             }
             Kind::Weibull(w) => {
-                sample_inverse_cdf(n, k, out, rng, |s| w.quantile_tail(s))
+                st.ln_tail +=
+                    rng.next_f64_open().ln() / ((self.n - i) as f64);
+                w.quantile_tail(st.ln_tail.exp())
             }
         }
     }
@@ -144,21 +173,26 @@ impl OrderStatSampler {
     }
 }
 
-/// Shared conditional-uniform backend: walk the uniform order statistics
-/// downward in log-survival space and map each through the model's
-/// upper-tail inverse CDF `q(s) = S⁻¹(s)`.
-fn sample_inverse_cdf<R: Rng + ?Sized>(
-    n: usize,
-    k: usize,
-    out: &mut Vec<f64>,
-    rng: &mut R,
-    q: impl Fn(f64) -> f64,
-) {
-    // ln S_(i) = Σ_{j<=i} ln(V_j)/(n−j+1); V ∈ (0,1] keeps ln finite.
-    let mut ln_tail = 0.0f64;
-    for i in 0..k {
-        ln_tail += rng.next_f64_open().ln() / ((n - i) as f64);
-        out.push(q(ln_tail.exp()));
+/// Resumable position of one ascending arrival stream: how many arrivals
+/// were drawn plus the family-specific running term (the Rényi cumulative
+/// spacing sum, or the conditional-uniform log-survival walk). Plain data
+/// — holding one per class lets the class-merge sampler interleave
+/// streams without borrowing the samplers themselves.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct StreamState {
+    /// Arrivals drawn so far (the order-statistic rank reached).
+    taken: usize,
+    /// ShiftedExp: cumulative spacing sum `Σ gaps`.
+    cum: f64,
+    /// Pareto/Weibull: running `ln S_(i)` of the uniform order walk.
+    ln_tail: f64,
+}
+
+impl StreamState {
+    /// Arrivals drawn from this stream so far (exhausted at the
+    /// sampler's n).
+    pub(crate) fn taken(&self) -> usize {
+        self.taken
     }
 }
 
@@ -313,6 +347,43 @@ mod tests {
                 (f - sl).abs() < 0.02,
                 "rank {rank}: fastpath mean {f} vs exhaustive {sl}"
             );
+        }
+    }
+
+    #[test]
+    fn incremental_stream_matches_batch_draws_bitwise() {
+        // The stream form is the batch form: k stream_next calls from a
+        // fresh state give sample_first_k's output bit for bit, for
+        // every family — the pin the class-merge sampler's single-class
+        // equivalence rests on.
+        for s in [
+            OrderStatSampler::exponential(30, 1.7),
+            OrderStatSampler::shifted_exponential(30, 0.4, 1.7),
+            OrderStatSampler::pareto(30, 1.0, 2.5),
+            OrderStatSampler::weibull(30, 2.0, 1.5),
+        ] {
+            let mut batch_rng = Pcg64::seed(21);
+            let mut stream_rng = Pcg64::seed(21);
+            let mut out = Vec::new();
+            s.sample_first_k(9, &mut out, &mut batch_rng);
+            let mut st = s.stream_start();
+            for want in &out {
+                let got = s.stream_next(&mut st, &mut stream_rng);
+                assert_eq!(got.to_bits(), want.to_bits(), "{}", s.name());
+            }
+            // The rng streams stayed aligned too (same draw count).
+            assert_eq!(batch_rng.next_u64(), stream_rng.next_u64());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stream exhausted")]
+    fn stream_rejects_draws_past_n() {
+        let s = OrderStatSampler::exponential(3, 1.0);
+        let mut rng = Pcg64::seed(0);
+        let mut st = s.stream_start();
+        for _ in 0..4 {
+            s.stream_next(&mut st, &mut rng);
         }
     }
 

@@ -123,6 +123,22 @@ impl BimodalDelays {
             transient: Bernoulli::new(p_transient),
         }
     }
+
+    /// Base rate λ of the fast mode.
+    pub fn lambda(&self) -> f64 {
+        self.base.lambda
+    }
+
+    /// Probability that a fast worker transiently straggles.
+    pub fn p_transient(&self) -> f64 {
+        self.transient.p
+    }
+
+    /// Effective rate of the persistently slow mode: scaling an
+    /// `Exp(λ)` draw by `slow_factor` yields `Exp(λ / slow_factor)`.
+    pub fn slow_lambda(&self) -> f64 {
+        self.base.lambda / self.slow_factor
+    }
 }
 
 impl DelayModel for BimodalDelays {
@@ -184,6 +200,22 @@ mod tests {
         let fast = mean_of(&m, 5, 50_000, 5);
         assert!(slow > 5.0 * fast, "slow={slow} fast={fast}");
         assert!(!m.is_iid());
+    }
+
+    #[test]
+    fn bimodal_accessors_expose_the_two_class_rates() {
+        let m = BimodalDelays::new(2.0, 3, 8.0, 0.25);
+        assert_eq!(m.lambda(), 2.0);
+        assert_eq!(m.slow_lambda(), 0.25);
+        assert_eq!(m.p_transient(), 0.25);
+        // Scaled-exponential law: the slow group's empirical mean
+        // matches 1 / slow_lambda().
+        let frozen = BimodalDelays::new(2.0, 3, 8.0, 0.0);
+        let slow_mean = mean_of(&frozen, 0, 100_000, 8);
+        assert!(
+            (slow_mean - 1.0 / frozen.slow_lambda()).abs() < 0.05,
+            "{slow_mean}"
+        );
     }
 
     #[test]

@@ -8,3 +8,8 @@ mod tests {
 }
 // The fastpath's order-statistics edge is table-sanctioned.
 use crate::stats::OrderStatSampler;
+// The heterogeneous fastpath rides the same sanctioned edges:
+// engine → stats (class-merge sampler) and engine → comm (priced
+// uplink constants + FIFO ingress chain).
+use crate::stats::ClassOrderSampler;
+use crate::comm::IngressModel;

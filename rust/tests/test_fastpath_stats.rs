@@ -13,11 +13,14 @@
 //! different (equally valid) trajectory than the exhaustive engine.
 
 use adasgd::config::{
-    DelaySpec, ExperimentConfig, PolicySpec, WorkloadSpec,
+    CommSpec, CompressorSpec, DelaySpec, ExperimentConfig, PolicySpec,
+    WorkloadSpec,
 };
 use adasgd::coordinator::run_experiment;
 use adasgd::rng::{Pcg64, Rng};
-use adasgd::stats::{quantile, OrderStatSampler, OrderStats};
+use adasgd::stats::{
+    quantile, ClassOrderSampler, OrderStatSampler, OrderStats,
+};
 
 const N: usize = 12;
 const K: usize = 4;
@@ -170,6 +173,176 @@ fn fastpath_experiment_trains_and_is_seed_deterministic() {
         last < ex_last * 50.0 && ex_last < last * 50.0,
         "trajectories should land in the same regime: {last} vs {ex_last}"
     );
+}
+
+/// A class-heterogeneous priced configuration: a persistently slow
+/// delay group (workers 0–2, bimodal with p_transient = 0), a slowed
+/// uplink tail (workers 7–9 via comm.slow_workers), a priced uniform
+/// downlink, and optionally a lossy uplink scheme and a finite FIFO
+/// ingress. Up to three (delay class × uplink constant) classes.
+fn het_cfg(
+    topk: bool,
+    finite_ingress: bool,
+    fastpath: bool,
+    seed: u64,
+    iters: u64,
+) -> ExperimentConfig {
+    let mut cfg = fast_cfg();
+    cfg.label = "fastpath-het".into();
+    cfg.seed = seed;
+    cfg.max_iterations = iters;
+    cfg.delays = DelaySpec::Bimodal {
+        lambda: 1.0,
+        n_slow: 3,
+        slow_factor: 5.0,
+        p_transient: 0.0,
+    };
+    cfg.comm = CommSpec {
+        scheme: if topk {
+            CompressorSpec::TopK { frac: 0.4 }
+        } else {
+            CompressorSpec::Dense
+        },
+        error_feedback: false,
+        bandwidth: 2000.0,
+        latency: 0.02,
+        slow_workers: 3,
+        slow_factor: 4.0,
+        down_bandwidth: 500.0,
+        ingress_bw: if finite_ingress { 1500.0 } else { 0.0 },
+        ..Default::default()
+    };
+    cfg.fastpath = fastpath;
+    cfg
+}
+
+#[test]
+fn heterogeneous_priced_fastpath_matches_exhaustive_mean_round_times() {
+    // Both engines price a round as: per-worker compute delay + uplink
+    // constant + uniform download, fastest-k selection on that sum,
+    // then the FIFO ingress chain when finite. The fastpath draws the
+    // merged prefix directly; over many rounds the mean round time of
+    // the two paths must agree for every scheme × ingress combination.
+    for (topk, finite_ingress) in
+        [(false, false), (false, true), (true, false), (true, true)]
+    {
+        let rounds = 4_000u64;
+        let fast =
+            run_experiment(&het_cfg(topk, finite_ingress, true, 23, rounds))
+                .expect("heterogeneous fastpath run");
+        let ex =
+            run_experiment(&het_cfg(topk, finite_ingress, false, 29, rounds))
+                .expect("heterogeneous exhaustive run");
+        assert_eq!(fast.steps, rounds);
+        assert_eq!(ex.steps, rounds);
+        let fm = fast.total_time / fast.steps as f64;
+        let em = ex.total_time / ex.steps as f64;
+        assert!(
+            (fm - em).abs() < 0.05,
+            "topk={topk} ingress={finite_ingress}: per-round fastpath \
+             {fm} vs exhaustive {em}"
+        );
+        // Identical pricing rules: byte meters agree exactly (both
+        // accept k messages of the same data-independent size each
+        // round) and both paths train.
+        assert_eq!(fast.bytes_sent, ex.bytes_sent);
+        assert!(fast.comm_time > 0.0);
+        assert!(fast.down_time > 0.0);
+        let f_last = fast.recorder.last().unwrap().error;
+        let f_first = fast.recorder.samples()[0].error;
+        assert!(f_last < f_first * 1e-2, "{f_first} -> {f_last}");
+    }
+    // The finite-FIFO variant is strictly slower than the
+    // independent-upload model of the same config, on both paths.
+    let rounds = 1_500u64;
+    let free = run_experiment(&het_cfg(true, false, true, 31, rounds))
+        .expect("unlimited-ingress fastpath");
+    let cong = run_experiment(&het_cfg(true, true, true, 31, rounds))
+        .expect("finite-ingress fastpath");
+    assert!(cong.total_time > free.total_time);
+}
+
+#[test]
+fn heterogeneous_priced_fastpath_matches_exhaustive_quantiles() {
+    // Distributional agreement beyond the mean: the first-round
+    // completion time across independent seeds, fastpath vs exhaustive,
+    // on the fully priced combination (TopK uplink + finite FIFO
+    // ingress + slow classes).
+    let seeds = 400u64;
+    let mut fast = Vec::with_capacity(seeds as usize);
+    let mut ex = Vec::with_capacity(seeds as usize);
+    for s in 0..seeds {
+        fast.push(
+            run_experiment(&het_cfg(true, true, true, 1000 + s, 1))
+                .expect("fastpath round")
+                .total_time,
+        );
+        ex.push(
+            run_experiment(&het_cfg(true, true, false, 5000 + s, 1))
+                .expect("exhaustive round")
+                .total_time,
+        );
+    }
+    for q in [0.25, 0.5, 0.75] {
+        let qf = quantile(&fast, q);
+        let qe = quantile(&ex, q);
+        assert!(
+            (qf - qe).abs() < 0.12,
+            "q={q}: fastpath {qf} vs exhaustive {qe}"
+        );
+    }
+}
+
+#[test]
+fn class_shift_translates_arrivals_exactly() {
+    // A per-class constant uplink shift must translate every merged
+    // arrival by exactly that constant — bitwise, not approximately —
+    // because the shift is added once per draw, after sampling.
+    let base = OrderStatSampler::exponential(40, 1.3);
+    let shift = 0.75f64;
+    let mut plain = ClassOrderSampler::new(vec![(base.clone(), 0.0)]);
+    let mut shifted = ClassOrderSampler::new(vec![(base, shift)]);
+    let (mut a0, mut c0) = (Vec::new(), Vec::new());
+    let (mut a1, mut c1) = (Vec::new(), Vec::new());
+    let mut rng0 = Pcg64::seed(97);
+    let mut rng1 = Pcg64::seed(97);
+    for k in [1usize, 5, 17] {
+        plain.sample_first_k(k, &mut a0, &mut c0, &mut rng0);
+        shifted.sample_first_k(k, &mut a1, &mut c1, &mut rng1);
+        assert_eq!(c0, c1);
+        for (p, s) in a0.iter().zip(&a1) {
+            assert_eq!(
+                (p + shift).to_bits(),
+                s.to_bits(),
+                "k={k}: {p} + {shift} vs {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_class_merge_reproduces_the_iid_sampler_draw_for_draw() {
+    // With one class the k-way merge must consume the rng identically
+    // to the plain i.i.d. sampler — this is what keeps every default
+    // (free-comm, i.i.d.) fastpath trajectory byte-identical across
+    // the generalization.
+    let iid = OrderStatSampler::weibull(25, 1.1, 0.8);
+    let mut merged = ClassOrderSampler::single(iid.clone());
+    let mut batch = Vec::new();
+    let (mut arrivals, mut classes) = (Vec::new(), Vec::new());
+    let mut rng_a = Pcg64::seed(12345);
+    let mut rng_b = Pcg64::seed(12345);
+    for k in [1usize, 8, 25] {
+        iid.sample_first_k(k, &mut batch, &mut rng_a);
+        merged.sample_first_k(k, &mut arrivals, &mut classes, &mut rng_b);
+        assert_eq!(batch.len(), arrivals.len());
+        for (b, m) in batch.iter().zip(&arrivals) {
+            assert_eq!(b.to_bits(), m.to_bits(), "k={k}");
+        }
+        assert!(classes.iter().all(|&c| c == 0));
+        // The rngs stay aligned after each round.
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
 }
 
 #[test]

@@ -133,6 +133,29 @@ fn l001_fires_on_layering_violations() {
     )]);
     assert_eq!(rules_fired(&rev), ["L001"]);
     assert!(rev.findings[0].message.contains("crate::engine"));
+    // The heterogeneous fastpath leans on stats → straggler and
+    // engine → comm (the clean fixture covers the forward edges); the
+    // reverse directions must still fire.
+    for (rev_rel, rev_top, src) in [
+        (
+            "rust/src/straggler/models.rs",
+            "straggler",
+            "use crate::stats::ClassOrderSampler;\nfn f() {}\n",
+        ),
+        (
+            "rust/src/comm/link.rs",
+            "comm",
+            "use crate::engine::EngineCore;\nfn f() {}\n",
+        ),
+    ] {
+        let r = lint_sources(&[(rev_rel.to_string(), src.to_string())]);
+        assert_eq!(rules_fired(&r), ["L001"], "{rev_top}");
+        assert!(
+            r.findings[0].message.contains(rev_top),
+            "{:?}",
+            r.findings
+        );
+    }
     // Intra-round parallelism legalised engine → exec and grad → exec
     // (Parallelism tokens, block helpers, scratch arena); the reverse
     // edges from true leaves stay illegal.
